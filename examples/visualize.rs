@@ -1,0 +1,122 @@
+//! Token-merging visualization (the paper's Fig. 1 / Fig. 11, ASCII
+//! edition): run a few merge rounds over a ShapeBench image's patch
+//! features and print which patches ended up merged together — PiToMe vs
+//! ToMe side by side.  Letters = merge groups (same letter = merged);
+//! '.' = singleton; foreground patches are marked with '#' in the
+//! reference mask.
+//!
+//! Run: `cargo run --release --example visualize -- --index 42`
+
+use pitome::data::{patchify, shape_item, Rng, TEST_SEED};
+use pitome::merge::energy::energy_scores;
+use pitome::merge::pitome::{ordered_bsm_plan, Split};
+use pitome::merge::tome::tome_plan;
+use pitome::merge::{apply_plan, MergeTracker};
+use pitome::tensor::Mat;
+use pitome::util::Args;
+
+const GRID: usize = 8; // 32/4 patches per side
+
+fn run_merges(patches: &Mat, use_pitome: bool, rounds: usize, k: usize)
+              -> MergeTracker {
+    let mut tracker = MergeTracker::new(patches.rows);
+    let mut x = patches.clone();
+    let mut sizes = vec![1.0f32; patches.rows];
+    let mut rng = Rng::new(5);
+    for round in 0..rounds {
+        let margin = 0.9 - 0.9 * round as f32 / rounds as f32;
+        let plan = if use_pitome {
+            let e = energy_scores(&x, margin);
+            ordered_bsm_plan(&x, &e, k, 0, Split::Alternate, true, &mut rng)
+        } else {
+            tome_plan(&x, k, 0, None)
+        };
+        tracker.push(&plan);
+        let (x2, s2) = apply_plan(&x, &sizes, &plan);
+        x = x2;
+        sizes = s2;
+    }
+    tracker
+}
+
+fn render(groups: &[usize], mask: &[bool]) -> Vec<String> {
+    // letters for groups that contain >= 2 patches, '.' for singletons
+    let mut counts = std::collections::HashMap::new();
+    for &g in groups {
+        *counts.entry(g).or_insert(0usize) += 1;
+    }
+    let mut letter = std::collections::HashMap::new();
+    let alphabet: Vec<char> = ('a'..='z').chain('0'..='9').collect();
+    let mut next = 0usize;
+    let mut rows = Vec::new();
+    for y in 0..GRID {
+        let mut line = String::new();
+        for x in 0..GRID {
+            let i = y * GRID + x;
+            let g = groups[i];
+            let ch = if counts[&g] < 2 {
+                '.'
+            } else {
+                *letter.entry(g).or_insert_with(|| {
+                    let c = alphabet[next % alphabet.len()];
+                    next += 1;
+                    c
+                })
+            };
+            line.push(if mask[i] { ch.to_ascii_uppercase() } else { ch });
+            line.push(' ');
+        }
+        rows.push(line);
+    }
+    rows
+}
+
+fn main() {
+    let args = Args::parse();
+    let index: u64 = args.get_parse("index", 42);
+    let rounds: usize = args.get_parse("rounds", 3);
+    let k: usize = args.get_parse("k", 12);
+
+    let item = shape_item(TEST_SEED, index);
+    println!("# image {index}: {} at quadrant {}, merged over {rounds} rounds x k={k}",
+             pitome::data::shapes::SHAPE_NAMES[item.label], item.quadrant);
+    let patches = patchify(&item.image, 4);
+
+    // foreground mask: patches with high variance carry the shape edge
+    let mask: Vec<bool> = (0..patches.rows)
+        .map(|i| {
+            let r = patches.row(i);
+            let mu: f32 = r.iter().sum::<f32>() / r.len() as f32;
+            let var: f32 =
+                r.iter().map(|v| (v - mu) * (v - mu)).sum::<f32>() / r.len() as f32;
+            var.sqrt() > 0.08
+        })
+        .collect();
+
+    let pit = run_merges(&patches, true, rounds, k);
+    let tom = run_merges(&patches, false, rounds, k);
+    let left = render(&pit.groups(), &mask);
+    let right = render(&tom.groups(), &mask);
+    println!("\n{:<20} {}", "PiToMe", "ToMe");
+    println!("{:<20} {}", "(uppercase = foreground patch)", "");
+    for (l, r) in left.iter().zip(&right) {
+        println!("{l:<20} {r}");
+    }
+
+    // quantify: how many foreground patches got merged away?
+    let fg_merged = |t: &MergeTracker| {
+        let groups = t.groups();
+        let mut counts = std::collections::HashMap::new();
+        for &g in &groups {
+            *counts.entry(g).or_insert(0usize) += 1;
+        }
+        mask.iter()
+            .zip(&groups)
+            .filter(|(m, g)| **m && counts[*g] >= 2)
+            .count()
+    };
+    let fg_total = mask.iter().filter(|&&m| m).count();
+    println!("\nforeground patches merged: pitome {}/{fg_total}, tome {}/{fg_total}",
+             fg_merged(&pit), fg_merged(&tom));
+    println!("visualize OK");
+}

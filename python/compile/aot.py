@@ -1,0 +1,296 @@
+"""AOT compilation driver: JAX -> HLO text artifacts for the Rust runtime.
+
+``python -m compile.aot`` (run by ``make artifacts``):
+  1. pretrains all models on the synthetic workloads (skipped if weights
+     exist) — see train.py;
+  2. lowers every (model, merge-mode, r, batch) variant to HLO *text*
+     (not serialized protos: jax >= 0.5 emits 64-bit instruction ids that
+     xla_extension 0.5.1 rejects; the text parser reassigns ids);
+  3. dumps cross-language test vectors (kernel outputs, merge outputs,
+     model logits, PRNG parity) consumed by the Rust unit tests;
+  4. writes artifacts/manifest.json describing every artifact's I/O.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import time
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import data as D
+from .bert import bert_logits, init_bert
+from .clip import ClipConfig, image_embed, text_embed, init_clip
+from .common import TextConfig, ViTConfig
+from .kernels import ref
+from .model import init_vit, vit_logits
+from .params import flatten_params, load_params, unflatten_params
+from .train import (ART, make_train_step, shape_dataset, softmax_xent,
+                    train_all)
+from .vqa import VqaConfig, vqa_logits
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (see /opt/xla-example)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True)
+    return comp.as_hlo_text()
+
+
+def spec(shape, dtype=jnp.float32):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def _io_entry(shapes_dtypes):
+    return [{"shape": list(s.shape), "dtype": str(s.dtype)}
+            for s in shapes_dtypes]
+
+
+class Builder:
+    def __init__(self, outdir: Path):
+        self.outdir = outdir
+        self.manifest = {}
+
+    def lower(self, name: str, fn, in_specs, meta: dict):
+        t0 = time.time()
+        lowered = jax.jit(fn).lower(*in_specs)
+        text = to_hlo_text(lowered)
+        path = self.outdir / f"{name}.hlo.txt"
+        path.write_text(text)
+        out_shapes = jax.eval_shape(fn, *in_specs)
+        outs = jax.tree_util.tree_leaves(out_shapes)
+        self.manifest[name] = {
+            "file": f"{name}.hlo.txt",
+            "inputs": _io_entry(in_specs),
+            "outputs": _io_entry(outs),
+            "meta": meta,
+        }
+        print(f"  lowered {name}: {len(text)/1e6:.2f} MB "
+              f"({time.time()-t0:.1f}s)", flush=True)
+
+
+PATCH_DIM = 16
+N_PATCHES = 64
+CAP = D.CAP_LEN + 1
+
+
+def build_artifacts(outdir: Path) -> None:
+    b = Builder(outdir)
+
+    # ---- ViT classifier variants -------------------------------------
+    vit_params_np = load_params(str(ART / "params" / "vit.bin"),
+                                str(ART / "params" / "vit.json"))
+    vit_flat, vit_manifest = flatten_params(vit_params_np)
+    np.asarray(vit_flat).tofile(outdir / "params" / "vit_flat.bin")
+
+    def vit_fn(cfg):
+        def fn(flat, patches):
+            p = unflatten_params(flat, vit_manifest)
+            return (vit_logits(p, patches, cfg),)
+        return fn
+
+    vit_variants = [
+        ("none", 1.0, 1), ("none", 1.0, 8),
+        ("pitome", 0.9, 1), ("pitome", 0.9, 8),
+        ("tome", 0.9, 8),
+    ]
+    for mode, r, batch in vit_variants:
+        cfg = ViTConfig(merge_mode=mode, merge_r=r)
+        tag = f"vit_{mode}" + (f"_r{int(r*1000):03d}" if mode != "none" else "")
+        b.lower(f"{tag}_b{batch}", vit_fn(cfg),
+                [spec((int(vit_flat.size),)),
+                 spec((batch, N_PATCHES, PATCH_DIM))],
+                {"model": "vit", "mode": mode, "r": r, "batch": batch,
+                 "params": "vit_flat.bin", "plan": cfg.plan()})
+
+    # ---- CLIP towers ---------------------------------------------------
+    clip_params_np = load_params(str(ART / "params" / "clip.bin"),
+                                 str(ART / "params" / "clip.json"))
+    clip_flat, clip_manifest = flatten_params(clip_params_np)
+    np.asarray(clip_flat).tofile(outdir / "params" / "clip_flat.bin")
+
+    for mode, r in [("none", 1.0), ("pitome", 0.95)]:
+        ccfg = ClipConfig()
+        ccfg.vision.merge_mode = mode
+        ccfg.vision.merge_r = r
+
+        def img_fn(flat, patches, _cfg=ccfg):
+            p = unflatten_params(flat, clip_manifest)
+            return (image_embed(p, patches, _cfg),)
+
+        tag = f"clip_img_{mode}" + (f"_r{int(r*1000):03d}" if mode != "none" else "")
+        b.lower(f"{tag}_b8", img_fn,
+                [spec((int(clip_flat.size),)), spec((8, N_PATCHES, PATCH_DIM))],
+                {"model": "clip_img", "mode": mode, "r": r, "batch": 8,
+                 "params": "clip_flat.bin"})
+
+    def txt_fn(flat, tokens):
+        p = unflatten_params(flat, clip_manifest)
+        return (text_embed(p, tokens, ClipConfig()),)
+
+    b.lower("clip_txt_b8", txt_fn,
+            [spec((int(clip_flat.size),)), spec((8, CAP), jnp.int32)],
+            {"model": "clip_txt", "mode": "none", "r": 1.0, "batch": 8,
+             "params": "clip_flat.bin"})
+
+    # ---- BERT text classifier ------------------------------------------
+    bert_params_np = load_params(str(ART / "params" / "bert.bin"),
+                                 str(ART / "params" / "bert.json"))
+    bert_flat, bert_manifest = flatten_params(bert_params_np)
+    np.asarray(bert_flat).tofile(outdir / "params" / "bert_flat.bin")
+
+    for mode, r in [("none", 1.0), ("pitome", 0.8)]:
+        tcfg = TextConfig(merge_mode=mode, merge_r=r)
+
+        def bert_fn(flat, tokens, _cfg=tcfg):
+            p = unflatten_params(flat, bert_manifest)
+            return (bert_logits(p, tokens, _cfg),)
+
+        tag = f"bert_{mode}" + (f"_r{int(r*1000):03d}" if mode != "none" else "")
+        b.lower(f"{tag}_b8", bert_fn,
+                [spec((int(bert_flat.size),)),
+                 spec((8, tcfg.n_tokens), jnp.int32)],
+                {"model": "bert", "mode": mode, "r": r, "batch": 8,
+                 "params": "bert_flat.bin", "plan": tcfg.plan()})
+
+    # ---- VQA -------------------------------------------------------------
+    vqa_params_np = load_params(str(ART / "params" / "vqa.bin"),
+                                str(ART / "params" / "vqa.json"))
+    vqa_flat, vqa_manifest = flatten_params(vqa_params_np)
+    np.asarray(vqa_flat).tofile(outdir / "params" / "vqa_flat.bin")
+
+    for mode, r in [("none", 1.0), ("pitome", 0.9)]:
+        qcfg = VqaConfig()
+        qcfg.vision.merge_mode = mode
+        qcfg.vision.merge_r = r
+
+        def vqa_fn(flat, patches, questions, _cfg=qcfg):
+            p = unflatten_params(flat, vqa_manifest)
+            return (vqa_logits(p, patches, questions, _cfg),)
+
+        tag = f"vqa_{mode}" + (f"_r{int(r*1000):03d}" if mode != "none" else "")
+        b.lower(f"{tag}_b8", vqa_fn,
+                [spec((int(vqa_flat.size),)),
+                 spec((8, N_PATCHES, PATCH_DIM)), spec((8, CAP), jnp.int32)],
+                {"model": "vqa", "mode": mode, "r": r, "batch": 8,
+                 "params": "vqa_flat.bin"})
+
+    # ---- train-step artifacts (driven from Rust: examples/train_e2e) ----
+    for mode, r in [("none", 1.0), ("pitome", 0.9)]:
+        cfg = ViTConfig(merge_mode=mode, merge_r=r)
+        fresh_flat, fresh_manifest = flatten_params(init_vit(cfg))
+
+        def loss(p, x, y, _cfg=cfg):
+            return softmax_xent(vit_logits(p, x, _cfg), y)
+
+        step = make_train_step(loss, fresh_manifest, lr=1e-3)
+        tag = f"vit_train_{mode}" + (f"_r{int(r*1000):03d}" if mode != "none" else "")
+        psize = int(fresh_flat.size)
+        b.lower(f"{tag}_b32", step,
+                [spec((psize,)), spec((psize,)), spec((psize,)), spec(()),
+                 spec((32, N_PATCHES, PATCH_DIM)), spec((32,), jnp.int32)],
+                {"model": "vit_train", "mode": mode, "r": r, "batch": 32,
+                 "param_size": psize, "lr": 1e-3})
+    # fresh init vector for Rust-driven training
+    f0, _ = flatten_params(init_vit(ViTConfig(merge_mode="pitome",
+                                              merge_r=0.9, seed=3)))
+    np.asarray(f0).tofile(outdir / "params" / "vit_init.bin")
+
+    with open(outdir / "manifest.json", "w") as f:
+        json.dump(b.manifest, f, indent=1)
+
+
+def build_testvectors(outdir: Path) -> None:
+    """Cross-language parity vectors for the Rust engine."""
+    tv = {}
+    tv["prng"] = D.prng_test_vectors()
+
+    rng = np.random.default_rng(0)
+    kf = rng.standard_normal((16, 8)).astype(np.float32)
+    tv["energy"] = {
+        "kf": kf.tolist(),
+        "margin": 0.45,
+        "expected": np.asarray(
+            ref.energy_scores(jnp.asarray(kf), 0.45)).tolist(),
+    }
+
+    x = rng.standard_normal((21, 8)).astype(np.float32)
+    kf2 = rng.standard_normal((21, 8)).astype(np.float32)
+    sizes = np.abs(rng.standard_normal(21)).astype(np.float32) + 1.0
+    attn = np.abs(rng.standard_normal(21)).astype(np.float32)
+    xs, kj, sj = jnp.asarray(x), jnp.asarray(kf2), jnp.asarray(sizes)
+    cases = {}
+    e = ref.energy_scores(kj, 0.45)
+    for name, (o, s) in {
+        "pitome": ref.apply_merge_mm(xs, sj, *ref.ordered_bsm_plan_mm(kj, e, 5)),
+        "tome": ref.apply_merge_mm(xs, sj, *ref.tome_plan_mm(kj, 5)),
+        "tofu": ref.apply_merge_mm(
+            xs, sj, *ref.tome_plan_mm(kj, 5, prune_threshold=0.45)),
+        "dct": ref.dct_merge(xs, kj, sj, 5),
+        "diffrate": ref.apply_merge_mm(
+            xs, sj, *ref.diffrate_plan_mm(kj, jnp.asarray(attn), 5)),
+    }.items():
+        cases[name] = {"out": np.asarray(o).tolist(),
+                       "sizes": np.asarray(s).tolist()}
+    tv["merge"] = {
+        "x": x.tolist(), "kf": kf2.tolist(), "sizes": sizes.tolist(),
+        "attn_cls": attn.tolist(), "margin": 0.45, "k": 5, "cases": cases,
+    }
+
+    # attention parity
+    q = rng.standard_normal((2, 9, 4)).astype(np.float32)
+    k_ = rng.standard_normal((2, 9, 4)).astype(np.float32)
+    v = rng.standard_normal((2, 9, 4)).astype(np.float32)
+    sz = np.abs(rng.standard_normal(9)).astype(np.float32) + 1.0
+    o = ref.multihead_proportional_attention(
+        jnp.asarray(q), jnp.asarray(k_), jnp.asarray(v), jnp.asarray(sz))
+    tv["attention"] = {"q": q.tolist(), "k": k_.tolist(), "v": v.tolist(),
+                       "sizes": sz.tolist(),
+                       "expected": np.asarray(o).tolist()}
+
+    # full model parity: trained ViT logits on 2 test samples, 3 modes
+    vit_params = load_params(str(ART / "params" / "vit.bin"),
+                             str(ART / "params" / "vit.json"))
+    _, _, xte, yte = shape_dataset()
+    xb = jnp.asarray(xte[:2])
+    model_cases = {}
+    for mode, r in [("none", 1.0), ("pitome", 0.9), ("tome", 0.9)]:
+        cfg = ViTConfig(merge_mode=mode, merge_r=r)
+        lg = vit_logits({k2: jnp.asarray(v2) for k2, v2 in vit_params.items()},
+                        xb, cfg)
+        model_cases[f"{mode}_r{int(r*1000):03d}"] = np.asarray(lg).tolist()
+    tv["vit_logits"] = {"n_samples": 2, "cases": model_cases,
+                        "labels": yte[:2].tolist()}
+
+    with open(outdir / "testvectors.json", "w") as f:
+        json.dump(tv, f)
+    print("  wrote testvectors.json")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default=str(ART))
+    ap.add_argument("--force-train", action="store_true")
+    ap.add_argument("--skip-artifacts", action="store_true")
+    args = ap.parse_args()
+    outdir = Path(args.out)
+    (outdir / "params").mkdir(parents=True, exist_ok=True)
+
+    print("== build-time pretraining ==", flush=True)
+    train_all(force=args.force_train)
+    if not args.skip_artifacts:
+        print("== lowering artifacts ==", flush=True)
+        build_artifacts(outdir)
+    print("== test vectors ==", flush=True)
+    build_testvectors(outdir)
+    print("artifacts complete.")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,41 @@
+"""BERT-style text classifier for the Sec 4.4 / App. D experiments.
+
+Compression is applied to the *first three layers only* (merge_layers =
+[0, 1, 2]) exactly as in the paper; deeper layers run on the shortened
+sequence.
+"""
+
+from __future__ import annotations
+
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .common import TextConfig
+from .model import Params, _dense_init, init_text_encoder, text_features_single
+
+
+def init_bert(cfg: TextConfig) -> Dict[str, np.ndarray]:
+    rng = np.random.default_rng(cfg.seed)
+    p = init_text_encoder(rng, "bert.", cfg.vocab_size, cfg.n_tokens,
+                          cfg.dim, cfg.depth, cfg.heads,
+                          int(cfg.dim * cfg.mlp_ratio))
+    p["bert.head.w"] = _dense_init(rng, cfg.dim, cfg.num_classes)
+    p["bert.head.b"] = np.zeros((cfg.num_classes,), np.float32)
+    return p
+
+
+def bert_logits_single(params: Params, tokens: jnp.ndarray, cfg: TextConfig
+                       ) -> jnp.ndarray:
+    f = text_features_single(params, tokens, "bert.", cfg.plan(), cfg.dim,
+                             cfg.depth, cfg.heads, cfg.merge_mode,
+                             cfg.prop_attn)
+    return f @ params["bert.head.w"] + params["bert.head.b"]
+
+
+def bert_logits(params: Params, tokens: jnp.ndarray, cfg: TextConfig
+                ) -> jnp.ndarray:
+    """tokens (B, N) int32 -> (B, num_classes)."""
+    return jax.vmap(lambda t: bert_logits_single(params, t, cfg))(tokens)

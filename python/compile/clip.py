@@ -1,0 +1,96 @@
+"""CLIP-style two-tower retrieval model (Sec 4.1 stand-in, DESIGN.md §6).
+
+Vision tower = the merging ViT; text tower = small text encoder over
+captions.  Both project into a shared embedding space; training is
+symmetric InfoNCE.  Token merging is applied to the *vision* tower only,
+exactly as the paper does for CLIP/BLIP.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import data as D
+from .common import ViTConfig, merge_plan
+from .model import (Params, _dense_init, init_text_encoder, init_vit,
+                    text_features_single, vit_features_single)
+
+
+@dataclass
+class ClipConfig:
+    name: str = "clip-small"
+    embed_dim: int = 64
+    vision: ViTConfig = field(default_factory=lambda: ViTConfig(
+        name="clip-vision", dim=64, depth=4, heads=4, num_classes=10))
+    text_dim: int = 64
+    text_depth: int = 2
+    text_heads: int = 4
+    cap_len: int = D.CAP_LEN + 1
+    vocab: int = D.VOCAB
+    temperature: float = 0.07
+
+    def text_plan(self) -> List[int]:
+        return [self.cap_len] * (self.text_depth + 1)
+
+
+def init_clip(cfg: ClipConfig) -> Dict[str, np.ndarray]:
+    rng = np.random.default_rng(7)
+    p = init_vit(cfg.vision)
+    p.update(init_text_encoder(rng, "txt.", cfg.vocab, cfg.cap_len,
+                               cfg.text_dim, cfg.text_depth, cfg.text_heads,
+                               cfg.text_dim * 2))
+    p["proj.img"] = _dense_init(rng, cfg.vision.dim, cfg.embed_dim)
+    p["proj.txt"] = _dense_init(rng, cfg.text_dim, cfg.embed_dim)
+    return p
+
+
+def image_embed(params: Params, patches: jnp.ndarray, cfg: ClipConfig
+                ) -> jnp.ndarray:
+    """patches (B, n_patches, patch_dim) -> L2-normalized (B, embed_dim)."""
+    f = jax.vmap(lambda pp: vit_features_single(params, pp, cfg.vision))(
+        patches)
+    e = f @ params["proj.img"]
+    return e / (jnp.linalg.norm(e, axis=-1, keepdims=True) + 1e-6)
+
+
+def text_embed(params: Params, tokens: jnp.ndarray, cfg: ClipConfig
+               ) -> jnp.ndarray:
+    """tokens (B, cap_len) -> L2-normalized (B, embed_dim)."""
+    f = jax.vmap(lambda t: text_features_single(
+        params, t, "txt.", cfg.text_plan(), cfg.text_dim, cfg.text_depth,
+        cfg.text_heads, "none"))(tokens)
+    e = f @ params["proj.txt"]
+    return e / (jnp.linalg.norm(e, axis=-1, keepdims=True) + 1e-6)
+
+
+def clip_loss(params: Params, patches: jnp.ndarray, tokens: jnp.ndarray,
+              cfg: ClipConfig) -> jnp.ndarray:
+    """Symmetric InfoNCE over the batch."""
+    ie = image_embed(params, patches, cfg)
+    te = text_embed(params, tokens, cfg)
+    logits = ie @ te.T / cfg.temperature
+    labels = jnp.arange(ie.shape[0])
+    li = -jnp.mean(jax.nn.log_softmax(logits, axis=1)[labels, labels])
+    lt = -jnp.mean(jax.nn.log_softmax(logits, axis=0)[labels, labels])
+    return 0.5 * (li + lt)
+
+
+def recall_at_k(sim: np.ndarray, ks=(1, 5, 10)) -> Dict[str, float]:
+    """sim[i, j] = image i vs text j; diagonal = matching pairs.
+    Returns recall@k both directions (Rt = text retrieval given image)."""
+    n = sim.shape[0]
+    out = {}
+    rank_t = (-sim).argsort(axis=1)
+    rank_i = (-sim).argsort(axis=0)
+    for k in ks:
+        rt = float(np.mean([i in rank_t[i, :k] for i in range(n)]))
+        ri = float(np.mean([i in rank_i[:k, i] for i in range(n)]))
+        out[f"Rt@{k}"] = 100.0 * rt
+        out[f"Ri@{k}"] = 100.0 * ri
+    out["Rsum"] = sum(out.values())
+    return out

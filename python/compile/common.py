@@ -1,0 +1,158 @@
+"""Shared constants and static-shape planning helpers for the PiToMe stack.
+
+Everything here is *compile-time* machinery: the AOT path (aot.py) needs a
+fully static plan of token counts per layer, because XLA/PJRT artifacts are
+static-shaped.  The ratio-r schedule of the paper (keep ``r`` of tokens per
+block) therefore becomes a concrete list ``[N_0, N_1, ..., N_L]`` baked into
+each artifact.
+"""
+
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass, field
+from typing import List, Optional
+
+# ELU floor used by the paper for out-of-margin neighbours (alpha in Eq. 4).
+ALPHA = 1.0
+
+# Base margin of the layer-dependent schedule m_l = M0 - M0 * l / L (Sec 3.2).
+MARGIN_BASE = 0.9
+
+
+def layer_margin(layer_idx: int, num_layers: int, base: float = MARGIN_BASE) -> float:
+    """Margin m for Eq. (4) at encoder layer ``layer_idx`` of ``num_layers``."""
+    return base - base * layer_idx / max(num_layers, 1)
+
+
+def tokens_after_merge(n: int, r: float, protect_first: int = 1) -> int:
+    """Number of tokens after one ratio-r merge step.
+
+    ``protect_first`` tokens (CLS) are never merge candidates. The number of
+    *merged-away* tokens is k = n_c - floor(n_c * r) over the candidate set,
+    clamped so at least 2 candidates always survive.
+    """
+    n_c = n - protect_first
+    k = n_c - int(math.floor(n_c * r))
+    # 2k candidates must fit in the candidate set, and >= 2 must survive.
+    k = max(0, min(k, n_c // 2, n_c - 2))
+    return n - k
+
+
+def merge_plan(n0: int, r: float, num_layers: int, protect_first: int = 1,
+               merge_layers: Optional[List[int]] = None) -> List[int]:
+    """Static token-count plan: entry l is the token count *entering* block l,
+    with a final entry for the output count.
+
+    ``merge_layers``: if given, merging only happens in those block indices
+    (e.g. BERT experiments compress only the first 3 layers, Sec 4.4).
+    """
+    plan = [n0]
+    n = n0
+    for l in range(num_layers):
+        if merge_layers is None or l in merge_layers:
+            n = tokens_after_merge(n, r, protect_first)
+        plan.append(n)
+    return plan
+
+
+def fixed_k_plan(n0: int, k: int, num_layers: int, protect_first: int = 1) -> List[int]:
+    """ToMe's original schedule: remove a fixed k tokens per layer (App. C)."""
+    plan = [n0]
+    n = n0
+    for _ in range(num_layers):
+        kk = min(k, (n - protect_first - 2) // 2)
+        kk = max(kk, 0)
+        n = n - kk
+        plan.append(n)
+    return plan
+
+
+@dataclass
+class MergeSpec:
+    """Static description of one in-block merge step."""
+    n_in: int            # tokens entering the block
+    n_out: int           # tokens after merging
+    protect_first: int = 1
+
+    @property
+    def k(self) -> int:
+        """Number of merged-away tokens (= |A| = |B| pair count)."""
+        return self.n_in - self.n_out
+
+    @property
+    def n_candidates(self) -> int:
+        return self.n_in - self.protect_first
+
+
+@dataclass
+class ViTConfig:
+    """Config for the small ViT family used across experiments."""
+    name: str = "vit-ti"
+    image_size: int = 32
+    patch_size: int = 4
+    in_channels: int = 1
+    dim: int = 64
+    depth: int = 4
+    heads: int = 4
+    mlp_ratio: float = 2.0
+    num_classes: int = 10
+    merge_mode: str = "none"        # none|pitome|tome|tofu|dct|diffrate|random
+    merge_r: float = 1.0            # keep-ratio per layer
+    merge_layers: Optional[List[int]] = None
+    prop_attn: bool = True
+    seed: int = 0
+
+    @property
+    def num_patches(self) -> int:
+        return (self.image_size // self.patch_size) ** 2
+
+    @property
+    def n_tokens(self) -> int:
+        return self.num_patches + 1  # + CLS
+
+    @property
+    def head_dim(self) -> int:
+        assert self.dim % self.heads == 0
+        return self.dim // self.heads
+
+    def plan(self) -> List[int]:
+        if self.merge_mode == "none" or self.merge_r >= 1.0:
+            return [self.n_tokens] * (self.depth + 1)
+        return merge_plan(self.n_tokens, self.merge_r, self.depth,
+                          protect_first=1, merge_layers=self.merge_layers)
+
+
+@dataclass
+class TextConfig:
+    """Config for the BERT-style text classifier (Sec 4.4)."""
+    name: str = "bert-small"
+    vocab_size: int = 512
+    seq_len: int = 128
+    dim: int = 64
+    depth: int = 4
+    heads: int = 4
+    mlp_ratio: float = 2.0
+    num_classes: int = 2
+    merge_mode: str = "none"
+    merge_r: float = 1.0
+    merge_layers: Optional[List[int]] = field(default_factory=lambda: [0, 1, 2])
+    prop_attn: bool = True
+    seed: int = 1
+
+    @property
+    def n_tokens(self) -> int:
+        return self.seq_len + 1  # + CLS
+
+    @property
+    def head_dim(self) -> int:
+        return self.dim // self.heads
+
+    def plan(self) -> List[int]:
+        if self.merge_mode == "none" or self.merge_r >= 1.0:
+            return [self.n_tokens] * (self.depth + 1)
+        return merge_plan(self.n_tokens, self.merge_r, self.depth,
+                          protect_first=1, merge_layers=self.merge_layers)
+
+
+MERGE_MODES = ("none", "pitome", "tome", "tofu", "dct", "diffrate", "random")

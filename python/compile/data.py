@@ -1,0 +1,281 @@
+"""Deterministic synthetic workloads — Python half.
+
+This module is mirrored *bit-for-bit* by ``rust/src/data/`` (same SplitMix64
+PRNG, same f64 arithmetic, no transcendentals), so build-time training in
+Python and runtime evaluation in Rust see the identical dataset.  Parity is
+asserted by ``python/tests/test_data.py`` against vectors checked by the
+Rust unit tests.
+
+Datasets (DESIGN.md §6 substitutions):
+  - ShapeBench: 32x32 grayscale images, structured exactly like the paper's
+    assumption — a large redundant background cluster plus a small
+    informative foreground shape.  10 shape classes.
+  - SynthSent: variable-length token sequences with sentiment-bearing tokens
+    among distractors (SST-2 / IMDb stand-in).
+  - Caption/retrieval and VQA views are derived from ShapeBench images.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Tuple
+
+import numpy as np
+
+MASK64 = (1 << 64) - 1
+
+
+def splitmix64(state: int) -> Tuple[int, int]:
+    """One SplitMix64 step: returns (new_state, output)."""
+    state = (state + 0x9E3779B97F4A7C15) & MASK64
+    z = state
+    z = ((z ^ (z >> 30)) * 0xBF58476D1CE4E5B9) & MASK64
+    z = ((z ^ (z >> 27)) * 0x94D049BB133111EB) & MASK64
+    z = z ^ (z >> 31)
+    return state, z
+
+
+class Rng:
+    """Deterministic PRNG shared with rust/src/data/rng.rs."""
+
+    def __init__(self, seed: int):
+        self.state = seed & MASK64
+
+    def next_u64(self) -> int:
+        self.state, out = splitmix64(self.state)
+        return out
+
+    def next_f64(self) -> float:
+        """Uniform in [0, 1) with 53 bits."""
+        return (self.next_u64() >> 11) * (1.0 / 9007199254740992.0)
+
+    def uniform(self, lo: float, hi: float) -> float:
+        return lo + (hi - lo) * self.next_f64()
+
+    def next_below(self, n: int) -> int:
+        """Uniform integer in [0, n) (modulo method — fine for small n)."""
+        return self.next_u64() % n
+
+
+def item_seed(dataset_seed: int, index: int) -> int:
+    """Stable per-item seed: one extra splitmix scramble of (seed, index)."""
+    _, z = splitmix64((dataset_seed ^ (index * 0x9E3779B97F4A7C15)) & MASK64)
+    return z
+
+
+# ---------------------------------------------------------------------------
+# ShapeBench images
+# ---------------------------------------------------------------------------
+
+N_SHAPE_CLASSES = 10
+IMG = 32
+
+SHAPE_NAMES = ["disk", "ring", "square", "frame", "triangle",
+               "cross", "hbar", "vbar", "diamond", "checker"]
+
+
+def _inside(cls: int, dx: float, dy: float, s: float, phase: int) -> bool:
+    """Pixel predicate for shape ``cls`` at offset (dx, dy) from center,
+    scale s. Pure comparisons — replicated exactly in Rust."""
+    ax, ay = abs(dx), abs(dy)
+    if cls == 0:      # disk
+        return dx * dx + dy * dy <= s * s
+    if cls == 1:      # ring
+        rr = dx * dx + dy * dy
+        return (0.36 * s * s) <= rr <= s * s
+    if cls == 2:      # square
+        return ax <= s and ay <= s
+    if cls == 3:      # frame
+        return (ax <= s and ay <= s) and not (ax <= 0.55 * s and ay <= 0.55 * s)
+    if cls == 4:      # triangle (upward)
+        return dy <= s and dy >= -s and ax <= (s - dy) * 0.5
+    if cls == 5:      # cross
+        return (ax <= 0.33 * s and ay <= s) or (ay <= 0.33 * s and ax <= s)
+    if cls == 6:      # hbar
+        return ax <= s and ay <= 0.33 * s
+    if cls == 7:      # vbar
+        return ax <= 0.33 * s and ay <= s
+    if cls == 8:      # diamond
+        return ax + ay <= s
+    if cls == 9:      # checker
+        if not (ax <= s and ay <= s):
+            return False
+        cx = int((dx + s) // (0.5 * s + 1e-9))
+        cy = int((dy + s) // (0.5 * s + 1e-9))
+        return (cx + cy + phase) % 2 == 0
+    raise ValueError(cls)
+
+
+@dataclass
+class ShapeItem:
+    image: np.ndarray      # (IMG, IMG) float32 in [0,1]
+    label: int             # shape class
+    quadrant: int          # 0..3 (position of shape center)
+    size_bucket: int       # 0..2
+
+
+def shape_item(dataset_seed: int, index: int) -> ShapeItem:
+    rng = Rng(item_seed(dataset_seed, index))
+    cls = rng.next_below(N_SHAPE_CLASSES)
+    bg = rng.uniform(0.25, 0.55)
+    fg_delta = rng.uniform(0.3, 0.42)
+    fg = bg + fg_delta if rng.next_f64() < 0.5 else bg - fg_delta
+    noise_amp = rng.uniform(0.01, 0.05)
+    s = rng.uniform(4.0, 9.0)
+    cx = rng.uniform(s + 2.0, IMG - s - 2.0)
+    cy = rng.uniform(s + 2.0, IMG - s - 2.0)
+    phase = rng.next_below(2)
+    # horizontal background gradient (adds redundancy structure, not class info)
+    grad = rng.uniform(-0.08, 0.08)
+
+    img = np.empty((IMG, IMG), dtype=np.float64)
+    for y in range(IMG):
+        for x in range(IMG):
+            base = bg + grad * (x / (IMG - 1.0) - 0.5)
+            if _inside(cls, x - cx, y - cy, s, phase):
+                base = fg
+            base += rng.uniform(-noise_amp, noise_amp)
+            img[y, x] = min(max(base, 0.0), 1.0)
+
+    quadrant = (1 if cx >= IMG / 2 else 0) + (2 if cy >= IMG / 2 else 0)
+    size_bucket = 0 if s < 5.7 else (1 if s < 7.4 else 2)
+    return ShapeItem(img.astype(np.float32), cls, quadrant, size_bucket)
+
+
+def shape_batch(dataset_seed: int, start: int, count: int
+                ) -> Tuple[np.ndarray, np.ndarray]:
+    xs = np.stack([shape_item(dataset_seed, start + i).image
+                   for i in range(count)])
+    ys = np.array([shape_item(dataset_seed, start + i).label
+                   for i in range(count)], dtype=np.int32)
+    return xs, ys
+
+
+# ---------------------------------------------------------------------------
+# SynthSent text
+# ---------------------------------------------------------------------------
+
+VOCAB = 512
+PAD, CLS_TOK = 0, 1
+DISTRACT_LO, DISTRACT_HI = 4, 452
+POS_LO, POS_HI = 452, 482
+NEG_LO, NEG_HI = 482, 512
+
+
+def sent_item(dataset_seed: int, index: int, seq_len: int = 128,
+              min_len: int = 16) -> Tuple[np.ndarray, int]:
+    """Returns (tokens (seq_len+1,), label). tokens[0] = CLS."""
+    rng = Rng(item_seed(dataset_seed ^ 0x5E17, index))
+    label = rng.next_below(2)
+    length = min_len + rng.next_below(seq_len - min_len + 1)
+    n_sent = 3 + rng.next_below(6)
+    n_noise_sent = rng.next_below(2)
+    toks = np.full((seq_len + 1,), PAD, dtype=np.int32)
+    toks[0] = CLS_TOK
+    sent_positions = set()
+    while len(sent_positions) < min(n_sent + n_noise_sent, length):
+        sent_positions.add(1 + rng.next_below(length))
+    sent_positions = sorted(sent_positions)
+    for p in range(1, length + 1):
+        toks[p] = DISTRACT_LO + rng.next_below(DISTRACT_HI - DISTRACT_LO)
+    for j, p in enumerate(sent_positions):
+        flip = j >= n_sent  # noise tokens carry opposite polarity
+        pol = label ^ (1 if flip else 0)
+        if pol == 1:
+            toks[p] = POS_LO + rng.next_below(POS_HI - POS_LO)
+        else:
+            toks[p] = NEG_LO + rng.next_below(NEG_HI - NEG_LO)
+    return toks, label
+
+
+def sent_batch(dataset_seed: int, start: int, count: int, seq_len: int = 128
+               ) -> Tuple[np.ndarray, np.ndarray]:
+    xs, ys = [], []
+    for i in range(count):
+        t, l = sent_item(dataset_seed, start + i, seq_len)
+        xs.append(t)
+        ys.append(l)
+    return np.stack(xs), np.array(ys, dtype=np.int32)
+
+
+# ---------------------------------------------------------------------------
+# Caption / retrieval and VQA views
+# ---------------------------------------------------------------------------
+
+CAP_LEN = 16
+CAP_SHAPE_BASE = 8            # + class (10)
+CAP_QUAD_BASE = 24            # + quadrant (4)
+CAP_SIZE_BASE = 32            # + size bucket (3)
+CAP_FILLER_LO, CAP_FILLER_HI = 64, 256
+
+N_ANSWERS = 17                # 10 shapes + 4 quadrants + 3 sizes
+Q_SHAPE, Q_QUAD, Q_SIZE = 2, 3, 4   # question-type tokens
+
+
+def caption_for(dataset_seed: int, index: int) -> np.ndarray:
+    """Caption tokens (CAP_LEN+1,) describing image ``index``; CLS first."""
+    item = shape_item(dataset_seed, index)
+    rng = Rng(item_seed(dataset_seed ^ 0xCA97, index))
+    toks = np.full((CAP_LEN + 1,), PAD, dtype=np.int32)
+    toks[0] = CLS_TOK
+    content = [CAP_SHAPE_BASE + item.label, CAP_QUAD_BASE + item.quadrant,
+               CAP_SIZE_BASE + item.size_bucket]
+    # shuffle content order + filler words
+    order = [0, 1, 2]
+    for i in range(2, 0, -1):
+        j = rng.next_below(i + 1)
+        order[i], order[j] = order[j], order[i]
+    length = 6 + rng.next_below(CAP_LEN - 6 - 1)
+    pos = sorted({1 + rng.next_below(length) for _ in range(8)})[:3]
+    while len(pos) < 3:
+        pos.append(pos[-1] + 1 if pos else 1)
+    for p in range(1, length + 1):
+        toks[p] = CAP_FILLER_LO + rng.next_below(CAP_FILLER_HI - CAP_FILLER_LO)
+    for slot, o in zip(pos, order):
+        toks[slot] = content[o]
+    return toks
+
+
+def vqa_item(dataset_seed: int, index: int) -> Tuple[np.ndarray, int]:
+    """(question tokens (CAP_LEN+1,), answer id)."""
+    item = shape_item(dataset_seed, index)
+    rng = Rng(item_seed(dataset_seed ^ 0x70A, index))
+    qtype = rng.next_below(3)
+    toks = np.full((CAP_LEN + 1,), PAD, dtype=np.int32)
+    toks[0] = CLS_TOK
+    toks[1] = [Q_SHAPE, Q_QUAD, Q_SIZE][qtype]
+    for p in range(2, 8):
+        toks[p] = CAP_FILLER_LO + rng.next_below(CAP_FILLER_HI - CAP_FILLER_LO)
+    if qtype == 0:
+        ans = item.label
+    elif qtype == 1:
+        ans = 10 + item.quadrant
+    else:
+        ans = 14 + item.size_bucket
+    return toks, ans
+
+
+def patchify(images: np.ndarray, patch: int = 4) -> np.ndarray:
+    """(B, H, W) -> (B, n_patches, patch*patch) row-major patches."""
+    b, hgt, wid = images.shape
+    ph, pw = hgt // patch, wid // patch
+    x = images.reshape(b, ph, patch, pw, patch)
+    x = x.transpose(0, 1, 3, 2, 4).reshape(b, ph * pw, patch * patch)
+    return x
+
+
+def prng_test_vectors() -> dict:
+    """Cross-language parity vectors (asserted by Rust tests too)."""
+    r = Rng(42)
+    u = [r.next_u64() for _ in range(4)]
+    f = [Rng(7).next_f64(), Rng(7 + 1).next_f64()]
+    it = shape_item(123, 0)
+    st, sl = sent_item(9, 3, seq_len=32)
+    return {
+        "u64": [str(x) for x in u],
+        "f64": f,
+        "img_sum": float(np.float64(it.image.astype(np.float64).sum())),
+        "img_label": it.label,
+        "sent_tokens": st.tolist(),
+        "sent_label": int(sl),
+    }

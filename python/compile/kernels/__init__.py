@@ -1,0 +1,16 @@
+"""L1 Pallas kernels (interpret=True) + pure-jnp oracles for the PiToMe stack."""
+
+from . import ref
+from .attention import attn_vmem_bytes, proportional_attention_pallas
+from .energy import energy_scores_pallas, energy_vmem_bytes
+from .matmul import matmul_pallas, merge_matmul_pallas
+
+__all__ = [
+    "ref",
+    "energy_scores_pallas",
+    "energy_vmem_bytes",
+    "proportional_attention_pallas",
+    "attn_vmem_bytes",
+    "matmul_pallas",
+    "merge_matmul_pallas",
+]

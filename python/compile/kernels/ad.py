@@ -1,0 +1,55 @@
+"""Autodiff wrappers: Pallas kernel on the forward pass, pure-jnp reference
+gradient on the backward pass.
+
+Interpret-mode ``pallas_call`` has no reverse-mode rule in this JAX build;
+since ref.py is numerically identical (tested to 3e-5), using its VJP is
+exact up to float error.  This keeps the L1 kernels on the hot path of both
+the inference artifacts *and* the AOT train-step artifacts.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from . import ref
+from .attention import proportional_attention_pallas
+from .energy import energy_scores_pallas
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(1,))
+def energy_scores_ad(kf: jnp.ndarray, margin: float) -> jnp.ndarray:
+    return energy_scores_pallas(kf, margin)
+
+
+def _energy_fwd(kf, margin):
+    return energy_scores_pallas(kf, margin), kf
+
+
+def _energy_bwd(margin, kf, g):
+    _, vjp = jax.vjp(lambda k: ref.energy_scores(k, margin), kf)
+    return vjp(g)
+
+
+energy_scores_ad.defvjp(_energy_fwd, _energy_bwd)
+
+
+@jax.custom_vjp
+def proportional_attention_ad(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
+                              sizes: jnp.ndarray) -> jnp.ndarray:
+    return proportional_attention_pallas(q, k, v, sizes)
+
+
+def _attn_fwd(q, k, v, sizes):
+    return proportional_attention_pallas(q, k, v, sizes), (q, k, v, sizes)
+
+
+def _attn_bwd(res, g):
+    q, k, v, sizes = res
+    _, vjp = jax.vjp(ref.multihead_proportional_attention, q, k, v, sizes)
+    return vjp(g)
+
+
+proportional_attention_ad.defvjp(_attn_fwd, _attn_bwd)

@@ -1,0 +1,69 @@
+"""Pallas kernel for proportional attention (Sec 3.2, "Tracking Token Sizes").
+
+softmax(q k^T / sqrt(d) + log m) v — the ``log m`` bias re-weights merged
+tokens by the number of patches they represent, so a token that absorbed 10
+patches contributes like 10 tokens to the softmax.
+
+Grid: (heads, row-blocks). K/V stay resident per head (N is small after
+merging — that is the point of the paper); row blocks stream through VMEM.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _attn_kernel(q_ref, k_ref, v_ref, logm_ref, o_ref, *, scale: float,
+                 n_total: int):
+    q = q_ref[0]                                 # (bn, d)
+    k = k_ref[0]                                 # (N, d)
+    v = v_ref[0]                                 # (N, d)
+    logm = logm_ref[...]                         # (N,)
+    s = jnp.dot(q, k.T, preferred_element_type=jnp.float32) * scale
+    col = jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+    s = s + logm[None, :]
+    s = jnp.where(col < n_total, s, -jnp.inf)    # mask padded columns
+    s = s - jnp.max(s, axis=1, keepdims=True)    # stable softmax
+    p = jnp.exp(s)
+    p = p / jnp.sum(p, axis=1, keepdims=True)
+    o_ref[0] = jnp.dot(p, v, preferred_element_type=jnp.float32)
+
+
+def proportional_attention_pallas(q: jnp.ndarray, k: jnp.ndarray,
+                                  v: jnp.ndarray, sizes: jnp.ndarray,
+                                  block_n: int = 64,
+                                  interpret: bool = True) -> jnp.ndarray:
+    """Multi-head proportional attention.
+
+    q, k, v: (H, N, d); sizes: (N,). Returns (H, N, d).
+    Matches ``ref.multihead_proportional_attention`` to f32 tolerance.
+    """
+    heads, n, d = q.shape
+    scale = 1.0 / (d ** 0.5)
+    logm = jnp.log(sizes)
+    bn = min(block_n, n)
+    grid = (heads, pl.cdiv(n, bn))
+    kernel = functools.partial(_attn_kernel, scale=scale, n_total=n)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, bn, d), lambda h, i: (h, i, 0)),
+            pl.BlockSpec((1, n, d), lambda h, i: (h, 0, 0)),
+            pl.BlockSpec((1, n, d), lambda h, i: (h, 0, 0)),
+            pl.BlockSpec((n,), lambda h, i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((1, bn, d), lambda h, i: (h, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((heads, n, d), jnp.float32),
+        interpret=interpret,
+    )(q, k, v, logm)
+
+
+def attn_vmem_bytes(n: int, d: int, block_n: int = 64) -> int:
+    """Estimated VMEM working set per grid step (f32)."""
+    bn = min(block_n, n)
+    return 4 * (bn * d + 2 * n * d + bn * n + n + bn * d)

@@ -1,0 +1,72 @@
+"""Pallas kernel for the PiToMe energy score (Eq. 4) — the O(N^2 h) hot-spot.
+
+TPU adaptation (DESIGN.md §5): the kernel fuses the cosine-similarity Gram
+matrix with the ELU-clamped row reduction, so the N x N similarity matrix is
+only ever materialized one (block_n x N) tile at a time in VMEM.  The Gram
+tile is a (block_n, h) x (h, N) matmul — MXU-shaped — followed by a VPU
+elementwise clamp and a row-sum.
+
+Runs under ``interpret=True`` (CPU PJRT cannot execute Mosaic custom-calls);
+the BlockSpec structure is what a real TPU lowering would tile.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from ..common import ALPHA
+
+
+def _energy_kernel(kn_blk_ref, kn_all_ref, out_ref, *, margin: float,
+                   alpha: float, n_total: int, block_n: int):
+    """One grid step: energy for a block of rows against all columns."""
+    i = pl.program_id(0)
+    kn_blk = kn_blk_ref[...]                    # (bn, h) normalized keys
+    kn_all = kn_all_ref[...]                    # (N, h)
+    # Gram tile: (bn, N) — MXU matmul shape.
+    s = jnp.dot(kn_blk, kn_all.T, preferred_element_type=jnp.float32)
+    # ELU-style clamp of Eq. (4).
+    fs = jnp.where(s >= margin, s, alpha * (jnp.exp(s - margin) - 1.0))
+    # Mask the diagonal (self is not a neighbour) and padded rows/cols.
+    row = i * block_n + jax.lax.broadcasted_iota(jnp.int32, s.shape, 0)
+    col = jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+    valid = (row != col) & (col < n_total) & (row < n_total)
+    fs = jnp.where(valid, fs, 0.0)
+    out_ref[...] = jnp.sum(fs, axis=1) / n_total
+
+
+def energy_scores_pallas(kf: jnp.ndarray, margin: float,
+                         alpha: float = ALPHA, block_n: int = 64,
+                         interpret: bool = True) -> jnp.ndarray:
+    """Energy E (N,) of Eq. (4) for key features kf (N, h).
+
+    Matches ``ref.energy_scores`` to float32 tolerance.
+    """
+    n, h = kf.shape
+    kn = kf / (jnp.linalg.norm(kf, axis=-1, keepdims=True) + 1e-6)
+    bn = min(block_n, n)
+    grid = (pl.cdiv(n, bn),)
+    kernel = functools.partial(_energy_kernel, margin=float(margin),
+                               alpha=float(alpha), n_total=n, block_n=bn)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bn, h), lambda i: (i, 0)),      # row tile
+            pl.BlockSpec((n, h), lambda i: (0, 0)),       # all keys (resident)
+        ],
+        out_specs=pl.BlockSpec((bn,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((n,), jnp.float32),
+        interpret=interpret,
+    )(kn, kn)
+
+
+def energy_vmem_bytes(n: int, h: int, block_n: int = 64) -> int:
+    """Estimated VMEM working set per grid step (f32): row tile + resident
+    keys + Gram tile + output. Used by the §Perf roofline estimate."""
+    bn = min(block_n, n)
+    return 4 * (bn * h + n * h + bn * n + bn)

@@ -1,0 +1,56 @@
+"""Blocked Pallas matmul — used for (a) the Gram matrix in matching and
+(b) the merge-as-matmul assignment application (DESIGN.md §5).
+
+The paper's PyTorch implementation uses ``scatter_reduce``; on TPU the
+MXU-friendly formulation is ``X_out = S^T (m ⊙ X)`` with a one-hot
+assignment matrix S — i.e. a plain matmul, which this kernel tiles.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _matmul_kernel(a_ref, b_ref, o_ref):
+    o_ref[...] = jnp.dot(a_ref[...], b_ref[...],
+                         preferred_element_type=jnp.float32)
+
+
+def matmul_pallas(a: jnp.ndarray, b: jnp.ndarray, block_m: int = 64,
+                  block_n: int = 64, interpret: bool = True) -> jnp.ndarray:
+    """C = A @ B with (block_m x K) x (K x block_n) tiles.
+
+    K is kept resident per tile — correct for the token-merging regime where
+    K = h or K = N is small; block over the large M/N dims.
+    """
+    m, k = a.shape
+    k2, n = b.shape
+    assert k == k2, f"inner dims mismatch {k} vs {k2}"
+    bm, bn = min(block_m, m), min(block_n, n)
+    grid = (pl.cdiv(m, bm), pl.cdiv(n, bn))
+    return pl.pallas_call(
+        _matmul_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, k), lambda i, j: (i, 0)),
+            pl.BlockSpec((k, bn), lambda i, j: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+        interpret=interpret,
+    )(a, b)
+
+
+def merge_matmul_pallas(x_weighted: jnp.ndarray, assign: jnp.ndarray,
+                        interpret: bool = True) -> jnp.ndarray:
+    """Merged tokens = assign^T @ x_weighted.
+
+    assign: (k, P) one-hot destination matrix (row a -> dest column);
+    x_weighted: (k, h) size-weighted source tokens. Result (P, h) is the
+    per-destination sum, exactly scatter_reduce(sum) but as an MXU matmul.
+    """
+    return matmul_pallas(assign.T, x_weighted, interpret=interpret)

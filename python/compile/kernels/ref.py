@@ -1,0 +1,472 @@
+"""Pure-jnp reference oracles for every kernel and merge algorithm.
+
+These are the *ground truth* the Pallas kernels (energy.py, matmul.py,
+attention.py) and the Rust engine (rust/src/merge/) are tested against.
+Everything is static-shaped: the number of merged pairs ``k`` is a Python
+int, so all of this jit-lowers to fixed-shape HLO.
+
+Notation follows the paper (Sec 3.2, Alg. 1):
+  - tokens x: (N, h); key features kf: (N, h); sizes m: (N,)
+  - W[i,j] = cos(v_i, v_j); energy E_i = 1/N * sum_j f_m(W[i,j])
+  - merge = argsort(E)[:2k]  (descending), protect = rest
+  - A = merge[0::2], B = merge[1::2]; each a merges into argmax_b W[a,b]
+"""
+
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..common import ALPHA
+
+
+# ---------------------------------------------------------------------------
+# building blocks
+# ---------------------------------------------------------------------------
+
+def normalize(x: jnp.ndarray, eps: float = 1e-6) -> jnp.ndarray:
+    """L2-normalize along the last axis."""
+    return x / (jnp.linalg.norm(x, axis=-1, keepdims=True) + eps)
+
+
+def cosine_matrix(kf: jnp.ndarray) -> jnp.ndarray:
+    """Pairwise cosine similarity W (N, N) of key features kf (N, h)."""
+    kn = normalize(kf)
+    return kn @ kn.T
+
+
+def f_margin(x: jnp.ndarray, margin: float, alpha: float = ALPHA) -> jnp.ndarray:
+    """ELU-style clamp of Eq. (4): identity above margin, soft floor below."""
+    return jnp.where(x >= margin, x, alpha * (jnp.exp(x - margin) - 1.0))
+
+
+def energy_scores(kf: jnp.ndarray, margin: float,
+                  alpha: float = ALPHA) -> jnp.ndarray:
+    """Energy E (N,) of Eq. (4). Neighbours = all other tokens (diag masked)."""
+    n = kf.shape[0]
+    w = cosine_matrix(kf)
+    fw = f_margin(w, margin, alpha)
+    fw = fw * (1.0 - jnp.eye(n, dtype=kf.dtype))
+    return jnp.sum(fw, axis=1) / n
+
+
+# ---------------------------------------------------------------------------
+# PiToMe merge (Alg. 1), static k
+# ---------------------------------------------------------------------------
+
+def pitome_plan(kf: jnp.ndarray, margin: float, k: int, protect_first: int = 1
+                ) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """Compute the merge plan: (protect_idx, a_idx, b_idx, dst) — all static
+    shapes. ``protect_first`` leading tokens (CLS) are always protected and
+    excluded from candidates.
+
+    Returns
+    -------
+    protect_idx : (N - 2k,) token indices kept as-is (ascending, CLS first)
+    a_idx       : (k,) source tokens (merged away)
+    b_idx       : (k,) destination candidates (set B)
+    dst         : (k,) for each a, the *position in b_idx* it merges into
+    """
+    n = kf.shape[0]
+    w = cosine_matrix(kf)
+    e = energy_scores(kf, margin)
+    # Exclude protected prefix from candidate ranking by sinking its energy.
+    neg_inf = jnp.finfo(kf.dtype).min
+    e_cand = jnp.where(jnp.arange(n) < protect_first, neg_inf, e)
+    order = jnp.argsort(-jax.lax.stop_gradient(e_cand))                 # descending energy
+    merge_idx = order[: 2 * k]
+    rest = order[2 * k:]                          # low energy candidates + CLS
+    # Keep protected tokens in original index order (CLS stays at slot 0).
+    protect_idx = jnp.sort(rest)
+    a_idx = merge_idx[0::2]
+    b_idx = merge_idx[1::2]
+    # Each a merges into its most similar b.
+    sim_ab = w[a_idx][:, b_idx]                  # (k, k)
+    dst = jnp.argmax(sim_ab, axis=1)
+    return protect_idx, a_idx, b_idx, dst
+
+
+def apply_merge(x: jnp.ndarray, sizes: jnp.ndarray, protect_idx: jnp.ndarray,
+                a_idx: jnp.ndarray, b_idx: jnp.ndarray, dst: jnp.ndarray
+                ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Size-weighted merge of tokens a into their destinations in B.
+
+    out = concat(x[protect], merged_B); sizes follow the same layout.
+    """
+    xa = x[a_idx] * sizes[a_idx][:, None]
+    xb = x[b_idx] * sizes[b_idx][:, None]
+    mb = sizes[b_idx]
+    ma = sizes[a_idx]
+    xb = xb.at[dst].add(xa)
+    mb = mb.at[dst].add(ma)
+    merged = xb / mb[:, None]
+    out = jnp.concatenate([x[protect_idx], merged], axis=0)
+    out_sizes = jnp.concatenate([sizes[protect_idx], mb], axis=0)
+    return out, out_sizes
+
+
+def pitome_merge(x: jnp.ndarray, kf: jnp.ndarray, sizes: jnp.ndarray,
+                 margin: float, k: int, protect_first: int = 1
+                 ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Full PiToMe step: returns (x_merged (N-k, h), sizes (N-k,))."""
+    if k <= 0:
+        return x, sizes
+    plan = pitome_plan(kf, margin, k, protect_first)
+    return apply_merge(x, sizes, *plan)
+
+
+# ---------------------------------------------------------------------------
+# Baselines
+# ---------------------------------------------------------------------------
+
+def tome_merge(x: jnp.ndarray, kf: jnp.ndarray, sizes: jnp.ndarray, k: int,
+               protect_first: int = 1) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """ToMe bipartite soft matching: candidates split by index parity;
+    the k most-similar A-tokens merge into their best B match."""
+    if k <= 0:
+        return x, sizes
+    n = x.shape[0]
+    cand = jnp.arange(protect_first, n)
+    a_all = cand[0::2]
+    b_all = cand[1::2]
+    kn = normalize(kf)
+    sim = kn[a_all] @ kn[b_all].T               # (|A|, |B|)
+    best = jnp.max(sim, axis=1)
+    nbr = jnp.argmax(sim, axis=1)
+    order = jnp.argsort(-jax.lax.stop_gradient(best))
+    merged_a_pos = order[:k]                     # positions in a_all
+    kept_a_pos = jnp.sort(order[k:])
+    a_idx = a_all[merged_a_pos]
+    dst = nbr[merged_a_pos]                      # positions in b_all
+    # protected = CLS + unmerged A tokens; B set receives merges.
+    protect_idx = jnp.concatenate(
+        [jnp.arange(protect_first), a_all[kept_a_pos]])
+    return apply_merge(x, sizes, protect_idx, a_idx, b_all, dst)
+
+
+def tofu_merge(x: jnp.ndarray, kf: jnp.ndarray, sizes: jnp.ndarray, k: int,
+               protect_first: int = 1, prune_threshold: float = 0.45
+               ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """ToFu-style fusion: ToMe matching, but low-similarity pairs *prune*
+    (source token dropped, destination kept unchanged) instead of averaging —
+    bridging merge and prune as in Kim et al. (simplified: hard threshold
+    instead of a learned gate)."""
+    if k <= 0:
+        return x, sizes
+    n = x.shape[0]
+    cand = jnp.arange(protect_first, n)
+    a_all = cand[0::2]
+    b_all = cand[1::2]
+    kn = normalize(kf)
+    sim = kn[a_all] @ kn[b_all].T
+    best = jnp.max(sim, axis=1)
+    nbr = jnp.argmax(sim, axis=1)
+    order = jnp.argsort(-jax.lax.stop_gradient(best))
+    merged_a_pos = order[:k]
+    kept_a_pos = jnp.sort(order[k:])
+    a_idx = a_all[merged_a_pos]
+    dst = nbr[merged_a_pos]
+    gate = (best[merged_a_pos] >= prune_threshold).astype(x.dtype)  # 1=merge
+    xa = x[a_idx] * sizes[a_idx][:, None] * gate[:, None]
+    ma = sizes[a_idx] * gate
+    xb = x[b_all] * sizes[b_all][:, None]
+    mb = sizes[b_all]
+    xb = xb.at[dst].add(xa)
+    mb = mb.at[dst].add(ma)
+    merged = xb / mb[:, None]
+    protect_idx = jnp.concatenate(
+        [jnp.arange(protect_first), a_all[kept_a_pos]])
+    out = jnp.concatenate([x[protect_idx], merged], axis=0)
+    out_sizes = jnp.concatenate([sizes[protect_idx], mb], axis=0)
+    return out, out_sizes
+
+
+def dct_matrix(n: int, dtype=jnp.float32) -> jnp.ndarray:
+    """Orthonormal DCT-II matrix D (n, n): D @ x computes the DCT."""
+    i = jnp.arange(n, dtype=dtype)[:, None]     # freq
+    j = jnp.arange(n, dtype=dtype)[None, :]     # time
+    d = jnp.cos(jnp.pi / n * (j + 0.5) * i)
+    scale = jnp.where(i == 0, jnp.sqrt(1.0 / n), jnp.sqrt(2.0 / n))
+    return (d * scale).astype(dtype)
+
+
+def dct_merge(x: jnp.ndarray, kf: jnp.ndarray, sizes: jnp.ndarray, k: int,
+              protect_first: int = 1) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """DCT baseline (Fourier-transformer style): truncate the token sequence
+    in frequency space to the target length, then map back to token space
+    with the adjoint of the kept band. Sizes reset to 1 (no tracking)."""
+    if k <= 0:
+        return x, sizes
+    body = x[protect_first:]
+    nb = body.shape[0]
+    keep = nb - k
+    d = dct_matrix(nb, x.dtype)
+    freq = d @ body                              # (nb, h)
+    trunc = freq[:keep]                          # low-frequency band
+    # Resynthesize `keep` tokens on a coarse grid: adjoint of the band
+    # restricted to `keep` sample points (orthonormal rows -> stable).
+    body_out = d[:keep, :keep].T @ trunc
+    out = jnp.concatenate([x[:protect_first], body_out], axis=0)
+    out_sizes = jnp.ones((out.shape[0],), x.dtype)
+    return out, out_sizes
+
+
+def diffrate_merge(x: jnp.ndarray, kf: jnp.ndarray, sizes: jnp.ndarray,
+                   attn_cls: jnp.ndarray, k: int, protect_first: int = 1
+                   ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """DiffRate-style (simplified): rank candidates by CLS attention score,
+    merge the k *least attended* tokens into their most similar kept token.
+    (The learned-rate search of DiffRate is replaced by the fixed ratio-r
+    schedule; see DESIGN.md §6.)"""
+    if k <= 0:
+        return x, sizes
+    n = x.shape[0]
+    score = jnp.where(jnp.arange(n) < protect_first, jnp.inf, attn_cls)
+    order = jnp.argsort(jax.lax.stop_gradient(score))                  # ascending attention
+    a_idx = order[:k]                            # least informative -> merged
+    keep_idx = jnp.sort(order[k:])
+    kn = normalize(kf)
+    sim = kn[a_idx] @ kn[keep_idx].T
+    # CLS should not receive merges: mask protected columns.
+    col_protected = keep_idx < protect_first
+    sim = jnp.where(col_protected[None, :], -jnp.inf, sim)
+    dst = jnp.argmax(sim, axis=1)
+    xk = x[keep_idx] * sizes[keep_idx][:, None]
+    mk = sizes[keep_idx]
+    xk = xk.at[dst].add(x[a_idx] * sizes[a_idx][:, None])
+    mk = mk.at[dst].add(sizes[a_idx])
+    out = xk / mk[:, None]
+    return out, mk
+
+
+def random_prune(x: jnp.ndarray, sizes: jnp.ndarray, k: int, key: jax.Array,
+                 protect_first: int = 1) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Random pruning baseline: drop k random non-protected tokens."""
+    if k <= 0:
+        return x, sizes
+    n = x.shape[0]
+    perm = jax.random.permutation(key, n - protect_first) + protect_first
+    keep = jnp.sort(jnp.concatenate([jnp.arange(protect_first), perm[k:]]))
+    return x[keep], sizes[keep]
+
+
+# ---------------------------------------------------------------------------
+# Proportional attention (Sec 3.2, "Tracking Token Sizes")
+# ---------------------------------------------------------------------------
+
+def proportional_attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
+                           sizes: jnp.ndarray) -> jnp.ndarray:
+    """softmax(q k^T / sqrt(d) + log sizes) v for one head.
+
+    q,k,v: (N, d); sizes: (N,) — the number of patches each token represents.
+    """
+    d = q.shape[-1]
+    logits = q @ k.T / jnp.sqrt(jnp.asarray(d, q.dtype))
+    logits = logits + jnp.log(sizes)[None, :]
+    p = jax.nn.softmax(logits, axis=-1)
+    return p @ v
+
+
+def multihead_proportional_attention(q, k, v, sizes):
+    """(H, N, d) batched version."""
+    return jax.vmap(proportional_attention, in_axes=(0, 0, 0, None))(
+        q, k, v, sizes)
+
+
+# ---------------------------------------------------------------------------
+# Ablation variants (Table 1 / Figure 4)
+# ---------------------------------------------------------------------------
+
+def ordered_bsm_merge(x: jnp.ndarray, kf: jnp.ndarray, sizes: jnp.ndarray,
+                      scores: jnp.ndarray, k: int, protect_first: int = 1,
+                      split: str = "alternate", protect: bool = True,
+                      key: jax.Array | None = None
+                      ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Generalized energy-ordered BSM used by the ablation variants.
+
+    scores: (N,) ranking signal — higher = more mergeable. Variants:
+      - PiToMe            : scores = energy, split=alternate, protect=True
+      - w/o protection    : protect=False (all candidates mergeable; top-k
+                            most similar pairs merged, like ToMe ranking)
+      - random split      : split="random" (A/B assignment shuffled)
+      - cls-attn indicator: scores = -attn_cls (low attention = mergeable)
+    """
+    if k <= 0:
+        return x, sizes
+    n = x.shape[0]
+    w = cosine_matrix(kf)
+    neg_inf = jnp.finfo(x.dtype).min
+    s_cand = jnp.where(jnp.arange(n) < protect_first, neg_inf, scores)
+    order = jnp.argsort(-jax.lax.stop_gradient(s_cand))
+    if protect:
+        merge_idx = order[: 2 * k]
+        rest = order[2 * k:]
+    else:
+        # no protection: every candidate participates in matching
+        n_c = n - protect_first
+        nc2 = (n_c // 2) * 2
+        merge_idx = order[:nc2]
+        rest = order[nc2:]
+    if split == "random":
+        assert key is not None
+        perm = jax.random.permutation(key, merge_idx.shape[0])
+        merge_idx = merge_idx[perm]
+    a_all = merge_idx[0::2]
+    b_all = merge_idx[1::2]
+    sim = w[a_all][:, b_all]
+    best = jnp.max(sim, axis=1)
+    nbr = jnp.argmax(sim, axis=1)
+    pair_order = jnp.argsort(-jax.lax.stop_gradient(best))
+    merged_pos = pair_order[:k]
+    kept_pos = jnp.sort(pair_order[k:])
+    a_idx = a_all[merged_pos]
+    dst = nbr[merged_pos]
+    protect_idx = jnp.sort(jnp.concatenate([rest, a_all[kept_pos]]))
+    return apply_merge(x, sizes, protect_idx, a_idx, b_all, dst)
+
+
+# ---------------------------------------------------------------------------
+# Matmul (assignment-matrix) formulation — DESIGN.md §5
+# ---------------------------------------------------------------------------
+# This environment's jax build cannot differentiate batched gather/scatter on
+# float tensors (GatherDimensionNumbers lacks operand_batching_dims), and on
+# TPU a matmul against a one-hot assignment matrix is MXU-friendly anyway.
+# The functions below express every merge as
+#     out = (M @ (m ⊙ X)) / (M @ m),   M built from one_hot comparisons,
+# so both forward and backward lower to plain dots.  Integer index plumbing
+# (argsort / int gathers) carries no tangents and is safe.
+#
+# Plan contract: (protect_idx, a_idx, b_idx, dst, gate) with
+#   len(protect_idx) + len(b_idx) == n_out  (static),
+#   every A token either merges into b_idx[dst] (gate=1) or is pruned
+#   (gate=0, ToFu).  Output layout: [protected..., B...].
+
+def one_hot_rows(idx: jnp.ndarray, n: int, dtype=jnp.float32) -> jnp.ndarray:
+    """(len(idx), n) selection matrix: row j = e_{idx[j]}."""
+    return (idx[:, None] == jnp.arange(n)[None, :]).astype(dtype)
+
+
+def _pair_similarity(kf: jnp.ndarray, a_idx: jnp.ndarray, b_idx: jnp.ndarray
+                     ) -> jnp.ndarray:
+    """(|A|, |B|) cosine similarity via selection matmuls (no float gather)."""
+    n = kf.shape[0]
+    kn = normalize(kf)
+    a_sel = one_hot_rows(a_idx, n, kf.dtype)
+    b_sel = one_hot_rows(b_idx, n, kf.dtype)
+    return (a_sel @ kn) @ (b_sel @ kn).T
+
+
+def ordered_bsm_plan_mm(kf: jnp.ndarray, scores: jnp.ndarray, k: int,
+                        protect_first: int = 1, split: str = "alternate",
+                        protect: bool = True, key: jax.Array | None = None):
+    """PiToMe plan (and its ablation variants) in the mm contract."""
+    n = kf.shape[0]
+    neg_inf = jnp.finfo(kf.dtype).min
+    s_cand = jnp.where(jnp.arange(n) < protect_first, neg_inf, scores)
+    order = jnp.argsort(-jax.lax.stop_gradient(s_cand))
+    n_pairs = k if protect else ((n - protect_first) // 2)
+    merge_idx = order[: 2 * n_pairs]
+    rest = order[2 * n_pairs:]
+    if split == "random":
+        assert key is not None
+        perm = jax.random.permutation(key, merge_idx.shape[0])
+        merge_idx = merge_idx[perm]
+    a_all = merge_idx[0::2]
+    b_idx = merge_idx[1::2]
+    sim = _pair_similarity(kf, a_all, b_idx)
+    best = jnp.max(sim, axis=1)
+    dst_all = jnp.argmax(sim, axis=1)
+    if n_pairs == k:
+        gate = jnp.ones((k,), kf.dtype)
+        return jnp.sort(rest), a_all, b_idx, dst_all, gate
+    # keep only the k most similar pairs; surviving A tokens are protected
+    pair_rank = jnp.argsort(-jax.lax.stop_gradient(best))
+    a_merge = a_all[pair_rank[:k]]
+    dst = dst_all[pair_rank[:k]]
+    a_keep = a_all[pair_rank[k:]]
+    protect_idx = jnp.sort(jnp.concatenate([rest, a_keep]))
+    return protect_idx, a_merge, b_idx, dst, jnp.ones((k,), kf.dtype)
+
+
+def tome_plan_mm(kf: jnp.ndarray, k: int, protect_first: int = 1,
+                 prune_threshold: float | None = None):
+    """ToMe parity plan (ToFu when prune_threshold is set)."""
+    n = kf.shape[0]
+    cand = jnp.arange(protect_first, n)
+    a_all = cand[0::2]
+    b_idx = cand[1::2]
+    sim = _pair_similarity(kf, a_all, b_idx)
+    best = jnp.max(sim, axis=1)
+    dst_all = jnp.argmax(sim, axis=1)
+    pair_rank = jnp.argsort(-jax.lax.stop_gradient(best))
+    a_merge = a_all[pair_rank[:k]]
+    dst = dst_all[pair_rank[:k]]
+    a_keep = a_all[pair_rank[k:]]
+    protect_idx = jnp.sort(jnp.concatenate([jnp.arange(protect_first), a_keep]))
+    if prune_threshold is None:
+        gate = jnp.ones((k,), kf.dtype)
+    else:
+        gate = (best[pair_rank[:k]] >= prune_threshold).astype(kf.dtype)
+    return protect_idx, a_merge, b_idx, dst, gate
+
+
+def diffrate_plan_mm(kf: jnp.ndarray, attn_cls: jnp.ndarray, k: int,
+                     protect_first: int = 1):
+    """DiffRate-style plan: merge the k least-attended tokens into the most
+    similar kept token (protected columns masked)."""
+    n = kf.shape[0]
+    score = jnp.where(jnp.arange(n) < protect_first, jnp.inf, attn_cls)
+    order = jnp.argsort(jax.lax.stop_gradient(score))
+    a_idx = order[:k]
+    b_idx = jnp.sort(order[k:])          # all kept tokens (incl. CLS)
+    sim = _pair_similarity(kf, a_idx, b_idx)
+    sim = jnp.where((b_idx < protect_first)[None, :], -jnp.inf, sim)
+    dst = jnp.argmax(sim, axis=1)
+    protect_idx = jnp.zeros((0,), order.dtype)
+    return protect_idx, a_idx, b_idx, dst, jnp.ones((k,), kf.dtype)
+
+
+def random_plan_mm(n: int, k: int, key: jax.Array, protect_first: int = 1,
+                   dtype=jnp.float32):
+    """Random pruning in the mm contract (empty B; pruned tokens in A)."""
+    perm = jax.random.permutation(key, n - protect_first) + protect_first
+    protect_idx = jnp.sort(jnp.concatenate(
+        [jnp.arange(protect_first), perm[k:]]))
+    a_idx = perm[:k]
+    b_idx = jnp.zeros((0,), a_idx.dtype)
+    dst = jnp.zeros((k,), a_idx.dtype)
+    gate = jnp.zeros((k,), dtype)        # gate 0 => pruned
+    return protect_idx, a_idx, b_idx, dst, gate
+
+
+def apply_merge_mm(x: jnp.ndarray, sizes: jnp.ndarray,
+                   protect_idx: jnp.ndarray, a_idx: jnp.ndarray,
+                   b_idx: jnp.ndarray, dst: jnp.ndarray, gate: jnp.ndarray
+                   ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Apply a merge plan as one assignment matmul.
+
+    Output: (len(protect_idx) + len(b_idx), h) tokens and their sizes.
+    """
+    n = x.shape[0]
+    p_sel = one_hot_rows(protect_idx, n, x.dtype)            # (P, N)
+    kb = b_idx.shape[0]
+    if kb > 0:
+        a_sel = one_hot_rows(a_idx, n, x.dtype)              # (Ka, N)
+        b_sel = one_hot_rows(b_idx, n, x.dtype)              # (Kb, N)
+        dst_oh = one_hot_rows(dst, kb, x.dtype)              # (Ka, Kb)
+        m_merge = b_sel + (dst_oh * gate[:, None]).T @ a_sel
+        m = jnp.concatenate([p_sel, m_merge], axis=0)
+    else:
+        m = p_sel
+    new_sizes = m @ sizes
+    out = (m @ (x * sizes[:, None])) / jnp.maximum(new_sizes, 1e-9)[:, None]
+    return out, new_sizes
+
+
+def embed_lookup_mm(table: jnp.ndarray, tokens: jnp.ndarray) -> jnp.ndarray:
+    """Token-embedding lookup as a one-hot matmul (grad+vmap safe)."""
+    oh = (tokens[:, None] == jnp.arange(table.shape[0])[None, :]
+          ).astype(table.dtype)
+    return oh @ table

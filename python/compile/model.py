@@ -1,0 +1,241 @@
+"""L2: transformer encoders with in-block token merging (paper Sec 3.1).
+
+One shared encoder implementation serves every experiment:
+
+  - ``vit_*``  : patch-embedding ViT for ShapeBench classification, and the
+    vision tower of the CLIP/VQA models.
+  - ``text_*`` (bert.py / clip.py) reuse ``encoder_forward`` with a token
+    embedding front-end.
+
+The merge step runs *between attention and MLP* exactly as Eq. (2):
+``X^{l+1} = Xm + MLP(LN(Xm))`` with ``Xm = f_m(X̂, K, r)``.  All token
+counts follow the static plan from ``common.merge_plan`` so the whole model
+lowers to fixed-shape HLO.  The L1 Pallas kernels are called for the energy
+score and the proportional attention; matching/gather machinery is plain
+jnp (it lowers into the same HLO module).
+"""
+
+from __future__ import annotations
+
+from typing import Dict, List, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .common import TextConfig, ViTConfig, layer_margin
+from .kernels import ref
+from .kernels.ad import energy_scores_ad, proportional_attention_ad
+
+Params = Dict[str, jnp.ndarray]
+
+# Pallas kernels are used on the single-sample path and vmapped over batch;
+# interpret=True lowers them to plain HLO (DESIGN.md §5).
+USE_PALLAS = True
+
+
+# ---------------------------------------------------------------------------
+# init helpers
+# ---------------------------------------------------------------------------
+
+def _dense_init(rng: np.random.Generator, n_in: int, n_out: int) -> np.ndarray:
+    lim = float(np.sqrt(6.0 / (n_in + n_out)))
+    return rng.uniform(-lim, lim, size=(n_in, n_out)).astype(np.float32)
+
+
+def init_encoder(rng: np.random.Generator, prefix: str, dim: int, depth: int,
+                 heads: int, mlp_hidden: int) -> Dict[str, np.ndarray]:
+    p: Dict[str, np.ndarray] = {}
+    for l in range(depth):
+        b = f"{prefix}blk{l}."
+        p[b + "ln1.w"] = np.ones((dim,), np.float32)
+        p[b + "ln1.b"] = np.zeros((dim,), np.float32)
+        p[b + "wq"] = _dense_init(rng, dim, dim)
+        p[b + "wk"] = _dense_init(rng, dim, dim)
+        p[b + "wv"] = _dense_init(rng, dim, dim)
+        p[b + "wo"] = _dense_init(rng, dim, dim)
+        p[b + "bo"] = np.zeros((dim,), np.float32)
+        p[b + "ln2.w"] = np.ones((dim,), np.float32)
+        p[b + "ln2.b"] = np.zeros((dim,), np.float32)
+        p[b + "mlp1"] = _dense_init(rng, dim, mlp_hidden)
+        p[b + "mlp1b"] = np.zeros((mlp_hidden,), np.float32)
+        p[b + "mlp2"] = _dense_init(rng, mlp_hidden, dim)
+        p[b + "mlp2b"] = np.zeros((dim,), np.float32)
+    p[prefix + "lnf.w"] = np.ones((dim,), np.float32)
+    p[prefix + "lnf.b"] = np.zeros((dim,), np.float32)
+    return p
+
+
+# ---------------------------------------------------------------------------
+# forward building blocks (single sample; vmapped over batch)
+# ---------------------------------------------------------------------------
+
+def layernorm(x: jnp.ndarray, w: jnp.ndarray, b: jnp.ndarray,
+              eps: float = 1e-5) -> jnp.ndarray:
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.var(x, axis=-1, keepdims=True)
+    return (x - mu) / jnp.sqrt(var + eps) * w + b
+
+
+def gelu(x: jnp.ndarray) -> jnp.ndarray:
+    return 0.5 * x * (1.0 + jnp.tanh(0.7978845608028654 *
+                                     (x + 0.044715 * x ** 3)))
+
+
+def _merge_step(mode: str, x: jnp.ndarray, kf: jnp.ndarray,
+                sizes: jnp.ndarray, attn_cls: jnp.ndarray, margin: float,
+                k: int, layer: int) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Dispatch one merge step (static mode/k). x: (n, dim)."""
+    if k <= 0 or mode == "none":
+        return x, sizes
+    if mode == "dct":
+        return ref.dct_merge(x, kf, sizes, k)
+    if mode == "pitome":
+        e = (energy_scores_ad(kf, margin) if USE_PALLAS
+             else ref.energy_scores(kf, margin))
+        plan = ref.ordered_bsm_plan_mm(kf, e, k)
+    elif mode == "pitome_noprot":
+        e = ref.energy_scores(kf, margin)
+        plan = ref.ordered_bsm_plan_mm(kf, e, k, protect=False)
+    elif mode == "pitome_rand":
+        e = ref.energy_scores(kf, margin)
+        plan = ref.ordered_bsm_plan_mm(kf, e, k, split="random",
+                                       key=jax.random.PRNGKey(layer))
+    elif mode == "pitome_attn":
+        # CLS-attention indicator instead of energy (Fig. 4 ablation):
+        # low attention = mergeable.
+        plan = ref.ordered_bsm_plan_mm(kf, -attn_cls, k)
+    elif mode == "tome":
+        plan = ref.tome_plan_mm(kf, k)
+    elif mode == "tofu":
+        plan = ref.tome_plan_mm(kf, k, prune_threshold=0.45)
+    elif mode == "diffrate":
+        plan = ref.diffrate_plan_mm(kf, attn_cls, k)
+    elif mode == "random":
+        plan = ref.random_plan_mm(x.shape[0], k, jax.random.PRNGKey(layer))
+    else:
+        raise ValueError(f"unknown merge mode {mode!r}")
+    return ref.apply_merge_mm(x, sizes, *plan)
+
+
+def encoder_forward(params: Params, prefix: str, x: jnp.ndarray,
+                    plan: List[int], dim: int, depth: int, heads: int,
+                    merge_mode: str, prop_attn: bool = True,
+                    margin_base: float = 0.9) -> jnp.ndarray:
+    """Run ``depth`` blocks on a single sample x (N0, dim).
+
+    ``plan[l]`` is the token count entering block l; ``plan[l+1]`` after its
+    merge. Returns final tokens (plan[-1], dim) after the last LN.
+    """
+    d = dim // heads
+    sizes = jnp.ones((x.shape[0],), x.dtype)
+    for l in range(depth):
+        b = f"{prefix}blk{l}."
+        n_in, n_out = plan[l], plan[l + 1]
+        assert x.shape[0] == n_in, (x.shape, n_in, l)
+        h = layernorm(x, params[b + "ln1.w"], params[b + "ln1.b"])
+        q = h @ params[b + "wq"]
+        kf = h @ params[b + "wk"]                 # (n, dim) key features
+        v = h @ params[b + "wv"]
+        qh = q.reshape(n_in, heads, d).transpose(1, 0, 2)
+        kh = kf.reshape(n_in, heads, d).transpose(1, 0, 2)
+        vh = v.reshape(n_in, heads, d).transpose(1, 0, 2)
+        attn_sizes = sizes if prop_attn else jnp.ones_like(sizes)
+        if USE_PALLAS:
+            oh = proportional_attention_ad(qh, kh, vh, attn_sizes)
+        else:
+            oh = ref.multihead_proportional_attention(qh, kh, vh, attn_sizes)
+        o = oh.transpose(1, 0, 2).reshape(n_in, dim)
+        x = x + o @ params[b + "wo"] + params[b + "bo"]
+
+        # CLS attention scores (mean over heads) for attention-based modes.
+        scale = 1.0 / jnp.sqrt(jnp.asarray(d, x.dtype))
+        cls_logits = jnp.einsum("hd,hnd->hn", qh[:, 0, :], kh) * scale
+        attn_cls = jnp.mean(jax.nn.softmax(cls_logits, axis=-1), axis=0)
+
+        k = n_in - n_out
+        margin = layer_margin(l, depth, margin_base)
+        x, sizes = _merge_step(merge_mode, x, kf, sizes, attn_cls, margin,
+                               k, l)
+
+        h2 = layernorm(x, params[b + "ln2.w"], params[b + "ln2.b"])
+        m = gelu(h2 @ params[b + "mlp1"] + params[b + "mlp1b"])
+        x = x + m @ params[b + "mlp2"] + params[b + "mlp2b"]
+    return layernorm(x, params[prefix + "lnf.w"], params[prefix + "lnf.b"])
+
+
+# ---------------------------------------------------------------------------
+# ViT classifier
+# ---------------------------------------------------------------------------
+
+def init_vit(cfg: ViTConfig) -> Dict[str, np.ndarray]:
+    rng = np.random.default_rng(cfg.seed)
+    patch_dim = cfg.patch_size ** 2 * cfg.in_channels
+    p = init_encoder(rng, "vit.", cfg.dim, cfg.depth, cfg.heads,
+                     int(cfg.dim * cfg.mlp_ratio))
+    p["vit.embed.w"] = _dense_init(rng, patch_dim, cfg.dim)
+    p["vit.embed.b"] = np.zeros((cfg.dim,), np.float32)
+    p["vit.cls"] = (0.02 * rng.standard_normal((cfg.dim,))).astype(np.float32)
+    p["vit.pos"] = (0.02 * rng.standard_normal(
+        (cfg.n_tokens, cfg.dim))).astype(np.float32)
+    p["vit.head.w"] = _dense_init(rng, cfg.dim, cfg.num_classes)
+    p["vit.head.b"] = np.zeros((cfg.num_classes,), np.float32)
+    return p
+
+
+def vit_tokens(params: Params, patches: jnp.ndarray, cfg: ViTConfig
+               ) -> jnp.ndarray:
+    """Patch embed + CLS + pos: (n_patches, patch_dim) -> (N, dim)."""
+    emb = patches @ params["vit.embed.w"] + params["vit.embed.b"]
+    x = jnp.concatenate([params["vit.cls"][None, :], emb], axis=0)
+    return x + params["vit.pos"]
+
+
+def vit_features_single(params: Params, patches: jnp.ndarray, cfg: ViTConfig
+                        ) -> jnp.ndarray:
+    x = vit_tokens(params, patches, cfg)
+    out = encoder_forward(params, "vit.", x, cfg.plan(), cfg.dim, cfg.depth,
+                          cfg.heads, cfg.merge_mode, cfg.prop_attn)
+    return out[0]                                  # CLS feature
+
+
+def vit_logits_single(params: Params, patches: jnp.ndarray, cfg: ViTConfig
+                      ) -> jnp.ndarray:
+    f = vit_features_single(params, patches, cfg)
+    return f @ params["vit.head.w"] + params["vit.head.b"]
+
+
+def vit_logits(params: Params, patches: jnp.ndarray, cfg: ViTConfig
+               ) -> jnp.ndarray:
+    """Batched logits: patches (B, n_patches, patch_dim) -> (B, classes)."""
+    return jax.vmap(lambda pp: vit_logits_single(params, pp, cfg))(patches)
+
+
+def vit_features(params: Params, patches: jnp.ndarray, cfg: ViTConfig
+                 ) -> jnp.ndarray:
+    return jax.vmap(lambda pp: vit_features_single(params, pp, cfg))(patches)
+
+
+# ---------------------------------------------------------------------------
+# Text encoder front-end (shared by BERT classifier and CLIP text tower)
+# ---------------------------------------------------------------------------
+
+def init_text_encoder(rng: np.random.Generator, prefix: str, vocab: int,
+                      n_tokens: int, dim: int, depth: int, heads: int,
+                      mlp_hidden: int) -> Dict[str, np.ndarray]:
+    p = init_encoder(rng, prefix, dim, depth, heads, mlp_hidden)
+    p[prefix + "tok"] = (0.02 * rng.standard_normal(
+        (vocab, dim))).astype(np.float32)
+    p[prefix + "pos"] = (0.02 * rng.standard_normal(
+        (n_tokens, dim))).astype(np.float32)
+    return p
+
+
+def text_features_single(params: Params, tokens: jnp.ndarray, prefix: str,
+                         plan: List[int], dim: int, depth: int, heads: int,
+                         merge_mode: str, prop_attn: bool = True
+                         ) -> jnp.ndarray:
+    x = ref.embed_lookup_mm(params[prefix + "tok"], tokens) + params[prefix + "pos"]
+    out = encoder_forward(params, prefix, x, plan, dim, depth, heads,
+                          merge_mode, prop_attn)
+    return out[0]

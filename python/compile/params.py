@@ -1,0 +1,70 @@
+"""Parameter flattening for the AOT boundary.
+
+Every AOT artifact takes a single flat f32 vector ``params_flat`` as its
+first argument; the jitted model unflattens it with *static* offsets.  The
+manifest (name, shape, offset) is written next to the trained weights so the
+Rust runtime can load/save/update the same buffer, and the Rust-driven
+training loop can round-trip params through ``train_step`` artifacts.
+"""
+
+from __future__ import annotations
+
+import json
+from typing import Dict, List, Tuple
+
+import jax.numpy as jnp
+import numpy as np
+
+
+def param_names(params: Dict[str, jnp.ndarray]) -> List[str]:
+    return sorted(params.keys())
+
+
+def flatten_params(params: Dict[str, np.ndarray]) -> Tuple[np.ndarray, list]:
+    """Returns (flat f32 vector, manifest [{name, shape, offset, size}])."""
+    manifest = []
+    chunks = []
+    off = 0
+    for name in param_names(params):
+        arr = np.asarray(params[name], dtype=np.float32)
+        manifest.append({"name": name, "shape": list(arr.shape),
+                         "offset": off, "size": int(arr.size)})
+        chunks.append(arr.reshape(-1))
+        off += arr.size
+    flat = np.concatenate(chunks) if chunks else np.zeros((0,), np.float32)
+    return flat, manifest
+
+
+def unflatten_params(flat: jnp.ndarray, manifest: list) -> Dict[str, jnp.ndarray]:
+    """Static-offset unflatten usable inside jit."""
+    out = {}
+    for ent in manifest:
+        off, size = ent["offset"], ent["size"]
+        out[ent["name"]] = jnp.reshape(flat[off:off + size], ent["shape"])
+    return out
+
+
+def manifest_total(manifest: list) -> int:
+    if not manifest:
+        return 0
+    last = manifest[-1]
+    return last["offset"] + last["size"]
+
+
+def save_params(path_bin: str, path_manifest: str,
+                params: Dict[str, np.ndarray]) -> None:
+    flat, manifest = flatten_params(params)
+    flat.tofile(path_bin)
+    with open(path_manifest, "w") as f:
+        json.dump({"total": int(flat.size), "entries": manifest}, f, indent=1)
+
+
+def load_params(path_bin: str, path_manifest: str) -> Dict[str, np.ndarray]:
+    with open(path_manifest) as f:
+        manifest = json.load(f)["entries"]
+    flat = np.fromfile(path_bin, dtype=np.float32)
+    out = {}
+    for ent in manifest:
+        off, size = ent["offset"], ent["size"]
+        out[ent["name"]] = flat[off:off + size].reshape(ent["shape"])
+    return out

@@ -1,0 +1,205 @@
+"""Build-time pretraining of every model on the synthetic workloads.
+
+Runs once under ``make artifacts`` (skipped when weights already exist).
+Adam is implemented over the *flat* parameter vector so that the exact same
+optimizer state layout round-trips through the AOT ``train_step`` artifacts
+the Rust example drives (examples/train_e2e.rs).
+"""
+
+from __future__ import annotations
+
+import json
+import time
+from pathlib import Path
+from typing import Callable, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import data as D
+from .bert import bert_logits, init_bert
+from .clip import ClipConfig, clip_loss, init_clip
+from .common import TextConfig, ViTConfig
+from .model import vit_logits, init_vit
+from .params import flatten_params, unflatten_params, save_params
+from .vqa import VqaConfig, init_vqa, vqa_logits
+
+ART = Path(__file__).resolve().parents[2] / "artifacts"
+
+ADAM_B1, ADAM_B2, ADAM_EPS = 0.9, 0.999, 1e-8
+
+
+def adam_update(flat, g, m, v, step, lr):
+    m = ADAM_B1 * m + (1 - ADAM_B1) * g
+    v = ADAM_B2 * v + (1 - ADAM_B2) * g * g
+    mhat = m / (1 - ADAM_B1 ** step)
+    vhat = v / (1 - ADAM_B2 ** step)
+    return flat - lr * mhat / (jnp.sqrt(vhat) + ADAM_EPS), m, v
+
+
+def make_train_step(loss_fn: Callable, manifest: list, lr: float):
+    """loss_fn(params_dict, batch...) -> scalar.  Returns jitted
+    step(flat, m, v, step_idx, *batch) -> (flat', m', v', loss)."""
+
+    def step(flat, m, v, step_idx, *batch):
+        def flat_loss(fl):
+            return loss_fn(unflatten_params(fl, manifest), *batch)
+        loss, g = jax.value_and_grad(flat_loss)(flat)
+        flat2, m2, v2 = adam_update(flat, g, m, v, step_idx, lr)
+        return flat2, m2, v2, loss
+
+    return step
+
+
+def softmax_xent(logits: jnp.ndarray, labels: jnp.ndarray) -> jnp.ndarray:
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    return -jnp.mean(jnp.take_along_axis(logp, labels[:, None], axis=1))
+
+
+# ---------------------------------------------------------------------------
+# dataset materialization (deterministic, shared with Rust via SplitMix64)
+# ---------------------------------------------------------------------------
+
+TRAIN_SEED, TEST_SEED = 1000, 2000
+N_TRAIN, N_TEST = 4096, 512
+
+
+def _cache(name: str, fn):
+    ART.mkdir(exist_ok=True)
+    f = ART / f"cache_{name}.npz"
+    if f.exists():
+        z = np.load(f)
+        return tuple(z[k] for k in z.files)
+    out = fn()
+    np.savez(f, *out)
+    return out
+
+
+def shape_dataset():
+    def gen():
+        xs_tr, ys_tr = D.shape_batch(TRAIN_SEED, 0, N_TRAIN)
+        xs_te, ys_te = D.shape_batch(TEST_SEED, 0, N_TEST)
+        return (D.patchify(xs_tr), ys_tr, D.patchify(xs_te), ys_te)
+    return _cache("shapes", gen)
+
+
+def caption_dataset():
+    def gen():
+        caps_tr = np.stack([D.caption_for(TRAIN_SEED, i) for i in range(N_TRAIN)])
+        caps_te = np.stack([D.caption_for(TEST_SEED, i) for i in range(N_TEST)])
+        return (caps_tr, caps_te)
+    return _cache("captions", gen)
+
+
+def vqa_dataset():
+    def gen():
+        qa_tr = [D.vqa_item(TRAIN_SEED, i) for i in range(N_TRAIN)]
+        qa_te = [D.vqa_item(TEST_SEED, i) for i in range(N_TEST)]
+        return (np.stack([q for q, _ in qa_tr]),
+                np.array([a for _, a in qa_tr], np.int32),
+                np.stack([q for q, _ in qa_te]),
+                np.array([a for _, a in qa_te], np.int32))
+    return _cache("vqa", gen)
+
+
+def sent_dataset(seq_len: int = 128):
+    def gen():
+        xs_tr, ys_tr = D.sent_batch(TRAIN_SEED ^ 0xAB, 0, N_TRAIN, seq_len)
+        xs_te, ys_te = D.sent_batch(TEST_SEED ^ 0xAB, 0, N_TEST, seq_len)
+        return (xs_tr, ys_tr, xs_te, ys_te)
+    return _cache("sent", gen)
+
+
+# ---------------------------------------------------------------------------
+# pretraining loops
+# ---------------------------------------------------------------------------
+
+def _run_training(tag: str, params: Dict[str, np.ndarray], loss_fn, batches,
+                  steps: int, lr: float, batch_size: int) -> Dict[str, np.ndarray]:
+    flat_np, manifest = flatten_params(params)
+    flat = jnp.asarray(flat_np)
+    m = jnp.zeros_like(flat)
+    v = jnp.zeros_like(flat)
+    step_fn = jax.jit(make_train_step(loss_fn, manifest, lr))
+    t0 = time.time()
+    n = batches[0].shape[0]
+    for s in range(1, steps + 1):
+        idx = np.random.default_rng(s).integers(0, n, size=batch_size)
+        batch = [jnp.asarray(b[idx]) for b in batches]
+        flat, m, v, loss = step_fn(flat, m, v, jnp.float32(s), *batch)
+        if s % max(1, steps // 8) == 0 or s == 1:
+            print(f"  [{tag}] step {s}/{steps} loss={float(loss):.4f} "
+                  f"({time.time()-t0:.0f}s)", flush=True)
+    out = unflatten_params(np.asarray(flat), manifest)
+    return {k: np.asarray(val) for k, val in out.items()}
+
+
+def train_vit(steps: int = 400, lr: float = 1e-3) -> None:
+    cfg = ViTConfig()
+    xs, ys, xte, yte = shape_dataset()
+    params = init_vit(cfg)
+    loss = lambda p, x, y: softmax_xent(vit_logits(p, x, cfg), y)
+    trained = _run_training("vit", params, loss, [xs, ys], steps, lr, 64)
+    acc = evaluate_vit(trained, cfg, xte, yte)
+    print(f"  [vit] test acc (mode=none): {acc:.3f}")
+    save_params(str(ART / "params" / "vit.bin"),
+                str(ART / "params" / "vit.json"), trained)
+
+
+def evaluate_vit(params, cfg: ViTConfig, xte, yte, batch: int = 128) -> float:
+    f = jax.jit(lambda x: vit_logits(
+        {k: jnp.asarray(v) for k, v in params.items()}, x, cfg))
+    correct = 0
+    for i in range(0, len(xte), batch):
+        lg = np.asarray(f(jnp.asarray(xte[i:i + batch])))
+        correct += int((lg.argmax(1) == yte[i:i + batch]).sum())
+    return correct / len(xte)
+
+
+def train_clip(steps: int = 300, lr: float = 1e-3) -> None:
+    cfg = ClipConfig()
+    xs, _, _, _ = shape_dataset()
+    caps_tr, _ = caption_dataset()
+    params = init_clip(cfg)
+    loss = lambda p, x, t: clip_loss(p, x, t, cfg)
+    trained = _run_training("clip", params, loss, [xs, caps_tr], steps, lr, 64)
+    save_params(str(ART / "params" / "clip.bin"),
+                str(ART / "params" / "clip.json"), trained)
+
+
+def train_bert(steps: int = 300, lr: float = 1e-3) -> None:
+    cfg = TextConfig()
+    xs, ys, xte, yte = sent_dataset(cfg.seq_len)
+    params = init_bert(cfg)
+    loss = lambda p, x, y: softmax_xent(bert_logits(p, x, cfg), y)
+    trained = _run_training("bert", params, loss, [xs, ys], steps, lr, 64)
+    save_params(str(ART / "params" / "bert.bin"),
+                str(ART / "params" / "bert.json"), trained)
+
+
+def train_vqa(steps: int = 300, lr: float = 1e-3) -> None:
+    cfg = VqaConfig()
+    xs, _, _, _ = shape_dataset()
+    q_tr, a_tr, _, _ = vqa_dataset()
+    params = init_vqa(cfg)
+    loss = lambda p, x, q, a: softmax_xent(vqa_logits(p, x, q, cfg), a)
+    trained = _run_training("vqa", params, loss, [xs, q_tr, a_tr], steps, lr, 64)
+    save_params(str(ART / "params" / "vqa.bin"),
+                str(ART / "params" / "vqa.json"), trained)
+
+
+def train_all(force: bool = False) -> None:
+    (ART / "params").mkdir(parents=True, exist_ok=True)
+    jobs = [("vit", train_vit), ("clip", train_clip), ("bert", train_bert),
+            ("vqa", train_vqa)]
+    for name, fn in jobs:
+        if not force and (ART / "params" / f"{name}.json").exists():
+            print(f"  [{name}] params exist, skipping")
+            continue
+        print(f"== training {name} ==", flush=True)
+        fn()
+
+
+if __name__ == "__main__":
+    train_all()

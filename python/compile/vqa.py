@@ -1,0 +1,65 @@
+"""Synthetic VQA model (Sec 4.2 stand-in, DESIGN.md §6).
+
+A small vision-language model: the merging ViT encodes the image, a tiny
+text encoder encodes the question, and an answer head classifies over the
+joint feature.  Mirrors the paper's LLaVA setting in the property that
+matters: the decoder consumes ``r^L * N`` visual tokens, so vision-side
+merging degrades (or not) the answer accuracy.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Dict, List
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import data as D
+from .common import ViTConfig
+from .model import (Params, _dense_init, init_text_encoder, init_vit,
+                    text_features_single, vit_features_single)
+
+
+@dataclass
+class VqaConfig:
+    name: str = "vqa-small"
+    vision: ViTConfig = field(default_factory=lambda: ViTConfig(
+        name="vqa-vision", dim=64, depth=4, heads=4))
+    text_dim: int = 64
+    text_depth: int = 2
+    text_heads: int = 4
+    q_len: int = D.CAP_LEN + 1
+    vocab: int = D.VOCAB
+    n_answers: int = D.N_ANSWERS
+
+    def text_plan(self) -> List[int]:
+        return [self.q_len] * (self.text_depth + 1)
+
+
+def init_vqa(cfg: VqaConfig) -> Dict[str, np.ndarray]:
+    rng = np.random.default_rng(11)
+    p = init_vit(cfg.vision)
+    p.update(init_text_encoder(rng, "q.", cfg.vocab, cfg.q_len, cfg.text_dim,
+                               cfg.text_depth, cfg.text_heads,
+                               cfg.text_dim * 2))
+    joint = cfg.vision.dim + cfg.text_dim
+    p["vqa.fc1"] = _dense_init(rng, joint, 128)
+    p["vqa.fc1b"] = np.zeros((128,), np.float32)
+    p["vqa.head.w"] = _dense_init(rng, 128, cfg.n_answers)
+    p["vqa.head.b"] = np.zeros((cfg.n_answers,), np.float32)
+    return p
+
+
+def vqa_logits(params: Params, patches: jnp.ndarray, questions: jnp.ndarray,
+               cfg: VqaConfig) -> jnp.ndarray:
+    """(B, n_patches, patch_dim), (B, q_len) -> (B, n_answers)."""
+    vf = jax.vmap(lambda pp: vit_features_single(params, pp, cfg.vision))(
+        patches)
+    qf = jax.vmap(lambda t: text_features_single(
+        params, t, "q.", cfg.text_plan(), cfg.text_dim, cfg.text_depth,
+        cfg.text_heads, "none"))(questions)
+    j = jnp.concatenate([vf, qf], axis=-1)
+    h = jnp.maximum(j @ params["vqa.fc1"] + params["vqa.fc1b"], 0.0)
+    return h @ params["vqa.head.w"] + params["vqa.head.b"]

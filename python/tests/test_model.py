@@ -1,0 +1,135 @@
+"""L2 model tests: shapes, merge-plan adherence, mode behavior, params
+round-trip, and training-step sanity."""
+
+import sys
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parents[1]))
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import data as D
+from compile.bert import bert_logits, init_bert
+from compile.clip import ClipConfig, clip_loss, init_clip, image_embed, text_embed
+from compile.common import TextConfig, ViTConfig, merge_plan
+from compile.model import init_vit, vit_features, vit_logits
+from compile.params import flatten_params, unflatten_params
+from compile.train import make_train_step, softmax_xent
+from compile.vqa import VqaConfig, init_vqa, vqa_logits
+
+BATCH = 4
+
+
+@pytest.fixture(scope="module")
+def patches():
+    xs, ys = D.shape_batch(1, 0, BATCH)
+    return jnp.asarray(D.patchify(xs)), ys
+
+
+ALL_MODES = ["none", "pitome", "tome", "tofu", "dct", "diffrate", "random",
+             "pitome_attn", "pitome_noprot", "pitome_rand"]
+
+
+@pytest.mark.parametrize("mode", ALL_MODES)
+def test_vit_logits_shape_all_modes(mode, patches):
+    xp, _ = patches
+    cfg = ViTConfig(merge_mode=mode, merge_r=0.9)
+    p = init_vit(cfg)
+    lg = jax.jit(lambda x: vit_logits(p, x, cfg))(xp)
+    assert lg.shape == (BATCH, cfg.num_classes)
+    assert bool(jnp.isfinite(lg).all())
+
+
+def test_merge_actually_changes_output(patches):
+    xp, _ = patches
+    cfg0 = ViTConfig(merge_mode="none")
+    cfg1 = ViTConfig(merge_mode="pitome", merge_r=0.85)
+    p = init_vit(cfg0)
+    lg0 = np.asarray(vit_logits(p, xp, cfg0))
+    lg1 = np.asarray(vit_logits(p, xp, cfg1))
+    assert not np.allclose(lg0, lg1, atol=1e-5)
+
+
+def test_prop_attn_matters_after_merge(patches):
+    xp, _ = patches
+    cfg_on = ViTConfig(merge_mode="pitome", merge_r=0.8, prop_attn=True)
+    cfg_off = ViTConfig(merge_mode="pitome", merge_r=0.8, prop_attn=False)
+    p = init_vit(cfg_on)
+    a = np.asarray(vit_logits(p, xp, cfg_on))
+    b = np.asarray(vit_logits(p, xp, cfg_off))
+    assert not np.allclose(a, b, atol=1e-6)
+
+
+def test_plan_static_and_monotone():
+    cfg = ViTConfig(merge_mode="pitome", merge_r=0.9)
+    plan = cfg.plan()
+    assert plan[0] == cfg.n_tokens
+    assert all(b <= a for a, b in zip(plan, plan[1:]))
+    assert plan == merge_plan(cfg.n_tokens, 0.9, cfg.depth)
+
+
+def test_params_flatten_roundtrip():
+    cfg = ViTConfig()
+    p = init_vit(cfg)
+    flat, manifest = flatten_params(p)
+    p2 = unflatten_params(jnp.asarray(flat), manifest)
+    for k in p:
+        np.testing.assert_array_equal(np.asarray(p2[k]), p[k])
+
+
+def test_bert_logits_with_merge():
+    cfg = TextConfig(merge_mode="pitome", merge_r=0.8)
+    p = init_bert(cfg)
+    xs, ys = D.sent_batch(2, 0, 2, cfg.seq_len)
+    lg = jax.jit(lambda t: bert_logits(p, t, cfg))(jnp.asarray(xs))
+    assert lg.shape == (2, 2)
+    assert bool(jnp.isfinite(lg).all())
+
+
+def test_clip_embeds_normalized(patches):
+    xp, _ = patches
+    cfg = ClipConfig()
+    cfg.vision.merge_mode = "pitome"
+    cfg.vision.merge_r = 0.9
+    p = init_clip(cfg)
+    ie = np.asarray(image_embed(p, xp, cfg))
+    caps = np.stack([D.caption_for(1, i) for i in range(BATCH)])
+    te = np.asarray(text_embed(p, jnp.asarray(caps), cfg))
+    np.testing.assert_allclose(np.linalg.norm(ie, axis=1), 1.0, atol=1e-3)
+    np.testing.assert_allclose(np.linalg.norm(te, axis=1), 1.0, atol=1e-3)
+    loss = clip_loss(p, xp, jnp.asarray(caps), cfg)
+    assert np.isfinite(float(loss))
+
+
+def test_vqa_logits_shape(patches):
+    xp, _ = patches
+    cfg = VqaConfig()
+    cfg.vision.merge_mode = "pitome"
+    cfg.vision.merge_r = 0.9
+    p = init_vqa(cfg)
+    qs = np.stack([D.vqa_item(1, i)[0] for i in range(BATCH)])
+    lg = vqa_logits(p, xp, jnp.asarray(qs), cfg)
+    assert lg.shape == (BATCH, cfg.n_answers)
+
+
+def test_train_step_decreases_loss(patches):
+    """Three steps of Adam on one batch must reduce the loss — gradient
+    flow through the merge (incl. pallas custom-vjp) is intact."""
+    xp, ys = patches
+    cfg = ViTConfig(merge_mode="pitome", merge_r=0.9)
+    p = init_vit(cfg)
+    flat, manifest = flatten_params(p)
+    loss_fn = lambda pp, x, y: softmax_xent(vit_logits(pp, x, cfg), y)
+    step = jax.jit(make_train_step(loss_fn, manifest, 5e-3))
+    f = jnp.asarray(flat)
+    m = jnp.zeros_like(f)
+    v = jnp.zeros_like(f)
+    y = jnp.asarray(ys)
+    losses = []
+    for s in range(1, 6):
+        f, m, v, l = step(f, m, v, jnp.float32(s), xp, y)
+        losses.append(float(l))
+    assert losses[-1] < losses[0], losses

@@ -1,0 +1,59 @@
+//! PERF/L3 — coordinator hot-path benchmarks without PJRT: queue
+//! round-trip latency, batcher aggregation, metrics overhead.  These keep
+//! the L3 overhead honest against the paper's "merging overhead must not
+//! eat the savings" requirement.
+
+use std::sync::mpsc;
+use std::time::Instant;
+
+use pitome::coordinator::Metrics;
+use pitome::data::{generate_trace, TraceConfig};
+use pitome::util::Bench;
+
+fn main() {
+    let mut b = Bench::new(3, 15);
+    println!("# coordinator micro-benchmarks (no PJRT)");
+
+    // metrics overhead on the hot path
+    let m = Metrics::default();
+    b.run_throughput("metrics.record x10k", 10_000, || {
+        for i in 0..10_000u64 {
+            m.record(i % 5_000);
+        }
+    });
+
+    // channel round trip (the submit/response path minus execution)
+    b.run_throughput("sync_channel round-trip x1k", 1_000, || {
+        let (tx, rx) = mpsc::sync_channel::<u64>(1024);
+        let j = std::thread::spawn(move || {
+            let mut acc = 0u64;
+            while let Ok(v) = rx.recv() {
+                acc += v;
+            }
+            acc
+        });
+        for i in 0..1_000 {
+            tx.send(i).unwrap();
+        }
+        drop(tx);
+        j.join().unwrap()
+    });
+
+    // trace generation cost (excluded from serving numbers)
+    b.run("generate_trace 10k events", || {
+        generate_trace(&TraceConfig { count: 10_000, ..Default::default() })
+    });
+
+    // batch assembly: stack 8 x (64x16) f32 inputs (what run_batch does)
+    let sample: Vec<f32> = (0..64 * 16).map(|i| i as f32).collect();
+    b.run_throughput("batch assembly 8x(64x16)", 8, || {
+        let mut data = Vec::with_capacity(8 * sample.len());
+        for _ in 0..8 {
+            data.extend_from_slice(&sample);
+        }
+        data
+    });
+
+    let t0 = Instant::now();
+    let _ = t0.elapsed();
+}

@@ -1,0 +1,53 @@
+//! PERF/L3 — merge-engine micro-benchmarks: energy score, each merge
+//! algorithm, and the full plan+apply pipeline across token counts.
+//! (Custom harness; criterion unavailable — DESIGN.md §11.)
+
+use pitome::data::Rng;
+use pitome::merge::{energy_scores, merge_step, MergeCtx, MergeMode};
+use pitome::tensor::Mat;
+use pitome::util::Bench;
+
+fn random_tokens(n: usize, h: usize, seed: u64) -> Mat {
+    let mut rng = Rng::new(seed);
+    Mat::from_fn(n, h, |_, _| (rng.next_f64() * 2.0 - 1.0) as f32)
+}
+
+fn main() {
+    let mut b = Bench::new(3, 15);
+    println!("# merge engine micro-benchmarks (per-sample, single thread)");
+
+    for &(n, h) in &[(65usize, 64usize), (197, 64), (197, 192), (577, 192)] {
+        let kf = random_tokens(n, h, 1);
+        b.run(&format!("energy_scores n={n} h={h}"), || {
+            energy_scores(&kf, 0.45)
+        });
+    }
+
+    let n = 197;
+    let h = 64;
+    let kf = random_tokens(n, h, 2);
+    let x = random_tokens(n, h, 3);
+    let sizes = vec![1.0f32; n];
+    let attn: Vec<f32> = (0..n).map(|i| (i % 13) as f32 * 0.01).collect();
+    let k = 20;
+    for mode in [MergeMode::PiToMe, MergeMode::ToMe, MergeMode::ToFu,
+                 MergeMode::Dct, MergeMode::DiffRate, MergeMode::Random] {
+        b.run(&format!("merge_step {:10} n={n} k={k}", mode.name()), || {
+            let mut rng = Rng::new(9);
+            let ctx = MergeCtx { x: &x, kf: &kf, sizes: &sizes,
+                                 attn_cls: &attn, margin: 0.45, k,
+                                 protect_first: 1 };
+            merge_step(mode, &ctx, &mut rng)
+        });
+    }
+
+    // paper claim: PiToMe within a few ms of ToMe — report the ratio
+    // (p50: robust to background-load noise)
+    let pitome = b.results.iter()
+        .find(|r| r.name.contains("step pitome")).unwrap();
+    let tome = b.results.iter()
+        .find(|r| r.name.contains("step tome")).unwrap();
+    let ratio = pitome.p50_ns() as f64 / tome.p50_ns() as f64;
+    println!("\npitome/tome runtime ratio (p50) at n={n}: {ratio:.2}x \
+              (paper: comparable; energy adds one Gram pass)");
+}

@@ -1,0 +1,57 @@
+//! PERF — PJRT runtime benchmarks over the real artifacts: compile time,
+//! single-sample latency, batched throughput, compressed vs uncompressed
+//! (the measured half of Table 5).  Skips gracefully when artifacts are
+//! missing.
+
+use pitome::data::{patchify, shape_item, TEST_SEED};
+use pitome::runtime::{load_flat_params, Engine, HostTensor, Registry};
+use pitome::util::Bench;
+
+fn main() {
+    let dir = Registry::default_dir();
+    let reg = match Registry::load(&dir) {
+        Ok(r) => r,
+        Err(e) => {
+            println!("(runtime bench skipped: {e})");
+            return;
+        }
+    };
+    let engine = Engine::cpu().expect("PJRT cpu client");
+    let mut b = Bench::new(2, 10);
+    println!("# PJRT runtime benchmarks");
+
+    for name in ["vit_none_b1", "vit_pitome_r900_b1", "vit_none_b8",
+                 "vit_pitome_r900_b8"] {
+        if reg.get(name).is_err() {
+            println!("(skipping {name}: not built)");
+            continue;
+        }
+        let t0 = std::time::Instant::now();
+        let exe = engine.load(&reg, name).unwrap();
+        println!("compile {name}: {:.2?}", t0.elapsed());
+        let params = load_flat_params(
+            &dir, exe.entry.meta.params.as_deref().unwrap()).unwrap();
+        let batch = exe.entry.meta.batch;
+        let mut xdata = Vec::with_capacity(batch * 64 * 16);
+        for i in 0..batch {
+            let item = shape_item(TEST_SEED, i as u64);
+            xdata.extend_from_slice(&patchify(&item.image, 4).data);
+        }
+        let psize = params.len();
+        b.run_throughput(&format!("execute {name}"), batch as u64, || {
+            exe.run(&[
+                HostTensor::F32(params.clone(), vec![psize]),
+                HostTensor::F32(xdata.clone(), vec![batch, 64, 16]),
+            ]).unwrap()
+        });
+    }
+
+    // headline ratio: compressed vs uncompressed throughput at batch 8
+    let get = |tag: &str| b.results.iter()
+        .find(|r| r.name.contains(tag)).map(|r| r.mean_ns());
+    if let (Some(none), Some(pit)) = (get("vit_none_b8"), get("vit_pitome_r900_b8")) {
+        println!("\nPJRT speedup pitome r=0.9 vs none (batch 8): {:.2}x \
+                  (paper shape: >1x, FLOPs bound {:.2}x)",
+                 none / pit, 65f64.powi(2) / 47f64.powi(2));
+    }
+}

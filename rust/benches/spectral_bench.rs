@@ -1,0 +1,38 @@
+//! PERF — spectral toolkit benchmarks: Jacobi eigensolver scaling and the
+//! full SD(G, Gc) pipeline (the Theorem-1 experiment's cost profile).
+
+use pitome::eval::spectral::{clustered_tokens, iterative_coarsen,
+                             ClusterSpec, CoarsenAlgo, Layout};
+use pitome::graph::{jacobi_eigenvalues, normalized_laplacian,
+                    spectral_distance, token_graph};
+use pitome::util::Bench;
+
+fn main() {
+    let mut b = Bench::new(2, 8);
+    println!("# spectral toolkit benchmarks");
+
+    for &n in &[16usize, 32, 64, 128] {
+        let spec = ClusterSpec {
+            sizes: vec![n / 2, n / 4, n / 8, n - n / 2 - n / 4 - n / 8],
+            h: 16,
+            noise: 0.1,
+            seed: 5,
+            layout: Layout::Interleaved,
+        };
+        let (kf, _) = clustered_tokens(&spec);
+        let w = token_graph(&kf);
+        let l = normalized_laplacian(&w);
+        b.run(&format!("jacobi_eigenvalues n={n}"), || {
+            jacobi_eigenvalues(&l, 1e-6, 100)
+        });
+    }
+
+    let spec = ClusterSpec { sizes: vec![16, 8, 6, 2], h: 16, noise: 0.1,
+                             seed: 5, layout: Layout::Interleaved };
+    let (kf, _) = clustered_tokens(&spec);
+    let w = token_graph(&kf);
+    b.run("full SD pipeline (coarsen+lift+2x eig, n=32)", || {
+        let p = iterative_coarsen(&kf, CoarsenAlgo::PiToMe, 3, 3, 0.6, 7);
+        spectral_distance(&w, &p)
+    });
+}

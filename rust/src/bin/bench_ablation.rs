@@ -1,0 +1,35 @@
+//! T1/F4 — Ablations: PiToMe without protection, with random split, with
+//! CLS-attention indicator (Table 1 rows / Figure 4 curves), on both
+//! retrieval and text classification.
+
+use pitome::eval::ablation::{retrieval_ablation, textcls_ablation, VARIANTS};
+use pitome::model::load_model_params;
+use pitome::runtime::Registry;
+use pitome::util::Args;
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::parse();
+    let dir = std::path::PathBuf::from(args.get("artifacts",
+        Registry::default_dir().to_str().unwrap_or("artifacts")));
+    let n_ret = args.get_parse("n-retrieval", 160);
+    let n_txt = args.get_parse("n-text", 256);
+
+    println!("# Table 1 / Figure 4 ablations; variants: {VARIANTS:?}");
+
+    let clip = load_model_params(&dir, "clip").map_err(|e| anyhow::anyhow!("{e}"))?;
+    println!("\n## image-text retrieval (Rsum), r in {{0.925, 0.95, 0.975}}");
+    println!("{:<16} {:<7} {:>9}", "variant", "r", "Rsum");
+    for row in retrieval_ablation(&clip, &[0.925, 0.95, 0.975], n_ret)
+        .map_err(|e| anyhow::anyhow!("{e}"))? {
+        println!("{:<16} {:<7} {:>9.2}", row.mode, row.r, row.rsum);
+    }
+
+    let bert = load_model_params(&dir, "bert").map_err(|e| anyhow::anyhow!("{e}"))?;
+    println!("\n## text classification (acc %), r in {{0.6, 0.7, 0.8}}");
+    println!("{:<16} {:<7} {:>8}", "variant", "r", "acc%");
+    for row in textcls_ablation(&bert, &[0.6, 0.7, 0.8], n_txt)
+        .map_err(|e| anyhow::anyhow!("{e}"))? {
+        println!("{:<16} {:<7} {:>8.2}", row.mode, row.r, row.acc);
+    }
+    Ok(())
+}

@@ -1,0 +1,46 @@
+//! T6/F6 — Image classification: off-the-shelf accuracy vs FLOPs across
+//! merge modes and ratios (Table 6 rows + Figure 6 curves), plus the
+//! paper-scale FLOPs cost model for DeiT/MAE backbones.
+
+use pitome::eval::classify::{eval_config, paper_scale_flops, sweep};
+use pitome::model::load_model_params;
+use pitome::runtime::Registry;
+use pitome::util::Args;
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::parse();
+    let dir = std::path::PathBuf::from(args.get("artifacts",
+        Registry::default_dir().to_str().unwrap_or("artifacts")));
+    let n = args.get_parse("n", 512);
+    let ps = load_model_params(&dir, "vit").map_err(|e| anyhow::anyhow!("{e}"))?;
+
+    if args.has("figure6") {
+        println!("# Figure 6: OTS accuracy vs GFLOPs (ShapeBench ViT-Ti)");
+        let rs = [0.975, 0.95, 0.925, 0.9, 0.85, 0.8];
+        let modes = ["pitome", "tome", "tofu", "dct", "diffrate"];
+        println!("{:<10} {:<7} {:>8} {:>9} {:>9}", "mode", "r", "acc%",
+                 "GFLOPs", "speedup");
+        for row in sweep(&ps, &modes, &rs, n).map_err(|e| anyhow::anyhow!("{e}"))? {
+            println!("{:<10} {:<7} {:>8.2} {:>9.4} {:>8.2}x",
+                     row.mode, row.r, row.acc, row.gflops, row.speedup);
+        }
+        return Ok(());
+    }
+
+    println!("# Table 6 (ShapeBench substitution): OTS accuracy per mode, r=0.9");
+    println!("{:<10} {:>8} {:>9} {:>9}", "mode", "acc%", "GFLOPs", "speedup");
+    let base = eval_config(&ps, "none", 1.0, n).map_err(|e| anyhow::anyhow!("{e}"))?;
+    println!("{:<10} {:>8.2} {:>9.4} {:>8.2}x (base)", base.mode, base.acc,
+             base.gflops, base.speedup);
+    for mode in ["pitome", "tome", "tofu", "dct", "diffrate", "random"] {
+        let row = eval_config(&ps, mode, 0.9, n).map_err(|e| anyhow::anyhow!("{e}"))?;
+        println!("{:<10} {:>8.2} {:>9.4} {:>8.2}x  (drop {:+.2})",
+                 row.mode, row.acc, row.gflops, row.speedup, row.acc - base.acc);
+    }
+
+    println!("\n# Table 6 FLOPs column at paper scale (cost model, DESIGN.md §6)");
+    for (name, g, s) in paper_scale_flops(&[0.95, 0.9]) {
+        println!("  {name:24} {g:8.1} GFLOPs  x{s:.2}");
+    }
+    Ok(())
+}

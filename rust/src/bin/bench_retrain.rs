@@ -1,0 +1,107 @@
+//! T3/T6-trained — Retrained comparison: drive the AOT `train_step`
+//! artifacts from Rust for a few hundred steps per merge mode and compare
+//! the resulting accuracy (the Table 3 / Table 6 "trained" columns).
+
+use std::path::PathBuf;
+
+use pitome::data::{patchify, shape_batch, shape_item, Rng, TEST_SEED, TRAIN_SEED};
+use pitome::runtime::{load_flat_params, Engine, HostTensor, Registry};
+use pitome::util::Args;
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::parse();
+    let dir = PathBuf::from(args.get("artifacts",
+        Registry::default_dir().to_str().unwrap_or("artifacts")));
+    let steps = args.get_parse("steps", 150);
+    let n_eval = args.get_parse("n", 256);
+    let reg = Registry::load(&dir).map_err(|e| anyhow::anyhow!("{e}"))?;
+    let engine = Engine::cpu().map_err(|e| anyhow::anyhow!("{e}"))?;
+
+    println!("# Table 3 shape: retrain-from-scratch with merging active");
+    println!("{:<22} {:>9} {:>9}", "train artifact", "loss@end", "eval acc%");
+
+    for name in ["vit_train_none_b32", "vit_train_pitome_r900_b32"] {
+        if reg.get(name).is_err() {
+            println!("  (skipping {name}: not in registry)");
+            continue;
+        }
+        let exe = engine.load(&reg, name).map_err(|e| anyhow::anyhow!("{e}"))?;
+        let psize = exe.entry.meta.param_size.unwrap_or(0);
+        let mut flat = load_flat_params(&dir, "vit_init.bin")
+            .map_err(|e| anyhow::anyhow!("{e}"))?;
+        assert_eq!(flat.len(), psize, "init params size mismatch");
+        let mut m = vec![0f32; psize];
+        let mut v = vec![0f32; psize];
+        let mut last_loss = f32::NAN;
+        let batch = 32usize;
+        for s in 1..=steps {
+            let start = ((s - 1) * batch) % 4000;
+            let (xs, ys) = shape_batch(TRAIN_SEED, start as u64, batch, 4);
+            let mut xdata = Vec::with_capacity(batch * 64 * 16);
+            for x in &xs {
+                xdata.extend_from_slice(&x.data);
+            }
+            let ydata: Vec<i32> = ys.iter().map(|&y| y as i32).collect();
+            let out = exe.run(&[
+                HostTensor::F32(flat, vec![psize]),
+                HostTensor::F32(m, vec![psize]),
+                HostTensor::F32(v, vec![psize]),
+                HostTensor::F32(vec![s as f32], vec![]),
+                HostTensor::F32(xdata, vec![batch, 64, 16]),
+                HostTensor::I32(ydata, vec![batch]),
+            ]).map_err(|e| anyhow::anyhow!("{e}"))?;
+            flat = out[0].as_f32().map_err(|e| anyhow::anyhow!("{e}"))?.to_vec();
+            m = out[1].as_f32().map_err(|e| anyhow::anyhow!("{e}"))?.to_vec();
+            v = out[2].as_f32().map_err(|e| anyhow::anyhow!("{e}"))?.to_vec();
+            last_loss = out[3].as_f32().map_err(|e| anyhow::anyhow!("{e}"))?[0];
+            if s % 50 == 0 {
+                eprintln!("  [{name}] step {s}/{steps} loss={last_loss:.4}");
+            }
+        }
+        // evaluate with the matching forward artifact (batch 8)
+        let fwd_name = if name.contains("pitome") {
+            "vit_pitome_r900_b8"
+        } else {
+            "vit_none_b8"
+        };
+        let acc = eval_forward(&engine, &reg, fwd_name, &flat, n_eval)?;
+        println!("{:<22} {:>9.4} {:>9.2}", name, last_loss, acc);
+    }
+    Ok(())
+}
+
+fn eval_forward(engine: &Engine, reg: &Registry, name: &str, flat: &[f32],
+                n: usize) -> anyhow::Result<f64> {
+    let exe = engine.load(reg, name).map_err(|e| anyhow::anyhow!("{e}"))?;
+    let b = exe.entry.meta.batch;
+    let mut ok = 0usize;
+    let mut done = 0usize;
+    while done < n {
+        let count = b.min(n - done);
+        let mut xdata = Vec::with_capacity(b * 64 * 16);
+        let mut labels = Vec::with_capacity(b);
+        for i in 0..b {
+            let idx = (done + i.min(count - 1)) as u64;
+            let item = shape_item(TEST_SEED, idx);
+            xdata.extend_from_slice(&patchify(&item.image, 4).data);
+            labels.push(item.label);
+        }
+        let out = exe.run(&[
+            HostTensor::F32(flat.to_vec(), vec![flat.len()]),
+            HostTensor::F32(xdata, vec![b, 64, 16]),
+        ]).map_err(|e| anyhow::anyhow!("{e}"))?;
+        let logits = out[0].as_f32().map_err(|e| anyhow::anyhow!("{e}"))?;
+        let classes = logits.len() / b;
+        for i in 0..count {
+            let row = &logits[i * classes..(i + 1) * classes];
+            let pred = row.iter().enumerate()
+                .max_by(|a, b2| a.1.partial_cmp(b2.1).unwrap()).unwrap().0;
+            if pred == labels[i] {
+                ok += 1;
+            }
+        }
+        done += count;
+    }
+    let _ = Rng::new(0);
+    Ok(100.0 * ok as f64 / n as f64)
+}

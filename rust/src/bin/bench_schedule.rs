@@ -1,0 +1,103 @@
+//! F8/F9 — Merging schedules: ratio-r vs fixed-k at matched total token
+//! removal (App. C).  Reports plans, FLOPs, and OTS accuracy for both
+//! schedules on the ShapeBench ViT.
+
+use pitome::config::ViTConfig;
+use pitome::data::{patchify, shape_item, Rng, TEST_SEED};
+use pitome::eval::ablation::{matched_fixed_k, schedule_plans};
+use pitome::merge::fixed_k_plan;
+use pitome::model::flops::encoder_flops;
+use pitome::model::{load_model_params, ViTModel};
+use pitome::runtime::Registry;
+use pitome::util::Args;
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::parse();
+    let dir = std::path::PathBuf::from(args.get("artifacts",
+        Registry::default_dir().to_str().unwrap_or("artifacts")));
+    let n = args.get_parse("n", 384);
+
+    println!("# Figures 8-9: ratio-r vs fixed-k schedules");
+    println!("\n## plan shapes (ViT-Ti, 65 tokens, 4 blocks)");
+    for (label, plan, removed) in schedule_plans(65, 4) {
+        println!("  {label:<14} plan={plan:?} removed={removed}");
+    }
+    println!("\n## plan shapes at paper scale (197 tokens, 12 blocks)");
+    for (label, plan, removed) in schedule_plans(197, 12) {
+        let f = encoder_flops(&plan, 384, 1536, true) / 1e9;
+        println!("  {label:<14} removed={removed:<4} {f:7.2} GFLOPs end={}",
+                 plan.last().unwrap());
+    }
+
+    // matched-removal accuracy comparison on ShapeBench
+    let ps = load_model_params(&dir, "vit").map_err(|e| anyhow::anyhow!("{e}"))?;
+    println!("\n## OTS accuracy: ratio-r vs matched fixed-k (pitome, ShapeBench)");
+    println!("{:<22} {:>8} {:>10}", "schedule", "acc%", "end-tokens");
+    for r in [0.95, 0.9, 0.85] {
+        // ratio schedule
+        let cfg_r = ViTConfig { merge_mode: "pitome".into(), merge_r: r,
+                                ..Default::default() };
+        let acc_r = accuracy(&ps, &cfg_r, n)?;
+        println!("{:<22} {:>8.2} {:>10}", format!("ratio r={r}"), acc_r,
+                 cfg_r.plan().last().unwrap());
+        // matched fixed-k schedule
+        let k = matched_fixed_k(65, 4, r);
+        let plan = fixed_k_plan(65, k, 4, 1);
+        let mut cfg_k = cfg_r.clone();
+        cfg_k.merge_r = 1.0; // plan injected manually below
+        let acc_k = accuracy_with_plan(&ps, &cfg_k, plan.clone(), n)?;
+        println!("{:<22} {:>8.2} {:>10}", format!("fixed k={k}"), acc_k,
+                 plan.last().unwrap());
+    }
+    Ok(())
+}
+
+fn accuracy(ps: &pitome::model::ParamStore, cfg: &ViTConfig, n: usize)
+            -> anyhow::Result<f64> {
+    let model = ViTModel::new(ps, cfg.clone());
+    let mut rng = Rng::new(7);
+    let mut ok = 0usize;
+    for i in 0..n {
+        let item = shape_item(TEST_SEED, i as u64);
+        let patches = patchify(&item.image, cfg.patch_size);
+        if model.predict(&patches, &mut rng).map_err(|e| anyhow::anyhow!("{e}"))?
+            == item.label {
+            ok += 1;
+        }
+    }
+    Ok(100.0 * ok as f64 / n as f64)
+}
+
+/// Accuracy with an explicit token plan (fixed-k schedules are not a
+/// ratio, so we drive the encoder directly).
+fn accuracy_with_plan(ps: &pitome::model::ParamStore, cfg: &ViTConfig,
+                      plan: Vec<usize>, n: usize) -> anyhow::Result<f64> {
+    use pitome::model::encoder::{encoder_forward, EncoderCfg};
+    use pitome::tensor::{argmax, dense, Mat};
+    let mut rng = Rng::new(7);
+    let ecfg = EncoderCfg {
+        prefix: "vit.".into(),
+        dim: cfg.dim,
+        depth: cfg.depth,
+        heads: cfg.heads,
+        mode: pitome::merge::MergeMode::PiToMe,
+        plan,
+        prop_attn: true,
+    };
+    let model = ViTModel::new(ps, cfg.clone());
+    let mut ok = 0usize;
+    for i in 0..n {
+        let item = shape_item(TEST_SEED, i as u64);
+        let patches = patchify(&item.image, cfg.patch_size);
+        let x = model.tokens(&patches).map_err(|e| anyhow::anyhow!("{e}"))?;
+        let out = encoder_forward(ps, &ecfg, x, &mut rng)
+            .map_err(|e| anyhow::anyhow!("{e}"))?;
+        let f = Mat::from_vec(1, cfg.dim, out.row(0).to_vec());
+        let lg = dense(&f, &ps.mat2("vit.head.w").map_err(|e| anyhow::anyhow!("{e}"))?,
+                       Some(ps.vec1("vit.head.b").map_err(|e| anyhow::anyhow!("{e}"))?));
+        if argmax(&lg.data) == item.label {
+            ok += 1;
+        }
+    }
+    Ok(100.0 * ok as f64 / n as f64)
+}

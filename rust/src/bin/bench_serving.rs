@@ -1,0 +1,80 @@
+//! T5 — Serving wall-time: end-to-end latency/throughput of the
+//! coordinator across compression variants and arrival rates (the Table 5
+//! inference-time shape), on the PJRT artifacts.
+
+use std::path::PathBuf;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use pitome::config::ServingConfig;
+use pitome::coordinator::{Coordinator, Qos};
+use pitome::data::{generate_trace, patchify, shape_item, TraceConfig, TEST_SEED};
+use pitome::runtime::{HostTensor, Registry};
+use pitome::util::Args;
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::parse();
+    let dir = PathBuf::from(args.get("artifacts",
+        Registry::default_dir().to_str().unwrap_or("artifacts")));
+    let requests = args.get_parse("requests", 400);
+    let reg = Registry::load(&dir).map_err(|e| anyhow::anyhow!("{e}"))?;
+
+    println!("# Table 5 (serving substitution): wall-time per variant");
+    println!("{:<22} {:>7} {:>10} {:>10} {:>10} {:>11} {:>10}",
+             "variant", "rate", "wall s", "mean us", "p99 us", "mean batch",
+             "req/s");
+
+    for (artifact, qos) in [("vit_none_b8", Qos::Accuracy),
+                            ("vit_pitome_r900_b8", Qos::Accuracy)] {
+        if reg.get(artifact).is_err() {
+            println!("  (skipping {artifact}: not in registry)");
+            continue;
+        }
+        for rate in [200.0, 800.0, 3200.0] {
+            let selection = [("m", vec![artifact.to_string()])];
+            let coord = Arc::new(Coordinator::boot(
+                &reg, &dir, &selection, ServingConfig::default())
+                .map_err(|e| anyhow::anyhow!("{e}"))?);
+            // allow the worker thread to finish compiling
+            warmup(&coord)?;
+            let trace = generate_trace(&TraceConfig {
+                rate, count: requests, seed: 3, ..Default::default()
+            });
+            let t0 = Instant::now();
+            let mut pending = Vec::new();
+            for ev in &trace {
+                let target = Duration::from_micros(ev.at_us);
+                if let Some(w) = target.checked_sub(t0.elapsed()) {
+                    std::thread::sleep(w);
+                }
+                let item = shape_item(TEST_SEED, ev.item);
+                let patches = patchify(&item.image, 4);
+                pending.push(coord.submit_nowait(
+                    "m", qos, vec![HostTensor::F32(patches.data, vec![64, 16])])
+                    .map_err(|e| anyhow::anyhow!("{e}"))?);
+            }
+            let mut ok = 0usize;
+            for rx in pending {
+                if rx.recv().is_ok() {
+                    ok += 1;
+                }
+            }
+            let wall = t0.elapsed().as_secs_f64();
+            let snap = &coord.metrics()[0].2;
+            println!("{:<22} {:>7} {:>10.2} {:>10.0} {:>10} {:>11.2} {:>10.1}",
+                     artifact, rate, wall, snap.mean_us, snap.p99_us,
+                     snap.mean_batch, ok as f64 / wall);
+        }
+    }
+    Ok(())
+}
+
+fn warmup(coord: &Coordinator) -> anyhow::Result<()> {
+    let item = shape_item(TEST_SEED, 0);
+    let patches = patchify(&item.image, 4);
+    // first request blocks until the worker compiled the artifact
+    coord.submit("m", Qos::Accuracy,
+                 vec![HostTensor::F32(patches.data, vec![64, 16])])
+        .map_err(|e| anyhow::anyhow!("{e}"))?;
+    Ok(())
+}

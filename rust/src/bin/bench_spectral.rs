@@ -1,0 +1,46 @@
+//! THM1 — Theorem 1 reproduction: spectral distance SD(G, Gc) of PiToMe vs
+//! ToMe vs random coarsening as intra-cluster noise varies (assumption A1).
+//!
+//! Expected shape (paper): SD_pitome -> 0 as clusters tighten; SD_tome
+//! converges to a positive constant; see EXPERIMENTS.md §THM1.
+
+use pitome::eval::spectral::{clustered_tokens, cross_cluster_fraction,
+                             iterative_coarsen, theorem1_sweep, ClusterSpec,
+                             CoarsenAlgo, Layout};
+use pitome::graph::{spectral_distance, token_graph};
+use pitome::util::Args;
+
+fn main() {
+    let args = Args::parse();
+    let steps = args.get_parse("steps", 4);
+    let k = args.get_parse("k", 3);
+
+    println!("# Theorem 1: spectrum preservation of token merging");
+    println!("# clusters |V| = [16, 8, 6, 2] (A3), h=16, margin=0.6, \
+              interleaved layout (Fig. 1 case)");
+    println!("{:<10} {:<10} {:>12} {:>14}", "noise", "algo", "SD(G,Gc)",
+             "cross-merges");
+    let noises = [0.01, 0.02, 0.05, 0.1, 0.2, 0.4, 0.8];
+    for row in theorem1_sweep(&noises, steps, k) {
+        println!("{:<10} {:<10} {:>12.4} {:>14.3}",
+                 row.noise, row.algo, row.sd, row.cross_cluster_frac);
+    }
+
+    // convergence table: SD vs coarsening depth at fixed tight noise
+    println!("\n# SD vs coarsening depth (noise = 0.05)");
+    println!("{:<8} {:<10} {:>12}", "steps", "algo", "SD(G,Gc)");
+    let spec = ClusterSpec { sizes: vec![16, 8, 6, 2], h: 16, noise: 0.05,
+                             seed: 42, layout: Layout::Interleaved };
+    let (kf, labels) = clustered_tokens(&spec);
+    let w = token_graph(&kf);
+    for s in 1..=5usize {
+        for (algo, name) in [(CoarsenAlgo::PiToMe, "pitome"),
+                             (CoarsenAlgo::ToMe, "tome"),
+                             (CoarsenAlgo::Random, "random")] {
+            let p = iterative_coarsen(&kf, algo, s, k, 0.6, 7);
+            println!("{:<8} {:<10} {:>12.4}  (cross {:.2})", s, name,
+                     spectral_distance(&w, &p),
+                     cross_cluster_fraction(&p, &labels));
+        }
+    }
+}

@@ -1,0 +1,42 @@
+//! T7/T9/F10 — Text classification: sentiment accuracy vs FLOPs speedup
+//! with compression on the first three layers (Tables 7, 9; Figure 10).
+
+use pitome::eval::textcls::{eval_config, sweep};
+use pitome::model::load_model_params;
+use pitome::runtime::Registry;
+use pitome::util::Args;
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::parse();
+    let dir = std::path::PathBuf::from(args.get("artifacts",
+        Registry::default_dir().to_str().unwrap_or("artifacts")));
+    let n = args.get_parse("n", 384);
+    let ps = load_model_params(&dir, "bert").map_err(|e| anyhow::anyhow!("{e}"))?;
+
+    if args.has("sweep") || args.has("figure10") {
+        let deep = args.has("deep");
+        println!("# Table 9 / Figure 10: accuracy vs r{}",
+                 if deep { " (deep-compression extension)" } else { "" });
+        let rs = if deep { vec![0.5, 0.35, 0.25, 0.15] }
+                 else { vec![0.8, 0.75, 0.7] };
+        let modes = ["pitome", "tome", "tofu", "dct", "diffrate"];
+        println!("{:<10} {:<7} {:>8} {:>10}", "mode", "r", "acc%", "flops x");
+        for row in sweep(&ps, &modes, &rs, n).map_err(|e| anyhow::anyhow!("{e}"))? {
+            println!("{:<10} {:<7} {:>8.2} {:>9.2}x",
+                     row.mode, row.r, row.acc, row.flops_speedup);
+        }
+        return Ok(());
+    }
+
+    println!("# Table 7 (synthetic sentiment substitution): r = 0.8, first 3 layers");
+    println!("{:<10} {:>8} {:>10}", "mode", "acc%", "flops x");
+    let base = eval_config(&ps, "none", 1.0, n).map_err(|e| anyhow::anyhow!("{e}"))?;
+    println!("{:<10} {:>8.2} {:>9.2}x (base)", base.mode, base.acc,
+             base.flops_speedup);
+    for mode in ["pitome", "tome", "tofu", "dct", "diffrate"] {
+        let row = eval_config(&ps, mode, 0.8, n).map_err(|e| anyhow::anyhow!("{e}"))?;
+        println!("{:<10} {:>8.2} {:>9.2}x  (drop {:+.2})",
+                 row.mode, row.acc, row.flops_speedup, row.acc - base.acc);
+    }
+    Ok(())
+}

@@ -1,0 +1,42 @@
+//! T4/F5 — VQA: answer accuracy per merge mode (Table 4 shape) and the
+//! accuracy-vs-r curve of Figure 5, on the synthetic VQA model
+//! (LLaVA stand-in, DESIGN.md §6).
+
+use pitome::eval::vqa::{eval_config, sweep};
+use pitome::model::load_model_params;
+use pitome::runtime::Registry;
+use pitome::util::Args;
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::parse();
+    let dir = std::path::PathBuf::from(args.get("artifacts",
+        Registry::default_dir().to_str().unwrap_or("artifacts")));
+    let n = args.get_parse("n", 384);
+    let ps = load_model_params(&dir, "vqa").map_err(|e| anyhow::anyhow!("{e}"))?;
+
+    if args.has("sweep") {
+        println!("# Figure 5: VQA accuracy vs compression ratio r (pitome)");
+        println!("{:<10} {:<7} {:>8} {:>9} {:>8}", "mode", "r", "acc%",
+                 "GFLOPs", "vis-tok");
+        let rs = [0.975, 0.95, 0.925, 0.9, 0.85, 0.8];
+        for row in sweep(&ps, &["pitome", "tome"], &rs, n)
+            .map_err(|e| anyhow::anyhow!("{e}"))? {
+            println!("{:<10} {:<7} {:>8.2} {:>9.4} {:>8}",
+                     row.mode, row.r, row.acc, row.gflops, row.visual_tokens);
+        }
+        return Ok(());
+    }
+
+    println!("# Table 4 (synthetic VQA substitution): r = 0.9");
+    println!("{:<10} {:>8} {:>9} {:>8}", "mode", "acc%", "GFLOPs", "vis-tok");
+    let base = eval_config(&ps, "none", 1.0, n).map_err(|e| anyhow::anyhow!("{e}"))?;
+    println!("{:<10} {:>8.2} {:>9.4} {:>8} (base)", base.mode, base.acc,
+             base.gflops, base.visual_tokens);
+    for mode in ["pitome", "tome", "tofu", "dct", "diffrate"] {
+        let row = eval_config(&ps, mode, 0.9, n).map_err(|e| anyhow::anyhow!("{e}"))?;
+        println!("{:<10} {:>8.2} {:>9.4} {:>8}  (drop {:+.2})",
+                 row.mode, row.acc, row.gflops, row.visual_tokens,
+                 row.acc - base.acc);
+    }
+    Ok(())
+}

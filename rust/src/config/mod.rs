@@ -1,0 +1,252 @@
+//! Typed configuration system: model configs (mirroring
+//! `python/compile/common.py`), merge settings, serving policies.
+//!
+//! Configs load from JSON files or CLI flags; every experiment binary and
+//! the `pitome` CLI share these types.
+
+use crate::merge::{merge_plan, MergeMode};
+
+/// ViT family config — must mirror `compile.common.ViTConfig` so the Rust
+/// CPU reference and the AOT artifacts agree on shapes and plans.
+#[derive(Clone, Debug)]
+pub struct ViTConfig {
+    /// model name tag
+    pub name: String,
+    /// input image side
+    pub image_size: usize,
+    /// square patch side
+    pub patch_size: usize,
+    /// embedding dim
+    pub dim: usize,
+    /// transformer depth
+    pub depth: usize,
+    /// attention heads
+    pub heads: usize,
+    /// MLP expansion ratio
+    pub mlp_ratio: f64,
+    /// classifier classes
+    pub num_classes: usize,
+    /// merge algorithm
+    pub merge_mode: String,
+    /// keep-ratio per layer
+    pub merge_r: f64,
+    /// restrict merging to these blocks (None = all)
+    pub merge_layers: Option<Vec<usize>>,
+    /// proportional attention on/off
+    pub prop_attn: bool,
+}
+
+impl Default for ViTConfig {
+    fn default() -> Self {
+        ViTConfig {
+            name: "vit-ti".into(),
+            image_size: 32,
+            patch_size: 4,
+            dim: 64,
+            depth: 4,
+            heads: 4,
+            mlp_ratio: 2.0,
+            num_classes: 10,
+            merge_mode: "none".into(),
+            merge_r: 1.0,
+            merge_layers: None,
+            prop_attn: true,
+        }
+    }
+}
+
+impl ViTConfig {
+    /// Paper-scale presets used by the FLOPs cost model (Table 6 backbones).
+    pub fn preset(name: &str) -> Option<ViTConfig> {
+        let (dim, depth, heads, img, patch) = match name {
+            "vit-ti" => (64, 4, 4, 32, 4),
+            "deit-t" => (192, 12, 3, 224, 16),
+            "deit-s" => (384, 12, 6, 224, 16),
+            "deit-b" => (768, 12, 12, 224, 16),
+            "mae-l" => (1024, 24, 16, 224, 16),
+            "mae-h" => (1280, 32, 16, 224, 14),
+            _ => return None,
+        };
+        Some(ViTConfig {
+            name: name.into(),
+            image_size: img,
+            patch_size: patch,
+            dim,
+            depth,
+            heads,
+            mlp_ratio: if name == "vit-ti" { 2.0 } else { 4.0 },
+            num_classes: if name == "vit-ti" { 10 } else { 1000 },
+            ..Default::default()
+        })
+    }
+
+    /// Patch vector length.
+    pub fn patch_dim(&self) -> usize {
+        self.patch_size * self.patch_size
+    }
+
+    /// Patch count.
+    pub fn num_patches(&self) -> usize {
+        (self.image_size / self.patch_size).pow(2)
+    }
+
+    /// Tokens incl. CLS.
+    pub fn n_tokens(&self) -> usize {
+        self.num_patches() + 1
+    }
+
+    /// Head dim.
+    pub fn head_dim(&self) -> usize {
+        self.dim / self.heads
+    }
+
+    /// MLP hidden width.
+    pub fn mlp_hidden(&self) -> usize {
+        (self.dim as f64 * self.mlp_ratio) as usize
+    }
+
+    /// Parsed merge mode.
+    pub fn mode(&self) -> MergeMode {
+        MergeMode::parse(&self.merge_mode).unwrap_or(MergeMode::None)
+    }
+
+    /// Static token plan (mirror of `ViTConfig.plan()` in python).
+    pub fn plan(&self) -> Vec<usize> {
+        if self.mode() == MergeMode::None || self.merge_r >= 1.0 {
+            return vec![self.n_tokens(); self.depth + 1];
+        }
+        merge_plan(self.n_tokens(), self.merge_r, self.depth, 1,
+                   self.merge_layers.as_deref())
+    }
+}
+
+/// Text model config — mirror of `compile.common.TextConfig`.
+#[derive(Clone, Debug)]
+pub struct TextConfig {
+    /// model tag
+    pub name: String,
+    /// vocabulary size
+    pub vocab_size: usize,
+    /// sequence length (without CLS)
+    pub seq_len: usize,
+    /// embedding dim
+    pub dim: usize,
+    /// depth
+    pub depth: usize,
+    /// heads
+    pub heads: usize,
+    /// MLP ratio
+    pub mlp_ratio: f64,
+    /// output classes
+    pub num_classes: usize,
+    /// merge algorithm
+    pub merge_mode: String,
+    /// keep-ratio
+    pub merge_r: f64,
+    /// blocks that merge (paper: first three)
+    pub merge_layers: Option<Vec<usize>>,
+    /// proportional attention
+    pub prop_attn: bool,
+}
+
+impl Default for TextConfig {
+    fn default() -> Self {
+        TextConfig {
+            name: "bert-small".into(),
+            vocab_size: 512,
+            seq_len: 128,
+            dim: 64,
+            depth: 4,
+            heads: 4,
+            mlp_ratio: 2.0,
+            num_classes: 2,
+            merge_mode: "none".into(),
+            merge_r: 1.0,
+            merge_layers: Some(vec![0, 1, 2]),
+            prop_attn: true,
+        }
+    }
+}
+
+impl TextConfig {
+    /// Tokens incl. CLS.
+    pub fn n_tokens(&self) -> usize {
+        self.seq_len + 1
+    }
+
+    /// Parsed merge mode.
+    pub fn mode(&self) -> MergeMode {
+        MergeMode::parse(&self.merge_mode).unwrap_or(MergeMode::None)
+    }
+
+    /// Static token plan.
+    pub fn plan(&self) -> Vec<usize> {
+        if self.mode() == MergeMode::None || self.merge_r >= 1.0 {
+            return vec![self.n_tokens(); self.depth + 1];
+        }
+        merge_plan(self.n_tokens(), self.merge_r, self.depth, 1,
+                   self.merge_layers.as_deref())
+    }
+}
+
+/// Serving policy for the coordinator.
+#[derive(Clone, Debug)]
+pub struct ServingConfig {
+    /// max batch size (must match an available artifact batch)
+    pub max_batch: usize,
+    /// max time to hold a partial batch, microseconds
+    pub batch_timeout_us: u64,
+    /// bounded queue capacity (admission control / backpressure)
+    pub queue_capacity: usize,
+    /// number of worker tasks
+    pub workers: usize,
+}
+
+impl Default for ServingConfig {
+    fn default() -> Self {
+        ServingConfig {
+            max_batch: 8,
+            batch_timeout_us: 2_000,
+            queue_capacity: 1024,
+            workers: 1,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_plan_is_flat() {
+        let c = ViTConfig::default();
+        assert_eq!(c.plan(), vec![65; 5]);
+    }
+
+    #[test]
+    fn merged_plan_shrinks() {
+        let c = ViTConfig { merge_mode: "pitome".into(), merge_r: 0.9,
+                            ..Default::default() };
+        let p = c.plan();
+        assert_eq!(p[0], 65);
+        assert!(p[4] < 65);
+    }
+
+    #[test]
+    fn presets_exist() {
+        for name in ["deit-t", "deit-s", "mae-l", "mae-h"] {
+            let c = ViTConfig::preset(name).unwrap();
+            assert!(c.n_tokens() > 100);
+        }
+        assert!(ViTConfig::preset("nope").is_none());
+    }
+
+    #[test]
+    fn text_plan_only_first_layers() {
+        let c = TextConfig { merge_mode: "pitome".into(), merge_r: 0.8,
+                             ..Default::default() };
+        let p = c.plan();
+        assert!(p[3] < p[0]);
+        assert_eq!(p[3], p[4]);
+    }
+}

@@ -1,0 +1,242 @@
+//! Dynamic batcher: one worker thread per model variant, collecting
+//! requests up to `max_batch` or `batch_timeout_us`, padding the batch to
+//! the artifact's compiled batch size, executing on PJRT, and splitting the
+//! outputs back per request.
+//!
+//! Built on std sync primitives (DESIGN.md §11): a bounded
+//! `mpsc::sync_channel` is the admission-control boundary; `recv_timeout`
+//! implements the batching deadline without spinning.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::mpsc::{Receiver, RecvTimeoutError, SyncSender, TrySendError};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use std::path::PathBuf;
+
+use crate::config::ServingConfig;
+use crate::error::{Error, Result};
+use crate::runtime::{ArtifactEntry, Engine, Executable, HostTensor};
+
+use super::metrics::Metrics;
+use super::request::InferRequest;
+
+/// Handle to a running variant worker.
+pub struct VariantWorker {
+    tx: SyncSender<InferRequest>,
+    /// shared metrics
+    pub metrics: Arc<Metrics>,
+    /// approximate queued-request count (admission signal)
+    depth: Arc<AtomicUsize>,
+    /// queue capacity
+    pub capacity: usize,
+    join: Option<std::thread::JoinHandle<()>>,
+}
+
+impl VariantWorker {
+    /// Spawn a worker that compiles `hlo_path` on its own PJRT client
+    /// (PJRT handles are not Send; per-thread clients keep this safe) and
+    /// serves batches.  `params` is the artifact's leading flat-weights
+    /// input (empty vec for artifacts without params).
+    pub fn spawn(hlo_path: PathBuf, entry: ArtifactEntry, params: Vec<f32>,
+                 cfg: &ServingConfig) -> VariantWorker {
+        let (tx, rx) = std::sync::mpsc::sync_channel::<InferRequest>(cfg.queue_capacity);
+        let metrics = Arc::new(Metrics::default());
+        let depth = Arc::new(AtomicUsize::new(0));
+        let m2 = metrics.clone();
+        let d2 = depth.clone();
+        let max_batch = cfg.max_batch.min(entry.meta.batch);
+        let timeout = Duration::from_micros(cfg.batch_timeout_us);
+        let join = std::thread::Builder::new()
+            .name(format!("pitome-worker-{}", entry.file))
+            .spawn(move || {
+                let engine = match Engine::cpu() {
+                    Ok(e) => e,
+                    Err(e) => {
+                        eprintln!("[pitome worker] PJRT client failed: {e}");
+                        return;
+                    }
+                };
+                let exe = match engine.compile_file(&hlo_path, entry) {
+                    Ok(e) => e,
+                    Err(e) => {
+                        eprintln!("[pitome worker] compile failed: {e}");
+                        return;
+                    }
+                };
+                worker_loop(exe, params, rx, m2, d2, max_batch, timeout)
+            })
+            .expect("spawn worker");
+        VariantWorker {
+            tx,
+            metrics,
+            depth,
+            capacity: cfg.queue_capacity,
+            join: Some(join),
+        }
+    }
+
+    /// Blocking submit (backpressure by blocking on the bounded queue).
+    pub fn submit(&self, req: InferRequest) -> Result<()> {
+        self.depth.fetch_add(1, Ordering::Relaxed);
+        self.tx.send(req).map_err(|_| {
+            self.depth.fetch_sub(1, Ordering::Relaxed);
+            Error::Coordinator("worker queue closed".into())
+        })
+    }
+
+    /// Non-blocking submit; `Err` when the queue is full (admission
+    /// control) or closed.
+    pub fn try_submit(&self, req: InferRequest) -> Result<()> {
+        self.depth.fetch_add(1, Ordering::Relaxed);
+        self.tx.try_send(req).map_err(|e| {
+            self.depth.fetch_sub(1, Ordering::Relaxed);
+            match e {
+                TrySendError::Full(_) => Error::Coordinator("queue full (backpressure)".into()),
+                TrySendError::Disconnected(_) => Error::Coordinator("worker queue closed".into()),
+            }
+        })
+    }
+
+    /// Queue headroom signal used by the router's load-shedding policy.
+    pub fn has_capacity(&self) -> bool {
+        self.depth.load(Ordering::Relaxed) < self.capacity / 2
+    }
+
+    /// Current approximate depth.
+    pub fn depth(&self) -> usize {
+        self.depth.load(Ordering::Relaxed)
+    }
+}
+
+impl Drop for VariantWorker {
+    fn drop(&mut self) {
+        let (dead_tx, _) = std::sync::mpsc::sync_channel(1);
+        drop(std::mem::replace(&mut self.tx, dead_tx));
+        if let Some(j) = self.join.take() {
+            let _ = j.join();
+        }
+    }
+}
+
+#[allow(clippy::too_many_arguments)]
+fn worker_loop(exe: Executable, params: Vec<f32>,
+               rx: Receiver<InferRequest>, metrics: Arc<Metrics>,
+               depth: Arc<AtomicUsize>, max_batch: usize, timeout: Duration) {
+    loop {
+        let first = match rx.recv() {
+            Ok(r) => r,
+            Err(_) => return,
+        };
+        let mut batch = vec![first];
+        let deadline = Instant::now() + timeout;
+        while batch.len() < max_batch {
+            let remaining = deadline.saturating_duration_since(Instant::now());
+            if remaining.is_zero() {
+                break;
+            }
+            match rx.recv_timeout(remaining) {
+                Ok(r) => batch.push(r),
+                Err(RecvTimeoutError::Timeout) => break,
+                Err(RecvTimeoutError::Disconnected) => break,
+            }
+        }
+        depth.fetch_sub(batch.len(), Ordering::Relaxed);
+        let exec_start = Instant::now();
+        let result = run_batch(&exe, &params, &batch);
+        let exec_us = exec_start.elapsed().as_micros() as u64;
+        let batch_size = batch.len();
+        metrics.record_batch(batch_size);
+        match result {
+            Ok(per_request) => {
+                for (req, outputs) in batch.into_iter().zip(per_request) {
+                    let queue_us =
+                        exec_start.duration_since(req.enqueued_at).as_micros() as u64;
+                    metrics.record(queue_us + exec_us);
+                    let _ = req.respond.send(super::request::InferResponse {
+                        outputs,
+                        queue_us,
+                        exec_us,
+                        batch_size,
+                    });
+                }
+            }
+            Err(e) => {
+                eprintln!("[pitome worker] batch failed: {e}");
+                // responders dropped; submitters observe a closed channel
+            }
+        }
+    }
+}
+
+/// Stack per-request inputs into the artifact batch, execute, split.
+fn run_batch(exe: &Executable, params: &[f32], batch: &[InferRequest])
+             -> Result<Vec<Vec<HostTensor>>> {
+    let entry = &exe.entry;
+    let b_art = entry.meta.batch;
+    if batch.len() > b_art {
+        return Err(Error::Coordinator(format!(
+            "batch {} exceeds artifact batch {}", batch.len(), b_art)));
+    }
+    let n_sample_inputs = entry.inputs.len() - 1; // first input = params
+    let mut full_inputs: Vec<HostTensor> = Vec::with_capacity(entry.inputs.len());
+    full_inputs.push(HostTensor::F32(params.to_vec(),
+                                     entry.inputs[0].shape.clone()));
+    for si in 0..n_sample_inputs {
+        let spec = &entry.inputs[si + 1];
+        let per = spec.numel() / b_art;
+        match &batch[0].inputs[si] {
+            HostTensor::F32(..) => {
+                let mut data = Vec::with_capacity(spec.numel());
+                for bi in 0..b_art {
+                    let req = &batch[bi.min(batch.len() - 1)];
+                    let d = match &req.inputs[si] {
+                        HostTensor::F32(d, _) => d,
+                        _ => return Err(Error::Shape("dtype mix in batch".into())),
+                    };
+                    if d.len() != per {
+                        return Err(Error::Shape(format!(
+                            "sample input {si}: {} elems, artifact wants {per}",
+                            d.len())));
+                    }
+                    data.extend_from_slice(d);
+                }
+                full_inputs.push(HostTensor::F32(data, spec.shape.clone()));
+            }
+            HostTensor::I32(..) => {
+                let mut data = Vec::with_capacity(spec.numel());
+                for bi in 0..b_art {
+                    let req = &batch[bi.min(batch.len() - 1)];
+                    let d = match &req.inputs[si] {
+                        HostTensor::I32(d, _) => d,
+                        _ => return Err(Error::Shape("dtype mix in batch".into())),
+                    };
+                    data.extend_from_slice(d);
+                }
+                full_inputs.push(HostTensor::I32(data, spec.shape.clone()));
+            }
+        }
+    }
+    let outputs = exe.run(&full_inputs)?;
+    // split each output along the batch axis
+    let mut per_request: Vec<Vec<HostTensor>> =
+        (0..batch.len()).map(|_| Vec::new()).collect();
+    for (out, spec) in outputs.iter().zip(&entry.outputs) {
+        let per = spec.numel() / b_art;
+        let sample_shape: Vec<usize> = if spec.shape.len() > 1 {
+            spec.shape[1..].to_vec()
+        } else {
+            vec![1]
+        };
+        for (bi, sink) in per_request.iter_mut().enumerate() {
+            let t = match out {
+                HostTensor::F32(d, _) => HostTensor::F32(
+                    d[bi * per..(bi + 1) * per].to_vec(), sample_shape.clone()),
+                HostTensor::I32(d, _) => HostTensor::I32(
+                    d[bi * per..(bi + 1) * per].to_vec(), sample_shape.clone()),
+            };
+            sink.push(t);
+        }
+    }
+    Ok(per_request)
+}

@@ -1,0 +1,119 @@
+//! Serving metrics: counters + latency histogram with percentile queries.
+
+use std::sync::Mutex;
+
+/// Fixed log-scaled latency buckets (microseconds).
+const BUCKETS_US: [u64; 16] = [
+    50, 100, 200, 400, 800, 1_600, 3_200, 6_400, 12_800, 25_600, 51_200,
+    102_400, 204_800, 409_600, 819_200, u64::MAX,
+];
+
+#[derive(Default, Clone, Debug)]
+struct Inner {
+    count: u64,
+    total_us: u64,
+    max_us: u64,
+    hist: [u64; 16],
+    batches: u64,
+    batched_requests: u64,
+}
+
+/// Thread-safe metrics sink.
+#[derive(Default)]
+pub struct Metrics {
+    inner: Mutex<Inner>,
+}
+
+/// A point-in-time snapshot.
+#[derive(Clone, Debug)]
+pub struct Snapshot {
+    /// completed requests
+    pub count: u64,
+    /// mean end-to-end latency, microseconds
+    pub mean_us: f64,
+    /// p50 latency (bucket upper bound)
+    pub p50_us: u64,
+    /// p99 latency (bucket upper bound)
+    pub p99_us: u64,
+    /// max observed latency
+    pub max_us: u64,
+    /// mean requests per executed batch
+    pub mean_batch: f64,
+}
+
+impl Metrics {
+    /// Record one completed request.
+    pub fn record(&self, latency_us: u64) {
+        let mut g = self.inner.lock().unwrap();
+        g.count += 1;
+        g.total_us += latency_us;
+        g.max_us = g.max_us.max(latency_us);
+        let idx = BUCKETS_US.iter().position(|&b| latency_us <= b).unwrap_or(15);
+        g.hist[idx] += 1;
+    }
+
+    /// Record one executed batch of `n` requests.
+    pub fn record_batch(&self, n: usize) {
+        let mut g = self.inner.lock().unwrap();
+        g.batches += 1;
+        g.batched_requests += n as u64;
+    }
+
+    fn percentile(hist: &[u64; 16], count: u64, q: f64) -> u64 {
+        if count == 0 {
+            return 0;
+        }
+        let target = (count as f64 * q).ceil() as u64;
+        let mut acc = 0;
+        for (i, &c) in hist.iter().enumerate() {
+            acc += c;
+            if acc >= target {
+                return BUCKETS_US[i];
+            }
+        }
+        BUCKETS_US[15]
+    }
+
+    /// Take a snapshot.
+    pub fn snapshot(&self) -> Snapshot {
+        let g = self.inner.lock().unwrap();
+        Snapshot {
+            count: g.count,
+            mean_us: if g.count > 0 { g.total_us as f64 / g.count as f64 } else { 0.0 },
+            p50_us: Self::percentile(&g.hist, g.count, 0.5),
+            p99_us: Self::percentile(&g.hist, g.count, 0.99),
+            max_us: g.max_us,
+            mean_batch: if g.batches > 0 {
+                g.batched_requests as f64 / g.batches as f64
+            } else {
+                0.0
+            },
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn percentiles_ordered() {
+        let m = Metrics::default();
+        for i in 0..1000u64 {
+            m.record(i * 10);
+        }
+        let s = m.snapshot();
+        assert_eq!(s.count, 1000);
+        assert!(s.p50_us <= s.p99_us);
+        assert!(s.p99_us <= s.max_us.max(BUCKETS_US[14]));
+        assert!(s.mean_us > 0.0);
+    }
+
+    #[test]
+    fn batch_accounting() {
+        let m = Metrics::default();
+        m.record_batch(8);
+        m.record_batch(4);
+        assert!((m.snapshot().mean_batch - 6.0).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,20 @@
+//! L3 serving coordinator (the system contribution around the paper's
+//! algorithm): request routing over a compression ladder, dynamic batching,
+//! admission control, and metrics.
+//!
+//! Shape: vLLM-router-like.  Each logical model owns variants compiled at
+//! different merge ratios; the router picks a rung per request QoS and
+//! sheds to deeper compression under load; each variant has a dedicated
+//! batcher thread feeding the PJRT executable.
+
+pub mod batcher;
+pub mod metrics;
+pub mod request;
+pub mod router;
+pub mod server;
+
+pub use batcher::VariantWorker;
+pub use metrics::{Metrics, Snapshot};
+pub use request::{InferRequest, InferResponse, Qos};
+pub use router::{Router, Variant};
+pub use server::Coordinator;

@@ -1,0 +1,42 @@
+//! Request/response types crossing the coordinator boundary.
+
+use std::sync::mpsc;
+use std::time::Instant;
+
+use crate::runtime::HostTensor;
+
+/// A single-sample inference request (no batch dimension; the batcher adds
+/// it).  `inputs` holds the per-sample tensors in artifact order, *without*
+/// the leading params tensor (the worker prepends it).
+pub struct InferRequest {
+    /// per-sample input tensors
+    pub inputs: Vec<HostTensor>,
+    /// enqueue timestamp (set by the coordinator)
+    pub enqueued_at: Instant,
+    /// response channel (single-shot)
+    pub respond: mpsc::Sender<InferResponse>,
+}
+
+/// The coordinator's reply.
+#[derive(Clone, Debug)]
+pub struct InferResponse {
+    /// per-sample output tensors (batch dim stripped)
+    pub outputs: Vec<HostTensor>,
+    /// microseconds spent queued before execution began
+    pub queue_us: u64,
+    /// microseconds of PJRT execution (shared by the whole batch)
+    pub exec_us: u64,
+    /// how many requests shared the batch
+    pub batch_size: usize,
+}
+
+/// Quality-of-service class used by the router to pick a variant.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Qos {
+    /// maximize accuracy: uncompressed variant
+    Accuracy,
+    /// balanced: the default compressed variant
+    Balanced,
+    /// minimize latency/FLOPs: most compressed variant
+    Throughput,
+}

@@ -1,0 +1,90 @@
+//! Compression-aware variant router.
+//!
+//! Each logical model ("vit", "bert", ...) owns a ladder of compiled
+//! variants ordered from most accurate (mode=none) to most compressed.
+//! Routing policy:
+//!   * explicit [`Qos`] picks a rung directly;
+//!   * under load (`Qos::Balanced` and the preferred rung saturated) the
+//!     router *sheds to a more compressed variant* instead of queueing —
+//!     the serving-side payoff of token merging that the paper's Table 5
+//!     wall-times imply.
+
+use std::collections::HashMap;
+
+use crate::error::{Error, Result};
+
+use super::batcher::VariantWorker;
+use super::request::Qos;
+
+/// One rung on a model's compression ladder.
+pub struct Variant {
+    /// artifact name (registry key)
+    pub artifact: String,
+    /// merge mode name
+    pub mode: String,
+    /// keep ratio (1.0 = uncompressed)
+    pub r: f64,
+    /// the running worker
+    pub worker: VariantWorker,
+}
+
+/// Router over logical models.
+#[derive(Default)]
+pub struct Router {
+    ladders: HashMap<String, Vec<Variant>>,
+}
+
+impl Router {
+    /// Create an empty router.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Register a variant; ladders keep most-accurate first (sorted by
+    /// descending r, mode "none" treated as r=1.0+).
+    pub fn add_variant(&mut self, model: &str, v: Variant) {
+        let ladder = self.ladders.entry(model.to_string()).or_default();
+        ladder.push(v);
+        ladder.sort_by(|a, b| {
+            let ra = if a.mode == "none" { 1.5 } else { a.r };
+            let rb = if b.mode == "none" { 1.5 } else { b.r };
+            rb.partial_cmp(&ra).unwrap()
+        });
+    }
+
+    /// Known logical models.
+    pub fn models(&self) -> Vec<&str> {
+        self.ladders.keys().map(|s| s.as_str()).collect()
+    }
+
+    /// The ladder of a model.
+    pub fn ladder(&self, model: &str) -> Result<&[Variant]> {
+        self.ladders
+            .get(model)
+            .map(|v| v.as_slice())
+            .ok_or_else(|| Error::Coordinator(format!("unknown model {model}")))
+    }
+
+    /// Pick a variant for a request.
+    pub fn route(&self, model: &str, qos: Qos) -> Result<&Variant> {
+        let ladder = self.ladder(model)?;
+        if ladder.is_empty() {
+            return Err(Error::Coordinator(format!("model {model} has no variants")));
+        }
+        let v = match qos {
+            Qos::Accuracy => &ladder[0],
+            Qos::Throughput => &ladder[ladder.len() - 1],
+            Qos::Balanced => {
+                // preferred = most-compressed-but-one if available
+                let pref = if ladder.len() > 1 { 1 } else { 0 };
+                // shed to deeper compression when saturated
+                let mut pick = pref;
+                while pick + 1 < ladder.len() && !ladder[pick].worker.has_capacity() {
+                    pick += 1;
+                }
+                &ladder[pick]
+            }
+        };
+        Ok(v)
+    }
+}

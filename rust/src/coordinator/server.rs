@@ -1,0 +1,103 @@
+//! The serving coordinator: wires registry -> engine -> workers -> router
+//! and exposes submit APIs with admission control.
+
+use std::path::Path;
+use std::sync::mpsc;
+use std::time::Instant;
+
+use crate::config::ServingConfig;
+use crate::error::{Error, Result};
+use crate::runtime::{load_flat_params, HostTensor, Registry};
+
+use super::batcher::VariantWorker;
+use super::metrics::Snapshot;
+use super::request::{InferRequest, InferResponse, Qos};
+use super::router::{Router, Variant};
+
+/// The serving coordinator.
+pub struct Coordinator {
+    router: Router,
+    /// serving config used for all workers
+    pub cfg: ServingConfig,
+}
+
+impl Coordinator {
+    /// Boot: start one worker per variant; each worker compiles its
+    /// artifact on its own PJRT client thread.
+    ///
+    /// `selection`: (logical model, artifact names most-accurate-first).
+    pub fn boot(registry: &Registry, artifacts_dir: &Path,
+                selection: &[(&str, Vec<String>)], cfg: ServingConfig)
+                -> Result<Coordinator> {
+        let mut router = Router::new();
+        for (model, names) in selection {
+            for name in names {
+                let entry = registry.get(name)?.clone();
+                let params = match &entry.meta.params {
+                    Some(f) => load_flat_params(artifacts_dir, f)?,
+                    None => Vec::new(),
+                };
+                let hlo = registry.hlo_path(name)?;
+                let mode = entry.meta.mode.clone();
+                let r = entry.meta.r;
+                let worker = VariantWorker::spawn(hlo, entry, params, &cfg);
+                router.add_variant(model, Variant {
+                    artifact: name.clone(),
+                    mode,
+                    r,
+                    worker,
+                });
+            }
+        }
+        Ok(Coordinator { router, cfg })
+    }
+
+    /// Submit one request and block until its response arrives.
+    pub fn submit(&self, model: &str, qos: Qos,
+                  inputs: Vec<HostTensor>) -> Result<InferResponse> {
+        self.submit_nowait(model, qos, inputs)?
+            .recv()
+            .map_err(|_| Error::Coordinator("worker dropped request".into()))
+    }
+
+    /// Submit and return the response channel without blocking on the
+    /// result (callers fan out and collect).
+    pub fn submit_nowait(&self, model: &str, qos: Qos, inputs: Vec<HostTensor>)
+                         -> Result<mpsc::Receiver<InferResponse>> {
+        let variant = self.router.route(model, qos)?;
+        let (tx, rx) = mpsc::channel();
+        let req = InferRequest { inputs, enqueued_at: Instant::now(), respond: tx };
+        variant.worker.submit(req)?;
+        Ok(rx)
+    }
+
+    /// Non-blocking admission-controlled submit: errors immediately when
+    /// the chosen variant's queue is full.
+    pub fn try_submit(&self, model: &str, qos: Qos, inputs: Vec<HostTensor>)
+                      -> Result<mpsc::Receiver<InferResponse>> {
+        let variant = self.router.route(model, qos)?;
+        let (tx, rx) = mpsc::channel();
+        let req = InferRequest { inputs, enqueued_at: Instant::now(), respond: tx };
+        variant.worker.try_submit(req)?;
+        Ok(rx)
+    }
+
+    /// Metrics snapshot of every variant: (model, artifact, snapshot).
+    pub fn metrics(&self) -> Vec<(String, String, Snapshot)> {
+        let mut out = Vec::new();
+        for model in self.router.models() {
+            if let Ok(ladder) = self.router.ladder(model) {
+                for v in ladder {
+                    out.push((model.to_string(), v.artifact.clone(),
+                              v.worker.metrics.snapshot()));
+                }
+            }
+        }
+        out
+    }
+
+    /// Access the router (tests, benches).
+    pub fn router(&self) -> &Router {
+        &self.router
+    }
+}

@@ -1,0 +1,24 @@
+//! Synthetic workload generators (DESIGN.md §6 substitutions).
+//!
+//! Bit-for-bit mirrors of `python/compile/data.py`: both languages generate
+//! identical datasets from the same SplitMix64 streams, so Python-side
+//! build-time training and Rust-side runtime evaluation agree.
+
+pub mod rng;
+pub mod shapes;
+pub mod text;
+pub mod traces;
+
+pub use rng::{item_seed, splitmix64, Rng};
+pub use shapes::{patchify, shape_batch, shape_item, ShapeItem, IMG, N_SHAPE_CLASSES};
+pub use text::{caption_for, sent_batch, sent_item, vqa_item, CAP_LEN, N_ANSWERS, VOCAB};
+pub use traces::{generate_trace, TraceConfig, TraceEvent};
+
+/// Dataset seeds shared with `python/compile/train.py`.
+pub const TRAIN_SEED: u64 = 1000;
+/// Test split seed.
+pub const TEST_SEED: u64 = 2000;
+/// Train set size used at build time.
+pub const N_TRAIN: usize = 4096;
+/// Test set size.
+pub const N_TEST: usize = 512;

@@ -1,0 +1,171 @@
+//! ShapeBench synthetic image dataset — mirror of `data.py` (DESIGN.md §6).
+//!
+//! 32x32 grayscale images: a smooth noisy background (one large redundant
+//! token cluster) plus one foreground shape from 10 classes (the small
+//! informative cluster) — exactly the structure the paper's energy score
+//! exploits.
+
+use super::rng::{item_seed, Rng};
+use crate::tensor::Mat;
+
+/// Image side length.
+pub const IMG: usize = 32;
+/// Number of shape classes.
+pub const N_SHAPE_CLASSES: usize = 10;
+/// Human-readable class names.
+pub const SHAPE_NAMES: [&str; 10] = [
+    "disk", "ring", "square", "frame", "triangle", "cross", "hbar", "vbar",
+    "diamond", "checker",
+];
+
+/// One generated item.
+#[derive(Clone, Debug)]
+pub struct ShapeItem {
+    /// (IMG*IMG) row-major pixel values in [0,1].
+    pub image: Vec<f32>,
+    /// shape class 0..10
+    pub label: usize,
+    /// quadrant of the shape center, 0..4
+    pub quadrant: usize,
+    /// size bucket 0..3
+    pub size_bucket: usize,
+}
+
+/// Pixel predicate for shape `cls` at offset (dx, dy), scale `s`.
+/// Identical branch structure to `data.py::_inside`.
+fn inside(cls: usize, dx: f64, dy: f64, s: f64, phase: u64) -> bool {
+    let (ax, ay) = (dx.abs(), dy.abs());
+    match cls {
+        0 => dx * dx + dy * dy <= s * s,
+        1 => {
+            let rr = dx * dx + dy * dy;
+            (0.36 * s * s) <= rr && rr <= s * s
+        }
+        2 => ax <= s && ay <= s,
+        3 => (ax <= s && ay <= s) && !(ax <= 0.55 * s && ay <= 0.55 * s),
+        4 => dy <= s && dy >= -s && ax <= (s - dy) * 0.5,
+        5 => (ax <= 0.33 * s && ay <= s) || (ay <= 0.33 * s && ax <= s),
+        6 => ax <= s && ay <= 0.33 * s,
+        7 => ax <= 0.33 * s && ay <= s,
+        8 => ax + ay <= s,
+        9 => {
+            if !(ax <= s && ay <= s) {
+                return false;
+            }
+            let cx = ((dx + s) / (0.5 * s + 1e-9)).floor() as i64;
+            let cy = ((dy + s) / (0.5 * s + 1e-9)).floor() as i64;
+            (cx + cy + phase as i64).rem_euclid(2) == 0
+        }
+        _ => unreachable!("bad shape class"),
+    }
+}
+
+/// Generate item `index` of the dataset with seed `dataset_seed`.
+pub fn shape_item(dataset_seed: u64, index: u64) -> ShapeItem {
+    let mut rng = Rng::new(item_seed(dataset_seed, index));
+    let cls = rng.next_below(N_SHAPE_CLASSES as u64) as usize;
+    let bg = rng.uniform(0.25, 0.55);
+    let fg_delta = rng.uniform(0.3, 0.42);
+    let flip = rng.next_f64() < 0.5;
+    let fg = if flip { bg + fg_delta } else { bg - fg_delta };
+    let noise_amp = rng.uniform(0.01, 0.05);
+    let s = rng.uniform(4.0, 9.0);
+    let cx = rng.uniform(s + 2.0, IMG as f64 - s - 2.0);
+    let cy = rng.uniform(s + 2.0, IMG as f64 - s - 2.0);
+    let phase = rng.next_below(2);
+    let grad = rng.uniform(-0.08, 0.08);
+
+    let mut image = vec![0f32; IMG * IMG];
+    for y in 0..IMG {
+        for x in 0..IMG {
+            let mut base = bg + grad * (x as f64 / (IMG as f64 - 1.0) - 0.5);
+            if inside(cls, x as f64 - cx, y as f64 - cy, s, phase) {
+                base = fg;
+            }
+            base += rng.uniform(-noise_amp, noise_amp);
+            image[y * IMG + x] = base.clamp(0.0, 1.0) as f32;
+        }
+    }
+
+    let quadrant = (if cx >= IMG as f64 / 2.0 { 1 } else { 0 })
+        + (if cy >= IMG as f64 / 2.0 { 2 } else { 0 });
+    let size_bucket = if s < 5.7 { 0 } else if s < 7.4 { 1 } else { 2 };
+    ShapeItem { image, label: cls, quadrant, size_bucket }
+}
+
+/// Cut an image into `patch x patch` row-major patches:
+/// returns (n_patches, patch*patch).
+pub fn patchify(image: &[f32], patch: usize) -> Mat {
+    let ph = IMG / patch;
+    let mut out = Mat::zeros(ph * ph, patch * patch);
+    for py in 0..ph {
+        for px in 0..ph {
+            let r = out.row_mut(py * ph + px);
+            for iy in 0..patch {
+                for ix in 0..patch {
+                    r[iy * patch + ix] =
+                        image[(py * patch + iy) * IMG + (px * patch + ix)];
+                }
+            }
+        }
+    }
+    out
+}
+
+/// Batched patches + labels for items [start, start+count).
+pub fn shape_batch(dataset_seed: u64, start: u64, count: usize, patch: usize)
+    -> (Vec<Mat>, Vec<usize>) {
+    let mut xs = Vec::with_capacity(count);
+    let mut ys = Vec::with_capacity(count);
+    for i in 0..count {
+        let it = shape_item(dataset_seed, start + i as u64);
+        xs.push(patchify(&it.image, patch));
+        ys.push(it.label);
+    }
+    (xs, ys)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_and_in_range() {
+        let a = shape_item(123, 0);
+        let b = shape_item(123, 0);
+        assert_eq!(a.image, b.image);
+        assert!(a.label < N_SHAPE_CLASSES);
+        assert!(a.quadrant < 4);
+        assert!(a.image.iter().all(|v| (0.0..=1.0).contains(v)));
+    }
+
+    #[test]
+    fn different_items_differ() {
+        let a = shape_item(123, 0);
+        let b = shape_item(123, 1);
+        assert_ne!(a.image, b.image);
+    }
+
+    #[test]
+    fn patchify_shape_and_content() {
+        let it = shape_item(5, 7);
+        let p = patchify(&it.image, 4);
+        assert_eq!(p.rows, 64);
+        assert_eq!(p.cols, 16);
+        // first pixel of first patch == first pixel of image
+        assert_eq!(p.get(0, 0), it.image[0]);
+        // patch (1,0) starts at column 4 of row 0
+        assert_eq!(p.get(1, 0), it.image[4]);
+    }
+
+    #[test]
+    fn class_balance_roughly_uniform() {
+        let mut counts = [0usize; N_SHAPE_CLASSES];
+        for i in 0..500 {
+            counts[shape_item(9, i).label] += 1;
+        }
+        for &c in &counts {
+            assert!(c > 20, "class starved: {counts:?}");
+        }
+    }
+}

@@ -1,0 +1,192 @@
+//! SynthSent text dataset + caption/VQA token views — mirror of `data.py`.
+
+use super::rng::{item_seed, Rng};
+use super::shapes::shape_item;
+
+/// Vocabulary size shared across text models.
+pub const VOCAB: usize = 512;
+/// Padding token.
+pub const PAD: i32 = 0;
+/// Classification token (always at position 0).
+pub const CLS_TOK: i32 = 1;
+
+const DISTRACT_LO: u64 = 4;
+const DISTRACT_HI: u64 = 452;
+const POS_LO: u64 = 452;
+const POS_HI: u64 = 482;
+const NEG_LO: u64 = 482;
+const NEG_HI: u64 = 512;
+
+/// Sentiment item: (tokens (seq_len+1), label). tokens[0] = CLS.
+pub fn sent_item(dataset_seed: u64, index: u64, seq_len: usize, min_len: usize)
+    -> (Vec<i32>, usize) {
+    let mut rng = Rng::new(item_seed(dataset_seed ^ 0x5E17, index));
+    let label = rng.next_below(2) as usize;
+    let length = min_len + rng.next_below((seq_len - min_len + 1) as u64) as usize;
+    let n_sent = 3 + rng.next_below(6) as usize;
+    let n_noise = rng.next_below(2) as usize;
+    let mut toks = vec![PAD; seq_len + 1];
+    toks[0] = CLS_TOK;
+    // python builds a set then sorts it; mirror with a sorted dedup vec
+    let mut pos: Vec<usize> = Vec::new();
+    let want = (n_sent + n_noise).min(length);
+    while pos.len() < want {
+        let p = 1 + rng.next_below(length as u64) as usize;
+        if !pos.contains(&p) {
+            pos.push(p);
+        }
+    }
+    pos.sort_unstable();
+    for p in 1..=length {
+        toks[p] = (DISTRACT_LO + rng.next_below(DISTRACT_HI - DISTRACT_LO)) as i32;
+    }
+    for (j, &p) in pos.iter().enumerate() {
+        let flip = j >= n_sent;
+        let pol = label ^ usize::from(flip);
+        toks[p] = if pol == 1 {
+            (POS_LO + rng.next_below(POS_HI - POS_LO)) as i32
+        } else {
+            (NEG_LO + rng.next_below(NEG_HI - NEG_LO)) as i32
+        };
+    }
+    (toks, label)
+}
+
+/// Batched sentiment items.
+pub fn sent_batch(dataset_seed: u64, start: u64, count: usize, seq_len: usize)
+    -> (Vec<Vec<i32>>, Vec<usize>) {
+    let mut xs = Vec::with_capacity(count);
+    let mut ys = Vec::with_capacity(count);
+    for i in 0..count {
+        let (t, l) = sent_item(dataset_seed, start + i as u64, seq_len, 16);
+        xs.push(t);
+        ys.push(l);
+    }
+    (xs, ys)
+}
+
+// ---------------------------------------------------------------------------
+// captions + VQA (derived from ShapeBench items)
+// ---------------------------------------------------------------------------
+
+/// Caption length (without CLS).
+pub const CAP_LEN: usize = 16;
+const CAP_SHAPE_BASE: i32 = 8;
+const CAP_QUAD_BASE: i32 = 24;
+const CAP_SIZE_BASE: i32 = 32;
+const CAP_FILLER_LO: u64 = 64;
+const CAP_FILLER_HI: u64 = 256;
+
+/// Number of VQA answers (10 shapes + 4 quadrants + 3 sizes).
+pub const N_ANSWERS: usize = 17;
+const Q_TOKENS: [i32; 3] = [2, 3, 4];
+
+/// Caption tokens (CAP_LEN+1) describing image `index`; CLS first.
+/// Mirror of `data.py::caption_for`.
+pub fn caption_for(dataset_seed: u64, index: u64) -> Vec<i32> {
+    let item = shape_item(dataset_seed, index);
+    let mut rng = Rng::new(item_seed(dataset_seed ^ 0xCA97, index));
+    let mut toks = vec![PAD; CAP_LEN + 1];
+    toks[0] = CLS_TOK;
+    let content = [
+        CAP_SHAPE_BASE + item.label as i32,
+        CAP_QUAD_BASE + item.quadrant as i32,
+        CAP_SIZE_BASE + item.size_bucket as i32,
+    ];
+    let mut order = [0usize, 1, 2];
+    for i in (1..=2).rev() {
+        let j = rng.next_below((i + 1) as u64) as usize;
+        order.swap(i, j);
+    }
+    let length = 6 + rng.next_below((CAP_LEN - 6 - 1) as u64) as usize;
+    // python: sorted({1 + below(length) for _ in range(8)})[:3]
+    let mut set: Vec<usize> = Vec::new();
+    for _ in 0..8 {
+        let p = 1 + rng.next_below(length as u64) as usize;
+        if !set.contains(&p) {
+            set.push(p);
+        }
+    }
+    set.sort_unstable();
+    set.truncate(3);
+    while set.len() < 3 {
+        let nxt = set.last().map(|v| v + 1).unwrap_or(1);
+        set.push(nxt);
+    }
+    for p in 1..=length {
+        toks[p] = (CAP_FILLER_LO + rng.next_below(CAP_FILLER_HI - CAP_FILLER_LO)) as i32;
+    }
+    for (slot, o) in set.iter().zip(order.iter()) {
+        toks[*slot] = content[*o];
+    }
+    toks
+}
+
+/// VQA item: (question tokens (CAP_LEN+1), answer id).
+pub fn vqa_item(dataset_seed: u64, index: u64) -> (Vec<i32>, usize) {
+    let item = shape_item(dataset_seed, index);
+    let mut rng = Rng::new(item_seed(dataset_seed ^ 0x70A, index));
+    let qtype = rng.next_below(3) as usize;
+    let mut toks = vec![PAD; CAP_LEN + 1];
+    toks[0] = CLS_TOK;
+    toks[1] = Q_TOKENS[qtype];
+    for p in 2..8 {
+        toks[p] = (CAP_FILLER_LO + rng.next_below(CAP_FILLER_HI - CAP_FILLER_LO)) as i32;
+    }
+    let ans = match qtype {
+        0 => item.label,
+        1 => 10 + item.quadrant,
+        _ => 14 + item.size_bucket,
+    };
+    (toks, ans)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sent_item_deterministic() {
+        let (a, la) = sent_item(9, 3, 32, 16);
+        let (b, lb) = sent_item(9, 3, 32, 16);
+        assert_eq!(a, b);
+        assert_eq!(la, lb);
+        assert_eq!(a[0], CLS_TOK);
+        assert_eq!(a.len(), 33);
+    }
+
+    #[test]
+    fn sent_tokens_in_vocab() {
+        for i in 0..50 {
+            let (t, l) = sent_item(1, i, 64, 16);
+            assert!(l < 2);
+            assert!(t.iter().all(|&v| (v as usize) < VOCAB));
+        }
+    }
+
+    #[test]
+    fn caption_contains_class_token() {
+        for i in 0..20 {
+            let item = shape_item(7, i);
+            let cap = caption_for(7, i);
+            assert!(cap.contains(&(CAP_SHAPE_BASE + item.label as i32)),
+                    "caption missing class token: {cap:?}");
+        }
+    }
+
+    #[test]
+    fn vqa_answer_consistent_with_item() {
+        for i in 0..30 {
+            let item = shape_item(3, i);
+            let (q, a) = vqa_item(3, i);
+            assert_eq!(q[0], CLS_TOK);
+            assert!(a < N_ANSWERS);
+            match q[1] {
+                2 => assert_eq!(a, item.label),
+                3 => assert_eq!(a, 10 + item.quadrant),
+                4 => assert_eq!(a, 14 + item.size_bucket),
+                _ => panic!("bad q token"),
+            }
+        }
+    }
+}

@@ -1,0 +1,92 @@
+//! Serving request traces: Poisson and bursty arrival processes.
+//!
+//! Used by the coordinator benches (Table 5-style wall-time runs) and the
+//! serving example.  Inter-arrival sampling uses inverse-CDF on the shared
+//! SplitMix64 stream — deterministic across runs.
+
+use super::rng::Rng;
+
+/// One synthetic request arrival.
+#[derive(Clone, Debug)]
+pub struct TraceEvent {
+    /// arrival time in microseconds from trace start
+    pub at_us: u64,
+    /// dataset item index to run
+    pub item: u64,
+    /// requested model key (index into the router's variant table)
+    pub variant: usize,
+}
+
+/// Trace generator configuration.
+#[derive(Clone, Debug)]
+pub struct TraceConfig {
+    /// mean arrival rate, requests/second
+    pub rate: f64,
+    /// number of requests
+    pub count: usize,
+    /// number of model variants to spread requests over
+    pub n_variants: usize,
+    /// burstiness: 0 = pure Poisson; >0 mixes in on/off bursts
+    pub burstiness: f64,
+    /// RNG seed
+    pub seed: u64,
+}
+
+impl Default for TraceConfig {
+    fn default() -> Self {
+        TraceConfig { rate: 200.0, count: 1000, n_variants: 1, burstiness: 0.0, seed: 1 }
+    }
+}
+
+/// Generate a deterministic arrival trace.
+pub fn generate_trace(cfg: &TraceConfig) -> Vec<TraceEvent> {
+    let mut rng = Rng::new(cfg.seed);
+    let mut t = 0f64; // seconds
+    let mut out = Vec::with_capacity(cfg.count);
+    let mut in_burst = false;
+    for _ in 0..cfg.count {
+        // exponential inter-arrival via inverse CDF
+        let u = rng.next_f64().max(1e-12);
+        let mut rate = cfg.rate;
+        if cfg.burstiness > 0.0 {
+            // flip burst state occasionally; bursts run 5x rate, gaps 0.2x
+            if rng.next_f64() < 0.05 {
+                in_burst = !in_burst;
+            }
+            rate *= if in_burst { 1.0 + 4.0 * cfg.burstiness } else { 1.0 - 0.8 * cfg.burstiness };
+        }
+        t += -u.ln() / rate;
+        out.push(TraceEvent {
+            at_us: (t * 1e6) as u64,
+            item: rng.next_u64() % 512,
+            variant: (rng.next_u64() % cfg.n_variants as u64) as usize,
+        });
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn trace_is_sorted_and_deterministic() {
+        let cfg = TraceConfig { count: 200, ..Default::default() };
+        let a = generate_trace(&cfg);
+        let b = generate_trace(&cfg);
+        assert_eq!(a.len(), 200);
+        for w in a.windows(2) {
+            assert!(w[0].at_us <= w[1].at_us);
+        }
+        assert_eq!(a[10].at_us, b[10].at_us);
+    }
+
+    #[test]
+    fn mean_rate_roughly_matches() {
+        let cfg = TraceConfig { rate: 1000.0, count: 5000, ..Default::default() };
+        let tr = generate_trace(&cfg);
+        let dur_s = tr.last().unwrap().at_us as f64 / 1e6;
+        let rate = tr.len() as f64 / dur_s;
+        assert!((rate - 1000.0).abs() < 150.0, "rate {rate}");
+    }
+}

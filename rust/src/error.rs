@@ -1,0 +1,59 @@
+//! Crate-wide error type.
+
+use std::fmt;
+
+/// Unified error for the pitome crate.
+#[derive(Debug)]
+pub enum Error {
+    /// I/O failure (artifact files, params, manifests).
+    Io(std::io::Error),
+    /// JSON parse failure.
+    Json(String),
+    /// PJRT / XLA runtime failure.
+    Xla(String),
+    /// Artifact registry problems (missing artifact, shape mismatch).
+    Artifact(String),
+    /// Invalid configuration.
+    Config(String),
+    /// Coordinator-level failure (queue closed, worker died, ...).
+    Coordinator(String),
+    /// Shape or dimension mismatch in tensor/merge code.
+    Shape(String),
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Error::Io(e) => write!(f, "io error: {e}"),
+            Error::Json(m) => write!(f, "json error: {m}"),
+            Error::Xla(m) => write!(f, "xla error: {m}"),
+            Error::Artifact(m) => write!(f, "artifact error: {m}"),
+            Error::Config(m) => write!(f, "config error: {m}"),
+            Error::Coordinator(m) => write!(f, "coordinator error: {m}"),
+            Error::Shape(m) => write!(f, "shape error: {m}"),
+        }
+    }
+}
+
+impl std::error::Error for Error {}
+
+impl From<std::io::Error> for Error {
+    fn from(e: std::io::Error) -> Self {
+        Error::Io(e)
+    }
+}
+
+impl From<crate::util::json::JsonError> for Error {
+    fn from(e: crate::util::json::JsonError) -> Self {
+        Error::Json(e.to_string())
+    }
+}
+
+impl From<xla::Error> for Error {
+    fn from(e: xla::Error) -> Self {
+        Error::Xla(e.to_string())
+    }
+}
+
+/// Crate-wide result alias.
+pub type Result<T> = std::result::Result<T, Error>;

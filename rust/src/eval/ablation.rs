@@ -1,0 +1,114 @@
+//! Ablation experiments (Table 1 / Figure 4): protection off, random split,
+//! attention indicator, ratio-r vs fixed-k schedules.
+
+use crate::config::{TextConfig, ViTConfig};
+use crate::error::Result;
+use crate::merge::{fixed_k_plan, merge_plan};
+use crate::model::ParamStore;
+
+use super::retrieval::{self, RetrievalRow};
+use super::textcls::{self, TextRow};
+
+/// Ablation variants of Table 1 / Figure 4 (plus full PiToMe and ToMe).
+pub const VARIANTS: [&str; 5] = [
+    "pitome", "pitome_noprot", "pitome_rand", "pitome_attn", "tome",
+];
+
+/// Retrieval ablation rows (Table 1 left block).
+pub fn retrieval_ablation(clip_ps: &ParamStore, rs: &[f64], n: usize)
+                          -> Result<Vec<RetrievalRow>> {
+    let mut rows = Vec::new();
+    for &variant in VARIANTS.iter() {
+        for &r in rs {
+            rows.push(retrieval::eval_config(clip_ps, variant, r, n)?);
+        }
+    }
+    Ok(rows)
+}
+
+/// Text-classification ablation rows (Table 1 right block).
+pub fn textcls_ablation(bert_ps: &ParamStore, rs: &[f64], n: usize)
+                        -> Result<Vec<TextRow>> {
+    let mut rows = Vec::new();
+    for &variant in VARIANTS.iter() {
+        for &r in rs {
+            rows.push(textcls::eval_config(bert_ps, variant, r, n)?);
+        }
+    }
+    Ok(rows)
+}
+
+/// Schedule comparison (Figures 8-9): same FLOPs via ratio-r vs fixed-k.
+/// Returns (label, plan, total_removed).
+pub fn schedule_plans(n0: usize, depth: usize) -> Vec<(String, Vec<usize>, usize)> {
+    let mut out = Vec::new();
+    for &r in &[0.95, 0.9, 0.85] {
+        let p = merge_plan(n0, r, depth, 1, None);
+        let rem = p[0] - p[depth];
+        out.push((format!("ratio r={r}"), p, rem));
+    }
+    for &k in &[2usize, 4, 8] {
+        let p = fixed_k_plan(n0, k, depth, 1);
+        let rem = p[0] - p[depth];
+        out.push((format!("fixed k={k}"), p, rem));
+    }
+    out
+}
+
+/// Match a fixed-k plan to a ratio plan with (approximately) equal total
+/// token removal, for the equal-FLOPs comparison of App. C.
+pub fn matched_fixed_k(n0: usize, depth: usize, r: f64) -> usize {
+    let target = {
+        let p = merge_plan(n0, r, depth, 1, None);
+        p[0] - p[depth]
+    };
+    let mut best_k = 1;
+    let mut best_err = usize::MAX;
+    for k in 1..(n0 / 2) {
+        let p = fixed_k_plan(n0, k, depth, 1);
+        let rem = p[0] - p[depth];
+        let err = rem.abs_diff(target);
+        if err < best_err {
+            best_err = err;
+            best_k = k;
+        }
+    }
+    best_k
+}
+
+/// ViT/Text configs for the proportional-attention on/off ablation.
+pub fn prop_attn_configs(r: f64) -> (ViTConfig, ViTConfig) {
+    let on = ViTConfig { merge_mode: "pitome".into(), merge_r: r, ..Default::default() };
+    let mut off = on.clone();
+    off.prop_attn = false;
+    (on, off)
+}
+
+/// Text config helper for consistency with the python side.
+pub fn text_cfg(mode: &str, r: f64) -> TextConfig {
+    TextConfig { merge_mode: mode.into(), merge_r: r, ..Default::default() }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn matched_k_removes_similar_total() {
+        let k = matched_fixed_k(197, 12, 0.9);
+        let rp = merge_plan(197, 0.9, 12, 1, None);
+        let fp = fixed_k_plan(197, k, 12, 1);
+        let rr = rp[0] - rp[12];
+        let fr = fp[0] - fp[12];
+        assert!(rr.abs_diff(fr) <= 12, "ratio removed {rr}, fixed {fr}");
+    }
+
+    #[test]
+    fn schedule_plans_shapes() {
+        let plans = schedule_plans(65, 4);
+        assert_eq!(plans.len(), 6);
+        for (_, p, _) in &plans {
+            assert_eq!(p.len(), 5);
+        }
+    }
+}

@@ -1,0 +1,81 @@
+//! Image classification experiments (Table 6 / Figure 6): off-the-shelf
+//! accuracy vs FLOPs per merge mode and ratio, on ShapeBench with the CPU
+//! reference ViT, plus FLOPs cost-model rows for the paper-scale backbones.
+
+use crate::config::ViTConfig;
+use crate::data::{patchify, shape_item, Rng, TEST_SEED};
+use crate::error::Result;
+use crate::model::{flops, ParamStore, ViTModel};
+
+/// One result row.
+#[derive(Clone, Debug)]
+pub struct ClassifyRow {
+    /// merge mode
+    pub mode: String,
+    /// keep-ratio
+    pub r: f64,
+    /// off-the-shelf accuracy (%)
+    pub acc: f64,
+    /// GFLOPs per sample (analytic)
+    pub gflops: f64,
+    /// FLOPs speedup vs uncompressed
+    pub speedup: f64,
+}
+
+/// Evaluate one (mode, r) configuration over `n_test` ShapeBench items.
+pub fn eval_config(ps: &ParamStore, mode: &str, r: f64, n_test: usize)
+                   -> Result<ClassifyRow> {
+    let cfg = ViTConfig {
+        merge_mode: mode.to_string(),
+        merge_r: r,
+        ..Default::default()
+    };
+    let model = ViTModel::new(ps, cfg.clone());
+    let mut rng = Rng::new(0xE7A1);
+    let mut correct = 0usize;
+    for i in 0..n_test {
+        let item = shape_item(TEST_SEED, i as u64);
+        let patches = patchify(&item.image, cfg.patch_size);
+        if model.predict(&patches, &mut rng)? == item.label {
+            correct += 1;
+        }
+    }
+    Ok(ClassifyRow {
+        mode: mode.to_string(),
+        r,
+        acc: 100.0 * correct as f64 / n_test as f64,
+        gflops: flops::vit_gflops(&cfg),
+        speedup: flops::flops_speedup(&cfg),
+    })
+}
+
+/// Sweep modes x ratios (the Figure 6 curves).
+pub fn sweep(ps: &ParamStore, modes: &[&str], rs: &[f64], n_test: usize)
+             -> Result<Vec<ClassifyRow>> {
+    let mut rows = Vec::new();
+    rows.push(eval_config(ps, "none", 1.0, n_test)?);
+    for &mode in modes {
+        for &r in rs {
+            rows.push(eval_config(ps, mode, r, n_test)?);
+        }
+    }
+    Ok(rows)
+}
+
+/// Paper-scale FLOPs rows (Table 6's FLOPs column) via the cost model —
+/// these backbones are cost-modeled, not executed (DESIGN.md §6).
+pub fn paper_scale_flops(rs: &[f64]) -> Vec<(String, f64, f64)> {
+    let mut out = Vec::new();
+    for name in ["deit-t", "deit-s", "mae-l", "mae-h"] {
+        let base = ViTConfig::preset(name).unwrap();
+        out.push((format!("{name} (base)"), flops::vit_gflops(&base), 1.0));
+        for &r in rs {
+            let mut c = base.clone();
+            c.merge_mode = "pitome".into();
+            c.merge_r = r;
+            out.push((format!("{name} r={r}"), flops::vit_gflops(&c),
+                      flops::flops_speedup(&c)));
+        }
+    }
+    out
+}

@@ -1,0 +1,89 @@
+//! Experiment drivers: one module per paper table/figure family.
+//! The `bench_*` binaries are thin CLI wrappers over these.
+
+pub mod ablation;
+pub mod classify;
+pub mod retrieval;
+pub mod spectral;
+pub mod textcls;
+pub mod vqa;
+
+use crate::tensor::argmax;
+
+/// Accuracy of predicted-class vs labels.
+pub fn accuracy(preds: &[usize], labels: &[usize]) -> f64 {
+    assert_eq!(preds.len(), labels.len());
+    if preds.is_empty() {
+        return 0.0;
+    }
+    let ok = preds.iter().zip(labels).filter(|(p, l)| p == l).count();
+    ok as f64 / preds.len() as f64
+}
+
+/// argmax over logits rows.
+pub fn predict_rows(logits: &[Vec<f32>]) -> Vec<usize> {
+    logits.iter().map(|r| argmax(r)).collect()
+}
+
+/// Recall@k both directions over a similarity matrix (images x texts,
+/// diagonal = matching pairs). Returns (Rt@ks, Ri@ks, Rsum).
+pub fn recall_at_k(sim: &crate::tensor::Mat, ks: &[usize])
+                   -> (Vec<f64>, Vec<f64>, f64) {
+    let n = sim.rows;
+    let mut rt = vec![0f64; ks.len()];
+    let mut ri = vec![0f64; ks.len()];
+    for i in 0..n {
+        // text retrieval given image i: rank texts by sim[i, :]
+        let row: Vec<f32> = sim.row(i).to_vec();
+        let order = crate::tensor::argsort_desc(&row);
+        let rank = order.iter().position(|&j| j == i).unwrap();
+        for (qi, &k) in ks.iter().enumerate() {
+            if rank < k {
+                rt[qi] += 1.0;
+            }
+        }
+        // image retrieval given text i: rank images by sim[:, i]
+        let col: Vec<f32> = (0..n).map(|r| sim.get(r, i)).collect();
+        let order = crate::tensor::argsort_desc(&col);
+        let rank = order.iter().position(|&j| j == i).unwrap();
+        for (qi, &k) in ks.iter().enumerate() {
+            if rank < k {
+                ri[qi] += 1.0;
+            }
+        }
+    }
+    for v in rt.iter_mut().chain(ri.iter_mut()) {
+        *v = *v * 100.0 / n as f64;
+    }
+    let rsum = rt.iter().sum::<f64>() + ri.iter().sum::<f64>();
+    (rt, ri, rsum)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::Mat;
+
+    #[test]
+    fn accuracy_basics() {
+        assert_eq!(accuracy(&[1, 2, 3], &[1, 2, 0]), 2.0 / 3.0);
+    }
+
+    #[test]
+    fn perfect_sim_gives_full_recall() {
+        let n = 10;
+        let sim = Mat::from_fn(n, n, |i, j| if i == j { 1.0 } else { 0.0 });
+        let (rt, ri, rsum) = recall_at_k(&sim, &[1, 5]);
+        assert_eq!(rt, vec![100.0, 100.0]);
+        assert_eq!(ri, vec![100.0, 100.0]);
+        assert!((rsum - 400.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn anti_diagonal_sim_fails_r1() {
+        let n = 10;
+        let sim = Mat::from_fn(n, n, |i, j| if i + j == n - 1 { 1.0 } else { 0.0 });
+        let (rt, _, _) = recall_at_k(&sim, &[1]);
+        assert!(rt[0] < 20.0);
+    }
+}

@@ -1,0 +1,85 @@
+//! Image-text retrieval experiments (Figure 3 / Tables 2-3): recall vs
+//! FLOPs on synthetic caption pairs with the CPU reference CLIP.
+
+use crate::config::ViTConfig;
+use crate::data::{caption_for, patchify, shape_item, Rng, TEST_SEED};
+use crate::error::Result;
+use crate::model::text::{clip_text_embed, l2_normalize};
+use crate::model::{flops, ParamStore, ViTModel};
+use crate::tensor::{dense, matmul_nt, Mat};
+
+use super::recall_at_k;
+
+/// CLIP vision-tower embedding for one sample under a merge config.
+pub fn clip_image_embed(ps: &ParamStore, cfg: &ViTConfig, patches: &Mat,
+                        rng: &mut Rng) -> Result<Vec<f32>> {
+    let model = ViTModel::new(ps, cfg.clone());
+    let f = model.features(patches, rng)?;
+    let fm = Mat::from_vec(1, f.len(), f);
+    let mut e = dense(&fm, &ps.mat2("proj.img")?, None).data;
+    l2_normalize(&mut e);
+    Ok(e)
+}
+
+/// One retrieval result row.
+#[derive(Clone, Debug)]
+pub struct RetrievalRow {
+    /// merge mode of the vision tower
+    pub mode: String,
+    /// keep ratio
+    pub r: f64,
+    /// recall@1 text retrieval
+    pub rt1: f64,
+    /// recall@1 image retrieval
+    pub ri1: f64,
+    /// Rsum over @1/@5/@10 both directions
+    pub rsum: f64,
+    /// vision-tower GFLOPs
+    pub gflops: f64,
+}
+
+/// Evaluate one merge config over `n` test pairs.
+pub fn eval_config(ps: &ParamStore, mode: &str, r: f64, n: usize)
+                   -> Result<RetrievalRow> {
+    let vcfg = ViTConfig {
+        merge_mode: mode.into(),
+        merge_r: r,
+        num_classes: 10,
+        ..Default::default()
+    };
+    let mut rng = Rng::new(0x0C11);
+    let embed_dim = 64usize;
+    let mut img = Mat::zeros(n, embed_dim);
+    let mut txt = Mat::zeros(n, embed_dim);
+    for i in 0..n {
+        let item = shape_item(TEST_SEED, i as u64);
+        let patches = patchify(&item.image, vcfg.patch_size);
+        let ie = clip_image_embed(ps, &vcfg, &patches, &mut rng)?;
+        img.row_mut(i).copy_from_slice(&ie);
+        let cap = caption_for(TEST_SEED, i as u64);
+        let te = clip_text_embed(ps, &cap, 64, 2, 4, embed_dim, &mut rng)?;
+        txt.row_mut(i).copy_from_slice(&te);
+    }
+    let sim = matmul_nt(&img, &txt);
+    let (rt, ri, rsum) = recall_at_k(&sim, &[1, 5, 10]);
+    Ok(RetrievalRow {
+        mode: mode.into(),
+        r,
+        rt1: rt[0],
+        ri1: ri[0],
+        rsum,
+        gflops: flops::vit_gflops(&vcfg),
+    })
+}
+
+/// Sweep for the Figure 3 curves.
+pub fn sweep(ps: &ParamStore, modes: &[&str], rs: &[f64], n: usize)
+             -> Result<Vec<RetrievalRow>> {
+    let mut rows = vec![eval_config(ps, "none", 1.0, n)?];
+    for &mode in modes {
+        for &r in rs {
+            rows.push(eval_config(ps, mode, r, n)?);
+        }
+    }
+    Ok(rows)
+}

@@ -1,0 +1,273 @@
+//! Theorem 1 validation: spectral distance of PiToMe vs ToMe coarsening.
+//!
+//! Generates clustered token sets satisfying assumptions A1-A3 (tight
+//! intra-cluster cosine, separated clusters, ordered cardinalities),
+//! iteratively coarsens with each algorithm's partition, and measures
+//! SD(G, Gc) (Eq. 5).  Expected shape: SD_pitome -> ~0 as clusters tighten,
+//! SD_tome -> a positive constant.
+
+use crate::data::Rng;
+use crate::graph::{spectral_distance, token_graph, Partition};
+use crate::merge::energy::energy_scores;
+use crate::merge::pitome::{ordered_bsm_plan, Split};
+use crate::merge::tome::tome_plan;
+use crate::merge::{apply_plan, MergePlan};
+use crate::tensor::Mat;
+
+/// How cluster members are laid out over token positions.  ToMe's parity
+/// split is sensitive to this (Lemma 3 / Fig. 1): when a cluster
+/// concentrates in one parity class, ToMe must merge across clusters.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Layout {
+    /// cluster members occupy consecutive positions (ToMe-friendly)
+    Contiguous,
+    /// the largest cluster sits on even positions, the rest on odd —
+    /// the adversarial case of Fig. 1 (vertical object in raster order)
+    Interleaved,
+    /// uniformly shuffled positions (average case)
+    Shuffled,
+}
+
+/// Cluster spec for the synthetic token sets.
+#[derive(Clone, Debug)]
+pub struct ClusterSpec {
+    /// cluster cardinalities (descending, A3)
+    pub sizes: Vec<usize>,
+    /// feature dim
+    pub h: usize,
+    /// intra-cluster noise amplitude (A1: smaller -> cos -> 1)
+    pub noise: f64,
+    /// RNG seed
+    pub seed: u64,
+    /// token position layout
+    pub layout: Layout,
+}
+
+/// Generate token features with well-separated cluster centers.
+/// Also returns the ground-truth cluster id per token.
+pub fn clustered_tokens(spec: &ClusterSpec) -> (Mat, Vec<usize>) {
+    let mut rng = Rng::new(spec.seed);
+    let n_clusters = spec.sizes.len();
+    // near-orthogonal centers: random +-1 sign vectors scaled
+    let mut centers: Vec<Vec<f32>> = Vec::with_capacity(n_clusters);
+    for _ in 0..n_clusters {
+        centers.push((0..spec.h)
+            .map(|_| if rng.next_f64() < 0.5 { -1.0 } else { 1.0 })
+            .collect());
+    }
+    let n: usize = spec.sizes.iter().sum();
+    let mut labels = Vec::with_capacity(n);
+    for (c, &sz) in spec.sizes.iter().enumerate() {
+        for _ in 0..sz {
+            labels.push(c);
+        }
+    }
+    match spec.layout {
+        Layout::Contiguous => {}
+        Layout::Interleaved => {
+            // big cluster -> even slots (as far as it reaches), rest -> odd
+            let big: Vec<usize> = labels.iter().copied()
+                .filter(|&l| l == 0).collect();
+            let rest: Vec<usize> = labels.iter().copied()
+                .filter(|&l| l != 0).collect();
+            let mut out = vec![0usize; n];
+            let (mut bi, mut ri) = (0usize, 0usize);
+            for (pos, slot) in out.iter_mut().enumerate() {
+                *slot = if pos % 2 == 0 && bi < big.len() {
+                    bi += 1;
+                    big[bi - 1]
+                } else if ri < rest.len() {
+                    ri += 1;
+                    rest[ri - 1]
+                } else {
+                    bi += 1;
+                    big[bi - 1]
+                };
+            }
+            labels = out;
+        }
+        Layout::Shuffled => {
+            for i in (1..n).rev() {
+                let j = rng.next_below((i + 1) as u64) as usize;
+                labels.swap(i, j);
+            }
+        }
+    }
+    let mut kf = Mat::zeros(n, spec.h);
+    for (i, &lab) in labels.iter().enumerate() {
+        let r = kf.row_mut(i);
+        for (j, v) in r.iter_mut().enumerate() {
+            *v = centers[lab][j]
+                + (spec.noise * (rng.next_f64() * 2.0 - 1.0)) as f32;
+        }
+    }
+    (kf, labels)
+}
+
+/// Which algorithm drives the partition.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum CoarsenAlgo {
+    /// energy-ordered protected BSM
+    PiToMe,
+    /// parity-split BSM
+    ToMe,
+    /// random pruning-style pairing
+    Random,
+}
+
+/// Iteratively coarsen `steps` times, merging `k` pairs per step, tracking
+/// the induced partition of the *original* tokens.
+pub fn iterative_coarsen(kf0: &Mat, algo: CoarsenAlgo, steps: usize, k: usize,
+                         margin: f32, seed: u64) -> Partition {
+    let n0 = kf0.rows;
+    // group id per original token; current tokens map to group ids
+    let mut groups: Vec<usize> = (0..n0).collect(); // original -> group
+    let mut token_group: Vec<usize> = (0..n0).collect(); // current token -> group
+    let mut kf = kf0.clone();
+    let mut sizes = vec![1f32; n0];
+    let mut rng = Rng::new(seed);
+    for _ in 0..steps {
+        if kf.rows < 2 * k + 1 {
+            break;
+        }
+        let plan: MergePlan = match algo {
+            CoarsenAlgo::PiToMe => {
+                let e = energy_scores(&kf, margin);
+                ordered_bsm_plan(&kf, &e, k, 0, Split::Alternate, true, &mut rng)
+            }
+            CoarsenAlgo::ToMe => tome_plan(&kf, k, 0, None),
+            CoarsenAlgo::Random => {
+                let e: Vec<f32> = (0..kf.rows).map(|_| rng.next_f64() as f32).collect();
+                ordered_bsm_plan(&kf, &e, k, 0, Split::Random, true, &mut rng)
+            }
+        };
+        // update partition: token a joins the group of b[dst[a]]
+        let mut new_token_group = Vec::with_capacity(plan.n_out());
+        for &p in &plan.protect {
+            new_token_group.push(token_group[p]);
+        }
+        for &b in &plan.b {
+            new_token_group.push(token_group[b]);
+        }
+        for (ai, &a) in plan.a.iter().enumerate() {
+            let target_group = token_group[plan.b[plan.dst[ai]]];
+            let src_group = token_group[a];
+            for g in groups.iter_mut() {
+                if *g == src_group {
+                    *g = target_group;
+                }
+            }
+        }
+        let (kf2, sizes2) = apply_plan(&kf, &sizes, &plan);
+        kf = kf2;
+        sizes = sizes2;
+        token_group = new_token_group;
+    }
+    // renumber groups densely
+    let mut remap = std::collections::HashMap::new();
+    let mut next = 0usize;
+    let assign: Vec<usize> = groups
+        .iter()
+        .map(|&g| *remap.entry(g).or_insert_with(|| { let v = next; next += 1; v }))
+        .collect();
+    Partition::from_assign(assign)
+}
+
+/// One Theorem-1 experiment row.
+#[derive(Clone, Debug)]
+pub struct SpectralRow {
+    /// intra-cluster noise
+    pub noise: f64,
+    /// algorithm
+    pub algo: String,
+    /// spectral distance after coarsening
+    pub sd: f32,
+    /// fraction of merges that crossed ground-truth clusters
+    pub cross_cluster_frac: f64,
+}
+
+/// Run the sweep: for each noise level, coarsen with each algorithm and
+/// report SD and cross-cluster merge fraction.
+pub fn theorem1_sweep(noises: &[f64], steps: usize, k: usize)
+                      -> Vec<SpectralRow> {
+    let mut rows = Vec::new();
+    for &noise in noises {
+        let spec = ClusterSpec {
+            sizes: vec![16, 8, 6, 2],
+            h: 16,
+            noise,
+            seed: 42,
+            layout: Layout::Interleaved,
+        };
+        let (kf, labels) = clustered_tokens(&spec);
+        let w = token_graph(&kf);
+        for (algo, name) in [(CoarsenAlgo::PiToMe, "pitome"),
+                             (CoarsenAlgo::ToMe, "tome"),
+                             (CoarsenAlgo::Random, "random")] {
+            let p = iterative_coarsen(&kf, algo, steps, k, 0.6, 7);
+            let sd = spectral_distance(&w, &p);
+            rows.push(SpectralRow {
+                noise,
+                algo: name.into(),
+                sd,
+                cross_cluster_frac: cross_cluster_fraction(&p, &labels),
+            });
+        }
+    }
+    rows
+}
+
+/// Fraction of partition groups that mix ground-truth clusters.
+pub fn cross_cluster_fraction(p: &Partition, labels: &[usize]) -> f64 {
+    let mut mixed = 0usize;
+    let mut merged_groups = 0usize;
+    for g in 0..p.n_groups {
+        let members: Vec<usize> = (0..labels.len())
+            .filter(|&i| p.assign[i] == g)
+            .collect();
+        if members.len() < 2 {
+            continue;
+        }
+        merged_groups += 1;
+        let first = labels[members[0]];
+        if members.iter().any(|&m| labels[m] != first) {
+            mixed += 1;
+        }
+    }
+    if merged_groups == 0 {
+        0.0
+    } else {
+        mixed as f64 / merged_groups as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pitome_beats_tome_on_tight_clusters() {
+        let rows = theorem1_sweep(&[0.05], 3, 3);
+        let sd = |name: &str| rows.iter().find(|r| r.algo == name).unwrap().sd;
+        assert!(sd("pitome") <= sd("tome") + 1e-4,
+                "pitome {} vs tome {}", sd("pitome"), sd("tome"));
+    }
+
+    #[test]
+    fn pitome_never_crosses_clusters_when_tight() {
+        let rows = theorem1_sweep(&[0.02], 3, 3);
+        let r = rows.iter().find(|r| r.algo == "pitome").unwrap();
+        assert_eq!(r.cross_cluster_frac, 0.0, "{r:?}");
+    }
+
+    #[test]
+    fn partition_covers_all_tokens() {
+        let spec = ClusterSpec { sizes: vec![8, 4], h: 8, noise: 0.05,
+                                 seed: 1, layout: Layout::Contiguous };
+        let (kf, _) = clustered_tokens(&spec);
+        let p = iterative_coarsen(&kf, CoarsenAlgo::PiToMe, 2, 2, 0.5, 3);
+        assert_eq!(p.assign.len(), 12);
+        // sizes sum to n
+        assert_eq!(p.sizes().iter().sum::<usize>(), 12);
+    }
+}

@@ -1,0 +1,62 @@
+//! Text classification experiments (Table 7 / Table 9 / Figure 10):
+//! sentiment accuracy vs FLOPs with compression on the first three layers.
+
+use crate::config::TextConfig;
+use crate::data::{sent_item, Rng, TEST_SEED};
+use crate::error::Result;
+use crate::model::flops::encoder_flops;
+use crate::model::{bert_logits, ParamStore};
+use crate::tensor::argmax;
+
+/// One text-classification row.
+#[derive(Clone, Debug)]
+pub struct TextRow {
+    /// merge mode
+    pub mode: String,
+    /// keep ratio
+    pub r: f64,
+    /// accuracy (%)
+    pub acc: f64,
+    /// FLOPs speedup vs uncompressed encoder
+    pub flops_speedup: f64,
+}
+
+/// Evaluate one configuration over `n` test sentences.
+pub fn eval_config(ps: &ParamStore, mode: &str, r: f64, n: usize)
+                   -> Result<TextRow> {
+    let cfg = TextConfig {
+        merge_mode: mode.into(),
+        merge_r: r,
+        ..Default::default()
+    };
+    let mut rng = Rng::new(0x7E57);
+    let mut correct = 0usize;
+    for i in 0..n {
+        let (toks, label) = sent_item(TEST_SEED ^ 0xAB, i as u64, cfg.seq_len, 16);
+        let lg = bert_logits(ps, &cfg, &toks, &mut rng)?;
+        if argmax(&lg) == label {
+            correct += 1;
+        }
+    }
+    let base = TextConfig::default();
+    let f_base = encoder_flops(&base.plan(), base.dim, (base.dim as f64 * base.mlp_ratio) as usize, false);
+    let f_cfg = encoder_flops(&cfg.plan(), cfg.dim, (cfg.dim as f64 * cfg.mlp_ratio) as usize, mode != "none");
+    Ok(TextRow {
+        mode: mode.into(),
+        r,
+        acc: 100.0 * correct as f64 / n as f64,
+        flops_speedup: f_base / f_cfg,
+    })
+}
+
+/// Sweep modes x ratios (Table 9's r in {0.8, 0.75, 0.7}).
+pub fn sweep(ps: &ParamStore, modes: &[&str], rs: &[f64], n: usize)
+             -> Result<Vec<TextRow>> {
+    let mut rows = vec![eval_config(ps, "none", 1.0, n)?];
+    for &mode in modes {
+        for &r in rs {
+            rows.push(eval_config(ps, mode, r, n)?);
+        }
+    }
+    Ok(rows)
+}

@@ -1,0 +1,82 @@
+//! VQA experiments (Tables 4-5 / Figure 5): answer accuracy vs compression
+//! ratio with the synthetic VQA model (DESIGN.md §6 LLaVA stand-in).
+
+use crate::config::ViTConfig;
+use crate::data::{patchify, shape_item, vqa_item, Rng, TEST_SEED};
+use crate::error::Result;
+use crate::merge::MergeMode;
+use crate::model::text::text_features;
+use crate::model::{flops, ParamStore, ViTModel};
+use crate::tensor::{argmax, dense, Mat};
+
+/// One VQA result row.
+#[derive(Clone, Debug)]
+pub struct VqaRow {
+    /// merge mode of the vision tower
+    pub mode: String,
+    /// keep ratio
+    pub r: f64,
+    /// answer accuracy (%)
+    pub acc: f64,
+    /// vision-tower GFLOPs
+    pub gflops: f64,
+    /// visual tokens entering the answer head (r^L * N effect)
+    pub visual_tokens: usize,
+}
+
+/// Answer logits for one (image, question) pair.
+pub fn vqa_logits(ps: &ParamStore, vcfg: &ViTConfig, patches: &Mat,
+                  question: &[i32], rng: &mut Rng) -> Result<Vec<f32>> {
+    let model = ViTModel::new(ps, vcfg.clone());
+    let vf = model.features(patches, rng)?;
+    let qf = text_features(ps, "q.", question, 64, 2, 4, MergeMode::None,
+                           vec![question.len(); 3], rng)?;
+    let mut joint = vf;
+    joint.extend_from_slice(&qf);
+    let jm = Mat::from_vec(1, joint.len(), joint);
+    let mut h = dense(&jm, &ps.mat2("vqa.fc1")?, Some(ps.vec1("vqa.fc1b")?));
+    for v in h.data.iter_mut() {
+        *v = v.max(0.0);
+    }
+    Ok(dense(&h, &ps.mat2("vqa.head.w")?, Some(ps.vec1("vqa.head.b")?)).data)
+}
+
+/// Evaluate one configuration over `n` test QA pairs.
+pub fn eval_config(ps: &ParamStore, mode: &str, r: f64, n: usize)
+                   -> Result<VqaRow> {
+    let vcfg = ViTConfig {
+        merge_mode: mode.into(),
+        merge_r: r,
+        ..Default::default()
+    };
+    let mut rng = Rng::new(0x0A0A);
+    let mut correct = 0usize;
+    for i in 0..n {
+        let item = shape_item(TEST_SEED, i as u64);
+        let patches = patchify(&item.image, vcfg.patch_size);
+        let (q, ans) = vqa_item(TEST_SEED, i as u64);
+        let lg = vqa_logits(ps, &vcfg, &patches, &q, &mut rng)?;
+        if argmax(&lg) == ans {
+            correct += 1;
+        }
+    }
+    Ok(VqaRow {
+        mode: mode.into(),
+        r,
+        acc: 100.0 * correct as f64 / n as f64,
+        gflops: flops::vit_gflops(&vcfg),
+        visual_tokens: *vcfg.plan().last().unwrap(),
+    })
+}
+
+/// Sweep (Figure 5 / Table 4 rows).
+pub fn sweep(ps: &ParamStore, modes: &[&str], rs: &[f64], n: usize)
+             -> Result<Vec<VqaRow>> {
+    let mut rows = vec![eval_config(ps, "none", 1.0, n)?];
+    for &mode in modes {
+        for &r in rs {
+            rows.push(eval_config(ps, mode, r, n)?);
+        }
+    }
+    Ok(rows)
+}

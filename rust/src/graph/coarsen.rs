@@ -1,0 +1,122 @@
+//! Graph coarsening (Def. 1) and lifting (Def. 2).
+
+use crate::tensor::Mat;
+
+/// A partition of `n` nodes into disjoint groups.
+#[derive(Clone, Debug)]
+pub struct Partition {
+    /// group id per node, 0..n_groups
+    pub assign: Vec<usize>,
+    /// number of groups
+    pub n_groups: usize,
+}
+
+impl Partition {
+    /// Identity partition (each node its own group).
+    pub fn identity(n: usize) -> Self {
+        Partition { assign: (0..n).collect(), n_groups: n }
+    }
+
+    /// Build from a group-id vector.
+    pub fn from_assign(assign: Vec<usize>) -> Self {
+        let n_groups = assign.iter().copied().max().map_or(0, |m| m + 1);
+        Partition { assign, n_groups }
+    }
+
+    /// Group cardinalities |V_i|.
+    pub fn sizes(&self) -> Vec<usize> {
+        let mut s = vec![0usize; self.n_groups];
+        for &g in &self.assign {
+            s[g] += 1;
+        }
+        s
+    }
+
+    /// Merge two groups (used by the iterative pairwise coarsening of
+    /// Theorem 1's setting), renumbering so ids stay dense.
+    pub fn merge_groups(&mut self, g1: usize, g2: usize) {
+        assert!(g1 != g2 && g1 < self.n_groups && g2 < self.n_groups);
+        let (keep, drop) = if g1 < g2 { (g1, g2) } else { (g2, g1) };
+        for g in self.assign.iter_mut() {
+            if *g == drop {
+                *g = keep;
+            } else if *g > drop {
+                *g -= 1;
+            }
+        }
+        self.n_groups -= 1;
+    }
+}
+
+/// Coarsened adjacency `Wc[i,j] = sum_{u in Vi, v in Vj} W[u,v]` (Def. 1).
+pub fn coarsen(w: &Mat, p: &Partition) -> Mat {
+    assert_eq!(w.rows, p.assign.len());
+    let mut wc = Mat::zeros(p.n_groups, p.n_groups);
+    for u in 0..w.rows {
+        let gu = p.assign[u];
+        for v in 0..w.cols {
+            let gv = p.assign[v];
+            wc.data[gu * p.n_groups + gv] += w.get(u, v);
+        }
+    }
+    wc
+}
+
+/// Lifted adjacency `Wl[u,v] = Wc[gu,gv] / (|V_gu| |V_gv|)` (Def. 2) —
+/// an n x n proxy for the coarse graph used by the spectral distance.
+pub fn lift(wc: &Mat, p: &Partition) -> Mat {
+    let sizes = p.sizes();
+    let n = p.assign.len();
+    Mat::from_fn(n, n, |u, v| {
+        let (gu, gv) = (p.assign[u], p.assign[v]);
+        wc.get(gu, gv) / (sizes[gu] * sizes[gv]) as f32
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn complete_graph(n: usize) -> Mat {
+        Mat::from_fn(n, n, |i, j| if i == j { 0.0 } else { 1.0 })
+    }
+
+    #[test]
+    fn identity_partition_coarsen_is_noop() {
+        let w = complete_graph(4);
+        let p = Partition::identity(4);
+        assert_eq!(coarsen(&w, &p), w);
+    }
+
+    #[test]
+    fn pair_merge_sums_weights() {
+        let w = complete_graph(4);
+        let p = Partition::from_assign(vec![0, 0, 1, 2]);
+        let wc = coarsen(&w, &p);
+        assert_eq!(wc.rows, 3);
+        // group0 = {0,1}: internal weight W[0,1]+W[1,0] = 2
+        assert_eq!(wc.get(0, 0), 2.0);
+        // group0-group1 edge: W[0,2]+W[1,2] = 2
+        assert_eq!(wc.get(0, 1), 2.0);
+    }
+
+    #[test]
+    fn lift_divides_by_sizes() {
+        let w = complete_graph(4);
+        let p = Partition::from_assign(vec![0, 0, 1, 2]);
+        let wl = lift(&coarsen(&w, &p), &p);
+        assert_eq!(wl.rows, 4);
+        // lifted intra-group weight = 2 / (2*2) = 0.5
+        assert_eq!(wl.get(0, 1), 0.5);
+        // lifted cross weight = 2 / (2*1) = 1.0
+        assert_eq!(wl.get(0, 2), 1.0);
+    }
+
+    #[test]
+    fn merge_groups_renumbers() {
+        let mut p = Partition::from_assign(vec![0, 1, 2, 3]);
+        p.merge_groups(1, 3);
+        assert_eq!(p.n_groups, 3);
+        assert_eq!(p.assign, vec![0, 1, 2, 1]);
+    }
+}

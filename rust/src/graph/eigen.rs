@@ -1,0 +1,115 @@
+//! Symmetric eigensolver: cyclic Jacobi rotations.
+//!
+//! Good to ~1e-6 for the N <= 512 token graphs used here; no external
+//! LAPACK dependency.  Only eigenvalues are needed for the spectral
+//! distance, so eigenvectors are not accumulated.
+
+use crate::tensor::Mat;
+
+/// Eigenvalues of a symmetric matrix, ascending.
+///
+/// Cyclic Jacobi: sweeps zero out off-diagonal entries with Givens
+/// rotations until the off-diagonal Frobenius norm is below `tol`.
+pub fn jacobi_eigenvalues(m: &Mat, tol: f32, max_sweeps: usize) -> Vec<f32> {
+    assert_eq!(m.rows, m.cols, "eigenvalues of non-square matrix");
+    let n = m.rows;
+    let mut a = m.clone();
+    // symmetrize defensively (callers pass Laplacians, symmetric up to fp)
+    for i in 0..n {
+        for j in (i + 1)..n {
+            let v = 0.5 * (a.get(i, j) + a.get(j, i));
+            a.set(i, j, v);
+            a.set(j, i, v);
+        }
+    }
+    for _sweep in 0..max_sweeps {
+        let mut off = 0f32;
+        for i in 0..n {
+            for j in (i + 1)..n {
+                off += a.get(i, j) * a.get(i, j);
+            }
+        }
+        if off.sqrt() < tol {
+            break;
+        }
+        for p in 0..n {
+            for q in (p + 1)..n {
+                let apq = a.get(p, q);
+                if apq.abs() < 1e-12 {
+                    continue;
+                }
+                let app = a.get(p, p);
+                let aqq = a.get(q, q);
+                let theta = 0.5 * (aqq - app) / apq;
+                let t = theta.signum() / (theta.abs() + (theta * theta + 1.0).sqrt());
+                let c = 1.0 / (t * t + 1.0).sqrt();
+                let s = t * c;
+                // rotate rows/cols p and q
+                for k in 0..n {
+                    let akp = a.get(k, p);
+                    let akq = a.get(k, q);
+                    a.set(k, p, c * akp - s * akq);
+                    a.set(k, q, s * akp + c * akq);
+                }
+                for k in 0..n {
+                    let apk = a.get(p, k);
+                    let aqk = a.get(q, k);
+                    a.set(p, k, c * apk - s * aqk);
+                    a.set(q, k, s * apk + c * aqk);
+                }
+            }
+        }
+    }
+    let mut ev: Vec<f32> = (0..n).map(|i| a.get(i, i)).collect();
+    ev.sort_by(|x, y| x.partial_cmp(y).unwrap());
+    ev
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn diagonal_matrix_eigenvalues() {
+        let m = Mat::from_fn(3, 3, |i, j| if i == j { (i + 1) as f32 } else { 0.0 });
+        let ev = jacobi_eigenvalues(&m, 1e-8, 50);
+        assert_eq!(ev, vec![1.0, 2.0, 3.0]);
+    }
+
+    #[test]
+    fn known_2x2() {
+        // [[2,1],[1,2]] -> eigenvalues 1, 3
+        let m = Mat::from_vec(2, 2, vec![2.0, 1.0, 1.0, 2.0]);
+        let ev = jacobi_eigenvalues(&m, 1e-8, 50);
+        assert!((ev[0] - 1.0).abs() < 1e-5);
+        assert!((ev[1] - 3.0).abs() < 1e-5);
+    }
+
+    #[test]
+    fn trace_preserved() {
+        let m = Mat::from_fn(8, 8, |i, j| {
+            let v = ((i * 7 + j * 3) % 5) as f32 * 0.2;
+            if i <= j { v } else { ((j * 7 + i * 3) % 5) as f32 * 0.2 }
+        });
+        // symmetrize
+        let m = Mat::from_fn(8, 8, |i, j| 0.5 * (m.get(i, j) + m.get(j, i)));
+        let tr: f32 = (0..8).map(|i| m.get(i, i)).sum();
+        let ev = jacobi_eigenvalues(&m, 1e-7, 100);
+        let s: f32 = ev.iter().sum();
+        assert!((tr - s).abs() < 1e-3, "trace {tr} vs sum {s}");
+    }
+
+    #[test]
+    fn normalized_laplacian_eigenvalues_in_range() {
+        use crate::graph::laplacian::normalized_laplacian;
+        // ring graph
+        let n = 10;
+        let w = Mat::from_fn(n, n, |i, j| {
+            if (i + 1) % n == j || (j + 1) % n == i { 1.0 } else { 0.0 }
+        });
+        let l = normalized_laplacian(&w);
+        let ev = jacobi_eigenvalues(&l, 1e-7, 100);
+        assert!(ev[0].abs() < 1e-4, "lambda_0 = {}", ev[0]);
+        assert!(*ev.last().unwrap() <= 2.0 + 1e-4);
+    }
+}

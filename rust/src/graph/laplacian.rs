@@ -1,0 +1,66 @@
+//! Graph Laplacians (Definition 1 of the paper).
+
+use crate::tensor::Mat;
+
+/// Node degrees `d_i = sum_j W[i,j]`.
+pub fn degree_vector(w: &Mat) -> Vec<f32> {
+    (0..w.rows).map(|i| w.row(i).iter().sum()).collect()
+}
+
+/// Combinatorial Laplacian `L = D - W`.
+pub fn combinatorial_laplacian(w: &Mat) -> Mat {
+    let d = degree_vector(w);
+    Mat::from_fn(w.rows, w.cols, |i, j| {
+        if i == j { d[i] - w.get(i, j) } else { -w.get(i, j) }
+    })
+}
+
+/// Normalized Laplacian `L = I - D^{-1/2} W D^{-1/2}` (zero-degree nodes
+/// contribute identity rows).
+pub fn normalized_laplacian(w: &Mat) -> Mat {
+    let d = degree_vector(w);
+    let dinv: Vec<f32> = d
+        .iter()
+        .map(|&x| if x > 1e-12 { 1.0 / x.sqrt() } else { 0.0 })
+        .collect();
+    Mat::from_fn(w.rows, w.cols, |i, j| {
+        let id = if i == j { 1.0 } else { 0.0 };
+        id - dinv[i] * w.get(i, j) * dinv[j]
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn path_graph(n: usize) -> Mat {
+        Mat::from_fn(n, n, |i, j| {
+            if i + 1 == j || j + 1 == i { 1.0 } else { 0.0 }
+        })
+    }
+
+    #[test]
+    fn degrees_of_path() {
+        let w = path_graph(4);
+        assert_eq!(degree_vector(&w), vec![1.0, 2.0, 2.0, 1.0]);
+    }
+
+    #[test]
+    fn laplacian_rows_sum_to_zero() {
+        let w = path_graph(5);
+        let l = combinatorial_laplacian(&w);
+        for i in 0..5 {
+            let s: f32 = l.row(i).iter().sum();
+            assert!(s.abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn normalized_laplacian_diag_one() {
+        let w = path_graph(5);
+        let l = normalized_laplacian(&w);
+        for i in 0..5 {
+            assert!((l.get(i, i) - 1.0).abs() < 1e-6);
+        }
+    }
+}

@@ -1,0 +1,14 @@
+//! Spectral graph toolkit: Laplacians, eigenvalues, coarsening/lifting, and
+//! the spectral distance of Eq. (5) — everything needed to *empirically
+//! validate Theorem 1* (PiToMe coarsening preserves the normalized-Laplacian
+//! spectrum; ToMe leaves a non-vanishing gap).
+
+pub mod coarsen;
+pub mod eigen;
+pub mod laplacian;
+pub mod spectral;
+
+pub use coarsen::{coarsen, lift, Partition};
+pub use eigen::jacobi_eigenvalues;
+pub use laplacian::{degree_vector, normalized_laplacian};
+pub use spectral::{spectral_distance, token_graph};

@@ -1,0 +1,88 @@
+//! Spectral distance (Eq. 5) and token-graph construction.
+
+use super::coarsen::{coarsen, lift, Partition};
+use super::eigen::jacobi_eigenvalues;
+use super::laplacian::normalized_laplacian;
+use crate::tensor::{cosine_matrix, Mat};
+
+/// Token graph of Eq. (3): `W[i,j] = 1 - cos(v_i, v_j)` (cosine
+/// *distance*), diagonal zero.  Near-duplicate tokens are connected by
+/// near-zero weights, so merging them perturbs the Laplacian spectrum
+/// vanishingly — exactly the mechanism behind Theorem 1's
+/// `SD(G, G_pitome) -> 0`.
+pub fn token_graph(kf: &Mat) -> Mat {
+    let c = cosine_matrix(kf);
+    Mat::from_fn(c.rows, c.cols, |i, j| {
+        if i == j { 0.0 } else { (1.0 - c.get(i, j)).max(0.0) }
+    })
+}
+
+/// `SD(G, Gc) = || lambda(L(G)) - lambda(L(lift(Gc))) ||_1` (Eq. 5),
+/// computed over normalized-Laplacian spectra.
+pub fn spectral_distance(w: &Mat, p: &Partition) -> f32 {
+    let wl = lift(&coarsen(w, p), p);
+    let l = normalized_laplacian(w);
+    let ll = normalized_laplacian(&wl);
+    let ev = jacobi_eigenvalues(&l, 1e-6, 100);
+    let evl = jacobi_eigenvalues(&ll, 1e-6, 100);
+    ev.iter().zip(&evl).map(|(a, b)| (a - b).abs()).sum()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::Rng;
+
+    /// Two tight, well-separated clusters (assumptions A1/A2 of Thm. 1).
+    pub fn two_cluster_features(n1: usize, n2: usize, h: usize, noise: f64,
+                                seed: u64) -> Mat {
+        let mut rng = Rng::new(seed);
+        let c1: Vec<f32> = (0..h).map(|_| (rng.next_f64() * 2.0 - 1.0) as f32).collect();
+        let c2: Vec<f32> = c1.iter().map(|v| -v).collect();
+        Mat::from_fn(n1 + n2, h, |i, j| {
+            let c = if i < n1 { &c1 } else { &c2 };
+            c[j] + (noise * (rng.next_f64() - 0.5)) as f32
+        })
+    }
+
+    #[test]
+    fn identity_partition_distance_zero() {
+        let kf = two_cluster_features(6, 6, 8, 0.1, 1);
+        let w = token_graph(&kf);
+        let p = Partition::identity(12);
+        let sd = spectral_distance(&w, &p);
+        assert!(sd < 1e-3, "SD(identity) = {sd}");
+    }
+
+    #[test]
+    fn within_cluster_merge_cheaper_than_cross() {
+        let kf = two_cluster_features(8, 8, 8, 0.05, 2);
+        let w = token_graph(&kf);
+        // merge two nodes of cluster 1
+        let mut within = Partition::identity(16);
+        within.merge_groups(0, 1);
+        // merge one node of each cluster
+        let mut cross = Partition::identity(16);
+        cross.merge_groups(0, 15);
+        let sd_within = spectral_distance(&w, &within);
+        let sd_cross = spectral_distance(&w, &cross);
+        assert!(sd_within < sd_cross,
+                "within {sd_within} !< cross {sd_cross}");
+    }
+
+    #[test]
+    fn distance_grows_with_coarsening_error() {
+        let kf = two_cluster_features(10, 10, 8, 0.05, 3);
+        let w = token_graph(&kf);
+        // merge all of cluster 1 (fine) vs merge everything (destroys
+        // structure)
+        let mut good = vec![0usize; 20];
+        for (i, g) in good.iter_mut().enumerate() {
+            *g = if i < 10 { 0 } else { 1 + (i - 10) };
+        }
+        let all = vec![0usize; 20];
+        let sd_good = spectral_distance(&w, &Partition::from_assign(good));
+        let sd_all = spectral_distance(&w, &Partition::from_assign(all));
+        assert!(sd_good < sd_all, "good {sd_good} !< all {sd_all}");
+    }
+}

@@ -1,0 +1,32 @@
+//! # pitome — Spectrum-Preserving Token Merging, as a serving/training stack
+//!
+//! Production-oriented reproduction of *"Accelerating Transformers with
+//! Spectrum-Preserving Token Merging"* (Tran, Nguyen et al., NeurIPS 2024).
+//!
+//! Three layers (see `DESIGN.md`):
+//! - **L1** Pallas kernels (energy score, proportional attention) and
+//! - **L2** JAX models live in `python/compile/` and are AOT-lowered to HLO
+//!   text artifacts at build time (`make artifacts`);
+//! - **L3** (this crate) is the runtime: a PJRT executor over those
+//!   artifacts, a serving coordinator (router + dynamic batcher), a full
+//!   pure-Rust implementation of PiToMe and every baseline merge algorithm,
+//!   the spectral-graph toolkit used to validate Theorem 1, synthetic
+//!   workload generators, and the benchmark harness that regenerates every
+//!   table/figure of the paper.
+//!
+//! Python never runs on the request path: after `make artifacts` the crate
+//! is self-contained.
+
+pub mod config;
+pub mod coordinator;
+pub mod data;
+pub mod error;
+pub mod eval;
+pub mod graph;
+pub mod merge;
+pub mod model;
+pub mod runtime;
+pub mod tensor;
+pub mod util;
+
+pub use error::{Error, Result};

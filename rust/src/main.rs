@@ -1,0 +1,137 @@
+//! `pitome` CLI — leader entrypoint for the serving/training stack.
+//!
+//! Subcommands:
+//!   * `info`     — list artifacts, params, plans, FLOPs.
+//!   * `classify` — off-the-shelf ShapeBench accuracy for one config.
+//!   * `spectral` — Theorem-1 spectral-distance experiment.
+//!   * `serve`    — boot the coordinator and run a trace through it.
+//!
+//! Flags: `--artifacts DIR`, per-subcommand flags below.
+
+use std::path::PathBuf;
+use std::sync::Arc;
+
+use pitome::config::{ServingConfig, ViTConfig};
+use pitome::coordinator::{Coordinator, Qos};
+use pitome::data::{generate_trace, patchify, shape_item, TraceConfig, TEST_SEED};
+use pitome::eval;
+use pitome::model::load_model_params;
+use pitome::runtime::{HostTensor, Registry};
+use pitome::util::Args;
+
+const USAGE: &str = "\
+pitome <command> [flags]
+  info                              list artifacts + cost model
+  classify --mode M --r R --n N     off-the-shelf accuracy
+  spectral --steps S --k K          Theorem-1 experiment
+  serve --requests N --rate R       serve a synthetic trace
+global: --artifacts DIR (default ./artifacts)";
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::parse();
+    let dir = PathBuf::from(args.get("artifacts",
+        Registry::default_dir().to_str().unwrap_or("artifacts")));
+    match args.positional.first().map(String::as_str) {
+        Some("info") => info(&dir),
+        Some("classify") => classify(
+            &dir,
+            &args.get("mode", "pitome"),
+            args.get_parse("r", 0.9),
+            args.get_parse("n", 256),
+        ),
+        Some("spectral") => {
+            spectral(args.get_parse("steps", 3), args.get_parse("k", 3));
+            Ok(())
+        }
+        Some("serve") => serve(
+            &dir,
+            args.get_parse("requests", 256),
+            args.get_parse("rate", 300.0),
+        ),
+        _ => {
+            println!("{USAGE}");
+            Ok(())
+        }
+    }
+}
+
+fn info(dir: &PathBuf) -> anyhow::Result<()> {
+    match Registry::load(dir) {
+        Ok(reg) => {
+            println!("artifacts in {}:", dir.display());
+            for name in reg.names() {
+                let e = reg.get(&name).unwrap();
+                println!("  {name:32} model={:10} mode={:10} r={:<5} batch={}",
+                         e.meta.model, e.meta.mode, e.meta.r, e.meta.batch);
+            }
+        }
+        Err(e) => println!("(no artifact registry: {e})"),
+    }
+    println!("\ncost model (paper-scale backbones, pitome r=0.9):");
+    for (name, g, s) in eval::classify::paper_scale_flops(&[0.9]) {
+        println!("  {name:24} {g:8.1} GFLOPs  x{s:.2}");
+    }
+    Ok(())
+}
+
+fn classify(dir: &PathBuf, mode: &str, r: f64, n: usize) -> anyhow::Result<()> {
+    let ps = load_model_params(dir, "vit").map_err(|e| anyhow::anyhow!("{e}"))?;
+    let row = eval::classify::eval_config(&ps, mode, r, n)
+        .map_err(|e| anyhow::anyhow!("{e}"))?;
+    let cfg = ViTConfig { merge_mode: mode.into(), merge_r: r, ..Default::default() };
+    println!("mode={} r={} acc={:.2}% gflops={:.4} speedup=x{:.2} plan={:?}",
+             row.mode, row.r, row.acc, row.gflops, row.speedup, cfg.plan());
+    Ok(())
+}
+
+fn spectral(steps: usize, k: usize) {
+    println!("Theorem 1: SD(G, coarse) by algorithm and cluster tightness");
+    println!("{:<8} {:<8} {:>10} {:>12}", "noise", "algo", "SD", "cross-frac");
+    for row in eval::spectral::theorem1_sweep(&[0.02, 0.1, 0.3, 0.6], steps, k) {
+        println!("{:<8} {:<8} {:>10.4} {:>12.3}",
+                 row.noise, row.algo, row.sd, row.cross_cluster_frac);
+    }
+}
+
+fn serve(dir: &PathBuf, requests: usize, rate: f64) -> anyhow::Result<()> {
+    let reg = Registry::load(dir).map_err(|e| anyhow::anyhow!("{e}"))?;
+    let selection = [("vit", vec!["vit_none_b8".to_string(),
+                                  "vit_pitome_r900_b8".to_string()])];
+    let coord = Arc::new(
+        Coordinator::boot(&reg, dir, &selection, ServingConfig::default())
+            .map_err(|e| anyhow::anyhow!("{e}"))?);
+
+    let trace = generate_trace(&TraceConfig {
+        rate, count: requests, ..Default::default()
+    });
+    let t0 = std::time::Instant::now();
+    let mut pending = Vec::new();
+    for ev in trace {
+        let target = std::time::Duration::from_micros(ev.at_us);
+        if let Some(wait) = target.checked_sub(t0.elapsed()) {
+            std::thread::sleep(wait);
+        }
+        let item = shape_item(TEST_SEED, ev.item);
+        let patches = patchify(&item.image, 4);
+        match coord.submit_nowait("vit", Qos::Balanced,
+                                  vec![HostTensor::F32(patches.data, vec![64, 16])]) {
+            Ok(rx) => pending.push(rx),
+            Err(e) => eprintln!("submit failed: {e}"),
+        }
+    }
+    let mut ok = 0usize;
+    for rx in pending {
+        if rx.recv().is_ok() {
+            ok += 1;
+        }
+    }
+    let dur = t0.elapsed().as_secs_f64();
+    println!("served {ok}/{requests} in {dur:.2}s ({:.1} req/s)",
+             ok as f64 / dur);
+    for (model, artifact, snap) in coord.metrics() {
+        println!("  {model}/{artifact}: n={} mean={:.0}us p50={}us p99={}us mean_batch={:.2}",
+                 snap.count, snap.mean_us, snap.p50_us, snap.p99_us,
+                 snap.mean_batch);
+    }
+    Ok(())
+}

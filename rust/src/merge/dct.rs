@@ -1,0 +1,92 @@
+//! DCT baseline (Fourier-transformer style, He et al. 2023): truncate the
+//! token sequence in frequency space.  Mirrors `ref.dct_merge`.
+
+use crate::tensor::{matmul, Mat};
+
+/// Orthonormal DCT-II matrix D (n, n): `D @ x` computes the DCT along the
+/// token axis.
+pub fn dct_matrix(n: usize) -> Mat {
+    let mut d = Mat::zeros(n, n);
+    let nf = n as f64;
+    for i in 0..n {
+        let scale = if i == 0 { (1.0 / nf).sqrt() } else { (2.0 / nf).sqrt() };
+        for j in 0..n {
+            let v = (std::f64::consts::PI / nf * (j as f64 + 0.5) * i as f64).cos();
+            d.set(i, j, (v * scale) as f32);
+        }
+    }
+    d
+}
+
+/// DCT merge: keep the low-frequency band of the non-protected tokens and
+/// resynthesize `n - protect_first - k` tokens on the coarse grid.
+/// Sizes reset to 1 (no tracking, as in the paper's DCT baseline).
+pub fn dct_merge(x: &Mat, _sizes: &[f32], k: usize, protect_first: usize)
+    -> (Mat, Vec<f32>) {
+    let nb = x.rows - protect_first;
+    let keep = nb - k;
+    let d = dct_matrix(nb);
+    // body = x[protect_first..]
+    let body = Mat::from_fn(nb, x.cols, |i, j| x.get(protect_first + i, j));
+    let freq = matmul(&d, &body);
+    // trunc = freq[:keep]; out = D[:keep,:keep]^T @ trunc
+    let trunc = Mat::from_fn(keep, x.cols, |i, j| freq.get(i, j));
+    let dk = Mat::from_fn(keep, keep, |i, j| d.get(i, j));
+    let body_out = matmul(&dk.transpose(), &trunc);
+    let head = Mat::from_fn(protect_first, x.cols, |i, j| x.get(i, j));
+    let out = head.vcat(&body_out);
+    let sizes = vec![1.0; out.rows];
+    (out, sizes)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::Rng;
+    use crate::tensor::matmul_nt;
+
+    #[test]
+    fn dct_matrix_is_orthonormal() {
+        let d = dct_matrix(16);
+        let ddt = matmul_nt(&d, &d);
+        for i in 0..16 {
+            for j in 0..16 {
+                let want = if i == j { 1.0 } else { 0.0 };
+                assert!((ddt.get(i, j) - want).abs() < 1e-4,
+                        "D D^T [{i},{j}] = {}", ddt.get(i, j));
+            }
+        }
+    }
+
+    #[test]
+    fn full_band_reconstructs() {
+        // k = 0 -> keep == nb, resynthesis is exact inverse
+        let mut rng = Rng::new(1);
+        let x = Mat::from_fn(9, 4, |_, _| (rng.next_f64() * 2.0 - 1.0) as f32);
+        let (out, _) = dct_merge(&x, &vec![1.0; 9], 0, 1);
+        assert!(out.max_abs_diff(&x) < 1e-4);
+    }
+
+    #[test]
+    fn truncation_reduces_tokens() {
+        let mut rng = Rng::new(2);
+        let x = Mat::from_fn(17, 4, |_, _| (rng.next_f64() * 2.0 - 1.0) as f32);
+        let (out, sizes) = dct_merge(&x, &vec![1.0; 17], 5, 1);
+        assert_eq!(out.rows, 12);
+        assert!(sizes.iter().all(|&s| s == 1.0));
+    }
+
+    #[test]
+    fn preserves_constant_signal() {
+        // A constant token sequence lives entirely in frequency 0: heavy
+        // truncation must still reproduce (scaled) constant tokens.
+        let x = Mat::from_fn(17, 3, |i, j| if i == 0 { 0.0 } else { (j + 1) as f32 });
+        let (out, _) = dct_merge(&x, &vec![1.0; 17], 8, 1);
+        // all body rows equal each other
+        for i in 2..out.rows {
+            for j in 0..3 {
+                assert!((out.get(i, j) - out.get(1, j)).abs() < 1e-3);
+            }
+        }
+    }
+}

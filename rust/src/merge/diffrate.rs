@@ -1,0 +1,74 @@
+//! DiffRate-style baseline: CLS-attention-ranked merging (fixed schedule).
+//!
+//! The learned compression-rate search of DiffRate (Chen et al. 2023) is
+//! replaced by the same fixed ratio-r schedule every other mode uses
+//! (DESIGN.md §6); what remains is its ranking signal: merge the k least
+//! CLS-attended tokens into their most similar kept token.
+
+use super::plan::MergePlan;
+use crate::tensor::{argsort_asc, normalize_rows, Mat};
+
+/// Build the attention-ranked plan.
+pub fn diffrate_plan(kf: &Mat, attn_cls: &[f32], k: usize,
+                     protect_first: usize) -> MergePlan {
+    let n = kf.rows;
+    assert_eq!(attn_cls.len(), n);
+    let mut score = attn_cls.to_vec();
+    for it in score.iter_mut().take(protect_first) {
+        *it = f32::INFINITY; // CLS never merged away
+    }
+    let order = argsort_asc(&score);
+    let a: Vec<usize> = order[..k].to_vec();
+    let mut b: Vec<usize> = order[k..].to_vec();
+    b.sort_unstable();
+
+    let kn = normalize_rows(kf);
+    let mut dst = vec![0usize; k];
+    for (ai, &aidx) in a.iter().enumerate() {
+        let ra = kn.row(aidx);
+        let mut best = f32::NEG_INFINITY;
+        for (bi, &bidx) in b.iter().enumerate() {
+            if bidx < protect_first {
+                continue; // CLS cannot receive merges
+            }
+            let rb = kn.row(bidx);
+            let mut dot = 0f32;
+            for c in 0..kn.cols {
+                dot += ra[c] * rb[c];
+            }
+            if dot > best {
+                best = dot;
+                dst[ai] = bi;
+            }
+        }
+    }
+    MergePlan { protect: vec![], a, b, dst, gate: vec![1.0; k] }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::Rng;
+    use crate::merge::plan::apply_plan;
+
+    #[test]
+    fn merges_least_attended() {
+        let mut rng = Rng::new(3);
+        let kf = Mat::from_fn(13, 6, |_, _| (rng.next_f64() * 2.0 - 1.0) as f32);
+        let attn: Vec<f32> = (0..13).map(|i| i as f32 * 0.01).collect();
+        let plan = diffrate_plan(&kf, &attn, 4, 1);
+        plan.validate(13).unwrap();
+        // tokens 1..=4 have the lowest non-CLS attention
+        let mut a = plan.a.clone();
+        a.sort_unstable();
+        assert_eq!(a, vec![1, 2, 3, 4]);
+        // CLS is in B but receives no merges
+        assert!(plan.b.contains(&0));
+        for (&_ai, &d) in plan.a.iter().zip(&plan.dst) {
+            assert_ne!(plan.b[d], 0, "CLS received a merge");
+        }
+        let (out, sizes) = apply_plan(&kf, &vec![1.0; 13], &plan);
+        assert_eq!(out.rows, 9);
+        assert!((sizes.iter().sum::<f32>() - 13.0).abs() < 1e-4);
+    }
+}

@@ -1,0 +1,135 @@
+//! Energy score (Eq. 4) — the paper's redundancy indicator.
+//!
+//! `E_i = 1/N * sum_{j != i} f_m(cos(v_i, v_j))` with the ELU-style clamp
+//! `f_m(x) = x if x >= m else alpha * (exp(x - m) - 1)`.
+//! Numerics mirror `ref.energy_scores` (eps 1e-6 normalization, diagonal
+//! masked) to float tolerance.
+
+use crate::tensor::{normalize_rows, Mat};
+
+/// ELU floor coefficient (paper uses alpha = 1).
+pub const ALPHA: f32 = 1.0;
+
+/// The margin clamp of Eq. (4).
+#[inline]
+pub fn f_margin(x: f32, margin: f32) -> f32 {
+    if x >= margin {
+        x
+    } else {
+        ALPHA * ((x - margin).exp() - 1.0)
+    }
+}
+
+/// Layer-dependent margin schedule `m = 0.9 - 0.9 * l / L` (Sec 3.2).
+pub fn layer_margin(layer: usize, num_layers: usize) -> f32 {
+    let base = 0.9f32;
+    base - base * layer as f32 / (num_layers.max(1) as f32)
+}
+
+/// Energy scores for key features `kf` (n, h).
+///
+/// O(n^2 h) like the paper; this is the benched hot path (see
+/// rust/benches/merge_bench.rs and EXPERIMENTS.md §Perf).  Optimized:
+/// the Gram is symmetric, so each pair is computed once and credited to
+/// both endpoints (2x), and the dot product is written as an
+/// iterator-zip sum the compiler auto-vectorizes.
+pub fn energy_scores(kf: &Mat, margin: f32) -> Vec<f32> {
+    let n = kf.rows;
+    let kn = normalize_rows(kf);
+    let mut e = vec![0f32; n];
+    for i in 0..n {
+        let ri = kn.row(i);
+        for j in (i + 1)..n {
+            let rj = kn.row(j);
+            let dot: f32 = ri.iter().zip(rj).map(|(a, b)| a * b).sum();
+            let f = f_margin(dot, margin);
+            e[i] += f;
+            e[j] += f;
+        }
+    }
+    let inv = 1.0 / n as f32;
+    for v in e.iter_mut() {
+        *v *= inv;
+    }
+    e
+}
+
+/// Energy scores given a precomputed cosine matrix (used when the caller
+/// already built W for matching — avoids the second Gram pass).
+pub fn energy_from_cosine(w: &Mat, margin: f32) -> Vec<f32> {
+    let n = w.rows;
+    let mut e = vec![0f32; n];
+    for i in 0..n {
+        let row = w.row(i);
+        let mut acc = 0f32;
+        for (j, &wij) in row.iter().enumerate() {
+            if j == i {
+                continue;
+            }
+            acc += f_margin(wij, margin);
+        }
+        e[i] = acc / n as f32;
+    }
+    e
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::Rng;
+    use crate::tensor::cosine_matrix;
+
+    #[test]
+    fn f_margin_branches() {
+        let m = 0.5;
+        // at/above margin: identity
+        assert!((f_margin(m, m) - m).abs() < 1e-6);
+        assert!((f_margin(0.9, m) - 0.9).abs() < 1e-6);
+        // below margin: ELU floor, small negative near the margin,
+        // approaching -alpha far below
+        let just_below = f_margin(m - 1e-4, m);
+        assert!(just_below < 0.0 && just_below > -1e-3, "{just_below}");
+        assert!(f_margin(-1.0, m) > -ALPHA - 1e-6);
+        assert!(f_margin(-1.0, m) < -0.7);
+    }
+
+    #[test]
+    fn margin_schedule_decreases() {
+        let l = 12;
+        for i in 1..l {
+            assert!(layer_margin(i, l) < layer_margin(i - 1, l));
+        }
+        assert!((layer_margin(0, l) - 0.9).abs() < 1e-6);
+    }
+
+    #[test]
+    fn clustered_tokens_have_higher_energy() {
+        // 20 near-identical tokens + 3 scattered ones
+        let mut rng = Rng::new(4);
+        let h = 8;
+        let center: Vec<f32> = (0..h).map(|_| (rng.next_f64() * 2.0 - 1.0) as f32).collect();
+        let m = Mat::from_fn(23, h, |i, j| {
+            if i < 20 {
+                center[j] + 0.01 * (rng.next_f64() as f32 - 0.5)
+            } else {
+                -(center[j]) + 2.0 * (rng.next_f64() as f32 - 0.5)
+            }
+        });
+        let e = energy_scores(&m, 0.5);
+        let min_cluster = e[..20].iter().cloned().fold(f32::INFINITY, f32::min);
+        let max_iso = e[20..].iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+        assert!(min_cluster > max_iso, "{min_cluster} vs {max_iso}");
+    }
+
+    #[test]
+    fn energy_from_cosine_matches_direct() {
+        let mut rng = Rng::new(9);
+        let m = Mat::from_fn(12, 6, |_, _| (rng.next_f64() * 2.0 - 1.0) as f32);
+        let w = cosine_matrix(&m);
+        let e1 = energy_scores(&m, 0.3);
+        let e2 = energy_from_cosine(&w, 0.3);
+        for (a, b) in e1.iter().zip(&e2) {
+            assert!((a - b).abs() < 1e-5);
+        }
+    }
+}

@@ -1,0 +1,226 @@
+//! Pure-Rust merge engine: PiToMe (Alg. 1) + every compared baseline.
+//!
+//! Semantics mirror `python/compile/kernels/ref.py` (the *mm* plan
+//! contract): a plan is `(protect, a, b, dst, gate)` with output layout
+//! `[protected..., B...]`, every A token merging into `b[dst]` when its
+//! gate is 1.0 and being pruned when 0.0.  Cross-language parity is
+//! asserted against `artifacts/testvectors.json`.
+
+pub mod dct;
+pub mod diffrate;
+pub mod energy;
+pub mod pitome;
+pub mod plan;
+pub mod random;
+pub mod schedule;
+pub mod tome;
+pub mod unmerge;
+
+pub use energy::energy_scores;
+pub use plan::{apply_plan, MergePlan};
+pub use schedule::{fixed_k_plan, merge_plan, tokens_after_merge};
+pub use unmerge::{unmerge, MergeTracker};
+
+use crate::data::Rng;
+use crate::tensor::Mat;
+
+/// Which merge algorithm to run in a block.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum MergeMode {
+    /// no merging
+    None,
+    /// PiToMe: energy-protected ordered BSM (the paper's method)
+    PiToMe,
+    /// PiToMe ablation: no protection step (Table 1 row 1)
+    PiToMeNoProtect,
+    /// PiToMe ablation: random A/B split (Table 1 row 2)
+    PiToMeRandomSplit,
+    /// PiToMe ablation: CLS-attention indicator instead of energy (Fig. 4)
+    PiToMeAttn,
+    /// ToMe parity-split BSM
+    ToMe,
+    /// ToFu: ToMe matching with prune-below-threshold
+    ToFu,
+    /// DCT frequency-truncation baseline
+    Dct,
+    /// DiffRate-style attention-ranked merging (fixed schedule)
+    DiffRate,
+    /// random pruning baseline
+    Random,
+}
+
+impl MergeMode {
+    /// Parse from CLI/manifest strings (same names as python).
+    pub fn parse(s: &str) -> Option<MergeMode> {
+        Some(match s {
+            "none" => MergeMode::None,
+            "pitome" => MergeMode::PiToMe,
+            "pitome_noprot" => MergeMode::PiToMeNoProtect,
+            "pitome_rand" => MergeMode::PiToMeRandomSplit,
+            "pitome_attn" => MergeMode::PiToMeAttn,
+            "tome" => MergeMode::ToMe,
+            "tofu" => MergeMode::ToFu,
+            "dct" => MergeMode::Dct,
+            "diffrate" => MergeMode::DiffRate,
+            "random" => MergeMode::Random,
+            _ => return None,
+        })
+    }
+
+    /// Canonical lowercase name.
+    pub fn name(&self) -> &'static str {
+        match self {
+            MergeMode::None => "none",
+            MergeMode::PiToMe => "pitome",
+            MergeMode::PiToMeNoProtect => "pitome_noprot",
+            MergeMode::PiToMeRandomSplit => "pitome_rand",
+            MergeMode::PiToMeAttn => "pitome_attn",
+            MergeMode::ToMe => "tome",
+            MergeMode::ToFu => "tofu",
+            MergeMode::Dct => "dct",
+            MergeMode::DiffRate => "diffrate",
+            MergeMode::Random => "random",
+        }
+    }
+
+    /// All modes compared in the paper's figures.
+    pub fn all() -> &'static [MergeMode] {
+        &[
+            MergeMode::PiToMe,
+            MergeMode::ToMe,
+            MergeMode::ToFu,
+            MergeMode::Dct,
+            MergeMode::DiffRate,
+        ]
+    }
+
+    /// Whether this mode tracks token sizes (=> proportional attention).
+    pub fn tracks_sizes(&self) -> bool {
+        !matches!(self, MergeMode::None | MergeMode::Dct | MergeMode::Random)
+    }
+}
+
+/// Context handed to one merge step.
+pub struct MergeCtx<'a> {
+    /// token features to merge, (n, h)
+    pub x: &'a Mat,
+    /// key features used for similarity, (n, h)
+    pub kf: &'a Mat,
+    /// token sizes, len n
+    pub sizes: &'a [f32],
+    /// mean CLS attention scores, len n (for attention-ranked modes)
+    pub attn_cls: &'a [f32],
+    /// energy margin for this layer (Eq. 4)
+    pub margin: f32,
+    /// number of tokens to merge away
+    pub k: usize,
+    /// leading protected tokens (CLS)
+    pub protect_first: usize,
+}
+
+/// Run one merge step, returning (merged tokens, new sizes).
+pub fn merge_step(mode: MergeMode, ctx: &MergeCtx, rng: &mut Rng) -> (Mat, Vec<f32>) {
+    if ctx.k == 0 || mode == MergeMode::None {
+        return (ctx.x.clone(), ctx.sizes.to_vec());
+    }
+    match mode {
+        MergeMode::None => unreachable!(),
+        MergeMode::PiToMe => {
+            let e = energy_scores(ctx.kf, ctx.margin);
+            let plan = pitome::ordered_bsm_plan(
+                ctx.kf, &e, ctx.k, ctx.protect_first, pitome::Split::Alternate, true, rng);
+            apply_plan(ctx.x, ctx.sizes, &plan)
+        }
+        MergeMode::PiToMeNoProtect => {
+            let e = energy_scores(ctx.kf, ctx.margin);
+            let plan = pitome::ordered_bsm_plan(
+                ctx.kf, &e, ctx.k, ctx.protect_first, pitome::Split::Alternate, false, rng);
+            apply_plan(ctx.x, ctx.sizes, &plan)
+        }
+        MergeMode::PiToMeRandomSplit => {
+            let e = energy_scores(ctx.kf, ctx.margin);
+            let plan = pitome::ordered_bsm_plan(
+                ctx.kf, &e, ctx.k, ctx.protect_first, pitome::Split::Random, true, rng);
+            apply_plan(ctx.x, ctx.sizes, &plan)
+        }
+        MergeMode::PiToMeAttn => {
+            let neg: Vec<f32> = ctx.attn_cls.iter().map(|v| -v).collect();
+            let plan = pitome::ordered_bsm_plan(
+                ctx.kf, &neg, ctx.k, ctx.protect_first, pitome::Split::Alternate, true, rng);
+            apply_plan(ctx.x, ctx.sizes, &plan)
+        }
+        MergeMode::ToMe => {
+            let plan = tome::tome_plan(ctx.kf, ctx.k, ctx.protect_first, None);
+            apply_plan(ctx.x, ctx.sizes, &plan)
+        }
+        MergeMode::ToFu => {
+            let plan = tome::tome_plan(ctx.kf, ctx.k, ctx.protect_first, Some(0.45));
+            apply_plan(ctx.x, ctx.sizes, &plan)
+        }
+        MergeMode::Dct => dct::dct_merge(ctx.x, ctx.sizes, ctx.k, ctx.protect_first),
+        MergeMode::DiffRate => {
+            let plan = diffrate::diffrate_plan(ctx.kf, ctx.attn_cls, ctx.k, ctx.protect_first);
+            apply_plan(ctx.x, ctx.sizes, &plan)
+        }
+        MergeMode::Random => {
+            let plan = random::random_plan(ctx.x.rows, ctx.k, ctx.protect_first, rng);
+            apply_plan(ctx.x, ctx.sizes, &plan)
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn mk(n: usize, h: usize, seed: u64) -> (Mat, Vec<f32>) {
+        let mut rng = Rng::new(seed);
+        let m = Mat::from_fn(n, h, |_, _| (rng.next_f64() * 2.0 - 1.0) as f32);
+        let sizes = vec![1.0; n];
+        (m, sizes)
+    }
+
+    #[test]
+    fn all_modes_reduce_by_k() {
+        let (x, sizes) = mk(25, 8, 3);
+        let attn: Vec<f32> = (0..25).map(|i| 0.01 * i as f32).collect();
+        for &mode in &[
+            MergeMode::PiToMe, MergeMode::PiToMeNoProtect, MergeMode::PiToMeRandomSplit,
+            MergeMode::PiToMeAttn, MergeMode::ToMe, MergeMode::ToFu, MergeMode::Dct,
+            MergeMode::DiffRate, MergeMode::Random,
+        ] {
+            let mut rng = Rng::new(1);
+            let ctx = MergeCtx {
+                x: &x, kf: &x, sizes: &sizes, attn_cls: &attn,
+                margin: 0.4, k: 6, protect_first: 1,
+            };
+            let (out, out_sizes) = merge_step(mode, &ctx, &mut rng);
+            assert_eq!(out.rows, 19, "{mode:?}");
+            assert_eq!(out_sizes.len(), 19, "{mode:?}");
+        }
+    }
+
+    #[test]
+    fn size_conservation_for_merging_modes() {
+        let (x, sizes) = mk(31, 8, 5);
+        let attn: Vec<f32> = (0..31).map(|i| 0.02 * (i % 7) as f32).collect();
+        for &mode in &[MergeMode::PiToMe, MergeMode::ToMe, MergeMode::DiffRate] {
+            let mut rng = Rng::new(2);
+            let ctx = MergeCtx {
+                x: &x, kf: &x, sizes: &sizes, attn_cls: &attn,
+                margin: 0.4, k: 9, protect_first: 1,
+            };
+            let (_, out_sizes) = merge_step(mode, &ctx, &mut rng);
+            let total: f32 = out_sizes.iter().sum();
+            assert!((total - 31.0).abs() < 1e-3, "{mode:?} {total}");
+        }
+    }
+
+    #[test]
+    fn mode_roundtrip_names() {
+        for &m in MergeMode::all() {
+            assert_eq!(MergeMode::parse(m.name()), Some(m));
+        }
+        assert_eq!(MergeMode::parse("nonsense"), None);
+    }
+}

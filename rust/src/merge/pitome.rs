@@ -1,0 +1,177 @@
+//! PiToMe: energy-ordered bipartite soft matching with protection (Alg. 1).
+
+use super::plan::MergePlan;
+use crate::data::Rng;
+use crate::tensor::{argsort_desc, normalize_rows, Mat};
+
+/// How merge candidates are split into sets A and B.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Split {
+    /// alternate in energy order (the paper's choice: neighbours in the
+    /// sorted energy vector likely belong to the same object)
+    Alternate,
+    /// random assignment (Table 1 ablation)
+    Random,
+}
+
+/// Build the PiToMe plan.
+///
+/// * `scores` — ranking signal, higher = more mergeable (energy, or
+///   `-attn_cls` for the attention-indicator ablation).
+/// * `protect` — if false, *all* candidates enter the matching and only the
+///   `k` most-similar pairs merge (no-protection ablation).
+pub fn ordered_bsm_plan(
+    kf: &Mat,
+    scores: &[f32],
+    k: usize,
+    protect_first: usize,
+    split: Split,
+    protect: bool,
+    rng: &mut Rng,
+) -> MergePlan {
+    let n = kf.rows;
+    assert_eq!(scores.len(), n);
+    // sink protected prefix below every candidate
+    let mut s_cand = scores.to_vec();
+    for it in s_cand.iter_mut().take(protect_first) {
+        *it = f32::NEG_INFINITY;
+    }
+    let order = argsort_desc(&s_cand);
+
+    let n_pairs = if protect { k } else { (n - protect_first) / 2 };
+    let mut merge_idx: Vec<usize> = order[..2 * n_pairs].to_vec();
+    let rest: Vec<usize> = order[2 * n_pairs..].to_vec();
+    if split == Split::Random {
+        // Fisher-Yates on the candidate list
+        for i in (1..merge_idx.len()).rev() {
+            let j = rng.next_below((i + 1) as u64) as usize;
+            merge_idx.swap(i, j);
+        }
+    }
+    let a_all: Vec<usize> = merge_idx.iter().step_by(2).copied().collect();
+    let b: Vec<usize> = merge_idx.iter().skip(1).step_by(2).copied().collect();
+
+    // pair similarity via normalized dot products
+    let kn = normalize_rows(kf);
+    let mut best = vec![f32::NEG_INFINITY; a_all.len()];
+    let mut dst_all = vec![0usize; a_all.len()];
+    for (ai, &aidx) in a_all.iter().enumerate() {
+        let ra = kn.row(aidx);
+        for (bi, &bidx) in b.iter().enumerate() {
+            let rb = kn.row(bidx);
+            let mut dot = 0f32;
+            for c in 0..kn.cols {
+                dot += ra[c] * rb[c];
+            }
+            if dot > best[ai] {
+                best[ai] = dot;
+                dst_all[ai] = bi;
+            }
+        }
+    }
+
+    let mut protect_idx: Vec<usize>;
+    let (a, dst) = if n_pairs == k {
+        protect_idx = rest;
+        (a_all, dst_all)
+    } else {
+        // keep only the k most-similar pairs; surviving A tokens protected
+        let pair_rank = argsort_desc(&best);
+        let mut a_merge = Vec::with_capacity(k);
+        let mut dst = Vec::with_capacity(k);
+        for &p in pair_rank.iter().take(k) {
+            a_merge.push(a_all[p]);
+            dst.push(dst_all[p]);
+        }
+        protect_idx = rest;
+        for &p in pair_rank.iter().skip(k) {
+            protect_idx.push(a_all[p]);
+        }
+        (a_merge, dst)
+    };
+    protect_idx.sort_unstable();
+    MergePlan { protect: protect_idx, a, b, dst, gate: vec![1.0; k] }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::merge::energy::energy_scores;
+    use crate::merge::plan::apply_plan;
+
+    fn clustered(n_cluster: usize, n_iso: usize, h: usize) -> Mat {
+        let mut rng = Rng::new(11);
+        let center: Vec<f32> =
+            (0..h).map(|_| (rng.next_f64() * 2.0 - 1.0) as f32).collect();
+        Mat::from_fn(1 + n_cluster + n_iso, h, |i, j| {
+            if i == 0 {
+                0.0 // CLS
+            } else if i <= n_cluster {
+                center[j] + 0.01 * (rng.next_f64() as f32 - 0.5)
+            } else {
+                -center[j] * (1.0 + 0.5 * (i - n_cluster) as f32)
+                    + (rng.next_f64() as f32 - 0.5)
+            }
+        })
+    }
+
+    #[test]
+    fn protects_isolated_tokens() {
+        let kf = clustered(20, 4, 8);
+        let e = energy_scores(&kf, 0.5);
+        let mut rng = Rng::new(0);
+        let plan =
+            ordered_bsm_plan(&kf, &e, 6, 1, Split::Alternate, true, &mut rng);
+        plan.validate(kf.rows).unwrap();
+        // all merged candidates come from the cluster [1, 20]
+        for &i in plan.a.iter().chain(&plan.b) {
+            assert!((1..=20).contains(&i), "iso token {i} merged");
+        }
+        // CLS protected
+        assert_eq!(plan.protect[0], 0);
+    }
+
+    #[test]
+    fn plan_sizes_consistent() {
+        let kf = clustered(12, 3, 8);
+        let e = energy_scores(&kf, 0.5);
+        let mut rng = Rng::new(0);
+        for &(protect, k) in &[(true, 4usize), (false, 4)] {
+            let plan = ordered_bsm_plan(
+                &kf, &e, k, 1, Split::Alternate, protect, &mut rng);
+            plan.validate(kf.rows).unwrap();
+            assert_eq!(plan.n_out(), kf.rows - k, "protect={protect}");
+        }
+    }
+
+    #[test]
+    fn random_split_still_valid() {
+        let kf = clustered(16, 2, 8);
+        let e = energy_scores(&kf, 0.4);
+        let mut rng = Rng::new(7);
+        let plan = ordered_bsm_plan(&kf, &e, 5, 1, Split::Random, true, &mut rng);
+        plan.validate(kf.rows).unwrap();
+        let x = kf.clone();
+        let (out, sizes) = apply_plan(&x, &vec![1.0; kf.rows], &plan);
+        assert_eq!(out.rows, kf.rows - 5);
+        let total: f32 = sizes.iter().sum();
+        assert!((total - kf.rows as f32).abs() < 1e-3);
+    }
+
+    #[test]
+    fn identical_cluster_merges_to_center() {
+        // all candidates identical: any merge preserves the value exactly
+        let h = 4;
+        let kf = Mat::from_fn(9, h, |i, j| if i == 0 { 0.0 } else { (j + 1) as f32 });
+        let e = energy_scores(&kf, 0.5);
+        let mut rng = Rng::new(0);
+        let plan = ordered_bsm_plan(&kf, &e, 3, 1, Split::Alternate, true, &mut rng);
+        let (out, _) = apply_plan(&kf, &vec![1.0; 9], &plan);
+        for bi in 0..plan.b.len() {
+            let r = out.row(plan.protect.len() + bi);
+            for (j, &v) in r.iter().enumerate() {
+                assert!((v - (j + 1) as f32).abs() < 1e-5);
+            }
+        }
+    }
+}

@@ -1,0 +1,166 @@
+//! Merge-plan representation and application.
+//!
+//! Contract (identical to `ref.py`'s mm formulation): output layout is
+//! `[protected tokens..., B tokens...]`; every A token merges into
+//! `b[dst[a]]` with weight `sizes[a]` when `gate[a] == 1`, and is dropped
+//! (pruned) when `gate[a] == 0`.
+
+use crate::tensor::Mat;
+
+/// A fully-resolved merge plan over n tokens.
+#[derive(Clone, Debug)]
+pub struct MergePlan {
+    /// indices kept as-is (ascending; CLS first)
+    pub protect: Vec<usize>,
+    /// source tokens (merged away or pruned)
+    pub a: Vec<usize>,
+    /// destination candidate set B
+    pub b: Vec<usize>,
+    /// for each a, position in `b` it merges into
+    pub dst: Vec<usize>,
+    /// 1.0 = merge, 0.0 = prune
+    pub gate: Vec<f32>,
+}
+
+impl MergePlan {
+    /// Output token count.
+    pub fn n_out(&self) -> usize {
+        self.protect.len() + self.b.len()
+    }
+
+    /// Sanity-check invariants (used by tests and debug assertions).
+    pub fn validate(&self, n: usize) -> Result<(), String> {
+        let mut seen = vec![false; n];
+        for &i in self.protect.iter().chain(&self.a).chain(&self.b) {
+            if i >= n {
+                return Err(format!("index {i} out of range {n}"));
+            }
+            if seen[i] {
+                return Err(format!("index {i} appears twice in plan"));
+            }
+            seen[i] = true;
+        }
+        if self.a.len() != self.dst.len() || self.a.len() != self.gate.len() {
+            return Err("a/dst/gate length mismatch".into());
+        }
+        for &d in &self.dst {
+            if d >= self.b.len() && !self.b.is_empty() {
+                return Err(format!("dst {d} out of B range {}", self.b.len()));
+            }
+        }
+        Ok(())
+    }
+}
+
+/// Apply a merge plan: size-weighted averaging with size tracking.
+pub fn apply_plan(x: &Mat, sizes: &[f32], plan: &MergePlan) -> (Mat, Vec<f32>) {
+    debug_assert!(plan.validate(x.rows).is_ok(), "{:?}", plan.validate(x.rows));
+    let h = x.cols;
+    let n_out = plan.n_out();
+    let mut out = Mat::zeros(n_out, h);
+    let mut out_sizes = vec![0f32; n_out];
+
+    // protected tokens pass through unchanged
+    for (oi, &si) in plan.protect.iter().enumerate() {
+        out.row_mut(oi).copy_from_slice(x.row(si));
+        out_sizes[oi] = sizes[si];
+    }
+    let off = plan.protect.len();
+    // B receives its own mass
+    for (bi, &si) in plan.b.iter().enumerate() {
+        let m = sizes[si];
+        let r = out.row_mut(off + bi);
+        let src = x.row(si);
+        for k in 0..h {
+            r[k] = src[k] * m;
+        }
+        out_sizes[off + bi] = m;
+    }
+    // A contributes gated mass to its destination
+    for (ai, &si) in plan.a.iter().enumerate() {
+        let g = plan.gate[ai];
+        if g == 0.0 {
+            continue;
+        }
+        let m = sizes[si] * g;
+        let d = off + plan.dst[ai];
+        let src = x.row(si);
+        // split borrows: copy row then add
+        for k in 0..h {
+            out.data[d * h + k] += src[k] * m;
+        }
+        out_sizes[d] += m;
+    }
+    // normalize merged rows back to averages
+    for bi in 0..plan.b.len() {
+        let m = out_sizes[off + bi].max(1e-9);
+        let r = out.row_mut(off + bi);
+        for v in r.iter_mut() {
+            *v /= m;
+        }
+    }
+    (out, out_sizes)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn identity_plan_passthrough() {
+        let x = Mat::from_fn(4, 2, |i, j| (i * 2 + j) as f32);
+        let plan = MergePlan {
+            protect: vec![0, 1, 2, 3],
+            a: vec![],
+            b: vec![],
+            dst: vec![],
+            gate: vec![],
+        };
+        let (out, sizes) = apply_plan(&x, &[1.0; 4], &plan);
+        assert_eq!(out, x);
+        assert_eq!(sizes, vec![1.0; 4]);
+    }
+
+    #[test]
+    fn two_token_merge_is_weighted_average() {
+        let x = Mat::from_vec(3, 1, vec![0.0, 2.0, 10.0]);
+        let plan = MergePlan {
+            protect: vec![0],
+            a: vec![2],
+            b: vec![1],
+            dst: vec![0],
+            gate: vec![1.0],
+        };
+        let (out, sizes) = apply_plan(&x, &[1.0, 3.0, 1.0], &plan);
+        // merged = (2*3 + 10*1) / 4 = 4
+        assert_eq!(out.get(1, 0), 4.0);
+        assert_eq!(sizes, vec![1.0, 4.0]);
+    }
+
+    #[test]
+    fn pruned_token_vanishes() {
+        let x = Mat::from_vec(3, 1, vec![0.0, 2.0, 10.0]);
+        let plan = MergePlan {
+            protect: vec![0],
+            a: vec![2],
+            b: vec![1],
+            dst: vec![0],
+            gate: vec![0.0],
+        };
+        let (out, sizes) = apply_plan(&x, &[1.0, 3.0, 1.0], &plan);
+        assert_eq!(out.get(1, 0), 2.0);
+        assert_eq!(sizes, vec![1.0, 3.0]);
+    }
+
+    #[test]
+    fn validate_catches_duplicates() {
+        let plan = MergePlan {
+            protect: vec![0, 1],
+            a: vec![1],
+            b: vec![2],
+            dst: vec![0],
+            gate: vec![1.0],
+        };
+        assert!(plan.validate(3).is_err());
+    }
+}

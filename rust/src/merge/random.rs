@@ -1,0 +1,49 @@
+//! Random pruning baseline.
+
+use super::plan::MergePlan;
+use crate::data::Rng;
+
+/// Drop k random non-protected tokens (gate 0 on an empty B = pure prune).
+pub fn random_plan(n: usize, k: usize, protect_first: usize, rng: &mut Rng)
+    -> MergePlan {
+    // Fisher-Yates permutation of the candidate indices
+    let mut perm: Vec<usize> = (protect_first..n).collect();
+    for i in (1..perm.len()).rev() {
+        let j = rng.next_below((i + 1) as u64) as usize;
+        perm.swap(i, j);
+    }
+    let a: Vec<usize> = perm[..k].to_vec();
+    let mut protect: Vec<usize> = (0..protect_first).collect();
+    protect.extend_from_slice(&perm[k..]);
+    protect.sort_unstable();
+    MergePlan { protect, a, b: vec![], dst: vec![0; k], gate: vec![0.0; k] }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::merge::plan::apply_plan;
+    use crate::tensor::Mat;
+
+    #[test]
+    fn drops_exactly_k() {
+        let mut rng = Rng::new(8);
+        let plan = random_plan(20, 6, 1, &mut rng);
+        plan.validate(20).unwrap();
+        assert_eq!(plan.n_out(), 14);
+        assert!(plan.protect.contains(&0));
+        let x = Mat::from_fn(20, 3, |i, j| (i * 3 + j) as f32);
+        let (out, sizes) = apply_plan(&x, &vec![1.0; 20], &plan);
+        assert_eq!(out.rows, 14);
+        assert_eq!(sizes.len(), 14);
+    }
+
+    #[test]
+    fn different_seeds_different_drops() {
+        let mut r1 = Rng::new(1);
+        let mut r2 = Rng::new(2);
+        let p1 = random_plan(30, 8, 1, &mut r1);
+        let p2 = random_plan(30, 8, 1, &mut r2);
+        assert_ne!(p1.a, p2.a);
+    }
+}

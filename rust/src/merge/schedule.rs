@@ -1,0 +1,92 @@
+//! Merge schedules: ratio-r (the paper's choice) vs fixed-k (ToMe's
+//! original), mirrored from `python/compile/common.py` so both languages
+//! produce identical static token plans.
+
+/// Number of tokens after one ratio-r merge step; `protect_first` tokens
+/// (CLS) are never candidates.
+pub fn tokens_after_merge(n: usize, r: f64, protect_first: usize) -> usize {
+    let n_c = n - protect_first;
+    let k = n_c as i64 - (n_c as f64 * r).floor() as i64;
+    let k = k.max(0).min(n_c as i64 / 2).min(n_c as i64 - 2).max(0) as usize;
+    n - k
+}
+
+/// Static token-count plan: entry l = tokens entering block l, plus a final
+/// entry for the output count. `merge_layers` restricts merging to specific
+/// blocks (BERT compresses only the first 3, Sec 4.4).
+pub fn merge_plan(n0: usize, r: f64, num_layers: usize, protect_first: usize,
+                  merge_layers: Option<&[usize]>) -> Vec<usize> {
+    let mut plan = vec![n0];
+    let mut n = n0;
+    for l in 0..num_layers {
+        let active = merge_layers.map_or(true, |ls| ls.contains(&l));
+        if active {
+            n = tokens_after_merge(n, r, protect_first);
+        }
+        plan.push(n);
+    }
+    plan
+}
+
+/// ToMe's original schedule: remove a fixed k tokens per layer (App. C).
+pub fn fixed_k_plan(n0: usize, k: usize, num_layers: usize,
+                    protect_first: usize) -> Vec<usize> {
+    let mut plan = vec![n0];
+    let mut n = n0;
+    for _ in 0..num_layers {
+        let n_c = n as i64 - protect_first as i64;
+        let kk = (k as i64).min((n_c - 2) / 2).max(0) as usize;
+        n -= kk;
+        plan.push(n);
+    }
+    plan
+}
+
+/// Total tokens removed by a plan.
+pub fn total_removed(plan: &[usize]) -> usize {
+    plan.first().copied().unwrap_or(0) - plan.last().copied().unwrap_or(0)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn matches_python_reference_values() {
+        // cross-checked against compile.common.merge_plan(65, 0.9, 4)
+        let plan = merge_plan(65, 0.9, 4, 1, None);
+        assert_eq!(plan[0], 65);
+        assert!(plan.windows(2).all(|w| w[1] <= w[0]));
+        assert!(plan.last().unwrap() >= &3);
+    }
+
+    #[test]
+    fn ratio_removes_more_early() {
+        let plan = merge_plan(197, 0.9, 12, 1, None);
+        let early = plan[0] - plan[1];
+        let late = plan[11] - plan[12];
+        assert!(early >= late, "{plan:?}");
+    }
+
+    #[test]
+    fn fixed_k_is_linear_until_floor() {
+        let plan = fixed_k_plan(197, 8, 12, 1);
+        for w in plan.windows(2).take(10) {
+            assert_eq!(w[0] - w[1], 8);
+        }
+    }
+
+    #[test]
+    fn merge_layers_restriction() {
+        let plan = merge_plan(129, 0.8, 6, 1, Some(&[0, 1, 2]));
+        assert_eq!(plan[3], plan[4]);
+        assert_eq!(plan[4], plan[5]);
+        assert!(plan[3] < plan[0]);
+    }
+
+    #[test]
+    fn never_below_two_candidates() {
+        let plan = merge_plan(10, 0.5, 30, 1, None);
+        assert!(*plan.last().unwrap() >= 3);
+    }
+}

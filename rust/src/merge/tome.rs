@@ -1,0 +1,95 @@
+//! ToMe parity-split BSM (Bolya et al. 2023) and ToFu (prune threshold).
+
+use super::plan::MergePlan;
+use crate::tensor::{argsort_desc, normalize_rows, Mat};
+
+/// ToMe plan: candidates split by index parity; the k most-similar A tokens
+/// merge into their best B match.  With `prune_threshold`, low-similarity
+/// pairs prune instead of merging (ToFu).
+pub fn tome_plan(kf: &Mat, k: usize, protect_first: usize,
+                 prune_threshold: Option<f32>) -> MergePlan {
+    let n = kf.rows;
+    let cand: Vec<usize> = (protect_first..n).collect();
+    let a_all: Vec<usize> = cand.iter().step_by(2).copied().collect();
+    let b: Vec<usize> = cand.iter().skip(1).step_by(2).copied().collect();
+    assert!(k <= a_all.len(), "k={k} exceeds |A|={}", a_all.len());
+
+    let kn = normalize_rows(kf);
+    let mut best = vec![f32::NEG_INFINITY; a_all.len()];
+    let mut dst_all = vec![0usize; a_all.len()];
+    for (ai, &aidx) in a_all.iter().enumerate() {
+        let ra = kn.row(aidx);
+        for (bi, &bidx) in b.iter().enumerate() {
+            let rb = kn.row(bidx);
+            let mut dot = 0f32;
+            for c in 0..kn.cols {
+                dot += ra[c] * rb[c];
+            }
+            if dot > best[ai] {
+                best[ai] = dot;
+                dst_all[ai] = bi;
+            }
+        }
+    }
+    let pair_rank = argsort_desc(&best);
+    let mut a = Vec::with_capacity(k);
+    let mut dst = Vec::with_capacity(k);
+    let mut gate = Vec::with_capacity(k);
+    for &p in pair_rank.iter().take(k) {
+        a.push(a_all[p]);
+        dst.push(dst_all[p]);
+        gate.push(match prune_threshold {
+            Some(t) if best[p] < t => 0.0,
+            _ => 1.0,
+        });
+    }
+    let mut protect: Vec<usize> = (0..protect_first).collect();
+    for &p in pair_rank.iter().skip(k) {
+        protect.push(a_all[p]);
+    }
+    protect.sort_unstable();
+    MergePlan { protect, a, b, dst, gate }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::Rng;
+    use crate::merge::plan::apply_plan;
+
+    #[test]
+    fn parity_split_respected() {
+        let mut rng = Rng::new(5);
+        let kf = Mat::from_fn(21, 8, |_, _| (rng.next_f64() * 2.0 - 1.0) as f32);
+        let plan = tome_plan(&kf, 5, 1, None);
+        plan.validate(21).unwrap();
+        // A indices are odd candidate slots (1,3,5,...), B even (2,4,6,...)
+        for &i in &plan.a {
+            assert_eq!((i - 1) % 2, 0, "A index {i} not on even candidate slot");
+        }
+        for &i in &plan.b {
+            assert_eq!((i - 1) % 2, 1, "B index {i} not on odd candidate slot");
+        }
+        assert_eq!(plan.n_out(), 16);
+    }
+
+    #[test]
+    fn tofu_prunes_dissimilar() {
+        // two orthogonal groups: parity split forces cross-group pairs with
+        // low similarity -> ToFu should gate them to prune.
+        // two orthogonal groups: parity split forces cross-group pairs
+        let kf = Mat::from_fn(9, 2, |i, j| {
+            if i == 0 { 0.5 }
+            else if i % 2 == 1 { if j == 0 { 1.0 } else { 0.0 } }
+            else if j == 1 { 1.0 } else { 0.0 }
+        });
+        let _ = kf;
+        let plan = tome_plan(&kf, 2, 1, Some(0.9));
+        let total_gate: f32 = plan.gate.iter().sum();
+        assert!(total_gate < 2.0, "expected some prunes, gates {:?}", plan.gate);
+        let (out, sizes) = apply_plan(&kf, &vec![1.0; 9], &plan);
+        assert_eq!(out.rows, 7);
+        // pruned mass lost
+        assert!(sizes.iter().sum::<f32>() <= 9.0);
+    }
+}

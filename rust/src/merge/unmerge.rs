@@ -1,0 +1,190 @@
+//! Unmerge: the paper's "Limitations and Future Works" extension — a
+//! decoder-side mechanism that expands a merged token set back to the full
+//! resolution (needed for generative/segmentation heads).
+//!
+//! Two pieces:
+//! - [`unmerge`] inverts one [`MergePlan`]: every original token receives
+//!   the value of the merged token it was absorbed into (broadcast
+//!   semantics, the standard ToMe-SD choice).
+//! - [`MergeTracker`] composes plans across layers, maintaining the map
+//!   original-token -> final-token so the full stack can be unmerged in
+//!   one gather (and so merged regions can be *visualized*, Fig. 1/11).
+
+use super::plan::MergePlan;
+use crate::tensor::Mat;
+
+/// Expand merged tokens (n_out, h) back to (n_in, h) under `plan`:
+/// protected tokens copy their row; merged A tokens copy their
+/// destination's row; pruned A tokens (gate 0) receive zeros.
+pub fn unmerge(merged: &Mat, plan: &MergePlan, n_in: usize) -> Mat {
+    let h = merged.cols;
+    let mut out = Mat::zeros(n_in, h);
+    for (oi, &src) in plan.protect.iter().enumerate() {
+        out.row_mut(src).copy_from_slice(merged.row(oi));
+    }
+    let off = plan.protect.len();
+    for (bi, &src) in plan.b.iter().enumerate() {
+        out.row_mut(src).copy_from_slice(merged.row(off + bi));
+    }
+    for (ai, &src) in plan.a.iter().enumerate() {
+        if plan.gate[ai] == 0.0 {
+            continue; // pruned: stays zero
+        }
+        let from = off + plan.dst[ai];
+        let row: Vec<f32> = merged.row(from).to_vec();
+        out.row_mut(src).copy_from_slice(&row);
+    }
+    out
+}
+
+/// Tracks the composition of merge plans across encoder layers.
+#[derive(Clone, Debug, Default)]
+pub struct MergeTracker {
+    /// for each original token, its current row index (None = pruned)
+    map: Vec<Option<usize>>,
+}
+
+impl MergeTracker {
+    /// Start tracking `n` tokens.
+    pub fn new(n: usize) -> Self {
+        MergeTracker { map: (0..n).map(Some).collect() }
+    }
+
+    /// Record one merge plan applied to the *current* token set.
+    pub fn push(&mut self, plan: &MergePlan) {
+        // current index -> next index
+        let n_cur = plan.protect.len() + plan.a.len() + plan.b.len();
+        let mut next = vec![None; n_cur];
+        for (oi, &src) in plan.protect.iter().enumerate() {
+            next[src] = Some(oi);
+        }
+        let off = plan.protect.len();
+        for (bi, &src) in plan.b.iter().enumerate() {
+            next[src] = Some(off + bi);
+        }
+        for (ai, &src) in plan.a.iter().enumerate() {
+            next[src] = if plan.gate[ai] == 0.0 {
+                None
+            } else {
+                Some(off + plan.dst[ai])
+            };
+        }
+        for slot in self.map.iter_mut() {
+            if let Some(cur) = *slot {
+                *slot = next[cur];
+            }
+        }
+    }
+
+    /// Final row index of each original token (None = pruned away).
+    pub fn assignment(&self) -> &[Option<usize>] {
+        &self.map
+    }
+
+    /// Unmerge the final representation back to original resolution in one
+    /// gather; pruned tokens receive zeros.
+    pub fn expand(&self, final_tokens: &Mat) -> Mat {
+        let mut out = Mat::zeros(self.map.len(), final_tokens.cols);
+        for (orig, slot) in self.map.iter().enumerate() {
+            if let Some(row) = slot {
+                out.row_mut(orig).copy_from_slice(final_tokens.row(*row));
+            }
+        }
+        out
+    }
+
+    /// Group id per original token (final row index as group label),
+    /// usable directly as a [`crate::graph::Partition`] assignment after
+    /// compaction — and for ASCII visualization of merged regions.
+    pub fn groups(&self) -> Vec<usize> {
+        let n_final = self
+            .map
+            .iter()
+            .filter_map(|s| *s)
+            .max()
+            .map_or(0, |m| m + 1);
+        self.map
+            .iter()
+            .map(|s| s.unwrap_or(n_final)) // pruned tokens share a sink id
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::Rng;
+    use crate::merge::energy::energy_scores;
+    use crate::merge::pitome::{ordered_bsm_plan, Split};
+    use crate::merge::plan::apply_plan;
+
+    fn rand_mat(n: usize, h: usize, seed: u64) -> Mat {
+        let mut rng = Rng::new(seed);
+        Mat::from_fn(n, h, |_, _| (rng.next_f64() * 2.0 - 1.0) as f32)
+    }
+
+    #[test]
+    fn unmerge_restores_protected_rows_exactly() {
+        let x = rand_mat(15, 4, 1);
+        let e = energy_scores(&x, 0.4);
+        let mut rng = Rng::new(2);
+        let plan = ordered_bsm_plan(&x, &e, 4, 1, Split::Alternate, true, &mut rng);
+        let (merged, _) = apply_plan(&x, &vec![1.0; 15], &plan);
+        let restored = unmerge(&merged, &plan, 15);
+        for &p in &plan.protect {
+            assert_eq!(restored.row(p), x.row(p), "protected row {p} changed");
+        }
+        // merged sources share their destination's value
+        for (ai, &a) in plan.a.iter().enumerate() {
+            let b = plan.b[plan.dst[ai]];
+            assert_eq!(restored.row(a), restored.row(b));
+        }
+    }
+
+    #[test]
+    fn tracker_composes_two_layers() {
+        let x0 = rand_mat(15, 4, 3);
+        let mut tracker = MergeTracker::new(15);
+        let mut rng = Rng::new(4);
+        let e0 = energy_scores(&x0, 0.4);
+        let p0 = ordered_bsm_plan(&x0, &e0, 3, 1, Split::Alternate, true, &mut rng);
+        let (x1, s1) = apply_plan(&x0, &vec![1.0; 15], &p0);
+        tracker.push(&p0);
+        let e1 = energy_scores(&x1, 0.3);
+        let p1 = ordered_bsm_plan(&x1, &e1, 2, 1, Split::Alternate, true, &mut rng);
+        let (x2, _) = apply_plan(&x1, &s1, &p1);
+        tracker.push(&p1);
+
+        // expand maps every original token to a final row
+        let full = tracker.expand(&x2);
+        assert_eq!(full.rows, 15);
+        // every original token's final value equals x2[assignment]
+        for (orig, slot) in tracker.assignment().iter().enumerate() {
+            let row = slot.expect("no pruning in this plan");
+            assert_eq!(full.row(orig), x2.row(row));
+        }
+        // group count equals final token count
+        let groups = tracker.groups();
+        let distinct: std::collections::HashSet<_> = groups.iter().collect();
+        assert_eq!(distinct.len(), x2.rows);
+    }
+
+    #[test]
+    fn tracker_handles_pruning() {
+        // tofu-like plan with a pruned token
+        let plan = MergePlan {
+            protect: vec![0, 2],
+            a: vec![3, 4],
+            b: vec![1],
+            dst: vec![0, 0],
+            gate: vec![1.0, 0.0],
+        };
+        let mut t = MergeTracker::new(5);
+        t.push(&plan);
+        assert_eq!(t.assignment()[3], Some(2)); // merged into b slot
+        assert_eq!(t.assignment()[4], None);    // pruned
+        let final_tokens = Mat::from_fn(3, 2, |i, _| i as f32);
+        let full = t.expand(&final_tokens);
+        assert_eq!(full.row(4), &[0.0, 0.0]);
+    }
+}

@@ -1,0 +1,208 @@
+//! CPU reference transformer encoder with in-block token merging.
+//!
+//! Numerically mirrors `python/compile/model.py::encoder_forward`; the
+//! parity is asserted against `artifacts/testvectors.json` (trained ViT
+//! logits) and used for the r-sweep experiments where compiling one HLO
+//! artifact per (mode, r) point would be wasteful.
+
+use crate::data::Rng;
+use crate::error::Result;
+use crate::merge::energy::layer_margin;
+use crate::merge::{merge_step, MergeCtx, MergeMode};
+use crate::tensor::{add_inplace, dense, gelu_inplace, layernorm, matmul,
+                    softmax_rows, Mat};
+
+use super::params::ParamStore;
+
+/// Encoder hyperparameters (subset shared by ViT and text models).
+#[derive(Clone, Debug)]
+pub struct EncoderCfg {
+    /// parameter-name prefix, e.g. "vit."
+    pub prefix: String,
+    /// embedding dim
+    pub dim: usize,
+    /// depth
+    pub depth: usize,
+    /// heads
+    pub heads: usize,
+    /// merge mode
+    pub mode: MergeMode,
+    /// static token plan (len depth+1)
+    pub plan: Vec<usize>,
+    /// proportional attention
+    pub prop_attn: bool,
+}
+
+/// Multi-head proportional attention for one sample.
+///
+/// q, kf, v: (n, dim) pre-split projections; sizes: len n.
+/// Returns (attn output (n, dim), mean CLS attention over heads (n,)).
+pub fn attention(q: &Mat, kf: &Mat, v: &Mat, sizes: &[f32], heads: usize,
+                 prop_attn: bool) -> (Mat, Vec<f32>) {
+    let n = q.rows;
+    let dim = q.cols;
+    let d = dim / heads;
+    let scale = 1.0 / (d as f32).sqrt();
+    let log_m: Vec<f32> = if prop_attn {
+        sizes.iter().map(|&s| s.max(1e-9).ln()).collect()
+    } else {
+        vec![0.0; n]
+    };
+    let mut out = Mat::zeros(n, dim);
+    let mut attn_cls = vec![0f32; n];
+    // per-head blocked views into the (n, dim) projections
+    for hh in 0..heads {
+        let col0 = hh * d;
+        // scores = qh @ kh^T * scale + log m
+        let mut s = Mat::zeros(n, n);
+        for i in 0..n {
+            let qi = &q.row(i)[col0..col0 + d];
+            for j in 0..n {
+                let kj = &kf.row(j)[col0..col0 + d];
+                let mut dot = 0f32;
+                for c in 0..d {
+                    dot += qi[c] * kj[c];
+                }
+                s.set(i, j, dot * scale + log_m[j]);
+            }
+        }
+        // CLS attention uses the *unbiased* logits, matching model.py
+        {
+            let mut row0 = vec![0f32; n];
+            for j in 0..n {
+                row0[j] = s.get(0, j) - log_m[j];
+            }
+            let mx = row0.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+            let mut sum = 0f32;
+            for vj in row0.iter_mut() {
+                *vj = (*vj - mx).exp();
+                sum += *vj;
+            }
+            for (a, vj) in attn_cls.iter_mut().zip(&row0) {
+                *a += vj / sum / heads as f32;
+            }
+        }
+        softmax_rows(&mut s);
+        // out_h = p @ vh
+        for i in 0..n {
+            let orow = out.row_mut(i);
+            for j in 0..n {
+                let p = s.get(i, j);
+                if p == 0.0 {
+                    continue;
+                }
+                let vj = &v.row(j)[col0..col0 + d];
+                for c in 0..d {
+                    orow[col0 + c] += p * vj[c];
+                }
+            }
+        }
+    }
+    (out, attn_cls)
+}
+
+/// Run the encoder on one sample `x` (plan[0], dim). Returns final tokens
+/// (plan[depth], dim) after the output LayerNorm.
+pub fn encoder_forward(ps: &ParamStore, cfg: &EncoderCfg, x: Mat,
+                       rng: &mut Rng) -> Result<Mat> {
+    let mut x = x;
+    let mut sizes = vec![1f32; x.rows];
+    for l in 0..cfg.depth {
+        let b = format!("{}blk{}.", cfg.prefix, l);
+        let n_in = cfg.plan[l];
+        let n_out = cfg.plan[l + 1];
+        debug_assert_eq!(x.rows, n_in, "plan mismatch at layer {l}");
+
+        let h = layernorm(&x, ps.vec1(&format!("{b}ln1.w"))?,
+                          ps.vec1(&format!("{b}ln1.b"))?, 1e-5);
+        let q = matmul(&h, &ps.mat2(&format!("{b}wq"))?);
+        let kf = matmul(&h, &ps.mat2(&format!("{b}wk"))?);
+        let v = matmul(&h, &ps.mat2(&format!("{b}wv"))?);
+
+        let attn_sizes: Vec<f32> = if cfg.prop_attn {
+            sizes.clone()
+        } else {
+            vec![1.0; x.rows]
+        };
+        let (o, attn_cls) = attention(&q, &kf, &v, &attn_sizes, cfg.heads,
+                                      cfg.prop_attn);
+        let proj = dense(&o, &ps.mat2(&format!("{b}wo"))?,
+                         Some(ps.vec1(&format!("{b}bo"))?));
+        add_inplace(&mut x, &proj);
+
+        // merge between attention and MLP (Eq. 2)
+        let k = n_in - n_out;
+        if k > 0 {
+            let margin = layer_margin(l, cfg.depth);
+            let ctx = MergeCtx {
+                x: &x,
+                kf: &kf,
+                sizes: &sizes,
+                attn_cls: &attn_cls,
+                margin,
+                k,
+                protect_first: 1,
+            };
+            let (xm, sm) = merge_step(cfg.mode, &ctx, rng);
+            x = xm;
+            sizes = sm;
+        }
+
+        let h2 = layernorm(&x, ps.vec1(&format!("{b}ln2.w"))?,
+                           ps.vec1(&format!("{b}ln2.b"))?, 1e-5);
+        let mut m = dense(&h2, &ps.mat2(&format!("{b}mlp1"))?,
+                          Some(ps.vec1(&format!("{b}mlp1b"))?));
+        gelu_inplace(&mut m);
+        let m2 = dense(&m, &ps.mat2(&format!("{b}mlp2"))?,
+                       Some(ps.vec1(&format!("{b}mlp2b"))?));
+        add_inplace(&mut x, &m2);
+    }
+    Ok(layernorm(&x,
+                 ps.vec1(&format!("{}lnf.w", cfg.prefix))?,
+                 ps.vec1(&format!("{}lnf.b", cfg.prefix))?, 1e-5))
+}
+
+/// Plain (non-proportional) attention convenience used in tests.
+pub fn plain_attention(q: &Mat, kf: &Mat, v: &Mat, heads: usize) -> Mat {
+    let ones = vec![1.0; q.rows];
+    attention(q, kf, v, &ones, heads, true).0
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn attention_rows_are_convex_combinations() {
+        let mut rng = Rng::new(2);
+        let n = 7;
+        let q = Mat::from_fn(n, 8, |_, _| (rng.next_f64() * 2.0 - 1.0) as f32);
+        let kf = Mat::from_fn(n, 8, |_, _| (rng.next_f64() * 2.0 - 1.0) as f32);
+        let v = Mat::from_fn(n, 8, |_, _| (rng.next_f64() * 2.0 - 1.0) as f32);
+        let (o, attn_cls) = attention(&q, &kf, &v, &vec![1.0; n], 2, true);
+        assert_eq!(o.rows, n);
+        let s: f32 = attn_cls.iter().sum();
+        assert!((s - 1.0).abs() < 1e-4, "cls attn sums to {s}");
+        // each output coordinate within v's column bounds per head block
+        for c in 0..8 {
+            let cmax = (0..n).map(|i| v.get(i, c)).fold(f32::MIN, f32::max);
+            let cmin = (0..n).map(|i| v.get(i, c)).fold(f32::MAX, f32::min);
+            for i in 0..n {
+                assert!(o.get(i, c) <= cmax + 1e-5);
+                assert!(o.get(i, c) >= cmin - 1e-5);
+            }
+        }
+    }
+
+    #[test]
+    fn size_bias_shifts_attention() {
+        let n = 5;
+        let q = Mat::from_fn(n, 4, |_, _| 1.0);
+        let kf = Mat::zeros(n, 4); // uniform logits
+        let v = Mat::from_fn(n, 4, |i, j| if i == 3 && j == 0 { 10.0 } else { 0.0 });
+        let mut sizes = vec![1.0; n];
+        sizes[3] = 1e6;
+        let (o, _) = attention(&q, &kf, &v, &sizes, 1, true);
+        assert!(o.get(0, 0) > 9.0, "huge token dominates: {}", o.get(0, 0));
+    }
+}

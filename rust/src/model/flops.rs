@@ -1,0 +1,98 @@
+//! Analytic FLOPs cost model for a transformer under a merge schedule —
+//! reproduces the paper's FLOPs columns and the x-axes of Figs. 3/6
+//! (complexity analysis of App. B.3).
+
+use crate::config::ViTConfig;
+
+/// FLOPs of one transformer block on `n` tokens (fwd pass, mults+adds).
+///
+/// qkv+proj: 4 * 2 n d^2; attention: 2 * 2 n^2 d; mlp: 2 * 2 n d d_mlp.
+pub fn block_flops(n: usize, dim: usize, mlp_hidden: usize) -> f64 {
+    let n = n as f64;
+    let d = dim as f64;
+    let dm = mlp_hidden as f64;
+    8.0 * n * d * d + 4.0 * n * n * d + 4.0 * n * d * dm
+}
+
+/// FLOPs of one PiToMe/BSM merge step on `n` tokens (Gram + reduction;
+/// App. B.2: O(n^2 h) dominated).
+pub fn merge_flops(n: usize, dim: usize) -> f64 {
+    let n = n as f64;
+    let d = dim as f64;
+    2.0 * n * n * d + 4.0 * n * n
+}
+
+/// Total fwd FLOPs of an encoder following a static token plan.
+pub fn encoder_flops(plan: &[usize], dim: usize, mlp_hidden: usize,
+                     with_merge: bool) -> f64 {
+    let depth = plan.len() - 1;
+    let mut total = 0.0;
+    for l in 0..depth {
+        total += block_flops(plan[l], dim, mlp_hidden);
+        if with_merge && plan[l + 1] < plan[l] {
+            total += merge_flops(plan[l], dim);
+        }
+    }
+    total
+}
+
+/// GFLOPs for a ViT config (incl. patch embed + head, which are small).
+pub fn vit_gflops(cfg: &ViTConfig) -> f64 {
+    let plan = cfg.plan();
+    let enc = encoder_flops(&plan, cfg.dim, cfg.mlp_hidden(),
+                            cfg.mode() != crate::merge::MergeMode::None);
+    let embed = 2.0 * cfg.num_patches() as f64 * cfg.patch_dim() as f64
+        * cfg.dim as f64;
+    let head = 2.0 * cfg.dim as f64 * cfg.num_classes as f64;
+    (enc + embed + head) / 1e9
+}
+
+/// FLOPs ratio vs the uncompressed model (paper reports e.g. "x2.1").
+pub fn flops_speedup(cfg: &ViTConfig) -> f64 {
+    let mut base = cfg.clone();
+    base.merge_mode = "none".into();
+    base.merge_r = 1.0;
+    vit_gflops(&base) / vit_gflops(cfg)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn merging_reduces_flops() {
+        let base = ViTConfig::preset("deit-s").unwrap();
+        let mut merged = base.clone();
+        merged.merge_mode = "pitome".into();
+        merged.merge_r = 0.9;
+        assert!(vit_gflops(&merged) < vit_gflops(&base));
+        assert!(flops_speedup(&merged) > 1.2);
+    }
+
+    #[test]
+    fn deit_s_flops_magnitude_matches_paper() {
+        // paper Table 6: ViT-DEIT-S = 4.6 GFLOPs. Our analytic count should
+        // land in the same ballpark (2x tolerance: papers count MACs
+        // differently).
+        let g = vit_gflops(&ViTConfig::preset("deit-s").unwrap());
+        assert!(g > 2.0 && g < 12.0, "deit-s gflops {g}");
+    }
+
+    #[test]
+    fn r_09_speedup_near_paper_ratio() {
+        // paper: r=0.9-ish schedules give ~x1.5-2.1 FLOPs reduction on
+        // 12-layer backbones.
+        let mut c = ViTConfig::preset("deit-s").unwrap();
+        c.merge_mode = "pitome".into();
+        c.merge_r = 0.9;
+        let s = flops_speedup(&c);
+        assert!(s > 1.3 && s < 3.0, "speedup {s}");
+    }
+
+    #[test]
+    fn quadratic_term_dominates_large_n() {
+        let f1 = block_flops(1000, 64, 128);
+        let f2 = block_flops(2000, 64, 128);
+        assert!(f2 / f1 > 3.0); // superlinear
+    }
+}

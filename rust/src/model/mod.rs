@@ -1,0 +1,31 @@
+//! CPU reference models + FLOPs cost model + parameter loading.
+//!
+//! The CPU reference transformer mirrors `python/compile/model.py` exactly
+//! (parity asserted against `artifacts/testvectors.json`); it runs the
+//! r-sweep experiments where compiling one PJRT artifact per (mode, r)
+//! point would be wasteful, while the PJRT runtime serves the fixed
+//! production variants.
+
+pub mod encoder;
+pub mod flops;
+pub mod params;
+pub mod text;
+pub mod vit;
+
+pub use encoder::{attention, encoder_forward, EncoderCfg};
+pub use flops::{block_flops, encoder_flops, flops_speedup, vit_gflops};
+pub use params::{ParamEntry, ParamStore};
+pub use text::{bert_logits, clip_text_embed, embed_tokens, text_features};
+pub use vit::ViTModel;
+
+use std::path::Path;
+
+use crate::error::Result;
+
+/// Load a model's parameter store from `artifacts/params/<name>.{bin,json}`.
+pub fn load_model_params(artifacts: &Path, name: &str) -> Result<ParamStore> {
+    ParamStore::load(
+        &artifacts.join("params").join(format!("{name}.bin")),
+        &artifacts.join("params").join(format!("{name}.json")),
+    )
+}

@@ -1,0 +1,148 @@
+//! Parameter store: loads the flat f32 weight vectors + JSON manifests that
+//! `python/compile/params.py` writes, exposing named tensors to the CPU
+//! reference model and raw flat vectors to the PJRT runtime.
+
+use std::collections::HashMap;
+use std::path::Path;
+
+use crate::error::{Error, Result};
+use crate::tensor::Mat;
+use crate::util::json::{parse as parse_json, Json};
+
+/// One manifest entry.
+#[derive(Clone, Debug)]
+pub struct ParamEntry {
+    /// parameter name (e.g. "vit.blk0.wq")
+    pub name: String,
+    /// tensor shape
+    pub shape: Vec<usize>,
+    /// offset into the flat vector
+    pub offset: usize,
+    /// element count
+    pub size: usize,
+}
+
+/// Named parameter tensors plus the original flat vector.
+pub struct ParamStore {
+    /// the flat f32 vector (fed to PJRT artifacts as-is)
+    pub flat: Vec<f32>,
+    entries: HashMap<String, ParamEntry>,
+}
+
+impl ParamStore {
+    /// Load `<stem>.bin` + `<stem>.json` (as written by `save_params`).
+    pub fn load(bin: &Path, manifest: &Path) -> Result<ParamStore> {
+        let raw = std::fs::read(bin)?;
+        if raw.len() % 4 != 0 {
+            return Err(Error::Artifact(format!(
+                "params bin {} not a multiple of 4 bytes", bin.display())));
+        }
+        let flat: Vec<f32> = raw
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+            .collect();
+        let root = parse_json(&std::fs::read_to_string(manifest)?)?;
+        let total = root.get("total").and_then(Json::usize)
+            .ok_or_else(|| Error::Json("params manifest missing total".into()))?;
+        if total != flat.len() {
+            return Err(Error::Artifact(format!(
+                "manifest total {} != bin length {}", total, flat.len())));
+        }
+        let mut entries = HashMap::new();
+        for v in root.get("entries").and_then(Json::arr)
+            .ok_or_else(|| Error::Json("params manifest missing entries".into()))? {
+            let e = ParamEntry {
+                name: v.get("name").and_then(Json::str)
+                    .ok_or_else(|| Error::Json("entry missing name".into()))?.into(),
+                shape: v.get("shape").and_then(Json::usize_vec)
+                    .ok_or_else(|| Error::Json("entry missing shape".into()))?,
+                offset: v.get("offset").and_then(Json::usize)
+                    .ok_or_else(|| Error::Json("entry missing offset".into()))?,
+                size: v.get("size").and_then(Json::usize)
+                    .ok_or_else(|| Error::Json("entry missing size".into()))?,
+            };
+            entries.insert(e.name.clone(), e);
+        }
+        Ok(ParamStore { flat, entries })
+    }
+
+    /// Build directly from in-memory parts (tests).
+    pub fn from_parts(flat: Vec<f32>, entries: Vec<ParamEntry>) -> ParamStore {
+        let map = entries.into_iter().map(|e| (e.name.clone(), e)).collect();
+        ParamStore { flat, entries: map }
+    }
+
+    fn entry(&self, name: &str) -> Result<&ParamEntry> {
+        self.entries
+            .get(name)
+            .ok_or_else(|| Error::Artifact(format!("missing param {name}")))
+    }
+
+    /// Slice view of a parameter.
+    pub fn slice(&self, name: &str) -> Result<&[f32]> {
+        let e = self.entry(name)?;
+        Ok(&self.flat[e.offset..e.offset + e.size])
+    }
+
+    /// 1-D parameter as a vector slice.
+    pub fn vec1(&self, name: &str) -> Result<&[f32]> {
+        let e = self.entry(name)?;
+        if e.shape.len() != 1 {
+            return Err(Error::Shape(format!(
+                "{name} has shape {:?}, expected 1-D", e.shape)));
+        }
+        self.slice(name)
+    }
+
+    /// 2-D parameter as a Mat copy.
+    pub fn mat2(&self, name: &str) -> Result<Mat> {
+        let e = self.entry(name)?;
+        if e.shape.len() != 2 {
+            return Err(Error::Shape(format!(
+                "{name} has shape {:?}, expected 2-D", e.shape)));
+        }
+        Ok(Mat::from_vec(e.shape[0], e.shape[1],
+                         self.slice(name)?.to_vec()))
+    }
+
+    /// Parameter count.
+    pub fn len(&self) -> usize {
+        self.flat.len()
+    }
+
+    /// True when no parameters are loaded.
+    pub fn is_empty(&self) -> bool {
+        self.flat.is_empty()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn store() -> ParamStore {
+        ParamStore::from_parts(
+            vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0],
+            vec![
+                ParamEntry { name: "w".into(), shape: vec![2, 2], offset: 0, size: 4 },
+                ParamEntry { name: "b".into(), shape: vec![2], offset: 4, size: 2 },
+            ],
+        )
+    }
+
+    #[test]
+    fn mat2_and_vec1() {
+        let s = store();
+        let w = s.mat2("w").unwrap();
+        assert_eq!(w.get(1, 0), 3.0);
+        assert_eq!(s.vec1("b").unwrap(), &[5.0, 6.0]);
+    }
+
+    #[test]
+    fn wrong_rank_errors() {
+        let s = store();
+        assert!(s.mat2("b").is_err());
+        assert!(s.vec1("w").is_err());
+        assert!(s.slice("nope").is_err());
+    }
+}

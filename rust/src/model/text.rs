@@ -1,0 +1,82 @@
+//! CPU reference text encoders: BERT-style classifier, CLIP text tower, and
+//! the VQA head — all sharing [`encoder_forward`].
+
+use crate::config::TextConfig;
+use crate::data::Rng;
+use crate::error::Result;
+use crate::merge::MergeMode;
+use crate::tensor::{dense, Mat};
+
+use super::encoder::{encoder_forward, EncoderCfg};
+use super::params::ParamStore;
+
+/// Token embedding + position for a prefix (e.g. "bert.", "txt.", "q.").
+pub fn embed_tokens(ps: &ParamStore, prefix: &str, tokens: &[i32],
+                    dim: usize) -> Result<Mat> {
+    let table = ps.mat2(&format!("{prefix}tok"))?;
+    let pos = ps.mat2(&format!("{prefix}pos"))?;
+    let n = tokens.len();
+    let mut x = Mat::zeros(n, dim);
+    for (i, &t) in tokens.iter().enumerate() {
+        let r = x.row_mut(i);
+        let e = table.row(t as usize);
+        let p = pos.row(i);
+        for j in 0..dim {
+            r[j] = e[j] + p[j];
+        }
+    }
+    Ok(x)
+}
+
+/// CLS feature from a text encoder with the given plan/mode.
+#[allow(clippy::too_many_arguments)]
+pub fn text_features(ps: &ParamStore, prefix: &str, tokens: &[i32],
+                     dim: usize, depth: usize, heads: usize,
+                     mode: MergeMode, plan: Vec<usize>, rng: &mut Rng)
+                     -> Result<Vec<f32>> {
+    let x = embed_tokens(ps, prefix, tokens, dim)?;
+    let cfg = EncoderCfg {
+        prefix: prefix.into(),
+        dim,
+        depth,
+        heads,
+        mode,
+        plan,
+        prop_attn: true,
+    };
+    let out = encoder_forward(ps, &cfg, x, rng)?;
+    Ok(out.row(0).to_vec())
+}
+
+/// BERT-style classifier logits for one sample.
+pub fn bert_logits(ps: &ParamStore, cfg: &TextConfig, tokens: &[i32],
+                   rng: &mut Rng) -> Result<Vec<f32>> {
+    let f = text_features(ps, "bert.", tokens, cfg.dim, cfg.depth, cfg.heads,
+                          cfg.mode(), cfg.plan(), rng)?;
+    let fm = Mat::from_vec(1, f.len(), f);
+    let lg = dense(&fm, &ps.mat2("bert.head.w")?,
+                   Some(ps.vec1("bert.head.b")?));
+    Ok(lg.data)
+}
+
+/// L2-normalize a feature vector in place.
+pub fn l2_normalize(v: &mut [f32]) {
+    let n: f32 = v.iter().map(|x| x * x).sum::<f32>().sqrt() + 1e-6;
+    for x in v.iter_mut() {
+        *x /= n;
+    }
+}
+
+/// CLIP text embedding for one caption.
+pub fn clip_text_embed(ps: &ParamStore, tokens: &[i32], dim: usize,
+                       depth: usize, heads: usize, embed_dim: usize,
+                       rng: &mut Rng) -> Result<Vec<f32>> {
+    let plan = vec![tokens.len(); depth + 1];
+    let f = text_features(ps, "txt.", tokens, dim, depth, heads,
+                          MergeMode::None, plan, rng)?;
+    let fm = Mat::from_vec(1, f.len(), f);
+    let mut e = dense(&fm, &ps.mat2("proj.txt")?, None).data;
+    debug_assert_eq!(e.len(), embed_dim);
+    l2_normalize(&mut e);
+    Ok(e)
+}

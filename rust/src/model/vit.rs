@@ -1,0 +1,80 @@
+//! CPU reference ViT classifier / feature extractor over [`ParamStore`].
+
+use crate::config::ViTConfig;
+use crate::data::Rng;
+use crate::error::Result;
+use crate::tensor::{dense, Mat};
+
+use super::encoder::{encoder_forward, EncoderCfg};
+use super::params::ParamStore;
+
+/// A loaded ViT model (weights + config).
+pub struct ViTModel<'a> {
+    /// parameter store
+    pub ps: &'a ParamStore,
+    /// config (merge mode / r live here)
+    pub cfg: ViTConfig,
+}
+
+impl<'a> ViTModel<'a> {
+    /// Wrap a parameter store with a config.
+    pub fn new(ps: &'a ParamStore, cfg: ViTConfig) -> Self {
+        ViTModel { ps, cfg }
+    }
+
+    fn encoder_cfg(&self) -> EncoderCfg {
+        EncoderCfg {
+            prefix: "vit.".into(),
+            dim: self.cfg.dim,
+            depth: self.cfg.depth,
+            heads: self.cfg.heads,
+            mode: self.cfg.mode(),
+            plan: self.cfg.plan(),
+            prop_attn: self.cfg.prop_attn,
+        }
+    }
+
+    /// Patch embed + CLS + positional embedding for one sample.
+    pub fn tokens(&self, patches: &Mat) -> Result<Mat> {
+        let emb = dense(patches, &self.ps.mat2("vit.embed.w")?,
+                        Some(self.ps.vec1("vit.embed.b")?));
+        let cls = self.ps.vec1("vit.cls")?;
+        let pos = self.ps.mat2("vit.pos")?;
+        let n = emb.rows + 1;
+        let mut x = Mat::zeros(n, self.cfg.dim);
+        x.row_mut(0).copy_from_slice(cls);
+        for i in 0..emb.rows {
+            x.row_mut(i + 1).copy_from_slice(emb.row(i));
+        }
+        for i in 0..n {
+            let r = x.row_mut(i);
+            let p = pos.row(i);
+            for j in 0..r.len() {
+                r[j] += p[j];
+            }
+        }
+        Ok(x)
+    }
+
+    /// CLS feature for one sample (patches: (n_patches, patch_dim)).
+    pub fn features(&self, patches: &Mat, rng: &mut Rng) -> Result<Vec<f32>> {
+        let x = self.tokens(patches)?;
+        let out = encoder_forward(self.ps, &self.encoder_cfg(), x, rng)?;
+        Ok(out.row(0).to_vec())
+    }
+
+    /// Class logits for one sample.
+    pub fn logits(&self, patches: &Mat, rng: &mut Rng) -> Result<Vec<f32>> {
+        let f = self.features(patches, rng)?;
+        let fm = Mat::from_vec(1, f.len(), f);
+        let lg = dense(&fm, &self.ps.mat2("vit.head.w")?,
+                       Some(self.ps.vec1("vit.head.b")?));
+        Ok(lg.data)
+    }
+
+    /// Predicted class for one sample.
+    pub fn predict(&self, patches: &Mat, rng: &mut Rng) -> Result<usize> {
+        let lg = self.logits(patches, rng)?;
+        Ok(crate::tensor::argmax(&lg))
+    }
+}

@@ -1,0 +1,180 @@
+//! Artifact registry: parses `artifacts/manifest.json` (written by
+//! `python/compile/aot.py`) and describes every AOT-compiled model variant.
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+use crate::error::{Error, Result};
+use crate::util::json::{parse as parse_json, Json};
+
+/// Tensor I/O description of an artifact.
+#[derive(Clone, Debug)]
+pub struct IoSpec {
+    /// dimensions
+    pub shape: Vec<usize>,
+    /// dtype string ("float32" / "int32")
+    pub dtype: String,
+}
+
+impl IoSpec {
+    /// Element count.
+    pub fn numel(&self) -> usize {
+        self.shape.iter().product()
+    }
+
+    fn from_json(v: &Json) -> Result<IoSpec> {
+        Ok(IoSpec {
+            shape: v.get("shape").and_then(Json::usize_vec)
+                .ok_or_else(|| Error::Json("io spec missing shape".into()))?,
+            dtype: v.get("dtype").and_then(Json::str)
+                .unwrap_or("float32").to_string(),
+        })
+    }
+}
+
+/// Metadata attached by aot.py.
+#[derive(Clone, Debug)]
+pub struct ArtifactMeta {
+    /// model family ("vit", "clip_img", ...)
+    pub model: String,
+    /// merge mode name
+    pub mode: String,
+    /// keep ratio
+    pub r: f64,
+    /// compiled batch size
+    pub batch: usize,
+    /// params file under artifacts/params/ (forward artifacts only)
+    pub params: Option<String>,
+    /// static token plan (when applicable)
+    pub plan: Option<Vec<usize>>,
+    /// flat parameter vector length (train artifacts)
+    pub param_size: Option<usize>,
+}
+
+/// One artifact entry.
+#[derive(Clone, Debug)]
+pub struct ArtifactEntry {
+    /// HLO text file relative to the artifacts dir
+    pub file: String,
+    /// input tensor specs (in call order)
+    pub inputs: Vec<IoSpec>,
+    /// output tensor specs (tuple elements in order)
+    pub outputs: Vec<IoSpec>,
+    /// metadata
+    pub meta: ArtifactMeta,
+}
+
+impl ArtifactEntry {
+    fn from_json(v: &Json) -> Result<ArtifactEntry> {
+        let io = |key: &str| -> Result<Vec<IoSpec>> {
+            v.get(key)
+                .and_then(Json::arr)
+                .ok_or_else(|| Error::Json(format!("missing {key}")))?
+                .iter()
+                .map(IoSpec::from_json)
+                .collect()
+        };
+        let meta = v.get("meta").ok_or_else(|| Error::Json("missing meta".into()))?;
+        Ok(ArtifactEntry {
+            file: v.get("file").and_then(Json::str)
+                .ok_or_else(|| Error::Json("missing file".into()))?.into(),
+            inputs: io("inputs")?,
+            outputs: io("outputs")?,
+            meta: ArtifactMeta {
+                model: meta.get("model").and_then(Json::str).unwrap_or("?").into(),
+                mode: meta.get("mode").and_then(Json::str).unwrap_or("none").into(),
+                r: meta.get("r").and_then(Json::num).unwrap_or(1.0),
+                batch: meta.get("batch").and_then(Json::usize).unwrap_or(1),
+                params: meta.get("params").and_then(Json::str).map(String::from),
+                plan: meta.get("plan").and_then(Json::usize_vec),
+                param_size: meta.get("param_size").and_then(Json::usize),
+            },
+        })
+    }
+}
+
+/// The parsed registry.
+#[derive(Debug)]
+pub struct Registry {
+    /// artifacts directory
+    pub dir: PathBuf,
+    entries: HashMap<String, ArtifactEntry>,
+}
+
+impl Registry {
+    /// Load `<dir>/manifest.json`.
+    pub fn load(dir: &Path) -> Result<Registry> {
+        let manifest = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&manifest).map_err(|e| {
+            Error::Artifact(format!(
+                "cannot read {} (run `make artifacts` first): {e}",
+                manifest.display()))
+        })?;
+        let root = parse_json(&text)?;
+        let obj = root.obj().ok_or_else(|| Error::Json("manifest not an object".into()))?;
+        let mut entries = HashMap::new();
+        for (name, v) in obj {
+            entries.insert(name.clone(), ArtifactEntry::from_json(v)?);
+        }
+        Ok(Registry { dir: dir.to_path_buf(), entries })
+    }
+
+    /// Look up an artifact by name.
+    pub fn get(&self, name: &str) -> Result<&ArtifactEntry> {
+        self.entries.get(name).ok_or_else(|| {
+            let mut known: Vec<&str> = self.entries.keys().map(|s| s.as_str()).collect();
+            known.sort_unstable();
+            Error::Artifact(format!("unknown artifact {name:?}; known: {known:?}"))
+        })
+    }
+
+    /// All artifact names (sorted).
+    pub fn names(&self) -> Vec<String> {
+        let mut v: Vec<String> = self.entries.keys().cloned().collect();
+        v.sort();
+        v
+    }
+
+    /// Absolute path of an artifact's HLO file.
+    pub fn hlo_path(&self, name: &str) -> Result<PathBuf> {
+        Ok(self.dir.join(&self.get(name)?.file))
+    }
+
+    /// Default artifacts dir: `$PITOME_ARTIFACTS` or `./artifacts`.
+    pub fn default_dir() -> PathBuf {
+        std::env::var("PITOME_ARTIFACTS")
+            .map(PathBuf::from)
+            .unwrap_or_else(|_| PathBuf::from("artifacts"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn missing_dir_gives_helpful_error() {
+        let err = Registry::load(Path::new("/definitely/not/here")).unwrap_err();
+        let s = err.to_string();
+        assert!(s.contains("make artifacts"), "{s}");
+    }
+
+    #[test]
+    fn parses_minimal_manifest() {
+        let dir = std::env::temp_dir().join("pitome_reg_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(dir.join("manifest.json"), r#"{
+            "m1": {"file": "m1.hlo.txt",
+                    "inputs": [{"shape": [4], "dtype": "float32"}],
+                    "outputs": [{"shape": [2], "dtype": "float32"}],
+                    "meta": {"model": "vit", "mode": "pitome", "r": 0.9,
+                             "batch": 1, "plan": [65, 59]}}}"#).unwrap();
+        let reg = Registry::load(&dir).unwrap();
+        let e = reg.get("m1").unwrap();
+        assert_eq!(e.inputs[0].numel(), 4);
+        assert_eq!(e.meta.mode, "pitome");
+        assert_eq!(e.meta.plan.as_deref(), Some(&[65usize, 59][..]));
+        assert!(reg.get("m2").is_err());
+        assert_eq!(reg.names(), vec!["m1".to_string()]);
+    }
+}

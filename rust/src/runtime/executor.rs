@@ -1,0 +1,133 @@
+//! PJRT executor: compiles HLO-text artifacts on the CPU client and runs
+//! them with typed host buffers (pattern from /opt/xla-example/load_hlo).
+
+use std::collections::HashMap;
+use std::path::Path;
+use std::sync::Mutex;
+
+use crate::error::{Error, Result};
+
+use super::artifact::{ArtifactEntry, Registry};
+
+/// Host-side tensor value crossing the PJRT boundary.
+#[derive(Clone, Debug)]
+pub enum HostTensor {
+    /// f32 data + shape
+    F32(Vec<f32>, Vec<usize>),
+    /// i32 data + shape
+    I32(Vec<i32>, Vec<usize>),
+}
+
+impl HostTensor {
+    /// Shape accessor.
+    pub fn shape(&self) -> &[usize] {
+        match self {
+            HostTensor::F32(_, s) | HostTensor::I32(_, s) => s,
+        }
+    }
+
+    /// f32 payload or error.
+    pub fn as_f32(&self) -> Result<&[f32]> {
+        match self {
+            HostTensor::F32(d, _) => Ok(d),
+            HostTensor::I32(..) => Err(Error::Shape("expected f32 tensor".into())),
+        }
+    }
+
+    fn to_literal(&self) -> Result<xla::Literal> {
+        let dims: Vec<i64> = self.shape().iter().map(|&d| d as i64).collect();
+        let lit = match self {
+            HostTensor::F32(d, _) => xla::Literal::vec1(d),
+            HostTensor::I32(d, _) => xla::Literal::vec1(d),
+        };
+        if dims.len() == 1 {
+            Ok(lit)
+        } else {
+            Ok(lit.reshape(&dims)?)
+        }
+    }
+}
+
+/// A compiled model ready to execute.
+pub struct Executable {
+    exe: xla::PjRtLoadedExecutable,
+    /// the manifest entry this was compiled from
+    pub entry: ArtifactEntry,
+}
+
+impl Executable {
+    /// Run with host inputs, returning host outputs (tuple flattened).
+    pub fn run(&self, inputs: &[HostTensor]) -> Result<Vec<HostTensor>> {
+        if inputs.len() != self.entry.inputs.len() {
+            return Err(Error::Artifact(format!(
+                "artifact {} expects {} inputs, got {}",
+                self.entry.file, self.entry.inputs.len(), inputs.len())));
+        }
+        for (i, (h, spec)) in inputs.iter().zip(&self.entry.inputs).enumerate() {
+            let numel: usize = h.shape().iter().product();
+            if numel != spec.numel() {
+                return Err(Error::Shape(format!(
+                    "input {i}: got {:?}, artifact wants {:?}",
+                    h.shape(), spec.shape)));
+            }
+        }
+        let lits: Vec<xla::Literal> = inputs
+            .iter()
+            .map(|h| h.to_literal())
+            .collect::<Result<_>>()?;
+        let result = self.exe.execute::<xla::Literal>(&lits)?[0][0]
+            .to_literal_sync()?;
+        let parts = result.to_tuple()?;
+        let mut out = Vec::with_capacity(parts.len());
+        for (lit, spec) in parts.into_iter().zip(&self.entry.outputs) {
+            let t = match spec.dtype.as_str() {
+                "int32" => HostTensor::I32(lit.to_vec::<i32>()?, spec.shape.clone()),
+                _ => HostTensor::F32(lit.to_vec::<f32>()?, spec.shape.clone()),
+            };
+            out.push(t);
+        }
+        Ok(out)
+    }
+}
+
+/// PJRT CPU engine with a compile cache.
+pub struct Engine {
+    client: xla::PjRtClient,
+    cache: Mutex<HashMap<String, std::sync::Arc<Executable>>>,
+}
+
+impl Engine {
+    /// Create the CPU PJRT client.
+    pub fn cpu() -> Result<Engine> {
+        Ok(Engine {
+            client: xla::PjRtClient::cpu()?,
+            cache: Mutex::new(HashMap::new()),
+        })
+    }
+
+    /// Compile an HLO-text file directly (no registry entry).
+    pub fn compile_file(&self, path: &Path, entry: ArtifactEntry) -> Result<Executable> {
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().ok_or_else(|| Error::Artifact("bad path".into()))?)?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self.client.compile(&comp)?;
+        Ok(Executable { exe, entry })
+    }
+
+    /// Compile (or fetch from cache) a registry artifact.
+    pub fn load(&self, reg: &Registry, name: &str) -> Result<std::sync::Arc<Executable>> {
+        if let Some(e) = self.cache.lock().unwrap().get(name) {
+            return Ok(e.clone());
+        }
+        let entry = reg.get(name)?.clone();
+        let path = reg.hlo_path(name)?;
+        let exe = std::sync::Arc::new(self.compile_file(&path, entry)?);
+        self.cache.lock().unwrap().insert(name.to_string(), exe.clone());
+        Ok(exe)
+    }
+
+    /// Number of PJRT devices (CPU: 1).
+    pub fn device_count(&self) -> usize {
+        self.client.device_count()
+    }
+}

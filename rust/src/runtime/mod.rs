@@ -1,0 +1,24 @@
+//! PJRT runtime: artifact registry + compile cache + typed execution.
+//!
+//! Loads the HLO-text artifacts produced by `make artifacts`, compiles them
+//! once on the PJRT CPU client, and executes them from the coordinator's
+//! hot path.  Python never runs here.
+
+pub mod artifact;
+pub mod executor;
+
+pub use artifact::{ArtifactEntry, ArtifactMeta, IoSpec, Registry};
+pub use executor::{Engine, Executable, HostTensor};
+
+use std::path::Path;
+
+use crate::error::Result;
+
+/// Read a flat f32 params file from `artifacts/params/`.
+pub fn load_flat_params(artifacts: &Path, file: &str) -> Result<Vec<f32>> {
+    let raw = std::fs::read(artifacts.join("params").join(file))?;
+    Ok(raw
+        .chunks_exact(4)
+        .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+        .collect())
+}

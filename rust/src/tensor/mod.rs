@@ -1,0 +1,144 @@
+//! Dense f32 tensor micro-library.
+//!
+//! Deliberately tiny: row-major 2-D matrices plus the handful of ops the
+//! merge engine, the CPU reference transformer, and the spectral toolkit
+//! need.  Not a general ndarray — the point is a dependency-free, auditable
+//! substrate whose numerics mirror the JAX reference (`python/compile/
+//! kernels/ref.py`) to float tolerance.
+
+mod ops;
+
+pub use ops::*;
+
+/// Row-major 2-D f32 matrix.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Mat {
+    /// number of rows
+    pub rows: usize,
+    /// number of columns
+    pub cols: usize,
+    /// row-major storage, `len == rows * cols`
+    pub data: Vec<f32>,
+}
+
+impl Mat {
+    /// Zero-filled matrix.
+    pub fn zeros(rows: usize, cols: usize) -> Self {
+        Mat { rows, cols, data: vec![0.0; rows * cols] }
+    }
+
+    /// Matrix from a row-major vector (panics on length mismatch).
+    pub fn from_vec(rows: usize, cols: usize, data: Vec<f32>) -> Self {
+        assert_eq!(data.len(), rows * cols, "Mat::from_vec length mismatch");
+        Mat { rows, cols, data }
+    }
+
+    /// Build from a closure over (row, col).
+    pub fn from_fn(rows: usize, cols: usize, mut f: impl FnMut(usize, usize) -> f32) -> Self {
+        let mut data = Vec::with_capacity(rows * cols);
+        for i in 0..rows {
+            for j in 0..cols {
+                data.push(f(i, j));
+            }
+        }
+        Mat { rows, cols, data }
+    }
+
+    /// Immutable view of row `i`.
+    #[inline]
+    pub fn row(&self, i: usize) -> &[f32] {
+        &self.data[i * self.cols..(i + 1) * self.cols]
+    }
+
+    /// Mutable view of row `i`.
+    #[inline]
+    pub fn row_mut(&mut self, i: usize) -> &mut [f32] {
+        &mut self.data[i * self.cols..(i + 1) * self.cols]
+    }
+
+    /// Element accessor.
+    #[inline]
+    pub fn get(&self, i: usize, j: usize) -> f32 {
+        self.data[i * self.cols + j]
+    }
+
+    /// Element setter.
+    #[inline]
+    pub fn set(&mut self, i: usize, j: usize, v: f32) {
+        self.data[i * self.cols + j] = v;
+    }
+
+    /// Select rows by index into a new matrix.
+    pub fn select_rows(&self, idx: &[usize]) -> Mat {
+        let mut out = Mat::zeros(idx.len(), self.cols);
+        for (oi, &si) in idx.iter().enumerate() {
+            out.row_mut(oi).copy_from_slice(self.row(si));
+        }
+        out
+    }
+
+    /// Vertical concatenation.
+    pub fn vcat(&self, other: &Mat) -> Mat {
+        assert_eq!(self.cols, other.cols, "vcat col mismatch");
+        let mut data = self.data.clone();
+        data.extend_from_slice(&other.data);
+        Mat { rows: self.rows + other.rows, cols: self.cols, data }
+    }
+
+    /// Transposed copy.
+    pub fn transpose(&self) -> Mat {
+        let mut out = Mat::zeros(self.cols, self.rows);
+        for i in 0..self.rows {
+            for j in 0..self.cols {
+                out.data[j * self.rows + i] = self.data[i * self.cols + j];
+            }
+        }
+        out
+    }
+
+    /// Frobenius-norm of the difference (for tests).
+    pub fn max_abs_diff(&self, other: &Mat) -> f32 {
+        assert_eq!(self.rows, other.rows);
+        assert_eq!(self.cols, other.cols);
+        self.data
+            .iter()
+            .zip(&other.data)
+            .map(|(a, b)| (a - b).abs())
+            .fold(0.0f32, f32::max)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn from_fn_and_accessors() {
+        let m = Mat::from_fn(2, 3, |i, j| (i * 3 + j) as f32);
+        assert_eq!(m.get(1, 2), 5.0);
+        assert_eq!(m.row(0), &[0.0, 1.0, 2.0]);
+    }
+
+    #[test]
+    fn transpose_roundtrip() {
+        let m = Mat::from_fn(3, 4, |i, j| (i * 7 + j * 3) as f32);
+        assert_eq!(m.transpose().transpose(), m);
+    }
+
+    #[test]
+    fn select_rows_picks_rows() {
+        let m = Mat::from_fn(4, 2, |i, _| i as f32);
+        let s = m.select_rows(&[3, 1]);
+        assert_eq!(s.row(0), &[3.0, 3.0]);
+        assert_eq!(s.row(1), &[1.0, 1.0]);
+    }
+
+    #[test]
+    fn vcat_stacks() {
+        let a = Mat::from_fn(1, 2, |_, j| j as f32);
+        let b = Mat::from_fn(2, 2, |i, _| i as f32 + 10.0);
+        let c = a.vcat(&b);
+        assert_eq!(c.rows, 3);
+        assert_eq!(c.row(2), &[11.0, 11.0]);
+    }
+}

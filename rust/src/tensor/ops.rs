@@ -1,0 +1,220 @@
+//! Numerical ops over [`Mat`] mirroring `python/compile/kernels/ref.py`.
+
+use super::Mat;
+
+/// C = A @ B (naive ikj loop; the perf pass blocks this — see `matmul`).
+pub fn matmul(a: &Mat, b: &Mat) -> Mat {
+    assert_eq!(a.cols, b.rows, "matmul inner dim mismatch");
+    let mut c = Mat::zeros(a.rows, b.cols);
+    for i in 0..a.rows {
+        let arow = a.row(i);
+        let crow = &mut c.data[i * b.cols..(i + 1) * b.cols];
+        for (kk, &av) in arow.iter().enumerate() {
+            if av == 0.0 {
+                continue;
+            }
+            let brow = &b.data[kk * b.cols..(kk + 1) * b.cols];
+            for (cj, &bv) in crow.iter_mut().zip(brow) {
+                *cj += av * bv;
+            }
+        }
+    }
+    c
+}
+
+/// C = A @ B^T — the similarity-matrix shape; avoids materializing B^T.
+pub fn matmul_nt(a: &Mat, b: &Mat) -> Mat {
+    assert_eq!(a.cols, b.cols, "matmul_nt inner dim mismatch");
+    let mut c = Mat::zeros(a.rows, b.rows);
+    for i in 0..a.rows {
+        let arow = a.row(i);
+        for j in 0..b.rows {
+            let brow = b.row(j);
+            let mut acc = 0.0f32;
+            for k in 0..a.cols {
+                acc += arow[k] * brow[k];
+            }
+            c.data[i * b.rows + j] = acc;
+        }
+    }
+    c
+}
+
+/// L2-normalize each row (eps matches the JAX reference).
+pub fn normalize_rows(m: &Mat) -> Mat {
+    let mut out = m.clone();
+    for i in 0..m.rows {
+        let r = out.row_mut(i);
+        let n: f32 = r.iter().map(|v| v * v).sum::<f32>().sqrt() + 1e-6;
+        for v in r.iter_mut() {
+            *v /= n;
+        }
+    }
+    out
+}
+
+/// Pairwise cosine-similarity matrix W (N, N) of row features.
+pub fn cosine_matrix(kf: &Mat) -> Mat {
+    let kn = normalize_rows(kf);
+    matmul_nt(&kn, &kn)
+}
+
+/// Row-wise softmax in place.
+pub fn softmax_rows(m: &mut Mat) {
+    for i in 0..m.rows {
+        let r = m.row_mut(i);
+        let mx = r.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+        let mut sum = 0.0f32;
+        for v in r.iter_mut() {
+            *v = (*v - mx).exp();
+            sum += *v;
+        }
+        for v in r.iter_mut() {
+            *v /= sum;
+        }
+    }
+}
+
+/// LayerNorm over the last axis with learned scale/shift.
+pub fn layernorm(x: &Mat, w: &[f32], b: &[f32], eps: f32) -> Mat {
+    assert_eq!(x.cols, w.len());
+    assert_eq!(x.cols, b.len());
+    let mut out = Mat::zeros(x.rows, x.cols);
+    for i in 0..x.rows {
+        let r = x.row(i);
+        let mu: f32 = r.iter().sum::<f32>() / x.cols as f32;
+        let var: f32 = r.iter().map(|v| (v - mu) * (v - mu)).sum::<f32>() / x.cols as f32;
+        let inv = 1.0 / (var + eps).sqrt();
+        let o = out.row_mut(i);
+        for j in 0..x.cols {
+            o[j] = (r[j] - mu) * inv * w[j] + b[j];
+        }
+    }
+    out
+}
+
+/// tanh-approximation GELU, matching `model.py::gelu`.
+pub fn gelu(x: f32) -> f32 {
+    0.5 * x * (1.0 + (0.797_884_6_f32 * (x + 0.044_715 * x * x * x)).tanh())
+}
+
+/// Apply GELU elementwise in place.
+pub fn gelu_inplace(m: &mut Mat) {
+    for v in m.data.iter_mut() {
+        *v = gelu(*v);
+    }
+}
+
+/// Indices that sort `vals` descending (stable).
+pub fn argsort_desc(vals: &[f32]) -> Vec<usize> {
+    let mut idx: Vec<usize> = (0..vals.len()).collect();
+    idx.sort_by(|&a, &b| vals[b].partial_cmp(&vals[a]).unwrap_or(std::cmp::Ordering::Equal));
+    idx
+}
+
+/// Indices that sort `vals` ascending (stable).
+pub fn argsort_asc(vals: &[f32]) -> Vec<usize> {
+    let mut idx: Vec<usize> = (0..vals.len()).collect();
+    idx.sort_by(|&a, &b| vals[a].partial_cmp(&vals[b]).unwrap_or(std::cmp::Ordering::Equal));
+    idx
+}
+
+/// argmax over a slice.
+pub fn argmax(vals: &[f32]) -> usize {
+    let mut best = 0;
+    for (i, &v) in vals.iter().enumerate() {
+        if v > vals[best] {
+            best = i;
+        }
+    }
+    best
+}
+
+/// x @ w + b for a weight matrix (in, out) and bias (out).
+pub fn dense(x: &Mat, w: &Mat, b: Option<&[f32]>) -> Mat {
+    let mut y = matmul(x, w);
+    if let Some(bias) = b {
+        assert_eq!(bias.len(), y.cols);
+        for i in 0..y.rows {
+            let r = y.row_mut(i);
+            for j in 0..r.len() {
+                r[j] += bias[j];
+            }
+        }
+    }
+    y
+}
+
+/// Elementwise a += b.
+pub fn add_inplace(a: &mut Mat, b: &Mat) {
+    assert_eq!(a.rows, b.rows);
+    assert_eq!(a.cols, b.cols);
+    for (x, y) in a.data.iter_mut().zip(&b.data) {
+        *x += *y;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn approx(a: f32, b: f32, tol: f32) -> bool {
+        (a - b).abs() <= tol
+    }
+
+    #[test]
+    fn matmul_small() {
+        let a = Mat::from_vec(2, 2, vec![1.0, 2.0, 3.0, 4.0]);
+        let b = Mat::from_vec(2, 2, vec![5.0, 6.0, 7.0, 8.0]);
+        let c = matmul(&a, &b);
+        assert_eq!(c.data, vec![19.0, 22.0, 43.0, 50.0]);
+    }
+
+    #[test]
+    fn matmul_nt_matches_explicit_transpose() {
+        let a = Mat::from_fn(3, 4, |i, j| (i + j) as f32 * 0.5);
+        let b = Mat::from_fn(5, 4, |i, j| (i * j) as f32 * 0.25 - 1.0);
+        let c1 = matmul_nt(&a, &b);
+        let c2 = matmul(&a, &b.transpose());
+        assert!(c1.max_abs_diff(&c2) < 1e-6);
+    }
+
+    #[test]
+    fn softmax_rows_sums_to_one() {
+        let mut m = Mat::from_fn(2, 4, |i, j| (i * j) as f32);
+        softmax_rows(&mut m);
+        for i in 0..2 {
+            let s: f32 = m.row(i).iter().sum();
+            assert!(approx(s, 1.0, 1e-6));
+        }
+    }
+
+    #[test]
+    fn cosine_matrix_diag_is_one() {
+        let m = Mat::from_fn(4, 8, |i, j| ((i * 13 + j * 7) % 11) as f32 - 5.0);
+        let w = cosine_matrix(&m);
+        for i in 0..4 {
+            assert!(approx(w.get(i, i), 1.0, 1e-3), "diag {}", w.get(i, i));
+        }
+    }
+
+    #[test]
+    fn layernorm_zero_mean_unit_var() {
+        let x = Mat::from_fn(1, 6, |_, j| j as f32 * 2.0);
+        let w = vec![1.0; 6];
+        let b = vec![0.0; 6];
+        let y = layernorm(&x, &w, &b, 1e-5);
+        let mu: f32 = y.row(0).iter().sum::<f32>() / 6.0;
+        assert!(approx(mu, 0.0, 1e-5));
+    }
+
+    #[test]
+    fn argsort_desc_orders() {
+        assert_eq!(argsort_desc(&[1.0, 3.0, 2.0]), vec![1, 2, 0]);
+    }
+
+    #[test]
+    fn argmax_basic() {
+        assert_eq!(argmax(&[0.1, 0.9, 0.5]), 1);
+    }
+}

@@ -1,0 +1,83 @@
+//! Tiny CLI flag parser (clap is unavailable in this environment,
+//! DESIGN.md §11).  Supports `--flag`, `--key value`, and positionals.
+
+use std::collections::HashMap;
+
+/// Parsed command line.
+pub struct Args {
+    /// positional arguments in order
+    pub positional: Vec<String>,
+    flags: HashMap<String, String>,
+    present: Vec<String>,
+}
+
+impl Args {
+    /// Parse from `std::env::args()` (skipping argv[0]).
+    pub fn parse() -> Args {
+        Self::from_vec(std::env::args().skip(1).collect())
+    }
+
+    /// Parse from an explicit vector (tests).
+    pub fn from_vec(argv: Vec<String>) -> Args {
+        let mut positional = Vec::new();
+        let mut flags = HashMap::new();
+        let mut present = Vec::new();
+        let mut i = 0;
+        while i < argv.len() {
+            let a = &argv[i];
+            if let Some(name) = a.strip_prefix("--") {
+                present.push(name.to_string());
+                if let Some((k, v)) = name.split_once('=') {
+                    flags.insert(k.to_string(), v.to_string());
+                } else if i + 1 < argv.len() && !argv[i + 1].starts_with("--") {
+                    flags.insert(name.to_string(), argv[i + 1].clone());
+                    i += 1;
+                } else {
+                    flags.insert(name.to_string(), "true".to_string());
+                }
+            } else {
+                positional.push(a.clone());
+            }
+            i += 1;
+        }
+        Args { positional, flags, present }
+    }
+
+    /// String flag with default.
+    pub fn get(&self, name: &str, default: &str) -> String {
+        self.flags.get(name).cloned().unwrap_or_else(|| default.to_string())
+    }
+
+    /// Typed flag with default.
+    pub fn get_parse<T: std::str::FromStr>(&self, name: &str, default: T) -> T {
+        self.flags
+            .get(name)
+            .and_then(|v| v.parse().ok())
+            .unwrap_or(default)
+    }
+
+    /// Whether a bare flag was given.
+    pub fn has(&self, name: &str) -> bool {
+        self.present.iter().any(|p| p == name || p.starts_with(&format!("{name}=")))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn args(s: &str) -> Args {
+        Args::from_vec(s.split_whitespace().map(String::from).collect())
+    }
+
+    #[test]
+    fn parses_mixed() {
+        let a = args("serve --rate 300 --burst --n=5 trace.json");
+        assert_eq!(a.positional, vec!["serve", "trace.json"]);
+        assert_eq!(a.get_parse::<f64>("rate", 0.0), 300.0);
+        assert!(a.has("burst"));
+        assert_eq!(a.get_parse::<usize>("n", 0), 5);
+        assert!(!a.has("missing"));
+        assert_eq!(a.get("missing", "d"), "d");
+    }
+}

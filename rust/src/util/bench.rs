@@ -1,0 +1,142 @@
+//! Criterion-style micro-bench harness (DESIGN.md §11): warmup + sampled
+//! timing with mean/p50/p99 reporting.  Used by `rust/benches/*` which run
+//! with `harness = false`.
+
+use std::time::{Duration, Instant};
+
+/// Result of one benchmark.
+#[derive(Clone, Debug)]
+pub struct BenchResult {
+    /// name
+    pub name: String,
+    /// samples in nanoseconds
+    pub samples_ns: Vec<u64>,
+}
+
+impl BenchResult {
+    /// mean ns
+    pub fn mean_ns(&self) -> f64 {
+        self.samples_ns.iter().sum::<u64>() as f64 / self.samples_ns.len() as f64
+    }
+
+    fn pct(&self, q: f64) -> u64 {
+        let mut s = self.samples_ns.clone();
+        s.sort_unstable();
+        let idx = ((s.len() as f64 - 1.0) * q).round() as usize;
+        s[idx]
+    }
+
+    /// median ns
+    pub fn p50_ns(&self) -> u64 {
+        self.pct(0.5)
+    }
+
+    /// p99 ns
+    pub fn p99_ns(&self) -> u64 {
+        self.pct(0.99)
+    }
+
+    /// human line
+    pub fn report(&self) -> String {
+        format!(
+            "{:<44} mean {:>12}  p50 {:>12}  p99 {:>12}  (n={})",
+            self.name,
+            fmt_ns(self.mean_ns()),
+            fmt_ns(self.p50_ns() as f64),
+            fmt_ns(self.p99_ns() as f64),
+            self.samples_ns.len()
+        )
+    }
+}
+
+fn fmt_ns(ns: f64) -> String {
+    if ns < 1e3 {
+        format!("{ns:.0} ns")
+    } else if ns < 1e6 {
+        format!("{:.2} us", ns / 1e3)
+    } else if ns < 1e9 {
+        format!("{:.2} ms", ns / 1e6)
+    } else {
+        format!("{:.2} s", ns / 1e9)
+    }
+}
+
+/// Benchmark runner.
+pub struct Bench {
+    /// warmup iterations
+    pub warmup: usize,
+    /// measured samples
+    pub samples: usize,
+    /// collected results
+    pub results: Vec<BenchResult>,
+}
+
+impl Default for Bench {
+    fn default() -> Self {
+        Bench { warmup: 3, samples: 20, results: Vec::new() }
+    }
+}
+
+impl Bench {
+    /// Runner with explicit sample counts.
+    pub fn new(warmup: usize, samples: usize) -> Self {
+        Bench { warmup, samples, results: Vec::new() }
+    }
+
+    /// Time `f` and record under `name`. The closure's return value is
+    /// black-boxed to keep the optimizer honest.
+    pub fn run<T>(&mut self, name: &str, mut f: impl FnMut() -> T) -> &BenchResult {
+        for _ in 0..self.warmup {
+            std::hint::black_box(f());
+        }
+        let mut samples = Vec::with_capacity(self.samples);
+        for _ in 0..self.samples {
+            let t0 = Instant::now();
+            std::hint::black_box(f());
+            samples.push(t0.elapsed().as_nanos() as u64);
+        }
+        let r = BenchResult { name: name.into(), samples_ns: samples };
+        println!("{}", r.report());
+        self.results.push(r);
+        self.results.last().unwrap()
+    }
+
+    /// Time a batch-style closure that reports its own work unit count;
+    /// prints throughput as well.
+    pub fn run_throughput<T>(&mut self, name: &str, units: u64,
+                             mut f: impl FnMut() -> T) -> &BenchResult {
+        let r = self.run(name, &mut f);
+        let per_unit = r.mean_ns() / units as f64;
+        let per_sec = 1e9 / per_unit;
+        println!("{:<44}   -> {:.1} units/s ({} per unit)", "", per_sec,
+                 fmt_ns(per_unit));
+        self.results.last().unwrap()
+    }
+
+    /// Total wall-clock guard: cap the whole bench with a budget so CI
+    /// never hangs (returns false when exceeded).
+    pub fn within_budget(&self, started: Instant, budget: Duration) -> bool {
+        started.elapsed() < budget
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn records_and_reports() {
+        let mut b = Bench::new(1, 5);
+        b.run("noop", || 1 + 1);
+        assert_eq!(b.results.len(), 1);
+        assert!(b.results[0].mean_ns() < 1e7);
+        assert!(b.results[0].p50_ns() <= b.results[0].p99_ns());
+    }
+
+    #[test]
+    fn fmt_ns_ranges() {
+        assert!(fmt_ns(500.0).contains("ns"));
+        assert!(fmt_ns(5_000.0).contains("us"));
+        assert!(fmt_ns(5_000_000.0).contains("ms"));
+    }
+}

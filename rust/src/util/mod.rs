@@ -1,0 +1,12 @@
+//! In-repo utility substrates that replace unavailable external crates
+//! (DESIGN.md §11): JSON parsing, micro-benchmarking, property testing.
+
+pub mod args;
+pub mod bench;
+pub mod json;
+pub mod quickcheck;
+
+pub use args::Args;
+pub use bench::{Bench, BenchResult};
+pub use json::{parse as parse_json, Json};
+pub use quickcheck::{property, Gen};

@@ -1,0 +1,88 @@
+//! Property-testing helper (DESIGN.md §11): seeded random case generation
+//! with a fixed case budget — the proptest stand-in used by the invariant
+//! tests in `rust/tests/prop_merge.rs`.
+
+use crate::data::Rng;
+
+/// A source of random test inputs.
+pub struct Gen {
+    /// underlying RNG
+    pub rng: Rng,
+}
+
+impl Gen {
+    /// Seeded generator.
+    pub fn new(seed: u64) -> Self {
+        Gen { rng: Rng::new(seed) }
+    }
+
+    /// usize in [lo, hi] inclusive.
+    pub fn usize_in(&mut self, lo: usize, hi: usize) -> usize {
+        lo + self.rng.next_below((hi - lo + 1) as u64) as usize
+    }
+
+    /// f32 in [lo, hi).
+    pub fn f32_in(&mut self, lo: f32, hi: f32) -> f32 {
+        self.rng.uniform(lo as f64, hi as f64) as f32
+    }
+
+    /// f32 vector.
+    pub fn f32_vec(&mut self, n: usize, lo: f32, hi: f32) -> Vec<f32> {
+        (0..n).map(|_| self.f32_in(lo, hi)).collect()
+    }
+
+    /// Pick one of a slice.
+    pub fn choose<'a, T>(&mut self, xs: &'a [T]) -> &'a T {
+        &xs[self.rng.next_below(xs.len() as u64) as usize]
+    }
+}
+
+/// Run `cases` randomized cases of the property; panics with the case
+/// number and seed on failure so the case is reproducible.
+pub fn property(name: &str, cases: usize, mut prop: impl FnMut(&mut Gen)) {
+    for case in 0..cases {
+        let seed = 0x5EED_0000u64 + case as u64;
+        let mut g = Gen::new(seed);
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            prop(&mut g);
+        }));
+        if let Err(e) = result {
+            eprintln!("property {name:?} failed at case {case} (seed {seed:#x})");
+            std::panic::resume_unwind(e);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn property_runs_all_cases() {
+        let mut count = 0;
+        property("count", 25, |_g| {
+            count += 1;
+        });
+        assert_eq!(count, 25);
+    }
+
+    #[test]
+    #[should_panic]
+    fn property_propagates_failure() {
+        property("fail", 10, |g| {
+            let v = g.usize_in(0, 9);
+            assert!(v < 5, "boom {v}");
+        });
+    }
+
+    #[test]
+    fn gen_ranges() {
+        let mut g = Gen::new(1);
+        for _ in 0..100 {
+            let u = g.usize_in(3, 7);
+            assert!((3..=7).contains(&u));
+            let f = g.f32_in(-1.0, 1.0);
+            assert!((-1.0..1.0).contains(&f));
+        }
+    }
+}

@@ -1,0 +1,156 @@
+//! Cross-language parity: the Rust engine vs the JAX reference, through
+//! `artifacts/testvectors.json` (written by `make artifacts`).
+//!
+//! These tests are the trust anchor that lets the Rust CPU model run the
+//! paper's r-sweeps in place of per-point HLO artifacts.  They skip (with
+//! a loud message) when artifacts have not been built.
+
+use std::path::PathBuf;
+
+use pitome::config::ViTConfig;
+use pitome::data::{patchify, Rng};
+use pitome::merge::{energy_scores, merge_step, MergeCtx, MergeMode};
+use pitome::model::{load_model_params, ViTModel};
+use pitome::runtime::Registry;
+use pitome::tensor::Mat;
+use pitome::util::json::{parse as parse_json, Json};
+
+fn testvectors() -> Option<Json> {
+    let path = Registry::default_dir().join("testvectors.json");
+    let text = std::fs::read_to_string(&path).ok().or_else(|| {
+        eprintln!("SKIP parity: {} missing (run `make artifacts`)",
+                  path.display());
+        None
+    })?;
+    Some(parse_json(&text).expect("testvectors.json parses"))
+}
+
+fn mat_from(v: &Json) -> Mat {
+    let (r, c, d) = v.f32_mat().expect("matrix");
+    Mat::from_vec(r, c, d)
+}
+
+#[test]
+fn prng_parity_with_python() {
+    let Some(tv) = testvectors() else { return };
+    let prng = tv.get("prng").unwrap();
+    let expect: Vec<u64> = prng.get("u64").unwrap().arr().unwrap().iter()
+        .map(|v| v.str().unwrap().parse().unwrap()).collect();
+    let mut rng = Rng::new(42);
+    let got: Vec<u64> = (0..4).map(|_| rng.next_u64()).collect();
+    assert_eq!(got, expect, "SplitMix64 stream diverged from python");
+
+    let f = prng.get("f64").unwrap().arr().unwrap();
+    assert!((Rng::new(7).next_f64() - f[0].num().unwrap()).abs() < 1e-15);
+    assert!((Rng::new(8).next_f64() - f[1].num().unwrap()).abs() < 1e-15);
+}
+
+#[test]
+fn shape_item_parity_with_python() {
+    let Some(tv) = testvectors() else { return };
+    let prng = tv.get("prng").unwrap();
+    let want_sum = prng.get("img_sum").unwrap().num().unwrap();
+    let want_label = prng.get("img_label").unwrap().usize().unwrap();
+    let item = pitome::data::shape_item(123, 0);
+    let got_sum: f64 = item.image.iter().map(|&v| v as f64).sum();
+    assert_eq!(item.label, want_label);
+    assert!((got_sum - want_sum).abs() < 1e-3,
+            "image diverged: {got_sum} vs {want_sum}");
+}
+
+#[test]
+fn sent_item_parity_with_python() {
+    let Some(tv) = testvectors() else { return };
+    let prng = tv.get("prng").unwrap();
+    let want: Vec<i64> = prng.get("sent_tokens").unwrap().arr().unwrap()
+        .iter().map(|v| v.num().unwrap() as i64).collect();
+    let want_label = prng.get("sent_label").unwrap().usize().unwrap();
+    let (toks, label) = pitome::data::sent_item(9, 3, 32, 16);
+    let got: Vec<i64> = toks.iter().map(|&t| t as i64).collect();
+    assert_eq!(got, want, "sent tokens diverged");
+    assert_eq!(label, want_label);
+}
+
+#[test]
+fn energy_parity_with_jax() {
+    let Some(tv) = testvectors() else { return };
+    let e = tv.get("energy").unwrap();
+    let kf = mat_from(e.get("kf").unwrap());
+    let margin = e.get("margin").unwrap().num().unwrap() as f32;
+    let expect = e.get("expected").unwrap().f32_vec().unwrap();
+    let got = energy_scores(&kf, margin);
+    for (i, (g, w)) in got.iter().zip(&expect).enumerate() {
+        assert!((g - w).abs() < 5e-5, "energy[{i}]: rust {g} vs jax {w}");
+    }
+}
+
+#[test]
+fn merge_parity_with_jax() {
+    let Some(tv) = testvectors() else { return };
+    let m = tv.get("merge").unwrap();
+    let x = mat_from(m.get("x").unwrap());
+    let kf = mat_from(m.get("kf").unwrap());
+    let sizes = m.get("sizes").unwrap().f32_vec().unwrap();
+    let attn = m.get("attn_cls").unwrap().f32_vec().unwrap();
+    let margin = m.get("margin").unwrap().num().unwrap() as f32;
+    let k = m.get("k").unwrap().usize().unwrap();
+    let cases = m.get("cases").unwrap();
+    for (name, mode) in [("pitome", MergeMode::PiToMe),
+                         ("tome", MergeMode::ToMe),
+                         ("tofu", MergeMode::ToFu),
+                         ("dct", MergeMode::Dct),
+                         ("diffrate", MergeMode::DiffRate)] {
+        let case = cases.get(name).unwrap();
+        let want = mat_from(case.get("out").unwrap());
+        let want_sizes = case.get("sizes").unwrap().f32_vec().unwrap();
+        let mut rng = Rng::new(0);
+        let ctx = MergeCtx { x: &x, kf: &kf, sizes: &sizes, attn_cls: &attn,
+                             margin, k, protect_first: 1 };
+        let (got, got_sizes) = merge_step(mode, &ctx, &mut rng);
+        assert_eq!(got.rows, want.rows, "{name} rows");
+        let d = got.max_abs_diff(&want);
+        assert!(d < 2e-4, "{name}: max diff {d}");
+        for (a, b) in got_sizes.iter().zip(&want_sizes) {
+            assert!((a - b).abs() < 1e-4, "{name} sizes: {a} vs {b}");
+        }
+    }
+}
+
+#[test]
+fn vit_logits_parity_with_jax() {
+    let Some(tv) = testvectors() else { return };
+    let dir: PathBuf = Registry::default_dir();
+    let Ok(ps) = load_model_params(&dir, "vit") else {
+        eprintln!("SKIP vit parity: params missing");
+        return;
+    };
+    let v = tv.get("vit_logits").unwrap();
+    let cases = v.get("cases").unwrap();
+    // recreate the first 2 test samples exactly as python did
+    let xs: Vec<Mat> = (0..2)
+        .map(|i| {
+            let item = pitome::data::shape_item(pitome::data::TEST_SEED, i);
+            patchify(&item.image, 4)
+        })
+        .collect();
+    for (tag, mode, r) in [("none_r1000", "none", 1.0),
+                           ("pitome_r900", "pitome", 0.9),
+                           ("tome_r900", "tome", 0.9)] {
+        let want = mat_from(cases.get(tag).unwrap());
+        let cfg = ViTConfig { merge_mode: mode.into(), merge_r: r,
+                              ..Default::default() };
+        let model = ViTModel::new(&ps, cfg);
+        let mut rng = Rng::new(0);
+        for (i, x) in xs.iter().enumerate() {
+            let got = model.logits(x, &mut rng).unwrap();
+            for (j, (g, w)) in got.iter().zip(want.row(i)).enumerate() {
+                assert!((g - w).abs() < 2e-2,
+                        "{tag} sample {i} logit {j}: rust {g} vs jax {w}");
+            }
+            // prediction must agree exactly
+            let pred_r = pitome::tensor::argmax(&got);
+            let pred_j = pitome::tensor::argmax(want.row(i));
+            assert_eq!(pred_r, pred_j, "{tag} sample {i} prediction");
+        }
+    }
+}

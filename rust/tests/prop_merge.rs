@@ -1,0 +1,181 @@
+//! Property-based invariant tests over the merge engine, the schedules,
+//! and the spectral toolkit (quickcheck helper, DESIGN.md §11).
+
+use pitome::data::Rng;
+use pitome::graph::{coarsen, lift, normalized_laplacian, jacobi_eigenvalues,
+                    Partition};
+use pitome::merge::{energy_scores, fixed_k_plan, merge_plan, merge_step,
+                    tokens_after_merge, MergeCtx, MergeMode};
+use pitome::tensor::Mat;
+use pitome::util::quickcheck::{property, Gen};
+
+fn random_ctx(g: &mut Gen) -> (Mat, Mat, Vec<f32>, Vec<f32>, usize) {
+    let n = g.usize_in(9, 60);
+    let h = *g.choose(&[4usize, 8, 16]);
+    let x = Mat::from_fn(n, h, |_, _| g.f32_in(-1.0, 1.0));
+    let kf = Mat::from_fn(n, h, |_, _| g.f32_in(-1.0, 1.0));
+    let sizes: Vec<f32> = (0..n).map(|_| g.f32_in(0.5, 3.0)).collect();
+    let attn: Vec<f32> = (0..n).map(|_| g.f32_in(0.0, 1.0)).collect();
+    let k = g.usize_in(1, (n - 1) / 2 - 1);
+    (x, kf, sizes, attn, k)
+}
+
+const MODES: [MergeMode; 8] = [
+    MergeMode::PiToMe, MergeMode::PiToMeNoProtect, MergeMode::PiToMeRandomSplit,
+    MergeMode::PiToMeAttn, MergeMode::ToMe, MergeMode::ToFu,
+    MergeMode::DiffRate, MergeMode::Random,
+];
+
+#[test]
+fn prop_output_shape_all_modes() {
+    property("output shape", 60, |g| {
+        let (x, kf, sizes, attn, k) = random_ctx(g);
+        let mode = *g.choose(&MODES);
+        let mut rng = Rng::new(1);
+        let ctx = MergeCtx { x: &x, kf: &kf, sizes: &sizes, attn_cls: &attn,
+                             margin: g.f32_in(-0.2, 0.9), k, protect_first: 1 };
+        let (out, out_sizes) = merge_step(mode, &ctx, &mut rng);
+        assert_eq!(out.rows, x.rows - k, "{mode:?}");
+        assert_eq!(out_sizes.len(), x.rows - k);
+        assert!(out.data.iter().all(|v| v.is_finite()), "{mode:?} nonfinite");
+    });
+}
+
+#[test]
+fn prop_mass_conservation() {
+    property("mass conservation", 60, |g| {
+        let (x, kf, sizes, attn, k) = random_ctx(g);
+        let total: f32 = sizes.iter().sum();
+        for mode in [MergeMode::PiToMe, MergeMode::PiToMeRandomSplit,
+                     MergeMode::PiToMeAttn, MergeMode::ToMe,
+                     MergeMode::DiffRate] {
+            let mut rng = Rng::new(2);
+            let ctx = MergeCtx { x: &x, kf: &kf, sizes: &sizes,
+                                 attn_cls: &attn, margin: 0.5, k,
+                                 protect_first: 1 };
+            let (_, out_sizes) = merge_step(mode, &ctx, &mut rng);
+            let t2: f32 = out_sizes.iter().sum();
+            assert!((t2 - total).abs() < total * 1e-4,
+                    "{mode:?}: {t2} vs {total}");
+        }
+    });
+}
+
+#[test]
+fn prop_convex_hull_bounds() {
+    property("convex bounds", 40, |g| {
+        let (x, kf, sizes, attn, k) = random_ctx(g);
+        let hi = x.data.iter().cloned().fold(f32::MIN, f32::max);
+        let lo = x.data.iter().cloned().fold(f32::MAX, f32::min);
+        let mut rng = Rng::new(3);
+        let ctx = MergeCtx { x: &x, kf: &kf, sizes: &sizes, attn_cls: &attn,
+                             margin: 0.5, k, protect_first: 1 };
+        let (out, _) = merge_step(MergeMode::PiToMe, &ctx, &mut rng);
+        for &v in &out.data {
+            assert!(v <= hi + 1e-4 && v >= lo - 1e-4);
+        }
+    });
+}
+
+#[test]
+fn prop_cls_always_survives_unchanged() {
+    property("cls protected", 40, |g| {
+        let (x, kf, sizes, attn, k) = random_ctx(g);
+        let mode = *g.choose(&MODES);
+        let mut rng = Rng::new(4);
+        let ctx = MergeCtx { x: &x, kf: &kf, sizes: &sizes, attn_cls: &attn,
+                             margin: 0.5, k, protect_first: 1 };
+        let (out, out_sizes) = merge_step(mode, &ctx, &mut rng);
+        // CLS row must appear in the output with its original value. For
+        // every mode the protected prefix lands at output row 0 except
+        // diffrate, where B is sorted ascending so CLS is still row 0.
+        let cls_in: Vec<f32> = x.row(0).to_vec();
+        let found = (0..out.rows).any(|i| {
+            out.row(i).iter().zip(&cls_in).all(|(a, b)| (a - b).abs() < 1e-5)
+        });
+        assert!(found, "{mode:?}: CLS vanished");
+        assert!(out_sizes.iter().all(|&s| s >= 0.0));
+    });
+}
+
+#[test]
+fn prop_energy_bounded() {
+    // E_i = mean of f_m over neighbours; f_m in [-alpha, 1]
+    property("energy bounds", 60, |g| {
+        let n = g.usize_in(3, 50);
+        let h = g.usize_in(2, 24);
+        let kf = Mat::from_fn(n, h, |_, _| g.f32_in(-2.0, 2.0));
+        let margin = g.f32_in(-0.5, 0.95);
+        for e in energy_scores(&kf, margin) {
+            assert!(e <= 1.0 + 1e-5 && e >= -1.0 - 1e-5, "energy {e}");
+        }
+    });
+}
+
+#[test]
+fn prop_schedule_monotone_and_bounded() {
+    property("schedule", 80, |g| {
+        let n0 = g.usize_in(6, 300);
+        let depth = g.usize_in(1, 24);
+        let r = g.f32_in(0.5, 0.999) as f64;
+        let plan = merge_plan(n0, r, depth, 1, None);
+        assert_eq!(plan.len(), depth + 1);
+        assert_eq!(plan[0], n0);
+        for w in plan.windows(2) {
+            assert!(w[1] <= w[0] && w[1] >= 3.min(w[0]));
+        }
+        let k = g.usize_in(1, 16);
+        let fp = fixed_k_plan(n0, k, depth, 1);
+        for w in fp.windows(2) {
+            assert!(w[1] <= w[0]);
+        }
+        // single-step consistency
+        assert_eq!(plan[1], tokens_after_merge(n0, r, 1));
+    });
+}
+
+#[test]
+fn prop_coarsen_preserves_total_weight() {
+    property("coarsen weight", 40, |g| {
+        let n = g.usize_in(4, 24);
+        let w = Mat::from_fn(n, n, |i, j| if i == j { 0.0 } else { 1.0 });
+        // symmetric random-ish weights
+        let mut w = w;
+        for i in 0..n {
+            for j in (i + 1)..n {
+                let v = g.f32_in(0.0, 2.0);
+                w.set(i, j, v);
+                w.set(j, i, v);
+            }
+        }
+        let groups = g.usize_in(1, n);
+        let assign: Vec<usize> = (0..n).map(|_| g.usize_in(0, groups - 1)).collect();
+        let p = Partition::from_assign(assign);
+        let wc = coarsen(&w, &p);
+        let t1: f32 = w.data.iter().sum();
+        let t2: f32 = wc.data.iter().sum();
+        assert!((t1 - t2).abs() < 1e-2 * t1.max(1.0), "{t1} vs {t2}");
+        // lift has same total after re-expansion weighting
+        let wl = lift(&wc, &p);
+        assert_eq!(wl.rows, n);
+    });
+}
+
+#[test]
+fn prop_normalized_laplacian_spectrum_in_0_2() {
+    property("laplacian spectrum", 20, |g| {
+        let n = g.usize_in(4, 16);
+        let mut w = Mat::zeros(n, n);
+        for i in 0..n {
+            for j in (i + 1)..n {
+                let v = g.f32_in(0.0, 1.0);
+                w.set(i, j, v);
+                w.set(j, i, v);
+            }
+        }
+        let l = normalized_laplacian(&w);
+        let ev = jacobi_eigenvalues(&l, 1e-6, 100);
+        assert!(ev[0] > -1e-3, "min {}", ev[0]);
+        assert!(*ev.last().unwrap() < 2.0 + 1e-3);
+    });
+}

@@ -1,0 +1,136 @@
+//! Integration over the PJRT runtime + coordinator on the real artifacts.
+//! All tests skip loudly when `make artifacts` has not run.
+
+use std::path::PathBuf;
+use std::sync::Arc;
+
+use pitome::config::ServingConfig;
+use pitome::coordinator::{Coordinator, Qos};
+use pitome::data::{patchify, shape_item, Rng, TEST_SEED};
+use pitome::model::{load_model_params, ViTModel};
+use pitome::config::ViTConfig;
+use pitome::runtime::{load_flat_params, Engine, HostTensor, Registry};
+
+fn registry() -> Option<(Registry, PathBuf)> {
+    let dir = Registry::default_dir();
+    match Registry::load(&dir) {
+        Ok(r) => Some((r, dir)),
+        Err(e) => {
+            eprintln!("SKIP runtime integration: {e}");
+            None
+        }
+    }
+}
+
+#[test]
+fn artifact_executes_and_matches_cpu_model() {
+    let Some((reg, dir)) = registry() else { return };
+    let engine = Engine::cpu().expect("cpu client");
+    let exe = engine.load(&reg, "vit_pitome_r900_b1").expect("compile");
+    let params = load_flat_params(&dir, "vit_flat.bin").expect("params");
+    let item = shape_item(TEST_SEED, 5);
+    let patches = patchify(&item.image, 4);
+    let psize = params.len();
+    let out = exe.run(&[
+        HostTensor::F32(params, vec![psize]),
+        HostTensor::F32(patches.data.clone(), vec![1, 64, 16]),
+    ]).expect("execute");
+    let logits_pjrt = out[0].as_f32().unwrap();
+    assert_eq!(logits_pjrt.len(), 10);
+
+    // CPU reference must agree on the prediction (and closely on values)
+    let ps = load_model_params(&dir, "vit").unwrap();
+    let cfg = ViTConfig { merge_mode: "pitome".into(), merge_r: 0.9,
+                          ..Default::default() };
+    let model = ViTModel::new(&ps, cfg);
+    let mut rng = Rng::new(0);
+    let logits_cpu = model.logits(&patches, &mut rng).unwrap();
+    let pred_p = pitome::tensor::argmax(logits_pjrt);
+    let pred_c = pitome::tensor::argmax(&logits_cpu);
+    assert_eq!(pred_p, pred_c, "PJRT vs CPU prediction diverged");
+    for (a, b) in logits_pjrt.iter().zip(&logits_cpu) {
+        assert!((a - b).abs() < 5e-2, "logit gap {a} vs {b}");
+    }
+}
+
+#[test]
+fn wrong_input_shape_is_rejected() {
+    let Some((reg, dir)) = registry() else { return };
+    let engine = Engine::cpu().expect("cpu client");
+    let exe = engine.load(&reg, "vit_none_b1").expect("compile");
+    let params = load_flat_params(&dir, "vit_flat.bin").expect("params");
+    let psize = params.len();
+    let err = exe.run(&[
+        HostTensor::F32(params, vec![psize]),
+        HostTensor::F32(vec![0.0; 7], vec![7]),
+    ]);
+    assert!(err.is_err(), "shape mismatch must error");
+}
+
+#[test]
+fn coordinator_end_to_end_batching() {
+    let Some((reg, dir)) = registry() else { return };
+    let selection = [("vit", vec!["vit_pitome_r900_b8".to_string()])];
+    let coord = Arc::new(Coordinator::boot(
+        &reg, &dir, &selection, ServingConfig::default()).expect("boot"));
+
+    // submit 24 requests from 3 threads; all must return the same answers
+    // as direct evaluation
+    let mut expected = Vec::new();
+    let ps = load_model_params(&dir, "vit").unwrap();
+    let cfg = ViTConfig { merge_mode: "pitome".into(), merge_r: 0.9,
+                          ..Default::default() };
+    let model = ViTModel::new(&ps, cfg);
+    let mut rng = Rng::new(0);
+    for i in 0..24u64 {
+        let item = shape_item(TEST_SEED, i);
+        let patches = patchify(&item.image, 4);
+        expected.push(model.predict(&patches, &mut rng).unwrap());
+    }
+
+    let mut rxs = Vec::new();
+    for i in 0..24u64 {
+        let item = shape_item(TEST_SEED, i);
+        let patches = patchify(&item.image, 4);
+        rxs.push(coord.submit_nowait(
+            "vit", Qos::Accuracy,
+            vec![HostTensor::F32(patches.data, vec![64, 16])]).unwrap());
+    }
+    let mut agree = 0usize;
+    for (i, rx) in rxs.into_iter().enumerate() {
+        let resp = rx.recv().expect("response");
+        let logits = resp.outputs[0].as_f32().unwrap();
+        let pred = pitome::tensor::argmax(logits);
+        if pred == expected[i] {
+            agree += 1;
+        }
+        assert!(resp.batch_size >= 1);
+    }
+    assert_eq!(agree, 24, "coordinator answers diverge from direct model");
+
+    // batching actually happened (burst of 24 into batches of <= 8)
+    let snap = &coord.metrics()[0].2;
+    assert!(snap.mean_batch > 1.0, "no batching: {:?}", snap.mean_batch);
+}
+
+#[test]
+fn qos_routes_to_distinct_variants() {
+    let Some((reg, dir)) = registry() else { return };
+    let selection = [("vit", vec!["vit_none_b8".to_string(),
+                                  "vit_pitome_r900_b8".to_string()])];
+    let coord = Coordinator::boot(&reg, &dir, &selection,
+                                  ServingConfig::default()).expect("boot");
+    let item = shape_item(TEST_SEED, 1);
+    let patches = patchify(&item.image, 4);
+    for qos in [Qos::Accuracy, Qos::Throughput] {
+        let resp = coord.submit("vit", qos,
+            vec![HostTensor::F32(patches.data.clone(), vec![64, 16])])
+            .expect("submit");
+        assert_eq!(resp.outputs[0].as_f32().unwrap().len(), 10);
+    }
+    let metrics = coord.metrics();
+    assert_eq!(metrics.len(), 2);
+    // both variants saw exactly one request
+    let total: u64 = metrics.iter().map(|(_, _, s)| s.count).sum();
+    assert_eq!(total, 2);
+}
