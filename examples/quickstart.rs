@@ -33,6 +33,7 @@ fn main() -> anyhow::Result<()> {
     let ctx = MergeCtx {
         x: &patches, kf: &patches, sizes: &sizes, attn_cls: &attn,
         margin: 0.45, k: 16, protect_first: 0,
+        tofu_threshold: pitome::config::DEFAULT_TOFU_PRUNE_THRESHOLD,
     };
     let mut rng = Rng::new(1);
     let (merged, new_sizes) = merge_step(MergeMode::PiToMe, &ctx, &mut rng);

@@ -1,10 +1,14 @@
-//! PERF/L3 — merge-engine micro-benchmarks: energy score, each merge
-//! algorithm, and the full plan+apply pipeline across token counts.
+//! PERF/L3 — merge-engine micro-benchmarks: the shared cosine Gram,
+//! energy score, each merge algorithm (one Gram per step), and batched
+//! merge throughput across worker threads.
 //! (Custom harness; criterion unavailable — DESIGN.md §11.)
 
+use pitome::config::DEFAULT_TOFU_PRUNE_THRESHOLD;
 use pitome::data::Rng;
-use pitome::merge::{energy_scores, merge_step, MergeCtx, MergeMode};
-use pitome::tensor::Mat;
+use pitome::merge::batch::{merge_step_batch, recommended_workers, BatchSeq};
+use pitome::merge::{energy_from_gram, energy_scores, merge_step, MergeCtx,
+                    MergeMode};
+use pitome::tensor::{CosineGram, Mat};
 use pitome::util::Bench;
 
 fn random_tokens(n: usize, h: usize, seed: u64) -> Mat {
@@ -21,6 +25,12 @@ fn main() {
         b.run(&format!("energy_scores n={n} h={h}"), || {
             energy_scores(&kf, 0.45)
         });
+        // the shared-Gram split: build once, score from the Gram
+        b.run(&format!("gram_build    n={n} h={h}"), || CosineGram::build(&kf));
+        let g = CosineGram::build(&kf);
+        b.run(&format!("energy_from_gram n={n} h={h}"), || {
+            energy_from_gram(&g, 0.45)
+        });
     }
 
     let n = 197;
@@ -36,9 +46,36 @@ fn main() {
             let mut rng = Rng::new(9);
             let ctx = MergeCtx { x: &x, kf: &kf, sizes: &sizes,
                                  attn_cls: &attn, margin: 0.45, k,
-                                 protect_first: 1 };
+                                 protect_first: 1,
+                                 tofu_threshold: DEFAULT_TOFU_PRUNE_THRESHOLD };
             merge_step(mode, &ctx, &mut rng)
         });
+    }
+
+    // batched merging across sequences (the serving path): B sequences per
+    // call, fanned out over the available worker threads
+    let batch_n = 8usize;
+    let workers = recommended_workers();
+    let mats: Vec<(Mat, Mat)> = (0..batch_n as u64)
+        .map(|i| (random_tokens(n, h, 30 + i), random_tokens(n, h, 40 + i)))
+        .collect();
+    for w in [1usize, workers] {
+        b.run_throughput(
+            &format!("merge_batch pitome B={batch_n} workers={w}"),
+            batch_n as u64,
+            || {
+                let seqs: Vec<BatchSeq> = mats.iter().enumerate()
+                    .map(|(i, (xb, kb))| BatchSeq {
+                        ctx: MergeCtx {
+                            x: xb, kf: kb, sizes: &sizes, attn_cls: &attn,
+                            margin: 0.45, k, protect_first: 1,
+                            tofu_threshold: DEFAULT_TOFU_PRUNE_THRESHOLD,
+                        },
+                        seed: i as u64,
+                    })
+                    .collect();
+                merge_step_batch(MergeMode::PiToMe, &seqs, w)
+            });
     }
 
     // paper claim: PiToMe within a few ms of ToMe — report the ratio
@@ -49,5 +86,5 @@ fn main() {
         .find(|r| r.name.contains("step tome")).unwrap();
     let ratio = pitome.p50_ns() as f64 / tome.p50_ns() as f64;
     println!("\npitome/tome runtime ratio (p50) at n={n}: {ratio:.2}x \
-              (paper: comparable; energy adds one Gram pass)");
+              (paper: comparable; scoring and matching share one Gram)");
 }

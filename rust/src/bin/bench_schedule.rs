@@ -83,6 +83,7 @@ fn accuracy_with_plan(ps: &pitome::model::ParamStore, cfg: &ViTConfig,
         mode: pitome::merge::MergeMode::PiToMe,
         plan,
         prop_attn: true,
+        tofu_threshold: cfg.tofu_threshold,
     };
     let model = ViTModel::new(ps, cfg.clone());
     let mut ok = 0usize;

@@ -6,6 +6,14 @@
 
 use crate::merge::{merge_plan, MergeMode};
 
+/// Default ToFu prune threshold: matched pairs whose cosine similarity
+/// falls below this prune instead of merging.  Previously hardcoded in
+/// `merge_step`; lifted here so benches and eval sweeps can vary it
+/// (`ViTConfig::tofu_threshold` / `TextConfig::tofu_threshold` /
+/// `MergeCtx::tofu_threshold`).  The cross-language testvectors were
+/// generated at 0.45, so that stays the default.
+pub const DEFAULT_TOFU_PRUNE_THRESHOLD: f32 = 0.45;
+
 /// ViT family config — must mirror `compile.common.ViTConfig` so the Rust
 /// CPU reference and the AOT artifacts agree on shapes and plans.
 #[derive(Clone, Debug)]
@@ -34,6 +42,8 @@ pub struct ViTConfig {
     pub merge_layers: Option<Vec<usize>>,
     /// proportional attention on/off
     pub prop_attn: bool,
+    /// ToFu prune threshold (only used by mode "tofu")
+    pub tofu_threshold: f32,
 }
 
 impl Default for ViTConfig {
@@ -51,6 +61,7 @@ impl Default for ViTConfig {
             merge_r: 1.0,
             merge_layers: None,
             prop_attn: true,
+            tofu_threshold: DEFAULT_TOFU_PRUNE_THRESHOLD,
         }
     }
 }
@@ -147,6 +158,8 @@ pub struct TextConfig {
     pub merge_layers: Option<Vec<usize>>,
     /// proportional attention
     pub prop_attn: bool,
+    /// ToFu prune threshold (only used by mode "tofu")
+    pub tofu_threshold: f32,
 }
 
 impl Default for TextConfig {
@@ -164,6 +177,7 @@ impl Default for TextConfig {
             merge_r: 1.0,
             merge_layers: Some(vec![0, 1, 2]),
             prop_attn: true,
+            tofu_threshold: DEFAULT_TOFU_PRUNE_THRESHOLD,
         }
     }
 }

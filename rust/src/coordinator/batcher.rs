@@ -1,7 +1,15 @@
 //! Dynamic batcher: one worker thread per model variant, collecting
-//! requests up to `max_batch` or `batch_timeout_us`, padding the batch to
-//! the artifact's compiled batch size, executing on PJRT, and splitting the
-//! outputs back per request.
+//! requests up to `max_batch` or `batch_timeout_us`, executing the batch,
+//! and splitting the outputs back per request.
+//!
+//! Two execution backends share the same batching loop:
+//! * **PJRT** ([`VariantWorker::spawn`]) — pads the batch to the
+//!   artifact's compiled batch size and executes the HLO artifact.
+//! * **CPU reference** ([`VariantWorker::spawn_cpu`]) — runs the pure-Rust
+//!   ViT through the batch encoder, whose per-layer merge steps fan the
+//!   whole batch out over `ServingConfig::workers` threads
+//!   (`merge::batch`).  Needs no artifacts, so serving works — and
+//!   benefits from batched merging — even before `make artifacts`.
 //!
 //! Built on std sync primitives (DESIGN.md §11): a bounded
 //! `mpsc::sync_channel` is the admission-control boundary; `recv_timeout`
@@ -14,9 +22,11 @@ use std::time::{Duration, Instant};
 
 use std::path::PathBuf;
 
-use crate::config::ServingConfig;
+use crate::config::{ServingConfig, ViTConfig};
 use crate::error::{Error, Result};
+use crate::model::{ParamStore, ViTModel};
 use crate::runtime::{ArtifactEntry, Engine, Executable, HostTensor};
+use crate::tensor::Mat;
 
 use super::metrics::Metrics;
 use super::request::InferRequest;
@@ -34,37 +44,27 @@ pub struct VariantWorker {
 }
 
 impl VariantWorker {
-    /// Spawn a worker that compiles `hlo_path` on its own PJRT client
-    /// (PJRT handles are not Send; per-thread clients keep this safe) and
-    /// serves batches.  `params` is the artifact's leading flat-weights
-    /// input (empty vec for artifacts without params).
-    pub fn spawn(hlo_path: PathBuf, entry: ArtifactEntry, params: Vec<f32>,
-                 cfg: &ServingConfig) -> VariantWorker {
+    /// Shared worker bootstrap: channel, metrics, depth counter, thread.
+    /// `init` runs on the worker thread and produces the batch-execution
+    /// closure (returning `None` aborts the worker, e.g. when PJRT is
+    /// unavailable — submitters then observe a closed queue).
+    fn spawn_worker<E, I>(name: String, cfg: &ServingConfig, max_batch: usize,
+                          init: I) -> VariantWorker
+    where
+        E: Fn(&[InferRequest]) -> Result<Vec<Vec<HostTensor>>> + 'static,
+        I: FnOnce() -> Option<E> + Send + 'static,
+    {
         let (tx, rx) = std::sync::mpsc::sync_channel::<InferRequest>(cfg.queue_capacity);
         let metrics = Arc::new(Metrics::default());
         let depth = Arc::new(AtomicUsize::new(0));
         let m2 = metrics.clone();
         let d2 = depth.clone();
-        let max_batch = cfg.max_batch.min(entry.meta.batch);
         let timeout = Duration::from_micros(cfg.batch_timeout_us);
         let join = std::thread::Builder::new()
-            .name(format!("pitome-worker-{}", entry.file))
+            .name(name)
             .spawn(move || {
-                let engine = match Engine::cpu() {
-                    Ok(e) => e,
-                    Err(e) => {
-                        eprintln!("[pitome worker] PJRT client failed: {e}");
-                        return;
-                    }
-                };
-                let exe = match engine.compile_file(&hlo_path, entry) {
-                    Ok(e) => e,
-                    Err(e) => {
-                        eprintln!("[pitome worker] compile failed: {e}");
-                        return;
-                    }
-                };
-                worker_loop(exe, params, rx, m2, d2, max_batch, timeout)
+                let Some(exec) = init() else { return };
+                worker_loop(exec, rx, m2, d2, max_batch, timeout)
             })
             .expect("spawn worker");
         VariantWorker {
@@ -74,6 +74,55 @@ impl VariantWorker {
             capacity: cfg.queue_capacity,
             join: Some(join),
         }
+    }
+
+    /// Spawn a worker that compiles `hlo_path` on its own PJRT client
+    /// (PJRT handles are not Send; per-thread clients keep this safe) and
+    /// serves batches.  `params` is the artifact's leading flat-weights
+    /// input (empty vec for artifacts without params).
+    pub fn spawn(hlo_path: PathBuf, entry: ArtifactEntry, params: Vec<f32>,
+                 cfg: &ServingConfig) -> VariantWorker {
+        let max_batch = cfg.max_batch.min(entry.meta.batch);
+        let name = format!("pitome-worker-{}", entry.file);
+        Self::spawn_worker(name, cfg, max_batch, move || {
+            let engine = match Engine::cpu() {
+                Ok(e) => e,
+                Err(e) => {
+                    eprintln!("[pitome worker] PJRT client failed: {e}");
+                    return None;
+                }
+            };
+            let exe = match engine.compile_file(&hlo_path, entry) {
+                Ok(e) => e,
+                Err(e) => {
+                    eprintln!("[pitome worker] compile failed: {e}");
+                    return None;
+                }
+            };
+            Some(move |batch: &[InferRequest]| {
+                // the client must outlive its executable
+                let _ = &engine;
+                run_batch(&exe, &params, batch)
+            })
+        })
+    }
+
+    /// Spawn a worker that serves the pure-Rust CPU reference ViT (no
+    /// PJRT artifacts required).  Requests carry a single f32 patches
+    /// tensor `(n_patches, patch_dim)`; responses carry the class logits.
+    /// Each collected batch runs through the batch encoder, so its merge
+    /// steps are parallelized over `cfg.workers` threads.
+    pub fn spawn_cpu(ps: Arc<ParamStore>, model_cfg: ViTConfig,
+                     cfg: &ServingConfig) -> VariantWorker {
+        let max_batch = cfg.max_batch;
+        let workers = cfg.workers.max(1);
+        let name = format!("pitome-cpu-{}-r{:.0}",
+                           model_cfg.merge_mode, model_cfg.merge_r * 1000.0);
+        Self::spawn_worker(name, cfg, max_batch, move || {
+            Some(move |batch: &[InferRequest]| {
+                cpu_run_batch(&ps, &model_cfg, workers, batch)
+            })
+        })
     }
 
     /// Blocking submit (backpressure by blocking on the bounded queue).
@@ -119,10 +168,13 @@ impl Drop for VariantWorker {
     }
 }
 
-#[allow(clippy::too_many_arguments)]
-fn worker_loop(exe: Executable, params: Vec<f32>,
-               rx: Receiver<InferRequest>, metrics: Arc<Metrics>,
-               depth: Arc<AtomicUsize>, max_batch: usize, timeout: Duration) {
+/// Shared batching loop: collect up to `max_batch` requests (or until the
+/// deadline), run them through `exec`, and fan the responses back out.
+fn worker_loop<E>(exec: E, rx: Receiver<InferRequest>, metrics: Arc<Metrics>,
+                  depth: Arc<AtomicUsize>, max_batch: usize, timeout: Duration)
+where
+    E: Fn(&[InferRequest]) -> Result<Vec<Vec<HostTensor>>>,
+{
     loop {
         let first = match rx.recv() {
             Ok(r) => r,
@@ -143,7 +195,7 @@ fn worker_loop(exe: Executable, params: Vec<f32>,
         }
         depth.fetch_sub(batch.len(), Ordering::Relaxed);
         let exec_start = Instant::now();
-        let result = run_batch(&exe, &params, &batch);
+        let result = exec(&batch);
         let exec_us = exec_start.elapsed().as_micros() as u64;
         let batch_size = batch.len();
         metrics.record_batch(batch_size);
@@ -167,6 +219,40 @@ fn worker_loop(exe: Executable, params: Vec<f32>,
             }
         }
     }
+}
+
+/// Execute a batch on the CPU reference ViT: parse each request's patches
+/// tensor, run the batch encoder (merge steps parallelized over `workers`
+/// threads), and return one logits tensor per request.
+fn cpu_run_batch(ps: &ParamStore, cfg: &ViTConfig, workers: usize,
+                 batch: &[InferRequest]) -> Result<Vec<Vec<HostTensor>>> {
+    let model = ViTModel::new(ps, cfg.clone());
+    // exact-shape admission: a malformed request must become an error (the
+    // responders are dropped, submitters see a closed channel), never a
+    // panic that would kill the worker thread for every later request
+    let (want_rows, want_cols) = (cfg.num_patches(), cfg.patch_dim());
+    let mut patches = Vec::with_capacity(batch.len());
+    for (i, req) in batch.iter().enumerate() {
+        let t = req.inputs.first().ok_or_else(|| {
+            Error::Coordinator(format!("cpu worker: request {i} has no inputs"))
+        })?;
+        let d = t.as_f32()?;
+        let shape = t.shape();
+        if shape != [want_rows, want_cols] || d.len() != want_rows * want_cols {
+            return Err(Error::Shape(format!(
+                "cpu worker: request {i} patches shape {shape:?} != \
+                 expected ({want_rows}, {want_cols})")));
+        }
+        patches.push(Mat::from_vec(want_rows, want_cols, d.to_vec()));
+    }
+    let logits = model.logits_batch(&patches, 0, workers)?;
+    Ok(logits
+        .into_iter()
+        .map(|lg| {
+            let n = lg.len();
+            vec![HostTensor::F32(lg, vec![n])]
+        })
+        .collect())
 }
 
 /// Stack per-request inputs into the artifact batch, execute, split.

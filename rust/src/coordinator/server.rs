@@ -3,10 +3,12 @@
 
 use std::path::Path;
 use std::sync::mpsc;
+use std::sync::Arc;
 use std::time::Instant;
 
-use crate::config::ServingConfig;
+use crate::config::{ServingConfig, ViTConfig};
 use crate::error::{Error, Result};
+use crate::model::ParamStore;
 use crate::runtime::{load_flat_params, HostTensor, Registry};
 
 use super::batcher::VariantWorker;
@@ -45,6 +47,35 @@ impl Coordinator {
                     artifact: name.clone(),
                     mode,
                     r,
+                    worker,
+                });
+            }
+        }
+        Ok(Coordinator { router, cfg })
+    }
+
+    /// Boot a coordinator that serves the pure-Rust CPU reference ViT —
+    /// no PJRT artifacts required.  `selection` maps each logical model to
+    /// its compression ladder of `(merge mode, keep ratio)` rungs,
+    /// most-accurate-first.  Every rung shares the same parameter store;
+    /// each collected batch runs through the batch encoder, whose merge
+    /// steps fan out over `cfg.workers` threads (`merge::batch`).
+    pub fn boot_cpu(ps: &Arc<ParamStore>,
+                    selection: &[(&str, Vec<(String, f64)>)],
+                    cfg: ServingConfig) -> Result<Coordinator> {
+        let mut router = Router::new();
+        for (model, rungs) in selection {
+            for (mode, r) in rungs {
+                let model_cfg = ViTConfig {
+                    merge_mode: mode.clone(),
+                    merge_r: *r,
+                    ..Default::default()
+                };
+                let worker = VariantWorker::spawn_cpu(ps.clone(), model_cfg, &cfg);
+                router.add_variant(model, Variant {
+                    artifact: format!("cpu_{}_r{:.0}", mode, r * 1000.0),
+                    mode: mode.clone(),
+                    r: *r,
                     worker,
                 });
             }

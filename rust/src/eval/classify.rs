@@ -3,7 +3,7 @@
 //! reference ViT, plus FLOPs cost-model rows for the paper-scale backbones.
 
 use crate::config::ViTConfig;
-use crate::data::{patchify, shape_item, Rng, TEST_SEED};
+use crate::data::{patchify, shape_item, TEST_SEED};
 use crate::error::Result;
 use crate::model::{flops, ParamStore, ViTModel};
 
@@ -22,23 +22,41 @@ pub struct ClassifyRow {
     pub speedup: f64,
 }
 
-/// Evaluate one (mode, r) configuration over `n_test` ShapeBench items.
+/// Items scored per batched encoder pass.
+const EVAL_CHUNK: usize = 32;
+
+/// Evaluate one (mode, r) configuration over `n_test` ShapeBench items,
+/// batching the encoder across all available worker threads.
 pub fn eval_config(ps: &ParamStore, mode: &str, r: f64, n_test: usize)
                    -> Result<ClassifyRow> {
+    eval_config_with_workers(ps, mode, r, n_test,
+                             crate::merge::batch::recommended_workers())
+}
+
+/// [`eval_config`] with an explicit worker-thread count (1 = serial).
+pub fn eval_config_with_workers(ps: &ParamStore, mode: &str, r: f64,
+                                n_test: usize, workers: usize)
+                                -> Result<ClassifyRow> {
     let cfg = ViTConfig {
         merge_mode: mode.to_string(),
         merge_r: r,
         ..Default::default()
     };
     let model = ViTModel::new(ps, cfg.clone());
-    let mut rng = Rng::new(0xE7A1);
     let mut correct = 0usize;
-    for i in 0..n_test {
-        let item = shape_item(TEST_SEED, i as u64);
-        let patches = patchify(&item.image, cfg.patch_size);
-        if model.predict(&patches, &mut rng)? == item.label {
-            correct += 1;
+    let mut done = 0usize;
+    while done < n_test {
+        let count = EVAL_CHUNK.min(n_test - done);
+        let mut patches = Vec::with_capacity(count);
+        let mut labels = Vec::with_capacity(count);
+        for j in 0..count {
+            let item = shape_item(TEST_SEED, (done + j) as u64);
+            patches.push(patchify(&item.image, cfg.patch_size));
+            labels.push(item.label);
         }
+        let preds = model.predict_batch(&patches, 0xE7A1 ^ done as u64, workers)?;
+        correct += preds.iter().zip(&labels).filter(|(p, l)| p == l).count();
+        done += count;
     }
     Ok(ClassifyRow {
         mode: mode.to_string(),

@@ -8,11 +8,11 @@
 
 use crate::data::Rng;
 use crate::graph::{spectral_distance, token_graph, Partition};
-use crate::merge::energy::energy_scores;
-use crate::merge::pitome::{ordered_bsm_plan, Split};
-use crate::merge::tome::tome_plan;
+use crate::merge::energy::energy_from_gram;
+use crate::merge::pitome::{ordered_bsm_plan_gram, Split};
+use crate::merge::tome::tome_plan_gram;
 use crate::merge::{apply_plan, MergePlan};
-use crate::tensor::Mat;
+use crate::tensor::{CosineGram, Mat};
 
 /// How cluster members are laid out over token positions.  ToMe's parity
 /// split is sensitive to this (Lemma 3 / Fig. 1): when a cluster
@@ -130,15 +130,17 @@ pub fn iterative_coarsen(kf0: &Mat, algo: CoarsenAlgo, steps: usize, k: usize,
         if kf.rows < 2 * k + 1 {
             break;
         }
+        // one shared Gram per coarsening step, reused by scoring + matching
+        let g = CosineGram::build(&kf);
         let plan: MergePlan = match algo {
             CoarsenAlgo::PiToMe => {
-                let e = energy_scores(&kf, margin);
-                ordered_bsm_plan(&kf, &e, k, 0, Split::Alternate, true, &mut rng)
+                let e = energy_from_gram(&g, margin);
+                ordered_bsm_plan_gram(&g, &e, k, 0, Split::Alternate, true, &mut rng)
             }
-            CoarsenAlgo::ToMe => tome_plan(&kf, k, 0, None),
+            CoarsenAlgo::ToMe => tome_plan_gram(&g, k, 0, None),
             CoarsenAlgo::Random => {
                 let e: Vec<f32> = (0..kf.rows).map(|_| rng.next_f64() as f32).collect();
-                ordered_bsm_plan(&kf, &e, k, 0, Split::Random, true, &mut rng)
+                ordered_bsm_plan_gram(&g, &e, k, 0, Split::Random, true, &mut rng)
             }
         };
         // update partition: token a joins the group of b[dst[a]]

@@ -2,10 +2,10 @@
 //! sentiment accuracy vs FLOPs with compression on the first three layers.
 
 use crate::config::TextConfig;
-use crate::data::{sent_item, Rng, TEST_SEED};
+use crate::data::{sent_item, TEST_SEED};
 use crate::error::Result;
 use crate::model::flops::encoder_flops;
-use crate::model::{bert_logits, ParamStore};
+use crate::model::{bert_logits_batch, ParamStore};
 use crate::tensor::argmax;
 
 /// One text-classification row.
@@ -21,22 +21,45 @@ pub struct TextRow {
     pub flops_speedup: f64,
 }
 
-/// Evaluate one configuration over `n` test sentences.
+/// Sentences scored per batched encoder pass.
+const EVAL_CHUNK: usize = 32;
+
+/// Evaluate one configuration over `n` test sentences, batching the
+/// encoder across all available worker threads.
 pub fn eval_config(ps: &ParamStore, mode: &str, r: f64, n: usize)
                    -> Result<TextRow> {
+    eval_config_with_workers(ps, mode, r, n,
+                             crate::merge::batch::recommended_workers())
+}
+
+/// [`eval_config`] with an explicit worker-thread count (1 = serial).
+pub fn eval_config_with_workers(ps: &ParamStore, mode: &str, r: f64, n: usize,
+                                workers: usize) -> Result<TextRow> {
     let cfg = TextConfig {
         merge_mode: mode.into(),
         merge_r: r,
         ..Default::default()
     };
-    let mut rng = Rng::new(0x7E57);
     let mut correct = 0usize;
-    for i in 0..n {
-        let (toks, label) = sent_item(TEST_SEED ^ 0xAB, i as u64, cfg.seq_len, 16);
-        let lg = bert_logits(ps, &cfg, &toks, &mut rng)?;
-        if argmax(&lg) == label {
-            correct += 1;
+    let mut done = 0usize;
+    while done < n {
+        let count = EVAL_CHUNK.min(n - done);
+        let mut seqs = Vec::with_capacity(count);
+        let mut labels = Vec::with_capacity(count);
+        for j in 0..count {
+            let (toks, label) =
+                sent_item(TEST_SEED ^ 0xAB, (done + j) as u64, cfg.seq_len, 16);
+            seqs.push(toks);
+            labels.push(label);
         }
+        let logits =
+            bert_logits_batch(ps, &cfg, &seqs, 0x7E57 ^ done as u64, workers)?;
+        correct += logits
+            .iter()
+            .zip(&labels)
+            .filter(|(lg, l)| argmax(lg) == **l)
+            .count();
+        done += count;
     }
     let base = TextConfig::default();
     let f_base = encoder_flops(&base.plan(), base.dim, (base.dim as f64 * base.mlp_ratio) as usize, false);

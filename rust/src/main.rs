@@ -94,12 +94,43 @@ fn spectral(steps: usize, k: usize) {
 }
 
 fn serve(dir: &PathBuf, requests: usize, rate: f64) -> anyhow::Result<()> {
-    let reg = Registry::load(dir).map_err(|e| anyhow::anyhow!("{e}"))?;
-    let selection = [("vit", vec!["vit_none_b8".to_string(),
-                                  "vit_pitome_r900_b8".to_string()])];
-    let coord = Arc::new(
-        Coordinator::boot(&reg, dir, &selection, ServingConfig::default())
-            .map_err(|e| anyhow::anyhow!("{e}"))?);
+    let coord = match Registry::load(dir) {
+        Ok(reg) => {
+            let selection = [("vit", vec!["vit_none_b8".to_string(),
+                                          "vit_pitome_r900_b8".to_string()])];
+            Arc::new(Coordinator::boot(&reg, dir, &selection,
+                                       ServingConfig::default())
+                .map_err(|e| anyhow::anyhow!("{e}"))?)
+        }
+        Err(e) => {
+            // no artifacts: serve the pure-Rust CPU reference model
+            // instead (trained weights if present, synthetic otherwise)
+            println!("(no artifact registry: {e})");
+            println!("(serving the CPU reference model via boot_cpu)");
+            let ps = Arc::new(match load_model_params(dir, "vit") {
+                Ok(ps) => {
+                    println!("(using trained vit params from {})", dir.display());
+                    ps
+                }
+                Err(e) => {
+                    // make the degraded mode loud: predictions from
+                    // synthetic weights are deterministic but untrained
+                    println!("(vit params unavailable: {e})");
+                    println!("(falling back to SYNTHETIC weights — \
+                              predictions are untrained)");
+                    pitome::model::synthetic_vit_store(&ViTConfig::default(), 7)
+                }
+            });
+            let selection = [("vit", vec![("none".to_string(), 1.0),
+                                          ("pitome".to_string(), 0.9)])];
+            let cfg = ServingConfig {
+                workers: pitome::merge::batch::recommended_workers(),
+                ..Default::default()
+            };
+            Arc::new(Coordinator::boot_cpu(&ps, &selection, cfg)
+                .map_err(|e| anyhow::anyhow!("{e}"))?)
+        }
+    };
 
     let trace = generate_trace(&TraceConfig {
         rate, count: requests, ..Default::default()

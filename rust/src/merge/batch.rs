@@ -1,0 +1,213 @@
+//! Batched merging: run merge steps for a batch of sequences across
+//! scoped worker threads (std::thread only — DESIGN.md §11 allows no
+//! external thread-pool crates).
+//!
+//! # API
+//!
+//! * [`merge_step_batch`] — one [`merge_step`](super::merge_step) per
+//!   [`BatchSeq`], fanned out over up to `workers` threads.  Each sequence
+//!   owns a deterministic per-item RNG seed, so results are independent of
+//!   thread scheduling and identical to the serial path for every
+//!   deterministic mode (PiToMe/ToMe/ToFu/DCT/DiffRate); stochastic modes
+//!   (random split / random pruning) are driven by the per-item seed.
+//! * [`parallel_map`] / [`parallel_map_mut`] — the underlying scoped
+//!   fan-out helpers, reused by the batch encoder
+//!   (`model::encoder::encoder_forward_batch`), the eval harnesses, and
+//!   the coordinator's CPU workers.
+//!
+//! Each sequence still builds exactly one cosine Gram, on whichever worker
+//! thread processes it — batching composes with the shared-Gram pipeline
+//! rather than replacing it.
+
+use super::{merge_step, MergeCtx, MergeMode};
+use crate::data::Rng;
+use crate::tensor::Mat;
+
+/// One sequence in a merge batch: the per-sequence context plus the seed
+/// that makes stochastic modes deterministic under any thread schedule.
+pub struct BatchSeq<'a> {
+    /// per-sequence merge context
+    pub ctx: MergeCtx<'a>,
+    /// RNG seed for this sequence's merge step
+    pub seed: u64,
+}
+
+/// Number of worker threads to use when the caller has no preference.
+pub fn recommended_workers() -> usize {
+    std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+}
+
+/// Map `f` over `items` using up to `workers` scoped threads, preserving
+/// order.  `workers <= 1` (or a single item) runs inline with no spawns.
+pub fn parallel_map<T, U, F>(items: &[T], workers: usize, f: &F) -> Vec<U>
+where
+    T: Sync,
+    U: Send,
+    F: Fn(usize, &T) -> U + Sync,
+{
+    let n = items.len();
+    if n == 0 {
+        return Vec::new();
+    }
+    let workers = workers.max(1).min(n);
+    if workers == 1 {
+        return items.iter().enumerate().map(|(i, t)| f(i, t)).collect();
+    }
+    let chunk = (n + workers - 1) / workers;
+    let mut out: Vec<Option<U>> = (0..n).map(|_| None).collect();
+    std::thread::scope(|s| {
+        for (ci, (ichunk, ochunk)) in
+            items.chunks(chunk).zip(out.chunks_mut(chunk)).enumerate()
+        {
+            s.spawn(move || {
+                for (off, (item, slot)) in
+                    ichunk.iter().zip(ochunk.iter_mut()).enumerate()
+                {
+                    *slot = Some(f(ci * chunk + off, item));
+                }
+            });
+        }
+    });
+    out.into_iter().map(|o| o.expect("worker filled every slot")).collect()
+}
+
+/// In-place variant of [`parallel_map`]: `f` mutates each item and its
+/// return values are collected in order.
+pub fn parallel_map_mut<T, U, F>(items: &mut [T], workers: usize, f: &F) -> Vec<U>
+where
+    T: Send,
+    U: Send,
+    F: Fn(usize, &mut T) -> U + Sync,
+{
+    let n = items.len();
+    if n == 0 {
+        return Vec::new();
+    }
+    let workers = workers.max(1).min(n);
+    if workers == 1 {
+        return items.iter_mut().enumerate().map(|(i, t)| f(i, t)).collect();
+    }
+    let chunk = (n + workers - 1) / workers;
+    let mut out: Vec<Option<U>> = (0..n).map(|_| None).collect();
+    std::thread::scope(|s| {
+        for (ci, (ichunk, ochunk)) in
+            items.chunks_mut(chunk).zip(out.chunks_mut(chunk)).enumerate()
+        {
+            s.spawn(move || {
+                for (off, (item, slot)) in
+                    ichunk.iter_mut().zip(ochunk.iter_mut()).enumerate()
+                {
+                    *slot = Some(f(ci * chunk + off, item));
+                }
+            });
+        }
+    });
+    out.into_iter().map(|o| o.expect("worker filled every slot")).collect()
+}
+
+/// Run one merge step per sequence across up to `workers` threads,
+/// returning (merged tokens, new sizes) in input order.
+pub fn merge_step_batch(mode: MergeMode, seqs: &[BatchSeq], workers: usize)
+                        -> Vec<(Mat, Vec<f32>)> {
+    parallel_map(seqs, workers, &|_, seq: &BatchSeq| {
+        let mut rng = Rng::new(seq.seed);
+        merge_step(mode, &seq.ctx, &mut rng)
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::DEFAULT_TOFU_PRUNE_THRESHOLD;
+
+    fn rand_mat(n: usize, h: usize, seed: u64) -> Mat {
+        let mut rng = Rng::new(seed);
+        Mat::from_fn(n, h, |_, _| (rng.next_f64() * 2.0 - 1.0) as f32)
+    }
+
+    #[test]
+    fn parallel_map_preserves_order() {
+        let items: Vec<usize> = (0..23).collect();
+        for workers in [1, 2, 4, 7, 23, 64] {
+            let out = parallel_map(&items, workers, &|i, &v| {
+                assert_eq!(i, v);
+                v * 2
+            });
+            assert_eq!(out, items.iter().map(|v| v * 2).collect::<Vec<_>>());
+        }
+    }
+
+    #[test]
+    fn parallel_map_mut_mutates_in_place() {
+        let mut items = vec![1u32; 10];
+        let sums = parallel_map_mut(&mut items, 3, &|i, v| {
+            *v += i as u32;
+            *v
+        });
+        assert_eq!(items, (1..=10).map(|v| v as u32).collect::<Vec<_>>());
+        assert_eq!(sums, items);
+    }
+
+    fn mk_ctx<'a>(x: &'a Mat, kf: &'a Mat, sizes: &'a [f32],
+                  attn: &'a [f32]) -> MergeCtx<'a> {
+        MergeCtx {
+            x, kf, sizes, attn_cls: attn,
+            margin: 0.45, k: 5, protect_first: 1,
+            tofu_threshold: DEFAULT_TOFU_PRUNE_THRESHOLD,
+        }
+    }
+
+    #[test]
+    fn batch_matches_serial_for_deterministic_modes() {
+        let b = 6;
+        let n = 21;
+        let mats: Vec<(Mat, Mat)> = (0..b)
+            .map(|i| (rand_mat(n, 8, 100 + i), rand_mat(n, 8, 200 + i)))
+            .collect();
+        let sizes = vec![1.0f32; n];
+        let attn: Vec<f32> = (0..n).map(|i| 0.01 * (i % 5) as f32).collect();
+        for mode in [MergeMode::PiToMe, MergeMode::ToMe, MergeMode::ToFu,
+                     MergeMode::DiffRate, MergeMode::Dct] {
+            let seqs: Vec<BatchSeq> = mats.iter().enumerate()
+                .map(|(i, (x, kf))| BatchSeq {
+                    ctx: mk_ctx(x, kf, &sizes, &attn),
+                    seed: i as u64,
+                })
+                .collect();
+            let batched = merge_step_batch(mode, &seqs, 4);
+            for (i, (x, kf)) in mats.iter().enumerate() {
+                let mut rng = Rng::new(i as u64);
+                let ctx = mk_ctx(x, kf, &sizes, &attn);
+                let (want, want_sizes) = merge_step(mode, &ctx, &mut rng);
+                let (got, got_sizes) = &batched[i];
+                assert_eq!(got.rows, want.rows, "{mode:?} seq {i}");
+                assert!(got.max_abs_diff(&want) < 1e-6, "{mode:?} seq {i}");
+                assert_eq!(got_sizes, &want_sizes, "{mode:?} seq {i}");
+            }
+        }
+    }
+
+    #[test]
+    fn stochastic_modes_are_seed_deterministic() {
+        let n = 19;
+        let x = rand_mat(n, 8, 1);
+        let sizes = vec![1.0f32; n];
+        let attn = vec![0.0f32; n];
+        let mk_seq = |seed| BatchSeq {
+            ctx: MergeCtx {
+                x: &x, kf: &x, sizes: &sizes, attn_cls: &attn,
+                margin: 0.45, k: 4, protect_first: 1,
+                tofu_threshold: DEFAULT_TOFU_PRUNE_THRESHOLD,
+            },
+            seed,
+        };
+        let seqs: Vec<BatchSeq> = (0..4).map(mk_seq).collect();
+        let a = merge_step_batch(MergeMode::Random, &seqs, 4);
+        let seqs: Vec<BatchSeq> = (0..4).map(mk_seq).collect();
+        let b = merge_step_batch(MergeMode::Random, &seqs, 2);
+        for (ra, rb) in a.iter().zip(&b) {
+            assert!(ra.0.max_abs_diff(&rb.0) < 1e-7);
+            assert_eq!(ra.1, rb.1);
+        }
+    }
+}

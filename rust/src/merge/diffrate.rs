@@ -6,12 +6,20 @@
 //! CLS-attended tokens into their most similar kept token.
 
 use super::plan::MergePlan;
-use crate::tensor::{argsort_asc, normalize_rows, Mat};
+use crate::tensor::{argsort_asc, CosineGram, Mat};
 
-/// Build the attention-ranked plan.
+/// Build the attention-ranked plan from key features (convenience wrapper:
+/// builds its own [`CosineGram`]; the merge hot path shares one via
+/// [`diffrate_plan_gram`]).
 pub fn diffrate_plan(kf: &Mat, attn_cls: &[f32], k: usize,
                      protect_first: usize) -> MergePlan {
-    let n = kf.rows;
+    diffrate_plan_gram(&CosineGram::build(kf), attn_cls, k, protect_first)
+}
+
+/// Build the attention-ranked plan from a precomputed shared Gram.
+pub fn diffrate_plan_gram(g: &CosineGram, attn_cls: &[f32], k: usize,
+                          protect_first: usize) -> MergePlan {
+    let n = g.n();
     assert_eq!(attn_cls.len(), n);
     let mut score = attn_cls.to_vec();
     for it in score.iter_mut().take(protect_first) {
@@ -22,24 +30,11 @@ pub fn diffrate_plan(kf: &Mat, attn_cls: &[f32], k: usize,
     let mut b: Vec<usize> = order[k..].to_vec();
     b.sort_unstable();
 
-    let kn = normalize_rows(kf);
     let mut dst = vec![0usize; k];
     for (ai, &aidx) in a.iter().enumerate() {
-        let ra = kn.row(aidx);
-        let mut best = f32::NEG_INFINITY;
-        for (bi, &bidx) in b.iter().enumerate() {
-            if bidx < protect_first {
-                continue; // CLS cannot receive merges
-            }
-            let rb = kn.row(bidx);
-            let mut dot = 0f32;
-            for c in 0..kn.cols {
-                dot += ra[c] * rb[c];
-            }
-            if dot > best {
-                best = dot;
-                dst[ai] = bi;
-            }
+        // CLS (indices below protect_first) cannot receive merges
+        if let Some((bi, _)) = g.best_match(aidx, &b, protect_first) {
+            dst[ai] = bi;
         }
     }
     MergePlan { protect: vec![], a, b, dst, gate: vec![1.0; k] }

@@ -5,7 +5,7 @@
 //! Numerics mirror `ref.energy_scores` (eps 1e-6 normalization, diagonal
 //! masked) to float tolerance.
 
-use crate::tensor::{normalize_rows, Mat};
+use crate::tensor::{CosineGram, Mat};
 
 /// ELU floor coefficient (paper uses alpha = 1).
 pub const ALPHA: f32 = 1.0;
@@ -26,23 +26,27 @@ pub fn layer_margin(layer: usize, num_layers: usize) -> f32 {
     base - base * layer as f32 / (num_layers.max(1) as f32)
 }
 
-/// Energy scores for key features `kf` (n, h).
-///
-/// O(n^2 h) like the paper; this is the benched hot path (see
-/// rust/benches/merge_bench.rs and EXPERIMENTS.md §Perf).  Optimized:
-/// the Gram is symmetric, so each pair is computed once and credited to
-/// both endpoints (2x), and the dot product is written as an
-/// iterator-zip sum the compiler auto-vectorizes.
+/// Energy scores for key features `kf` (n, h): convenience wrapper that
+/// builds its own Gram.  The merge hot path ([`crate::merge::merge_step`])
+/// instead builds **one** [`CosineGram`] per step and calls
+/// [`energy_from_gram`] so the same Gram also drives bipartite matching.
 pub fn energy_scores(kf: &Mat, margin: f32) -> Vec<f32> {
-    let n = kf.rows;
-    let kn = normalize_rows(kf);
+    energy_from_gram(&CosineGram::build(kf), margin)
+}
+
+/// Energy scores from a precomputed shared Gram (the single-pass pipeline).
+///
+/// O(n^2) over the symmetric Gram: each pair's margin-clamped similarity is
+/// read once and credited to both endpoints, mirroring the two-sided
+/// traversal the original O(n^2 h) implementation used — so results match
+/// the old two-pass path to float tolerance.
+pub fn energy_from_gram(g: &CosineGram, margin: f32) -> Vec<f32> {
+    let n = g.n();
     let mut e = vec![0f32; n];
     for i in 0..n {
-        let ri = kn.row(i);
+        let row = g.w.row(i);
         for j in (i + 1)..n {
-            let rj = kn.row(j);
-            let dot: f32 = ri.iter().zip(rj).map(|(a, b)| a * b).sum();
-            let f = f_margin(dot, margin);
+            let f = f_margin(row[j], margin);
             e[i] += f;
             e[j] += f;
         }
@@ -119,6 +123,42 @@ mod tests {
         let min_cluster = e[..20].iter().cloned().fold(f32::INFINITY, f32::min);
         let max_iso = e[20..].iter().cloned().fold(f32::NEG_INFINITY, f32::max);
         assert!(min_cluster > max_iso, "{min_cluster} vs {max_iso}");
+    }
+
+    #[test]
+    fn energy_from_gram_matches_naive_two_pass() {
+        // reference: the pre-refactor implementation (normalize + direct
+        // per-pair dot products, no shared Gram)
+        fn naive(kf: &Mat, margin: f32) -> Vec<f32> {
+            let n = kf.rows;
+            let kn = crate::tensor::normalize_rows(kf);
+            let mut e = vec![0f32; n];
+            for i in 0..n {
+                let ri = kn.row(i);
+                for j in (i + 1)..n {
+                    let dot: f32 = ri.iter().zip(kn.row(j)).map(|(a, b)| a * b).sum();
+                    let f = f_margin(dot, margin);
+                    e[i] += f;
+                    e[j] += f;
+                }
+            }
+            let inv = 1.0 / n as f32;
+            for v in e.iter_mut() {
+                *v *= inv;
+            }
+            e
+        }
+        let mut rng = Rng::new(17);
+        for &(n, h) in &[(5usize, 3usize), (23, 8), (40, 17)] {
+            let m = Mat::from_fn(n, h, |_, _| (rng.next_f64() * 2.0 - 1.0) as f32);
+            for margin in [-0.2f32, 0.3, 0.7] {
+                let want = naive(&m, margin);
+                let got = energy_from_gram(&CosineGram::build(&m), margin);
+                for (a, b) in got.iter().zip(&want) {
+                    assert!((a - b).abs() < 1e-5, "n={n} h={h} m={margin}: {a} vs {b}");
+                }
+            }
+        }
     }
 
     #[test]

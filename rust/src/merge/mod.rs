@@ -5,7 +5,31 @@
 //! `[protected..., B...]`, every A token merging into `b[dst]` when its
 //! gate is 1.0 and being pruned when 0.0.  Cross-language parity is
 //! asserted against `artifacts/testvectors.json`.
+//!
+//! # The shared-Gram pipeline
+//!
+//! All similarity-driven modes are built around **one**
+//! [`CosineGram`](crate::tensor::CosineGram) per merge step:
+//! [`merge_step`] normalizes the key features and computes the blocked
+//! symmetric cosine Gram exactly once, then feeds it to *both* the energy
+//! score ([`energy::energy_from_gram`], Eq. 4) and the plan builder
+//! ([`pitome::ordered_bsm_plan_gram`], [`tome::tome_plan_gram`],
+//! [`diffrate::diffrate_plan_gram`]).  The pre-refactor pipeline paid for
+//! the O(n²h) Gram twice — once inside `energy_scores` and again inside
+//! the plan builder's A×B dot products — which is why this is the benched
+//! hot path (`cargo bench --bench merge_bench`).  The feature-taking
+//! functions (`energy_scores`, `ordered_bsm_plan`, ...) survive as thin
+//! wrappers that build their own Gram, so external callers are unchanged.
+//!
+//! # Batched merging
+//!
+//! [`batch::merge_step_batch`] runs merge steps for a whole batch of
+//! sequences across scoped worker threads (each sequence still builds
+//! exactly one Gram, on whichever thread processes it).  The batch
+//! encoder (`model::encoder::encoder_forward_batch`), the eval harnesses,
+//! and the serving coordinator's CPU workers all go through it.
 
+pub mod batch;
 pub mod dct;
 pub mod diffrate;
 pub mod energy;
@@ -16,13 +40,14 @@ pub mod schedule;
 pub mod tome;
 pub mod unmerge;
 
-pub use energy::energy_scores;
+pub use batch::{merge_step_batch, BatchSeq};
+pub use energy::{energy_from_gram, energy_scores};
 pub use plan::{apply_plan, MergePlan};
 pub use schedule::{fixed_k_plan, merge_plan, tokens_after_merge};
 pub use unmerge::{unmerge, MergeTracker};
 
 use crate::data::Rng;
-use crate::tensor::Mat;
+use crate::tensor::{CosineGram, Mat};
 
 /// Which merge algorithm to run in a block.
 #[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
@@ -116,54 +141,82 @@ pub struct MergeCtx<'a> {
     pub k: usize,
     /// leading protected tokens (CLS)
     pub protect_first: usize,
+    /// ToFu prune threshold (see `config::DEFAULT_TOFU_PRUNE_THRESHOLD`)
+    pub tofu_threshold: f32,
 }
 
 /// Run one merge step, returning (merged tokens, new sizes).
+///
+/// Similarity-driven modes build exactly one [`CosineGram`] here and share
+/// it between scoring and matching; DCT and random pruning never touch
+/// pairwise similarities and build none.
 pub fn merge_step(mode: MergeMode, ctx: &MergeCtx, rng: &mut Rng) -> (Mat, Vec<f32>) {
     if ctx.k == 0 || mode == MergeMode::None {
         return (ctx.x.clone(), ctx.sizes.to_vec());
     }
     match mode {
         MergeMode::None => unreachable!(),
+        MergeMode::Dct => dct::dct_merge(ctx.x, ctx.sizes, ctx.k, ctx.protect_first),
+        MergeMode::Random => {
+            let plan = random::random_plan(ctx.x.rows, ctx.k, ctx.protect_first, rng);
+            apply_plan(ctx.x, ctx.sizes, &plan)
+        }
+        _ => {
+            let g = CosineGram::build(ctx.kf);
+            merge_step_with_gram(mode, ctx, &g, rng)
+        }
+    }
+}
+
+/// Run one merge step against a caller-provided shared Gram (must have
+/// been built from `ctx.kf`).  Gram-free modes (None/DCT/Random) fall
+/// through to the plain path and ignore `g`.
+pub fn merge_step_with_gram(mode: MergeMode, ctx: &MergeCtx, g: &CosineGram,
+                            rng: &mut Rng) -> (Mat, Vec<f32>) {
+    debug_assert_eq!(g.n(), ctx.kf.rows, "Gram/feature shape mismatch");
+    if ctx.k == 0 {
+        return (ctx.x.clone(), ctx.sizes.to_vec());
+    }
+    match mode {
+        MergeMode::None | MergeMode::Dct | MergeMode::Random => {
+            merge_step(mode, ctx, rng)
+        }
         MergeMode::PiToMe => {
-            let e = energy_scores(ctx.kf, ctx.margin);
-            let plan = pitome::ordered_bsm_plan(
-                ctx.kf, &e, ctx.k, ctx.protect_first, pitome::Split::Alternate, true, rng);
+            let e = energy_from_gram(g, ctx.margin);
+            let plan = pitome::ordered_bsm_plan_gram(
+                g, &e, ctx.k, ctx.protect_first, pitome::Split::Alternate, true, rng);
             apply_plan(ctx.x, ctx.sizes, &plan)
         }
         MergeMode::PiToMeNoProtect => {
-            let e = energy_scores(ctx.kf, ctx.margin);
-            let plan = pitome::ordered_bsm_plan(
-                ctx.kf, &e, ctx.k, ctx.protect_first, pitome::Split::Alternate, false, rng);
+            let e = energy_from_gram(g, ctx.margin);
+            let plan = pitome::ordered_bsm_plan_gram(
+                g, &e, ctx.k, ctx.protect_first, pitome::Split::Alternate, false, rng);
             apply_plan(ctx.x, ctx.sizes, &plan)
         }
         MergeMode::PiToMeRandomSplit => {
-            let e = energy_scores(ctx.kf, ctx.margin);
-            let plan = pitome::ordered_bsm_plan(
-                ctx.kf, &e, ctx.k, ctx.protect_first, pitome::Split::Random, true, rng);
+            let e = energy_from_gram(g, ctx.margin);
+            let plan = pitome::ordered_bsm_plan_gram(
+                g, &e, ctx.k, ctx.protect_first, pitome::Split::Random, true, rng);
             apply_plan(ctx.x, ctx.sizes, &plan)
         }
         MergeMode::PiToMeAttn => {
             let neg: Vec<f32> = ctx.attn_cls.iter().map(|v| -v).collect();
-            let plan = pitome::ordered_bsm_plan(
-                ctx.kf, &neg, ctx.k, ctx.protect_first, pitome::Split::Alternate, true, rng);
+            let plan = pitome::ordered_bsm_plan_gram(
+                g, &neg, ctx.k, ctx.protect_first, pitome::Split::Alternate, true, rng);
             apply_plan(ctx.x, ctx.sizes, &plan)
         }
         MergeMode::ToMe => {
-            let plan = tome::tome_plan(ctx.kf, ctx.k, ctx.protect_first, None);
+            let plan = tome::tome_plan_gram(g, ctx.k, ctx.protect_first, None);
             apply_plan(ctx.x, ctx.sizes, &plan)
         }
         MergeMode::ToFu => {
-            let plan = tome::tome_plan(ctx.kf, ctx.k, ctx.protect_first, Some(0.45));
+            let plan = tome::tome_plan_gram(
+                g, ctx.k, ctx.protect_first, Some(ctx.tofu_threshold));
             apply_plan(ctx.x, ctx.sizes, &plan)
         }
-        MergeMode::Dct => dct::dct_merge(ctx.x, ctx.sizes, ctx.k, ctx.protect_first),
         MergeMode::DiffRate => {
-            let plan = diffrate::diffrate_plan(ctx.kf, ctx.attn_cls, ctx.k, ctx.protect_first);
-            apply_plan(ctx.x, ctx.sizes, &plan)
-        }
-        MergeMode::Random => {
-            let plan = random::random_plan(ctx.x.rows, ctx.k, ctx.protect_first, rng);
+            let plan = diffrate::diffrate_plan_gram(
+                g, ctx.attn_cls, ctx.k, ctx.protect_first);
             apply_plan(ctx.x, ctx.sizes, &plan)
         }
     }
@@ -193,11 +246,65 @@ mod tests {
             let ctx = MergeCtx {
                 x: &x, kf: &x, sizes: &sizes, attn_cls: &attn,
                 margin: 0.4, k: 6, protect_first: 1,
+                tofu_threshold: crate::config::DEFAULT_TOFU_PRUNE_THRESHOLD,
             };
             let (out, out_sizes) = merge_step(mode, &ctx, &mut rng);
             assert_eq!(out.rows, 19, "{mode:?}");
             assert_eq!(out_sizes.len(), 19, "{mode:?}");
         }
+    }
+
+    #[test]
+    fn exactly_one_gram_per_merge_step() {
+        let (x, sizes) = mk(25, 8, 3);
+        let attn: Vec<f32> = (0..25).map(|i| 0.01 * i as f32).collect();
+        let step = |mode| {
+            let mut rng = Rng::new(1);
+            let ctx = MergeCtx {
+                x: &x, kf: &x, sizes: &sizes, attn_cls: &attn,
+                margin: 0.4, k: 6, protect_first: 1,
+                tofu_threshold: crate::config::DEFAULT_TOFU_PRUNE_THRESHOLD,
+            };
+            let before = crate::tensor::gram_builds_this_thread();
+            merge_step(mode, &ctx, &mut rng);
+            crate::tensor::gram_builds_this_thread() - before
+        };
+        for mode in [
+            MergeMode::PiToMe, MergeMode::PiToMeNoProtect,
+            MergeMode::PiToMeRandomSplit, MergeMode::PiToMeAttn,
+            MergeMode::ToMe, MergeMode::ToFu, MergeMode::DiffRate,
+        ] {
+            assert_eq!(step(mode), 1, "{mode:?} must build exactly one Gram");
+        }
+        // similarity-free baselines build none
+        for mode in [MergeMode::Dct, MergeMode::Random] {
+            assert_eq!(step(mode), 0, "{mode:?} must build no Gram");
+        }
+    }
+
+    #[test]
+    fn tofu_threshold_is_sweepable() {
+        // orthogonal candidate groups force low-similarity pairs: a high
+        // threshold prunes them, threshold -1 merges everything.
+        let kf = Mat::from_fn(9, 2, |i, j| {
+            if i == 0 { 0.5 }
+            else if i % 2 == 1 { if j == 0 { 1.0 } else { 0.0 } }
+            else if j == 1 { 1.0 } else { 0.0 }
+        });
+        let sizes = vec![1.0; 9];
+        let attn = vec![0.0; 9];
+        let run = |threshold: f32| {
+            let mut rng = Rng::new(1);
+            let ctx = MergeCtx {
+                x: &kf, kf: &kf, sizes: &sizes, attn_cls: &attn,
+                margin: 0.4, k: 2, protect_first: 1,
+                tofu_threshold: threshold,
+            };
+            let (_, out_sizes) = merge_step(MergeMode::ToFu, &ctx, &mut rng);
+            out_sizes.iter().sum::<f32>()
+        };
+        assert!(run(0.99) < 9.0 - 0.5, "high threshold must prune mass");
+        assert!((run(-1.0) - 9.0).abs() < 1e-4, "threshold -1 must merge all");
     }
 
     #[test]
@@ -209,6 +316,7 @@ mod tests {
             let ctx = MergeCtx {
                 x: &x, kf: &x, sizes: &sizes, attn_cls: &attn,
                 margin: 0.4, k: 9, protect_first: 1,
+                tofu_threshold: crate::config::DEFAULT_TOFU_PRUNE_THRESHOLD,
             };
             let (_, out_sizes) = merge_step(mode, &ctx, &mut rng);
             let total: f32 = out_sizes.iter().sum();

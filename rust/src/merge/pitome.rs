@@ -2,7 +2,7 @@
 
 use super::plan::MergePlan;
 use crate::data::Rng;
-use crate::tensor::{argsort_desc, normalize_rows, Mat};
+use crate::tensor::{argsort_desc, CosineGram, Mat};
 
 /// How merge candidates are split into sets A and B.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -14,12 +14,9 @@ pub enum Split {
     Random,
 }
 
-/// Build the PiToMe plan.
-///
-/// * `scores` — ranking signal, higher = more mergeable (energy, or
-///   `-attn_cls` for the attention-indicator ablation).
-/// * `protect` — if false, *all* candidates enter the matching and only the
-///   `k` most-similar pairs merge (no-protection ablation).
+/// Build the PiToMe plan from key features (convenience wrapper: builds
+/// its own [`CosineGram`]).  The merge hot path shares one Gram between
+/// this and the energy score via [`ordered_bsm_plan_gram`].
 pub fn ordered_bsm_plan(
     kf: &Mat,
     scores: &[f32],
@@ -29,8 +26,33 @@ pub fn ordered_bsm_plan(
     protect: bool,
     rng: &mut Rng,
 ) -> MergePlan {
-    let n = kf.rows;
+    ordered_bsm_plan_gram(&CosineGram::build(kf), scores, k, protect_first,
+                          split, protect, rng)
+}
+
+/// Build the PiToMe plan from a precomputed shared Gram.
+///
+/// * `scores` — ranking signal, higher = more mergeable (energy, or
+///   `-attn_cls` for the attention-indicator ablation).
+/// * `protect` — if false, *all* candidates enter the matching and only the
+///   `k` most-similar pairs merge (no-protection ablation).
+///
+/// `k` is clamped to `(n - protect_first) / 2`: with `2k + protect_first
+/// > n` the candidate slice would otherwise reach into the protected
+/// prefix (whose scores are sunk to `NEG_INFINITY`) and merge protected
+/// tokens — or panic outright when `2k > n`.
+pub fn ordered_bsm_plan_gram(
+    g: &CosineGram,
+    scores: &[f32],
+    k: usize,
+    protect_first: usize,
+    split: Split,
+    protect: bool,
+    rng: &mut Rng,
+) -> MergePlan {
+    let n = g.n();
     assert_eq!(scores.len(), n);
+    let k = k.min(n.saturating_sub(protect_first) / 2);
     // sink protected prefix below every candidate
     let mut s_cand = scores.to_vec();
     for it in s_cand.iter_mut().take(protect_first) {
@@ -51,22 +73,13 @@ pub fn ordered_bsm_plan(
     let a_all: Vec<usize> = merge_idx.iter().step_by(2).copied().collect();
     let b: Vec<usize> = merge_idx.iter().skip(1).step_by(2).copied().collect();
 
-    // pair similarity via normalized dot products
-    let kn = normalize_rows(kf);
+    // pair similarity: O(1) lookups into the shared Gram
     let mut best = vec![f32::NEG_INFINITY; a_all.len()];
     let mut dst_all = vec![0usize; a_all.len()];
     for (ai, &aidx) in a_all.iter().enumerate() {
-        let ra = kn.row(aidx);
-        for (bi, &bidx) in b.iter().enumerate() {
-            let rb = kn.row(bidx);
-            let mut dot = 0f32;
-            for c in 0..kn.cols {
-                dot += ra[c] * rb[c];
-            }
-            if dot > best[ai] {
-                best[ai] = dot;
-                dst_all[ai] = bi;
-            }
+        if let Some((bi, d)) = g.best_match(aidx, &b, 0) {
+            best[ai] = d;
+            dst_all[ai] = bi;
         }
     }
 
@@ -90,7 +103,8 @@ pub fn ordered_bsm_plan(
         (a_merge, dst)
     };
     protect_idx.sort_unstable();
-    MergePlan { protect: protect_idx, a, b, dst, gate: vec![1.0; k] }
+    let gate = vec![1.0; a.len()];
+    MergePlan { protect: protect_idx, a, b, dst, gate }
 }
 
 #[cfg(test)]
@@ -156,6 +170,57 @@ mod tests {
         assert_eq!(out.rows, kf.rows - 5);
         let total: f32 = sizes.iter().sum();
         assert!((total - kf.rows as f32).abs() < 1e-3);
+    }
+
+    #[test]
+    fn oversized_k_is_clamped_and_never_touches_protected() {
+        // regression: with 2k + protect_first > n the old candidate slice
+        // pulled NEG_INFINITY-scored protected tokens into the matching
+        // (or panicked outright when 2k > n).
+        for (n, protect_first, k) in
+            [(9usize, 1usize, 10usize), (5, 1, 7), (8, 3, 4), (6, 1, 3),
+             (4, 2, 5), (7, 7, 2), (3, 1, 1)] {
+            let mut rng = Rng::new(3);
+            let kf = Mat::from_fn(n, 6, |i, j| ((i * 7 + j * 3) % 5) as f32 - 2.0);
+            let e = energy_scores(&kf, 0.4);
+            for protect in [true, false] {
+                let mut r2 = Rng::new(4);
+                let plan = ordered_bsm_plan(
+                    &kf, &e, k, protect_first, Split::Alternate, protect, &mut r2);
+                plan.validate(n).unwrap();
+                let k_eff = k.min((n - protect_first.min(n)) / 2);
+                assert!(plan.n_out() >= n - k_eff,
+                        "n={n} pf={protect_first} k={k}: removed too many");
+                for &i in plan.a.iter().chain(&plan.b) {
+                    assert!(i >= protect_first,
+                            "protected token {i} entered matching \
+                             (n={n} pf={protect_first} k={k} protect={protect})");
+                }
+                for p in 0..protect_first.min(n) {
+                    assert!(plan.protect.contains(&p),
+                            "protected token {p} missing from output");
+                }
+            }
+            // random split on the clamped candidate set stays valid too
+            let plan = ordered_bsm_plan(
+                &kf, &e, k, protect_first, Split::Random, true, &mut rng);
+            plan.validate(n).unwrap();
+        }
+    }
+
+    #[test]
+    fn gram_and_direct_paths_agree() {
+        let kf = clustered(14, 3, 8);
+        let g = crate::tensor::CosineGram::build(&kf);
+        let e = crate::merge::energy::energy_from_gram(&g, 0.5);
+        let mut r1 = Rng::new(6);
+        let mut r2 = Rng::new(6);
+        let p1 = ordered_bsm_plan(&kf, &e, 5, 1, Split::Alternate, true, &mut r1);
+        let p2 = ordered_bsm_plan_gram(&g, &e, 5, 1, Split::Alternate, true, &mut r2);
+        assert_eq!(p1.a, p2.a);
+        assert_eq!(p1.b, p2.b);
+        assert_eq!(p1.dst, p2.dst);
+        assert_eq!(p1.protect, p2.protect);
     }
 
     #[test]

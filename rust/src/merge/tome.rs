@@ -1,34 +1,33 @@
 //! ToMe parity-split BSM (Bolya et al. 2023) and ToFu (prune threshold).
 
 use super::plan::MergePlan;
-use crate::tensor::{argsort_desc, normalize_rows, Mat};
+use crate::tensor::{argsort_desc, CosineGram, Mat};
 
-/// ToMe plan: candidates split by index parity; the k most-similar A tokens
-/// merge into their best B match.  With `prune_threshold`, low-similarity
-/// pairs prune instead of merging (ToFu).
+/// ToMe plan from key features (convenience wrapper: builds its own
+/// [`CosineGram`]; the merge hot path shares one via [`tome_plan_gram`]).
 pub fn tome_plan(kf: &Mat, k: usize, protect_first: usize,
                  prune_threshold: Option<f32>) -> MergePlan {
-    let n = kf.rows;
+    tome_plan_gram(&CosineGram::build(kf), k, protect_first, prune_threshold)
+}
+
+/// ToMe plan from a precomputed shared Gram: candidates split by index
+/// parity; the k most-similar A tokens merge into their best B match.
+/// With `prune_threshold`, low-similarity pairs prune instead of merging
+/// (ToFu).
+pub fn tome_plan_gram(g: &CosineGram, k: usize, protect_first: usize,
+                      prune_threshold: Option<f32>) -> MergePlan {
+    let n = g.n();
     let cand: Vec<usize> = (protect_first..n).collect();
     let a_all: Vec<usize> = cand.iter().step_by(2).copied().collect();
     let b: Vec<usize> = cand.iter().skip(1).step_by(2).copied().collect();
     assert!(k <= a_all.len(), "k={k} exceeds |A|={}", a_all.len());
 
-    let kn = normalize_rows(kf);
     let mut best = vec![f32::NEG_INFINITY; a_all.len()];
     let mut dst_all = vec![0usize; a_all.len()];
     for (ai, &aidx) in a_all.iter().enumerate() {
-        let ra = kn.row(aidx);
-        for (bi, &bidx) in b.iter().enumerate() {
-            let rb = kn.row(bidx);
-            let mut dot = 0f32;
-            for c in 0..kn.cols {
-                dot += ra[c] * rb[c];
-            }
-            if dot > best[ai] {
-                best[ai] = dot;
-                dst_all[ai] = bi;
-            }
+        if let Some((bi, d)) = g.best_match(aidx, &b, 0) {
+            best[ai] = d;
+            dst_all[ai] = bi;
         }
     }
     let pair_rank = argsort_desc(&best);

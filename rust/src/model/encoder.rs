@@ -4,9 +4,20 @@
 //! parity is asserted against `artifacts/testvectors.json` (trained ViT
 //! logits) and used for the r-sweep experiments where compiling one HLO
 //! artifact per (mode, r) point would be wasteful.
+//!
+//! Two drivers share the same per-block helpers (so they are numerically
+//! identical):
+//! * [`encoder_forward`] — one sample, serial.
+//! * [`encoder_forward_batch`] — a batch of samples advanced layer by
+//!   layer; attention/MLP fan out per sample over scoped worker threads
+//!   and the merge step goes through
+//!   [`merge_step_batch`](crate::merge::batch::merge_step_batch), so the
+//!   whole batch shares the thread pool while each sequence still builds
+//!   exactly one cosine Gram per step.
 
 use crate::data::Rng;
 use crate::error::Result;
+use crate::merge::batch::{merge_step_batch, parallel_map_mut, BatchSeq};
 use crate::merge::energy::layer_margin;
 use crate::merge::{merge_step, MergeCtx, MergeMode};
 use crate::tensor::{add_inplace, dense, gelu_inplace, layernorm, matmul,
@@ -31,6 +42,8 @@ pub struct EncoderCfg {
     pub plan: Vec<usize>,
     /// proportional attention
     pub prop_attn: bool,
+    /// ToFu prune threshold (see `config::DEFAULT_TOFU_PRUNE_THRESHOLD`)
+    pub tofu_threshold: f32,
 }
 
 /// Multi-head proportional attention for one sample.
@@ -101,6 +114,52 @@ pub fn attention(q: &Mat, kf: &Mat, v: &Mat, sizes: &[f32], heads: usize,
     (out, attn_cls)
 }
 
+/// Attention half of block `l`: pre-LN, QKV, proportional attention,
+/// output projection, residual add (in place).  Returns the key features
+/// (the merge similarity signal) and the mean CLS attention.
+fn block_attention(ps: &ParamStore, cfg: &EncoderCfg, l: usize, x: &mut Mat,
+                   sizes: &[f32]) -> Result<(Mat, Vec<f32>)> {
+    let b = format!("{}blk{}.", cfg.prefix, l);
+    let h = layernorm(x, ps.vec1(&format!("{b}ln1.w"))?,
+                      ps.vec1(&format!("{b}ln1.b"))?, 1e-5);
+    let q = matmul(&h, &ps.mat2(&format!("{b}wq"))?);
+    let kf = matmul(&h, &ps.mat2(&format!("{b}wk"))?);
+    let v = matmul(&h, &ps.mat2(&format!("{b}wv"))?);
+
+    let attn_sizes: Vec<f32> = if cfg.prop_attn {
+        sizes.to_vec()
+    } else {
+        vec![1.0; x.rows]
+    };
+    let (o, attn_cls) = attention(&q, &kf, &v, &attn_sizes, cfg.heads,
+                                  cfg.prop_attn);
+    let proj = dense(&o, &ps.mat2(&format!("{b}wo"))?,
+                     Some(ps.vec1(&format!("{b}bo"))?));
+    add_inplace(x, &proj);
+    Ok((kf, attn_cls))
+}
+
+/// MLP half of block `l`: pre-LN, GELU MLP, residual add (in place).
+fn block_mlp(ps: &ParamStore, cfg: &EncoderCfg, l: usize, x: &mut Mat)
+             -> Result<()> {
+    let b = format!("{}blk{}.", cfg.prefix, l);
+    let h2 = layernorm(x, ps.vec1(&format!("{b}ln2.w"))?,
+                       ps.vec1(&format!("{b}ln2.b"))?, 1e-5);
+    let mut m = dense(&h2, &ps.mat2(&format!("{b}mlp1"))?,
+                      Some(ps.vec1(&format!("{b}mlp1b"))?));
+    gelu_inplace(&mut m);
+    let m2 = dense(&m, &ps.mat2(&format!("{b}mlp2"))?,
+                   Some(ps.vec1(&format!("{b}mlp2b"))?));
+    add_inplace(x, &m2);
+    Ok(())
+}
+
+fn final_norm(ps: &ParamStore, cfg: &EncoderCfg, x: &Mat) -> Result<Mat> {
+    Ok(layernorm(x,
+                 ps.vec1(&format!("{}lnf.w", cfg.prefix))?,
+                 ps.vec1(&format!("{}lnf.b", cfg.prefix))?, 1e-5))
+}
+
 /// Run the encoder on one sample `x` (plan[0], dim). Returns final tokens
 /// (plan[depth], dim) after the output LayerNorm.
 pub fn encoder_forward(ps: &ParamStore, cfg: &EncoderCfg, x: Mat,
@@ -108,27 +167,11 @@ pub fn encoder_forward(ps: &ParamStore, cfg: &EncoderCfg, x: Mat,
     let mut x = x;
     let mut sizes = vec![1f32; x.rows];
     for l in 0..cfg.depth {
-        let b = format!("{}blk{}.", cfg.prefix, l);
         let n_in = cfg.plan[l];
         let n_out = cfg.plan[l + 1];
         debug_assert_eq!(x.rows, n_in, "plan mismatch at layer {l}");
 
-        let h = layernorm(&x, ps.vec1(&format!("{b}ln1.w"))?,
-                          ps.vec1(&format!("{b}ln1.b"))?, 1e-5);
-        let q = matmul(&h, &ps.mat2(&format!("{b}wq"))?);
-        let kf = matmul(&h, &ps.mat2(&format!("{b}wk"))?);
-        let v = matmul(&h, &ps.mat2(&format!("{b}wv"))?);
-
-        let attn_sizes: Vec<f32> = if cfg.prop_attn {
-            sizes.clone()
-        } else {
-            vec![1.0; x.rows]
-        };
-        let (o, attn_cls) = attention(&q, &kf, &v, &attn_sizes, cfg.heads,
-                                      cfg.prop_attn);
-        let proj = dense(&o, &ps.mat2(&format!("{b}wo"))?,
-                         Some(ps.vec1(&format!("{b}bo"))?));
-        add_inplace(&mut x, &proj);
+        let (kf, attn_cls) = block_attention(ps, cfg, l, &mut x, &sizes)?;
 
         // merge between attention and MLP (Eq. 2)
         let k = n_in - n_out;
@@ -142,24 +185,100 @@ pub fn encoder_forward(ps: &ParamStore, cfg: &EncoderCfg, x: Mat,
                 margin,
                 k,
                 protect_first: 1,
+                tofu_threshold: cfg.tofu_threshold,
             };
             let (xm, sm) = merge_step(cfg.mode, &ctx, rng);
             x = xm;
             sizes = sm;
         }
 
-        let h2 = layernorm(&x, ps.vec1(&format!("{b}ln2.w"))?,
-                           ps.vec1(&format!("{b}ln2.b"))?, 1e-5);
-        let mut m = dense(&h2, &ps.mat2(&format!("{b}mlp1"))?,
-                          Some(ps.vec1(&format!("{b}mlp1b"))?));
-        gelu_inplace(&mut m);
-        let m2 = dense(&m, &ps.mat2(&format!("{b}mlp2"))?,
-                       Some(ps.vec1(&format!("{b}mlp2b"))?));
-        add_inplace(&mut x, &m2);
+        block_mlp(ps, cfg, l, &mut x)?;
     }
-    Ok(layernorm(&x,
-                 ps.vec1(&format!("{}lnf.w", cfg.prefix))?,
-                 ps.vec1(&format!("{}lnf.b", cfg.prefix))?, 1e-5))
+    final_norm(ps, cfg, &x)
+}
+
+/// Per-sequence state carried across layers by the batch driver.
+struct SeqState {
+    x: Mat,
+    sizes: Vec<f32>,
+}
+
+/// Run the encoder on a batch of samples, advancing all sequences layer by
+/// layer.  Attention and MLP fan out per sample over up to `workers`
+/// scoped threads; the merge step runs through
+/// [`merge_step_batch`](crate::merge::batch::merge_step_batch).
+///
+/// `seed` derives one deterministic RNG seed per (layer, sample), so
+/// stochastic modes are reproducible under any thread schedule; for the
+/// deterministic modes (PiToMe/ToMe/ToFu/DCT/DiffRate) the outputs match
+/// [`encoder_forward`] exactly.
+pub fn encoder_forward_batch(ps: &ParamStore, cfg: &EncoderCfg, xs: Vec<Mat>,
+                             seed: u64, workers: usize) -> Result<Vec<Mat>> {
+    let mut states: Vec<SeqState> = xs
+        .into_iter()
+        .map(|x| {
+            let sizes = vec![1f32; x.rows];
+            SeqState { x, sizes }
+        })
+        .collect();
+    for l in 0..cfg.depth {
+        let n_in = cfg.plan[l];
+        let n_out = cfg.plan[l + 1];
+        let k = n_in - n_out;
+
+        let pre = parallel_map_mut(&mut states, workers, &|_, st: &mut SeqState| {
+            debug_assert_eq!(st.x.rows, n_in, "plan mismatch at layer {l}");
+            block_attention(ps, cfg, l, &mut st.x, &st.sizes)
+        });
+        let mut kfs = Vec::with_capacity(states.len());
+        let mut attns = Vec::with_capacity(states.len());
+        for r in pre {
+            let (kf, attn_cls) = r?;
+            kfs.push(kf);
+            attns.push(attn_cls);
+        }
+
+        if k > 0 {
+            let margin = layer_margin(l, cfg.depth);
+            let merged = {
+                let seqs: Vec<BatchSeq> = states
+                    .iter()
+                    .zip(kfs.iter())
+                    .zip(attns.iter())
+                    .enumerate()
+                    .map(|(i, ((st, kf), attn_cls))| BatchSeq {
+                        ctx: MergeCtx {
+                            x: &st.x,
+                            kf,
+                            sizes: &st.sizes,
+                            attn_cls,
+                            margin,
+                            k,
+                            protect_first: 1,
+                            tofu_threshold: cfg.tofu_threshold,
+                        },
+                        seed: seed ^ ((l as u64) << 32) ^ i as u64,
+                    })
+                    .collect();
+                merge_step_batch(cfg.mode, &seqs, workers)
+            };
+            for (st, (xm, sm)) in states.iter_mut().zip(merged) {
+                st.x = xm;
+                st.sizes = sm;
+            }
+        }
+
+        let post = parallel_map_mut(&mut states, workers, &|_, st: &mut SeqState| {
+            block_mlp(ps, cfg, l, &mut st.x)
+        });
+        for r in post {
+            r?;
+        }
+    }
+    states
+        .iter()
+        .map(|st| final_norm(ps, cfg, &st.x))
+        .collect()
 }
 
 /// Plain (non-proportional) attention convenience used in tests.
@@ -171,6 +290,8 @@ pub fn plain_attention(q: &Mat, kf: &Mat, v: &Mat, heads: usize) -> Mat {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::config::ViTConfig;
+    use crate::model::params::synthetic_vit_store;
 
     #[test]
     fn attention_rows_are_convex_combinations() {
@@ -204,5 +325,40 @@ mod tests {
         sizes[3] = 1e6;
         let (o, _) = attention(&q, &kf, &v, &sizes, 1, true);
         assert!(o.get(0, 0) > 9.0, "huge token dominates: {}", o.get(0, 0));
+    }
+
+    #[test]
+    fn batch_forward_matches_serial_forward() {
+        let vcfg = ViTConfig {
+            merge_mode: "pitome".into(),
+            merge_r: 0.9,
+            ..Default::default()
+        };
+        let ps = synthetic_vit_store(&vcfg, 42);
+        let cfg = EncoderCfg {
+            prefix: "vit.".into(),
+            dim: vcfg.dim,
+            depth: vcfg.depth,
+            heads: vcfg.heads,
+            mode: vcfg.mode(),
+            plan: vcfg.plan(),
+            prop_attn: true,
+            tofu_threshold: vcfg.tofu_threshold,
+        };
+        let n0 = cfg.plan[0];
+        let mut rng = Rng::new(9);
+        let xs: Vec<Mat> = (0..5)
+            .map(|_| Mat::from_fn(n0, cfg.dim,
+                                  |_, _| (rng.next_f64() * 0.2 - 0.1) as f32))
+            .collect();
+        let batched =
+            encoder_forward_batch(&ps, &cfg, xs.clone(), 0, 3).unwrap();
+        for (i, x) in xs.into_iter().enumerate() {
+            let mut r = Rng::new(0);
+            let want = encoder_forward(&ps, &cfg, x, &mut r).unwrap();
+            assert_eq!(batched[i].rows, want.rows);
+            assert!(batched[i].max_abs_diff(&want) < 1e-5,
+                    "sample {i} diverged: {}", batched[i].max_abs_diff(&want));
+        }
     }
 }

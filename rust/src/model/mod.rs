@@ -12,10 +12,11 @@ pub mod params;
 pub mod text;
 pub mod vit;
 
-pub use encoder::{attention, encoder_forward, EncoderCfg};
+pub use encoder::{attention, encoder_forward, encoder_forward_batch, EncoderCfg};
 pub use flops::{block_flops, encoder_flops, flops_speedup, vit_gflops};
-pub use params::{ParamEntry, ParamStore};
-pub use text::{bert_logits, clip_text_embed, embed_tokens, text_features};
+pub use params::{synthetic_vit_store, ParamEntry, ParamStore};
+pub use text::{bert_logits, bert_logits_batch, clip_text_embed, embed_tokens,
+               text_features};
 pub use vit::ViTModel;
 
 use std::path::Path;

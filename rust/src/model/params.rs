@@ -1,10 +1,14 @@
 //! Parameter store: loads the flat f32 weight vectors + JSON manifests that
 //! `python/compile/params.py` writes, exposing named tensors to the CPU
-//! reference model and raw flat vectors to the PJRT runtime.
+//! reference model and raw flat vectors to the PJRT runtime.  Also builds
+//! randomly-initialized synthetic stores so model-level tests, benches,
+//! and CPU serving run without `make artifacts`.
 
 use std::collections::HashMap;
 use std::path::Path;
 
+use crate::config::ViTConfig;
+use crate::data::Rng;
 use crate::error::{Error, Result};
 use crate::tensor::Mat;
 use crate::util::json::{parse as parse_json, Json};
@@ -116,6 +120,89 @@ impl ParamStore {
     }
 }
 
+/// Incremental builder for in-memory [`ParamStore`]s (tests / synthetic
+/// weights).
+struct StoreBuilder {
+    flat: Vec<f32>,
+    entries: Vec<ParamEntry>,
+    rng: Rng,
+}
+
+impl StoreBuilder {
+    fn new(seed: u64) -> StoreBuilder {
+        StoreBuilder { flat: Vec::new(), entries: Vec::new(), rng: Rng::new(seed) }
+    }
+
+    /// Append a tensor filled by `f` (which may draw from the RNG).
+    fn push(&mut self, name: &str, shape: &[usize],
+            mut f: impl FnMut(&mut Rng) -> f32) {
+        let size: usize = shape.iter().product();
+        let offset = self.flat.len();
+        for _ in 0..size {
+            let v = f(&mut self.rng);
+            self.flat.push(v);
+        }
+        self.entries.push(ParamEntry {
+            name: name.into(),
+            shape: shape.to_vec(),
+            offset,
+            size,
+        });
+    }
+
+    fn randn_scaled(&mut self, name: &str, shape: &[usize], scale: f32) {
+        self.push(name, shape, |rng| (rng.next_f64() * 2.0 - 1.0) as f32 * scale);
+    }
+
+    fn constant(&mut self, name: &str, shape: &[usize], value: f32) {
+        self.push(name, shape, |_| value);
+    }
+
+    fn finish(self) -> ParamStore {
+        ParamStore::from_parts(self.flat, self.entries)
+    }
+}
+
+/// Build a randomly-initialized [`ParamStore`] covering every tensor the
+/// CPU reference ViT needs (`vit.embed` / `vit.cls` / `vit.pos` /
+/// per-block weights / `vit.lnf` / `vit.head`).
+///
+/// The weights are untrained — predictions are arbitrary but fully
+/// deterministic in `seed` — which is exactly what encoder-parity tests,
+/// merge benches, and artifact-free CPU serving need.
+pub fn synthetic_vit_store(cfg: &ViTConfig, seed: u64) -> ParamStore {
+    let dim = cfg.dim;
+    let hidden = cfg.mlp_hidden();
+    let scale = 1.0 / (dim as f32).sqrt();
+    let mut b = StoreBuilder::new(seed);
+    b.randn_scaled("vit.embed.w", &[cfg.patch_dim(), dim], scale);
+    b.constant("vit.embed.b", &[dim], 0.0);
+    b.randn_scaled("vit.cls", &[dim], scale);
+    b.randn_scaled("vit.pos", &[cfg.n_tokens(), dim], 0.02);
+    for l in 0..cfg.depth {
+        let p = format!("vit.blk{l}.");
+        b.constant(&format!("{p}ln1.w"), &[dim], 1.0);
+        b.constant(&format!("{p}ln1.b"), &[dim], 0.0);
+        b.randn_scaled(&format!("{p}wq"), &[dim, dim], scale);
+        b.randn_scaled(&format!("{p}wk"), &[dim, dim], scale);
+        b.randn_scaled(&format!("{p}wv"), &[dim, dim], scale);
+        b.randn_scaled(&format!("{p}wo"), &[dim, dim], scale);
+        b.constant(&format!("{p}bo"), &[dim], 0.0);
+        b.constant(&format!("{p}ln2.w"), &[dim], 1.0);
+        b.constant(&format!("{p}ln2.b"), &[dim], 0.0);
+        b.randn_scaled(&format!("{p}mlp1"), &[dim, hidden], scale);
+        b.constant(&format!("{p}mlp1b"), &[hidden], 0.0);
+        b.randn_scaled(&format!("{p}mlp2"), &[hidden, dim],
+                       1.0 / (hidden as f32).sqrt());
+        b.constant(&format!("{p}mlp2b"), &[dim], 0.0);
+    }
+    b.constant("vit.lnf.w", &[dim], 1.0);
+    b.constant("vit.lnf.b", &[dim], 0.0);
+    b.randn_scaled("vit.head.w", &[dim, cfg.num_classes], scale);
+    b.constant("vit.head.b", &[cfg.num_classes], 0.0);
+    b.finish()
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -144,5 +231,23 @@ mod tests {
         assert!(s.mat2("b").is_err());
         assert!(s.vec1("w").is_err());
         assert!(s.slice("nope").is_err());
+    }
+
+    #[test]
+    fn synthetic_store_covers_encoder_tensors() {
+        let cfg = ViTConfig::default();
+        let s = synthetic_vit_store(&cfg, 1);
+        assert_eq!(s.mat2("vit.embed.w").unwrap().rows, cfg.patch_dim());
+        assert_eq!(s.vec1("vit.cls").unwrap().len(), cfg.dim);
+        assert_eq!(s.mat2("vit.pos").unwrap().rows, cfg.n_tokens());
+        for l in 0..cfg.depth {
+            assert_eq!(s.mat2(&format!("vit.blk{l}.wq")).unwrap().cols, cfg.dim);
+            assert_eq!(s.mat2(&format!("vit.blk{l}.mlp1")).unwrap().cols,
+                       cfg.mlp_hidden());
+        }
+        assert_eq!(s.mat2("vit.head.w").unwrap().cols, cfg.num_classes);
+        // deterministic in seed
+        let s2 = synthetic_vit_store(&cfg, 1);
+        assert_eq!(s.flat, s2.flat);
     }
 }

@@ -1,13 +1,13 @@
 //! CPU reference text encoders: BERT-style classifier, CLIP text tower, and
 //! the VQA head — all sharing [`encoder_forward`].
 
-use crate::config::TextConfig;
+use crate::config::{TextConfig, DEFAULT_TOFU_PRUNE_THRESHOLD};
 use crate::data::Rng;
 use crate::error::Result;
 use crate::merge::MergeMode;
 use crate::tensor::{dense, Mat};
 
-use super::encoder::{encoder_forward, EncoderCfg};
+use super::encoder::{encoder_forward, encoder_forward_batch, EncoderCfg};
 use super::params::ParamStore;
 
 /// Token embedding + position for a prefix (e.g. "bert.", "txt.", "q.").
@@ -28,14 +28,10 @@ pub fn embed_tokens(ps: &ParamStore, prefix: &str, tokens: &[i32],
     Ok(x)
 }
 
-/// CLS feature from a text encoder with the given plan/mode.
-#[allow(clippy::too_many_arguments)]
-pub fn text_features(ps: &ParamStore, prefix: &str, tokens: &[i32],
-                     dim: usize, depth: usize, heads: usize,
-                     mode: MergeMode, plan: Vec<usize>, rng: &mut Rng)
-                     -> Result<Vec<f32>> {
-    let x = embed_tokens(ps, prefix, tokens, dim)?;
-    let cfg = EncoderCfg {
+fn text_encoder_cfg(prefix: &str, dim: usize, depth: usize, heads: usize,
+                    mode: MergeMode, plan: Vec<usize>, tofu_threshold: f32)
+                    -> EncoderCfg {
+    EncoderCfg {
         prefix: prefix.into(),
         dim,
         depth,
@@ -43,20 +39,60 @@ pub fn text_features(ps: &ParamStore, prefix: &str, tokens: &[i32],
         mode,
         plan,
         prop_attn: true,
-    };
+        tofu_threshold,
+    }
+}
+
+/// CLS feature from a text encoder with the given plan/mode.  ToFu runs at
+/// the config default prune threshold; use [`bert_logits`] (which reads
+/// `TextConfig::tofu_threshold`) to sweep it.
+#[allow(clippy::too_many_arguments)]
+pub fn text_features(ps: &ParamStore, prefix: &str, tokens: &[i32],
+                     dim: usize, depth: usize, heads: usize,
+                     mode: MergeMode, plan: Vec<usize>, rng: &mut Rng)
+                     -> Result<Vec<f32>> {
+    let x = embed_tokens(ps, prefix, tokens, dim)?;
+    let cfg = text_encoder_cfg(prefix, dim, depth, heads, mode, plan,
+                               DEFAULT_TOFU_PRUNE_THRESHOLD);
     let out = encoder_forward(ps, &cfg, x, rng)?;
     Ok(out.row(0).to_vec())
+}
+
+fn bert_encoder_cfg(cfg: &TextConfig) -> EncoderCfg {
+    text_encoder_cfg("bert.", cfg.dim, cfg.depth, cfg.heads, cfg.mode(),
+                     cfg.plan(), cfg.tofu_threshold)
+}
+
+fn bert_head(ps: &ParamStore, f: Vec<f32>) -> Result<Vec<f32>> {
+    let fm = Mat::from_vec(1, f.len(), f);
+    let lg = dense(&fm, &ps.mat2("bert.head.w")?,
+                   Some(ps.vec1("bert.head.b")?));
+    Ok(lg.data)
 }
 
 /// BERT-style classifier logits for one sample.
 pub fn bert_logits(ps: &ParamStore, cfg: &TextConfig, tokens: &[i32],
                    rng: &mut Rng) -> Result<Vec<f32>> {
-    let f = text_features(ps, "bert.", tokens, cfg.dim, cfg.depth, cfg.heads,
-                          cfg.mode(), cfg.plan(), rng)?;
-    let fm = Mat::from_vec(1, f.len(), f);
-    let lg = dense(&fm, &ps.mat2("bert.head.w")?,
-                   Some(ps.vec1("bert.head.b")?));
-    Ok(lg.data)
+    let x = embed_tokens(ps, "bert.", tokens, cfg.dim)?;
+    let out = encoder_forward(ps, &bert_encoder_cfg(cfg), x, rng)?;
+    bert_head(ps, out.row(0).to_vec())
+}
+
+/// BERT-style classifier logits for a batch of samples: the encoder
+/// advances all sequences layer by layer with batched merge steps (see
+/// [`encoder_forward_batch`]).
+pub fn bert_logits_batch(ps: &ParamStore, cfg: &TextConfig,
+                         token_seqs: &[Vec<i32>], seed: u64, workers: usize)
+                         -> Result<Vec<Vec<f32>>> {
+    let xs: Vec<Mat> = token_seqs
+        .iter()
+        .map(|t| embed_tokens(ps, "bert.", t, cfg.dim))
+        .collect::<Result<_>>()?;
+    let outs = encoder_forward_batch(ps, &bert_encoder_cfg(cfg), xs, seed,
+                                     workers)?;
+    outs.into_iter()
+        .map(|m| bert_head(ps, m.row(0).to_vec()))
+        .collect()
 }
 
 /// L2-normalize a feature vector in place.

@@ -5,7 +5,7 @@ use crate::data::Rng;
 use crate::error::Result;
 use crate::tensor::{dense, Mat};
 
-use super::encoder::{encoder_forward, EncoderCfg};
+use super::encoder::{encoder_forward, encoder_forward_batch, EncoderCfg};
 use super::params::ParamStore;
 
 /// A loaded ViT model (weights + config).
@@ -31,6 +31,7 @@ impl<'a> ViTModel<'a> {
             mode: self.cfg.mode(),
             plan: self.cfg.plan(),
             prop_attn: self.cfg.prop_attn,
+            tofu_threshold: self.cfg.tofu_threshold,
         }
     }
 
@@ -76,5 +77,43 @@ impl<'a> ViTModel<'a> {
     pub fn predict(&self, patches: &Mat, rng: &mut Rng) -> Result<usize> {
         let lg = self.logits(patches, rng)?;
         Ok(crate::tensor::argmax(&lg))
+    }
+
+    /// Batched CLS features: all samples advance through the encoder layer
+    /// by layer, with attention/MLP fanned out per sample and merge steps
+    /// batched over `workers` threads (see
+    /// [`encoder_forward_batch`]).
+    pub fn features_batch(&self, patches: &[Mat], seed: u64, workers: usize)
+                          -> Result<Vec<Vec<f32>>> {
+        let xs: Vec<Mat> =
+            patches.iter().map(|p| self.tokens(p)).collect::<Result<_>>()?;
+        let outs = encoder_forward_batch(self.ps, &self.encoder_cfg(), xs,
+                                         seed, workers)?;
+        Ok(outs.into_iter().map(|m| m.row(0).to_vec()).collect())
+    }
+
+    /// Batched class logits.
+    pub fn logits_batch(&self, patches: &[Mat], seed: u64, workers: usize)
+                        -> Result<Vec<Vec<f32>>> {
+        let feats = self.features_batch(patches, seed, workers)?;
+        let w = self.ps.mat2("vit.head.w")?;
+        let b = self.ps.vec1("vit.head.b")?;
+        Ok(feats
+            .into_iter()
+            .map(|f| {
+                let fm = Mat::from_vec(1, f.len(), f);
+                dense(&fm, &w, Some(b)).data
+            })
+            .collect())
+    }
+
+    /// Batched predictions.
+    pub fn predict_batch(&self, patches: &[Mat], seed: u64, workers: usize)
+                         -> Result<Vec<usize>> {
+        Ok(self
+            .logits_batch(patches, seed, workers)?
+            .iter()
+            .map(|lg| crate::tensor::argmax(lg))
+            .collect())
     }
 }

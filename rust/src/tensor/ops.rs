@@ -1,6 +1,124 @@
-//! Numerical ops over [`Mat`] mirroring `python/compile/kernels/ref.py`.
+//! Numerical ops over [`Mat`] mirroring `python/compile/kernels/ref.py`,
+//! plus the shared [`CosineGram`] the merge engine is built around: one
+//! blocked, auto-vectorized cosine Gram per merge step, reused by both the
+//! energy score (Eq. 4) and every bipartite-matching plan builder.
+
+use std::cell::Cell;
 
 use super::Mat;
+
+thread_local! {
+    /// Per-thread count of [`CosineGram::build`] calls — lets tests assert
+    /// "exactly one Gram per merge step" without cross-thread races.
+    static GRAM_BUILDS: Cell<usize> = Cell::new(0);
+}
+
+/// Number of cosine Grams built on this thread so far (test hook for the
+/// one-Gram-per-merge-step invariant).
+pub fn gram_builds_this_thread() -> usize {
+    GRAM_BUILDS.with(|c| c.get())
+}
+
+/// Dot product with 8 independent partial sums.
+///
+/// A `zip().map().sum()` chain is a single order-constrained reduction
+/// LLVM must keep scalar; eight independent accumulator lanes over
+/// `chunks_exact(8)` let it vectorize, which is where the merge engine's
+/// O(n²h) Gram time goes.
+#[inline]
+pub fn dot(a: &[f32], b: &[f32]) -> f32 {
+    debug_assert_eq!(a.len(), b.len());
+    let mut acc = [0f32; 8];
+    let split = a.len() - a.len() % 8;
+    for (ca, cb) in a[..split].chunks_exact(8).zip(b[..split].chunks_exact(8)) {
+        for l in 0..8 {
+            acc[l] += ca[l] * cb[l];
+        }
+    }
+    let tail: f32 = a[split..].iter().zip(&b[split..]).map(|(x, y)| x * y).sum();
+    tail + ((acc[0] + acc[4]) + (acc[2] + acc[6]))
+         + ((acc[1] + acc[5]) + (acc[3] + acc[7]))
+}
+
+/// The cosine-similarity Gram of one token set — computed **once** per
+/// merge step and shared by the energy score and every plan builder
+/// (PiToMe / ToMe / ToFu / DiffRate).
+///
+/// The Gram is symmetric, so only the upper triangle is computed (blocked
+/// for cache reuse) and mirrored; the diagonal is pinned to 1.0.  The
+/// normalized features themselves are build-local scratch
+/// ([`normalize_rows_with_norms`]) and are not retained: with a whole
+/// batch of Grams in flight that would duplicate every key-feature matrix
+/// for no consumer.
+pub struct CosineGram {
+    /// pairwise cosine similarities, (n, n), symmetric, diag = 1
+    pub w: Mat,
+}
+
+impl CosineGram {
+    /// Tile side for the blocked triangular Gram.
+    const BLOCK: usize = 32;
+
+    /// Build the Gram for key features `kf` (n, h).
+    pub fn build(kf: &Mat) -> CosineGram {
+        GRAM_BUILDS.with(|c| c.set(c.get() + 1));
+        let (kn, _norms) = normalize_rows_with_norms(kf);
+        let n = kn.rows;
+        let mut w = Mat::zeros(n, n);
+        for ib in (0..n).step_by(Self::BLOCK) {
+            let ie = (ib + Self::BLOCK).min(n);
+            for jb in (ib..n).step_by(Self::BLOCK) {
+                let je = (jb + Self::BLOCK).min(n);
+                for i in ib..ie {
+                    let ri = kn.row(i);
+                    for j in jb.max(i + 1)..je {
+                        let d = dot(ri, kn.row(j));
+                        w.data[i * n + j] = d;
+                        w.data[j * n + i] = d;
+                    }
+                }
+            }
+        }
+        for i in 0..n {
+            w.data[i * n + i] = 1.0;
+        }
+        CosineGram { w }
+    }
+
+    /// Token count.
+    #[inline]
+    pub fn n(&self) -> usize {
+        self.w.rows
+    }
+
+    /// Cosine similarity between tokens `i` and `j`.
+    #[inline]
+    pub fn cos(&self, i: usize, j: usize) -> f32 {
+        self.w.get(i, j)
+    }
+
+    /// Best match for token `a` among the B candidates `b`, skipping
+    /// candidates whose token index is below `min_b_idx` (DiffRate uses
+    /// this to keep CLS from receiving merges).  Returns the *position in
+    /// `b`* of the most similar candidate and its similarity; ties keep
+    /// the earliest candidate, matching the plan builders' historical
+    /// strict-`>` scan.  `None` when no candidate qualifies.
+    pub fn best_match(&self, a: usize, b: &[usize], min_b_idx: usize)
+                      -> Option<(usize, f32)> {
+        let row = self.w.row(a);
+        let mut best: Option<(usize, f32)> = None;
+        for (bi, &bidx) in b.iter().enumerate() {
+            if bidx < min_b_idx {
+                continue;
+            }
+            let d = row[bidx];
+            if best.map_or(true, |(_, bd)| d > bd) {
+                best = Some((bi, d));
+            }
+        }
+        best
+    }
+}
 
 /// C = A @ B (naive ikj loop; the perf pass blocks this — see `matmul`).
 pub fn matmul(a: &Mat, b: &Mat) -> Mat {
@@ -42,21 +160,29 @@ pub fn matmul_nt(a: &Mat, b: &Mat) -> Mat {
 
 /// L2-normalize each row (eps matches the JAX reference).
 pub fn normalize_rows(m: &Mat) -> Mat {
+    normalize_rows_with_norms(m).0
+}
+
+/// L2-normalize each row, also returning the eps-stabilized row norms so
+/// callers that need both (the shared-Gram pipeline) pay for one pass.
+pub fn normalize_rows_with_norms(m: &Mat) -> (Mat, Vec<f32>) {
     let mut out = m.clone();
+    let mut norms = Vec::with_capacity(m.rows);
     for i in 0..m.rows {
         let r = out.row_mut(i);
         let n: f32 = r.iter().map(|v| v * v).sum::<f32>().sqrt() + 1e-6;
+        norms.push(n);
         for v in r.iter_mut() {
             *v /= n;
         }
     }
-    out
+    (out, norms)
 }
 
-/// Pairwise cosine-similarity matrix W (N, N) of row features.
+/// Pairwise cosine-similarity matrix W (N, N) of row features (one-shot
+/// convenience over [`CosineGram::build`]).
 pub fn cosine_matrix(kf: &Mat) -> Mat {
-    let kn = normalize_rows(kf);
-    matmul_nt(&kn, &kn)
+    CosineGram::build(kf).w
 }
 
 /// Row-wise softmax in place.
@@ -206,6 +332,54 @@ mod tests {
         let y = layernorm(&x, &w, &b, 1e-5);
         let mu: f32 = y.row(0).iter().sum::<f32>() / 6.0;
         assert!(approx(mu, 0.0, 1e-5));
+    }
+
+    #[test]
+    fn dot_matches_naive_all_lengths() {
+        for len in [0usize, 1, 3, 7, 8, 9, 15, 16, 17, 64, 67] {
+            let a: Vec<f32> = (0..len).map(|i| (i as f32 * 0.37).sin()).collect();
+            let b: Vec<f32> = (0..len).map(|i| (i as f32 * 0.91).cos()).collect();
+            let naive: f32 = a.iter().zip(&b).map(|(x, y)| x * y).sum();
+            assert!((dot(&a, &b) - naive).abs() < 1e-4, "len {len}");
+        }
+    }
+
+    #[test]
+    fn gram_is_symmetric_and_matches_pairwise_dots() {
+        let m = Mat::from_fn(37, 19, |i, j| ((i * 13 + j * 7) % 11) as f32 - 5.0);
+        let g = CosineGram::build(&m);
+        let kn = normalize_rows(&m);
+        for i in 0..m.rows {
+            for j in 0..m.rows {
+                assert_eq!(g.cos(i, j), g.cos(j, i), "asymmetric at {i},{j}");
+                if i != j {
+                    let want = dot(kn.row(i), kn.row(j));
+                    assert!((g.cos(i, j) - want).abs() < 1e-6);
+                }
+            }
+            assert_eq!(g.cos(i, i), 1.0);
+        }
+    }
+
+    #[test]
+    fn normalize_with_norms_caches_row_norms() {
+        let m = Mat::from_fn(5, 4, |i, j| (i + j) as f32 + 1.0);
+        let (kn, norms) = normalize_rows_with_norms(&m);
+        assert_eq!(norms.len(), 5);
+        for i in 0..5 {
+            let raw: f32 = m.row(i).iter().map(|v| v * v).sum::<f32>().sqrt();
+            assert!((norms[i] - (raw + 1e-6)).abs() < 1e-5);
+            let unit: f32 = kn.row(i).iter().map(|v| v * v).sum();
+            assert!((unit - 1.0).abs() < 1e-4);
+        }
+    }
+
+    #[test]
+    fn gram_build_counter_increments() {
+        let before = gram_builds_this_thread();
+        let m = Mat::from_fn(6, 4, |i, j| (i * 4 + j) as f32);
+        let _ = CosineGram::build(&m);
+        assert_eq!(gram_builds_this_thread(), before + 1);
     }
 
     #[test]

@@ -105,7 +105,9 @@ fn merge_parity_with_jax() {
         let want_sizes = case.get("sizes").unwrap().f32_vec().unwrap();
         let mut rng = Rng::new(0);
         let ctx = MergeCtx { x: &x, kf: &kf, sizes: &sizes, attn_cls: &attn,
-                             margin, k, protect_first: 1 };
+                             margin, k, protect_first: 1,
+                             tofu_threshold:
+                                 pitome::config::DEFAULT_TOFU_PRUNE_THRESHOLD };
         let (got, got_sizes) = merge_step(mode, &ctx, &mut rng);
         assert_eq!(got.rows, want.rows, "{name} rows");
         let d = got.max_abs_diff(&want);

@@ -1,0 +1,289 @@
+//! Property tests for Gram-sharing parity: the single-pass shared-Gram
+//! pipeline must match the pre-refactor two-pass results (energy pass +
+//! independent normalize/dot pass inside each plan builder) across random
+//! shapes, margins, and modes.
+
+use pitome::config::DEFAULT_TOFU_PRUNE_THRESHOLD;
+use pitome::data::Rng;
+use pitome::merge::diffrate::diffrate_plan_gram;
+use pitome::merge::energy::f_margin;
+use pitome::merge::pitome::{ordered_bsm_plan_gram, Split};
+use pitome::merge::tome::tome_plan_gram;
+use pitome::merge::{apply_plan, energy_scores, merge_step, MergeCtx,
+                    MergeMode, MergePlan};
+use pitome::tensor::{argsort_asc, argsort_desc, dot, normalize_rows,
+                     CosineGram, Mat};
+use pitome::util::quickcheck::{property, Gen};
+
+fn rand_mat(g: &mut Gen, n: usize, h: usize) -> Mat {
+    Mat::from_fn(n, h, |_, _| g.f32_in(-1.0, 1.0))
+}
+
+/// The pre-refactor energy: its own normalize pass + naive sequential
+/// per-pair dot products (no Gram, no vectorized reduction).
+fn energy_two_pass(kf: &Mat, margin: f32) -> Vec<f32> {
+    let n = kf.rows;
+    let kn = normalize_rows(kf);
+    let mut e = vec![0f32; n];
+    for i in 0..n {
+        let ri = kn.row(i);
+        for j in (i + 1)..n {
+            let d: f32 = ri.iter().zip(kn.row(j)).map(|(a, b)| a * b).sum();
+            let f = f_margin(d, margin);
+            e[i] += f;
+            e[j] += f;
+        }
+    }
+    let inv = 1.0 / n as f32;
+    for v in e.iter_mut() {
+        *v *= inv;
+    }
+    e
+}
+
+/// The pre-refactor PiToMe matching: re-normalizes and recomputes every
+/// A×B dot from scratch (the second Gram pass `merge_step` used to pay).
+fn pitome_plan_two_pass(kf: &Mat, scores: &[f32], k: usize,
+                        protect_first: usize, protect: bool) -> MergePlan {
+    let n = kf.rows;
+    let k = k.min((n - protect_first) / 2);
+    let mut s_cand = scores.to_vec();
+    for it in s_cand.iter_mut().take(protect_first) {
+        *it = f32::NEG_INFINITY;
+    }
+    let order = argsort_desc(&s_cand);
+    let n_pairs = if protect { k } else { (n - protect_first) / 2 };
+    let merge_idx: Vec<usize> = order[..2 * n_pairs].to_vec();
+    let rest: Vec<usize> = order[2 * n_pairs..].to_vec();
+    let a_all: Vec<usize> = merge_idx.iter().step_by(2).copied().collect();
+    let b: Vec<usize> = merge_idx.iter().skip(1).step_by(2).copied().collect();
+
+    let kn = normalize_rows(kf); // the redundant second pass
+    let mut best = vec![f32::NEG_INFINITY; a_all.len()];
+    let mut dst_all = vec![0usize; a_all.len()];
+    for (ai, &aidx) in a_all.iter().enumerate() {
+        for (bi, &bidx) in b.iter().enumerate() {
+            let d = dot(kn.row(aidx), kn.row(bidx));
+            if d > best[ai] {
+                best[ai] = d;
+                dst_all[ai] = bi;
+            }
+        }
+    }
+    let mut protect_idx: Vec<usize>;
+    let (a, dst) = if n_pairs == k {
+        protect_idx = rest;
+        (a_all, dst_all)
+    } else {
+        let pair_rank = argsort_desc(&best);
+        let mut a_merge = Vec::with_capacity(k);
+        let mut dst = Vec::with_capacity(k);
+        for &p in pair_rank.iter().take(k) {
+            a_merge.push(a_all[p]);
+            dst.push(dst_all[p]);
+        }
+        protect_idx = rest;
+        for &p in pair_rank.iter().skip(k) {
+            protect_idx.push(a_all[p]);
+        }
+        (a_merge, dst)
+    };
+    protect_idx.sort_unstable();
+    let gate = vec![1.0; a.len()];
+    MergePlan { protect: protect_idx, a, b, dst, gate }
+}
+
+/// The pre-refactor ToMe/ToFu matching (second normalize + dot pass).
+fn tome_plan_two_pass(kf: &Mat, k: usize, protect_first: usize,
+                      prune_threshold: Option<f32>) -> MergePlan {
+    let n = kf.rows;
+    let cand: Vec<usize> = (protect_first..n).collect();
+    let a_all: Vec<usize> = cand.iter().step_by(2).copied().collect();
+    let b: Vec<usize> = cand.iter().skip(1).step_by(2).copied().collect();
+    let kn = normalize_rows(kf);
+    let mut best = vec![f32::NEG_INFINITY; a_all.len()];
+    let mut dst_all = vec![0usize; a_all.len()];
+    for (ai, &aidx) in a_all.iter().enumerate() {
+        for (bi, &bidx) in b.iter().enumerate() {
+            let d = dot(kn.row(aidx), kn.row(bidx));
+            if d > best[ai] {
+                best[ai] = d;
+                dst_all[ai] = bi;
+            }
+        }
+    }
+    let pair_rank = argsort_desc(&best);
+    let mut a = Vec::with_capacity(k);
+    let mut dst = Vec::with_capacity(k);
+    let mut gate = Vec::with_capacity(k);
+    for &p in pair_rank.iter().take(k) {
+        a.push(a_all[p]);
+        dst.push(dst_all[p]);
+        gate.push(match prune_threshold {
+            Some(t) if best[p] < t => 0.0,
+            _ => 1.0,
+        });
+    }
+    let mut protect: Vec<usize> = (0..protect_first).collect();
+    for &p in pair_rank.iter().skip(k) {
+        protect.push(a_all[p]);
+    }
+    protect.sort_unstable();
+    MergePlan { protect, a, b, dst, gate }
+}
+
+/// The pre-refactor DiffRate matching (second normalize + dot pass).
+fn diffrate_plan_two_pass(kf: &Mat, attn_cls: &[f32], k: usize,
+                          protect_first: usize) -> MergePlan {
+    let n = kf.rows;
+    let mut score = attn_cls.to_vec();
+    for it in score.iter_mut().take(protect_first) {
+        *it = f32::INFINITY;
+    }
+    let order = argsort_asc(&score);
+    let a: Vec<usize> = order[..k].to_vec();
+    let mut b: Vec<usize> = order[k..].to_vec();
+    b.sort_unstable();
+    let kn = normalize_rows(kf);
+    let mut dst = vec![0usize; k];
+    for (ai, &aidx) in a.iter().enumerate() {
+        let mut best = f32::NEG_INFINITY;
+        for (bi, &bidx) in b.iter().enumerate() {
+            if bidx < protect_first {
+                continue;
+            }
+            let d = dot(kn.row(aidx), kn.row(bidx));
+            if d > best {
+                best = d;
+                dst[ai] = bi;
+            }
+        }
+    }
+    MergePlan { protect: vec![], a, b, dst, gate: vec![1.0; k] }
+}
+
+fn assert_plans_equal(got: &MergePlan, want: &MergePlan, tag: &str) {
+    assert_eq!(got.protect, want.protect, "{tag}: protect");
+    assert_eq!(got.a, want.a, "{tag}: a");
+    assert_eq!(got.b, want.b, "{tag}: b");
+    assert_eq!(got.dst, want.dst, "{tag}: dst");
+    assert_eq!(got.gate, want.gate, "{tag}: gate");
+}
+
+#[test]
+fn prop_energy_matches_two_pass() {
+    property("energy gram parity", 80, |g| {
+        let n = g.usize_in(3, 48);
+        let h = g.usize_in(2, 24);
+        let kf = rand_mat(g, n, h);
+        let margin = g.f32_in(-0.3, 0.9);
+        let got = energy_scores(&kf, margin);
+        let want = energy_two_pass(&kf, margin);
+        for (i, (a, b)) in got.iter().zip(&want).enumerate() {
+            assert!((a - b).abs() < 1e-5,
+                    "energy[{i}] n={n} h={h} m={margin}: {a} vs {b}");
+        }
+    });
+}
+
+#[test]
+fn prop_pitome_plan_matches_two_pass() {
+    property("pitome plan gram parity", 60, |g| {
+        let n = g.usize_in(6, 48);
+        let h = *g.choose(&[4usize, 8, 16]);
+        let kf = rand_mat(g, n, h);
+        let protect_first = g.usize_in(0, 2);
+        let k = g.usize_in(1, ((n - protect_first) / 2).max(1));
+        let margin = g.f32_in(-0.2, 0.9);
+        let gram = CosineGram::build(&kf);
+        let scores = pitome::merge::energy::energy_from_gram(&gram, margin);
+        for protect in [true, false] {
+            let want =
+                pitome_plan_two_pass(&kf, &scores, k, protect_first, protect);
+            let mut rng = Rng::new(0);
+            let got = ordered_bsm_plan_gram(&gram, &scores, k, protect_first,
+                                            Split::Alternate, protect, &mut rng);
+            assert_plans_equal(&got, &want,
+                               &format!("pitome n={n} k={k} protect={protect}"));
+        }
+    });
+}
+
+#[test]
+fn prop_tome_and_diffrate_plans_match_two_pass() {
+    property("tome/diffrate gram parity", 60, |g| {
+        let n = g.usize_in(6, 48);
+        let h = *g.choose(&[4usize, 8, 16]);
+        let kf = rand_mat(g, n, h);
+        let protect_first = 1usize;
+        let k = g.usize_in(1, (n - protect_first) / 2);
+        let gram = CosineGram::build(&kf);
+
+        let want = tome_plan_two_pass(&kf, k, protect_first, None);
+        let got = tome_plan_gram(&gram, k, protect_first, None);
+        assert_plans_equal(&got, &want, &format!("tome n={n} k={k}"));
+
+        let threshold = g.f32_in(-0.5, 0.9);
+        let want = tome_plan_two_pass(&kf, k, protect_first, Some(threshold));
+        let got = tome_plan_gram(&gram, k, protect_first, Some(threshold));
+        assert_plans_equal(&got, &want, &format!("tofu n={n} k={k}"));
+
+        let attn: Vec<f32> = (0..n).map(|_| g.f32_in(0.0, 1.0)).collect();
+        let want = diffrate_plan_two_pass(&kf, &attn, k, protect_first);
+        let got = diffrate_plan_gram(&gram, &attn, k, protect_first);
+        assert_plans_equal(&got, &want, &format!("diffrate n={n} k={k}"));
+    });
+}
+
+#[test]
+fn prop_merge_step_matches_two_pass_pipeline() {
+    property("merge_step gram parity", 40, |g| {
+        let n = g.usize_in(9, 48);
+        let h = *g.choose(&[4usize, 8, 16]);
+        let x = rand_mat(g, n, h);
+        let kf = rand_mat(g, n, h);
+        let sizes: Vec<f32> = (0..n).map(|_| g.f32_in(0.5, 3.0)).collect();
+        let attn: Vec<f32> = (0..n).map(|_| g.f32_in(0.0, 1.0)).collect();
+        let margin = g.f32_in(-0.2, 0.9);
+        let k = g.usize_in(1, (n - 1) / 2 - 1);
+        let ctx = MergeCtx {
+            x: &x, kf: &kf, sizes: &sizes, attn_cls: &attn,
+            margin, k, protect_first: 1,
+            tofu_threshold: DEFAULT_TOFU_PRUNE_THRESHOLD,
+        };
+        for mode in [MergeMode::PiToMe, MergeMode::PiToMeAttn, MergeMode::ToMe,
+                     MergeMode::ToFu, MergeMode::DiffRate] {
+            // the old pipeline: standalone energy pass, then a plan builder
+            // that re-derives pair similarities from scratch.  (Scores come
+            // from the public energy_scores so the ranking input is
+            // bit-identical on both sides; the numeric equivalence of the
+            // energy itself is covered by prop_energy_matches_two_pass,
+            // tolerance-based and ordering-free.)
+            let want_plan = match mode {
+                MergeMode::PiToMe => {
+                    let e = energy_scores(&kf, margin);
+                    pitome_plan_two_pass(&kf, &e, k, 1, true)
+                }
+                MergeMode::PiToMeAttn => {
+                    let neg: Vec<f32> = attn.iter().map(|v| -v).collect();
+                    pitome_plan_two_pass(&kf, &neg, k, 1, true)
+                }
+                MergeMode::ToMe => tome_plan_two_pass(&kf, k, 1, None),
+                MergeMode::ToFu => tome_plan_two_pass(
+                    &kf, k, 1, Some(DEFAULT_TOFU_PRUNE_THRESHOLD)),
+                MergeMode::DiffRate =>
+                    diffrate_plan_two_pass(&kf, &attn, k, 1),
+                _ => unreachable!(),
+            };
+            let (want, want_sizes) = apply_plan(&x, &sizes, &want_plan);
+            let mut rng = Rng::new(0);
+            let (got, got_sizes) = merge_step(mode, &ctx, &mut rng);
+            assert_eq!(got.rows, want.rows, "{mode:?}");
+            assert!(got.max_abs_diff(&want) < 1e-5,
+                    "{mode:?}: {}", got.max_abs_diff(&want));
+            for (a, b) in got_sizes.iter().zip(&want_sizes) {
+                assert!((a - b).abs() < 1e-5, "{mode:?} sizes");
+            }
+        }
+    });
+}

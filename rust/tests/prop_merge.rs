@@ -1,6 +1,7 @@
 //! Property-based invariant tests over the merge engine, the schedules,
 //! and the spectral toolkit (quickcheck helper, DESIGN.md §11).
 
+use pitome::config::DEFAULT_TOFU_PRUNE_THRESHOLD;
 use pitome::data::Rng;
 use pitome::graph::{coarsen, lift, normalized_laplacian, jacobi_eigenvalues,
                     Partition};
@@ -33,7 +34,8 @@ fn prop_output_shape_all_modes() {
         let mode = *g.choose(&MODES);
         let mut rng = Rng::new(1);
         let ctx = MergeCtx { x: &x, kf: &kf, sizes: &sizes, attn_cls: &attn,
-                             margin: g.f32_in(-0.2, 0.9), k, protect_first: 1 };
+                             margin: g.f32_in(-0.2, 0.9), k, protect_first: 1,
+                             tofu_threshold: DEFAULT_TOFU_PRUNE_THRESHOLD };
         let (out, out_sizes) = merge_step(mode, &ctx, &mut rng);
         assert_eq!(out.rows, x.rows - k, "{mode:?}");
         assert_eq!(out_sizes.len(), x.rows - k);
@@ -52,7 +54,8 @@ fn prop_mass_conservation() {
             let mut rng = Rng::new(2);
             let ctx = MergeCtx { x: &x, kf: &kf, sizes: &sizes,
                                  attn_cls: &attn, margin: 0.5, k,
-                                 protect_first: 1 };
+                                 protect_first: 1,
+                                 tofu_threshold: DEFAULT_TOFU_PRUNE_THRESHOLD };
             let (_, out_sizes) = merge_step(mode, &ctx, &mut rng);
             let t2: f32 = out_sizes.iter().sum();
             assert!((t2 - total).abs() < total * 1e-4,
@@ -69,7 +72,8 @@ fn prop_convex_hull_bounds() {
         let lo = x.data.iter().cloned().fold(f32::MAX, f32::min);
         let mut rng = Rng::new(3);
         let ctx = MergeCtx { x: &x, kf: &kf, sizes: &sizes, attn_cls: &attn,
-                             margin: 0.5, k, protect_first: 1 };
+                             margin: 0.5, k, protect_first: 1,
+                             tofu_threshold: DEFAULT_TOFU_PRUNE_THRESHOLD };
         let (out, _) = merge_step(MergeMode::PiToMe, &ctx, &mut rng);
         for &v in &out.data {
             assert!(v <= hi + 1e-4 && v >= lo - 1e-4);
@@ -84,7 +88,8 @@ fn prop_cls_always_survives_unchanged() {
         let mode = *g.choose(&MODES);
         let mut rng = Rng::new(4);
         let ctx = MergeCtx { x: &x, kf: &kf, sizes: &sizes, attn_cls: &attn,
-                             margin: 0.5, k, protect_first: 1 };
+                             margin: 0.5, k, protect_first: 1,
+                             tofu_threshold: DEFAULT_TOFU_PRUNE_THRESHOLD };
         let (out, out_sizes) = merge_step(mode, &ctx, &mut rng);
         // CLS row must appear in the output with its original value. For
         // every mode the protected prefix lands at output row 0 except

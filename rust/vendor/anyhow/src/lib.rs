@@ -1,0 +1,76 @@
+//! Offline stand-in for the `anyhow` crate.
+//!
+//! The build environment resolves no external registry (DESIGN.md §11), so
+//! this vendored micro-crate implements exactly the surface the `pitome`
+//! binaries and examples use: [`Result`], [`Error`], and the [`anyhow!`]
+//! macro.  It is not a general replacement — no backtraces, no context
+//! chains — just a string-backed error that any `std::error::Error`
+//! converts into.
+
+use std::fmt;
+
+/// String-backed dynamic error.
+///
+/// Deliberately does **not** implement `std::error::Error`: that keeps the
+/// blanket `From<E: std::error::Error>` impl coherent, exactly as the real
+/// `anyhow::Error` does.
+pub struct Error(String);
+
+impl Error {
+    /// Build an error from any displayable message.
+    pub fn msg<M: fmt::Display>(message: M) -> Error {
+        Error(message.to_string())
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.0)
+    }
+}
+
+impl fmt::Debug for Error {
+    // `fn main() -> Result<(), E>` prints errors via Debug; show the
+    // message verbatim rather than a struct dump.
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.0)
+    }
+}
+
+impl<E: std::error::Error + Send + Sync + 'static> From<E> for Error {
+    fn from(e: E) -> Error {
+        Error(e.to_string())
+    }
+}
+
+/// `anyhow`-style result alias.
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// Construct an [`Error`] from a format string.
+#[macro_export]
+macro_rules! anyhow {
+    ($($arg:tt)*) => {
+        $crate::Error::msg(format!($($arg)*))
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn macro_and_conversions() {
+        let e = anyhow!("bad thing {}", 7);
+        assert_eq!(e.to_string(), "bad thing 7");
+        let io = std::io::Error::new(std::io::ErrorKind::Other, "boom");
+        let e: super::Error = io.into();
+        assert!(e.to_string().contains("boom"));
+    }
+
+    #[test]
+    fn question_mark_from_std_error() {
+        fn inner() -> super::Result<()> {
+            let _: usize = "nope".parse()?;
+            Ok(())
+        }
+        assert!(inner().is_err());
+    }
+}
