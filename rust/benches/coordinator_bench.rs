@@ -8,22 +8,26 @@ use std::time::Instant;
 
 use pitome::coordinator::Metrics;
 use pitome::data::{generate_trace, TraceConfig};
-use pitome::util::Bench;
+use pitome::util::{smoke, Bench};
 
 fn main() {
-    let mut b = Bench::new(3, 15);
-    println!("# coordinator micro-benchmarks (no PJRT)");
+    let sm = smoke();
+    let mut b = if sm { Bench::new(1, 3) } else { Bench::new(3, 15) };
+    println!("# coordinator micro-benchmarks (no PJRT){}",
+             if sm { " [smoke]" } else { "" });
+    let reps: u64 = if sm { 100 } else { 10_000 };
+    let msgs: u64 = if sm { 50 } else { 1_000 };
 
     // metrics overhead on the hot path
     let m = Metrics::default();
-    b.run_throughput("metrics.record x10k", 10_000, || {
-        for i in 0..10_000u64 {
+    b.run_throughput(&format!("metrics.record x{reps}"), reps, || {
+        for i in 0..reps {
             m.record(i % 5_000);
         }
     });
 
     // channel round trip (the submit/response path minus execution)
-    b.run_throughput("sync_channel round-trip x1k", 1_000, || {
+    b.run_throughput(&format!("sync_channel round-trip x{msgs}"), msgs, || {
         let (tx, rx) = mpsc::sync_channel::<u64>(1024);
         let j = std::thread::spawn(move || {
             let mut acc = 0u64;
@@ -32,7 +36,7 @@ fn main() {
             }
             acc
         });
-        for i in 0..1_000 {
+        for i in 0..msgs {
             tx.send(i).unwrap();
         }
         drop(tx);
@@ -40,8 +44,9 @@ fn main() {
     });
 
     // trace generation cost (excluded from serving numbers)
-    b.run("generate_trace 10k events", || {
-        generate_trace(&TraceConfig { count: 10_000, ..Default::default() })
+    b.run(&format!("generate_trace {reps} events"), || {
+        generate_trace(&TraceConfig { count: reps as usize,
+                                      ..Default::default() })
     });
 
     // batch assembly: stack 8 x (64x16) f32 inputs (what run_batch does)

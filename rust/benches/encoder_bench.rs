@@ -1,0 +1,210 @@
+//! PERF/L3 — encoder forward benchmarks: the scratch-workspace forward vs
+//! the seed's allocating scalar attention, the per-layer
+//! attention/merge/MLP split, and allocations-per-forward (via the
+//! thread-local [`CountingAllocator`] hook).
+//! (Custom harness; criterion unavailable — DESIGN.md §11.  Run with
+//! `BENCH_SMOKE=1` / `--smoke` for the tiny CI shapes.)
+
+use pitome::config::{ViTConfig, DEFAULT_TOFU_PRUNE_THRESHOLD};
+use pitome::data::Rng;
+use pitome::merge::{merge_step_scratch, MergeCtx, MergeMode, MergeScratch};
+use pitome::model::{attention_into, encoder_forward, encoder_forward_scratch,
+                    encoder_layers, synthetic_vit_store, EncoderCfg,
+                    EncoderScratch, ResolvedEncoder};
+use pitome::tensor::{dense_into, gelu_inplace, softmax_rows, Mat};
+use pitome::util::{allocs_this_thread, smoke, Bench, CountingAllocator};
+
+#[global_allocator]
+static ALLOC: CountingAllocator = CountingAllocator;
+
+/// The seed's attention (verbatim pre-scratch implementation): scalar
+/// triple-loop scores and a fresh (n, n) score matrix allocated per head.
+/// Kept here as the baseline the vectorized head-blocked kernel is
+/// measured against.
+fn seed_attention(q: &Mat, kf: &Mat, v: &Mat, sizes: &[f32], heads: usize,
+                  prop_attn: bool) -> (Mat, Vec<f32>) {
+    let n = q.rows;
+    let dim = q.cols;
+    let d = dim / heads;
+    let scale = 1.0 / (d as f32).sqrt();
+    let log_m: Vec<f32> = if prop_attn {
+        sizes.iter().map(|&s| s.max(1e-9).ln()).collect()
+    } else {
+        vec![0.0; n]
+    };
+    let mut out = Mat::zeros(n, dim);
+    let mut attn_cls = vec![0f32; n];
+    for hh in 0..heads {
+        let col0 = hh * d;
+        let mut s = Mat::zeros(n, n);
+        for i in 0..n {
+            let qi = &q.row(i)[col0..col0 + d];
+            for j in 0..n {
+                let kj = &kf.row(j)[col0..col0 + d];
+                let mut dot = 0f32;
+                for c in 0..d {
+                    dot += qi[c] * kj[c];
+                }
+                s.set(i, j, dot * scale + log_m[j]);
+            }
+        }
+        {
+            let mut row0 = vec![0f32; n];
+            for j in 0..n {
+                row0[j] = s.get(0, j) - log_m[j];
+            }
+            let mx = row0.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+            let mut sum = 0f32;
+            for vj in row0.iter_mut() {
+                *vj = (*vj - mx).exp();
+                sum += *vj;
+            }
+            for (a, vj) in attn_cls.iter_mut().zip(&row0) {
+                *a += vj / sum / heads as f32;
+            }
+        }
+        softmax_rows(&mut s);
+        for i in 0..n {
+            let orow = out.row_mut(i);
+            for j in 0..n {
+                let p = s.get(i, j);
+                if p == 0.0 {
+                    continue;
+                }
+                let vj = &v.row(j)[col0..col0 + d];
+                for c in 0..d {
+                    orow[col0 + c] += p * vj[c];
+                }
+            }
+        }
+    }
+    (out, attn_cls)
+}
+
+fn random_mat(rng: &mut Rng, r: usize, c: usize) -> Mat {
+    Mat::from_fn(r, c, |_, _| (rng.next_f64() * 2.0 - 1.0) as f32)
+}
+
+fn main() {
+    let sm = smoke();
+    let mut b = if sm { Bench::new(1, 3) } else { Bench::new(3, 15) };
+    println!("# encoder forward benchmarks (scratch workspace){}",
+             if sm { " [smoke]" } else { "" });
+
+    // --- attention kernel: seed scalar loop vs head-blocked 8-lane dot
+    let (n, dim, heads) = if sm { (33usize, 64usize, 4usize) } else { (197, 384, 6) };
+    let mut rng = Rng::new(1);
+    let q = random_mat(&mut rng, n, dim);
+    let kf = random_mat(&mut rng, n, dim);
+    let v = random_mat(&mut rng, n, dim);
+    let sizes = vec![1.0f32; n];
+    b.run(&format!("attention seed-alloc n={n} dim={dim} h={heads}"), || {
+        seed_attention(&q, &kf, &v, &sizes, heads, true)
+    });
+    let mut scores = Mat::zeros(0, 0);
+    let mut attn_out = Mat::zeros(0, 0);
+    let mut attn_cls = Vec::new();
+    let mut log_m = Vec::new();
+    let mut row0 = Vec::new();
+    b.run(&format!("attention scratch    n={n} dim={dim} h={heads}"), || {
+        attention_into(&q, &kf, &v, &sizes, heads, true, &mut scores,
+                       &mut attn_out, &mut attn_cls, &mut log_m, &mut row0);
+    });
+    let seed_p50 = b.results[b.results.len() - 2].p50_ns() as f64;
+    let scratch_p50 = b.results[b.results.len() - 1].p50_ns() as f64;
+    println!("attention speedup scratch vs seed (p50): {:.2}x \
+              (acceptance floor: 2x)\n", seed_p50 / scratch_p50);
+
+    // --- per-layer split at the same shape: attention / merge / MLP
+    let x = random_mat(&mut rng, n, dim);
+    let attn_scores: Vec<f32> = (0..n).map(|i| (i % 13) as f32 * 0.01).collect();
+    let k = (n - 1) / 10;
+    let mut ms = MergeScratch::new();
+    b.run(&format!("layer split: merge pitome n={n} k={k}"), || {
+        let mut r = Rng::new(9);
+        let ctx = MergeCtx {
+            x: &x, kf: &kf, sizes: &sizes, attn_cls: &attn_scores,
+            margin: 0.45, k, protect_first: 1,
+            tofu_threshold: DEFAULT_TOFU_PRUNE_THRESHOLD,
+        };
+        merge_step_scratch(MergeMode::PiToMe, &ctx, &mut r, &mut ms);
+    });
+    let hidden_dim = dim * 4;
+    let w1 = random_mat(&mut rng, dim, hidden_dim);
+    let b1 = vec![0.01f32; hidden_dim];
+    let w2 = random_mat(&mut rng, hidden_dim, dim);
+    let b2 = vec![0.01f32; dim];
+    let mut hidden = Mat::zeros(0, 0);
+    let mut mlp_out = Mat::zeros(0, 0);
+    b.run(&format!("layer split: mlp n={n} dim={dim} hidden={hidden_dim}"), || {
+        dense_into(&x, w1.view(), Some(&b1), &mut hidden);
+        gelu_inplace(&mut hidden);
+        dense_into(&hidden, w2.view(), Some(&b2), &mut mlp_out);
+    });
+
+    // --- full serial forward: transient vs reused scratch
+    let vcfg = if sm {
+        ViTConfig { merge_mode: "pitome".into(), merge_r: 0.9,
+                    ..Default::default() }
+    } else {
+        let mut c = ViTConfig::preset("deit-s").unwrap();
+        c.merge_mode = "pitome".into();
+        c.merge_r = 0.9;
+        c
+    };
+    let ps = synthetic_vit_store(&vcfg, 7);
+    let cfg = EncoderCfg {
+        prefix: "vit.".into(),
+        dim: vcfg.dim,
+        depth: vcfg.depth,
+        heads: vcfg.heads,
+        mode: vcfg.mode(),
+        plan: vcfg.plan(),
+        prop_attn: true,
+        tofu_threshold: vcfg.tofu_threshold,
+    };
+    let n0 = cfg.plan[0];
+    let x0 = random_mat(&mut rng, n0, cfg.dim);
+    b.run(&format!("forward transient-scratch {} d={}", vcfg.name, cfg.depth), || {
+        let mut r = Rng::new(0);
+        encoder_forward(&ps, &cfg, x0.clone(), &mut r).unwrap()
+    });
+    let mut scratch = EncoderScratch::new();
+    b.run(&format!("forward reused-scratch    {} d={}", vcfg.name, cfg.depth), || {
+        let mut r = Rng::new(0);
+        encoder_forward_scratch(&ps, &cfg, x0.clone(), &mut r, &mut scratch)
+            .unwrap()
+    });
+
+    // --- allocations per steady-state layer loop (the alloc-counter hook)
+    let re = ResolvedEncoder::new(&ps, &cfg).unwrap();
+    let pitome_allocs = count_layer_loop(&cfg, &re, &mut scratch, &x0);
+    let mut none_cfg = cfg.clone();
+    none_cfg.mode = MergeMode::None;
+    none_cfg.plan = vec![n0; cfg.depth + 1];
+    let re_none = ResolvedEncoder::new(&ps, &none_cfg).unwrap();
+    let mut none_scratch = EncoderScratch::new();
+    let none_allocs = count_layer_loop(&none_cfg, &re_none,
+                                       &mut none_scratch, &x0);
+    println!("\nallocations per steady-state layer loop: \
+              {none_allocs} (merge off — acceptance: 0), \
+              {pitome_allocs} (pitome merge plans only)");
+}
+
+/// Warm `scratch` with one pass, then count allocations over a second,
+/// steady-state pass of the encoder layer loop.
+fn count_layer_loop(cfg: &EncoderCfg, re: &ResolvedEncoder,
+                    scratch: &mut EncoderScratch, x0: &Mat) -> u64 {
+    let n0 = x0.rows;
+    for pass in 0..2 {
+        let mut x = x0.clone();
+        let mut szs = vec![1.0f32; n0];
+        let mut r = Rng::new(0);
+        let before = allocs_this_thread();
+        encoder_layers(re, cfg, &mut x, &mut szs, &mut r, scratch);
+        if pass == 1 {
+            return allocs_this_thread() - before;
+        }
+    }
+    unreachable!()
+}

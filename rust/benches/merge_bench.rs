@@ -9,7 +9,7 @@ use pitome::merge::batch::{merge_step_batch, recommended_workers, BatchSeq};
 use pitome::merge::{energy_from_gram, energy_scores, merge_step, MergeCtx,
                     MergeMode};
 use pitome::tensor::{CosineGram, Mat};
-use pitome::util::Bench;
+use pitome::util::{smoke, Bench};
 
 fn random_tokens(n: usize, h: usize, seed: u64) -> Mat {
     let mut rng = Rng::new(seed);
@@ -17,10 +17,17 @@ fn random_tokens(n: usize, h: usize, seed: u64) -> Mat {
 }
 
 fn main() {
-    let mut b = Bench::new(3, 15);
-    println!("# merge engine micro-benchmarks (per-sample, single thread)");
+    let sm = smoke();
+    let mut b = if sm { Bench::new(1, 3) } else { Bench::new(3, 15) };
+    println!("# merge engine micro-benchmarks (per-sample, single thread){}",
+             if sm { " [smoke]" } else { "" });
 
-    for &(n, h) in &[(65usize, 64usize), (197, 64), (197, 192), (577, 192)] {
+    let gram_shapes: &[(usize, usize)] = if sm {
+        &[(33, 16)]
+    } else {
+        &[(65, 64), (197, 64), (197, 192), (577, 192)]
+    };
+    for &(n, h) in gram_shapes {
         let kf = random_tokens(n, h, 1);
         b.run(&format!("energy_scores n={n} h={h}"), || {
             energy_scores(&kf, 0.45)
@@ -33,13 +40,11 @@ fn main() {
         });
     }
 
-    let n = 197;
-    let h = 64;
+    let (n, h, k) = if sm { (33usize, 16usize, 4usize) } else { (197, 64, 20) };
     let kf = random_tokens(n, h, 2);
     let x = random_tokens(n, h, 3);
     let sizes = vec![1.0f32; n];
     let attn: Vec<f32> = (0..n).map(|i| (i % 13) as f32 * 0.01).collect();
-    let k = 20;
     for mode in [MergeMode::PiToMe, MergeMode::ToMe, MergeMode::ToFu,
                  MergeMode::Dct, MergeMode::DiffRate, MergeMode::Random] {
         b.run(&format!("merge_step {:10} n={n} k={k}", mode.name()), || {

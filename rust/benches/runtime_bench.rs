@@ -5,9 +5,10 @@
 
 use pitome::data::{patchify, shape_item, TEST_SEED};
 use pitome::runtime::{load_flat_params, Engine, HostTensor, Registry};
-use pitome::util::Bench;
+use pitome::util::{smoke, Bench};
 
 fn main() {
+    let sm = smoke();
     let dir = Registry::default_dir();
     let reg = match Registry::load(&dir) {
         Ok(r) => r,
@@ -17,11 +18,16 @@ fn main() {
         }
     };
     let engine = Engine::cpu().expect("PJRT cpu client");
-    let mut b = Bench::new(2, 10);
-    println!("# PJRT runtime benchmarks");
+    let mut b = if sm { Bench::new(1, 2) } else { Bench::new(2, 10) };
+    println!("# PJRT runtime benchmarks{}", if sm { " [smoke]" } else { "" });
 
-    for name in ["vit_none_b1", "vit_pitome_r900_b1", "vit_none_b8",
-                 "vit_pitome_r900_b8"] {
+    let artifacts: &[&str] = if sm {
+        &["vit_none_b1"]
+    } else {
+        &["vit_none_b1", "vit_pitome_r900_b1", "vit_none_b8",
+          "vit_pitome_r900_b8"]
+    };
+    for &name in artifacts {
         if reg.get(name).is_err() {
             println!("(skipping {name}: not built)");
             continue;

@@ -5,13 +5,15 @@ use pitome::eval::spectral::{clustered_tokens, iterative_coarsen,
                              ClusterSpec, CoarsenAlgo, Layout};
 use pitome::graph::{jacobi_eigenvalues, normalized_laplacian,
                     spectral_distance, token_graph};
-use pitome::util::Bench;
+use pitome::util::{smoke, Bench};
 
 fn main() {
-    let mut b = Bench::new(2, 8);
-    println!("# spectral toolkit benchmarks");
+    let sm = smoke();
+    let mut b = if sm { Bench::new(1, 2) } else { Bench::new(2, 8) };
+    println!("# spectral toolkit benchmarks{}", if sm { " [smoke]" } else { "" });
 
-    for &n in &[16usize, 32, 64, 128] {
+    let ns: &[usize] = if sm { &[16] } else { &[16, 32, 64, 128] };
+    for &n in ns {
         let spec = ClusterSpec {
             sizes: vec![n / 2, n / 4, n / 8, n - n / 2 - n / 4 - n / 8],
             h: 16,

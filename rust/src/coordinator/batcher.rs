@@ -6,15 +6,17 @@
 //! * **PJRT** ([`VariantWorker::spawn`]) — pads the batch to the
 //!   artifact's compiled batch size and executes the HLO artifact.
 //! * **CPU reference** ([`VariantWorker::spawn_cpu`]) — runs the pure-Rust
-//!   ViT through the batch encoder, whose per-layer merge steps fan the
-//!   whole batch out over `ServingConfig::workers` threads
-//!   (`merge::batch`).  Needs no artifacts, so serving works — and
-//!   benefits from batched merging — even before `make artifacts`.
+//!   ViT through the batch encoder: samples fan out over
+//!   `ServingConfig::workers` threads, each reusing an `EncoderScratch`
+//!   from a pool that lives as long as the worker, so steady-state
+//!   serving performs no encoder-buffer allocations.  Needs no artifacts,
+//!   so serving works even before `make artifacts`.
 //!
 //! Built on std sync primitives (DESIGN.md §11): a bounded
 //! `mpsc::sync_channel` is the admission-control boundary; `recv_timeout`
 //! implements the batching deadline without spinning.
 
+use std::cell::RefCell;
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::mpsc::{Receiver, RecvTimeoutError, SyncSender, TrySendError};
 use std::sync::Arc;
@@ -24,7 +26,7 @@ use std::path::PathBuf;
 
 use crate::config::{ServingConfig, ViTConfig};
 use crate::error::{Error, Result};
-use crate::model::{ParamStore, ViTModel};
+use crate::model::{ParamStore, ScratchPool, ViTModel};
 use crate::runtime::{ArtifactEntry, Engine, Executable, HostTensor};
 use crate::tensor::Mat;
 
@@ -119,8 +121,14 @@ impl VariantWorker {
         let name = format!("pitome-cpu-{}-r{:.0}",
                            model_cfg.merge_mode, model_cfg.merge_r * 1000.0);
         Self::spawn_worker(name, cfg, max_batch, move || {
+            // one scratch pool per variant worker, alive for the worker's
+            // whole lifetime: after the first batch warms it, steady-state
+            // serving reallocates no encoder buffers (the worker loop is
+            // single-threaded, so the RefCell is never contended)
+            let pool = RefCell::new(ScratchPool::new());
             Some(move |batch: &[InferRequest]| {
-                cpu_run_batch(&ps, &model_cfg, workers, batch)
+                cpu_run_batch(&ps, &model_cfg, workers,
+                              &mut pool.borrow_mut(), batch)
             })
         })
     }
@@ -222,10 +230,12 @@ where
 }
 
 /// Execute a batch on the CPU reference ViT: parse each request's patches
-/// tensor, run the batch encoder (merge steps parallelized over `workers`
-/// threads), and return one logits tensor per request.
+/// tensor, run the batch encoder (samples fanned out over `workers`
+/// threads, each reusing a scratch from `pool`), and return one logits
+/// tensor per request.
 fn cpu_run_batch(ps: &ParamStore, cfg: &ViTConfig, workers: usize,
-                 batch: &[InferRequest]) -> Result<Vec<Vec<HostTensor>>> {
+                 pool: &mut ScratchPool, batch: &[InferRequest])
+                 -> Result<Vec<Vec<HostTensor>>> {
     let model = ViTModel::new(ps, cfg.clone());
     // exact-shape admission: a malformed request must become an error (the
     // responders are dropped, submitters see a closed channel), never a
@@ -245,7 +255,7 @@ fn cpu_run_batch(ps: &ParamStore, cfg: &ViTConfig, workers: usize,
         }
         patches.push(Mat::from_vec(want_rows, want_cols, d.to_vec()));
     }
-    let logits = model.logits_batch(&patches, 0, workers)?;
+    let logits = model.logits_batch_pooled(&patches, 0, workers, pool)?;
     Ok(logits
         .into_iter()
         .map(|lg| {

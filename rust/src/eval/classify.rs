@@ -5,7 +5,7 @@
 use crate::config::ViTConfig;
 use crate::data::{patchify, shape_item, TEST_SEED};
 use crate::error::Result;
-use crate::model::{flops, ParamStore, ViTModel};
+use crate::model::{flops, ParamStore, ScratchPool, ViTModel};
 
 /// One result row.
 #[derive(Clone, Debug)]
@@ -45,6 +45,9 @@ pub fn eval_config_with_workers(ps: &ParamStore, mode: &str, r: f64,
     let model = ViTModel::new(ps, cfg.clone());
     let mut correct = 0usize;
     let mut done = 0usize;
+    // one scratch pool for the whole sweep: encoder buffers are reused
+    // across every eval chunk
+    let mut pool = ScratchPool::new();
     while done < n_test {
         let count = EVAL_CHUNK.min(n_test - done);
         let mut patches = Vec::with_capacity(count);
@@ -54,7 +57,8 @@ pub fn eval_config_with_workers(ps: &ParamStore, mode: &str, r: f64,
             patches.push(patchify(&item.image, cfg.patch_size));
             labels.push(item.label);
         }
-        let preds = model.predict_batch(&patches, 0xE7A1 ^ done as u64, workers)?;
+        let preds = model.predict_batch_pooled(&patches, 0xE7A1 ^ done as u64,
+                                               workers, &mut pool)?;
         correct += preds.iter().zip(&labels).filter(|(p, l)| p == l).count();
         done += count;
     }

@@ -5,7 +5,7 @@ use crate::config::TextConfig;
 use crate::data::{sent_item, TEST_SEED};
 use crate::error::Result;
 use crate::model::flops::encoder_flops;
-use crate::model::{bert_logits_batch, ParamStore};
+use crate::model::{bert_logits_batch_pooled, ParamStore, ScratchPool};
 use crate::tensor::argmax;
 
 /// One text-classification row.
@@ -42,6 +42,9 @@ pub fn eval_config_with_workers(ps: &ParamStore, mode: &str, r: f64, n: usize,
     };
     let mut correct = 0usize;
     let mut done = 0usize;
+    // one scratch pool for the whole sweep: encoder buffers are reused
+    // across every eval chunk
+    let mut pool = ScratchPool::new();
     while done < n {
         let count = EVAL_CHUNK.min(n - done);
         let mut seqs = Vec::with_capacity(count);
@@ -52,8 +55,9 @@ pub fn eval_config_with_workers(ps: &ParamStore, mode: &str, r: f64, n: usize,
             seqs.push(toks);
             labels.push(label);
         }
-        let logits =
-            bert_logits_batch(ps, &cfg, &seqs, 0x7E57 ^ done as u64, workers)?;
+        let logits = bert_logits_batch_pooled(ps, &cfg, &seqs,
+                                              0x7E57 ^ done as u64, workers,
+                                              &mut pool)?;
         correct += logits
             .iter()
             .zip(&labels)

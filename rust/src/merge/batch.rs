@@ -11,9 +11,13 @@
 //!   deterministic mode (PiToMe/ToMe/ToFu/DCT/DiffRate); stochastic modes
 //!   (random split / random pruning) are driven by the per-item seed.
 //! * [`parallel_map`] / [`parallel_map_mut`] — the underlying scoped
-//!   fan-out helpers, reused by the batch encoder
-//!   (`model::encoder::encoder_forward_batch`), the eval harnesses, and
-//!   the coordinator's CPU workers.
+//!   fan-out helpers ([`merge_step_batch`] runs on [`parallel_map`];
+//!   [`parallel_map_mut`] is the general in-place variant).
+//! * [`parallel_map_mut_ctx`] — the fan-out the batch encoder
+//!   (`model::encoder::encoder_forward_batch`) runs on: each worker
+//!   thread additionally owns one reusable context (its
+//!   `EncoderScratch`), so buffers persist across every item the worker
+//!   processes instead of being reallocated per item.
 //!
 //! Each sequence still builds exactly one cosine Gram, on whichever worker
 //! thread processes it — batching composes with the shared-Gram pipeline
@@ -53,7 +57,7 @@ where
     if workers == 1 {
         return items.iter().enumerate().map(|(i, t)| f(i, t)).collect();
     }
-    let chunk = (n + workers - 1) / workers;
+    let chunk = n.div_ceil(workers);
     let mut out: Vec<Option<U>> = (0..n).map(|_| None).collect();
     std::thread::scope(|s| {
         for (ci, (ichunk, ochunk)) in
@@ -87,7 +91,7 @@ where
     if workers == 1 {
         return items.iter_mut().enumerate().map(|(i, t)| f(i, t)).collect();
     }
-    let chunk = (n + workers - 1) / workers;
+    let chunk = n.div_ceil(workers);
     let mut out: Vec<Option<U>> = (0..n).map(|_| None).collect();
     std::thread::scope(|s| {
         for (ci, (ichunk, ochunk)) in
@@ -98,6 +102,55 @@ where
                     ichunk.iter_mut().zip(ochunk.iter_mut()).enumerate()
                 {
                     *slot = Some(f(ci * chunk + off, item));
+                }
+            });
+        }
+    });
+    out.into_iter().map(|o| o.expect("worker filled every slot")).collect()
+}
+
+/// Like [`parallel_map_mut`], but each worker thread owns one reusable
+/// context from `ctxs` (the worker count is `ctxs.len()`): chunk `ci`
+/// runs with `ctxs[ci]`, so a context is reused for every item of its
+/// chunk and survives the call for the caller to reuse again.  This is
+/// how the batch encoder gives each worker thread a persistent
+/// `EncoderScratch`.
+pub fn parallel_map_mut_ctx<T, U, C, F>(items: &mut [T], ctxs: &mut [C],
+                                        f: &F) -> Vec<U>
+where
+    T: Send,
+    U: Send,
+    C: Send,
+    F: Fn(usize, &mut T, &mut C) -> U + Sync,
+{
+    let n = items.len();
+    if n == 0 {
+        return Vec::new();
+    }
+    assert!(!ctxs.is_empty(), "parallel_map_mut_ctx needs at least one ctx");
+    let workers = ctxs.len().min(n);
+    if workers == 1 {
+        let ctx = &mut ctxs[0];
+        return items
+            .iter_mut()
+            .enumerate()
+            .map(|(i, t)| f(i, t, ctx))
+            .collect();
+    }
+    let chunk = n.div_ceil(workers);
+    let mut out: Vec<Option<U>> = (0..n).map(|_| None).collect();
+    std::thread::scope(|s| {
+        for (ci, ((ichunk, ochunk), ctx)) in items
+            .chunks_mut(chunk)
+            .zip(out.chunks_mut(chunk))
+            .zip(ctxs.iter_mut())
+            .enumerate()
+        {
+            s.spawn(move || {
+                for (off, (item, slot)) in
+                    ichunk.iter_mut().zip(ochunk.iter_mut()).enumerate()
+                {
+                    *slot = Some(f(ci * chunk + off, item, ctx));
                 }
             });
         }
@@ -146,6 +199,23 @@ mod tests {
         });
         assert_eq!(items, (1..=10).map(|v| v as u32).collect::<Vec<_>>());
         assert_eq!(sums, items);
+    }
+
+    #[test]
+    fn parallel_map_mut_ctx_reuses_one_ctx_per_chunk() {
+        let mut items = vec![0u32; 23];
+        for workers in [1usize, 2, 4, 7] {
+            let mut ctxs = vec![0usize; workers];
+            let out = parallel_map_mut_ctx(&mut items, &mut ctxs, &|i, v, c| {
+                *c += 1; // items seen by this worker's context
+                *v = i as u32;
+                i
+            });
+            assert_eq!(out, (0..23).collect::<Vec<_>>());
+            assert_eq!(items, (0..23u32).collect::<Vec<_>>());
+            // every item was charged to exactly one context
+            assert_eq!(ctxs.iter().sum::<usize>(), 23, "workers={workers}");
+        }
     }
 
     fn mk_ctx<'a>(x: &'a Mat, kf: &'a Mat, sizes: &'a [f32],

@@ -1,7 +1,20 @@
 //! DCT baseline (Fourier-transformer style, He et al. 2023): truncate the
 //! token sequence in frequency space.  Mirrors `ref.dct_merge`.
 
+use std::cell::RefCell;
+use std::collections::HashMap;
+use std::rc::Rc;
+
 use crate::tensor::{matmul, Mat};
+
+thread_local! {
+    /// Per-thread DCT basis cache keyed by n.  The encoder calls
+    /// [`dct_merge`] with the same (shrinking) token counts on every
+    /// forward, so each worker thread pays the O(n²) trig build once per
+    /// distinct n instead of once per call.
+    static DCT_BASES: RefCell<HashMap<usize, Rc<Mat>>> =
+        RefCell::new(HashMap::new());
+}
 
 /// Orthonormal DCT-II matrix D (n, n): `D @ x` computes the DCT along the
 /// token axis.
@@ -18,6 +31,17 @@ pub fn dct_matrix(n: usize) -> Mat {
     d
 }
 
+/// Thread-locally cached [`dct_matrix`]: the first call per (thread, n)
+/// builds the basis, later calls share it.
+pub fn dct_matrix_cached(n: usize) -> Rc<Mat> {
+    DCT_BASES.with(|c| {
+        c.borrow_mut()
+            .entry(n)
+            .or_insert_with(|| Rc::new(dct_matrix(n)))
+            .clone()
+    })
+}
+
 /// DCT merge: keep the low-frequency band of the non-protected tokens and
 /// resynthesize `n - protect_first - k` tokens on the coarse grid.
 /// Sizes reset to 1 (no tracking, as in the paper's DCT baseline).
@@ -25,7 +49,7 @@ pub fn dct_merge(x: &Mat, _sizes: &[f32], k: usize, protect_first: usize)
     -> (Mat, Vec<f32>) {
     let nb = x.rows - protect_first;
     let keep = nb - k;
-    let d = dct_matrix(nb);
+    let d = dct_matrix_cached(nb);
     // body = x[protect_first..]
     let body = Mat::from_fn(nb, x.cols, |i, j| x.get(protect_first + i, j));
     let freq = matmul(&d, &body);
@@ -74,6 +98,19 @@ mod tests {
         let (out, sizes) = dct_merge(&x, &vec![1.0; 17], 5, 1);
         assert_eq!(out.rows, 12);
         assert!(sizes.iter().all(|&s| s == 1.0));
+    }
+
+    #[test]
+    fn cached_basis_matches_uncached_and_is_shared() {
+        for n in [1usize, 2, 7, 16, 33] {
+            let cached = dct_matrix_cached(n);
+            let direct = dct_matrix(n);
+            assert_eq!(cached.rows, direct.rows, "n={n}");
+            assert!(cached.max_abs_diff(&direct) == 0.0, "n={n}");
+            // second lookup returns the same shared allocation
+            let again = dct_matrix_cached(n);
+            assert!(Rc::ptr_eq(&cached, &again), "n={n} rebuilt the basis");
+        }
     }
 
     #[test]

@@ -21,13 +21,21 @@
 //! functions (`energy_scores`, `ordered_bsm_plan`, ...) survive as thin
 //! wrappers that build their own Gram, so external callers are unchanged.
 //!
+//! # Scratch-backed merging
+//!
+//! [`merge_step_scratch`] is the allocation-free form the encoder's
+//! scratch workspace (`model::encoder::EncoderScratch`) runs on: the
+//! shared Gram is rebuilt in place and the plan applied via
+//! [`apply_plan_into`], with the same one-Gram-per-step invariant.
+//!
 //! # Batched merging
 //!
 //! [`batch::merge_step_batch`] runs merge steps for a whole batch of
 //! sequences across scoped worker threads (each sequence still builds
 //! exactly one Gram, on whichever thread processes it).  The batch
-//! encoder (`model::encoder::encoder_forward_batch`), the eval harnesses,
-//! and the serving coordinator's CPU workers all go through it.
+//! encoder fans out whole samples instead (one scratch per worker —
+//! `batch::parallel_map_mut_ctx`); `merge_step_batch` remains for
+//! merge-only workloads and the benches.
 
 pub mod batch;
 pub mod dct;
@@ -42,7 +50,7 @@ pub mod unmerge;
 
 pub use batch::{merge_step_batch, BatchSeq};
 pub use energy::{energy_from_gram, energy_scores};
-pub use plan::{apply_plan, MergePlan};
+pub use plan::{apply_plan, apply_plan_into, MergePlan};
 pub use schedule::{fixed_k_plan, merge_plan, tokens_after_merge};
 pub use unmerge::{unmerge, MergeTracker};
 
@@ -168,6 +176,43 @@ pub fn merge_step(mode: MergeMode, ctx: &MergeCtx, rng: &mut Rng) -> (Mat, Vec<f
     }
 }
 
+/// Build the merge plan for a similarity-driven mode from the shared Gram
+/// (the single place the per-mode plan builders are dispatched, so the
+/// allocating and scratch-backed paths cannot drift apart).
+fn plan_with_gram(mode: MergeMode, ctx: &MergeCtx, g: &CosineGram,
+                  rng: &mut Rng) -> MergePlan {
+    match mode {
+        MergeMode::None | MergeMode::Dct | MergeMode::Random => {
+            unreachable!("{mode:?} is not similarity-driven")
+        }
+        MergeMode::PiToMe => {
+            let e = energy_from_gram(g, ctx.margin);
+            pitome::ordered_bsm_plan_gram(
+                g, &e, ctx.k, ctx.protect_first, pitome::Split::Alternate, true, rng)
+        }
+        MergeMode::PiToMeNoProtect => {
+            let e = energy_from_gram(g, ctx.margin);
+            pitome::ordered_bsm_plan_gram(
+                g, &e, ctx.k, ctx.protect_first, pitome::Split::Alternate, false, rng)
+        }
+        MergeMode::PiToMeRandomSplit => {
+            let e = energy_from_gram(g, ctx.margin);
+            pitome::ordered_bsm_plan_gram(
+                g, &e, ctx.k, ctx.protect_first, pitome::Split::Random, true, rng)
+        }
+        MergeMode::PiToMeAttn => {
+            let neg: Vec<f32> = ctx.attn_cls.iter().map(|v| -v).collect();
+            pitome::ordered_bsm_plan_gram(
+                g, &neg, ctx.k, ctx.protect_first, pitome::Split::Alternate, true, rng)
+        }
+        MergeMode::ToMe => tome::tome_plan_gram(g, ctx.k, ctx.protect_first, None),
+        MergeMode::ToFu => tome::tome_plan_gram(
+            g, ctx.k, ctx.protect_first, Some(ctx.tofu_threshold)),
+        MergeMode::DiffRate => diffrate::diffrate_plan_gram(
+            g, ctx.attn_cls, ctx.k, ctx.protect_first),
+    }
+}
+
 /// Run one merge step against a caller-provided shared Gram (must have
 /// been built from `ctx.kf`).  Gram-free modes (None/DCT/Random) fall
 /// through to the plain path and ignore `g`.
@@ -181,43 +226,80 @@ pub fn merge_step_with_gram(mode: MergeMode, ctx: &MergeCtx, g: &CosineGram,
         MergeMode::None | MergeMode::Dct | MergeMode::Random => {
             merge_step(mode, ctx, rng)
         }
-        MergeMode::PiToMe => {
-            let e = energy_from_gram(g, ctx.margin);
-            let plan = pitome::ordered_bsm_plan_gram(
-                g, &e, ctx.k, ctx.protect_first, pitome::Split::Alternate, true, rng);
+        _ => {
+            let plan = plan_with_gram(mode, ctx, g, rng);
             apply_plan(ctx.x, ctx.sizes, &plan)
         }
-        MergeMode::PiToMeNoProtect => {
-            let e = energy_from_gram(g, ctx.margin);
-            let plan = pitome::ordered_bsm_plan_gram(
-                g, &e, ctx.k, ctx.protect_first, pitome::Split::Alternate, false, rng);
-            apply_plan(ctx.x, ctx.sizes, &plan)
+    }
+}
+
+/// Reusable buffers for [`merge_step_scratch`]: the shared Gram, its
+/// normalized-feature scratch, and the merged-token outputs.  Owned by an
+/// [`EncoderScratch`](crate::model::EncoderScratch) (one per worker
+/// thread); callers `mem::swap` the outputs with their live token state
+/// after each step, so the buffers ping-pong and are never reallocated at
+/// steady state.
+pub struct MergeScratch {
+    /// the per-step shared Gram, rebuilt in place
+    gram: CosineGram,
+    /// normalized-feature scratch for the Gram rebuild
+    kn: Mat,
+    /// merged tokens (valid after a [`merge_step_scratch`] call)
+    pub out_x: Mat,
+    /// merged sizes (valid after a [`merge_step_scratch`] call)
+    pub out_sizes: Vec<f32>,
+}
+
+impl MergeScratch {
+    /// Empty scratch; buffers grow on first use and are then reused.
+    pub fn new() -> MergeScratch {
+        MergeScratch {
+            gram: CosineGram::empty(),
+            kn: Mat::zeros(0, 0),
+            out_x: Mat::zeros(0, 0),
+            out_sizes: Vec::new(),
         }
-        MergeMode::PiToMeRandomSplit => {
-            let e = energy_from_gram(g, ctx.margin);
-            let plan = pitome::ordered_bsm_plan_gram(
-                g, &e, ctx.k, ctx.protect_first, pitome::Split::Random, true, rng);
-            apply_plan(ctx.x, ctx.sizes, &plan)
+    }
+}
+
+impl Default for MergeScratch {
+    fn default() -> Self {
+        MergeScratch::new()
+    }
+}
+
+/// Run one merge step into reusable scratch buffers, leaving the merged
+/// tokens in `s.out_x` / `s.out_sizes`.
+///
+/// Numerics are identical to [`merge_step`] (both dispatch the same plan
+/// builders and the same apply kernel).  Similarity-driven modes rebuild
+/// `s.gram` in place (still exactly one Gram per step) and apply the plan
+/// via [`apply_plan_into`]; DCT falls back to its allocating path (its
+/// output shape is resynthesized, not selected); `k == 0` / `None` copies
+/// the input through.
+pub fn merge_step_scratch(mode: MergeMode, ctx: &MergeCtx, rng: &mut Rng,
+                          s: &mut MergeScratch) {
+    if ctx.k == 0 || mode == MergeMode::None {
+        s.out_x.copy_from(ctx.x);
+        s.out_sizes.clear();
+        s.out_sizes.extend_from_slice(ctx.sizes);
+        return;
+    }
+    match mode {
+        MergeMode::None => unreachable!(),
+        MergeMode::Dct => {
+            let (x, sizes) = dct::dct_merge(ctx.x, ctx.sizes, ctx.k, ctx.protect_first);
+            s.out_x = x;
+            s.out_sizes = sizes;
         }
-        MergeMode::PiToMeAttn => {
-            let neg: Vec<f32> = ctx.attn_cls.iter().map(|v| -v).collect();
-            let plan = pitome::ordered_bsm_plan_gram(
-                g, &neg, ctx.k, ctx.protect_first, pitome::Split::Alternate, true, rng);
-            apply_plan(ctx.x, ctx.sizes, &plan)
+        MergeMode::Random => {
+            let plan = random::random_plan(ctx.x.rows, ctx.k, ctx.protect_first, rng);
+            apply_plan_into(ctx.x, ctx.sizes, &plan, &mut s.out_x, &mut s.out_sizes);
         }
-        MergeMode::ToMe => {
-            let plan = tome::tome_plan_gram(g, ctx.k, ctx.protect_first, None);
-            apply_plan(ctx.x, ctx.sizes, &plan)
-        }
-        MergeMode::ToFu => {
-            let plan = tome::tome_plan_gram(
-                g, ctx.k, ctx.protect_first, Some(ctx.tofu_threshold));
-            apply_plan(ctx.x, ctx.sizes, &plan)
-        }
-        MergeMode::DiffRate => {
-            let plan = diffrate::diffrate_plan_gram(
-                g, ctx.attn_cls, ctx.k, ctx.protect_first);
-            apply_plan(ctx.x, ctx.sizes, &plan)
+        _ => {
+            s.gram.rebuild(ctx.kf, &mut s.kn);
+            let plan = plan_with_gram(mode, ctx, &s.gram, rng);
+            apply_plan_into(ctx.x, ctx.sizes, &plan, &mut s.out_x, &mut s.out_sizes);
         }
     }
 }
@@ -277,6 +359,61 @@ mod tests {
             assert_eq!(step(mode), 1, "{mode:?} must build exactly one Gram");
         }
         // similarity-free baselines build none
+        for mode in [MergeMode::Dct, MergeMode::Random] {
+            assert_eq!(step(mode), 0, "{mode:?} must build no Gram");
+        }
+    }
+
+    #[test]
+    fn scratch_step_matches_allocating_step_for_all_modes() {
+        let (x, sizes) = mk(25, 8, 3);
+        let attn: Vec<f32> = (0..25).map(|i| 0.01 * i as f32).collect();
+        let mut s = MergeScratch::new();
+        for &mode in &[
+            MergeMode::None, MergeMode::PiToMe, MergeMode::PiToMeNoProtect,
+            MergeMode::PiToMeRandomSplit, MergeMode::PiToMeAttn, MergeMode::ToMe,
+            MergeMode::ToFu, MergeMode::Dct, MergeMode::DiffRate, MergeMode::Random,
+        ] {
+            let k = if mode == MergeMode::None { 0 } else { 6 };
+            let ctx = MergeCtx {
+                x: &x, kf: &x, sizes: &sizes, attn_cls: &attn,
+                margin: 0.4, k, protect_first: 1,
+                tofu_threshold: crate::config::DEFAULT_TOFU_PRUNE_THRESHOLD,
+            };
+            let mut r1 = Rng::new(1);
+            let (want, want_sizes) = merge_step(mode, &ctx, &mut r1);
+            let mut r2 = Rng::new(1);
+            // the same scratch is reused across every mode on purpose
+            merge_step_scratch(mode, &ctx, &mut r2, &mut s);
+            assert_eq!(s.out_x.rows, want.rows, "{mode:?}");
+            assert!(s.out_x.max_abs_diff(&want) == 0.0, "{mode:?}");
+            assert_eq!(s.out_sizes, want_sizes, "{mode:?}");
+        }
+    }
+
+    #[test]
+    fn scratch_step_builds_exactly_one_gram() {
+        let (x, sizes) = mk(25, 8, 3);
+        let attn: Vec<f32> = (0..25).map(|i| 0.01 * i as f32).collect();
+        let mut s = MergeScratch::new();
+        let mut step = |mode| {
+            let mut rng = Rng::new(1);
+            let ctx = MergeCtx {
+                x: &x, kf: &x, sizes: &sizes, attn_cls: &attn,
+                margin: 0.4, k: 6, protect_first: 1,
+                tofu_threshold: crate::config::DEFAULT_TOFU_PRUNE_THRESHOLD,
+            };
+            let before = crate::tensor::gram_builds_this_thread();
+            merge_step_scratch(mode, &ctx, &mut rng, &mut s);
+            crate::tensor::gram_builds_this_thread() - before
+        };
+        for mode in [
+            MergeMode::PiToMe, MergeMode::PiToMeNoProtect,
+            MergeMode::PiToMeRandomSplit, MergeMode::PiToMeAttn,
+            MergeMode::ToMe, MergeMode::ToFu, MergeMode::DiffRate,
+        ] {
+            assert_eq!(step(mode), 1, "{mode:?} must rebuild exactly one Gram");
+        }
         for mode in [MergeMode::Dct, MergeMode::Random] {
             assert_eq!(step(mode), 0, "{mode:?} must build no Gram");
         }

@@ -43,22 +43,41 @@ impl MergePlan {
         if self.a.len() != self.dst.len() || self.a.len() != self.gate.len() {
             return Err("a/dst/gate length mismatch".into());
         }
-        for &d in &self.dst {
-            if d >= self.b.len() && !self.b.is_empty() {
-                return Err(format!("dst {d} out of B range {}", self.b.len()));
+        for (i, &d) in self.dst.iter().enumerate() {
+            // out-of-range dst is always invalid when B is non-empty; with
+            // an empty B it is invalid exactly when the gate would merge
+            // (a gate-0 entry never reads its dst — pruning into an empty
+            // B is legal)
+            if d >= self.b.len() && (!self.b.is_empty() || self.gate[i] != 0.0) {
+                return Err(format!(
+                    "dst {d} out of B range {} (gate {})", self.b.len(),
+                    self.gate[i]));
             }
         }
         Ok(())
     }
 }
 
-/// Apply a merge plan: size-weighted averaging with size tracking.
+/// Apply a merge plan: size-weighted averaging with size tracking
+/// (allocating wrapper over [`apply_plan_into`]).
 pub fn apply_plan(x: &Mat, sizes: &[f32], plan: &MergePlan) -> (Mat, Vec<f32>) {
+    let mut out = Mat::zeros(0, 0);
+    let mut out_sizes = Vec::new();
+    apply_plan_into(x, sizes, plan, &mut out, &mut out_sizes);
+    (out, out_sizes)
+}
+
+/// Apply a merge plan into reusable output buffers — the scratch-workspace
+/// forward pass calls this every merge step without allocating once the
+/// buffers have seen their largest shape.
+pub fn apply_plan_into(x: &Mat, sizes: &[f32], plan: &MergePlan,
+                       out: &mut Mat, out_sizes: &mut Vec<f32>) {
     debug_assert!(plan.validate(x.rows).is_ok(), "{:?}", plan.validate(x.rows));
     let h = x.cols;
     let n_out = plan.n_out();
-    let mut out = Mat::zeros(n_out, h);
-    let mut out_sizes = vec![0f32; n_out];
+    out.reshape(n_out, h);
+    out_sizes.clear();
+    out_sizes.resize(n_out, 0f32);
 
     // protected tokens pass through unchanged
     for (oi, &si) in plan.protect.iter().enumerate() {
@@ -99,7 +118,6 @@ pub fn apply_plan(x: &Mat, sizes: &[f32], plan: &MergePlan) -> (Mat, Vec<f32>) {
             *v /= m;
         }
     }
-    (out, out_sizes)
 }
 
 #[cfg(test)]
@@ -150,6 +168,49 @@ mod tests {
         let (out, sizes) = apply_plan(&x, &[1.0, 3.0, 1.0], &plan);
         assert_eq!(out.get(1, 0), 2.0);
         assert_eq!(sizes, vec![1.0, 3.0]);
+    }
+
+    #[test]
+    fn validate_rejects_merge_into_empty_b() {
+        // regression: `d >= b.len() && !b.is_empty()` short-circuited, so
+        // with an empty B *any* dst passed validation even though applying
+        // the plan would index out of bounds for every merging entry
+        let plan = MergePlan {
+            protect: vec![0],
+            a: vec![1],
+            b: vec![],
+            dst: vec![0],
+            gate: vec![1.0],
+        };
+        assert!(plan.validate(2).is_err(),
+                "nonzero-gate entry with empty B must fail validation");
+        // pruning (gate 0) into an empty B never reads dst and stays legal
+        let prune = MergePlan { gate: vec![0.0], ..plan };
+        assert!(prune.validate(2).is_ok());
+        let (out, sizes) = apply_plan(&Mat::from_vec(2, 1, vec![3.0, 5.0]),
+                                      &[1.0, 1.0], &prune);
+        assert_eq!(out.rows, 1);
+        assert_eq!(sizes, vec![1.0]);
+    }
+
+    #[test]
+    fn apply_plan_into_reuses_buffers_and_matches() {
+        let x = Mat::from_fn(6, 3, |i, j| (i * 3 + j) as f32 * 0.5);
+        let sizes = [1.0, 2.0, 1.0, 3.0, 1.0, 1.0];
+        let plan = MergePlan {
+            protect: vec![0],
+            a: vec![4, 5],
+            b: vec![1, 2, 3],
+            dst: vec![0, 2],
+            gate: vec![1.0, 0.0],
+        };
+        let (want, want_sizes) = apply_plan(&x, &sizes, &plan);
+        // dirty, over-sized buffers: into-path must still match exactly
+        let mut out = Mat::from_fn(9, 9, |_, _| 42.0);
+        let mut out_sizes = vec![9.0; 17];
+        apply_plan_into(&x, &sizes, &plan, &mut out, &mut out_sizes);
+        assert_eq!(out, want);
+        assert_eq!(out_sizes, want_sizes);
     }
 
     #[test]

@@ -1,27 +1,62 @@
-//! CPU reference transformer encoder with in-block token merging.
+//! CPU reference transformer encoder with in-block token merging, built
+//! around a reusable allocation-free scratch workspace.
 //!
 //! Numerically mirrors `python/compile/model.py::encoder_forward`; the
 //! parity is asserted against `artifacts/testvectors.json` (trained ViT
 //! logits) and used for the r-sweep experiments where compiling one HLO
 //! artifact per (mode, r) point would be wasteful.
 //!
+//! # The `EncoderScratch` workspace
+//!
+//! Every buffer the forward pass needs — the pre-LN output, the Q/K/V
+//! projections, the per-head (n, n) score tile, the attention output, the
+//! MLP hidden state, and the merge step's Gram/normalization/output
+//! buffers — lives in one [`EncoderScratch`].  The buffers are reshaped
+//! in place as the token count shrinks layer by layer
+//! ([`Mat::reshape`](crate::tensor::Mat::reshape) never gives capacity
+//! back), so once a scratch has seen its largest shape, a steady-state
+//! forward performs **zero heap allocations** in the attention/MLP loop
+//! (asserted by `tests/alloc_free.rs` via the
+//! [`CountingAllocator`](crate::util::alloc::CountingAllocator) hook);
+//! merge layers allocate only the small per-plan index vectors.
+//!
+//! ## Ownership and reuse rules
+//!
+//! * A scratch is **per worker thread**, never shared: it is `Send` but
+//!   deliberately exposes no synchronized access.  Serial callers own one
+//!   and pass `&mut` ([`encoder_forward_scratch`]); the batch driver keeps
+//!   one per worker in a [`ScratchPool`] and hands chunk `i` of the batch
+//!   to scratch `i`
+//!   ([`parallel_map_mut_ctx`](crate::merge::batch::parallel_map_mut_ctx)).
+//! * Reuse across **layers, samples, and requests** is always safe: every
+//!   op fully overwrites (or zero-resets) the region it reads back, so no
+//!   state leaks between uses.  The property tests in
+//!   `tests/prop_encoder.rs` assert a reused scratch matches a fresh one
+//!   across all merge modes and shapes.
+//! * Long-lived servers should keep the pool alive across requests (the
+//!   coordinator's CPU workers do — see `coordinator/batcher.rs`); the
+//!   allocating entry points ([`encoder_forward`],
+//!   [`encoder_forward_batch`]) remain as thin wrappers that create a
+//!   transient scratch, so one-shot callers and the python-parity
+//!   contract are unchanged.
+//!
 //! Two drivers share the same per-block helpers (so they are numerically
 //! identical):
-//! * [`encoder_forward`] — one sample, serial.
-//! * [`encoder_forward_batch`] — a batch of samples advanced layer by
-//!   layer; attention/MLP fan out per sample over scoped worker threads
-//!   and the merge step goes through
-//!   [`merge_step_batch`](crate::merge::batch::merge_step_batch), so the
-//!   whole batch shares the thread pool while each sequence still builds
-//!   exactly one cosine Gram per step.
+//! * [`encoder_forward`] / [`encoder_forward_scratch`] — one sample.
+//! * [`encoder_forward_batch`] / [`encoder_forward_batch_pooled`] — a
+//!   batch of samples fanned out over scoped worker threads, each worker
+//!   reusing its own scratch for every sample (and layer) it processes.
+//!   Per-(layer, sample) RNG seeding keeps stochastic modes reproducible
+//!   under any thread schedule; deterministic modes match the serial path
+//!   exactly.
 
 use crate::data::Rng;
 use crate::error::Result;
-use crate::merge::batch::{merge_step_batch, parallel_map_mut, BatchSeq};
+use crate::merge::batch::parallel_map_mut_ctx;
 use crate::merge::energy::layer_margin;
-use crate::merge::{merge_step, MergeCtx, MergeMode};
-use crate::tensor::{add_inplace, dense, gelu_inplace, layernorm, matmul,
-                    softmax_rows, Mat};
+use crate::merge::{merge_step_scratch, MergeCtx, MergeMode, MergeScratch};
+use crate::tensor::{add_inplace, dense_into, dot, gelu_inplace, layernorm,
+                    layernorm_into, matmul_into, softmax_rows, Mat, MatRef};
 
 use super::params::ParamStore;
 
@@ -46,44 +81,208 @@ pub struct EncoderCfg {
     pub tofu_threshold: f32,
 }
 
-/// Multi-head proportional attention for one sample.
+/// All parameter views one block needs, resolved once per forward call so
+/// the layer loop performs no name formatting and no weight copies.
+struct BlockParams<'a> {
+    ln1_w: &'a [f32],
+    ln1_b: &'a [f32],
+    wq: MatRef<'a>,
+    wk: MatRef<'a>,
+    wv: MatRef<'a>,
+    wo: MatRef<'a>,
+    bo: &'a [f32],
+    ln2_w: &'a [f32],
+    ln2_b: &'a [f32],
+    mlp1: MatRef<'a>,
+    mlp1_b: &'a [f32],
+    mlp2: MatRef<'a>,
+    mlp2_b: &'a [f32],
+}
+
+/// Encoder weights resolved to borrowed views (one name lookup per tensor
+/// per forward call, zero lookups in the layer loop).  Long-lived callers
+/// may also build one per batch and reuse it for every sample.
+pub struct ResolvedEncoder<'a> {
+    blocks: Vec<BlockParams<'a>>,
+    lnf_w: &'a [f32],
+    lnf_b: &'a [f32],
+}
+
+impl<'a> ResolvedEncoder<'a> {
+    /// Resolve every tensor `cfg` names inside `ps`.
+    pub fn new(ps: &'a ParamStore, cfg: &EncoderCfg) -> Result<ResolvedEncoder<'a>> {
+        let mut blocks = Vec::with_capacity(cfg.depth);
+        for l in 0..cfg.depth {
+            let b = format!("{}blk{}.", cfg.prefix, l);
+            blocks.push(BlockParams {
+                ln1_w: ps.vec1(&format!("{b}ln1.w"))?,
+                ln1_b: ps.vec1(&format!("{b}ln1.b"))?,
+                wq: ps.mat2_view(&format!("{b}wq"))?,
+                wk: ps.mat2_view(&format!("{b}wk"))?,
+                wv: ps.mat2_view(&format!("{b}wv"))?,
+                wo: ps.mat2_view(&format!("{b}wo"))?,
+                bo: ps.vec1(&format!("{b}bo"))?,
+                ln2_w: ps.vec1(&format!("{b}ln2.w"))?,
+                ln2_b: ps.vec1(&format!("{b}ln2.b"))?,
+                mlp1: ps.mat2_view(&format!("{b}mlp1"))?,
+                mlp1_b: ps.vec1(&format!("{b}mlp1b"))?,
+                mlp2: ps.mat2_view(&format!("{b}mlp2"))?,
+                mlp2_b: ps.vec1(&format!("{b}mlp2b"))?,
+            });
+        }
+        Ok(ResolvedEncoder {
+            blocks,
+            lnf_w: ps.vec1(&format!("{}lnf.w", cfg.prefix))?,
+            lnf_b: ps.vec1(&format!("{}lnf.b", cfg.prefix))?,
+        })
+    }
+
+    /// Output LayerNorm — allocates the returned matrix (it is the
+    /// result handed to the caller, not a reusable buffer).
+    pub fn final_norm(&self, x: &Mat) -> Mat {
+        layernorm(x, self.lnf_w, self.lnf_b, 1e-5)
+    }
+}
+
+/// Reusable buffers for the attention and MLP halves of a block.
+struct BlockBufs {
+    /// pre-LN output (shared by both halves)
+    ln: Mat,
+    /// Q projection (n, dim)
+    q: Mat,
+    /// K projection — doubles as the merge similarity signal
+    k: Mat,
+    /// V projection (n, dim)
+    v: Mat,
+    /// per-head (n, n) score tile
+    scores: Mat,
+    /// attention output (n, dim)
+    attn: Mat,
+    /// output projection / MLP output (n, dim)
+    proj: Mat,
+    /// MLP hidden state (n, mlp_hidden)
+    hidden: Mat,
+    /// mean CLS attention over heads (len n)
+    attn_cls: Vec<f32>,
+    /// log token sizes (proportional-attention bias, len n)
+    log_m: Vec<f32>,
+    /// unbiased CLS logits scratch (len n)
+    row0: Vec<f32>,
+}
+
+impl BlockBufs {
+    fn new() -> BlockBufs {
+        BlockBufs {
+            ln: Mat::zeros(0, 0),
+            q: Mat::zeros(0, 0),
+            k: Mat::zeros(0, 0),
+            v: Mat::zeros(0, 0),
+            scores: Mat::zeros(0, 0),
+            attn: Mat::zeros(0, 0),
+            proj: Mat::zeros(0, 0),
+            hidden: Mat::zeros(0, 0),
+            attn_cls: Vec::new(),
+            log_m: Vec::new(),
+            row0: Vec::new(),
+        }
+    }
+}
+
+/// Per-worker reusable workspace for the whole encoder forward (see the
+/// module docs for ownership and reuse rules).  Buffers grow to the
+/// largest shape they ever see and are then reused allocation-free across
+/// layers, samples, and requests.
+pub struct EncoderScratch {
+    bufs: BlockBufs,
+    merge: MergeScratch,
+}
+
+impl EncoderScratch {
+    /// Empty workspace; buffers grow on first use.
+    pub fn new() -> EncoderScratch {
+        EncoderScratch { bufs: BlockBufs::new(), merge: MergeScratch::new() }
+    }
+}
+
+impl Default for EncoderScratch {
+    fn default() -> Self {
+        EncoderScratch::new()
+    }
+}
+
+/// A pool of per-worker scratches for the batch driver.  Keep one alive
+/// per serving worker thread so steady-state batches never reallocate
+/// encoder buffers; it grows lazily to the worker count in use.
+pub struct ScratchPool {
+    scratches: Vec<EncoderScratch>,
+}
+
+impl ScratchPool {
+    /// Empty pool; scratches are created on first use and then reused.
+    pub fn new() -> ScratchPool {
+        ScratchPool { scratches: Vec::new() }
+    }
+
+    fn ensure(&mut self, workers: usize) {
+        while self.scratches.len() < workers {
+            self.scratches.push(EncoderScratch::new());
+        }
+    }
+}
+
+impl Default for ScratchPool {
+    fn default() -> Self {
+        ScratchPool::new()
+    }
+}
+
+/// Multi-head proportional attention into reusable buffers.
 ///
-/// q, kf, v: (n, dim) pre-split projections; sizes: len n.
-/// Returns (attn output (n, dim), mean CLS attention over heads (n,)).
-pub fn attention(q: &Mat, kf: &Mat, v: &Mat, sizes: &[f32], heads: usize,
-                 prop_attn: bool) -> (Mat, Vec<f32>) {
+/// q, kf, v: (n, dim) pre-split projections; sizes: len n.  Leaves the
+/// attention output (n, dim) in `out` and the mean CLS attention over
+/// heads (len n) in `attn_cls`; `scores`, `log_m`, and `row0` are
+/// internal scratch.  The per-head score tile is computed row-wise over
+/// the 8-lane [`dot`], and `out += P·Vₕ` runs as contiguous d-length
+/// axpys over the head slice — the vectorized replacement for the seed's
+/// scalar triple loop (benched in `benches/encoder_bench.rs`).
+#[allow(clippy::too_many_arguments)]
+pub fn attention_into(q: &Mat, kf: &Mat, v: &Mat, sizes: &[f32], heads: usize,
+                      prop_attn: bool, scores: &mut Mat, out: &mut Mat,
+                      attn_cls: &mut Vec<f32>, log_m: &mut Vec<f32>,
+                      row0: &mut Vec<f32>) {
     let n = q.rows;
     let dim = q.cols;
     let d = dim / heads;
     let scale = 1.0 / (d as f32).sqrt();
-    let log_m: Vec<f32> = if prop_attn {
-        sizes.iter().map(|&s| s.max(1e-9).ln()).collect()
+    debug_assert_eq!(sizes.len(), n);
+    log_m.clear();
+    if prop_attn {
+        log_m.extend(sizes.iter().map(|&s| s.max(1e-9).ln()));
     } else {
-        vec![0.0; n]
-    };
-    let mut out = Mat::zeros(n, dim);
-    let mut attn_cls = vec![0f32; n];
-    // per-head blocked views into the (n, dim) projections
+        log_m.resize(n, 0.0);
+    }
+    out.reset(n, dim);
+    attn_cls.clear();
+    attn_cls.resize(n, 0.0);
+    row0.clear();
+    row0.resize(n, 0.0);
     for hh in 0..heads {
         let col0 = hh * d;
         // scores = qh @ kh^T * scale + log m
-        let mut s = Mat::zeros(n, n);
+        scores.reshape(n, n);
         for i in 0..n {
             let qi = &q.row(i)[col0..col0 + d];
-            for j in 0..n {
+            let srow = scores.row_mut(i);
+            for (j, sj) in srow.iter_mut().enumerate() {
                 let kj = &kf.row(j)[col0..col0 + d];
-                let mut dot = 0f32;
-                for c in 0..d {
-                    dot += qi[c] * kj[c];
-                }
-                s.set(i, j, dot * scale + log_m[j]);
+                *sj = dot(qi, kj) * scale + log_m[j];
             }
         }
         // CLS attention uses the *unbiased* logits, matching model.py
         {
-            let mut row0 = vec![0f32; n];
-            for j in 0..n {
-                row0[j] = s.get(0, j) - log_m[j];
+            let s0 = scores.row(0);
+            for (r0, (sv, lm)) in row0.iter_mut().zip(s0.iter().zip(log_m.iter())) {
+                *r0 = *sv - *lm;
             }
             let mx = row0.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
             let mut sum = 0f32;
@@ -91,129 +290,186 @@ pub fn attention(q: &Mat, kf: &Mat, v: &Mat, sizes: &[f32], heads: usize,
                 *vj = (*vj - mx).exp();
                 sum += *vj;
             }
-            for (a, vj) in attn_cls.iter_mut().zip(&row0) {
+            for (a, vj) in attn_cls.iter_mut().zip(row0.iter()) {
                 *a += vj / sum / heads as f32;
             }
         }
-        softmax_rows(&mut s);
-        // out_h = p @ vh
+        softmax_rows(scores);
+        // out_h += P @ V_h
         for i in 0..n {
-            let orow = out.row_mut(i);
-            for j in 0..n {
-                let p = s.get(i, j);
+            let orow = &mut out.row_mut(i)[col0..col0 + d];
+            let prow = scores.row(i);
+            for (j, &p) in prow.iter().enumerate() {
                 if p == 0.0 {
                     continue;
                 }
                 let vj = &v.row(j)[col0..col0 + d];
-                for c in 0..d {
-                    orow[col0 + c] += p * vj[c];
+                for (o, &vv) in orow.iter_mut().zip(vj) {
+                    *o += p * vv;
                 }
             }
         }
     }
+}
+
+/// Multi-head proportional attention for one sample (allocating wrapper
+/// over [`attention_into`]).
+///
+/// q, kf, v: (n, dim) pre-split projections; sizes: len n.
+/// Returns (attn output (n, dim), mean CLS attention over heads (n,)).
+pub fn attention(q: &Mat, kf: &Mat, v: &Mat, sizes: &[f32], heads: usize,
+                 prop_attn: bool) -> (Mat, Vec<f32>) {
+    let mut scores = Mat::zeros(0, 0);
+    let mut out = Mat::zeros(0, 0);
+    let mut attn_cls = Vec::new();
+    let mut log_m = Vec::new();
+    let mut row0 = Vec::new();
+    attention_into(q, kf, v, sizes, heads, prop_attn, &mut scores, &mut out,
+                   &mut attn_cls, &mut log_m, &mut row0);
     (out, attn_cls)
 }
 
-/// Attention half of block `l`: pre-LN, QKV, proportional attention,
-/// output projection, residual add (in place).  Returns the key features
-/// (the merge similarity signal) and the mean CLS attention.
-fn block_attention(ps: &ParamStore, cfg: &EncoderCfg, l: usize, x: &mut Mat,
-                   sizes: &[f32]) -> Result<(Mat, Vec<f32>)> {
-    let b = format!("{}blk{}.", cfg.prefix, l);
-    let h = layernorm(x, ps.vec1(&format!("{b}ln1.w"))?,
-                      ps.vec1(&format!("{b}ln1.b"))?, 1e-5);
-    let q = matmul(&h, &ps.mat2(&format!("{b}wq"))?);
-    let kf = matmul(&h, &ps.mat2(&format!("{b}wk"))?);
-    let v = matmul(&h, &ps.mat2(&format!("{b}wv"))?);
-
-    let attn_sizes: Vec<f32> = if cfg.prop_attn {
-        sizes.to_vec()
-    } else {
-        vec![1.0; x.rows]
-    };
-    let (o, attn_cls) = attention(&q, &kf, &v, &attn_sizes, cfg.heads,
-                                  cfg.prop_attn);
-    let proj = dense(&o, &ps.mat2(&format!("{b}wo"))?,
-                     Some(ps.vec1(&format!("{b}bo"))?));
-    add_inplace(x, &proj);
-    Ok((kf, attn_cls))
+/// Attention half of a block: pre-LN, QKV, proportional attention, output
+/// projection, residual add (in place).  Leaves the key features (the
+/// merge similarity signal) in `b.k` and the mean CLS attention in
+/// `b.attn_cls`.
+fn block_attention_into(bp: &BlockParams, heads: usize, prop_attn: bool,
+                        x: &mut Mat, sizes: &[f32], b: &mut BlockBufs) {
+    layernorm_into(x, bp.ln1_w, bp.ln1_b, 1e-5, &mut b.ln);
+    matmul_into(&b.ln, bp.wq, &mut b.q);
+    matmul_into(&b.ln, bp.wk, &mut b.k);
+    matmul_into(&b.ln, bp.wv, &mut b.v);
+    attention_into(&b.q, &b.k, &b.v, sizes, heads, prop_attn, &mut b.scores,
+                   &mut b.attn, &mut b.attn_cls, &mut b.log_m, &mut b.row0);
+    dense_into(&b.attn, bp.wo, Some(bp.bo), &mut b.proj);
+    add_inplace(x, &b.proj);
 }
 
-/// MLP half of block `l`: pre-LN, GELU MLP, residual add (in place).
-fn block_mlp(ps: &ParamStore, cfg: &EncoderCfg, l: usize, x: &mut Mat)
-             -> Result<()> {
-    let b = format!("{}blk{}.", cfg.prefix, l);
-    let h2 = layernorm(x, ps.vec1(&format!("{b}ln2.w"))?,
-                       ps.vec1(&format!("{b}ln2.b"))?, 1e-5);
-    let mut m = dense(&h2, &ps.mat2(&format!("{b}mlp1"))?,
-                      Some(ps.vec1(&format!("{b}mlp1b"))?));
-    gelu_inplace(&mut m);
-    let m2 = dense(&m, &ps.mat2(&format!("{b}mlp2"))?,
-                   Some(ps.vec1(&format!("{b}mlp2b"))?));
-    add_inplace(x, &m2);
-    Ok(())
+/// MLP half of a block: pre-LN, GELU MLP, residual add (in place).
+fn block_mlp_into(bp: &BlockParams, x: &mut Mat, b: &mut BlockBufs) {
+    layernorm_into(x, bp.ln2_w, bp.ln2_b, 1e-5, &mut b.ln);
+    dense_into(&b.ln, bp.mlp1, Some(bp.mlp1_b), &mut b.hidden);
+    gelu_inplace(&mut b.hidden);
+    dense_into(&b.hidden, bp.mlp2, Some(bp.mlp2_b), &mut b.proj);
+    add_inplace(x, &b.proj);
 }
 
-fn final_norm(ps: &ParamStore, cfg: &EncoderCfg, x: &Mat) -> Result<Mat> {
-    Ok(layernorm(x,
-                 ps.vec1(&format!("{}lnf.w", cfg.prefix))?,
-                 ps.vec1(&format!("{}lnf.b", cfg.prefix))?, 1e-5))
+/// Where a merge layer's RNG comes from.
+enum LayerRng<'r> {
+    /// one caller-owned stream across all layers (the serial contract)
+    Shared(&'r mut Rng),
+    /// a fresh `Rng::new(seed ^ (l << 32) ^ sample)` per layer (the batch
+    /// contract — reproducible under any thread schedule)
+    PerLayer {
+        /// batch seed
+        seed: u64,
+        /// sample index within the batch
+        sample: u64,
+    },
 }
 
-/// Run the encoder on one sample `x` (plan[0], dim). Returns final tokens
-/// (plan[depth], dim) after the output LayerNorm.
-pub fn encoder_forward(ps: &ParamStore, cfg: &EncoderCfg, x: Mat,
-                       rng: &mut Rng) -> Result<Mat> {
-    let mut x = x;
-    let mut sizes = vec![1f32; x.rows];
+/// The encoder layer loop over pre-resolved weights: attention, merge
+/// (Eq. 2), MLP per layer, all in place through the scratch.
+fn run_layers(re: &ResolvedEncoder, cfg: &EncoderCfg, x: &mut Mat,
+              sizes: &mut Vec<f32>, mut lr: LayerRng, s: &mut EncoderScratch) {
     for l in 0..cfg.depth {
         let n_in = cfg.plan[l];
         let n_out = cfg.plan[l + 1];
         debug_assert_eq!(x.rows, n_in, "plan mismatch at layer {l}");
+        let bp = &re.blocks[l];
 
-        let (kf, attn_cls) = block_attention(ps, cfg, l, &mut x, &sizes)?;
+        block_attention_into(bp, cfg.heads, cfg.prop_attn, x, &sizes[..],
+                             &mut s.bufs);
 
         // merge between attention and MLP (Eq. 2)
         let k = n_in - n_out;
         if k > 0 {
             let margin = layer_margin(l, cfg.depth);
             let ctx = MergeCtx {
-                x: &x,
-                kf: &kf,
-                sizes: &sizes,
-                attn_cls: &attn_cls,
+                x: &*x,
+                kf: &s.bufs.k,
+                sizes: &sizes[..],
+                attn_cls: &s.bufs.attn_cls,
                 margin,
                 k,
                 protect_first: 1,
                 tofu_threshold: cfg.tofu_threshold,
             };
-            let (xm, sm) = merge_step(cfg.mode, &ctx, rng);
-            x = xm;
-            sizes = sm;
+            match &mut lr {
+                LayerRng::Shared(rng) => {
+                    merge_step_scratch(cfg.mode, &ctx, rng, &mut s.merge);
+                }
+                LayerRng::PerLayer { seed, sample } => {
+                    let mut rng =
+                        Rng::new(*seed ^ ((l as u64) << 32) ^ *sample);
+                    merge_step_scratch(cfg.mode, &ctx, &mut rng, &mut s.merge);
+                }
+            }
+            // ping-pong: the merged tokens become the live state and the
+            // old state becomes next step's output buffer
+            std::mem::swap(x, &mut s.merge.out_x);
+            std::mem::swap(sizes, &mut s.merge.out_sizes);
         }
 
-        block_mlp(ps, cfg, l, &mut x)?;
+        block_mlp_into(bp, x, &mut s.bufs);
     }
-    final_norm(ps, cfg, &x)
 }
 
-/// Per-sequence state carried across layers by the batch driver.
+/// Run the encoder layer stack in place over pre-resolved weights — the
+/// zero-allocation steady-state core (`x` and `sizes` are updated in
+/// place; apply [`ResolvedEncoder::final_norm`] afterwards for the full
+/// forward).  Exposed so benches and the alloc-counter tests can measure
+/// exactly the layer loop.
+pub fn encoder_layers(re: &ResolvedEncoder, cfg: &EncoderCfg, x: &mut Mat,
+                      sizes: &mut Vec<f32>, rng: &mut Rng,
+                      scratch: &mut EncoderScratch) {
+    run_layers(re, cfg, x, sizes, LayerRng::Shared(rng), scratch);
+}
+
+/// Run the encoder on one sample `x` (plan[0], dim) with a caller-owned
+/// scratch (reusable across calls).  Returns final tokens (plan[depth],
+/// dim) after the output LayerNorm.
+pub fn encoder_forward_scratch(ps: &ParamStore, cfg: &EncoderCfg, x: Mat,
+                               rng: &mut Rng, scratch: &mut EncoderScratch)
+                               -> Result<Mat> {
+    let re = ResolvedEncoder::new(ps, cfg)?;
+    let mut x = x;
+    let mut sizes = vec![1f32; x.rows];
+    run_layers(&re, cfg, &mut x, &mut sizes, LayerRng::Shared(rng), scratch);
+    Ok(re.final_norm(&x))
+}
+
+/// Run the encoder on one sample `x` (plan[0], dim). Returns final tokens
+/// (plan[depth], dim) after the output LayerNorm.  (Allocating wrapper:
+/// creates a transient [`EncoderScratch`]; hot callers should hold one
+/// and use [`encoder_forward_scratch`].)
+pub fn encoder_forward(ps: &ParamStore, cfg: &EncoderCfg, x: Mat,
+                       rng: &mut Rng) -> Result<Mat> {
+    let mut scratch = EncoderScratch::new();
+    encoder_forward_scratch(ps, cfg, x, rng, &mut scratch)
+}
+
+/// Per-sequence state carried through the batch driver.
 struct SeqState {
     x: Mat,
     sizes: Vec<f32>,
 }
 
-/// Run the encoder on a batch of samples, advancing all sequences layer by
-/// layer.  Attention and MLP fan out per sample over up to `workers`
-/// scoped threads; the merge step runs through
-/// [`merge_step_batch`](crate::merge::batch::merge_step_batch).
+/// Run the encoder on a batch of samples with a caller-owned scratch
+/// pool: samples fan out over up to `workers` scoped threads, each worker
+/// reusing one [`EncoderScratch`] from `pool` for every sample (and
+/// layer) it processes — a long-lived server that keeps the pool alive
+/// reallocates no encoder buffers at steady state.
 ///
 /// `seed` derives one deterministic RNG seed per (layer, sample), so
 /// stochastic modes are reproducible under any thread schedule; for the
 /// deterministic modes (PiToMe/ToMe/ToFu/DCT/DiffRate) the outputs match
 /// [`encoder_forward`] exactly.
-pub fn encoder_forward_batch(ps: &ParamStore, cfg: &EncoderCfg, xs: Vec<Mat>,
-                             seed: u64, workers: usize) -> Result<Vec<Mat>> {
+pub fn encoder_forward_batch_pooled(ps: &ParamStore, cfg: &EncoderCfg,
+                                    xs: Vec<Mat>, seed: u64, workers: usize,
+                                    pool: &mut ScratchPool)
+                                    -> Result<Vec<Mat>> {
+    let re = ResolvedEncoder::new(ps, cfg)?;
     let mut states: Vec<SeqState> = xs
         .into_iter()
         .map(|x| {
@@ -221,64 +477,29 @@ pub fn encoder_forward_batch(ps: &ParamStore, cfg: &EncoderCfg, xs: Vec<Mat>,
             SeqState { x, sizes }
         })
         .collect();
-    for l in 0..cfg.depth {
-        let n_in = cfg.plan[l];
-        let n_out = cfg.plan[l + 1];
-        let k = n_in - n_out;
-
-        let pre = parallel_map_mut(&mut states, workers, &|_, st: &mut SeqState| {
-            debug_assert_eq!(st.x.rows, n_in, "plan mismatch at layer {l}");
-            block_attention(ps, cfg, l, &mut st.x, &st.sizes)
-        });
-        let mut kfs = Vec::with_capacity(states.len());
-        let mut attns = Vec::with_capacity(states.len());
-        for r in pre {
-            let (kf, attn_cls) = r?;
-            kfs.push(kf);
-            attns.push(attn_cls);
-        }
-
-        if k > 0 {
-            let margin = layer_margin(l, cfg.depth);
-            let merged = {
-                let seqs: Vec<BatchSeq> = states
-                    .iter()
-                    .zip(kfs.iter())
-                    .zip(attns.iter())
-                    .enumerate()
-                    .map(|(i, ((st, kf), attn_cls))| BatchSeq {
-                        ctx: MergeCtx {
-                            x: &st.x,
-                            kf,
-                            sizes: &st.sizes,
-                            attn_cls,
-                            margin,
-                            k,
-                            protect_first: 1,
-                            tofu_threshold: cfg.tofu_threshold,
-                        },
-                        seed: seed ^ ((l as u64) << 32) ^ i as u64,
-                    })
-                    .collect();
-                merge_step_batch(cfg.mode, &seqs, workers)
-            };
-            for (st, (xm, sm)) in states.iter_mut().zip(merged) {
-                st.x = xm;
-                st.sizes = sm;
-            }
-        }
-
-        let post = parallel_map_mut(&mut states, workers, &|_, st: &mut SeqState| {
-            block_mlp(ps, cfg, l, &mut st.x)
-        });
-        for r in post {
-            r?;
-        }
+    if states.is_empty() {
+        return Ok(Vec::new());
     }
-    states
-        .iter()
-        .map(|st| final_norm(ps, cfg, &st.x))
-        .collect()
+    let w = workers.max(1).min(states.len());
+    pool.ensure(w);
+    let outs = parallel_map_mut_ctx(
+        &mut states,
+        &mut pool.scratches[..w],
+        &|i, st: &mut SeqState, scratch: &mut EncoderScratch| {
+            run_layers(&re, cfg, &mut st.x, &mut st.sizes,
+                       LayerRng::PerLayer { seed, sample: i as u64 }, scratch);
+            re.final_norm(&st.x)
+        },
+    );
+    Ok(outs)
+}
+
+/// Run the encoder on a batch of samples (allocating wrapper over
+/// [`encoder_forward_batch_pooled`] with a transient pool).
+pub fn encoder_forward_batch(ps: &ParamStore, cfg: &EncoderCfg, xs: Vec<Mat>,
+                             seed: u64, workers: usize) -> Result<Vec<Mat>> {
+    let mut pool = ScratchPool::new();
+    encoder_forward_batch_pooled(ps, cfg, xs, seed, workers, &mut pool)
 }
 
 /// Plain (non-proportional) attention convenience used in tests.
@@ -328,13 +549,36 @@ mod tests {
     }
 
     #[test]
-    fn batch_forward_matches_serial_forward() {
+    fn attention_into_reused_buffers_match_fresh() {
+        let mut rng = Rng::new(5);
+        let mut scores = Mat::zeros(0, 0);
+        let mut out = Mat::zeros(0, 0);
+        let mut attn_cls = Vec::new();
+        let mut log_m = Vec::new();
+        let mut row0 = Vec::new();
+        // descending n: the reused buffers shrink logically between calls
+        for (n, dim, heads) in [(16usize, 16usize, 4usize), (9, 8, 2), (5, 8, 1)] {
+            let q = Mat::from_fn(n, dim, |_, _| (rng.next_f64() * 2.0 - 1.0) as f32);
+            let kf = Mat::from_fn(n, dim, |_, _| (rng.next_f64() * 2.0 - 1.0) as f32);
+            let v = Mat::from_fn(n, dim, |_, _| (rng.next_f64() * 2.0 - 1.0) as f32);
+            let sizes: Vec<f32> = (0..n).map(|i| 1.0 + (i % 3) as f32).collect();
+            for prop in [true, false] {
+                let (want, want_cls) = attention(&q, &kf, &v, &sizes, heads, prop);
+                attention_into(&q, &kf, &v, &sizes, heads, prop, &mut scores,
+                               &mut out, &mut attn_cls, &mut log_m, &mut row0);
+                assert_eq!(out.rows, want.rows);
+                assert!(out.max_abs_diff(&want) == 0.0, "n={n} prop={prop}");
+                assert_eq!(attn_cls, want_cls, "n={n} prop={prop}");
+            }
+        }
+    }
+
+    fn test_cfg(mode: &str) -> (ViTConfig, EncoderCfg) {
         let vcfg = ViTConfig {
-            merge_mode: "pitome".into(),
+            merge_mode: mode.into(),
             merge_r: 0.9,
             ..Default::default()
         };
-        let ps = synthetic_vit_store(&vcfg, 42);
         let cfg = EncoderCfg {
             prefix: "vit.".into(),
             dim: vcfg.dim,
@@ -345,20 +589,79 @@ mod tests {
             prop_attn: true,
             tofu_threshold: vcfg.tofu_threshold,
         };
+        (vcfg, cfg)
+    }
+
+    #[test]
+    fn scratch_forward_matches_wrapper_forward() {
+        let (vcfg, cfg) = test_cfg("pitome");
+        let ps = synthetic_vit_store(&vcfg, 42);
+        let n0 = cfg.plan[0];
+        let mut rng = Rng::new(9);
+        let mut scratch = EncoderScratch::new();
+        for trial in 0..3 {
+            let x = Mat::from_fn(n0, cfg.dim,
+                                 |_, _| (rng.next_f64() * 0.2 - 0.1) as f32);
+            let mut r1 = Rng::new(trial);
+            let want = encoder_forward(&ps, &cfg, x.clone(), &mut r1).unwrap();
+            let mut r2 = Rng::new(trial);
+            let got = encoder_forward_scratch(&ps, &cfg, x, &mut r2,
+                                              &mut scratch).unwrap();
+            assert_eq!(got.rows, want.rows);
+            assert!(got.max_abs_diff(&want) == 0.0, "trial {trial}");
+        }
+    }
+
+    #[test]
+    fn batch_forward_matches_serial_forward() {
+        let (vcfg, cfg) = test_cfg("pitome");
+        let ps = synthetic_vit_store(&vcfg, 42);
         let n0 = cfg.plan[0];
         let mut rng = Rng::new(9);
         let xs: Vec<Mat> = (0..5)
             .map(|_| Mat::from_fn(n0, cfg.dim,
                                   |_, _| (rng.next_f64() * 0.2 - 0.1) as f32))
             .collect();
-        let batched =
-            encoder_forward_batch(&ps, &cfg, xs.clone(), 0, 3).unwrap();
-        for (i, x) in xs.into_iter().enumerate() {
-            let mut r = Rng::new(0);
-            let want = encoder_forward(&ps, &cfg, x, &mut r).unwrap();
-            assert_eq!(batched[i].rows, want.rows);
-            assert!(batched[i].max_abs_diff(&want) < 1e-5,
-                    "sample {i} diverged: {}", batched[i].max_abs_diff(&want));
+        // shared-scratch batch driver: the same pool serves two rounds, so
+        // round 2 runs entirely on reused buffers
+        let mut pool = ScratchPool::new();
+        for round in 0..2 {
+            let batched = encoder_forward_batch_pooled(
+                &ps, &cfg, xs.clone(), 0, 3, &mut pool).unwrap();
+            for (i, x) in xs.iter().enumerate() {
+                let mut r = Rng::new(0);
+                let want = encoder_forward(&ps, &cfg, x.clone(), &mut r).unwrap();
+                assert_eq!(batched[i].rows, want.rows);
+                assert!(batched[i].max_abs_diff(&want) < 1e-5,
+                        "round {round} sample {i} diverged: {}",
+                        batched[i].max_abs_diff(&want));
+            }
+        }
+        // the transient-pool wrapper agrees too
+        let wrapper = encoder_forward_batch(&ps, &cfg, xs.clone(), 0, 3).unwrap();
+        let pooled = encoder_forward_batch_pooled(&ps, &cfg, xs, 0, 3,
+                                                  &mut pool).unwrap();
+        for (a, b) in wrapper.iter().zip(&pooled) {
+            assert!(a.max_abs_diff(b) == 0.0);
+        }
+    }
+
+    #[test]
+    fn batch_forward_is_deterministic_across_worker_counts() {
+        // stochastic mode: per-(layer, sample) seeds must make the result
+        // independent of the fan-out
+        let (vcfg, cfg) = test_cfg("pitome_rand");
+        let ps = synthetic_vit_store(&vcfg, 7);
+        let n0 = cfg.plan[0];
+        let mut rng = Rng::new(3);
+        let xs: Vec<Mat> = (0..4)
+            .map(|_| Mat::from_fn(n0, cfg.dim,
+                                  |_, _| (rng.next_f64() * 0.2 - 0.1) as f32))
+            .collect();
+        let a = encoder_forward_batch(&ps, &cfg, xs.clone(), 11, 1).unwrap();
+        let b = encoder_forward_batch(&ps, &cfg, xs, 11, 4).unwrap();
+        for (x, y) in a.iter().zip(&b) {
+            assert!(x.max_abs_diff(y) == 0.0);
         }
     }
 }

@@ -12,11 +12,14 @@ pub mod params;
 pub mod text;
 pub mod vit;
 
-pub use encoder::{attention, encoder_forward, encoder_forward_batch, EncoderCfg};
+pub use encoder::{attention, attention_into, encoder_forward,
+                  encoder_forward_batch, encoder_forward_batch_pooled,
+                  encoder_forward_scratch, encoder_layers, EncoderCfg,
+                  EncoderScratch, ResolvedEncoder, ScratchPool};
 pub use flops::{block_flops, encoder_flops, flops_speedup, vit_gflops};
 pub use params::{synthetic_vit_store, ParamEntry, ParamStore};
-pub use text::{bert_logits, bert_logits_batch, clip_text_embed, embed_tokens,
-               text_features};
+pub use text::{bert_logits, bert_logits_batch, bert_logits_batch_pooled,
+               clip_text_embed, embed_tokens, text_features};
 pub use vit::ViTModel;
 
 use std::path::Path;

@@ -10,7 +10,7 @@ use std::path::Path;
 use crate::config::ViTConfig;
 use crate::data::Rng;
 use crate::error::{Error, Result};
-use crate::tensor::Mat;
+use crate::tensor::{Mat, MatRef};
 use crate::util::json::{parse as parse_json, Json};
 
 /// One manifest entry.
@@ -96,6 +96,22 @@ impl ParamStore {
                 "{name} has shape {:?}, expected 1-D", e.shape)));
         }
         self.slice(name)
+    }
+
+    /// 2-D parameter as a borrowed view over the flat vector (no copy —
+    /// the scratch-workspace forward resolves all weights through this
+    /// once per call, so the layer loop never clones a weight matrix).
+    pub fn mat2_view(&self, name: &str) -> Result<MatRef<'_>> {
+        let e = self.entry(name)?;
+        if e.shape.len() != 2 {
+            return Err(Error::Shape(format!(
+                "{name} has shape {:?}, expected 2-D", e.shape)));
+        }
+        Ok(MatRef {
+            rows: e.shape[0],
+            cols: e.shape[1],
+            data: &self.flat[e.offset..e.offset + e.size],
+        })
     }
 
     /// 2-D parameter as a Mat copy.
@@ -229,8 +245,18 @@ mod tests {
     fn wrong_rank_errors() {
         let s = store();
         assert!(s.mat2("b").is_err());
+        assert!(s.mat2_view("b").is_err());
         assert!(s.vec1("w").is_err());
         assert!(s.slice("nope").is_err());
+    }
+
+    #[test]
+    fn mat2_view_aliases_flat_storage() {
+        let s = store();
+        let v = s.mat2_view("w").unwrap();
+        assert_eq!((v.rows, v.cols), (2, 2));
+        assert_eq!(v.row(1), &[3.0, 4.0]);
+        assert_eq!(v.data, s.mat2("w").unwrap().data.as_slice());
     }
 
     #[test]

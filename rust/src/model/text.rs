@@ -7,7 +7,8 @@ use crate::error::Result;
 use crate::merge::MergeMode;
 use crate::tensor::{dense, Mat};
 
-use super::encoder::{encoder_forward, encoder_forward_batch, EncoderCfg};
+use super::encoder::{encoder_forward, encoder_forward_batch_pooled,
+                     EncoderCfg, ScratchPool};
 use super::params::ParamStore;
 
 /// Token embedding + position for a prefix (e.g. "bert.", "txt.", "q.").
@@ -78,21 +79,32 @@ pub fn bert_logits(ps: &ParamStore, cfg: &TextConfig, tokens: &[i32],
     bert_head(ps, out.row(0).to_vec())
 }
 
-/// BERT-style classifier logits for a batch of samples: the encoder
-/// advances all sequences layer by layer with batched merge steps (see
-/// [`encoder_forward_batch`]).
-pub fn bert_logits_batch(ps: &ParamStore, cfg: &TextConfig,
-                         token_seqs: &[Vec<i32>], seed: u64, workers: usize)
-                         -> Result<Vec<Vec<f32>>> {
+/// BERT-style classifier logits for a batch of samples with a
+/// caller-owned scratch pool: sequences fan out over `workers` threads,
+/// each worker reusing one `EncoderScratch` from `pool` (see
+/// [`encoder_forward_batch_pooled`]).
+pub fn bert_logits_batch_pooled(ps: &ParamStore, cfg: &TextConfig,
+                                token_seqs: &[Vec<i32>], seed: u64,
+                                workers: usize, pool: &mut ScratchPool)
+                                -> Result<Vec<Vec<f32>>> {
     let xs: Vec<Mat> = token_seqs
         .iter()
         .map(|t| embed_tokens(ps, "bert.", t, cfg.dim))
         .collect::<Result<_>>()?;
-    let outs = encoder_forward_batch(ps, &bert_encoder_cfg(cfg), xs, seed,
-                                     workers)?;
+    let outs = encoder_forward_batch_pooled(ps, &bert_encoder_cfg(cfg), xs,
+                                            seed, workers, pool)?;
     outs.into_iter()
         .map(|m| bert_head(ps, m.row(0).to_vec()))
         .collect()
+}
+
+/// BERT-style classifier logits for a batch of samples (transient scratch
+/// pool).
+pub fn bert_logits_batch(ps: &ParamStore, cfg: &TextConfig,
+                         token_seqs: &[Vec<i32>], seed: u64, workers: usize)
+                         -> Result<Vec<Vec<f32>>> {
+    let mut pool = ScratchPool::new();
+    bert_logits_batch_pooled(ps, cfg, token_seqs, seed, workers, &mut pool)
 }
 
 /// L2-normalize a feature vector in place.

@@ -5,7 +5,8 @@ use crate::data::Rng;
 use crate::error::Result;
 use crate::tensor::{dense, Mat};
 
-use super::encoder::{encoder_forward, encoder_forward_batch, EncoderCfg};
+use super::encoder::{encoder_forward, encoder_forward_batch_pooled,
+                     EncoderCfg, ScratchPool};
 use super::params::ParamStore;
 
 /// A loaded ViT model (weights + config).
@@ -79,23 +80,34 @@ impl<'a> ViTModel<'a> {
         Ok(crate::tensor::argmax(&lg))
     }
 
-    /// Batched CLS features: all samples advance through the encoder layer
-    /// by layer, with attention/MLP fanned out per sample and merge steps
-    /// batched over `workers` threads (see
-    /// [`encoder_forward_batch`]).
-    pub fn features_batch(&self, patches: &[Mat], seed: u64, workers: usize)
-                          -> Result<Vec<Vec<f32>>> {
+    /// Batched CLS features with a caller-owned scratch pool: samples fan
+    /// out over `workers` threads, each worker reusing one
+    /// `EncoderScratch` from `pool` (see
+    /// [`encoder_forward_batch_pooled`]).  Long-lived servers keep the
+    /// pool alive across batches so steady state allocates no encoder
+    /// buffers.
+    pub fn features_batch_pooled(&self, patches: &[Mat], seed: u64,
+                                 workers: usize, pool: &mut ScratchPool)
+                                 -> Result<Vec<Vec<f32>>> {
         let xs: Vec<Mat> =
             patches.iter().map(|p| self.tokens(p)).collect::<Result<_>>()?;
-        let outs = encoder_forward_batch(self.ps, &self.encoder_cfg(), xs,
-                                         seed, workers)?;
+        let outs = encoder_forward_batch_pooled(self.ps, &self.encoder_cfg(),
+                                                xs, seed, workers, pool)?;
         Ok(outs.into_iter().map(|m| m.row(0).to_vec()).collect())
     }
 
-    /// Batched class logits.
-    pub fn logits_batch(&self, patches: &[Mat], seed: u64, workers: usize)
-                        -> Result<Vec<Vec<f32>>> {
-        let feats = self.features_batch(patches, seed, workers)?;
+    /// Batched CLS features (transient scratch pool).
+    pub fn features_batch(&self, patches: &[Mat], seed: u64, workers: usize)
+                          -> Result<Vec<Vec<f32>>> {
+        let mut pool = ScratchPool::new();
+        self.features_batch_pooled(patches, seed, workers, &mut pool)
+    }
+
+    /// Batched class logits with a caller-owned scratch pool.
+    pub fn logits_batch_pooled(&self, patches: &[Mat], seed: u64,
+                               workers: usize, pool: &mut ScratchPool)
+                               -> Result<Vec<Vec<f32>>> {
+        let feats = self.features_batch_pooled(patches, seed, workers, pool)?;
         let w = self.ps.mat2("vit.head.w")?;
         let b = self.ps.vec1("vit.head.b")?;
         Ok(feats
@@ -107,13 +119,28 @@ impl<'a> ViTModel<'a> {
             .collect())
     }
 
-    /// Batched predictions.
-    pub fn predict_batch(&self, patches: &[Mat], seed: u64, workers: usize)
-                         -> Result<Vec<usize>> {
+    /// Batched class logits (transient scratch pool).
+    pub fn logits_batch(&self, patches: &[Mat], seed: u64, workers: usize)
+                        -> Result<Vec<Vec<f32>>> {
+        let mut pool = ScratchPool::new();
+        self.logits_batch_pooled(patches, seed, workers, &mut pool)
+    }
+
+    /// Batched predictions with a caller-owned scratch pool.
+    pub fn predict_batch_pooled(&self, patches: &[Mat], seed: u64,
+                                workers: usize, pool: &mut ScratchPool)
+                                -> Result<Vec<usize>> {
         Ok(self
-            .logits_batch(patches, seed, workers)?
+            .logits_batch_pooled(patches, seed, workers, pool)?
             .iter()
             .map(|lg| crate::tensor::argmax(lg))
             .collect())
+    }
+
+    /// Batched predictions (transient scratch pool).
+    pub fn predict_batch(&self, patches: &[Mat], seed: u64, workers: usize)
+                         -> Result<Vec<usize>> {
+        let mut pool = ScratchPool::new();
+        self.predict_batch_pooled(patches, seed, workers, &mut pool)
     }
 }

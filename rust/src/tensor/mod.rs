@@ -33,6 +33,38 @@ impl Mat {
         Mat { rows, cols, data }
     }
 
+    /// Reshape to `(rows, cols)` in place, reusing the existing allocation
+    /// whenever capacity allows.  Contents are unspecified afterwards —
+    /// for callers that fully overwrite the matrix (the `_into` ops and
+    /// the scratch-workspace forward pass).  Capacity never shrinks, so a
+    /// buffer that has seen its largest shape never reallocates again.
+    pub fn reshape(&mut self, rows: usize, cols: usize) {
+        self.rows = rows;
+        self.cols = cols;
+        self.data.resize(rows * cols, 0.0);
+    }
+
+    /// [`reshape`](Mat::reshape) followed by a zero fill — for accumulator
+    /// outputs (`matmul_into`, attention `out += P·V`).
+    pub fn reset(&mut self, rows: usize, cols: usize) {
+        self.reshape(rows, cols);
+        self.data.fill(0.0);
+    }
+
+    /// Copy `src` into self, reshaping as needed (allocation-free at
+    /// steady state).
+    pub fn copy_from(&mut self, src: &Mat) {
+        self.reshape(src.rows, src.cols);
+        self.data.copy_from_slice(&src.data);
+    }
+
+    /// Borrowed view (for the `_into` ops, which take weights as views so
+    /// parameter matrices are never cloned on the hot path).
+    #[inline]
+    pub fn view(&self) -> MatRef<'_> {
+        MatRef { rows: self.rows, cols: self.cols, data: &self.data }
+    }
+
     /// Build from a closure over (row, col).
     pub fn from_fn(rows: usize, cols: usize, mut f: impl FnMut(usize, usize) -> f32) -> Self {
         let mut data = Vec::with_capacity(rows * cols);
@@ -108,6 +140,34 @@ impl Mat {
     }
 }
 
+/// Borrowed row-major 2-D view — the weight-side argument of the `_into`
+/// ops.  [`ParamStore::mat2_view`](crate::model::ParamStore::mat2_view)
+/// hands these out directly over the flat parameter vector, so the
+/// steady-state forward pass never copies a weight matrix.
+#[derive(Clone, Copy, Debug)]
+pub struct MatRef<'a> {
+    /// number of rows
+    pub rows: usize,
+    /// number of columns
+    pub cols: usize,
+    /// row-major storage, `len == rows * cols`
+    pub data: &'a [f32],
+}
+
+impl<'a> MatRef<'a> {
+    /// Immutable view of row `i`.
+    #[inline]
+    pub fn row(&self, i: usize) -> &'a [f32] {
+        &self.data[i * self.cols..(i + 1) * self.cols]
+    }
+}
+
+impl<'a> From<&'a Mat> for MatRef<'a> {
+    fn from(m: &'a Mat) -> MatRef<'a> {
+        m.view()
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -131,6 +191,34 @@ mod tests {
         let s = m.select_rows(&[3, 1]);
         assert_eq!(s.row(0), &[3.0, 3.0]);
         assert_eq!(s.row(1), &[1.0, 1.0]);
+    }
+
+    #[test]
+    fn reshape_keeps_capacity_and_reset_zeroes() {
+        let mut m = Mat::from_fn(4, 4, |i, j| (i * 4 + j) as f32 + 1.0);
+        let cap = m.data.capacity();
+        m.reshape(2, 3);
+        assert_eq!((m.rows, m.cols, m.data.len()), (2, 3, 6));
+        assert!(m.data.capacity() >= cap, "shrinking must keep capacity");
+        m.reset(3, 2);
+        assert!(m.data.iter().all(|&v| v == 0.0));
+    }
+
+    #[test]
+    fn copy_from_matches_source() {
+        let src = Mat::from_fn(3, 2, |i, j| (i * 2 + j) as f32);
+        let mut dst = Mat::zeros(1, 1);
+        dst.copy_from(&src);
+        assert_eq!(dst, src);
+    }
+
+    #[test]
+    fn view_rows_match_mat_rows() {
+        let m = Mat::from_fn(3, 4, |i, j| (i * 4 + j) as f32);
+        let v = m.view();
+        for i in 0..3 {
+            assert_eq!(v.row(i), m.row(i));
+        }
     }
 
     #[test]

@@ -5,7 +5,7 @@
 
 use std::cell::Cell;
 
-use super::Mat;
+use super::{Mat, MatRef};
 
 thread_local! {
     /// Per-thread count of [`CosineGram::build`] calls — lets tests assert
@@ -47,9 +47,10 @@ pub fn dot(a: &[f32], b: &[f32]) -> f32 {
 /// The Gram is symmetric, so only the upper triangle is computed (blocked
 /// for cache reuse) and mirrored; the diagonal is pinned to 1.0.  The
 /// normalized features themselves are build-local scratch
-/// ([`normalize_rows_with_norms`]) and are not retained: with a whole
-/// batch of Grams in flight that would duplicate every key-feature matrix
-/// for no consumer.
+/// ([`normalize_rows_into`]) and are not retained: with a whole batch of
+/// Grams in flight that would duplicate every key-feature matrix for no
+/// consumer.  Scratch workspaces rebuild in place via
+/// [`CosineGram::rebuild`].
 pub struct CosineGram {
     /// pairwise cosine similarities, (n, n), symmetric, diag = 1
     pub w: Mat,
@@ -59,12 +60,30 @@ impl CosineGram {
     /// Tile side for the blocked triangular Gram.
     const BLOCK: usize = 32;
 
-    /// Build the Gram for key features `kf` (n, h).
+    /// An empty Gram to rebuild into (scratch workspaces start here).
+    pub fn empty() -> CosineGram {
+        CosineGram { w: Mat::zeros(0, 0) }
+    }
+
+    /// Build the Gram for key features `kf` (n, h) — convenience wrapper
+    /// over [`CosineGram::rebuild`] that allocates its own buffers.
     pub fn build(kf: &Mat) -> CosineGram {
+        let mut g = CosineGram::empty();
+        let mut kn = Mat::zeros(0, 0);
+        g.rebuild(kf, &mut kn);
+        g
+    }
+
+    /// Rebuild this Gram in place from `kf`, reusing `kn` as the
+    /// normalized-feature scratch.  Counts as one Gram build for the
+    /// one-Gram-per-merge-step invariant; allocation-free once both
+    /// buffers have seen their largest shape.
+    pub fn rebuild(&mut self, kf: &Mat, kn: &mut Mat) {
         GRAM_BUILDS.with(|c| c.set(c.get() + 1));
-        let (kn, _norms) = normalize_rows_with_norms(kf);
+        normalize_rows_into(kf, kn);
         let n = kn.rows;
-        let mut w = Mat::zeros(n, n);
+        let w = &mut self.w;
+        w.reshape(n, n);
         for ib in (0..n).step_by(Self::BLOCK) {
             let ie = (ib + Self::BLOCK).min(n);
             for jb in (ib..n).step_by(Self::BLOCK) {
@@ -82,7 +101,6 @@ impl CosineGram {
         for i in 0..n {
             w.data[i * n + i] = 1.0;
         }
-        CosineGram { w }
     }
 
     /// Token count.
@@ -120,10 +138,19 @@ impl CosineGram {
     }
 }
 
-/// C = A @ B (naive ikj loop; the perf pass blocks this — see `matmul`).
+/// C = A @ B (allocating wrapper over [`matmul_into`]).
 pub fn matmul(a: &Mat, b: &Mat) -> Mat {
+    let mut c = Mat::zeros(0, 0);
+    matmul_into(a, b.view(), &mut c);
+    c
+}
+
+/// C = A @ B into a reusable output buffer (ikj loop with contiguous
+/// row-axpy the compiler vectorizes).  `c` is reshaped to `(a.rows,
+/// b.cols)` in place — allocation-free once warm.
+pub fn matmul_into(a: &Mat, b: MatRef, c: &mut Mat) {
     assert_eq!(a.cols, b.rows, "matmul inner dim mismatch");
-    let mut c = Mat::zeros(a.rows, b.cols);
+    c.reset(a.rows, b.cols);
     for i in 0..a.rows {
         let arow = a.row(i);
         let crow = &mut c.data[i * b.cols..(i + 1) * b.cols];
@@ -137,7 +164,6 @@ pub fn matmul(a: &Mat, b: &Mat) -> Mat {
             }
         }
     }
-    c
 }
 
 /// C = A @ B^T — the similarity-matrix shape; avoids materializing B^T.
@@ -160,23 +186,23 @@ pub fn matmul_nt(a: &Mat, b: &Mat) -> Mat {
 
 /// L2-normalize each row (eps matches the JAX reference).
 pub fn normalize_rows(m: &Mat) -> Mat {
-    normalize_rows_with_norms(m).0
+    let mut out = Mat::zeros(0, 0);
+    normalize_rows_into(m, &mut out);
+    out
 }
 
-/// L2-normalize each row, also returning the eps-stabilized row norms so
-/// callers that need both (the shared-Gram pipeline) pay for one pass.
-pub fn normalize_rows_with_norms(m: &Mat) -> (Mat, Vec<f32>) {
-    let mut out = m.clone();
-    let mut norms = Vec::with_capacity(m.rows);
+/// L2-normalize each row into a reusable output buffer (the shared-Gram
+/// scratch path; numerics identical to [`normalize_rows`]).
+pub fn normalize_rows_into(m: &Mat, out: &mut Mat) {
+    out.reshape(m.rows, m.cols);
+    out.data.copy_from_slice(&m.data);
     for i in 0..m.rows {
         let r = out.row_mut(i);
         let n: f32 = r.iter().map(|v| v * v).sum::<f32>().sqrt() + 1e-6;
-        norms.push(n);
         for v in r.iter_mut() {
             *v /= n;
         }
     }
-    (out, norms)
 }
 
 /// Pairwise cosine-similarity matrix W (N, N) of row features (one-shot
@@ -201,11 +227,19 @@ pub fn softmax_rows(m: &mut Mat) {
     }
 }
 
-/// LayerNorm over the last axis with learned scale/shift.
+/// LayerNorm over the last axis with learned scale/shift (allocating
+/// wrapper over [`layernorm_into`]).
 pub fn layernorm(x: &Mat, w: &[f32], b: &[f32], eps: f32) -> Mat {
+    let mut out = Mat::zeros(0, 0);
+    layernorm_into(x, w, b, eps, &mut out);
+    out
+}
+
+/// LayerNorm into a reusable output buffer — allocation-free once warm.
+pub fn layernorm_into(x: &Mat, w: &[f32], b: &[f32], eps: f32, out: &mut Mat) {
     assert_eq!(x.cols, w.len());
     assert_eq!(x.cols, b.len());
-    let mut out = Mat::zeros(x.rows, x.cols);
+    out.reshape(x.rows, x.cols);
     for i in 0..x.rows {
         let r = x.row(i);
         let mu: f32 = r.iter().sum::<f32>() / x.cols as f32;
@@ -216,7 +250,6 @@ pub fn layernorm(x: &Mat, w: &[f32], b: &[f32], eps: f32) -> Mat {
             o[j] = (r[j] - mu) * inv * w[j] + b[j];
         }
     }
-    out
 }
 
 /// tanh-approximation GELU, matching `model.py::gelu`.
@@ -256,19 +289,26 @@ pub fn argmax(vals: &[f32]) -> usize {
     best
 }
 
-/// x @ w + b for a weight matrix (in, out) and bias (out).
+/// x @ w + b for a weight matrix (in, out) and bias (out) — allocating
+/// wrapper over [`dense_into`].
 pub fn dense(x: &Mat, w: &Mat, b: Option<&[f32]>) -> Mat {
-    let mut y = matmul(x, w);
+    let mut y = Mat::zeros(0, 0);
+    dense_into(x, w.view(), b, &mut y);
+    y
+}
+
+/// x @ w + b into a reusable output buffer — allocation-free once warm.
+pub fn dense_into(x: &Mat, w: MatRef, b: Option<&[f32]>, y: &mut Mat) {
+    matmul_into(x, w, y);
     if let Some(bias) = b {
         assert_eq!(bias.len(), y.cols);
         for i in 0..y.rows {
             let r = y.row_mut(i);
-            for j in 0..r.len() {
-                r[j] += bias[j];
+            for (v, &bv) in r.iter_mut().zip(bias) {
+                *v += bv;
             }
         }
     }
-    y
 }
 
 /// Elementwise a += b.
@@ -362,13 +402,10 @@ mod tests {
     }
 
     #[test]
-    fn normalize_with_norms_caches_row_norms() {
+    fn normalize_rows_produces_unit_rows() {
         let m = Mat::from_fn(5, 4, |i, j| (i + j) as f32 + 1.0);
-        let (kn, norms) = normalize_rows_with_norms(&m);
-        assert_eq!(norms.len(), 5);
+        let kn = normalize_rows(&m);
         for i in 0..5 {
-            let raw: f32 = m.row(i).iter().map(|v| v * v).sum::<f32>().sqrt();
-            assert!((norms[i] - (raw + 1e-6)).abs() < 1e-5);
             let unit: f32 = kn.row(i).iter().map(|v| v * v).sum();
             assert!((unit - 1.0).abs() < 1e-4);
         }
@@ -380,6 +417,50 @@ mod tests {
         let m = Mat::from_fn(6, 4, |i, j| (i * 4 + j) as f32);
         let _ = CosineGram::build(&m);
         assert_eq!(gram_builds_this_thread(), before + 1);
+    }
+
+    #[test]
+    fn into_ops_match_allocating_ops_and_reuse_buffers() {
+        let x = Mat::from_fn(5, 6, |i, j| ((i * 7 + j * 3) % 9) as f32 * 0.25 - 1.0);
+        let w = Mat::from_fn(6, 4, |i, j| ((i + 2 * j) % 5) as f32 * 0.5 - 1.0);
+        let bias: Vec<f32> = (0..4).map(|j| j as f32 * 0.1).collect();
+        let lw = vec![1.1; 6];
+        let lb = vec![-0.2; 6];
+
+        // warm buffers at a *larger* shape, then reuse at the real shape:
+        // results must match the allocating path exactly
+        let mut c = Mat::from_fn(9, 9, |_, _| 7.0);
+        matmul_into(&x, w.view(), &mut c);
+        assert!(c.max_abs_diff(&matmul(&x, &w)) == 0.0);
+
+        let mut y = Mat::from_fn(9, 9, |_, _| 7.0);
+        dense_into(&x, w.view(), Some(&bias), &mut y);
+        assert!(y.max_abs_diff(&dense(&x, &w, Some(&bias))) == 0.0);
+
+        let mut ln = Mat::from_fn(9, 9, |_, _| 7.0);
+        layernorm_into(&x, &lw, &lb, 1e-5, &mut ln);
+        assert!(ln.max_abs_diff(&layernorm(&x, &lw, &lb, 1e-5)) == 0.0);
+
+        let mut nm = Mat::from_fn(9, 9, |_, _| 7.0);
+        normalize_rows_into(&x, &mut nm);
+        assert!(nm.max_abs_diff(&normalize_rows(&x)) == 0.0);
+    }
+
+    #[test]
+    fn gram_rebuild_matches_build_and_counts_once() {
+        let m1 = Mat::from_fn(23, 9, |i, j| ((i * 13 + j * 7) % 11) as f32 - 5.0);
+        let m2 = Mat::from_fn(11, 9, |i, j| ((i * 5 + j * 3) % 7) as f32 - 3.0);
+        let mut g = CosineGram::empty();
+        let mut kn = Mat::zeros(0, 0);
+        // rebuild big, then small: the shrunk reuse must still match build
+        for m in [&m1, &m2] {
+            let before = gram_builds_this_thread();
+            g.rebuild(m, &mut kn);
+            assert_eq!(gram_builds_this_thread(), before + 1);
+            let want = CosineGram::build(m);
+            assert_eq!(g.w.rows, want.w.rows);
+            assert!(g.w.max_abs_diff(&want.w) == 0.0);
+        }
     }
 
     #[test]

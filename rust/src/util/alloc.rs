@@ -1,0 +1,72 @@
+//! Thread-local allocation counter — the test/bench hook behind the
+//! "zero heap allocations in the steady-state encoder loop" guarantee.
+//!
+//! [`CountingAllocator`] wraps the system allocator and bumps a
+//! thread-local counter on every `alloc`/`realloc`/`alloc_zeroed`.  It is
+//! **not** installed by the library itself (the counter stays at 0 and
+//! costs nothing); binaries that want to measure install it themselves:
+//!
+//! ```ignore
+//! #[global_allocator]
+//! static ALLOC: pitome::util::alloc::CountingAllocator =
+//!     pitome::util::alloc::CountingAllocator;
+//! ```
+//!
+//! then bracket the region of interest with [`allocs_this_thread`] — see
+//! `tests/alloc_free.rs` and `benches/encoder_bench.rs`.  The counter is
+//! per-thread, so other threads' allocations never pollute a measurement.
+
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::cell::Cell;
+
+thread_local! {
+    // const-initialized Cell<u64>: no lazy init and no destructor, so the
+    // TLS access is safe from inside the allocator itself
+    static ALLOC_COUNT: Cell<u64> = const { Cell::new(0) };
+}
+
+/// Number of heap allocations this thread has performed since it started
+/// (always 0 unless [`CountingAllocator`] is the global allocator).
+pub fn allocs_this_thread() -> u64 {
+    ALLOC_COUNT.with(|c| c.get())
+}
+
+/// System-allocator wrapper that counts allocations per thread.
+pub struct CountingAllocator;
+
+unsafe impl GlobalAlloc for CountingAllocator {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        ALLOC_COUNT.with(|c| c.set(c.get() + 1));
+        System.alloc(layout)
+    }
+
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        System.dealloc(ptr, layout)
+    }
+
+    unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize)
+                      -> *mut u8 {
+        ALLOC_COUNT.with(|c| c.set(c.get() + 1));
+        System.realloc(ptr, layout, new_size)
+    }
+
+    unsafe fn alloc_zeroed(&self, layout: Layout) -> *mut u8 {
+        ALLOC_COUNT.with(|c| c.set(c.get() + 1));
+        System.alloc_zeroed(layout)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counter_is_monotonic_and_readable() {
+        // the library does not install the allocator, so the counter may
+        // simply stay at 0 here — assert the hook is callable and sane
+        let a = allocs_this_thread();
+        let _v: Vec<u8> = Vec::with_capacity(128);
+        let b = allocs_this_thread();
+        assert!(b >= a);
+    }
+}

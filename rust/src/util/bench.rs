@@ -4,6 +4,19 @@
 
 use std::time::{Duration, Instant};
 
+/// True when the bench should run in CI smoke mode (tiny shapes, few
+/// samples — just enough to prove the bench still compiles and runs).
+/// Enabled by the `BENCH_SMOKE` env var (any value except `0`, the empty
+/// string, or `false`) or a `--smoke` CLI argument; the CI workflow runs
+/// every bench this way so they cannot bit-rot.
+pub fn smoke() -> bool {
+    let env_on = match std::env::var("BENCH_SMOKE") {
+        Ok(v) => !matches!(v.as_str(), "" | "0" | "false"),
+        Err(_) => false,
+    };
+    env_on || std::env::args().any(|a| a == "--smoke")
+}
+
 /// Result of one benchmark.
 #[derive(Clone, Debug)]
 pub struct BenchResult {

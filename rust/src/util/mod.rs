@@ -1,12 +1,14 @@
 //! In-repo utility substrates that replace unavailable external crates
 //! (DESIGN.md §11): JSON parsing, micro-benchmarking, property testing.
 
+pub mod alloc;
 pub mod args;
 pub mod bench;
 pub mod json;
 pub mod quickcheck;
 
+pub use alloc::{allocs_this_thread, CountingAllocator};
 pub use args::Args;
-pub use bench::{Bench, BenchResult};
+pub use bench::{smoke, Bench, BenchResult};
 pub use json::{parse as parse_json, Json};
 pub use quickcheck::{property, Gen};

@@ -1,0 +1,117 @@
+//! Steady-state allocation guarantees of the scratch-workspace encoder,
+//! measured with the `CountingAllocator` test hook (installed as this
+//! test binary's global allocator; the counter is per-thread, so parallel
+//! test threads don't pollute each other).
+//!
+//! * With merging off, the warmed encoder layer loop must perform **zero**
+//!   heap allocations (the ISSUE acceptance criterion).
+//! * With PiToMe merging on, only the small per-step plan/index vectors
+//!   may allocate — bounded and independent of token/feature dims.
+
+use pitome::config::ViTConfig;
+use pitome::data::Rng;
+use pitome::merge::MergeMode;
+use pitome::model::{encoder_layers, synthetic_vit_store, EncoderCfg,
+                    EncoderScratch, ResolvedEncoder};
+use pitome::tensor::Mat;
+use pitome::util::alloc::{allocs_this_thread, CountingAllocator};
+
+#[global_allocator]
+static ALLOC: CountingAllocator = CountingAllocator;
+
+fn encoder_cfg(vcfg: &ViTConfig) -> EncoderCfg {
+    EncoderCfg {
+        prefix: "vit.".into(),
+        dim: vcfg.dim,
+        depth: vcfg.depth,
+        heads: vcfg.heads,
+        mode: vcfg.mode(),
+        plan: vcfg.plan(),
+        prop_attn: true,
+        tofu_threshold: vcfg.tofu_threshold,
+    }
+}
+
+fn random_input(n: usize, dim: usize, seed: u64) -> Mat {
+    let mut rng = Rng::new(seed);
+    Mat::from_fn(n, dim, |_, _| (rng.next_f64() * 0.2 - 0.1) as f32)
+}
+
+/// Warm `scratch` with one pass, then count allocations over a second,
+/// steady-state pass of the layer loop.
+fn steady_state_allocs(vcfg: &ViTConfig) -> u64 {
+    let ps = synthetic_vit_store(vcfg, 5);
+    let cfg = encoder_cfg(vcfg);
+    let re = ResolvedEncoder::new(&ps, &cfg).unwrap();
+    let mut scratch = EncoderScratch::new();
+    let n0 = cfg.plan[0];
+    let x0 = random_input(n0, cfg.dim, 1);
+    for pass in 0..2 {
+        let mut x = x0.clone();
+        let mut sizes = vec![1.0f32; n0];
+        let mut rng = Rng::new(0);
+        let before = allocs_this_thread();
+        encoder_layers(&re, &cfg, &mut x, &mut sizes, &mut rng, &mut scratch);
+        if pass == 1 {
+            return allocs_this_thread() - before;
+        }
+    }
+    unreachable!()
+}
+
+#[test]
+fn merge_free_encoder_loop_is_allocation_free() {
+    // mode "none": the pure attention + MLP loop
+    let vcfg = ViTConfig::default();
+    assert_eq!(encoder_cfg(&vcfg).mode, MergeMode::None);
+    let allocs = steady_state_allocs(&vcfg);
+    assert_eq!(allocs, 0,
+               "steady-state encoder loop allocated {allocs} times");
+}
+
+#[test]
+fn merging_encoder_loop_allocates_only_small_plan_vectors() {
+    let vcfg = ViTConfig {
+        merge_mode: "pitome".into(),
+        merge_r: 0.9,
+        ..Default::default()
+    };
+    let allocs = steady_state_allocs(&vcfg);
+    // depth-4 pitome: per merge layer only the energy vector and the plan
+    // builder's index vectors allocate — nothing proportional to dim, and
+    // no Gram / QKV / score / output buffers
+    assert!(allocs > 0, "pitome plan building is expected to allocate");
+    assert!(allocs < 200,
+            "merge layers allocated {allocs} times — scratch reuse broken?");
+}
+
+#[test]
+fn second_forward_reuses_all_encoder_buffers() {
+    // whole-forward view: pass 2 over a reused scratch must allocate far
+    // less than pass 1 (which grows every buffer)
+    let vcfg = ViTConfig {
+        merge_mode: "pitome".into(),
+        merge_r: 0.9,
+        ..Default::default()
+    };
+    let ps = synthetic_vit_store(&vcfg, 5);
+    let cfg = encoder_cfg(&vcfg);
+    let re = ResolvedEncoder::new(&ps, &cfg).unwrap();
+    let mut scratch = EncoderScratch::new();
+    let n0 = cfg.plan[0];
+    let x0 = random_input(n0, cfg.dim, 2);
+    let mut per_pass = Vec::new();
+    for _ in 0..2 {
+        let mut x = x0.clone();
+        let mut sizes = vec![1.0f32; n0];
+        let mut rng = Rng::new(0);
+        let before = allocs_this_thread();
+        encoder_layers(&re, &cfg, &mut x, &mut sizes, &mut rng, &mut scratch);
+        per_pass.push(allocs_this_thread() - before);
+    }
+    // pass 1 additionally grows every scratch buffer (>= the ~15 backing
+    // stores); pass 2 pays only the per-step plan vectors
+    assert!(per_pass[1] + 10 <= per_pass[0],
+            "cold {} vs warm {}: buffer growth should only be paid once",
+            per_pass[0], per_pass[1]);
+}

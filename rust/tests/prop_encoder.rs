@@ -1,0 +1,299 @@
+//! Property tests for the scratch-workspace encoder: a reused
+//! `EncoderScratch` must be indistinguishable from a fresh one — across
+//! every merge mode, random shapes, and proportional attention on/off —
+//! and the shared-scratch batch driver must match the serial path.
+
+use pitome::config::ViTConfig;
+use pitome::data::Rng;
+use pitome::merge::energy::layer_margin;
+use pitome::merge::{merge_step, MergeCtx};
+use pitome::model::{encoder_forward, encoder_forward_batch_pooled,
+                    encoder_forward_scratch, synthetic_vit_store, EncoderCfg,
+                    EncoderScratch, ParamStore, ScratchPool};
+use pitome::tensor::{add_inplace, dense, gelu_inplace, layernorm, matmul, Mat};
+
+/// All modes the encoder can run (paper modes + ablations + baselines).
+const MODES: &[&str] = &[
+    "none", "pitome", "pitome_noprot", "pitome_rand", "pitome_attn",
+    "tome", "tofu", "dct", "diffrate", "random",
+];
+
+fn encoder_cfg(vcfg: &ViTConfig, prop_attn: bool) -> EncoderCfg {
+    EncoderCfg {
+        prefix: "vit.".into(),
+        dim: vcfg.dim,
+        depth: vcfg.depth,
+        heads: vcfg.heads,
+        mode: vcfg.mode(),
+        plan: vcfg.plan(),
+        prop_attn,
+        tofu_threshold: vcfg.tofu_threshold,
+    }
+}
+
+fn random_input(n: usize, dim: usize, seed: u64) -> Mat {
+    let mut rng = Rng::new(seed);
+    Mat::from_fn(n, dim, |_, _| (rng.next_f64() * 0.2 - 0.1) as f32)
+}
+
+/// The seed's scalar attention, reimplemented as an independent reference
+/// (fresh score matrix per head, sequential scalar dot products).
+fn reference_attention(q: &Mat, kf: &Mat, v: &Mat, sizes: &[f32],
+                       heads: usize, prop_attn: bool) -> (Mat, Vec<f32>) {
+    let n = q.rows;
+    let dim = q.cols;
+    let d = dim / heads;
+    let scale = 1.0 / (d as f32).sqrt();
+    let log_m: Vec<f32> = if prop_attn {
+        sizes.iter().map(|&s| s.max(1e-9).ln()).collect()
+    } else {
+        vec![0.0; n]
+    };
+    let mut out = Mat::zeros(n, dim);
+    let mut attn_cls = vec![0f32; n];
+    for hh in 0..heads {
+        let col0 = hh * d;
+        let mut s = Mat::zeros(n, n);
+        for i in 0..n {
+            for j in 0..n {
+                let mut acc = 0f32;
+                for c in 0..d {
+                    acc += q.get(i, col0 + c) * kf.get(j, col0 + c);
+                }
+                s.set(i, j, acc * scale + log_m[j]);
+            }
+        }
+        let mut row0: Vec<f32> = (0..n).map(|j| s.get(0, j) - log_m[j]).collect();
+        let mx = row0.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+        let mut sum = 0f32;
+        for vj in row0.iter_mut() {
+            *vj = (*vj - mx).exp();
+            sum += *vj;
+        }
+        for (a, vj) in attn_cls.iter_mut().zip(&row0) {
+            *a += vj / sum / heads as f32;
+        }
+        for i in 0..n {
+            let mx = (0..n).map(|j| s.get(i, j)).fold(f32::NEG_INFINITY, f32::max);
+            let mut se = 0f32;
+            for j in 0..n {
+                se += (s.get(i, j) - mx).exp();
+            }
+            for j in 0..n {
+                let p = (s.get(i, j) - mx).exp() / se;
+                for c in 0..d {
+                    let o = out.get(i, col0 + c) + p * v.get(j, col0 + c);
+                    out.set(i, col0 + c, o);
+                }
+            }
+        }
+    }
+    (out, attn_cls)
+}
+
+#[test]
+fn vectorized_attention_matches_scalar_reference() {
+    let mut rng = Rng::new(31);
+    for (n, dim, heads) in [(7usize, 16usize, 2usize), (23, 24, 4), (33, 64, 8)] {
+        let mk = |rng: &mut Rng| {
+            Mat::from_fn(n, dim, |_, _| (rng.next_f64() * 2.0 - 1.0) as f32)
+        };
+        let q = mk(&mut rng);
+        let kf = mk(&mut rng);
+        let v = mk(&mut rng);
+        let sizes: Vec<f32> = (0..n).map(|i| 1.0 + (i % 4) as f32).collect();
+        for prop in [true, false] {
+            let (want, want_cls) =
+                reference_attention(&q, &kf, &v, &sizes, heads, prop);
+            let (got, got_cls) =
+                pitome::model::attention(&q, &kf, &v, &sizes, heads, prop);
+            let d = got.max_abs_diff(&want);
+            assert!(d < 1e-4, "n={n} heads={heads} prop={prop}: diff {d}");
+            for (a, b) in got_cls.iter().zip(&want_cls) {
+                assert!((a - b).abs() < 1e-5,
+                        "cls attn diverged: {a} vs {b}");
+            }
+        }
+    }
+}
+
+/// The seed's whole encoder forward, reimplemented independently of the
+/// scratch machinery: per-layer allocating LN / QKV / scalar attention /
+/// merge_step / MLP, exactly as the pre-refactor `encoder_forward` was
+/// composed.  Catches composition-level bugs the wrapper-vs-scratch tests
+/// cannot (both of those share `run_layers`).
+fn reference_forward(ps: &ParamStore, cfg: &EncoderCfg, mut x: Mat,
+                     rng: &mut Rng) -> Mat {
+    let mut sizes = vec![1f32; x.rows];
+    for l in 0..cfg.depth {
+        let b = format!("{}blk{}.", cfg.prefix, l);
+        let h = layernorm(&x, ps.vec1(&format!("{b}ln1.w")).unwrap(),
+                          ps.vec1(&format!("{b}ln1.b")).unwrap(), 1e-5);
+        let q = matmul(&h, &ps.mat2(&format!("{b}wq")).unwrap());
+        let kf = matmul(&h, &ps.mat2(&format!("{b}wk")).unwrap());
+        let v = matmul(&h, &ps.mat2(&format!("{b}wv")).unwrap());
+        let attn_sizes: Vec<f32> = if cfg.prop_attn {
+            sizes.clone()
+        } else {
+            vec![1.0; x.rows]
+        };
+        let (o, attn_cls) = reference_attention(&q, &kf, &v, &attn_sizes,
+                                                cfg.heads, cfg.prop_attn);
+        let proj = dense(&o, &ps.mat2(&format!("{b}wo")).unwrap(),
+                         Some(ps.vec1(&format!("{b}bo")).unwrap()));
+        add_inplace(&mut x, &proj);
+
+        let k = cfg.plan[l] - cfg.plan[l + 1];
+        if k > 0 {
+            let margin = layer_margin(l, cfg.depth);
+            let ctx = MergeCtx {
+                x: &x, kf: &kf, sizes: &sizes, attn_cls: &attn_cls,
+                margin, k, protect_first: 1,
+                tofu_threshold: cfg.tofu_threshold,
+            };
+            let (xm, sm) = merge_step(cfg.mode, &ctx, rng);
+            x = xm;
+            sizes = sm;
+        }
+
+        let h2 = layernorm(&x, ps.vec1(&format!("{b}ln2.w")).unwrap(),
+                           ps.vec1(&format!("{b}ln2.b")).unwrap(), 1e-5);
+        let mut m = dense(&h2, &ps.mat2(&format!("{b}mlp1")).unwrap(),
+                          Some(ps.vec1(&format!("{b}mlp1b")).unwrap()));
+        gelu_inplace(&mut m);
+        let m2 = dense(&m, &ps.mat2(&format!("{b}mlp2")).unwrap(),
+                       Some(ps.vec1(&format!("{b}mlp2b")).unwrap()));
+        add_inplace(&mut x, &m2);
+    }
+    layernorm(&x, ps.vec1(&format!("{}lnf.w", cfg.prefix)).unwrap(),
+              ps.vec1(&format!("{}lnf.b", cfg.prefix)).unwrap(), 1e-5)
+}
+
+#[test]
+fn scratch_forward_matches_seed_composition_reference() {
+    // mode "none" exercises the full block composition (LN / QKV / attn /
+    // proj / MLP / final norm) against the independent seed-style
+    // reference.  Merge modes are deliberately excluded here: the two
+    // implementations' attention kernels round differently, and a
+    // near-tied energy/similarity ranking at a deep layer could then pick
+    // a different (equally valid) plan — that comparison would test tie
+    // order, not correctness.  Merge composition is instead covered
+    // bitwise at the merge_step level (`scratch_step_matches_allocating_
+    // step_for_all_modes`) and against the JAX testvectors in parity.rs.
+    let vcfg = ViTConfig::default();
+    let ps = synthetic_vit_store(&vcfg, 17);
+    for prop_attn in [true, false] {
+        let cfg = encoder_cfg(&vcfg, prop_attn);
+        let x = random_input(cfg.plan[0], cfg.dim, 7);
+        let mut r1 = Rng::new(1);
+        let want = reference_forward(&ps, &cfg, x.clone(), &mut r1);
+        let mut r2 = Rng::new(1);
+        let mut scratch = EncoderScratch::new();
+        let got = encoder_forward_scratch(&ps, &cfg, x, &mut r2,
+                                          &mut scratch).unwrap();
+        assert_eq!(got.rows, want.rows, "prop={prop_attn}");
+        let d = got.max_abs_diff(&want);
+        // only the attention kernel's summation order differs
+        assert!(d < 1e-3, "prop={prop_attn}: diff {d}");
+    }
+}
+
+#[test]
+fn scratch_forward_matches_wrapper_across_modes_and_shapes() {
+    // shape sweep: (image, patch, dim, heads, depth) — dims divisible by
+    // heads; token counts 17 / 26 / 65
+    let shapes = [(16usize, 4usize, 32usize, 2usize, 2usize),
+                  (20, 4, 48, 4, 3),
+                  (32, 4, 64, 4, 4)];
+    // ONE scratch reused across every mode, shape, and trial: any state
+    // leak between configurations would show up as a mismatch
+    let mut scratch = EncoderScratch::new();
+    for (si, &(img, patch, dim, heads, depth)) in shapes.iter().enumerate() {
+        for (mi, &mode) in MODES.iter().enumerate() {
+            let vcfg = ViTConfig {
+                image_size: img,
+                patch_size: patch,
+                dim,
+                heads,
+                depth,
+                merge_mode: mode.into(),
+                merge_r: 0.85,
+                ..Default::default()
+            };
+            let ps = synthetic_vit_store(&vcfg, 100 + si as u64);
+            for prop_attn in [true, false] {
+                let cfg = encoder_cfg(&vcfg, prop_attn);
+                let x = random_input(cfg.plan[0], dim,
+                                     (si * 100 + mi) as u64);
+                let seed = (si + mi) as u64;
+                let mut r1 = Rng::new(seed);
+                let want =
+                    encoder_forward(&ps, &cfg, x.clone(), &mut r1).unwrap();
+                let mut r2 = Rng::new(seed);
+                let got = encoder_forward_scratch(&ps, &cfg, x, &mut r2,
+                                                  &mut scratch).unwrap();
+                assert_eq!(got.rows, want.rows,
+                           "{mode} shape {si} prop={prop_attn}");
+                let d = got.max_abs_diff(&want);
+                assert!(d < 1e-6,
+                        "{mode} shape {si} prop={prop_attn}: diff {d}");
+            }
+        }
+    }
+}
+
+#[test]
+fn pooled_batch_matches_serial_across_modes() {
+    let mut pool = ScratchPool::new();
+    for &mode in MODES {
+        // stochastic modes draw from per-(layer, sample) streams in the
+        // batch driver by design — the deterministic paper modes must
+        // match the serial path exactly
+        if mode == "random" || mode == "pitome_rand" {
+            continue;
+        }
+        let vcfg = ViTConfig {
+            merge_mode: mode.into(),
+            merge_r: 0.85,
+            ..Default::default()
+        };
+        let ps = synthetic_vit_store(&vcfg, 11);
+        let cfg = encoder_cfg(&vcfg, true);
+        let xs: Vec<Mat> = (0..4)
+            .map(|i| random_input(cfg.plan[0], cfg.dim, 50 + i))
+            .collect();
+        let batched = encoder_forward_batch_pooled(&ps, &cfg, xs.clone(), 0,
+                                                   3, &mut pool).unwrap();
+        for (i, x) in xs.into_iter().enumerate() {
+            let mut r = Rng::new(0);
+            let want = encoder_forward(&ps, &cfg, x, &mut r).unwrap();
+            let d = batched[i].max_abs_diff(&want);
+            assert!(d < 1e-6, "{mode} sample {i}: diff {d}");
+        }
+    }
+}
+
+#[test]
+fn stochastic_batch_is_schedule_independent() {
+    let mut pool = ScratchPool::new();
+    for &mode in &["random", "pitome_rand"] {
+        let vcfg = ViTConfig {
+            merge_mode: mode.into(),
+            merge_r: 0.85,
+            ..Default::default()
+        };
+        let ps = synthetic_vit_store(&vcfg, 13);
+        let cfg = encoder_cfg(&vcfg, true);
+        let xs: Vec<Mat> = (0..5)
+            .map(|i| random_input(cfg.plan[0], cfg.dim, 80 + i))
+            .collect();
+        let a = encoder_forward_batch_pooled(&ps, &cfg, xs.clone(), 21, 1,
+                                             &mut pool).unwrap();
+        let b = encoder_forward_batch_pooled(&ps, &cfg, xs, 21, 5,
+                                             &mut pool).unwrap();
+        for (i, (x, y)) in a.iter().zip(&b).enumerate() {
+            assert!(x.max_abs_diff(y) == 0.0,
+                    "{mode} sample {i} depends on worker count");
+        }
+    }
+}
