@@ -188,7 +188,10 @@ fn main() {
                                        &mut none_scratch, &x0);
     println!("\nallocations per steady-state layer loop: \
               {none_allocs} (merge off — acceptance: 0), \
-              {pitome_allocs} (pitome merge plans only)");
+              {pitome_allocs} (pitome — acceptance: 0, in-place plans)");
+    assert_eq!(none_allocs, 0, "merge-free layer loop must not allocate");
+    assert_eq!(pitome_allocs, 0,
+               "pitome layer loop must not allocate (in-place plan builders)");
 }
 
 /// Warm `scratch` with one pass, then count allocations over a second,

@@ -1,40 +1,152 @@
 //! PERF — spectral toolkit benchmarks: Jacobi eigensolver scaling and the
-//! full SD(G, Gc) pipeline (the Theorem-1 experiment's cost profile).
+//! full SD(G, Gc) pipeline (the Theorem-1 experiment's cost profile),
+//! timed over the scratch-reuse coarsening path.
+//!
+//! In smoke mode (`BENCH_SMOKE=1`, the CI configuration) the bench first
+//! runs a parity gate: the scratch-based `iterative_coarsen_scratch`
+//! must reproduce the historical per-step-build path (one
+//! `CosineGram::build` + allocating plan builder + `apply_plan` per
+//! step, kept verbatim below as `reference_coarsen`) to 1e-6 in
+//! SD(G, Gc) for every algorithm before any timings are reported.
 
-use pitome::eval::spectral::{clustered_tokens, iterative_coarsen,
-                             ClusterSpec, CoarsenAlgo, Layout};
+use std::collections::HashMap;
+
+use pitome::data::Rng;
+use pitome::eval::spectral::{clustered_tokens, iterative_coarsen_scratch,
+                             ClusterSpec, CoarsenAlgo, CoarsenScratch,
+                             Layout};
 use pitome::graph::{jacobi_eigenvalues, normalized_laplacian,
-                    spectral_distance, token_graph};
+                    spectral_distance, token_graph, Partition};
+use pitome::merge::energy::energy_from_gram;
+use pitome::merge::pitome::{ordered_bsm_plan_gram, Split};
+use pitome::merge::tome::tome_plan_gram;
+use pitome::merge::{apply_plan, MergePlan};
+use pitome::tensor::{CosineGram, Mat};
 use pitome::util::{smoke, Bench};
+
+/// The pre-scratch coarsening pipeline, kept verbatim as the parity
+/// reference: every step builds a fresh Gram and allocates its plan and
+/// merged tokens.
+fn reference_coarsen(kf0: &Mat, algo: CoarsenAlgo, steps: usize, k: usize,
+                     margin: f32, seed: u64) -> Partition {
+    let n0 = kf0.rows;
+    let mut groups: Vec<usize> = (0..n0).collect();
+    let mut token_group: Vec<usize> = (0..n0).collect();
+    let mut kf = kf0.clone();
+    let mut sizes = vec![1f32; n0];
+    let mut rng = Rng::new(seed);
+    for _ in 0..steps {
+        if kf.rows < 2 * k + 1 {
+            break;
+        }
+        let g = CosineGram::build(&kf);
+        let plan: MergePlan = match algo {
+            CoarsenAlgo::PiToMe => {
+                let e = energy_from_gram(&g, margin);
+                ordered_bsm_plan_gram(&g, &e, k, 0, Split::Alternate, true,
+                                      &mut rng)
+            }
+            CoarsenAlgo::ToMe => tome_plan_gram(&g, k, 0, None),
+            CoarsenAlgo::Random => {
+                let e: Vec<f32> =
+                    (0..kf.rows).map(|_| rng.next_f64() as f32).collect();
+                ordered_bsm_plan_gram(&g, &e, k, 0, Split::Random, true,
+                                      &mut rng)
+            }
+        };
+        let mut new_token_group = Vec::with_capacity(plan.n_out());
+        for &p in &plan.protect {
+            new_token_group.push(token_group[p]);
+        }
+        for &b in &plan.b {
+            new_token_group.push(token_group[b]);
+        }
+        for (ai, &a) in plan.a.iter().enumerate() {
+            let target_group = token_group[plan.b[plan.dst[ai]]];
+            let src_group = token_group[a];
+            for g in groups.iter_mut() {
+                if *g == src_group {
+                    *g = target_group;
+                }
+            }
+        }
+        let (kf2, sizes2) = apply_plan(&kf, &sizes, &plan);
+        kf = kf2;
+        sizes = sizes2;
+        token_group = new_token_group;
+    }
+    let mut remap = HashMap::new();
+    let mut next = 0usize;
+    let assign: Vec<usize> = groups
+        .iter()
+        .map(|&g| *remap.entry(g).or_insert_with(|| {
+            let v = next;
+            next += 1;
+            v
+        }))
+        .collect();
+    Partition::from_assign(assign)
+}
 
 fn main() {
     let sm = smoke();
     let mut b = if sm { Bench::new(1, 2) } else { Bench::new(2, 8) };
     println!("# spectral toolkit benchmarks{}", if sm { " [smoke]" } else { "" });
 
+    let spec = ClusterSpec { sizes: vec![16, 8, 6, 2], h: 16, noise: 0.1,
+                             seed: 5, layout: Layout::Interleaved };
+    let (kf, _) = clustered_tokens(&spec);
+    let w = token_graph(&kf);
+    let mut scratch = CoarsenScratch::new();
+    let mut p = Partition::identity(0);
+
+    if sm {
+        // parity gate (CI smoke): the scratch pipeline must reproduce the
+        // per-step-build path before any timings are reported
+        for (algo, name) in [(CoarsenAlgo::PiToMe, "pitome"),
+                             (CoarsenAlgo::ToMe, "tome"),
+                             (CoarsenAlgo::Random, "random")] {
+            iterative_coarsen_scratch(&kf, algo, 3, 3, 0.6, 7, &mut scratch,
+                                      &mut p);
+            let sd_scratch = spectral_distance(&w, &p);
+            let p_ref = reference_coarsen(&kf, algo, 3, 3, 0.6, 7);
+            let sd_ref = spectral_distance(&w, &p_ref);
+            assert!((sd_scratch - sd_ref).abs() <= 1e-6,
+                    "{name}: scratch SD {sd_scratch} vs per-step-build SD \
+                     {sd_ref}");
+            println!("parity {name:<8} scratch SD {sd_scratch:.6} == \
+                      per-step-build SD {sd_ref:.6}");
+        }
+    }
+
     let ns: &[usize] = if sm { &[16] } else { &[16, 32, 64, 128] };
     for &n in ns {
-        let spec = ClusterSpec {
+        let nspec = ClusterSpec {
             sizes: vec![n / 2, n / 4, n / 8, n - n / 2 - n / 4 - n / 8],
             h: 16,
             noise: 0.1,
             seed: 5,
             layout: Layout::Interleaved,
         };
-        let (kf, _) = clustered_tokens(&spec);
-        let w = token_graph(&kf);
-        let l = normalized_laplacian(&w);
+        let (nkf, _) = clustered_tokens(&nspec);
+        let nw = token_graph(&nkf);
+        let nl = normalized_laplacian(&nw);
         b.run(&format!("jacobi_eigenvalues n={n}"), || {
-            jacobi_eigenvalues(&l, 1e-6, 100)
+            jacobi_eigenvalues(&nl, 1e-6, 100)
         });
     }
 
-    let spec = ClusterSpec { sizes: vec![16, 8, 6, 2], h: 16, noise: 0.1,
-                             seed: 5, layout: Layout::Interleaved };
-    let (kf, _) = clustered_tokens(&spec);
-    let w = token_graph(&kf);
+    b.run("coarsen only (scratch, n=32, 3 steps)", || {
+        iterative_coarsen_scratch(&kf, CoarsenAlgo::PiToMe, 3, 3, 0.6, 7,
+                                  &mut scratch, &mut p);
+        p.n_groups
+    });
+    b.run("coarsen only (per-step build, n=32, 3 steps)", || {
+        reference_coarsen(&kf, CoarsenAlgo::PiToMe, 3, 3, 0.6, 7).n_groups
+    });
     b.run("full SD pipeline (coarsen+lift+2x eig, n=32)", || {
-        let p = iterative_coarsen(&kf, CoarsenAlgo::PiToMe, 3, 3, 0.6, 7);
+        iterative_coarsen_scratch(&kf, CoarsenAlgo::PiToMe, 3, 3, 0.6, 7,
+                                  &mut scratch, &mut p);
         spectral_distance(&w, &p)
     });
 }

@@ -5,9 +5,9 @@
 //! converges to a positive constant; see EXPERIMENTS.md §THM1.
 
 use pitome::eval::spectral::{clustered_tokens, cross_cluster_fraction,
-                             iterative_coarsen, theorem1_sweep, ClusterSpec,
-                             CoarsenAlgo, Layout};
-use pitome::graph::{spectral_distance, token_graph};
+                             iterative_coarsen_scratch, theorem1_sweep,
+                             ClusterSpec, CoarsenAlgo, CoarsenScratch, Layout};
+use pitome::graph::{spectral_distance, token_graph, Partition};
 use pitome::util::Args;
 
 fn main() {
@@ -33,11 +33,16 @@ fn main() {
                              seed: 42, layout: Layout::Interleaved };
     let (kf, labels) = clustered_tokens(&spec);
     let w = token_graph(&kf);
+    // one workspace serves the whole depth table (the scratch-reuse
+    // serving pattern; see eval::spectral::CoarsenScratch)
+    let mut scratch = CoarsenScratch::new();
+    let mut p = Partition::identity(0);
     for s in 1..=5usize {
         for (algo, name) in [(CoarsenAlgo::PiToMe, "pitome"),
                              (CoarsenAlgo::ToMe, "tome"),
                              (CoarsenAlgo::Random, "random")] {
-            let p = iterative_coarsen(&kf, algo, s, k, 0.6, 7);
+            iterative_coarsen_scratch(&kf, algo, s, k, 0.6, 7, &mut scratch,
+                                      &mut p);
             println!("{:<8} {:<10} {:>12.4}  (cross {:.2})", s, name,
                      spectral_distance(&w, &p),
                      cross_cluster_fraction(&p, &labels));

@@ -8,10 +8,10 @@
 
 use crate::data::Rng;
 use crate::graph::{spectral_distance, token_graph, Partition};
-use crate::merge::energy::energy_from_gram;
-use crate::merge::pitome::{ordered_bsm_plan_gram, Split};
-use crate::merge::tome::tome_plan_gram;
-use crate::merge::{apply_plan, MergePlan};
+use crate::merge::energy::energy_from_gram_into;
+use crate::merge::pitome::{ordered_bsm_plan_gram_into, Split};
+use crate::merge::tome::tome_plan_gram_into;
+use crate::merge::{apply_plan_into, MergePlan, PlanScratch};
 use crate::tensor::{CosineGram, Mat};
 
 /// How cluster members are laid out over token positions.  ToMe's parity
@@ -115,64 +115,159 @@ pub enum CoarsenAlgo {
     Random,
 }
 
+/// Reusable workspace for [`iterative_coarsen_scratch`]: the per-step
+/// shared Gram, ranking-signal and plan-builder buffers, the in-place
+/// [`MergePlan`], ping-pong token/size buffers, and the
+/// partition-tracking arrays.  One workspace serves a whole SD(G, Gc)
+/// sweep — every (noise, algo, steps) point reuses it, and a warmed
+/// sweep performs zero heap allocations (asserted by
+/// `tests/alloc_free.rs`).
+pub struct CoarsenScratch {
+    gram: CosineGram,
+    kn: Mat,
+    energy: Vec<f32>,
+    plan_bufs: PlanScratch,
+    plan: MergePlan,
+    /// current (coarsened) token features
+    kf: Mat,
+    /// apply output; ping-pongs with `kf` via `mem::swap`
+    next_kf: Mat,
+    sizes: Vec<f32>,
+    next_sizes: Vec<f32>,
+    /// group id per original token
+    groups: Vec<usize>,
+    /// group id per current token
+    token_group: Vec<usize>,
+    next_token_group: Vec<usize>,
+    /// dense-renumbering table (group ids live in 0..n0)
+    remap: Vec<usize>,
+}
+
+impl CoarsenScratch {
+    /// Empty workspace; buffers grow on first use and are then reused.
+    pub fn new() -> CoarsenScratch {
+        CoarsenScratch {
+            gram: CosineGram::empty(),
+            kn: Mat::zeros(0, 0),
+            energy: Vec::new(),
+            plan_bufs: PlanScratch::new(),
+            plan: MergePlan::empty(),
+            kf: Mat::zeros(0, 0),
+            next_kf: Mat::zeros(0, 0),
+            sizes: Vec::new(),
+            next_sizes: Vec::new(),
+            groups: Vec::new(),
+            token_group: Vec::new(),
+            next_token_group: Vec::new(),
+            remap: Vec::new(),
+        }
+    }
+}
+
+impl Default for CoarsenScratch {
+    fn default() -> Self {
+        CoarsenScratch::new()
+    }
+}
+
 /// Iteratively coarsen `steps` times, merging `k` pairs per step, tracking
-/// the induced partition of the *original* tokens.
+/// the induced partition of the *original* tokens (allocating wrapper
+/// over [`iterative_coarsen_scratch`]).
 pub fn iterative_coarsen(kf0: &Mat, algo: CoarsenAlgo, steps: usize, k: usize,
                          margin: f32, seed: u64) -> Partition {
+    let mut scratch = CoarsenScratch::new();
+    let mut p = Partition::identity(0);
+    iterative_coarsen_scratch(kf0, algo, steps, k, margin, seed, &mut scratch,
+                              &mut p);
+    p
+}
+
+/// Iteratively coarsen into a caller-owned workspace and output
+/// partition: one in-place Gram rebuild per step
+/// ([`CosineGram::rebuild`]), plans built by the allocation-free
+/// `*_plan_gram_into` builders, and tokens merged via [`apply_plan_into`]
+/// with ping-ponged buffers — numerically identical to the historical
+/// per-step-build path (the smoke mode of `benches/spectral_bench.rs`
+/// gates on that parity at 1e-6 before reporting timings).
+#[allow(clippy::too_many_arguments)]
+pub fn iterative_coarsen_scratch(kf0: &Mat, algo: CoarsenAlgo, steps: usize,
+                                 k: usize, margin: f32, seed: u64,
+                                 s: &mut CoarsenScratch, out: &mut Partition) {
     let n0 = kf0.rows;
     // group id per original token; current tokens map to group ids
-    let mut groups: Vec<usize> = (0..n0).collect(); // original -> group
-    let mut token_group: Vec<usize> = (0..n0).collect(); // current token -> group
-    let mut kf = kf0.clone();
-    let mut sizes = vec![1f32; n0];
+    s.groups.clear();
+    s.groups.extend(0..n0);
+    s.token_group.clear();
+    s.token_group.extend(0..n0);
+    s.kf.copy_from(kf0);
+    s.sizes.clear();
+    s.sizes.resize(n0, 1f32);
     let mut rng = Rng::new(seed);
     for _ in 0..steps {
-        if kf.rows < 2 * k + 1 {
+        if s.kf.rows < 2 * k + 1 {
             break;
         }
-        // one shared Gram per coarsening step, reused by scoring + matching
-        let g = CosineGram::build(&kf);
-        let plan: MergePlan = match algo {
+        // one shared Gram per coarsening step, rebuilt in place and
+        // reused by scoring + matching
+        s.gram.rebuild(&s.kf, &mut s.kn);
+        match algo {
             CoarsenAlgo::PiToMe => {
-                let e = energy_from_gram(&g, margin);
-                ordered_bsm_plan_gram(&g, &e, k, 0, Split::Alternate, true, &mut rng)
+                energy_from_gram_into(&s.gram, margin, &mut s.energy);
+                ordered_bsm_plan_gram_into(&s.gram, &s.energy, k, 0,
+                                           Split::Alternate, true, &mut rng,
+                                           &mut s.plan_bufs, &mut s.plan);
             }
-            CoarsenAlgo::ToMe => tome_plan_gram(&g, k, 0, None),
+            CoarsenAlgo::ToMe => {
+                tome_plan_gram_into(&s.gram, k, 0, None, &mut s.plan_bufs,
+                                    &mut s.plan);
+            }
             CoarsenAlgo::Random => {
-                let e: Vec<f32> = (0..kf.rows).map(|_| rng.next_f64() as f32).collect();
-                ordered_bsm_plan_gram(&g, &e, k, 0, Split::Random, true, &mut rng)
+                s.energy.clear();
+                for _ in 0..s.kf.rows {
+                    s.energy.push(rng.next_f64() as f32);
+                }
+                ordered_bsm_plan_gram_into(&s.gram, &s.energy, k, 0,
+                                           Split::Random, true, &mut rng,
+                                           &mut s.plan_bufs, &mut s.plan);
             }
-        };
+        }
         // update partition: token a joins the group of b[dst[a]]
-        let mut new_token_group = Vec::with_capacity(plan.n_out());
-        for &p in &plan.protect {
-            new_token_group.push(token_group[p]);
+        s.next_token_group.clear();
+        for &p in &s.plan.protect {
+            s.next_token_group.push(s.token_group[p]);
         }
-        for &b in &plan.b {
-            new_token_group.push(token_group[b]);
+        for &b in &s.plan.b {
+            s.next_token_group.push(s.token_group[b]);
         }
-        for (ai, &a) in plan.a.iter().enumerate() {
-            let target_group = token_group[plan.b[plan.dst[ai]]];
-            let src_group = token_group[a];
-            for g in groups.iter_mut() {
+        for (ai, &a) in s.plan.a.iter().enumerate() {
+            let target_group = s.token_group[s.plan.b[s.plan.dst[ai]]];
+            let src_group = s.token_group[a];
+            for g in s.groups.iter_mut() {
                 if *g == src_group {
                     *g = target_group;
                 }
             }
         }
-        let (kf2, sizes2) = apply_plan(&kf, &sizes, &plan);
-        kf = kf2;
-        sizes = sizes2;
-        token_group = new_token_group;
+        apply_plan_into(&s.kf, &s.sizes, &s.plan, &mut s.next_kf,
+                        &mut s.next_sizes);
+        std::mem::swap(&mut s.kf, &mut s.next_kf);
+        std::mem::swap(&mut s.sizes, &mut s.next_sizes);
+        std::mem::swap(&mut s.token_group, &mut s.next_token_group);
     }
-    // renumber groups densely
-    let mut remap = std::collections::HashMap::new();
+    // renumber groups densely in first-seen order (allocation-free: group
+    // ids are original token indices, so the table is indexed by 0..n0)
+    s.remap.clear();
+    s.remap.resize(n0, usize::MAX);
     let mut next = 0usize;
-    let assign: Vec<usize> = groups
-        .iter()
-        .map(|&g| *remap.entry(g).or_insert_with(|| { let v = next; next += 1; v }))
-        .collect();
-    Partition::from_assign(assign)
+    out.assign.clear();
+    for &g in &s.groups {
+        if s.remap[g] == usize::MAX {
+            s.remap[g] = next;
+            next += 1;
+        }
+        out.assign.push(s.remap[g]);
+    }
+    out.n_groups = next;
 }
 
 /// One Theorem-1 experiment row.
@@ -189,10 +284,13 @@ pub struct SpectralRow {
 }
 
 /// Run the sweep: for each noise level, coarsen with each algorithm and
-/// report SD and cross-cluster merge fraction.
+/// report SD and cross-cluster merge fraction.  One [`CoarsenScratch`]
+/// serves the whole sweep.
 pub fn theorem1_sweep(noises: &[f64], steps: usize, k: usize)
                       -> Vec<SpectralRow> {
     let mut rows = Vec::new();
+    let mut scratch = CoarsenScratch::new();
+    let mut p = Partition::identity(0);
     for &noise in noises {
         let spec = ClusterSpec {
             sizes: vec![16, 8, 6, 2],
@@ -206,7 +304,8 @@ pub fn theorem1_sweep(noises: &[f64], steps: usize, k: usize)
         for (algo, name) in [(CoarsenAlgo::PiToMe, "pitome"),
                              (CoarsenAlgo::ToMe, "tome"),
                              (CoarsenAlgo::Random, "random")] {
-            let p = iterative_coarsen(&kf, algo, steps, k, 0.6, 7);
+            iterative_coarsen_scratch(&kf, algo, steps, k, 0.6, 7,
+                                      &mut scratch, &mut p);
             let sd = spectral_distance(&w, &p);
             rows.push(SpectralRow {
                 noise,
@@ -260,6 +359,34 @@ mod tests {
         let rows = theorem1_sweep(&[0.02], 3, 3);
         let r = rows.iter().find(|r| r.algo == "pitome").unwrap();
         assert_eq!(r.cross_cluster_frac, 0.0, "{r:?}");
+    }
+
+    #[test]
+    fn scratch_coarsen_matches_fresh_across_algos_and_shapes() {
+        // ONE reused workspace driven through growing and shrinking token
+        // sets and every algorithm must reproduce the allocating wrapper
+        // (which runs the same code against fresh buffers) exactly
+        let mut scratch = CoarsenScratch::new();
+        let mut p = Partition::identity(0);
+        let specs = [
+            ClusterSpec { sizes: vec![16, 8, 6, 2], h: 16, noise: 0.1,
+                          seed: 5, layout: Layout::Interleaved },
+            ClusterSpec { sizes: vec![8, 4], h: 8, noise: 0.05,
+                          seed: 1, layout: Layout::Contiguous },
+            ClusterSpec { sizes: vec![12, 10, 6], h: 12, noise: 0.2,
+                          seed: 3, layout: Layout::Shuffled },
+        ];
+        for (si, spec) in specs.iter().enumerate() {
+            let (kf, _) = clustered_tokens(spec);
+            for algo in [CoarsenAlgo::PiToMe, CoarsenAlgo::ToMe,
+                         CoarsenAlgo::Random] {
+                iterative_coarsen_scratch(&kf, algo, 3, 2, 0.5, 9,
+                                          &mut scratch, &mut p);
+                let want = iterative_coarsen(&kf, algo, 3, 2, 0.5, 9);
+                assert_eq!(p.assign, want.assign, "spec {si} {algo:?}");
+                assert_eq!(p.n_groups, want.n_groups, "spec {si} {algo:?}");
+            }
+        }
     }
 
     #[test]

@@ -5,7 +5,7 @@ use std::cell::RefCell;
 use std::collections::HashMap;
 use std::rc::Rc;
 
-use crate::tensor::{matmul, Mat};
+use crate::tensor::Mat;
 
 thread_local! {
     /// Per-thread DCT basis cache keyed by n.  The encoder calls
@@ -43,24 +43,79 @@ pub fn dct_matrix_cached(n: usize) -> Rc<Mat> {
 }
 
 /// DCT merge: keep the low-frequency band of the non-protected tokens and
-/// resynthesize `n - protect_first - k` tokens on the coarse grid.
+/// resynthesize `n - protect_first - k` tokens on the coarse grid
+/// (allocating wrapper over [`dct_merge_into`]).
 /// Sizes reset to 1 (no tracking, as in the paper's DCT baseline).
-pub fn dct_merge(x: &Mat, _sizes: &[f32], k: usize, protect_first: usize)
+pub fn dct_merge(x: &Mat, sizes: &[f32], k: usize, protect_first: usize)
     -> (Mat, Vec<f32>) {
+    let mut body = Mat::zeros(0, 0);
+    let mut freq = Mat::zeros(0, 0);
+    let mut out = Mat::zeros(0, 0);
+    let mut out_sizes = Vec::new();
+    dct_merge_into(x, sizes, k, protect_first, &mut body, &mut freq,
+                   &mut out, &mut out_sizes);
+    (out, out_sizes)
+}
+
+/// DCT merge into reusable buffers — allocation-free once `body`/`freq`/
+/// `out` have seen their largest shapes and the thread-local basis cache
+/// holds this `n` (the scratch-workspace form [`crate::merge::
+/// merge_step_scratch`] runs on).
+///
+/// Numerics are identical to the historical allocating path: the
+/// truncated analysis (`D[:keep] @ body`) and the resynthesis
+/// (`D[:keep,:keep]^T @ freq`) use the same ikj, zero-skipping
+/// accumulation order as `matmul_into`.
+#[allow(clippy::too_many_arguments)]
+pub fn dct_merge_into(x: &Mat, _sizes: &[f32], k: usize, protect_first: usize,
+                      body: &mut Mat, freq: &mut Mat,
+                      out: &mut Mat, out_sizes: &mut Vec<f32>) {
     let nb = x.rows - protect_first;
     let keep = nb - k;
     let d = dct_matrix_cached(nb);
     // body = x[protect_first..]
-    let body = Mat::from_fn(nb, x.cols, |i, j| x.get(protect_first + i, j));
-    let freq = matmul(&d, &body);
-    // trunc = freq[:keep]; out = D[:keep,:keep]^T @ trunc
-    let trunc = Mat::from_fn(keep, x.cols, |i, j| freq.get(i, j));
-    let dk = Mat::from_fn(keep, keep, |i, j| d.get(i, j));
-    let body_out = matmul(&dk.transpose(), &trunc);
-    let head = Mat::from_fn(protect_first, x.cols, |i, j| x.get(i, j));
-    let out = head.vcat(&body_out);
-    let sizes = vec![1.0; out.rows];
-    (out, sizes)
+    body.reshape(nb, x.cols);
+    for i in 0..nb {
+        body.row_mut(i).copy_from_slice(x.row(protect_first + i));
+    }
+    // freq = D[:keep] @ body — only the kept low-frequency band is ever
+    // read back, so the high-frequency rows are not computed at all
+    freq.reset(keep, x.cols);
+    for i in 0..keep {
+        let arow = d.row(i);
+        let crow = freq.row_mut(i);
+        for (kk, &av) in arow.iter().enumerate() {
+            if av == 0.0 {
+                continue;
+            }
+            let brow = body.row(kk);
+            for (cj, &bv) in crow.iter_mut().zip(brow) {
+                *cj += av * bv;
+            }
+        }
+    }
+    // out = [x[..protect_first] ; D[:keep,:keep]^T @ freq]
+    let n_out = protect_first + keep;
+    out.reshape(n_out, x.cols);
+    for i in 0..protect_first {
+        out.row_mut(i).copy_from_slice(x.row(i));
+    }
+    for i in 0..keep {
+        let orow = out.row_mut(protect_first + i);
+        orow.fill(0.0);
+        for kk in 0..keep {
+            let av = d.get(kk, i);
+            if av == 0.0 {
+                continue;
+            }
+            let brow = freq.row(kk);
+            for (oj, &bv) in orow.iter_mut().zip(brow) {
+                *oj += av * bv;
+            }
+        }
+    }
+    out_sizes.clear();
+    out_sizes.resize(n_out, 1.0);
 }
 
 #[cfg(test)]
@@ -110,6 +165,25 @@ mod tests {
             // second lookup returns the same shared allocation
             let again = dct_matrix_cached(n);
             assert!(Rc::ptr_eq(&cached, &again), "n={n} rebuilt the basis");
+        }
+    }
+
+    #[test]
+    fn dct_merge_into_reuses_dirty_buffers_and_matches() {
+        let mut rng = Rng::new(3);
+        // dirty, wrongly-shaped buffers reused across shrinking and growing
+        // shapes: the into-path must still match the wrapper bitwise
+        let mut body = Mat::from_fn(5, 5, |_, _| 9.0);
+        let mut freq = Mat::from_fn(2, 2, |_, _| 9.0);
+        let mut out = Mat::from_fn(1, 1, |_, _| 9.0);
+        let mut sizes = vec![5.0; 3];
+        for (n, k) in [(17usize, 5usize), (9, 2), (17, 8)] {
+            let x = Mat::from_fn(n, 4, |_, _| (rng.next_f64() * 2.0 - 1.0) as f32);
+            let (want, want_sizes) = dct_merge(&x, &vec![1.0; n], k, 1);
+            dct_merge_into(&x, &vec![1.0; n], k, 1, &mut body, &mut freq,
+                           &mut out, &mut sizes);
+            assert!(out.max_abs_diff(&want) == 0.0, "n={n} k={k}");
+            assert_eq!(sizes, want_sizes, "n={n} k={k}");
         }
     }
 

@@ -5,8 +5,8 @@
 //! (DESIGN.md §6); what remains is its ranking signal: merge the k least
 //! CLS-attended tokens into their most similar kept token.
 
-use super::plan::MergePlan;
-use crate::tensor::{argsort_asc, CosineGram, Mat};
+use super::plan::{MergePlan, PlanScratch};
+use crate::tensor::{argsort_asc_into, CosineGram, Mat};
 
 /// Build the attention-ranked plan from key features (convenience wrapper:
 /// builds its own [`CosineGram`]; the merge hot path shares one via
@@ -16,28 +16,44 @@ pub fn diffrate_plan(kf: &Mat, attn_cls: &[f32], k: usize,
     diffrate_plan_gram(&CosineGram::build(kf), attn_cls, k, protect_first)
 }
 
-/// Build the attention-ranked plan from a precomputed shared Gram.
+/// Build the attention-ranked plan from a precomputed shared Gram
+/// (allocating wrapper over [`diffrate_plan_gram_into`]).
 pub fn diffrate_plan_gram(g: &CosineGram, attn_cls: &[f32], k: usize,
                           protect_first: usize) -> MergePlan {
+    let mut scratch = PlanScratch::new();
+    let mut plan = MergePlan::empty();
+    diffrate_plan_gram_into(g, attn_cls, k, protect_first, &mut scratch,
+                            &mut plan);
+    plan
+}
+
+/// Build the attention-ranked plan from a precomputed shared Gram into a
+/// reusable [`MergePlan`] + [`PlanScratch`] (allocation-free once warm;
+/// see the in-place lifecycle in [`super::plan`]).
+pub fn diffrate_plan_gram_into(g: &CosineGram, attn_cls: &[f32], k: usize,
+                               protect_first: usize, s: &mut PlanScratch,
+                               out: &mut MergePlan) {
     let n = g.n();
     assert_eq!(attn_cls.len(), n);
-    let mut score = attn_cls.to_vec();
-    for it in score.iter_mut().take(protect_first) {
+    out.clear();
+    s.scores_tmp.clear();
+    s.scores_tmp.extend_from_slice(attn_cls);
+    for it in s.scores_tmp.iter_mut().take(protect_first) {
         *it = f32::INFINITY; // CLS never merged away
     }
-    let order = argsort_asc(&score);
-    let a: Vec<usize> = order[..k].to_vec();
-    let mut b: Vec<usize> = order[k..].to_vec();
-    b.sort_unstable();
+    argsort_asc_into(&s.scores_tmp, &mut s.order);
+    out.a.extend_from_slice(&s.order[..k]);
+    out.b.extend_from_slice(&s.order[k..]);
+    out.b.sort_unstable();
 
-    let mut dst = vec![0usize; k];
-    for (ai, &aidx) in a.iter().enumerate() {
+    out.dst.resize(k, 0);
+    for (ai, &aidx) in out.a.iter().enumerate() {
         // CLS (indices below protect_first) cannot receive merges
-        if let Some((bi, _)) = g.best_match(aidx, &b, protect_first) {
-            dst[ai] = bi;
+        if let Some((bi, _)) = g.best_match(aidx, &out.b, protect_first) {
+            out.dst[ai] = bi;
         }
     }
-    MergePlan { protect: vec![], a, b, dst, gate: vec![1.0; k] }
+    out.gate.resize(k, 1.0);
 }
 
 #[cfg(test)]

@@ -34,15 +34,26 @@ pub fn energy_scores(kf: &Mat, margin: f32) -> Vec<f32> {
     energy_from_gram(&CosineGram::build(kf), margin)
 }
 
-/// Energy scores from a precomputed shared Gram (the single-pass pipeline).
+/// Energy scores from a precomputed shared Gram (allocating wrapper over
+/// [`energy_from_gram_into`]).
+pub fn energy_from_gram(g: &CosineGram, margin: f32) -> Vec<f32> {
+    let mut e = Vec::new();
+    energy_from_gram_into(g, margin, &mut e);
+    e
+}
+
+/// Energy scores from a precomputed shared Gram into a reusable buffer
+/// (the single-pass pipeline; allocation-free once `e` has seen its
+/// largest length).
 ///
 /// O(n^2) over the symmetric Gram: each pair's margin-clamped similarity is
 /// read once and credited to both endpoints, mirroring the two-sided
 /// traversal the original O(n^2 h) implementation used — so results match
 /// the old two-pass path to float tolerance.
-pub fn energy_from_gram(g: &CosineGram, margin: f32) -> Vec<f32> {
+pub fn energy_from_gram_into(g: &CosineGram, margin: f32, e: &mut Vec<f32>) {
     let n = g.n();
-    let mut e = vec![0f32; n];
+    e.clear();
+    e.resize(n, 0f32);
     for i in 0..n {
         let row = g.w.row(i);
         for j in (i + 1)..n {
@@ -55,7 +66,6 @@ pub fn energy_from_gram(g: &CosineGram, margin: f32) -> Vec<f32> {
     for v in e.iter_mut() {
         *v *= inv;
     }
-    e
 }
 
 /// Energy scores given a precomputed cosine matrix (used when the caller

@@ -25,8 +25,13 @@
 //!
 //! [`merge_step_scratch`] is the allocation-free form the encoder's
 //! scratch workspace (`model::encoder::EncoderScratch`) runs on: the
-//! shared Gram is rebuilt in place and the plan applied via
-//! [`apply_plan_into`], with the same one-Gram-per-step invariant.
+//! shared Gram is rebuilt in place, the plan is rebuilt into a reusable
+//! [`MergePlan`] by the `*_plan_gram_into` builders (intermediate
+//! orderings live in a [`PlanScratch`]; see the in-place lifecycle in
+//! [`plan`]), and the plan is applied via [`apply_plan_into`] — all with
+//! the same one-Gram-per-step invariant and **zero** steady-state heap
+//! allocations across every mode, DCT and random pruning included
+//! (asserted by `tests/alloc_free.rs`).
 //!
 //! # Batched merging
 //!
@@ -49,8 +54,8 @@ pub mod tome;
 pub mod unmerge;
 
 pub use batch::{merge_step_batch, BatchSeq};
-pub use energy::{energy_from_gram, energy_scores};
-pub use plan::{apply_plan, apply_plan_into, MergePlan};
+pub use energy::{energy_from_gram, energy_from_gram_into, energy_scores};
+pub use plan::{apply_plan, apply_plan_into, MergePlan, PlanScratch};
 pub use schedule::{fixed_k_plan, merge_plan, tokens_after_merge};
 pub use unmerge::{unmerge, MergeTracker};
 
@@ -177,39 +182,60 @@ pub fn merge_step(mode: MergeMode, ctx: &MergeCtx, rng: &mut Rng) -> (Mat, Vec<f
 }
 
 /// Build the merge plan for a similarity-driven mode from the shared Gram
-/// (the single place the per-mode plan builders are dispatched, so the
-/// allocating and scratch-backed paths cannot drift apart).
+/// (allocating wrapper over [`plan_with_gram_into`]).
 fn plan_with_gram(mode: MergeMode, ctx: &MergeCtx, g: &CosineGram,
                   rng: &mut Rng) -> MergePlan {
+    let mut energy = Vec::new();
+    let mut bufs = PlanScratch::new();
+    let mut plan = MergePlan::empty();
+    plan_with_gram_into(mode, ctx, g, rng, &mut energy, &mut bufs, &mut plan);
+    plan
+}
+
+/// Build the merge plan for a similarity-driven mode from the shared Gram
+/// into reusable buffers (the single place the per-mode plan builders are
+/// dispatched, so the allocating and scratch-backed paths cannot drift
+/// apart).  `energy` holds the ranking signal (energy scores or negated
+/// CLS attention); all paths are allocation-free once the buffers are
+/// warm.
+fn plan_with_gram_into(mode: MergeMode, ctx: &MergeCtx, g: &CosineGram,
+                       rng: &mut Rng, energy: &mut Vec<f32>,
+                       bufs: &mut PlanScratch, out: &mut MergePlan) {
     match mode {
         MergeMode::None | MergeMode::Dct | MergeMode::Random => {
             unreachable!("{mode:?} is not similarity-driven")
         }
         MergeMode::PiToMe => {
-            let e = energy_from_gram(g, ctx.margin);
-            pitome::ordered_bsm_plan_gram(
-                g, &e, ctx.k, ctx.protect_first, pitome::Split::Alternate, true, rng)
+            energy_from_gram_into(g, ctx.margin, energy);
+            pitome::ordered_bsm_plan_gram_into(
+                g, energy, ctx.k, ctx.protect_first, pitome::Split::Alternate,
+                true, rng, bufs, out)
         }
         MergeMode::PiToMeNoProtect => {
-            let e = energy_from_gram(g, ctx.margin);
-            pitome::ordered_bsm_plan_gram(
-                g, &e, ctx.k, ctx.protect_first, pitome::Split::Alternate, false, rng)
+            energy_from_gram_into(g, ctx.margin, energy);
+            pitome::ordered_bsm_plan_gram_into(
+                g, energy, ctx.k, ctx.protect_first, pitome::Split::Alternate,
+                false, rng, bufs, out)
         }
         MergeMode::PiToMeRandomSplit => {
-            let e = energy_from_gram(g, ctx.margin);
-            pitome::ordered_bsm_plan_gram(
-                g, &e, ctx.k, ctx.protect_first, pitome::Split::Random, true, rng)
+            energy_from_gram_into(g, ctx.margin, energy);
+            pitome::ordered_bsm_plan_gram_into(
+                g, energy, ctx.k, ctx.protect_first, pitome::Split::Random,
+                true, rng, bufs, out)
         }
         MergeMode::PiToMeAttn => {
-            let neg: Vec<f32> = ctx.attn_cls.iter().map(|v| -v).collect();
-            pitome::ordered_bsm_plan_gram(
-                g, &neg, ctx.k, ctx.protect_first, pitome::Split::Alternate, true, rng)
+            energy.clear();
+            energy.extend(ctx.attn_cls.iter().map(|v| -v));
+            pitome::ordered_bsm_plan_gram_into(
+                g, energy, ctx.k, ctx.protect_first, pitome::Split::Alternate,
+                true, rng, bufs, out)
         }
-        MergeMode::ToMe => tome::tome_plan_gram(g, ctx.k, ctx.protect_first, None),
-        MergeMode::ToFu => tome::tome_plan_gram(
-            g, ctx.k, ctx.protect_first, Some(ctx.tofu_threshold)),
-        MergeMode::DiffRate => diffrate::diffrate_plan_gram(
-            g, ctx.attn_cls, ctx.k, ctx.protect_first),
+        MergeMode::ToMe => tome::tome_plan_gram_into(
+            g, ctx.k, ctx.protect_first, None, bufs, out),
+        MergeMode::ToFu => tome::tome_plan_gram_into(
+            g, ctx.k, ctx.protect_first, Some(ctx.tofu_threshold), bufs, out),
+        MergeMode::DiffRate => diffrate::diffrate_plan_gram_into(
+            g, ctx.attn_cls, ctx.k, ctx.protect_first, bufs, out),
     }
 }
 
@@ -234,16 +260,29 @@ pub fn merge_step_with_gram(mode: MergeMode, ctx: &MergeCtx, g: &CosineGram,
 }
 
 /// Reusable buffers for [`merge_step_scratch`]: the shared Gram, its
-/// normalized-feature scratch, and the merged-token outputs.  Owned by an
+/// normalized-feature scratch, the ranking-signal and plan-builder
+/// buffers, the in-place [`MergePlan`], the DCT baseline's scratch, and
+/// the merged-token outputs.  Owned by an
 /// [`EncoderScratch`](crate::model::EncoderScratch) (one per worker
 /// thread); callers `mem::swap` the outputs with their live token state
-/// after each step, so the buffers ping-pong and are never reallocated at
-/// steady state.
+/// after each step, so the buffers ping-pong and a warmed scratch makes
+/// the whole merge step — scoring, plan construction, and application —
+/// perform **zero** heap allocations (asserted by `tests/alloc_free.rs`).
 pub struct MergeScratch {
     /// the per-step shared Gram, rebuilt in place
     gram: CosineGram,
     /// normalized-feature scratch for the Gram rebuild
     kn: Mat,
+    /// ranking signal (energy scores / negated CLS attention)
+    energy: Vec<f32>,
+    /// plan-builder index and score buffers
+    plan_bufs: PlanScratch,
+    /// the in-place merge plan, rebuilt every step
+    plan: MergePlan,
+    /// DCT baseline: de-protected token block
+    dct_body: Mat,
+    /// DCT baseline: kept low-frequency band
+    dct_freq: Mat,
     /// merged tokens (valid after a [`merge_step_scratch`] call)
     pub out_x: Mat,
     /// merged sizes (valid after a [`merge_step_scratch`] call)
@@ -256,6 +295,11 @@ impl MergeScratch {
         MergeScratch {
             gram: CosineGram::empty(),
             kn: Mat::zeros(0, 0),
+            energy: Vec::new(),
+            plan_bufs: PlanScratch::new(),
+            plan: MergePlan::empty(),
+            dct_body: Mat::zeros(0, 0),
+            dct_freq: Mat::zeros(0, 0),
             out_x: Mat::zeros(0, 0),
             out_sizes: Vec::new(),
         }
@@ -273,10 +317,11 @@ impl Default for MergeScratch {
 ///
 /// Numerics are identical to [`merge_step`] (both dispatch the same plan
 /// builders and the same apply kernel).  Similarity-driven modes rebuild
-/// `s.gram` in place (still exactly one Gram per step) and apply the plan
-/// via [`apply_plan_into`]; DCT falls back to its allocating path (its
-/// output shape is resynthesized, not selected); `k == 0` / `None` copies
-/// the input through.
+/// `s.gram` in place (still exactly one Gram per step), build the plan
+/// into `s.plan` via the `*_plan_gram_into` builders, and apply it via
+/// [`apply_plan_into`]; DCT resynthesizes through its own scratch tiles;
+/// `k == 0` / `None` copies the input through.  Every path performs zero
+/// heap allocations once the scratch is warm.
 pub fn merge_step_scratch(mode: MergeMode, ctx: &MergeCtx, rng: &mut Rng,
                           s: &mut MergeScratch) {
     if ctx.k == 0 || mode == MergeMode::None {
@@ -288,18 +333,22 @@ pub fn merge_step_scratch(mode: MergeMode, ctx: &MergeCtx, rng: &mut Rng,
     match mode {
         MergeMode::None => unreachable!(),
         MergeMode::Dct => {
-            let (x, sizes) = dct::dct_merge(ctx.x, ctx.sizes, ctx.k, ctx.protect_first);
-            s.out_x = x;
-            s.out_sizes = sizes;
+            dct::dct_merge_into(ctx.x, ctx.sizes, ctx.k, ctx.protect_first,
+                                &mut s.dct_body, &mut s.dct_freq,
+                                &mut s.out_x, &mut s.out_sizes);
         }
         MergeMode::Random => {
-            let plan = random::random_plan(ctx.x.rows, ctx.k, ctx.protect_first, rng);
-            apply_plan_into(ctx.x, ctx.sizes, &plan, &mut s.out_x, &mut s.out_sizes);
+            random::random_plan_into(ctx.x.rows, ctx.k, ctx.protect_first,
+                                     rng, &mut s.plan_bufs, &mut s.plan);
+            apply_plan_into(ctx.x, ctx.sizes, &s.plan, &mut s.out_x,
+                            &mut s.out_sizes);
         }
         _ => {
             s.gram.rebuild(ctx.kf, &mut s.kn);
-            let plan = plan_with_gram(mode, ctx, &s.gram, rng);
-            apply_plan_into(ctx.x, ctx.sizes, &plan, &mut s.out_x, &mut s.out_sizes);
+            plan_with_gram_into(mode, ctx, &s.gram, rng, &mut s.energy,
+                                &mut s.plan_bufs, &mut s.plan);
+            apply_plan_into(ctx.x, ctx.sizes, &s.plan, &mut s.out_x,
+                            &mut s.out_sizes);
         }
     }
 }

@@ -1,8 +1,8 @@
 //! PiToMe: energy-ordered bipartite soft matching with protection (Alg. 1).
 
-use super::plan::MergePlan;
+use super::plan::{MergePlan, PlanScratch};
 use crate::data::Rng;
-use crate::tensor::{argsort_desc, CosineGram, Mat};
+use crate::tensor::{argsort_desc_into, CosineGram, Mat};
 
 /// How merge candidates are split into sets A and B.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -30,7 +30,28 @@ pub fn ordered_bsm_plan(
                           split, protect, rng)
 }
 
-/// Build the PiToMe plan from a precomputed shared Gram.
+/// Build the PiToMe plan from a precomputed shared Gram (allocating
+/// wrapper over [`ordered_bsm_plan_gram_into`]).
+pub fn ordered_bsm_plan_gram(
+    g: &CosineGram,
+    scores: &[f32],
+    k: usize,
+    protect_first: usize,
+    split: Split,
+    protect: bool,
+    rng: &mut Rng,
+) -> MergePlan {
+    let mut scratch = PlanScratch::new();
+    let mut plan = MergePlan::empty();
+    ordered_bsm_plan_gram_into(g, scores, k, protect_first, split, protect,
+                               rng, &mut scratch, &mut plan);
+    plan
+}
+
+/// Build the PiToMe plan from a precomputed shared Gram into a reusable
+/// [`MergePlan`] + [`PlanScratch`] — allocation-free once both have seen
+/// their largest shape (the steady-state form the merge hot path runs
+/// on; see the in-place lifecycle in [`super::plan`]).
 ///
 /// * `scores` — ranking signal, higher = more mergeable (energy, or
 ///   `-attn_cls` for the attention-indicator ablation).
@@ -41,7 +62,8 @@ pub fn ordered_bsm_plan(
 /// > n` the candidate slice would otherwise reach into the protected
 /// prefix (whose scores are sunk to `NEG_INFINITY`) and merge protected
 /// tokens — or panic outright when `2k > n`.
-pub fn ordered_bsm_plan_gram(
+#[allow(clippy::too_many_arguments)]
+pub fn ordered_bsm_plan_gram_into(
     g: &CosineGram,
     scores: &[f32],
     k: usize,
@@ -49,62 +71,65 @@ pub fn ordered_bsm_plan_gram(
     split: Split,
     protect: bool,
     rng: &mut Rng,
-) -> MergePlan {
+    s: &mut PlanScratch,
+    out: &mut MergePlan,
+) {
     let n = g.n();
     assert_eq!(scores.len(), n);
     let k = k.min(n.saturating_sub(protect_first) / 2);
+    out.clear();
     // sink protected prefix below every candidate
-    let mut s_cand = scores.to_vec();
-    for it in s_cand.iter_mut().take(protect_first) {
+    s.scores_tmp.clear();
+    s.scores_tmp.extend_from_slice(scores);
+    for it in s.scores_tmp.iter_mut().take(protect_first) {
         *it = f32::NEG_INFINITY;
     }
-    let order = argsort_desc(&s_cand);
+    argsort_desc_into(&s.scores_tmp, &mut s.order);
 
     let n_pairs = if protect { k } else { (n - protect_first) / 2 };
-    let mut merge_idx: Vec<usize> = order[..2 * n_pairs].to_vec();
-    let rest: Vec<usize> = order[2 * n_pairs..].to_vec();
+    s.merge_idx.clear();
+    s.merge_idx.extend_from_slice(&s.order[..2 * n_pairs]);
+    // the rest of the energy order is protected output
+    out.protect.extend_from_slice(&s.order[2 * n_pairs..]);
     if split == Split::Random {
         // Fisher-Yates on the candidate list
-        for i in (1..merge_idx.len()).rev() {
+        for i in (1..s.merge_idx.len()).rev() {
             let j = rng.next_below((i + 1) as u64) as usize;
-            merge_idx.swap(i, j);
+            s.merge_idx.swap(i, j);
         }
     }
-    let a_all: Vec<usize> = merge_idx.iter().step_by(2).copied().collect();
-    let b: Vec<usize> = merge_idx.iter().skip(1).step_by(2).copied().collect();
+    s.a_all.clear();
+    s.a_all.extend(s.merge_idx.iter().step_by(2).copied());
+    out.b.extend(s.merge_idx.iter().skip(1).step_by(2).copied());
 
     // pair similarity: O(1) lookups into the shared Gram
-    let mut best = vec![f32::NEG_INFINITY; a_all.len()];
-    let mut dst_all = vec![0usize; a_all.len()];
-    for (ai, &aidx) in a_all.iter().enumerate() {
-        if let Some((bi, d)) = g.best_match(aidx, &b, 0) {
-            best[ai] = d;
-            dst_all[ai] = bi;
+    s.best.clear();
+    s.best.resize(s.a_all.len(), f32::NEG_INFINITY);
+    s.dst_all.clear();
+    s.dst_all.resize(s.a_all.len(), 0);
+    for (ai, &aidx) in s.a_all.iter().enumerate() {
+        if let Some((bi, d)) = g.best_match(aidx, &out.b, 0) {
+            s.best[ai] = d;
+            s.dst_all[ai] = bi;
         }
     }
 
-    let mut protect_idx: Vec<usize>;
-    let (a, dst) = if n_pairs == k {
-        protect_idx = rest;
-        (a_all, dst_all)
+    if n_pairs == k {
+        out.a.extend_from_slice(&s.a_all);
+        out.dst.extend_from_slice(&s.dst_all);
     } else {
         // keep only the k most-similar pairs; surviving A tokens protected
-        let pair_rank = argsort_desc(&best);
-        let mut a_merge = Vec::with_capacity(k);
-        let mut dst = Vec::with_capacity(k);
-        for &p in pair_rank.iter().take(k) {
-            a_merge.push(a_all[p]);
-            dst.push(dst_all[p]);
+        argsort_desc_into(&s.best, &mut s.pair_rank);
+        for &p in s.pair_rank.iter().take(k) {
+            out.a.push(s.a_all[p]);
+            out.dst.push(s.dst_all[p]);
         }
-        protect_idx = rest;
-        for &p in pair_rank.iter().skip(k) {
-            protect_idx.push(a_all[p]);
+        for &p in s.pair_rank.iter().skip(k) {
+            out.protect.push(s.a_all[p]);
         }
-        (a_merge, dst)
-    };
-    protect_idx.sort_unstable();
-    let gate = vec![1.0; a.len()];
-    MergePlan { protect: protect_idx, a, b, dst, gate }
+    }
+    out.protect.sort_unstable();
+    out.gate.resize(out.a.len(), 1.0);
 }
 
 #[cfg(test)]

@@ -4,6 +4,28 @@
 //! `[protected tokens..., B tokens...]`; every A token merges into
 //! `b[dst[a]]` with weight `sizes[a]` when `gate[a] == 1`, and is dropped
 //! (pruned) when `gate[a] == 0`.
+//!
+//! # The in-place plan lifecycle
+//!
+//! A [`MergePlan`] is five index/gate vectors; at serving steady state it
+//! is **rebuilt in place** every merge step rather than reallocated:
+//!
+//! 1. The builder ([`crate::merge::pitome::ordered_bsm_plan_gram_into`]
+//!    and friends) starts with [`MergePlan::clear`], which empties all
+//!    five vectors but keeps their capacity.
+//! 2. It fills them back up through `extend`/`push`/`resize`, using a
+//!    [`PlanScratch`] for its intermediate orderings — once both have seen
+//!    their largest shape, a rebuild performs zero heap allocations
+//!    (asserted by `tests/alloc_free.rs`).
+//! 3. [`apply_plan_into`] consumes the plan against reusable output
+//!    buffers; the caller `mem::swap`s those with its live token state
+//!    (see [`MergeScratch`](crate::merge::MergeScratch)).
+//!
+//! The allocating builders ([`apply_plan`], `ordered_bsm_plan_gram`, ...)
+//! survive as thin wrappers that run the same in-place code against fresh
+//! buffers, so one-shot callers and tests are unchanged.  `validate` is
+//! deliberately allocation-free on its success path: it runs inside
+//! `debug_assert!`s on the zero-allocation hot path.
 
 use crate::tensor::Mat;
 
@@ -23,22 +45,50 @@ pub struct MergePlan {
 }
 
 impl MergePlan {
+    /// An empty plan to rebuild into (the start of the in-place
+    /// lifecycle; see the module docs).
+    pub fn empty() -> MergePlan {
+        MergePlan {
+            protect: Vec::new(),
+            a: Vec::new(),
+            b: Vec::new(),
+            dst: Vec::new(),
+            gate: Vec::new(),
+        }
+    }
+
+    /// Reset to the empty plan without releasing buffer capacity — the
+    /// first step of every `*_plan_gram_into` builder.
+    pub fn clear(&mut self) {
+        self.protect.clear();
+        self.a.clear();
+        self.b.clear();
+        self.dst.clear();
+        self.gate.clear();
+    }
+
     /// Output token count.
     pub fn n_out(&self) -> usize {
         self.protect.len() + self.b.len()
     }
 
     /// Sanity-check invariants (used by tests and debug assertions).
+    ///
+    /// Allocation-free on the success path (it runs inside the
+    /// `debug_assert!` of [`apply_plan_into`], which the zero-allocation
+    /// tests measure in debug builds): duplicate detection is an O(m²)
+    /// scan over the chained index lists instead of a seen-bitmap — m is
+    /// a few hundred at most, and the scan only exists off the release
+    /// hot path.
     pub fn validate(&self, n: usize) -> Result<(), String> {
-        let mut seen = vec![false; n];
-        for &i in self.protect.iter().chain(&self.a).chain(&self.b) {
+        let all = || self.protect.iter().chain(&self.a).chain(&self.b);
+        for (pos, &i) in all().enumerate() {
             if i >= n {
                 return Err(format!("index {i} out of range {n}"));
             }
-            if seen[i] {
+            if all().take(pos).any(|&j| j == i) {
                 return Err(format!("index {i} appears twice in plan"));
             }
-            seen[i] = true;
         }
         if self.a.len() != self.dst.len() || self.a.len() != self.gate.len() {
             return Err("a/dst/gate length mismatch".into());
@@ -55,6 +105,51 @@ impl MergePlan {
             }
         }
         Ok(())
+    }
+}
+
+/// Reusable intermediate buffers for the allocation-free plan builders
+/// (`*_plan_gram_into`): the mutable ranking-signal copy, argsort
+/// orderings, the pre-filter A-side candidate list, and per-pair
+/// best-match scores.  One instance lives inside every
+/// [`MergeScratch`](crate::merge::MergeScratch); buffers grow to the
+/// largest shape they see and are then reused without allocating.
+pub struct PlanScratch {
+    /// mutable copy of the ranking signal (protected prefix sunk/raised)
+    pub(crate) scores_tmp: Vec<f32>,
+    /// argsort output over `scores_tmp`
+    pub(crate) order: Vec<usize>,
+    /// candidate indices entering the matching (PiToMe's shuffled
+    /// candidate list / the random baseline's permutation)
+    pub(crate) merge_idx: Vec<usize>,
+    /// A-side candidate tokens before the top-k pair filter
+    pub(crate) a_all: Vec<usize>,
+    /// best-match similarity per A candidate
+    pub(crate) best: Vec<f32>,
+    /// best-match B position per A candidate
+    pub(crate) dst_all: Vec<usize>,
+    /// argsort output over `best` (pair ranking)
+    pub(crate) pair_rank: Vec<usize>,
+}
+
+impl PlanScratch {
+    /// Empty scratch; buffers grow on first use and are then reused.
+    pub fn new() -> PlanScratch {
+        PlanScratch {
+            scores_tmp: Vec::new(),
+            order: Vec::new(),
+            merge_idx: Vec::new(),
+            a_all: Vec::new(),
+            best: Vec::new(),
+            dst_all: Vec::new(),
+            pair_rank: Vec::new(),
+        }
+    }
+}
+
+impl Default for PlanScratch {
+    fn default() -> Self {
+        PlanScratch::new()
     }
 }
 
@@ -211,6 +306,25 @@ mod tests {
         apply_plan_into(&x, &sizes, &plan, &mut out, &mut out_sizes);
         assert_eq!(out, want);
         assert_eq!(out_sizes, want_sizes);
+    }
+
+    #[test]
+    fn clear_empties_without_releasing_capacity() {
+        let mut plan = MergePlan {
+            protect: vec![0, 1],
+            a: vec![2],
+            b: vec![3],
+            dst: vec![0],
+            gate: vec![1.0],
+        };
+        plan.validate(4).unwrap();
+        let cap = plan.protect.capacity();
+        plan.clear();
+        assert_eq!(plan.n_out(), 0);
+        assert!(plan.a.is_empty() && plan.b.is_empty() && plan.dst.is_empty());
+        assert!(plan.protect.capacity() >= cap, "clear must keep capacity");
+        plan.validate(0).unwrap();
+        assert_eq!(MergePlan::empty().n_out(), 0);
     }
 
     #[test]

@@ -1,22 +1,38 @@
 //! Random pruning baseline.
 
-use super::plan::MergePlan;
+use super::plan::{MergePlan, PlanScratch};
 use crate::data::Rng;
 
-/// Drop k random non-protected tokens (gate 0 on an empty B = pure prune).
+/// Drop k random non-protected tokens (allocating wrapper over
+/// [`random_plan_into`]).
 pub fn random_plan(n: usize, k: usize, protect_first: usize, rng: &mut Rng)
     -> MergePlan {
+    let mut scratch = PlanScratch::new();
+    let mut plan = MergePlan::empty();
+    random_plan_into(n, k, protect_first, rng, &mut scratch, &mut plan);
+    plan
+}
+
+/// Drop k random non-protected tokens into a reusable [`MergePlan`] +
+/// [`PlanScratch`] — gate 0 on an empty B = pure prune; allocation-free
+/// once warm (see the in-place lifecycle in [`super::plan`]).
+pub fn random_plan_into(n: usize, k: usize, protect_first: usize,
+                        rng: &mut Rng, s: &mut PlanScratch,
+                        out: &mut MergePlan) {
+    out.clear();
     // Fisher-Yates permutation of the candidate indices
-    let mut perm: Vec<usize> = (protect_first..n).collect();
-    for i in (1..perm.len()).rev() {
+    s.merge_idx.clear();
+    s.merge_idx.extend(protect_first..n);
+    for i in (1..s.merge_idx.len()).rev() {
         let j = rng.next_below((i + 1) as u64) as usize;
-        perm.swap(i, j);
+        s.merge_idx.swap(i, j);
     }
-    let a: Vec<usize> = perm[..k].to_vec();
-    let mut protect: Vec<usize> = (0..protect_first).collect();
-    protect.extend_from_slice(&perm[k..]);
-    protect.sort_unstable();
-    MergePlan { protect, a, b: vec![], dst: vec![0; k], gate: vec![0.0; k] }
+    out.a.extend_from_slice(&s.merge_idx[..k]);
+    out.protect.extend(0..protect_first);
+    out.protect.extend_from_slice(&s.merge_idx[k..]);
+    out.protect.sort_unstable();
+    out.dst.resize(k, 0);
+    out.gate.resize(k, 0.0);
 }
 
 #[cfg(test)]

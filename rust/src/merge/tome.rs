@@ -1,7 +1,7 @@
 //! ToMe parity-split BSM (Bolya et al. 2023) and ToFu (prune threshold).
 
-use super::plan::MergePlan;
-use crate::tensor::{argsort_desc, CosineGram, Mat};
+use super::plan::{MergePlan, PlanScratch};
+use crate::tensor::{argsort_desc_into, CosineGram, Mat};
 
 /// ToMe plan from key features (convenience wrapper: builds its own
 /// [`CosineGram`]; the merge hot path shares one via [`tome_plan_gram`]).
@@ -10,44 +10,58 @@ pub fn tome_plan(kf: &Mat, k: usize, protect_first: usize,
     tome_plan_gram(&CosineGram::build(kf), k, protect_first, prune_threshold)
 }
 
-/// ToMe plan from a precomputed shared Gram: candidates split by index
+/// ToMe plan from a precomputed shared Gram (allocating wrapper over
+/// [`tome_plan_gram_into`]).
+pub fn tome_plan_gram(g: &CosineGram, k: usize, protect_first: usize,
+                      prune_threshold: Option<f32>) -> MergePlan {
+    let mut scratch = PlanScratch::new();
+    let mut plan = MergePlan::empty();
+    tome_plan_gram_into(g, k, protect_first, prune_threshold, &mut scratch,
+                        &mut plan);
+    plan
+}
+
+/// ToMe plan from a precomputed shared Gram into a reusable
+/// [`MergePlan`] + [`PlanScratch`] (allocation-free once warm; see the
+/// in-place lifecycle in [`super::plan`]): candidates split by index
 /// parity; the k most-similar A tokens merge into their best B match.
 /// With `prune_threshold`, low-similarity pairs prune instead of merging
 /// (ToFu).
-pub fn tome_plan_gram(g: &CosineGram, k: usize, protect_first: usize,
-                      prune_threshold: Option<f32>) -> MergePlan {
+pub fn tome_plan_gram_into(g: &CosineGram, k: usize, protect_first: usize,
+                           prune_threshold: Option<f32>, s: &mut PlanScratch,
+                           out: &mut MergePlan) {
     let n = g.n();
-    let cand: Vec<usize> = (protect_first..n).collect();
-    let a_all: Vec<usize> = cand.iter().step_by(2).copied().collect();
-    let b: Vec<usize> = cand.iter().skip(1).step_by(2).copied().collect();
-    assert!(k <= a_all.len(), "k={k} exceeds |A|={}", a_all.len());
+    out.clear();
+    // parity split of the candidate range [protect_first, n)
+    s.a_all.clear();
+    s.a_all.extend((protect_first..n).step_by(2));
+    out.b.extend((protect_first + 1..n).step_by(2));
+    assert!(k <= s.a_all.len(), "k={k} exceeds |A|={}", s.a_all.len());
 
-    let mut best = vec![f32::NEG_INFINITY; a_all.len()];
-    let mut dst_all = vec![0usize; a_all.len()];
-    for (ai, &aidx) in a_all.iter().enumerate() {
-        if let Some((bi, d)) = g.best_match(aidx, &b, 0) {
-            best[ai] = d;
-            dst_all[ai] = bi;
+    s.best.clear();
+    s.best.resize(s.a_all.len(), f32::NEG_INFINITY);
+    s.dst_all.clear();
+    s.dst_all.resize(s.a_all.len(), 0);
+    for (ai, &aidx) in s.a_all.iter().enumerate() {
+        if let Some((bi, d)) = g.best_match(aidx, &out.b, 0) {
+            s.best[ai] = d;
+            s.dst_all[ai] = bi;
         }
     }
-    let pair_rank = argsort_desc(&best);
-    let mut a = Vec::with_capacity(k);
-    let mut dst = Vec::with_capacity(k);
-    let mut gate = Vec::with_capacity(k);
-    for &p in pair_rank.iter().take(k) {
-        a.push(a_all[p]);
-        dst.push(dst_all[p]);
-        gate.push(match prune_threshold {
-            Some(t) if best[p] < t => 0.0,
+    argsort_desc_into(&s.best, &mut s.pair_rank);
+    for &p in s.pair_rank.iter().take(k) {
+        out.a.push(s.a_all[p]);
+        out.dst.push(s.dst_all[p]);
+        out.gate.push(match prune_threshold {
+            Some(t) if s.best[p] < t => 0.0,
             _ => 1.0,
         });
     }
-    let mut protect: Vec<usize> = (0..protect_first).collect();
-    for &p in pair_rank.iter().skip(k) {
-        protect.push(a_all[p]);
+    out.protect.extend(0..protect_first);
+    for &p in s.pair_rank.iter().skip(k) {
+        out.protect.push(s.a_all[p]);
     }
-    protect.sort_unstable();
-    MergePlan { protect, a, b, dst, gate }
+    out.protect.sort_unstable();
 }
 
 #[cfg(test)]

@@ -10,15 +10,18 @@
 //!
 //! Every buffer the forward pass needs — the pre-LN output, the Q/K/V
 //! projections, the per-head (n, n) score tile, the attention output, the
-//! MLP hidden state, and the merge step's Gram/normalization/output
-//! buffers — lives in one [`EncoderScratch`].  The buffers are reshaped
-//! in place as the token count shrinks layer by layer
+//! MLP hidden state, and the merge step's Gram/normalization/plan/output
+//! buffers (including the plan builders' index vectors, via
+//! [`PlanScratch`](crate::merge::PlanScratch) and the in-place
+//! [`MergePlan`](crate::merge::MergePlan)) — lives in one
+//! [`EncoderScratch`].  The buffers are reshaped in place as the token
+//! count shrinks layer by layer
 //! ([`Mat::reshape`](crate::tensor::Mat::reshape) never gives capacity
 //! back), so once a scratch has seen its largest shape, a steady-state
-//! forward performs **zero heap allocations** in the attention/MLP loop
-//! (asserted by `tests/alloc_free.rs` via the
-//! [`CountingAllocator`](crate::util::alloc::CountingAllocator) hook);
-//! merge layers allocate only the small per-plan index vectors.
+//! forward performs **zero heap allocations** across the whole layer
+//! loop — attention, MLP, *and* every merge mode (asserted for all ten
+//! modes by `tests/alloc_free.rs` via the
+//! [`CountingAllocator`](crate::util::alloc::CountingAllocator) hook).
 //!
 //! ## Ownership and reuse rules
 //!
@@ -418,8 +421,9 @@ fn run_layers(re: &ResolvedEncoder, cfg: &EncoderCfg, x: &mut Mat,
 /// Run the encoder layer stack in place over pre-resolved weights — the
 /// zero-allocation steady-state core (`x` and `sizes` are updated in
 /// place; apply [`ResolvedEncoder::final_norm`] afterwards for the full
-/// forward).  Exposed so benches and the alloc-counter tests can measure
-/// exactly the layer loop.
+/// forward).  With a warmed scratch this performs no heap allocations in
+/// any merge mode.  Exposed so benches and the alloc-counter tests can
+/// measure exactly the layer loop.
 pub fn encoder_layers(re: &ResolvedEncoder, cfg: &EncoderCfg, x: &mut Mat,
                       sizes: &mut Vec<f32>, rng: &mut Rng,
                       scratch: &mut EncoderScratch) {

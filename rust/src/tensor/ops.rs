@@ -19,25 +19,60 @@ pub fn gram_builds_this_thread() -> usize {
     GRAM_BUILDS.with(|c| c.get())
 }
 
-/// Dot product with 8 independent partial sums.
+/// f32 lanes per accumulator block in [`dot`], selected per target
+/// (ROADMAP "SIMD-width audit"): 8 on the AVX-shaped default, 4 on 128-bit
+/// NEON targets where an 8-lane block spills to two registers for no
+/// gain.  All widths produce results within float tolerance of each other
+/// (parity-tested in this module across 4/8/16 lanes).
+#[cfg(any(target_arch = "aarch64", target_arch = "arm"))]
+pub const DOT_LANES: usize = 4;
+/// f32 lanes per accumulator block in [`dot`] (8: AVX-shaped default).
+#[cfg(not(any(target_arch = "aarch64", target_arch = "arm")))]
+pub const DOT_LANES: usize = 8;
+
+/// Dot product with `L` independent partial sums (`L` >= 1; powers of
+/// two vectorize best).
 ///
 /// A `zip().map().sum()` chain is a single order-constrained reduction
-/// LLVM must keep scalar; eight independent accumulator lanes over
-/// `chunks_exact(8)` let it vectorize, which is where the merge engine's
-/// O(n²h) Gram time goes.
+/// LLVM must keep scalar; `L` independent accumulator lanes over
+/// `chunks_exact(L)` let it vectorize, which is where the merge engine's
+/// O(n²h) Gram time goes.  The lane array is reduced pairwise
+/// (stride-halving), which for `L = 8` reproduces the historical
+/// `((a0+a4)+(a2+a6)) + ((a1+a5)+(a3+a7))` summation order bit-for-bit.
 #[inline]
-pub fn dot(a: &[f32], b: &[f32]) -> f32 {
+pub fn dot_with_lanes<const L: usize>(a: &[f32], b: &[f32]) -> f32 {
     debug_assert_eq!(a.len(), b.len());
-    let mut acc = [0f32; 8];
-    let split = a.len() - a.len() % 8;
-    for (ca, cb) in a[..split].chunks_exact(8).zip(b[..split].chunks_exact(8)) {
-        for l in 0..8 {
+    let mut acc = [0f32; L];
+    let split = a.len() - a.len() % L;
+    for (ca, cb) in a[..split].chunks_exact(L).zip(b[..split].chunks_exact(L)) {
+        for l in 0..L {
             acc[l] += ca[l] * cb[l];
         }
     }
     let tail: f32 = a[split..].iter().zip(&b[split..]).map(|(x, y)| x * y).sum();
-    tail + ((acc[0] + acc[4]) + (acc[2] + acc[6]))
-         + ((acc[1] + acc[5]) + (acc[3] + acc[7]))
+    // stride-halving pairwise reduction down to two partial sums (while the
+    // width stays even; an odd width falls through to the linear fold, so
+    // every L is summed correctly), then fold the tail in first — for
+    // L = 8 this reproduces the historical
+    // ((a0+a4)+(a2+a6)) + ((a1+a5)+(a3+a7)) order bit-for-bit
+    let mut width = L;
+    while width > 2 && width % 2 == 0 {
+        width /= 2;
+        for l in 0..width {
+            acc[l] += acc[l + width];
+        }
+    }
+    let mut total = tail;
+    for &v in acc.iter().take(width) {
+        total += v;
+    }
+    total
+}
+
+/// Dot product at the target's [`DOT_LANES`] width.
+#[inline]
+pub fn dot(a: &[f32], b: &[f32]) -> f32 {
+    dot_with_lanes::<DOT_LANES>(a, b)
 }
 
 /// The cosine-similarity Gram of one token set — computed **once** per
@@ -264,17 +299,47 @@ pub fn gelu_inplace(m: &mut Mat) {
     }
 }
 
-/// Indices that sort `vals` descending (stable).
+/// Indices that sort `vals` descending, written into a reusable buffer —
+/// allocation-free once `idx` has seen its largest length.
+///
+/// Ties keep ascending index order (the explicit index tie-break makes the
+/// in-place unstable sort reproduce the stable ordering the allocating
+/// `sort_by` historically provided, without its merge buffer).
+pub fn argsort_desc_into(vals: &[f32], idx: &mut Vec<usize>) {
+    idx.clear();
+    idx.extend(0..vals.len());
+    idx.sort_unstable_by(|&a, &b| {
+        vals[b].partial_cmp(&vals[a])
+            .unwrap_or(std::cmp::Ordering::Equal)
+            .then_with(|| a.cmp(&b))
+    });
+}
+
+/// Indices that sort `vals` ascending into a reusable buffer (ties keep
+/// ascending index order; see [`argsort_desc_into`]).
+pub fn argsort_asc_into(vals: &[f32], idx: &mut Vec<usize>) {
+    idx.clear();
+    idx.extend(0..vals.len());
+    idx.sort_unstable_by(|&a, &b| {
+        vals[a].partial_cmp(&vals[b])
+            .unwrap_or(std::cmp::Ordering::Equal)
+            .then_with(|| a.cmp(&b))
+    });
+}
+
+/// Indices that sort `vals` descending (stable ordering; allocating
+/// wrapper over [`argsort_desc_into`]).
 pub fn argsort_desc(vals: &[f32]) -> Vec<usize> {
-    let mut idx: Vec<usize> = (0..vals.len()).collect();
-    idx.sort_by(|&a, &b| vals[b].partial_cmp(&vals[a]).unwrap_or(std::cmp::Ordering::Equal));
+    let mut idx = Vec::new();
+    argsort_desc_into(vals, &mut idx);
     idx
 }
 
-/// Indices that sort `vals` ascending (stable).
+/// Indices that sort `vals` ascending (stable ordering; allocating
+/// wrapper over [`argsort_asc_into`]).
 pub fn argsort_asc(vals: &[f32]) -> Vec<usize> {
-    let mut idx: Vec<usize> = (0..vals.len()).collect();
-    idx.sort_by(|&a, &b| vals[a].partial_cmp(&vals[b]).unwrap_or(std::cmp::Ordering::Equal));
+    let mut idx = Vec::new();
+    argsort_asc_into(vals, &mut idx);
     idx
 }
 
@@ -382,6 +447,49 @@ mod tests {
             let naive: f32 = a.iter().zip(&b).map(|(x, y)| x * y).sum();
             assert!((dot(&a, &b) - naive).abs() < 1e-4, "len {len}");
         }
+    }
+
+    #[test]
+    fn dot_lane_widths_agree() {
+        // the SIMD-width audit: every cfg-selectable lane count must agree
+        // with the scalar reduction (and with each other) to float
+        // tolerance, at lengths around every block boundary
+        for len in [0usize, 1, 2, 3, 4, 5, 7, 8, 9, 15, 16, 17, 31, 64, 67] {
+            let a: Vec<f32> = (0..len).map(|i| (i as f32 * 0.37).sin()).collect();
+            let b: Vec<f32> = (0..len).map(|i| (i as f32 * 0.91).cos()).collect();
+            let naive: f32 = a.iter().zip(&b).map(|(x, y)| x * y).sum();
+            let widths = [
+                (1usize, dot_with_lanes::<1>(&a, &b)),
+                (2, dot_with_lanes::<2>(&a, &b)),
+                (4, dot_with_lanes::<4>(&a, &b)),
+                (8, dot_with_lanes::<8>(&a, &b)),
+                (16, dot_with_lanes::<16>(&a, &b)),
+                // odd widths exercise the linear-fold fallback
+                (3, dot_with_lanes::<3>(&a, &b)),
+                (6, dot_with_lanes::<6>(&a, &b)),
+            ];
+            for &(w, got) in &widths {
+                assert!((got - naive).abs() < 1e-4,
+                        "lanes {w} len {len}: {got} vs {naive}");
+            }
+            // the default entry point is exactly the DOT_LANES instantiation
+            assert_eq!(dot(&a, &b), dot_with_lanes::<DOT_LANES>(&a, &b),
+                       "len {len}");
+        }
+    }
+
+    #[test]
+    fn argsort_into_matches_wrapper_and_reuses_buffer() {
+        let vals = [3.0f32, 1.0, 3.0, -2.0, 0.5, 1.0];
+        // dirty, oversized buffer: results must still match the wrappers
+        let mut idx = vec![99usize; 32];
+        argsort_desc_into(&vals, &mut idx);
+        assert_eq!(idx, argsort_desc(&vals));
+        // ties keep ascending index order (stable semantics)
+        assert_eq!(idx, vec![0, 2, 1, 5, 4, 3]);
+        argsort_asc_into(&vals, &mut idx);
+        assert_eq!(idx, argsort_asc(&vals));
+        assert_eq!(idx, vec![3, 4, 1, 5, 0, 2]);
     }
 
     #[test]

@@ -243,6 +243,50 @@ fn scratch_forward_matches_wrapper_across_modes_and_shapes() {
 }
 
 #[test]
+fn interleaved_shape_stress_matches_fresh_scratch() {
+    // ONE `EncoderScratch` (with its embedded `MergeScratch`) driven
+    // through interleaved shapes — token counts, dims, head counts, and
+    // depths growing AND shrinking between rounds, with the merge mode
+    // changing every round — must match a fresh scratch exactly.  Any
+    // stale-buffer reuse (an index vector, plan group, or Gram row
+    // surviving a shape change) shows up as a bitwise mismatch.
+    let mut reused = EncoderScratch::new();
+    // (image, patch, dim, heads, depth): n cycles 65 -> 17 -> 37 -> 17 ->
+    // 65, dim cycles 64 -> 32 -> 48 -> 64 -> 32
+    let shape_cycle = [(32usize, 4usize, 64usize, 4usize, 4usize),
+                       (16, 4, 32, 2, 2),
+                       (24, 4, 48, 4, 3),
+                       (16, 4, 64, 2, 2),
+                       (32, 4, 32, 2, 3)];
+    for (round, &mode) in MODES.iter().enumerate() {
+        let (img, patch, dim, heads, depth) = shape_cycle[round % shape_cycle.len()];
+        let vcfg = ViTConfig {
+            image_size: img,
+            patch_size: patch,
+            dim,
+            heads,
+            depth,
+            merge_mode: mode.into(),
+            merge_r: 0.85,
+            ..Default::default()
+        };
+        let ps = synthetic_vit_store(&vcfg, 200 + round as u64);
+        let cfg = encoder_cfg(&vcfg, round % 2 == 0);
+        let x = random_input(cfg.plan[0], dim, 300 + round as u64);
+        let mut r1 = Rng::new(round as u64);
+        let mut fresh = EncoderScratch::new();
+        let want = encoder_forward_scratch(&ps, &cfg, x.clone(), &mut r1,
+                                           &mut fresh).unwrap();
+        let mut r2 = Rng::new(round as u64);
+        let got = encoder_forward_scratch(&ps, &cfg, x, &mut r2,
+                                          &mut reused).unwrap();
+        assert_eq!(got.rows, want.rows, "{mode} round {round}");
+        assert!(got.max_abs_diff(&want) == 0.0,
+                "{mode} round {round}: reused scratch diverged");
+    }
+}
+
+#[test]
 fn pooled_batch_matches_serial_across_modes() {
     let mut pool = ScratchPool::new();
     for &mode in MODES {

@@ -1,0 +1,163 @@
+//! Property tests for the allocation-free plan builders: every
+//! `*_plan_gram_into` builder must be **bitwise identical** to its
+//! allocating wrapper across random (n, k, protect_first, mode) shapes —
+//! including the `2k + protect_first > n` clamp edge cases from PR 1 —
+//! while reusing one dirty `PlanScratch`/`MergePlan` pair for every case,
+//! and every generated plan must pass `MergePlan::validate`.
+
+use pitome::data::Rng;
+use pitome::merge::diffrate::{diffrate_plan_gram, diffrate_plan_gram_into};
+use pitome::merge::energy::{energy_from_gram, energy_from_gram_into,
+                            energy_scores};
+use pitome::merge::pitome::{ordered_bsm_plan_gram, ordered_bsm_plan_gram_into,
+                            Split};
+use pitome::merge::random::{random_plan, random_plan_into};
+use pitome::merge::tome::{tome_plan_gram, tome_plan_gram_into};
+use pitome::merge::{MergePlan, PlanScratch};
+use pitome::tensor::{CosineGram, Mat};
+
+fn random_tokens(n: usize, h: usize, seed: u64) -> Mat {
+    let mut rng = Rng::new(seed);
+    Mat::from_fn(n, h, |_, _| (rng.next_f64() * 2.0 - 1.0) as f32)
+}
+
+fn assert_plans_identical(got: &MergePlan, want: &MergePlan, n: usize,
+                          ctx: &str) {
+    assert_eq!(got.protect, want.protect, "{ctx}: protect");
+    assert_eq!(got.a, want.a, "{ctx}: a");
+    assert_eq!(got.b, want.b, "{ctx}: b");
+    assert_eq!(got.dst, want.dst, "{ctx}: dst");
+    assert_eq!(got.gate, want.gate, "{ctx}: gate");
+    want.validate(n).unwrap_or_else(|e| panic!("{ctx}: wrapper plan: {e}"));
+    got.validate(n).unwrap_or_else(|e| panic!("{ctx}: into plan: {e}"));
+}
+
+/// Random + PR-1 regression shapes: (n, protect_first, k).  The k values
+/// deliberately overshoot so the PiToMe clamp path is exercised.
+fn shapes() -> Vec<(usize, usize, usize)> {
+    let mut shapes = vec![
+        // the 2k + protect_first > n clamp edge cases from PR 1
+        (9, 1, 10), (5, 1, 7), (8, 3, 4), (6, 1, 3), (4, 2, 5), (7, 7, 2),
+        (3, 1, 1),
+        // degenerate corners
+        (2, 0, 1), (3, 0, 0), (12, 0, 6), (2, 1, 1),
+    ];
+    let mut rng = Rng::new(99);
+    for _ in 0..24 {
+        let n = 3 + rng.next_below(38) as usize;
+        let pf = rng.next_below(4.min(n as u64)) as usize;
+        let k = rng.next_below(n as u64 + 3) as usize;
+        shapes.push((n, pf, k));
+    }
+    shapes
+}
+
+#[test]
+fn pitome_into_builder_is_bitwise_identical_to_wrapper() {
+    // ONE dirty scratch/plan pair reused across every case
+    let mut scratch = PlanScratch::new();
+    let mut plan = MergePlan::empty();
+    for (ci, &(n, pf, k)) in shapes().iter().enumerate() {
+        let kf = random_tokens(n, 8, 1000 + ci as u64);
+        let g = CosineGram::build(&kf);
+        let e = energy_from_gram(&g, 0.45);
+        for split in [Split::Alternate, Split::Random] {
+            for protect in [true, false] {
+                let seed = (ci * 7) as u64;
+                let mut r1 = Rng::new(seed);
+                let want = ordered_bsm_plan_gram(&g, &e, k, pf, split,
+                                                 protect, &mut r1);
+                let mut r2 = Rng::new(seed);
+                ordered_bsm_plan_gram_into(&g, &e, k, pf, split, protect,
+                                           &mut r2, &mut scratch, &mut plan);
+                assert_plans_identical(
+                    &plan, &want, n,
+                    &format!("pitome n={n} pf={pf} k={k} {split:?} \
+                              protect={protect}"));
+                // both paths must leave the RNG in the same state
+                assert_eq!(r1.next_below(1 << 20), r2.next_below(1 << 20),
+                           "rng state diverged at n={n} pf={pf} k={k}");
+            }
+        }
+    }
+}
+
+#[test]
+fn tome_into_builder_is_bitwise_identical_to_wrapper() {
+    let mut scratch = PlanScratch::new();
+    let mut plan = MergePlan::empty();
+    for (ci, &(n, pf, k)) in shapes().iter().enumerate() {
+        let kf = random_tokens(n, 8, 2000 + ci as u64);
+        let g = CosineGram::build(&kf);
+        // ToMe asserts k <= |A|; clamp to the parity split's A size, and
+        // to 0 when the B side is empty (a merge needs a destination)
+        let a_len = (n - pf.min(n) + 1) / 2;
+        let b_len = (n - pf.min(n)) / 2;
+        let k = if b_len == 0 { 0 } else { k.min(a_len) };
+        for threshold in [None, Some(0.45), Some(0.99)] {
+            let want = tome_plan_gram(&g, k, pf, threshold);
+            tome_plan_gram_into(&g, k, pf, threshold, &mut scratch, &mut plan);
+            assert_plans_identical(
+                &plan, &want, n,
+                &format!("tome n={n} pf={pf} k={k} thr={threshold:?}"));
+        }
+    }
+}
+
+#[test]
+fn diffrate_into_builder_is_bitwise_identical_to_wrapper() {
+    let mut scratch = PlanScratch::new();
+    let mut plan = MergePlan::empty();
+    for (ci, &(n, pf, k)) in shapes().iter().enumerate() {
+        let kf = random_tokens(n, 8, 3000 + ci as u64);
+        let g = CosineGram::build(&kf);
+        let mut arng = Rng::new(31 + ci as u64);
+        let attn: Vec<f32> =
+            (0..n).map(|_| arng.next_f64() as f32).collect();
+        // DiffRate needs a non-empty B set to receive merges
+        let k = k.min(n - 1);
+        let want = diffrate_plan_gram(&g, &attn, k, pf);
+        diffrate_plan_gram_into(&g, &attn, k, pf, &mut scratch, &mut plan);
+        assert_plans_identical(&plan, &want, n,
+                               &format!("diffrate n={n} pf={pf} k={k}"));
+    }
+}
+
+#[test]
+fn random_into_builder_is_bitwise_identical_to_wrapper() {
+    let mut scratch = PlanScratch::new();
+    let mut plan = MergePlan::empty();
+    for (ci, &(n, pf, k)) in shapes().iter().enumerate() {
+        // random pruning requires k candidates to exist
+        let k = k.min(n - pf.min(n));
+        let seed = 400 + ci as u64;
+        let mut r1 = Rng::new(seed);
+        let want = random_plan(n, k, pf, &mut r1);
+        let mut r2 = Rng::new(seed);
+        random_plan_into(n, k, pf, &mut r2, &mut scratch, &mut plan);
+        assert_plans_identical(&plan, &want, n,
+                               &format!("random n={n} pf={pf} k={k}"));
+        assert_eq!(r1.next_below(1 << 20), r2.next_below(1 << 20),
+                   "rng state diverged at n={n} pf={pf} k={k}");
+    }
+}
+
+#[test]
+fn energy_into_matches_wrapper_and_feature_path() {
+    // dirty, oversized buffer reused across shrinking shapes
+    let mut e = vec![42.0f32; 64];
+    for (ci, &(n, _, _)) in shapes().iter().enumerate() {
+        let kf = random_tokens(n, 8, 5000 + ci as u64);
+        let g = CosineGram::build(&kf);
+        for margin in [-0.2f32, 0.45, 0.9] {
+            let want = energy_from_gram(&g, margin);
+            energy_from_gram_into(&g, margin, &mut e);
+            assert_eq!(e, want, "n={n} margin={margin}");
+            // and the feature-taking convenience agrees to tolerance
+            let direct = energy_scores(&kf, margin);
+            for (a, b) in e.iter().zip(&direct) {
+                assert!((a - b).abs() < 1e-5, "n={n} margin={margin}");
+            }
+        }
+    }
+}
