@@ -5,12 +5,15 @@
 //! 2. Run one PiToMe merge step and inspect protection.
 //! 3. Run the full CPU reference ViT with and without merging and compare
 //!    predictions + FLOPs.
+//! 4. Serve repeated requests through the owning `Engine`/`Session` API
+//!    (the zero-allocation steady-state path).
 //!
 //! Run: `cargo run --release --example quickstart`
 //! (needs `make artifacts` for the trained weights).
 
 use pitome::config::ViTConfig;
 use pitome::data::{patchify, shape_item, Rng, TEST_SEED};
+use pitome::engine::Engine;
 use pitome::merge::{energy_scores, merge_step, MergeCtx, MergeMode};
 use pitome::model::{flops, load_model_params, ViTModel};
 use pitome::runtime::Registry;
@@ -57,6 +60,25 @@ fn main() -> anyhow::Result<()> {
             .map_err(|e| anyhow::anyhow!("{e}"))?;
         println!("mode={mode:<7} r={r:<5} pred={pred} plan={:?} {:.4} GFLOPs",
                  cfg.plan(), flops::vit_gflops(&cfg));
+    }
+
+    // --- 4. the owning Engine/Session API (hot serving path) ---------------
+    // One Engine per process (weights + resolution cache), one session per
+    // worker; after the first request, everything below runs through
+    // pooled buffers with zero heap allocations.
+    let engine = Engine::from_store(ps);
+    let cfg = ViTConfig { merge_mode: "pitome".into(), merge_r: 0.9,
+                          ..Default::default() };
+    let mut sess = engine.vit_session(&cfg)
+        .map_err(|e| anyhow::anyhow!("{e}"))?;
+    for i in 0..3u64 {
+        let item = shape_item(TEST_SEED, i);
+        sess.begin(1);
+        sess.set_patches(0, &patchify(&item.image, cfg.patch_size))
+            .map_err(|e| anyhow::anyhow!("{e}"))?;
+        sess.forward(i).map_err(|e| anyhow::anyhow!("{e}"))?;
+        println!("engine request {i}: pred={} (label {})",
+                 sess.predict(0), item.label);
     }
     Ok(())
 }

@@ -1,16 +1,18 @@
 //! PERF/L3 — encoder forward benchmarks: the scratch-workspace forward vs
 //! the seed's allocating scalar attention, the per-layer
-//! attention/merge/MLP split, and allocations-per-forward (via the
+//! attention/merge/MLP split, allocations-per-forward, and
+//! allocations-per-request on the engine serving path (via the
 //! thread-local [`CountingAllocator`] hook).
 //! (Custom harness; criterion unavailable — DESIGN.md §11.  Run with
 //! `BENCH_SMOKE=1` / `--smoke` for the tiny CI shapes.)
 
 use pitome::config::{ViTConfig, DEFAULT_TOFU_PRUNE_THRESHOLD};
 use pitome::data::Rng;
+use pitome::engine::Engine;
 use pitome::merge::{merge_step_scratch, MergeCtx, MergeMode, MergeScratch};
-use pitome::model::{attention_into, encoder_forward, encoder_forward_scratch,
-                    encoder_layers, synthetic_vit_store, EncoderCfg,
-                    EncoderScratch, ResolvedEncoder};
+use pitome::model::{attention_into, encoder_forward, encoder_layers,
+                    synthetic_vit_store, EncoderCfg, EncoderScratch,
+                    ParamStore, ResolvedEncoder};
 use pitome::tensor::{dense_into, gelu_inplace, softmax_rows, Mat};
 use pitome::util::{allocs_this_thread, smoke, Bench, CountingAllocator};
 
@@ -153,38 +155,30 @@ fn main() {
         c
     };
     let ps = synthetic_vit_store(&vcfg, 7);
-    let cfg = EncoderCfg {
-        prefix: "vit.".into(),
-        dim: vcfg.dim,
-        depth: vcfg.depth,
-        heads: vcfg.heads,
-        mode: vcfg.mode(),
-        plan: vcfg.plan(),
-        prop_attn: true,
-        tofu_threshold: vcfg.tofu_threshold,
-    };
+    let cfg = EncoderCfg::from_vit(&vcfg);
     let n0 = cfg.plan[0];
     let x0 = random_mat(&mut rng, n0, cfg.dim);
-    b.run(&format!("forward transient-scratch {} d={}", vcfg.name, cfg.depth), || {
+    b.run(&format!("forward one-shot          {} d={}", vcfg.name, cfg.depth), || {
         let mut r = Rng::new(0);
         encoder_forward(&ps, &cfg, x0.clone(), &mut r).unwrap()
     });
-    let mut scratch = EncoderScratch::new();
-    b.run(&format!("forward reused-scratch    {} d={}", vcfg.name, cfg.depth), || {
+    let engine = Engine::from_store(synthetic_vit_store(&vcfg, 7));
+    let mut sess = engine.session(cfg.clone()).unwrap();
+    b.run(&format!("forward engine session    {} d={}", vcfg.name, cfg.depth), || {
         let mut r = Rng::new(0);
-        encoder_forward_scratch(&ps, &cfg, x0.clone(), &mut r, &mut scratch)
-            .unwrap()
+        sess.forward_one(&x0, &mut r).unwrap();
     });
 
     // --- allocations per steady-state layer loop (the alloc-counter hook)
+    let mut scratch = EncoderScratch::new();
     let re = ResolvedEncoder::new(&ps, &cfg).unwrap();
-    let pitome_allocs = count_layer_loop(&cfg, &re, &mut scratch, &x0);
+    let pitome_allocs = count_layer_loop(&ps, &cfg, &re, &mut scratch, &x0);
     let mut none_cfg = cfg.clone();
     none_cfg.mode = MergeMode::None;
     none_cfg.plan = vec![n0; cfg.depth + 1];
     let re_none = ResolvedEncoder::new(&ps, &none_cfg).unwrap();
     let mut none_scratch = EncoderScratch::new();
-    let none_allocs = count_layer_loop(&none_cfg, &re_none,
+    let none_allocs = count_layer_loop(&ps, &none_cfg, &re_none,
                                        &mut none_scratch, &x0);
     println!("\nallocations per steady-state layer loop: \
               {none_allocs} (merge off — acceptance: 0), \
@@ -192,11 +186,44 @@ fn main() {
     assert_eq!(none_allocs, 0, "merge-free layer loop must not allocate");
     assert_eq!(pitome_allocs, 0,
                "pitome layer loop must not allocate (in-place plan builders)");
+
+    // --- allocations per request on the engine serving path: raw patch
+    // bytes in -> pooled logits out, exactly what a warmed CPU serving
+    // worker does per request (outputs included, not just the layer loop)
+    let serve_vcfg = ViTConfig {
+        merge_mode: "pitome".into(),
+        merge_r: 0.9,
+        ..Default::default()
+    };
+    let serve_engine = Engine::from_store(synthetic_vit_store(&serve_vcfg, 7));
+    let mut vit = serve_engine.vit_session(&serve_vcfg).unwrap();
+    let mut rr = Rng::new(5);
+    let raw: Vec<f32> = (0..serve_vcfg.num_patches() * serve_vcfg.patch_dim())
+        .map(|_| (rr.next_f64() * 0.2 - 0.1) as f32)
+        .collect();
+    let request = |vit: &mut pitome::engine::VitSession| {
+        vit.begin(1);
+        vit.set_patches_slice(0, &raw).unwrap();
+        vit.forward(0).unwrap();
+        vit.logits(0)[0]
+    };
+    request(&mut vit); // warm every pool
+    let before = allocs_this_thread();
+    let iters = 16u64;
+    for _ in 0..iters {
+        std::hint::black_box(request(&mut vit));
+    }
+    let per_request = (allocs_this_thread() - before) as f64 / iters as f64;
+    b.run("engine serving request (warm)", || request(&mut vit));
+    println!("\nallocations per warmed serving request (engine path): \
+              {per_request} (acceptance: 0)");
+    assert_eq!(per_request, 0.0,
+               "warmed engine serving request must not allocate");
 }
 
 /// Warm `scratch` with one pass, then count allocations over a second,
 /// steady-state pass of the encoder layer loop.
-fn count_layer_loop(cfg: &EncoderCfg, re: &ResolvedEncoder,
+fn count_layer_loop(ps: &ParamStore, cfg: &EncoderCfg, re: &ResolvedEncoder,
                     scratch: &mut EncoderScratch, x0: &Mat) -> u64 {
     let n0 = x0.rows;
     for pass in 0..2 {
@@ -204,7 +231,7 @@ fn count_layer_loop(cfg: &EncoderCfg, re: &ResolvedEncoder,
         let mut szs = vec![1.0f32; n0];
         let mut r = Rng::new(0);
         let before = allocs_this_thread();
-        encoder_layers(re, cfg, &mut x, &mut szs, &mut r, scratch);
+        encoder_layers(ps, re, cfg, &mut x, &mut szs, &mut r, scratch);
         if pass == 1 {
             return allocs_this_thread() - before;
         }

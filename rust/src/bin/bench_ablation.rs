@@ -2,6 +2,7 @@
 //! CLS-attention indicator (Table 1 rows / Figure 4 curves), on both
 //! retrieval and text classification.
 
+use pitome::engine::Engine;
 use pitome::eval::ablation::{retrieval_ablation, textcls_ablation, VARIANTS};
 use pitome::model::load_model_params;
 use pitome::runtime::Registry;
@@ -16,7 +17,8 @@ fn main() -> anyhow::Result<()> {
 
     println!("# Table 1 / Figure 4 ablations; variants: {VARIANTS:?}");
 
-    let clip = load_model_params(&dir, "clip").map_err(|e| anyhow::anyhow!("{e}"))?;
+    let clip = Engine::from_store(
+        load_model_params(&dir, "clip").map_err(|e| anyhow::anyhow!("{e}"))?);
     println!("\n## image-text retrieval (Rsum), r in {{0.925, 0.95, 0.975}}");
     println!("{:<16} {:<7} {:>9}", "variant", "r", "Rsum");
     for row in retrieval_ablation(&clip, &[0.925, 0.95, 0.975], n_ret)
@@ -24,7 +26,8 @@ fn main() -> anyhow::Result<()> {
         println!("{:<16} {:<7} {:>9.2}", row.mode, row.r, row.rsum);
     }
 
-    let bert = load_model_params(&dir, "bert").map_err(|e| anyhow::anyhow!("{e}"))?;
+    let bert = Engine::from_store(
+        load_model_params(&dir, "bert").map_err(|e| anyhow::anyhow!("{e}"))?);
     println!("\n## text classification (acc %), r in {{0.6, 0.7, 0.8}}");
     println!("{:<16} {:<7} {:>8}", "variant", "r", "acc%");
     for row in textcls_ablation(&bert, &[0.6, 0.7, 0.8], n_txt)

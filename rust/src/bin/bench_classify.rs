@@ -2,6 +2,7 @@
 //! merge modes and ratios (Table 6 rows + Figure 6 curves), plus the
 //! paper-scale FLOPs cost model for DeiT/MAE backbones.
 
+use pitome::engine::Engine;
 use pitome::eval::classify::{eval_config, paper_scale_flops, sweep};
 use pitome::model::load_model_params;
 use pitome::runtime::Registry;
@@ -13,6 +14,7 @@ fn main() -> anyhow::Result<()> {
         Registry::default_dir().to_str().unwrap_or("artifacts")));
     let n = args.get_parse("n", 512);
     let ps = load_model_params(&dir, "vit").map_err(|e| anyhow::anyhow!("{e}"))?;
+    let engine = Engine::from_store(ps);
 
     if args.has("figure6") {
         println!("# Figure 6: OTS accuracy vs GFLOPs (ShapeBench ViT-Ti)");
@@ -20,7 +22,7 @@ fn main() -> anyhow::Result<()> {
         let modes = ["pitome", "tome", "tofu", "dct", "diffrate"];
         println!("{:<10} {:<7} {:>8} {:>9} {:>9}", "mode", "r", "acc%",
                  "GFLOPs", "speedup");
-        for row in sweep(&ps, &modes, &rs, n).map_err(|e| anyhow::anyhow!("{e}"))? {
+        for row in sweep(&engine, &modes, &rs, n).map_err(|e| anyhow::anyhow!("{e}"))? {
             println!("{:<10} {:<7} {:>8.2} {:>9.4} {:>8.2}x",
                      row.mode, row.r, row.acc, row.gflops, row.speedup);
         }
@@ -29,11 +31,11 @@ fn main() -> anyhow::Result<()> {
 
     println!("# Table 6 (ShapeBench substitution): OTS accuracy per mode, r=0.9");
     println!("{:<10} {:>8} {:>9} {:>9}", "mode", "acc%", "GFLOPs", "speedup");
-    let base = eval_config(&ps, "none", 1.0, n).map_err(|e| anyhow::anyhow!("{e}"))?;
+    let base = eval_config(&engine, "none", 1.0, n).map_err(|e| anyhow::anyhow!("{e}"))?;
     println!("{:<10} {:>8.2} {:>9.4} {:>8.2}x (base)", base.mode, base.acc,
              base.gflops, base.speedup);
     for mode in ["pitome", "tome", "tofu", "dct", "diffrate", "random"] {
-        let row = eval_config(&ps, mode, 0.9, n).map_err(|e| anyhow::anyhow!("{e}"))?;
+        let row = eval_config(&engine, mode, 0.9, n).map_err(|e| anyhow::anyhow!("{e}"))?;
         println!("{:<10} {:>8.2} {:>9.4} {:>8.2}x  (drop {:+.2})",
                  row.mode, row.acc, row.gflops, row.speedup, row.acc - base.acc);
     }

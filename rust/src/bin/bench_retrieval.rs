@@ -1,6 +1,7 @@
 //! T2/F3 — Image-text retrieval: recall vs FLOPs (Figure 3 curves,
 //! Table 2 rows) on synthetic caption pairs with the CPU reference CLIP.
 
+use pitome::engine::Engine;
 use pitome::eval::retrieval::{eval_config, sweep};
 use pitome::model::load_model_params;
 use pitome::runtime::Registry;
@@ -12,6 +13,7 @@ fn main() -> anyhow::Result<()> {
         Registry::default_dir().to_str().unwrap_or("artifacts")));
     let n = args.get_parse("n", 256);
     let ps = load_model_params(&dir, "clip").map_err(|e| anyhow::anyhow!("{e}"))?;
+    let engine = Engine::from_store(ps);
 
     if args.has("figure3") {
         println!("# Figure 3: Rsum vs GFLOPs per algorithm (synthetic Flickr stand-in)");
@@ -19,7 +21,7 @@ fn main() -> anyhow::Result<()> {
         let modes = ["pitome", "tome", "tofu", "dct", "diffrate"];
         println!("{:<10} {:<7} {:>8} {:>8} {:>9} {:>9}", "mode", "r", "Rt@1",
                  "Ri@1", "Rsum", "GFLOPs");
-        for row in sweep(&ps, &modes, &rs, n).map_err(|e| anyhow::anyhow!("{e}"))? {
+        for row in sweep(&engine, &modes, &rs, n).map_err(|e| anyhow::anyhow!("{e}"))? {
             println!("{:<10} {:<7} {:>8.2} {:>8.2} {:>9.2} {:>9.4}",
                      row.mode, row.r, row.rt1, row.ri1, row.rsum, row.gflops);
         }
@@ -29,12 +31,12 @@ fn main() -> anyhow::Result<()> {
     println!("# Table 2 (synthetic substitution): retrieval at r in {{0.95, 0.975}}");
     println!("{:<22} {:>8} {:>8} {:>9} {:>9}", "config", "Rt@1", "Ri@1",
              "Rsum", "GFLOPs");
-    let base = eval_config(&ps, "none", 1.0, n).map_err(|e| anyhow::anyhow!("{e}"))?;
+    let base = eval_config(&engine, "none", 1.0, n).map_err(|e| anyhow::anyhow!("{e}"))?;
     println!("{:<22} {:>8.2} {:>8.2} {:>9.2} {:>9.4}", "base (no merge)",
              base.rt1, base.ri1, base.rsum, base.gflops);
     for (mode, r) in [("pitome", 0.975), ("pitome", 0.95), ("tome", 0.95),
                       ("tofu", 0.95), ("dct", 0.95), ("diffrate", 0.95)] {
-        let row = eval_config(&ps, mode, r, n).map_err(|e| anyhow::anyhow!("{e}"))?;
+        let row = eval_config(&engine, mode, r, n).map_err(|e| anyhow::anyhow!("{e}"))?;
         println!("{:<22} {:>8.2} {:>8.2} {:>9.2} {:>9.4}  (dRsum {:+.2})",
                  format!("{mode} r={r}"), row.rt1, row.ri1, row.rsum,
                  row.gflops, row.rsum - base.rsum);

@@ -4,6 +4,7 @@
 
 use pitome::config::ViTConfig;
 use pitome::data::{patchify, shape_item, Rng, TEST_SEED};
+use pitome::engine::Engine;
 use pitome::eval::ablation::{matched_fixed_k, schedule_plans};
 use pitome::merge::fixed_k_plan;
 use pitome::model::flops::encoder_flops;
@@ -30,14 +31,15 @@ fn main() -> anyhow::Result<()> {
     }
 
     // matched-removal accuracy comparison on ShapeBench
-    let ps = load_model_params(&dir, "vit").map_err(|e| anyhow::anyhow!("{e}"))?;
+    let engine = Engine::from_store(
+        load_model_params(&dir, "vit").map_err(|e| anyhow::anyhow!("{e}"))?);
     println!("\n## OTS accuracy: ratio-r vs matched fixed-k (pitome, ShapeBench)");
     println!("{:<22} {:>8} {:>10}", "schedule", "acc%", "end-tokens");
     for r in [0.95, 0.9, 0.85] {
         // ratio schedule
         let cfg_r = ViTConfig { merge_mode: "pitome".into(), merge_r: r,
                                 ..Default::default() };
-        let acc_r = accuracy(&ps, &cfg_r, n)?;
+        let acc_r = accuracy(&engine, &cfg_r, n)?;
         println!("{:<22} {:>8.2} {:>10}", format!("ratio r={r}"), acc_r,
                  cfg_r.plan().last().unwrap());
         // matched fixed-k schedule
@@ -45,23 +47,27 @@ fn main() -> anyhow::Result<()> {
         let plan = fixed_k_plan(65, k, 4, 1);
         let mut cfg_k = cfg_r.clone();
         cfg_k.merge_r = 1.0; // plan injected manually below
-        let acc_k = accuracy_with_plan(&ps, &cfg_k, plan.clone(), n)?;
+        let acc_k = accuracy_with_plan(&engine, &cfg_k, plan.clone(), n)?;
         println!("{:<22} {:>8.2} {:>10}", format!("fixed k={k}"), acc_k,
                  plan.last().unwrap());
     }
     Ok(())
 }
 
-fn accuracy(ps: &pitome::model::ParamStore, cfg: &ViTConfig, n: usize)
+fn accuracy(engine: &Engine, cfg: &ViTConfig, n: usize)
             -> anyhow::Result<f64> {
-    let model = ViTModel::new(ps, cfg.clone());
+    // one session for the whole sweep point (serial shared-RNG contract,
+    // matching the historical per-sample predict loop bitwise)
+    let mut sess = engine.vit_session(cfg).map_err(|e| anyhow::anyhow!("{e}"))?;
     let mut rng = Rng::new(7);
     let mut ok = 0usize;
     for i in 0..n {
         let item = shape_item(TEST_SEED, i as u64);
         let patches = patchify(&item.image, cfg.patch_size);
-        if model.predict(&patches, &mut rng).map_err(|e| anyhow::anyhow!("{e}"))?
-            == item.label {
+        sess.begin(1);
+        sess.set_patches(0, &patches).map_err(|e| anyhow::anyhow!("{e}"))?;
+        sess.forward_serial(&mut rng).map_err(|e| anyhow::anyhow!("{e}"))?;
+        if sess.predict(0) == item.label {
             ok += 1;
         }
     }
@@ -70,9 +76,9 @@ fn accuracy(ps: &pitome::model::ParamStore, cfg: &ViTConfig, n: usize)
 
 /// Accuracy with an explicit token plan (fixed-k schedules are not a
 /// ratio, so we drive the encoder directly).
-fn accuracy_with_plan(ps: &pitome::model::ParamStore, cfg: &ViTConfig,
+fn accuracy_with_plan(engine: &Engine, cfg: &ViTConfig,
                       plan: Vec<usize>, n: usize) -> anyhow::Result<f64> {
-    use pitome::model::encoder::{encoder_forward, EncoderCfg};
+    use pitome::model::EncoderCfg;
     use pitome::tensor::{argmax, dense, Mat};
     let mut rng = Rng::new(7);
     let ecfg = EncoderCfg {
@@ -85,13 +91,17 @@ fn accuracy_with_plan(ps: &pitome::model::ParamStore, cfg: &ViTConfig,
         prop_attn: true,
         tofu_threshold: cfg.tofu_threshold,
     };
+    // the raw encoder session takes any hand-built config (a fixed-k
+    // plan is not expressible as a ratio), reusing its pools per sample
+    let mut sess = engine.session(ecfg).map_err(|e| anyhow::anyhow!("{e}"))?;
+    let ps = engine.params();
     let model = ViTModel::new(ps, cfg.clone());
     let mut ok = 0usize;
     for i in 0..n {
         let item = shape_item(TEST_SEED, i as u64);
         let patches = patchify(&item.image, cfg.patch_size);
         let x = model.tokens(&patches).map_err(|e| anyhow::anyhow!("{e}"))?;
-        let out = encoder_forward(ps, &ecfg, x, &mut rng)
+        let out = sess.forward_one(&x, &mut rng)
             .map_err(|e| anyhow::anyhow!("{e}"))?;
         let f = Mat::from_vec(1, cfg.dim, out.row(0).to_vec());
         let lg = dense(&f, &ps.mat2("vit.head.w").map_err(|e| anyhow::anyhow!("{e}"))?,

@@ -1,6 +1,7 @@
 //! T7/T9/F10 — Text classification: sentiment accuracy vs FLOPs speedup
 //! with compression on the first three layers (Tables 7, 9; Figure 10).
 
+use pitome::engine::Engine;
 use pitome::eval::textcls::{eval_config, sweep};
 use pitome::model::load_model_params;
 use pitome::runtime::Registry;
@@ -12,6 +13,7 @@ fn main() -> anyhow::Result<()> {
         Registry::default_dir().to_str().unwrap_or("artifacts")));
     let n = args.get_parse("n", 384);
     let ps = load_model_params(&dir, "bert").map_err(|e| anyhow::anyhow!("{e}"))?;
+    let engine = Engine::from_store(ps);
 
     if args.has("sweep") || args.has("figure10") {
         let deep = args.has("deep");
@@ -21,7 +23,7 @@ fn main() -> anyhow::Result<()> {
                  else { vec![0.8, 0.75, 0.7] };
         let modes = ["pitome", "tome", "tofu", "dct", "diffrate"];
         println!("{:<10} {:<7} {:>8} {:>10}", "mode", "r", "acc%", "flops x");
-        for row in sweep(&ps, &modes, &rs, n).map_err(|e| anyhow::anyhow!("{e}"))? {
+        for row in sweep(&engine, &modes, &rs, n).map_err(|e| anyhow::anyhow!("{e}"))? {
             println!("{:<10} {:<7} {:>8.2} {:>9.2}x",
                      row.mode, row.r, row.acc, row.flops_speedup);
         }
@@ -30,11 +32,11 @@ fn main() -> anyhow::Result<()> {
 
     println!("# Table 7 (synthetic sentiment substitution): r = 0.8, first 3 layers");
     println!("{:<10} {:>8} {:>10}", "mode", "acc%", "flops x");
-    let base = eval_config(&ps, "none", 1.0, n).map_err(|e| anyhow::anyhow!("{e}"))?;
+    let base = eval_config(&engine, "none", 1.0, n).map_err(|e| anyhow::anyhow!("{e}"))?;
     println!("{:<10} {:>8.2} {:>9.2}x (base)", base.mode, base.acc,
              base.flops_speedup);
     for mode in ["pitome", "tome", "tofu", "dct", "diffrate"] {
-        let row = eval_config(&ps, mode, 0.8, n).map_err(|e| anyhow::anyhow!("{e}"))?;
+        let row = eval_config(&engine, mode, 0.8, n).map_err(|e| anyhow::anyhow!("{e}"))?;
         println!("{:<10} {:>8.2} {:>9.2}x  (drop {:+.2})",
                  row.mode, row.acc, row.flops_speedup, row.acc - base.acc);
     }

@@ -6,11 +6,15 @@
 //! * **PJRT** ([`VariantWorker::spawn`]) — pads the batch to the
 //!   artifact's compiled batch size and executes the HLO artifact.
 //! * **CPU reference** ([`VariantWorker::spawn_cpu`]) — runs the pure-Rust
-//!   ViT through the batch encoder: samples fan out over
-//!   `ServingConfig::workers` threads, each reusing an `EncoderScratch`
-//!   from a pool that lives as long as the worker, so steady-state
-//!   serving performs no encoder-buffer allocations.  Needs no artifacts,
-//!   so serving works even before `make artifacts`.
+//!   ViT through an engine [`VitSession`] the worker holds for its whole
+//!   lifetime: weights are resolved once at boot (never per batch), and
+//!   every buffer a request touches — input slots, encoder scratch,
+//!   final-norm outputs, logits — is pooled in the session, so a warmed
+//!   worker's inference region performs **zero** heap allocations per
+//!   request (tracked per batch in
+//!   [`Snapshot::last_infer_allocs`](super::metrics::Snapshot), asserted
+//!   by `tests/alloc_free.rs`).  Needs no artifacts, so serving works
+//!   even before `make artifacts`.
 //!
 //! Built on std sync primitives (DESIGN.md §11): a bounded
 //! `mpsc::sync_channel` is the admission-control boundary; `recv_timeout`
@@ -25,10 +29,11 @@ use std::time::{Duration, Instant};
 use std::path::PathBuf;
 
 use crate::config::{ServingConfig, ViTConfig};
+use crate::engine::{Engine, VitSession};
 use crate::error::{Error, Result};
-use crate::model::{ParamStore, ScratchPool, ViTModel};
-use crate::runtime::{ArtifactEntry, Engine, Executable, HostTensor};
-use crate::tensor::Mat;
+use crate::runtime::{ArtifactEntry, Engine as PjrtEngine, Executable,
+                     HostTensor};
+use crate::util::alloc::allocs_this_thread;
 
 use super::metrics::Metrics;
 use super::request::InferRequest;
@@ -47,14 +52,15 @@ pub struct VariantWorker {
 
 impl VariantWorker {
     /// Shared worker bootstrap: channel, metrics, depth counter, thread.
-    /// `init` runs on the worker thread and produces the batch-execution
-    /// closure (returning `None` aborts the worker, e.g. when PJRT is
-    /// unavailable — submitters then observe a closed queue).
+    /// `init` runs on the worker thread (handed the worker's metrics
+    /// sink) and produces the batch-execution closure (returning `None`
+    /// aborts the worker, e.g. when PJRT is unavailable — submitters then
+    /// observe a closed queue).
     fn spawn_worker<E, I>(name: String, cfg: &ServingConfig, max_batch: usize,
                           init: I) -> VariantWorker
     where
         E: Fn(&[InferRequest]) -> Result<Vec<Vec<HostTensor>>> + 'static,
-        I: FnOnce() -> Option<E> + Send + 'static,
+        I: FnOnce(&Arc<Metrics>) -> Option<E> + Send + 'static,
     {
         let (tx, rx) = std::sync::mpsc::sync_channel::<InferRequest>(cfg.queue_capacity);
         let metrics = Arc::new(Metrics::default());
@@ -65,7 +71,7 @@ impl VariantWorker {
         let join = std::thread::Builder::new()
             .name(name)
             .spawn(move || {
-                let Some(exec) = init() else { return };
+                let Some(exec) = init(&m2) else { return };
                 worker_loop(exec, rx, m2, d2, max_batch, timeout)
             })
             .expect("spawn worker");
@@ -86,8 +92,8 @@ impl VariantWorker {
                  cfg: &ServingConfig) -> VariantWorker {
         let max_batch = cfg.max_batch.min(entry.meta.batch);
         let name = format!("pitome-worker-{}", entry.file);
-        Self::spawn_worker(name, cfg, max_batch, move || {
-            let engine = match Engine::cpu() {
+        Self::spawn_worker(name, cfg, max_batch, move |_metrics: &Arc<Metrics>| {
+            let engine = match PjrtEngine::cpu() {
                 Ok(e) => e,
                 Err(e) => {
                     eprintln!("[pitome worker] PJRT client failed: {e}");
@@ -112,23 +118,33 @@ impl VariantWorker {
     /// Spawn a worker that serves the pure-Rust CPU reference ViT (no
     /// PJRT artifacts required).  Requests carry a single f32 patches
     /// tensor `(n_patches, patch_dim)`; responses carry the class logits.
-    /// Each collected batch runs through the batch encoder, so its merge
-    /// steps are parallelized over `cfg.workers` threads.
-    pub fn spawn_cpu(ps: Arc<ParamStore>, model_cfg: ViTConfig,
+    /// Each collected batch runs through the worker's [`VitSession`],
+    /// whose encoder fan-out uses `cfg.workers` threads.
+    pub fn spawn_cpu(engine: Arc<Engine>, model_cfg: ViTConfig,
                      cfg: &ServingConfig) -> VariantWorker {
         let max_batch = cfg.max_batch;
         let workers = cfg.workers.max(1);
         let name = format!("pitome-cpu-{}-r{:.0}",
                            model_cfg.merge_mode, model_cfg.merge_r * 1000.0);
-        Self::spawn_worker(name, cfg, max_batch, move || {
-            // one scratch pool per variant worker, alive for the worker's
-            // whole lifetime: after the first batch warms it, steady-state
-            // serving reallocates no encoder buffers (the worker loop is
-            // single-threaded, so the RefCell is never contended)
-            let pool = RefCell::new(ScratchPool::new());
+        Self::spawn_worker(name, cfg, max_batch, move |metrics: &Arc<Metrics>| {
+            // one session per variant worker, alive for the worker's
+            // whole lifetime: weights resolve once here (the engine cache
+            // shares the resolution across equal-config workers) and
+            // never again, and after the first batch warms the pools,
+            // steady-state inference allocates nothing (the worker loop
+            // is single-threaded, so the RefCell is never contended)
+            let mut sess = match engine.vit_session(&model_cfg) {
+                Ok(s) => s,
+                Err(e) => {
+                    eprintln!("[pitome worker] session init failed: {e}");
+                    return None;
+                }
+            };
+            sess.set_workers(workers);
+            let sess = RefCell::new(sess);
+            let metrics = metrics.clone();
             Some(move |batch: &[InferRequest]| {
-                cpu_run_batch(&ps, &model_cfg, workers,
-                              &mut pool.borrow_mut(), batch)
+                cpu_run_batch(&mut sess.borrow_mut(), &metrics, batch)
             })
         })
     }
@@ -229,19 +245,25 @@ where
     }
 }
 
-/// Execute a batch on the CPU reference ViT: parse each request's patches
-/// tensor, run the batch encoder (samples fanned out over `workers`
-/// threads, each reusing a scratch from `pool`), and return one logits
-/// tensor per request.
-fn cpu_run_batch(ps: &ParamStore, cfg: &ViTConfig, workers: usize,
-                 pool: &mut ScratchPool, batch: &[InferRequest])
-                 -> Result<Vec<Vec<HostTensor>>> {
-    let model = ViTModel::new(ps, cfg.clone());
+/// Execute a batch on the CPU reference ViT through the worker's
+/// long-lived [`VitSession`]: parse each request's patches tensor into a
+/// pooled slot, run embed + encoder + head, and return one logits tensor
+/// per request.
+///
+/// The span from the first parse through `forward` — everything except
+/// materializing the owned response tensors handed to the submitter's
+/// channel — is the *inference region*; its allocation count is recorded
+/// per batch ([`Metrics::record_infer_allocs`]) and must be zero for a
+/// warmed worker (`tests/alloc_free.rs`).
+fn cpu_run_batch(sess: &mut VitSession, metrics: &Metrics,
+                 batch: &[InferRequest]) -> Result<Vec<Vec<HostTensor>>> {
+    let before = allocs_this_thread();
     // exact-shape admission: a malformed request must become an error (the
     // responders are dropped, submitters see a closed channel), never a
     // panic that would kill the worker thread for every later request
-    let (want_rows, want_cols) = (cfg.num_patches(), cfg.patch_dim());
-    let mut patches = Vec::with_capacity(batch.len());
+    let (want_rows, want_cols) =
+        (sess.cfg().num_patches(), sess.cfg().patch_dim());
+    sess.begin(batch.len());
     for (i, req) in batch.iter().enumerate() {
         let t = req.inputs.first().ok_or_else(|| {
             Error::Coordinator(format!("cpu worker: request {i} has no inputs"))
@@ -253,14 +275,17 @@ fn cpu_run_batch(ps: &ParamStore, cfg: &ViTConfig, workers: usize,
                 "cpu worker: request {i} patches shape {shape:?} != \
                  expected ({want_rows}, {want_cols})")));
         }
-        patches.push(Mat::from_vec(want_rows, want_cols, d.to_vec()));
+        sess.set_patches_slice(i, d)?;
     }
-    let logits = model.logits_batch_pooled(&patches, 0, workers, pool)?;
-    Ok(logits
-        .into_iter()
-        .map(|lg| {
-            let n = lg.len();
-            vec![HostTensor::F32(lg, vec![n])]
+    sess.forward(0)?;
+    metrics.record_infer_allocs(allocs_this_thread() - before);
+    // transport boundary: the response tensors are owned by the submitter
+    // and cross a channel, so they are allocated (outside the zero-alloc
+    // guarantee, which covers everything the model computes)
+    Ok((0..batch.len())
+        .map(|i| {
+            let lg = sess.logits(i);
+            vec![HostTensor::F32(lg.to_vec(), vec![lg.len()])]
         })
         .collect())
 }

@@ -16,6 +16,7 @@ struct Inner {
     hist: [u64; 16],
     batches: u64,
     batched_requests: u64,
+    infer_allocs: u64,
 }
 
 /// Thread-safe metrics sink.
@@ -39,6 +40,12 @@ pub struct Snapshot {
     pub max_us: u64,
     /// mean requests per executed batch
     pub mean_batch: f64,
+    /// heap allocations inside the most recent batch's inference region
+    /// (parse + embed + forward + heads, outputs included; response
+    /// transport excluded).  Always 0 unless the process installs the
+    /// `CountingAllocator` test hook — the steady-state acceptance is 0
+    /// (`tests/alloc_free.rs`).
+    pub last_infer_allocs: u64,
 }
 
 impl Metrics {
@@ -57,6 +64,14 @@ impl Metrics {
         let mut g = self.inner.lock().unwrap();
         g.batches += 1;
         g.batched_requests += n as u64;
+    }
+
+    /// Record the allocation count of one batch's inference region (the
+    /// CPU worker calls this with the `CountingAllocator` delta around
+    /// its parse→forward→heads span).
+    pub fn record_infer_allocs(&self, allocs: u64) {
+        let mut g = self.inner.lock().unwrap();
+        g.infer_allocs = allocs;
     }
 
     fn percentile(hist: &[u64; 16], count: u64, q: f64) -> u64 {
@@ -88,6 +103,7 @@ impl Metrics {
             } else {
                 0.0
             },
+            last_infer_allocs: g.infer_allocs,
         }
     }
 }

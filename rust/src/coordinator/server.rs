@@ -7,6 +7,7 @@ use std::sync::Arc;
 use std::time::Instant;
 
 use crate::config::{ServingConfig, ViTConfig};
+use crate::engine::Engine;
 use crate::error::{Error, Result};
 use crate::model::ParamStore;
 use crate::runtime::{load_flat_params, HostTensor, Registry};
@@ -57,12 +58,15 @@ impl Coordinator {
     /// Boot a coordinator that serves the pure-Rust CPU reference ViT —
     /// no PJRT artifacts required.  `selection` maps each logical model to
     /// its compression ladder of `(merge mode, keep ratio)` rungs,
-    /// most-accurate-first.  Every rung shares the same parameter store;
-    /// each collected batch runs through the batch encoder, whose merge
-    /// steps fan out over `cfg.workers` threads (`merge::batch`).
+    /// most-accurate-first.  Every rung shares one [`Engine`] (weights +
+    /// resolution cache); each variant worker holds a long-lived
+    /// `VitSession` from it, whose encoder fan-out uses `cfg.workers`
+    /// threads, so steady-state serving re-resolves nothing and allocates
+    /// nothing in the inference region.
     pub fn boot_cpu(ps: &Arc<ParamStore>,
                     selection: &[(&str, Vec<(String, f64)>)],
                     cfg: ServingConfig) -> Result<Coordinator> {
+        let engine = Arc::new(Engine::new(ps.clone()));
         let mut router = Router::new();
         for (model, rungs) in selection {
             for (mode, r) in rungs {
@@ -71,7 +75,8 @@ impl Coordinator {
                     merge_r: *r,
                     ..Default::default()
                 };
-                let worker = VariantWorker::spawn_cpu(ps.clone(), model_cfg, &cfg);
+                let worker =
+                    VariantWorker::spawn_cpu(engine.clone(), model_cfg, &cfg);
                 router.add_variant(model, Variant {
                     artifact: format!("cpu_{}_r{:.0}", mode, r * 1000.0),
                     mode: mode.clone(),

@@ -1,0 +1,60 @@
+//! Shared classifier-head stage for the model sessions: one dense layer
+//! over each sample's CLS feature, through pooled buffers.
+
+use crate::error::Result;
+use crate::model::params::{MatSpan, VecSpan};
+use crate::model::ParamStore;
+use crate::tensor::{argmax, dense_into, Mat};
+
+use super::{OutputPool, Session};
+
+/// The head stage [`VitSession`](super::VitSession) and
+/// [`BertSession`](super::BertSession) share: resolved head weight spans
+/// plus the pooled per-sample logits buffers and the (1, dim) CLS-feature
+/// staging matrix.  Kept in one place so the two sessions cannot diverge.
+pub(super) struct ClassifierHead {
+    w: MatSpan,
+    b: VecSpan,
+    /// (1, dim) CLS-feature staging for the head matmul
+    feat: Mat,
+    /// pooled (1, num_classes) logits per sample
+    logits: OutputPool,
+}
+
+impl ClassifierHead {
+    /// Resolve the head tensors named `w_name` / `b_name` inside `ps`.
+    pub(super) fn resolve(ps: &ParamStore, w_name: &str, b_name: &str)
+                          -> Result<ClassifierHead> {
+        Ok(ClassifierHead {
+            w: ps.mat2_span(w_name)?,
+            b: ps.vec1_span(b_name)?,
+            feat: Mat::zeros(0, 0),
+            logits: OutputPool::new(),
+        })
+    }
+
+    /// Run the head over every sample's CLS feature in `session`, into
+    /// the pooled logits buffers (allocation-free once warm).
+    pub(super) fn apply(&mut self, ps: &ParamStore, session: &Session) {
+        let count = session.batch_len();
+        let logits = self.logits.take(count);
+        let hw = ps.mat_at(self.w);
+        let hb = ps.vec_at(self.b);
+        for (i, lg) in logits.iter_mut().enumerate() {
+            let out = session.output(i);
+            self.feat.reshape(1, out.cols);
+            self.feat.row_mut(0).copy_from_slice(out.row(0));
+            dense_into(&self.feat, hw, Some(hb), lg);
+        }
+    }
+
+    /// Class logits of sample `i` from the most recent apply.
+    pub(super) fn logits(&self, i: usize) -> &[f32] {
+        self.logits.get(i).row(0)
+    }
+
+    /// Predicted class of sample `i`.
+    pub(super) fn predict(&self, i: usize) -> usize {
+        argmax(self.logits(i))
+    }
+}

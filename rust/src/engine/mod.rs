@@ -1,0 +1,374 @@
+//! The owning inference API: [`Engine`] (weights + resolution cache) and
+//! [`Session`] (per-worker reusable state) — end-to-end zero-allocation
+//! serving.
+//!
+//! # Why
+//!
+//! PRs 2–3 made the encoder *layer loop* allocation-free, but the public
+//! surface had sprawled into overlapping free functions
+//! (`encoder_forward` / `_scratch` / `_batch` / `_batch_pooled`,
+//! `ViTModel::*_batch[_pooled]`, `bert_logits_batch_pooled`) that each
+//! re-resolved weights per call, hand-threaded scratch pools, and still
+//! allocated per-sample outputs in the final LayerNorm and the batch
+//! driver.  This module replaces the zoo with two owning types, the way
+//! ToMe's `patch()` replaces per-model glue:
+//!
+//! * [`Engine`] — owns the [`ParamStore`] and a weight-resolution cache
+//!   (one [`ResolvedEncoder`] per [`EncoderCfg`], keyed by config hash),
+//!   so **nothing is ever re-resolved per batch**.  Cheap to share:
+//!   thread-safe, one per process.
+//! * [`Session`] — per worker, never shared: a [`ScratchPool`], pooled
+//!   input [`SeqSlot`]s, and an [`OutputPool`] the final LayerNorm writes
+//!   into.  After one warm batch, a whole request — inputs, layer loop,
+//!   outputs — performs **zero heap allocations** (asserted by
+//!   `tests/alloc_free.rs`).
+//!
+//! # Lifecycle
+//!
+//! ```no_run
+//! use pitome::config::ViTConfig;
+//! use pitome::engine::Engine;
+//! use pitome::model::synthetic_vit_store;
+//!
+//! let cfg = ViTConfig { merge_mode: "pitome".into(), merge_r: 0.9,
+//!                       ..Default::default() };
+//! let engine = Engine::from_store(synthetic_vit_store(&cfg, 7));
+//! // one session per worker thread, alive for the worker's lifetime
+//! let mut sess = engine.vit_session(&cfg).unwrap();
+//! loop {
+//!     let patches: Vec<pitome::tensor::Mat> = todo!("collect a batch");
+//!     sess.begin(patches.len());
+//!     for (i, p) in patches.iter().enumerate() {
+//!         sess.set_patches(i, p).unwrap();
+//!     }
+//!     sess.forward(0).unwrap();
+//!     for i in 0..patches.len() {
+//!         let _logits: &[f32] = sess.logits(i);
+//!     }
+//! }
+//! ```
+//!
+//! For the raw encoder (no model head) use [`Engine::session`] →
+//! [`Session::forward_batch`].  The legacy free functions remain as thin
+//! `#[deprecated]` wrappers; `tests/prop_engine.rs` proves this API is
+//! bitwise-identical to every one of them in all ten merge modes.
+//!
+//! # Shape changes between rounds
+//!
+//! Pools never hold stale shapes: every buffer is reshaped in place per
+//! round ([`crate::tensor::Mat::reshape`] keeps capacity, so shrinking is
+//! free and growing past the previous peak is the only thing that ever
+//! allocates), and inputs whose shape contradicts the session's config
+//! are rejected with [`Error::Shape`](crate::error::Error) instead of
+//! being silently mis-merged.
+
+#![deny(missing_docs)]
+
+mod head;
+mod output;
+mod text;
+mod vit;
+
+pub use output::OutputPool;
+pub use text::BertSession;
+pub use vit::VitSession;
+
+use std::collections::HashMap;
+use std::hash::{Hash, Hasher};
+use std::sync::{Arc, Mutex};
+
+use crate::config::{TextConfig, ViTConfig};
+use crate::data::Rng;
+use crate::error::{Error, Result};
+use crate::model::encoder::{encoder_forward_slot, encoder_forward_slots,
+                            SeqSlot};
+use crate::model::{EncoderCfg, ParamStore, ResolvedEncoder, ScratchPool};
+use crate::tensor::Mat;
+
+/// Hash an [`EncoderCfg`] for the resolution cache (f32 via bit pattern).
+fn cfg_key(cfg: &EncoderCfg) -> u64 {
+    let mut h = std::collections::hash_map::DefaultHasher::new();
+    cfg.prefix.hash(&mut h);
+    cfg.dim.hash(&mut h);
+    cfg.depth.hash(&mut h);
+    cfg.heads.hash(&mut h);
+    cfg.mode.hash(&mut h);
+    cfg.plan.hash(&mut h);
+    cfg.prop_attn.hash(&mut h);
+    cfg.tofu_threshold.to_bits().hash(&mut h);
+    h.finish()
+}
+
+/// The owning entry point for inference: parameter store + shared
+/// weight-resolution cache.  One per process; hand out one [`Session`]
+/// per worker thread via [`Engine::session`] /
+/// [`Engine::vit_session`] / [`Engine::bert_session`].
+pub struct Engine {
+    ps: Arc<ParamStore>,
+    /// resolved weights per config hash (the bucket holds the full
+    /// configs, so hash collisions degrade to a scan, never to a wrong
+    /// resolution)
+    resolved: Mutex<HashMap<u64, Vec<(EncoderCfg, Arc<ResolvedEncoder>)>>>,
+}
+
+impl Engine {
+    /// Wrap a shared parameter store.
+    pub fn new(ps: Arc<ParamStore>) -> Engine {
+        Engine { ps, resolved: Mutex::new(HashMap::new()) }
+    }
+
+    /// Convenience: take ownership of a store (wraps it in an `Arc`).
+    pub fn from_store(ps: ParamStore) -> Engine {
+        Engine::new(Arc::new(ps))
+    }
+
+    /// The underlying parameter store (e.g. for projection heads that
+    /// live outside the encoder).
+    pub fn params(&self) -> &ParamStore {
+        &self.ps
+    }
+
+    /// Shared handle to the parameter store.
+    pub fn params_arc(&self) -> Arc<ParamStore> {
+        self.ps.clone()
+    }
+
+    /// Resolve (or fetch from cache) the weights `cfg` names.  Every
+    /// session for an equal config shares one resolution — nothing is
+    /// re-resolved per session, let alone per batch.
+    pub fn resolve(&self, cfg: &EncoderCfg) -> Result<Arc<ResolvedEncoder>> {
+        let key = cfg_key(cfg);
+        let mut cache = self.resolved.lock().unwrap();
+        if let Some(bucket) = cache.get(&key) {
+            for (c, re) in bucket {
+                if c == cfg {
+                    return Ok(re.clone());
+                }
+            }
+        }
+        let re = Arc::new(ResolvedEncoder::new(&self.ps, cfg)?);
+        cache.entry(key).or_default().push((cfg.clone(), re.clone()));
+        Ok(re)
+    }
+
+    /// Open a raw encoder session for `cfg` (per worker thread — see the
+    /// module docs for the lifecycle).
+    pub fn session(&self, cfg: EncoderCfg) -> Result<Session> {
+        let re = self.resolve(&cfg)?;
+        Ok(Session {
+            ps: self.ps.clone(),
+            re,
+            cfg,
+            workers: 1,
+            pool: ScratchPool::new(),
+            slots: Vec::new(),
+            outputs: OutputPool::new(),
+            count: 0,
+        })
+    }
+
+    /// Open a full ViT session (patch embedding + encoder + classifier
+    /// head) for `cfg`.
+    pub fn vit_session(&self, cfg: &ViTConfig) -> Result<VitSession> {
+        VitSession::new(self, cfg)
+    }
+
+    /// Open a full BERT-style session (token embedding + encoder +
+    /// classifier head) for `cfg`.
+    pub fn bert_session(&self, cfg: &TextConfig) -> Result<BertSession> {
+        BertSession::new(self, cfg)
+    }
+
+    /// Number of distinct configs currently resolved in the cache.
+    pub fn resolved_configs(&self) -> usize {
+        self.resolved.lock().unwrap().values().map(Vec::len).sum()
+    }
+}
+
+/// Per-worker reusable inference state: resolved weights (shared via the
+/// engine's cache), a scratch pool for the fan-out, pooled input slots,
+/// and the output pool the final LayerNorm writes into.
+///
+/// A session is `Send` but offers no synchronized access (every useful
+/// method takes `&mut self`): keep exactly one per worker thread, alive
+/// for the worker's lifetime.  Reuse across batches of any (smaller or
+/// larger) size is safe and allocation-free once the peak shape has been
+/// seen.
+pub struct Session {
+    ps: Arc<ParamStore>,
+    re: Arc<ResolvedEncoder>,
+    cfg: EncoderCfg,
+    workers: usize,
+    pool: ScratchPool,
+    slots: Vec<SeqSlot>,
+    outputs: OutputPool,
+    count: usize,
+}
+
+impl Session {
+    /// The session's encoder config.
+    pub fn cfg(&self) -> &EncoderCfg {
+        &self.cfg
+    }
+
+    /// The underlying parameter store.
+    pub fn params(&self) -> &ParamStore {
+        &self.ps
+    }
+
+    /// Set the fan-out width for [`Session::forward`] (clamped to ≥ 1;
+    /// default 1 = inline, no thread spawns).
+    pub fn set_workers(&mut self, workers: usize) {
+        self.workers = workers.max(1);
+    }
+
+    /// Start a batch of `count` samples: pooled input slots are handed
+    /// out for [`Session::input_mut`] to fill (contents left from
+    /// previous rounds are unspecified).
+    pub fn begin(&mut self, count: usize) {
+        while self.slots.len() < count {
+            self.slots.push(SeqSlot::new());
+        }
+        self.count = count;
+    }
+
+    /// Number of samples in the current batch.
+    pub fn batch_len(&self) -> usize {
+        self.count
+    }
+
+    /// Input buffer for sample `i` of the current batch — reshape and
+    /// fill it with the (plan[0], dim) token matrix.
+    pub fn input_mut(&mut self, i: usize) -> &mut Mat {
+        assert!(i < self.count, "input {i} outside the batch ({})", self.count);
+        &mut self.slots[i].x
+    }
+
+    /// Check every filled input against the config (the stale-shape
+    /// guard: a slot refilled at the wrong shape is an error, never a
+    /// silent mis-merge).
+    fn validate_inputs(&self) -> Result<()> {
+        let (want_n, want_d) = (self.cfg.plan[0], self.cfg.dim);
+        for (i, s) in self.slots[..self.count].iter().enumerate() {
+            if s.x.rows != want_n || s.x.cols != want_d {
+                return Err(Error::Shape(format!(
+                    "session input {i}: ({}, {}) does not match the \
+                     config's (plan[0]={want_n}, dim={want_d})",
+                    s.x.rows, s.x.cols)));
+            }
+        }
+        Ok(())
+    }
+
+    /// Run the encoder over the current batch, fanning samples out over
+    /// up to the configured worker count.  Outputs land in the session's
+    /// [`OutputPool`] ([`Session::output`]); `seed` derives one
+    /// deterministic RNG stream per (layer, sample), so results are
+    /// independent of the fan-out width.  Zero heap allocations once
+    /// warm (single-worker; each extra worker costs only its thread
+    /// spawn).
+    pub fn forward(&mut self, seed: u64) -> Result<()> {
+        self.validate_inputs()?;
+        for s in &mut self.slots[..self.count] {
+            s.reset_sizes();
+        }
+        let outs = self.outputs.take(self.count);
+        if self.count == 0 {
+            return Ok(());
+        }
+        let w = self.workers.min(self.count);
+        encoder_forward_slots(&self.ps, &self.re, &self.cfg,
+                              &mut self.slots[..self.count], outs, seed,
+                              self.pool.take(w));
+        Ok(())
+    }
+
+    /// Serial variant of [`Session::forward`]: samples run in order on
+    /// the caller's thread, all drawing from one shared `rng` — the
+    /// historical single-sample contract (`encoder_forward` called in a
+    /// loop), bitwise-identical to it in every mode, stochastic ones
+    /// included.
+    pub fn forward_serial(&mut self, rng: &mut Rng) -> Result<()> {
+        self.validate_inputs()?;
+        for s in &mut self.slots[..self.count] {
+            s.reset_sizes();
+        }
+        let outs = self.outputs.take(self.count);
+        let scratch = &mut self.pool.take(1)[0];
+        for (slot, out) in self.slots[..self.count].iter_mut().zip(outs) {
+            encoder_forward_slot(&self.ps, &self.re, &self.cfg, slot, out,
+                                 rng, scratch);
+        }
+        Ok(())
+    }
+
+    /// Copy-in convenience over [`Session::begin`] / [`Session::forward`]:
+    /// run the encoder over `xs` and return the pooled outputs in sample
+    /// order.  Allocation-free once warm — inputs are copied into pooled
+    /// slots, outputs live in the session until the next round.
+    pub fn forward_batch(&mut self, xs: &[Mat], seed: u64) -> Result<&[Mat]> {
+        self.begin(xs.len());
+        for (slot, x) in self.slots[..self.count].iter_mut().zip(xs) {
+            slot.set_input(x);
+        }
+        self.forward(seed)?;
+        Ok(self.outputs.outputs())
+    }
+
+    /// One-sample convenience over [`Session::forward_serial`].
+    pub fn forward_one(&mut self, x: &Mat, rng: &mut Rng) -> Result<&Mat> {
+        self.begin(1);
+        self.slots[0].set_input(x);
+        self.forward_serial(rng)?;
+        Ok(self.outputs.get(0))
+    }
+
+    /// Output tokens (plan[depth], dim) of sample `i` from the most
+    /// recent forward.
+    pub fn output(&self, i: usize) -> &Mat {
+        self.outputs.get(i)
+    }
+
+    /// All outputs of the most recent forward, in sample order.
+    pub fn outputs(&self) -> &[Mat] {
+        self.outputs.outputs()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::synthetic_vit_store;
+
+    fn vit_cfg(mode: &str) -> ViTConfig {
+        ViTConfig { merge_mode: mode.into(), merge_r: 0.9,
+                    ..Default::default() }
+    }
+
+    #[test]
+    fn resolution_cache_shares_one_resolve_per_config() {
+        let vcfg = vit_cfg("pitome");
+        let engine = Engine::from_store(synthetic_vit_store(&vcfg, 1));
+        let cfg = EncoderCfg::from_vit(&vcfg);
+        let a = engine.resolve(&cfg).unwrap();
+        let b = engine.resolve(&cfg).unwrap();
+        assert!(Arc::ptr_eq(&a, &b), "equal configs must share a resolution");
+        assert_eq!(engine.resolved_configs(), 1);
+        let mut cfg2 = cfg.clone();
+        cfg2.mode = crate::merge::MergeMode::ToMe;
+        let c = engine.resolve(&cfg2).unwrap();
+        assert!(!Arc::ptr_eq(&a, &c));
+        assert_eq!(engine.resolved_configs(), 2);
+    }
+
+    #[test]
+    fn wrong_input_shape_is_rejected() {
+        let vcfg = vit_cfg("pitome");
+        let engine = Engine::from_store(synthetic_vit_store(&vcfg, 1));
+        let mut sess = engine.session(EncoderCfg::from_vit(&vcfg)).unwrap();
+        sess.begin(1);
+        sess.input_mut(0).reshape(3, 5); // neither plan[0] nor dim
+        let err = sess.forward(0).unwrap_err();
+        assert!(format!("{err}").contains("does not match"), "{err}");
+    }
+}

@@ -1,0 +1,112 @@
+//! Caller-owned pools of reusable output matrices.
+//!
+//! The historical batch drivers allocated one fresh `Mat` per sample for
+//! the final LayerNorm (and one `Vec` to collect them), so even with the
+//! allocation-free layer loop of PRs 2–3 every serving request still paid
+//! per-sample output allocations.  An [`OutputPool`] closes that gap: the
+//! driver writes each sample's result into a pooled buffer that survives
+//! the call, and a pool that has seen its peak `(batch, shape)` never
+//! allocates again — [`Mat`] buffers regrow transparently (capacity is
+//! never returned), so growing/shrinking batch shapes between rounds are
+//! safe by construction (`tests/prop_engine.rs` interleaves them).
+
+use crate::tensor::Mat;
+
+/// A pool of reusable output `Mat`s, checked out a batch at a time.
+///
+/// Lifecycle: [`OutputPool::take`] hands out `count` buffers for the
+/// drivers to overwrite; after the forward the same buffers are read back
+/// through [`OutputPool::get`] / [`OutputPool::outputs`] until the next
+/// `take`.  Shapes are whatever the driver wrote — a buffer reused at a
+/// new shape is reshaped in place ([`Mat::reshape`]), reusing its
+/// allocation whenever capacity allows.
+pub struct OutputPool {
+    mats: Vec<Mat>,
+    /// buffers handed out by the most recent [`OutputPool::take`]
+    live: usize,
+}
+
+impl OutputPool {
+    /// Empty pool; buffers are created on first use and then reused.
+    pub fn new() -> OutputPool {
+        OutputPool { mats: Vec::new(), live: 0 }
+    }
+
+    /// Check out `count` reusable buffers (growing the pool on first
+    /// use), to be fully overwritten by the caller.  Contents left over
+    /// from previous rounds are unspecified.
+    pub fn take(&mut self, count: usize) -> &mut [Mat] {
+        while self.mats.len() < count {
+            self.mats.push(Mat::zeros(0, 0));
+        }
+        self.live = count;
+        &mut self.mats[..count]
+    }
+
+    /// Number of buffers handed out by the most recent
+    /// [`OutputPool::take`].
+    pub fn len(&self) -> usize {
+        self.live
+    }
+
+    /// True when no buffers are checked out.
+    pub fn is_empty(&self) -> bool {
+        self.live == 0
+    }
+
+    /// Output `i` of the most recent round (panics when `i` is outside
+    /// it).
+    pub fn get(&self, i: usize) -> &Mat {
+        assert!(i < self.live, "output {i} outside the live batch ({})",
+                self.live);
+        &self.mats[i]
+    }
+
+    /// The most recent round's outputs, in sample order.
+    pub fn outputs(&self) -> &[Mat] {
+        &self.mats[..self.live]
+    }
+}
+
+impl Default for OutputPool {
+    fn default() -> Self {
+        OutputPool::new()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn take_grows_then_reuses_and_tracks_live() {
+        let mut p = OutputPool::new();
+        assert!(p.is_empty());
+        {
+            let outs = p.take(3);
+            for (i, m) in outs.iter_mut().enumerate() {
+                m.reshape(2, 2);
+                m.data.fill(i as f32);
+            }
+        }
+        assert_eq!(p.len(), 3);
+        assert_eq!(p.get(2).data, vec![2.0; 4]);
+        // shrink: live shrinks, buffers (and their capacity) survive
+        let ptr = p.get(0).data.as_ptr();
+        p.take(1);
+        assert_eq!(p.len(), 1);
+        assert_eq!(p.get(0).data.as_ptr(), ptr);
+        // regrow past the old peak
+        p.take(5);
+        assert_eq!(p.outputs().len(), 5);
+    }
+
+    #[test]
+    #[should_panic(expected = "outside the live batch")]
+    fn stale_index_rejected() {
+        let mut p = OutputPool::new();
+        p.take(2);
+        p.take(1);
+        let _ = p.get(1);
+    }
+}

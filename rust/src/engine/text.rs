@@ -1,0 +1,121 @@
+//! Full BERT-style serving session: token embedding + encoder +
+//! classifier head, all through pooled buffers.
+
+use std::sync::Arc;
+
+use crate::config::TextConfig;
+use crate::data::Rng;
+use crate::error::{Error, Result};
+use crate::model::params::MatSpan;
+use crate::model::{EncoderCfg, ParamStore};
+
+use super::head::ClassifierHead;
+use super::{Engine, Session};
+
+/// A [`Session`](super::Session) extended with the text model's
+/// non-encoder stages — token + positional embedding on the way in, the
+/// classifier head on the way out — so a whole tokens→logits request runs
+/// through pooled buffers.  One per worker thread.
+pub struct BertSession {
+    ps: Arc<ParamStore>,
+    session: Session,
+    tcfg: TextConfig,
+    tok: MatSpan,
+    pos: MatSpan,
+    head: ClassifierHead,
+}
+
+impl BertSession {
+    pub(super) fn new(engine: &Engine, cfg: &TextConfig) -> Result<BertSession> {
+        let ps = engine.params_arc();
+        let session = engine.session(EncoderCfg::from_text(cfg))?;
+        Ok(BertSession {
+            tok: ps.mat2_span("bert.tok")?,
+            pos: ps.mat2_span("bert.pos")?,
+            head: ClassifierHead::resolve(&ps, "bert.head.w", "bert.head.b")?,
+            ps,
+            session,
+            tcfg: cfg.clone(),
+        })
+    }
+
+    /// The session's model config.
+    pub fn cfg(&self) -> &TextConfig {
+        &self.tcfg
+    }
+
+    /// Set the encoder fan-out width (see
+    /// [`Session::set_workers`](super::Session::set_workers)).
+    pub fn set_workers(&mut self, workers: usize) {
+        self.session.set_workers(workers);
+    }
+
+    /// Start a batch of `count` sequences.
+    pub fn begin(&mut self, count: usize) {
+        self.session.begin(count);
+    }
+
+    /// Embed sequence `i`'s token ids into its pooled slot (token table +
+    /// positional embedding, numerically identical to `embed_tokens`).
+    /// Rejects a length that contradicts the config's plan and ids
+    /// outside the vocabulary.
+    pub fn set_tokens(&mut self, i: usize, tokens: &[i32]) -> Result<()> {
+        let want = self.session.cfg().plan[0];
+        if tokens.len() != want {
+            return Err(Error::Shape(format!(
+                "token sequence {i}: length {} != plan[0]={want}",
+                tokens.len())));
+        }
+        let table = self.ps.mat_at(self.tok);
+        let pos = self.ps.mat_at(self.pos);
+        for &t in tokens {
+            if t < 0 || t as usize >= table.rows {
+                return Err(Error::Shape(format!(
+                    "token sequence {i}: id {t} outside vocab of {}",
+                    table.rows)));
+            }
+        }
+        let dim = self.tcfg.dim;
+        let x = self.session.input_mut(i);
+        x.reshape(tokens.len(), dim);
+        for (r, &t) in tokens.iter().enumerate() {
+            let xr = x.row_mut(r);
+            let e = table.row(t as usize);
+            let p = pos.row(r);
+            for j in 0..dim {
+                xr[j] = e[j] + p[j];
+            }
+        }
+        Ok(())
+    }
+
+    /// Run encoder + classifier head over the current batch; logits land
+    /// in the pooled per-sample buffers ([`BertSession::logits`]).
+    pub fn forward(&mut self, seed: u64) -> Result<()> {
+        self.session.forward(seed)?;
+        self.head.apply(&self.ps, &self.session);
+        Ok(())
+    }
+
+    /// Serial shared-RNG variant (the historical single-sample contract).
+    pub fn forward_serial(&mut self, rng: &mut Rng) -> Result<()> {
+        self.session.forward_serial(rng)?;
+        self.head.apply(&self.ps, &self.session);
+        Ok(())
+    }
+
+    /// CLS feature of sequence `i` (len dim).
+    pub fn features(&self, i: usize) -> &[f32] {
+        self.session.output(i).row(0)
+    }
+
+    /// Class logits of sequence `i` (len num_classes).
+    pub fn logits(&self, i: usize) -> &[f32] {
+        self.head.logits(i)
+    }
+
+    /// Predicted class of sequence `i`.
+    pub fn predict(&self, i: usize) -> usize {
+        self.head.predict(i)
+    }
+}

@@ -1,0 +1,162 @@
+//! Full ViT serving session: patch embedding + encoder + classifier head,
+//! all through pooled buffers.
+
+use std::sync::Arc;
+
+use crate::config::ViTConfig;
+use crate::data::Rng;
+use crate::error::{Error, Result};
+use crate::model::params::{MatSpan, VecSpan};
+use crate::model::{EncoderCfg, ParamStore};
+use crate::tensor::{dense_into, Mat, MatRef};
+
+use super::head::ClassifierHead;
+use super::{Engine, Session};
+
+/// A [`Session`](super::Session) extended with the ViT model's
+/// non-encoder stages — patch embedding (+ CLS + positional embedding) on
+/// the way in, the classifier head on the way out — so a whole
+/// patches→logits request runs through pooled buffers.
+///
+/// Same ownership rules as the raw session: one per worker thread, alive
+/// for the worker's lifetime.  This is what the coordinator's CPU
+/// workers hold (`coordinator/batcher.rs`).
+pub struct VitSession {
+    ps: Arc<ParamStore>,
+    session: Session,
+    vcfg: ViTConfig,
+    embed_w: MatSpan,
+    embed_b: VecSpan,
+    cls: VecSpan,
+    pos: MatSpan,
+    /// patch-embedding scratch (n_patches, dim)
+    emb: Mat,
+    head: ClassifierHead,
+}
+
+impl VitSession {
+    pub(super) fn new(engine: &Engine, cfg: &ViTConfig) -> Result<VitSession> {
+        let ps = engine.params_arc();
+        let session = engine.session(EncoderCfg::from_vit(cfg))?;
+        Ok(VitSession {
+            embed_w: ps.mat2_span("vit.embed.w")?,
+            embed_b: ps.vec1_span("vit.embed.b")?,
+            cls: ps.vec1_span("vit.cls")?,
+            pos: ps.mat2_span("vit.pos")?,
+            head: ClassifierHead::resolve(&ps, "vit.head.w", "vit.head.b")?,
+            ps,
+            session,
+            vcfg: cfg.clone(),
+            emb: Mat::zeros(0, 0),
+        })
+    }
+
+    /// The session's model config.
+    pub fn cfg(&self) -> &ViTConfig {
+        &self.vcfg
+    }
+
+    /// Set the encoder fan-out width (see
+    /// [`Session::set_workers`](super::Session::set_workers)).
+    pub fn set_workers(&mut self, workers: usize) {
+        self.session.set_workers(workers);
+    }
+
+    /// Start a batch of `count` samples.
+    pub fn begin(&mut self, count: usize) {
+        self.session.begin(count);
+    }
+
+    /// Embed sample `i`'s patches — shape (num_patches, patch_dim) — into
+    /// its pooled token slot (patch embed + CLS + positional embedding,
+    /// numerically identical to `ViTModel::tokens`).  Rejects any other
+    /// shape.
+    pub fn set_patches(&mut self, i: usize, patches: &Mat) -> Result<()> {
+        self.set_patches_view(i, patches.view())
+    }
+
+    /// [`VitSession::set_patches`] from a raw row-major slice (the
+    /// serving path: request tensors arrive as flat f32 data and are
+    /// consumed in place, no staging copy).
+    pub fn set_patches_slice(&mut self, i: usize, data: &[f32]) -> Result<()> {
+        let (rows, cols) = (self.vcfg.num_patches(), self.vcfg.patch_dim());
+        if data.len() != rows * cols {
+            return Err(Error::Shape(format!(
+                "patches for sample {i}: {} elements != expected {rows}x{cols}",
+                data.len())));
+        }
+        self.set_patches_view(i, MatRef { rows, cols, data })
+    }
+
+    fn set_patches_view(&mut self, i: usize, patches: MatRef<'_>)
+                        -> Result<()> {
+        let (want_rows, want_cols) =
+            (self.vcfg.num_patches(), self.vcfg.patch_dim());
+        if patches.rows != want_rows || patches.cols != want_cols {
+            return Err(Error::Shape(format!(
+                "patches for sample {i}: ({}, {}) != expected \
+                 ({want_rows}, {want_cols})", patches.rows, patches.cols)));
+        }
+        dense_into(patches, self.ps.mat_at(self.embed_w),
+                   Some(self.ps.vec_at(self.embed_b)), &mut self.emb);
+        let dim = self.vcfg.dim;
+        let n = self.emb.rows + 1;
+        let x = self.session.input_mut(i);
+        x.reshape(n, dim);
+        x.row_mut(0).copy_from_slice(self.ps.vec_at(self.cls));
+        for r in 0..self.emb.rows {
+            x.row_mut(r + 1).copy_from_slice(self.emb.row(r));
+        }
+        let pos = self.ps.mat_at(self.pos);
+        for r in 0..n {
+            let xr = x.row_mut(r);
+            for (v, &p) in xr.iter_mut().zip(pos.row(r)) {
+                *v += p;
+            }
+        }
+        Ok(())
+    }
+
+    /// Run encoder + classifier head over the current batch (fan-out
+    /// seeded per (layer, sample) from `seed`); logits land in the pooled
+    /// per-sample buffers ([`VitSession::logits`]).
+    pub fn forward(&mut self, seed: u64) -> Result<()> {
+        self.session.forward(seed)?;
+        self.head.apply(&self.ps, &self.session);
+        Ok(())
+    }
+
+    /// Serial shared-RNG variant (the historical single-sample contract;
+    /// see [`Session::forward_serial`](super::Session::forward_serial)).
+    pub fn forward_serial(&mut self, rng: &mut Rng) -> Result<()> {
+        self.session.forward_serial(rng)?;
+        self.head.apply(&self.ps, &self.session);
+        Ok(())
+    }
+
+    /// CLS feature of sample `i` (len dim).
+    pub fn features(&self, i: usize) -> &[f32] {
+        self.session.output(i).row(0)
+    }
+
+    /// Class logits of sample `i` (len num_classes).
+    pub fn logits(&self, i: usize) -> &[f32] {
+        self.head.logits(i)
+    }
+
+    /// Predicted class of sample `i`.
+    pub fn predict(&self, i: usize) -> usize {
+        self.head.predict(i)
+    }
+
+    /// One-sample convenience under the serial shared-RNG contract:
+    /// embed, forward, and return the CLS feature (bitwise-identical to
+    /// the historical `ViTModel::features`).
+    pub fn features_one(&mut self, patches: &Mat, rng: &mut Rng)
+                        -> Result<&[f32]> {
+        self.begin(1);
+        self.set_patches(0, patches)?;
+        self.forward_serial(rng)?;
+        Ok(self.features(0))
+    }
+}

@@ -2,9 +2,9 @@
 //! attention indicator, ratio-r vs fixed-k schedules.
 
 use crate::config::{TextConfig, ViTConfig};
+use crate::engine::Engine;
 use crate::error::Result;
 use crate::merge::{fixed_k_plan, merge_plan};
-use crate::model::ParamStore;
 
 use super::retrieval::{self, RetrievalRow};
 use super::textcls::{self, TextRow};
@@ -14,25 +14,27 @@ pub const VARIANTS: [&str; 5] = [
     "pitome", "pitome_noprot", "pitome_rand", "pitome_attn", "tome",
 ];
 
-/// Retrieval ablation rows (Table 1 left block).
-pub fn retrieval_ablation(clip_ps: &ParamStore, rs: &[f64], n: usize)
+/// Retrieval ablation rows (Table 1 left block); `clip` is an engine
+/// over the CLIP parameter store.
+pub fn retrieval_ablation(clip: &Engine, rs: &[f64], n: usize)
                           -> Result<Vec<RetrievalRow>> {
     let mut rows = Vec::new();
     for &variant in VARIANTS.iter() {
         for &r in rs {
-            rows.push(retrieval::eval_config(clip_ps, variant, r, n)?);
+            rows.push(retrieval::eval_config(clip, variant, r, n)?);
         }
     }
     Ok(rows)
 }
 
-/// Text-classification ablation rows (Table 1 right block).
-pub fn textcls_ablation(bert_ps: &ParamStore, rs: &[f64], n: usize)
+/// Text-classification ablation rows (Table 1 right block); `bert` is an
+/// engine over the BERT parameter store.
+pub fn textcls_ablation(bert: &Engine, rs: &[f64], n: usize)
                         -> Result<Vec<TextRow>> {
     let mut rows = Vec::new();
     for &variant in VARIANTS.iter() {
         for &r in rs {
-            rows.push(textcls::eval_config(bert_ps, variant, r, n)?);
+            rows.push(textcls::eval_config(bert, variant, r, n)?);
         }
     }
     Ok(rows)

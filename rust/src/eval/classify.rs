@@ -4,8 +4,9 @@
 
 use crate::config::ViTConfig;
 use crate::data::{patchify, shape_item, TEST_SEED};
+use crate::engine::Engine;
 use crate::error::Result;
-use crate::model::{flops, ParamStore, ScratchPool, ViTModel};
+use crate::model::flops;
 
 /// One result row.
 #[derive(Clone, Debug)]
@@ -27,14 +28,14 @@ const EVAL_CHUNK: usize = 32;
 
 /// Evaluate one (mode, r) configuration over `n_test` ShapeBench items,
 /// batching the encoder across all available worker threads.
-pub fn eval_config(ps: &ParamStore, mode: &str, r: f64, n_test: usize)
+pub fn eval_config(engine: &Engine, mode: &str, r: f64, n_test: usize)
                    -> Result<ClassifyRow> {
-    eval_config_with_workers(ps, mode, r, n_test,
+    eval_config_with_workers(engine, mode, r, n_test,
                              crate::merge::batch::recommended_workers())
 }
 
 /// [`eval_config`] with an explicit worker-thread count (1 = serial).
-pub fn eval_config_with_workers(ps: &ParamStore, mode: &str, r: f64,
+pub fn eval_config_with_workers(engine: &Engine, mode: &str, r: f64,
                                 n_test: usize, workers: usize)
                                 -> Result<ClassifyRow> {
     let cfg = ViTConfig {
@@ -42,24 +43,27 @@ pub fn eval_config_with_workers(ps: &ParamStore, mode: &str, r: f64,
         merge_r: r,
         ..Default::default()
     };
-    let model = ViTModel::new(ps, cfg.clone());
     let mut correct = 0usize;
     let mut done = 0usize;
-    // one scratch pool for the whole sweep: encoder buffers are reused
-    // across every eval chunk
-    let mut pool = ScratchPool::new();
+    // one session for the whole sweep: slots, scratches, outputs, and
+    // logits buffers are all reused across every eval chunk
+    let mut sess = engine.vit_session(&cfg)?;
+    sess.set_workers(workers);
     while done < n_test {
         let count = EVAL_CHUNK.min(n_test - done);
-        let mut patches = Vec::with_capacity(count);
+        sess.begin(count);
         let mut labels = Vec::with_capacity(count);
         for j in 0..count {
             let item = shape_item(TEST_SEED, (done + j) as u64);
-            patches.push(patchify(&item.image, cfg.patch_size));
+            sess.set_patches(j, &patchify(&item.image, cfg.patch_size))?;
             labels.push(item.label);
         }
-        let preds = model.predict_batch_pooled(&patches, 0xE7A1 ^ done as u64,
-                                               workers, &mut pool)?;
-        correct += preds.iter().zip(&labels).filter(|(p, l)| p == l).count();
+        sess.forward(0xE7A1 ^ done as u64)?;
+        correct += labels
+            .iter()
+            .enumerate()
+            .filter(|(j, l)| sess.predict(*j) == **l)
+            .count();
         done += count;
     }
     Ok(ClassifyRow {
@@ -72,13 +76,13 @@ pub fn eval_config_with_workers(ps: &ParamStore, mode: &str, r: f64,
 }
 
 /// Sweep modes x ratios (the Figure 6 curves).
-pub fn sweep(ps: &ParamStore, modes: &[&str], rs: &[f64], n_test: usize)
+pub fn sweep(engine: &Engine, modes: &[&str], rs: &[f64], n_test: usize)
              -> Result<Vec<ClassifyRow>> {
     let mut rows = Vec::new();
-    rows.push(eval_config(ps, "none", 1.0, n_test)?);
+    rows.push(eval_config(engine, "none", 1.0, n_test)?);
     for &mode in modes {
         for &r in rs {
-            rows.push(eval_config(ps, mode, r, n_test)?);
+            rows.push(eval_config(engine, mode, r, n_test)?);
         }
     }
     Ok(rows)

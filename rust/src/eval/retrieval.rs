@@ -3,22 +3,31 @@
 
 use crate::config::ViTConfig;
 use crate::data::{caption_for, patchify, shape_item, Rng, TEST_SEED};
+use crate::engine::{Engine, VitSession};
 use crate::error::Result;
 use crate::model::text::{clip_text_embed, l2_normalize};
-use crate::model::{flops, ParamStore, ViTModel};
+use crate::model::flops;
 use crate::tensor::{dense, matmul_nt, Mat};
 
 use super::recall_at_k;
 
-/// CLIP vision-tower embedding for one sample under a merge config.
-pub fn clip_image_embed(ps: &ParamStore, cfg: &ViTConfig, patches: &Mat,
-                        rng: &mut Rng) -> Result<Vec<f32>> {
-    let model = ViTModel::new(ps, cfg.clone());
-    let f = model.features(patches, rng)?;
-    let fm = Mat::from_vec(1, f.len(), f);
-    let mut e = dense(&fm, &ps.mat2("proj.img")?, None).data;
+/// CLIP vision-tower embedding through a caller-owned session (the
+/// sweep reuses one session — and its pooled buffers — for every image).
+fn image_embed_with(sess: &mut VitSession, engine: &Engine, patches: &Mat,
+                    rng: &mut Rng) -> Result<Vec<f32>> {
+    let f = sess.features_one(patches, rng)?;
+    let fm = Mat::from_vec(1, f.len(), f.to_vec());
+    let mut e = dense(&fm, &engine.params().mat2("proj.img")?, None).data;
     l2_normalize(&mut e);
     Ok(e)
+}
+
+/// CLIP vision-tower embedding for one sample under a merge config
+/// (one-shot convenience over a transient session).
+pub fn clip_image_embed(engine: &Engine, cfg: &ViTConfig, patches: &Mat,
+                        rng: &mut Rng) -> Result<Vec<f32>> {
+    let mut sess = engine.vit_session(cfg)?;
+    image_embed_with(&mut sess, engine, patches, rng)
 }
 
 /// One retrieval result row.
@@ -39,7 +48,7 @@ pub struct RetrievalRow {
 }
 
 /// Evaluate one merge config over `n` test pairs.
-pub fn eval_config(ps: &ParamStore, mode: &str, r: f64, n: usize)
+pub fn eval_config(engine: &Engine, mode: &str, r: f64, n: usize)
                    -> Result<RetrievalRow> {
     let vcfg = ViTConfig {
         merge_mode: mode.into(),
@@ -51,10 +60,15 @@ pub fn eval_config(ps: &ParamStore, mode: &str, r: f64, n: usize)
     let embed_dim = 64usize;
     let mut img = Mat::zeros(n, embed_dim);
     let mut txt = Mat::zeros(n, embed_dim);
+    let ps = engine.params();
+    // one vision session for the whole config: pooled buffers serve all
+    // `n` images (the serial shared-RNG contract matches the historical
+    // per-sample `ViTModel::features` loop bitwise)
+    let mut sess = engine.vit_session(&vcfg)?;
     for i in 0..n {
         let item = shape_item(TEST_SEED, i as u64);
         let patches = patchify(&item.image, vcfg.patch_size);
-        let ie = clip_image_embed(ps, &vcfg, &patches, &mut rng)?;
+        let ie = image_embed_with(&mut sess, engine, &patches, &mut rng)?;
         img.row_mut(i).copy_from_slice(&ie);
         let cap = caption_for(TEST_SEED, i as u64);
         let te = clip_text_embed(ps, &cap, 64, 2, 4, embed_dim, &mut rng)?;
@@ -73,12 +87,12 @@ pub fn eval_config(ps: &ParamStore, mode: &str, r: f64, n: usize)
 }
 
 /// Sweep for the Figure 3 curves.
-pub fn sweep(ps: &ParamStore, modes: &[&str], rs: &[f64], n: usize)
+pub fn sweep(engine: &Engine, modes: &[&str], rs: &[f64], n: usize)
              -> Result<Vec<RetrievalRow>> {
-    let mut rows = vec![eval_config(ps, "none", 1.0, n)?];
+    let mut rows = vec![eval_config(engine, "none", 1.0, n)?];
     for &mode in modes {
         for &r in rs {
-            rows.push(eval_config(ps, mode, r, n)?);
+            rows.push(eval_config(engine, mode, r, n)?);
         }
     }
     Ok(rows)

@@ -7,7 +7,8 @@
 //! SD_tome -> a positive constant.
 
 use crate::data::Rng;
-use crate::graph::{spectral_distance, token_graph, Partition};
+use crate::graph::{spectral_distance_scratch, token_graph, EigScratch,
+                   Partition};
 use crate::merge::energy::energy_from_gram_into;
 use crate::merge::pitome::{ordered_bsm_plan_gram_into, Split};
 use crate::merge::tome::tome_plan_gram_into;
@@ -285,11 +286,13 @@ pub struct SpectralRow {
 
 /// Run the sweep: for each noise level, coarsen with each algorithm and
 /// report SD and cross-cluster merge fraction.  One [`CoarsenScratch`]
-/// serves the whole sweep.
+/// and one [`EigScratch`] serve the whole sweep, so every SD(G, Gc)
+/// point after the first runs through warmed buffers.
 pub fn theorem1_sweep(noises: &[f64], steps: usize, k: usize)
                       -> Vec<SpectralRow> {
     let mut rows = Vec::new();
     let mut scratch = CoarsenScratch::new();
+    let mut eig = EigScratch::new();
     let mut p = Partition::identity(0);
     for &noise in noises {
         let spec = ClusterSpec {
@@ -306,7 +309,7 @@ pub fn theorem1_sweep(noises: &[f64], steps: usize, k: usize)
                              (CoarsenAlgo::Random, "random")] {
             iterative_coarsen_scratch(&kf, algo, steps, k, 0.6, 7,
                                       &mut scratch, &mut p);
-            let sd = spectral_distance(&w, &p);
+            let sd = spectral_distance_scratch(&w, &p, &mut eig);
             rows.push(SpectralRow {
                 noise,
                 algo: name.into(),

@@ -3,10 +3,9 @@
 
 use crate::config::TextConfig;
 use crate::data::{sent_item, TEST_SEED};
+use crate::engine::Engine;
 use crate::error::Result;
 use crate::model::flops::encoder_flops;
-use crate::model::{bert_logits_batch_pooled, ParamStore, ScratchPool};
-use crate::tensor::argmax;
 
 /// One text-classification row.
 #[derive(Clone, Debug)]
@@ -26,14 +25,14 @@ const EVAL_CHUNK: usize = 32;
 
 /// Evaluate one configuration over `n` test sentences, batching the
 /// encoder across all available worker threads.
-pub fn eval_config(ps: &ParamStore, mode: &str, r: f64, n: usize)
+pub fn eval_config(engine: &Engine, mode: &str, r: f64, n: usize)
                    -> Result<TextRow> {
-    eval_config_with_workers(ps, mode, r, n,
+    eval_config_with_workers(engine, mode, r, n,
                              crate::merge::batch::recommended_workers())
 }
 
 /// [`eval_config`] with an explicit worker-thread count (1 = serial).
-pub fn eval_config_with_workers(ps: &ParamStore, mode: &str, r: f64, n: usize,
+pub fn eval_config_with_workers(engine: &Engine, mode: &str, r: f64, n: usize,
                                 workers: usize) -> Result<TextRow> {
     let cfg = TextConfig {
         merge_mode: mode.into(),
@@ -42,26 +41,25 @@ pub fn eval_config_with_workers(ps: &ParamStore, mode: &str, r: f64, n: usize,
     };
     let mut correct = 0usize;
     let mut done = 0usize;
-    // one scratch pool for the whole sweep: encoder buffers are reused
-    // across every eval chunk
-    let mut pool = ScratchPool::new();
+    // one session for the whole sweep: slots, scratches, outputs, and
+    // logits buffers are all reused across every eval chunk
+    let mut sess = engine.bert_session(&cfg)?;
+    sess.set_workers(workers);
     while done < n {
         let count = EVAL_CHUNK.min(n - done);
-        let mut seqs = Vec::with_capacity(count);
+        sess.begin(count);
         let mut labels = Vec::with_capacity(count);
         for j in 0..count {
             let (toks, label) =
                 sent_item(TEST_SEED ^ 0xAB, (done + j) as u64, cfg.seq_len, 16);
-            seqs.push(toks);
+            sess.set_tokens(j, &toks)?;
             labels.push(label);
         }
-        let logits = bert_logits_batch_pooled(ps, &cfg, &seqs,
-                                              0x7E57 ^ done as u64, workers,
-                                              &mut pool)?;
-        correct += logits
+        sess.forward(0x7E57 ^ done as u64)?;
+        correct += labels
             .iter()
-            .zip(&labels)
-            .filter(|(lg, l)| argmax(lg) == **l)
+            .enumerate()
+            .filter(|(j, l)| sess.predict(*j) == **l)
             .count();
         done += count;
     }
@@ -77,12 +75,12 @@ pub fn eval_config_with_workers(ps: &ParamStore, mode: &str, r: f64, n: usize,
 }
 
 /// Sweep modes x ratios (Table 9's r in {0.8, 0.75, 0.7}).
-pub fn sweep(ps: &ParamStore, modes: &[&str], rs: &[f64], n: usize)
+pub fn sweep(engine: &Engine, modes: &[&str], rs: &[f64], n: usize)
              -> Result<Vec<TextRow>> {
-    let mut rows = vec![eval_config(ps, "none", 1.0, n)?];
+    let mut rows = vec![eval_config(engine, "none", 1.0, n)?];
     for &mode in modes {
         for &r in rs {
-            rows.push(eval_config(ps, mode, r, n)?);
+            rows.push(eval_config(engine, mode, r, n)?);
         }
     }
     Ok(rows)

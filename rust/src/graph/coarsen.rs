@@ -25,11 +25,19 @@ impl Partition {
 
     /// Group cardinalities |V_i|.
     pub fn sizes(&self) -> Vec<usize> {
-        let mut s = vec![0usize; self.n_groups];
-        for &g in &self.assign {
-            s[g] += 1;
-        }
+        let mut s = Vec::new();
+        self.sizes_into(&mut s);
         s
+    }
+
+    /// [`Partition::sizes`] into a reusable buffer (allocation-free once
+    /// it has seen the group count).
+    pub fn sizes_into(&self, out: &mut Vec<usize>) {
+        out.clear();
+        out.resize(self.n_groups, 0);
+        for &g in &self.assign {
+            out[g] += 1;
+        }
     }
 
     /// Merge two groups (used by the iterative pairwise coarsening of
@@ -48,10 +56,19 @@ impl Partition {
     }
 }
 
-/// Coarsened adjacency `Wc[i,j] = sum_{u in Vi, v in Vj} W[u,v]` (Def. 1).
+/// Coarsened adjacency `Wc[i,j] = sum_{u in Vi, v in Vj} W[u,v]` (Def. 1;
+/// allocating wrapper over [`coarsen_into`]).
 pub fn coarsen(w: &Mat, p: &Partition) -> Mat {
+    let mut wc = Mat::zeros(0, 0);
+    coarsen_into(w, p, &mut wc);
+    wc
+}
+
+/// [`coarsen`] into a reusable output buffer — allocation-free once it
+/// has seen the group count.
+pub fn coarsen_into(w: &Mat, p: &Partition, wc: &mut Mat) {
     assert_eq!(w.rows, p.assign.len());
-    let mut wc = Mat::zeros(p.n_groups, p.n_groups);
+    wc.reset(p.n_groups, p.n_groups);
     for u in 0..w.rows {
         let gu = p.assign[u];
         for v in 0..w.cols {
@@ -59,18 +76,33 @@ pub fn coarsen(w: &Mat, p: &Partition) -> Mat {
             wc.data[gu * p.n_groups + gv] += w.get(u, v);
         }
     }
-    wc
 }
 
 /// Lifted adjacency `Wl[u,v] = Wc[gu,gv] / (|V_gu| |V_gv|)` (Def. 2) —
-/// an n x n proxy for the coarse graph used by the spectral distance.
+/// an n x n proxy for the coarse graph used by the spectral distance
+/// (allocating wrapper over [`lift_into`]).
 pub fn lift(wc: &Mat, p: &Partition) -> Mat {
-    let sizes = p.sizes();
+    let mut sizes = Vec::new();
+    let mut wl = Mat::zeros(0, 0);
+    lift_into(wc, p, &mut sizes, &mut wl);
+    wl
+}
+
+/// [`lift`] into reusable buffers: `sizes` is the group-cardinality
+/// scratch, `wl` the lifted adjacency.
+pub fn lift_into(wc: &Mat, p: &Partition, sizes: &mut Vec<usize>,
+                 wl: &mut Mat) {
+    p.sizes_into(sizes);
     let n = p.assign.len();
-    Mat::from_fn(n, n, |u, v| {
-        let (gu, gv) = (p.assign[u], p.assign[v]);
-        wc.get(gu, gv) / (sizes[gu] * sizes[gv]) as f32
-    })
+    wl.reshape(n, n);
+    for u in 0..n {
+        let gu = p.assign[u];
+        let row = wl.row_mut(u);
+        for (v, slot) in row.iter_mut().enumerate() {
+            let gv = p.assign[v];
+            *slot = wc.get(gu, gv) / (sizes[gu] * sizes[gv]) as f32;
+        }
+    }
 }
 
 #[cfg(test)]

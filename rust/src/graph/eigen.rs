@@ -6,14 +6,28 @@
 
 use crate::tensor::Mat;
 
-/// Eigenvalues of a symmetric matrix, ascending.
+/// Eigenvalues of a symmetric matrix, ascending (allocating wrapper over
+/// [`jacobi_eigenvalues_into`]).
 ///
 /// Cyclic Jacobi: sweeps zero out off-diagonal entries with Givens
 /// rotations until the off-diagonal Frobenius norm is below `tol`.
 pub fn jacobi_eigenvalues(m: &Mat, tol: f32, max_sweeps: usize) -> Vec<f32> {
+    let mut a = Mat::zeros(0, 0);
+    let mut ev = Vec::new();
+    jacobi_eigenvalues_into(m, tol, max_sweeps, &mut a, &mut ev);
+    ev
+}
+
+/// [`jacobi_eigenvalues`] into reusable buffers: `a` is the rotation
+/// working copy, `ev` receives the ascending eigenvalues —
+/// allocation-free once both have seen the shape (the in-place unstable
+/// sort makes equal eigenvalues bit-order unspecified, which the
+/// spectral distance — a sum of |Δλ| — is insensitive to).
+pub fn jacobi_eigenvalues_into(m: &Mat, tol: f32, max_sweeps: usize,
+                               a: &mut Mat, ev: &mut Vec<f32>) {
     assert_eq!(m.rows, m.cols, "eigenvalues of non-square matrix");
     let n = m.rows;
-    let mut a = m.clone();
+    a.copy_from(m);
     // symmetrize defensively (callers pass Laplacians, symmetric up to fp)
     for i in 0..n {
         for j in (i + 1)..n {
@@ -60,9 +74,9 @@ pub fn jacobi_eigenvalues(m: &Mat, tol: f32, max_sweeps: usize) -> Vec<f32> {
             }
         }
     }
-    let mut ev: Vec<f32> = (0..n).map(|i| a.get(i, i)).collect();
-    ev.sort_by(|x, y| x.partial_cmp(y).unwrap());
-    ev
+    ev.clear();
+    ev.extend((0..n).map(|i| a.get(i, i)));
+    ev.sort_unstable_by(|x, y| x.partial_cmp(y).unwrap());
 }
 
 #[cfg(test)]

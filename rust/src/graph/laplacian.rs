@@ -16,17 +16,34 @@ pub fn combinatorial_laplacian(w: &Mat) -> Mat {
 }
 
 /// Normalized Laplacian `L = I - D^{-1/2} W D^{-1/2}` (zero-degree nodes
-/// contribute identity rows).
+/// contribute identity rows).  Allocating wrapper over
+/// [`normalized_laplacian_into`].
 pub fn normalized_laplacian(w: &Mat) -> Mat {
-    let d = degree_vector(w);
-    let dinv: Vec<f32> = d
-        .iter()
-        .map(|&x| if x > 1e-12 { 1.0 / x.sqrt() } else { 0.0 })
-        .collect();
-    Mat::from_fn(w.rows, w.cols, |i, j| {
-        let id = if i == j { 1.0 } else { 0.0 };
-        id - dinv[i] * w.get(i, j) * dinv[j]
-    })
+    let mut dinv = Vec::new();
+    let mut out = Mat::zeros(0, 0);
+    normalized_laplacian_into(w, &mut dinv, &mut out);
+    out
+}
+
+/// [`normalized_laplacian`] into reusable buffers: `dinv` holds the
+/// `D^{-1/2}` diagonal scratch, `out` the Laplacian — allocation-free
+/// once both have seen the shape (the `EigScratch` spectral-distance
+/// path, see `graph::spectral`).
+pub fn normalized_laplacian_into(w: &Mat, dinv: &mut Vec<f32>, out: &mut Mat) {
+    dinv.clear();
+    dinv.extend((0..w.rows).map(|i| {
+        let d: f32 = w.row(i).iter().sum();
+        if d > 1e-12 { 1.0 / d.sqrt() } else { 0.0 }
+    }));
+    out.reshape(w.rows, w.cols);
+    for i in 0..w.rows {
+        let o = out.row_mut(i);
+        let wr = w.row(i);
+        for j in 0..wr.len() {
+            let id = if i == j { 1.0 } else { 0.0 };
+            o[j] = id - dinv[i] * wr[j] * dinv[j];
+        }
+    }
 }
 
 #[cfg(test)]

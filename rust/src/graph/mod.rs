@@ -8,7 +8,9 @@ pub mod eigen;
 pub mod laplacian;
 pub mod spectral;
 
-pub use coarsen::{coarsen, lift, Partition};
-pub use eigen::jacobi_eigenvalues;
-pub use laplacian::{degree_vector, normalized_laplacian};
-pub use spectral::{spectral_distance, token_graph};
+pub use coarsen::{coarsen, coarsen_into, lift, lift_into, Partition};
+pub use eigen::{jacobi_eigenvalues, jacobi_eigenvalues_into};
+pub use laplacian::{degree_vector, normalized_laplacian,
+                    normalized_laplacian_into};
+pub use spectral::{spectral_distance, spectral_distance_scratch, EigScratch,
+                   token_graph};

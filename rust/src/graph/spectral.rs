@@ -1,8 +1,8 @@
 //! Spectral distance (Eq. 5) and token-graph construction.
 
-use super::coarsen::{coarsen, lift, Partition};
-use super::eigen::jacobi_eigenvalues;
-use super::laplacian::normalized_laplacian;
+use super::coarsen::{coarsen_into, lift_into, Partition};
+use super::eigen::jacobi_eigenvalues_into;
+use super::laplacian::normalized_laplacian_into;
 use crate::tensor::{cosine_matrix, Mat};
 
 /// Token graph of Eq. (3): `W[i,j] = 1 - cos(v_i, v_j)` (cosine
@@ -17,15 +17,68 @@ pub fn token_graph(kf: &Mat) -> Mat {
     })
 }
 
+/// Reusable workspace for [`spectral_distance_scratch`]: the coarsened
+/// and lifted adjacencies, both Laplacians, the Jacobi rotation working
+/// copy, both eigenvalue vectors, and the degree/cardinality scratch.
+/// One workspace serves a whole SD(G, Gc) sweep; once it has seen the
+/// largest graph, every later evaluation performs **zero** heap
+/// allocations (asserted by `tests/alloc_free.rs`).
+pub struct EigScratch {
+    wc: Mat,
+    wl: Mat,
+    l: Mat,
+    ll: Mat,
+    /// Jacobi rotation working copy (shared by both eigensolves)
+    a: Mat,
+    ev: Vec<f32>,
+    evl: Vec<f32>,
+    dinv: Vec<f32>,
+    sizes: Vec<usize>,
+}
+
+impl EigScratch {
+    /// Empty workspace; buffers grow on first use and are then reused.
+    pub fn new() -> EigScratch {
+        EigScratch {
+            wc: Mat::zeros(0, 0),
+            wl: Mat::zeros(0, 0),
+            l: Mat::zeros(0, 0),
+            ll: Mat::zeros(0, 0),
+            a: Mat::zeros(0, 0),
+            ev: Vec::new(),
+            evl: Vec::new(),
+            dinv: Vec::new(),
+            sizes: Vec::new(),
+        }
+    }
+}
+
+impl Default for EigScratch {
+    fn default() -> Self {
+        EigScratch::new()
+    }
+}
+
 /// `SD(G, Gc) = || lambda(L(G)) - lambda(L(lift(Gc))) ||_1` (Eq. 5),
-/// computed over normalized-Laplacian spectra.
+/// computed over normalized-Laplacian spectra (allocating wrapper over
+/// [`spectral_distance_scratch`]).
 pub fn spectral_distance(w: &Mat, p: &Partition) -> f32 {
-    let wl = lift(&coarsen(w, p), p);
-    let l = normalized_laplacian(w);
-    let ll = normalized_laplacian(&wl);
-    let ev = jacobi_eigenvalues(&l, 1e-6, 100);
-    let evl = jacobi_eigenvalues(&ll, 1e-6, 100);
-    ev.iter().zip(&evl).map(|(a, b)| (a - b).abs()).sum()
+    let mut scratch = EigScratch::new();
+    spectral_distance_scratch(w, p, &mut scratch)
+}
+
+/// [`spectral_distance`] through a caller-owned [`EigScratch`]: coarsen,
+/// lift, both Laplacians, and both Jacobi eigensolves all run in pooled
+/// buffers, so a warmed evaluation allocates nothing.
+pub fn spectral_distance_scratch(w: &Mat, p: &Partition,
+                                 s: &mut EigScratch) -> f32 {
+    coarsen_into(w, p, &mut s.wc);
+    lift_into(&s.wc, p, &mut s.sizes, &mut s.wl);
+    normalized_laplacian_into(w, &mut s.dinv, &mut s.l);
+    normalized_laplacian_into(&s.wl, &mut s.dinv, &mut s.ll);
+    jacobi_eigenvalues_into(&s.l, 1e-6, 100, &mut s.a, &mut s.ev);
+    jacobi_eigenvalues_into(&s.ll, 1e-6, 100, &mut s.a, &mut s.evl);
+    s.ev.iter().zip(&s.evl).map(|(a, b)| (a - b).abs()).sum()
 }
 
 #[cfg(test)]

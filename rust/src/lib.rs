@@ -20,6 +20,7 @@
 pub mod config;
 pub mod coordinator;
 pub mod data;
+pub mod engine;
 pub mod error;
 pub mod eval;
 pub mod graph;

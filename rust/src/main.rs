@@ -75,8 +75,9 @@ fn info(dir: &PathBuf) -> anyhow::Result<()> {
 }
 
 fn classify(dir: &PathBuf, mode: &str, r: f64, n: usize) -> anyhow::Result<()> {
-    let ps = load_model_params(dir, "vit").map_err(|e| anyhow::anyhow!("{e}"))?;
-    let row = eval::classify::eval_config(&ps, mode, r, n)
+    let engine = pitome::engine::Engine::from_store(
+        load_model_params(dir, "vit").map_err(|e| anyhow::anyhow!("{e}"))?);
+    let row = eval::classify::eval_config(&engine, mode, r, n)
         .map_err(|e| anyhow::anyhow!("{e}"))?;
     let cfg = ViTConfig { merge_mode: mode.into(), merge_r: r, ..Default::default() };
     println!("mode={} r={} acc={:.2}% gflops={:.4} speedup=x{:.2} plan={:?}",

@@ -13,11 +13,14 @@
 //! * [`parallel_map`] / [`parallel_map_mut`] — the underlying scoped
 //!   fan-out helpers ([`merge_step_batch`] runs on [`parallel_map`];
 //!   [`parallel_map_mut`] is the general in-place variant).
-//! * [`parallel_map_mut_ctx`] — the fan-out the batch encoder
-//!   (`model::encoder::encoder_forward_batch`) runs on: each worker
-//!   thread additionally owns one reusable context (its
-//!   `EncoderScratch`), so buffers persist across every item the worker
-//!   processes instead of being reallocated per item.
+//! * [`parallel_map_mut_ctx`] / [`parallel_for2_mut_ctx`] — fan-outs
+//!   where each worker thread additionally owns one reusable context
+//!   (its `EncoderScratch`), so buffers persist across every item the
+//!   worker processes instead of being reallocated per item.  The `for2`
+//!   form pairs two slices (input slots + output buffers) and collects
+//!   nothing, which is what the engine's slot-based batch driver
+//!   (`model::encoder::encoder_forward_slots`) runs on — the fan-out
+//!   itself allocates nothing.
 //!
 //! Each sequence still builds exactly one cosine Gram, on whichever worker
 //! thread processes it — batching composes with the shared-Gram pipeline
@@ -158,6 +161,55 @@ where
     out.into_iter().map(|o| o.expect("worker filled every slot")).collect()
 }
 
+/// Two-slice variant of [`parallel_map_mut_ctx`] that collects nothing:
+/// item `i` is the pair `(a[i], b[i])`, chunked identically across the
+/// workers, and `f`'s work is written through the `&mut` references
+/// instead of being returned — so the fan-out itself performs **zero**
+/// heap allocations (no output `Vec`), which is what the engine's
+/// slot-based batch driver (`model::encoder::encoder_forward_slots`)
+/// needs for allocation-free serving.  With one ctx (or one item) the
+/// loop runs inline on the caller's thread, no spawns.
+pub fn parallel_for2_mut_ctx<A, B, C, F>(a: &mut [A], b: &mut [B],
+                                         ctxs: &mut [C], f: &F)
+where
+    A: Send,
+    B: Send,
+    C: Send,
+    F: Fn(usize, &mut A, &mut B, &mut C) + Sync,
+{
+    let n = a.len();
+    assert_eq!(n, b.len(), "parallel_for2_mut_ctx slice length mismatch");
+    if n == 0 {
+        return;
+    }
+    assert!(!ctxs.is_empty(), "parallel_for2_mut_ctx needs at least one ctx");
+    let workers = ctxs.len().min(n);
+    if workers == 1 {
+        let ctx = &mut ctxs[0];
+        for (i, (ai, bi)) in a.iter_mut().zip(b.iter_mut()).enumerate() {
+            f(i, ai, bi, ctx);
+        }
+        return;
+    }
+    let chunk = n.div_ceil(workers);
+    std::thread::scope(|s| {
+        for (ci, ((achunk, bchunk), ctx)) in a
+            .chunks_mut(chunk)
+            .zip(b.chunks_mut(chunk))
+            .zip(ctxs.iter_mut())
+            .enumerate()
+        {
+            s.spawn(move || {
+                for (off, (ai, bi)) in
+                    achunk.iter_mut().zip(bchunk.iter_mut()).enumerate()
+                {
+                    f(ci * chunk + off, ai, bi, ctx);
+                }
+            });
+        }
+    });
+}
+
 /// Run one merge step per sequence across up to `workers` threads,
 /// returning (merged tokens, new sizes) in input order.
 pub fn merge_step_batch(mode: MergeMode, seqs: &[BatchSeq], workers: usize)
@@ -215,6 +267,25 @@ mod tests {
             assert_eq!(items, (0..23u32).collect::<Vec<_>>());
             // every item was charged to exactly one context
             assert_eq!(ctxs.iter().sum::<usize>(), 23, "workers={workers}");
+        }
+    }
+
+    #[test]
+    fn parallel_for2_pairs_items_and_collects_nothing() {
+        let mut xs = vec![0u32; 17];
+        let mut ys = vec![0u32; 17];
+        for workers in [1usize, 2, 3, 8] {
+            xs.fill(0);
+            ys.fill(0);
+            let mut ctxs = vec![0usize; workers];
+            parallel_for2_mut_ctx(&mut xs, &mut ys, &mut ctxs, &|i, x, y, c| {
+                *x = i as u32;
+                *y = 2 * i as u32;
+                *c += 1;
+            });
+            assert_eq!(xs, (0..17).collect::<Vec<_>>(), "workers={workers}");
+            assert_eq!(ys, (0..17).map(|v| 2 * v).collect::<Vec<_>>());
+            assert_eq!(ctxs.iter().sum::<usize>(), 17, "workers={workers}");
         }
     }
 

@@ -37,34 +37,44 @@
 //!   `tests/prop_encoder.rs` assert a reused scratch matches a fresh one
 //!   across all merge modes and shapes.
 //! * Long-lived servers should keep the pool alive across requests (the
-//!   coordinator's CPU workers do — see `coordinator/batcher.rs`); the
-//!   allocating entry points ([`encoder_forward`],
-//!   [`encoder_forward_batch`]) remain as thin wrappers that create a
-//!   transient scratch, so one-shot callers and the python-parity
-//!   contract are unchanged.
+//!   coordinator's CPU workers do, via [`crate::engine::Session`] — see
+//!   `coordinator/batcher.rs`); the allocating one-shot entry point
+//!   ([`encoder_forward`]) remains, so the python-parity contract is
+//!   unchanged.
 //!
-//! Two drivers share the same per-block helpers (so they are numerically
-//! identical):
-//! * [`encoder_forward`] / [`encoder_forward_scratch`] — one sample.
-//! * [`encoder_forward_batch`] / [`encoder_forward_batch_pooled`] — a
-//!   batch of samples fanned out over scoped worker threads, each worker
-//!   reusing its own scratch for every sample (and layer) it processes.
-//!   Per-(layer, sample) RNG seeding keeps stochastic modes reproducible
-//!   under any thread schedule; deterministic modes match the serial path
-//!   exactly.
+//! # Entry points
+//!
+//! The owning API is [`crate::engine::Engine`] → [`crate::engine::Session`]:
+//! a session holds the resolved weights, a scratch pool, pooled input
+//! [`SeqSlot`]s, and a pooled output buffer per sample, so a whole warmed
+//! request — final LayerNorm and batch outputs included — allocates
+//! nothing.  This module provides the shared cores the session (and the
+//! deprecated free-function wrappers) drive:
+//! * [`encoder_forward_slots`] — batch of pre-filled slots fanned out
+//!   over scoped worker threads, each worker reusing its own scratch for
+//!   every sample (and layer) it processes.  Per-(layer, sample) RNG
+//!   seeding keeps stochastic modes reproducible under any thread
+//!   schedule; deterministic modes match the serial path exactly.
+//! * [`encoder_forward_slot`] — one slot under the serial shared-RNG
+//!   contract (bitwise-identical to the historical `encoder_forward`).
+//!
+//! The historical wrapper zoo (`encoder_forward_scratch`,
+//! `encoder_forward_batch`, `encoder_forward_batch_pooled`) is kept as
+//! thin `#[deprecated]` shims over the same cores, with bitwise-parity
+//! locked in by `tests/prop_engine.rs`.
 
 use crate::data::Rng;
 use crate::error::Result;
-use crate::merge::batch::parallel_map_mut_ctx;
+use crate::merge::batch::parallel_for2_mut_ctx;
 use crate::merge::energy::layer_margin;
 use crate::merge::{merge_step_scratch, MergeCtx, MergeMode, MergeScratch};
 use crate::tensor::{add_inplace, dense_into, dot, gelu_inplace, layernorm,
                     layernorm_into, matmul_into, softmax_rows, Mat, MatRef};
 
-use super::params::ParamStore;
+use super::params::{MatSpan, ParamStore, VecSpan};
 
 /// Encoder hyperparameters (subset shared by ViT and text models).
-#[derive(Clone, Debug)]
+#[derive(Clone, Debug, PartialEq)]
 pub struct EncoderCfg {
     /// parameter-name prefix, e.g. "vit."
     pub prefix: String,
@@ -82,6 +92,36 @@ pub struct EncoderCfg {
     pub prop_attn: bool,
     /// ToFu prune threshold (see `config::DEFAULT_TOFU_PRUNE_THRESHOLD`)
     pub tofu_threshold: f32,
+}
+
+impl EncoderCfg {
+    /// The encoder config a ViT model config implies (prefix `"vit."`).
+    pub fn from_vit(cfg: &crate::config::ViTConfig) -> EncoderCfg {
+        EncoderCfg {
+            prefix: "vit.".into(),
+            dim: cfg.dim,
+            depth: cfg.depth,
+            heads: cfg.heads,
+            mode: cfg.mode(),
+            plan: cfg.plan(),
+            prop_attn: cfg.prop_attn,
+            tofu_threshold: cfg.tofu_threshold,
+        }
+    }
+
+    /// The encoder config a text model config implies (prefix `"bert."`).
+    pub fn from_text(cfg: &crate::config::TextConfig) -> EncoderCfg {
+        EncoderCfg {
+            prefix: "bert.".into(),
+            dim: cfg.dim,
+            depth: cfg.depth,
+            heads: cfg.heads,
+            mode: cfg.mode(),
+            plan: cfg.plan(),
+            prop_attn: cfg.prop_attn,
+            tofu_threshold: cfg.tofu_threshold,
+        }
+    }
 }
 
 /// All parameter views one block needs, resolved once per forward call so
@@ -102,48 +142,99 @@ struct BlockParams<'a> {
     mlp2_b: &'a [f32],
 }
 
-/// Encoder weights resolved to borrowed views (one name lookup per tensor
-/// per forward call, zero lookups in the layer loop).  Long-lived callers
-/// may also build one per batch and reuse it for every sample.
-pub struct ResolvedEncoder<'a> {
-    blocks: Vec<BlockParams<'a>>,
-    lnf_w: &'a [f32],
-    lnf_b: &'a [f32],
+/// Resolved spans of every tensor one block needs.
+struct BlockSpans {
+    ln1_w: VecSpan,
+    ln1_b: VecSpan,
+    wq: MatSpan,
+    wk: MatSpan,
+    wv: MatSpan,
+    wo: MatSpan,
+    bo: VecSpan,
+    ln2_w: VecSpan,
+    ln2_b: VecSpan,
+    mlp1: MatSpan,
+    mlp1_b: VecSpan,
+    mlp2: MatSpan,
+    mlp2_b: VecSpan,
 }
 
-impl<'a> ResolvedEncoder<'a> {
+/// Encoder weights resolved to owned spans over the store's flat vector:
+/// one name lookup per tensor at construction, zero lookups (and zero
+/// allocations) in the layer loop, which rehydrates borrowed views per
+/// block via [`ParamStore::mat_at`]/[`ParamStore::vec_at`].
+///
+/// Because a resolution borrows nothing, it can be cached and shared —
+/// [`crate::engine::Engine`] keeps one per [`EncoderCfg`] so no consumer
+/// ever re-resolves weights per batch.
+pub struct ResolvedEncoder {
+    blocks: Vec<BlockSpans>,
+    lnf_w: VecSpan,
+    lnf_b: VecSpan,
+}
+
+impl ResolvedEncoder {
     /// Resolve every tensor `cfg` names inside `ps`.
-    pub fn new(ps: &'a ParamStore, cfg: &EncoderCfg) -> Result<ResolvedEncoder<'a>> {
+    pub fn new(ps: &ParamStore, cfg: &EncoderCfg) -> Result<ResolvedEncoder> {
         let mut blocks = Vec::with_capacity(cfg.depth);
         for l in 0..cfg.depth {
             let b = format!("{}blk{}.", cfg.prefix, l);
-            blocks.push(BlockParams {
-                ln1_w: ps.vec1(&format!("{b}ln1.w"))?,
-                ln1_b: ps.vec1(&format!("{b}ln1.b"))?,
-                wq: ps.mat2_view(&format!("{b}wq"))?,
-                wk: ps.mat2_view(&format!("{b}wk"))?,
-                wv: ps.mat2_view(&format!("{b}wv"))?,
-                wo: ps.mat2_view(&format!("{b}wo"))?,
-                bo: ps.vec1(&format!("{b}bo"))?,
-                ln2_w: ps.vec1(&format!("{b}ln2.w"))?,
-                ln2_b: ps.vec1(&format!("{b}ln2.b"))?,
-                mlp1: ps.mat2_view(&format!("{b}mlp1"))?,
-                mlp1_b: ps.vec1(&format!("{b}mlp1b"))?,
-                mlp2: ps.mat2_view(&format!("{b}mlp2"))?,
-                mlp2_b: ps.vec1(&format!("{b}mlp2b"))?,
+            blocks.push(BlockSpans {
+                ln1_w: ps.vec1_span(&format!("{b}ln1.w"))?,
+                ln1_b: ps.vec1_span(&format!("{b}ln1.b"))?,
+                wq: ps.mat2_span(&format!("{b}wq"))?,
+                wk: ps.mat2_span(&format!("{b}wk"))?,
+                wv: ps.mat2_span(&format!("{b}wv"))?,
+                wo: ps.mat2_span(&format!("{b}wo"))?,
+                bo: ps.vec1_span(&format!("{b}bo"))?,
+                ln2_w: ps.vec1_span(&format!("{b}ln2.w"))?,
+                ln2_b: ps.vec1_span(&format!("{b}ln2.b"))?,
+                mlp1: ps.mat2_span(&format!("{b}mlp1"))?,
+                mlp1_b: ps.vec1_span(&format!("{b}mlp1b"))?,
+                mlp2: ps.mat2_span(&format!("{b}mlp2"))?,
+                mlp2_b: ps.vec1_span(&format!("{b}mlp2b"))?,
             });
         }
         Ok(ResolvedEncoder {
             blocks,
-            lnf_w: ps.vec1(&format!("{}lnf.w", cfg.prefix))?,
-            lnf_b: ps.vec1(&format!("{}lnf.b", cfg.prefix))?,
+            lnf_w: ps.vec1_span(&format!("{}lnf.w", cfg.prefix))?,
+            lnf_b: ps.vec1_span(&format!("{}lnf.b", cfg.prefix))?,
         })
     }
 
+    /// Rehydrate block `l`'s parameter views (pure slicing, no lookup).
+    #[inline]
+    fn block<'a>(&self, ps: &'a ParamStore, l: usize) -> BlockParams<'a> {
+        let b = &self.blocks[l];
+        BlockParams {
+            ln1_w: ps.vec_at(b.ln1_w),
+            ln1_b: ps.vec_at(b.ln1_b),
+            wq: ps.mat_at(b.wq),
+            wk: ps.mat_at(b.wk),
+            wv: ps.mat_at(b.wv),
+            wo: ps.mat_at(b.wo),
+            bo: ps.vec_at(b.bo),
+            ln2_w: ps.vec_at(b.ln2_w),
+            ln2_b: ps.vec_at(b.ln2_b),
+            mlp1: ps.mat_at(b.mlp1),
+            mlp1_b: ps.vec_at(b.mlp1_b),
+            mlp2: ps.mat_at(b.mlp2),
+            mlp2_b: ps.vec_at(b.mlp2_b),
+        }
+    }
+
     /// Output LayerNorm — allocates the returned matrix (it is the
-    /// result handed to the caller, not a reusable buffer).
-    pub fn final_norm(&self, x: &Mat) -> Mat {
-        layernorm(x, self.lnf_w, self.lnf_b, 1e-5)
+    /// result handed to the caller, not a reusable buffer).  Hot callers
+    /// use [`ResolvedEncoder::final_norm_into`] with a pooled buffer.
+    pub fn final_norm(&self, ps: &ParamStore, x: &Mat) -> Mat {
+        layernorm(x, ps.vec_at(self.lnf_w), ps.vec_at(self.lnf_b), 1e-5)
+    }
+
+    /// Output LayerNorm into a caller-owned (pooled) buffer —
+    /// allocation-free once `out` has seen the shape.
+    pub fn final_norm_into(&self, ps: &ParamStore, x: &Mat, out: &mut Mat) {
+        layernorm_into(x, ps.vec_at(self.lnf_w), ps.vec_at(self.lnf_b), 1e-5,
+                       out);
     }
 }
 
@@ -226,10 +317,14 @@ impl ScratchPool {
         ScratchPool { scratches: Vec::new() }
     }
 
-    fn ensure(&mut self, workers: usize) {
+    /// Hand out `workers` scratches, growing the pool on first use (the
+    /// grown scratches are reused on every later call — a pool that has
+    /// seen its peak worker count never allocates again).
+    pub fn take(&mut self, workers: usize) -> &mut [EncoderScratch] {
         while self.scratches.len() < workers {
             self.scratches.push(EncoderScratch::new());
         }
+        &mut self.scratches[..workers]
     }
 }
 
@@ -373,15 +468,16 @@ enum LayerRng<'r> {
 
 /// The encoder layer loop over pre-resolved weights: attention, merge
 /// (Eq. 2), MLP per layer, all in place through the scratch.
-fn run_layers(re: &ResolvedEncoder, cfg: &EncoderCfg, x: &mut Mat,
-              sizes: &mut Vec<f32>, mut lr: LayerRng, s: &mut EncoderScratch) {
+fn run_layers(ps: &ParamStore, re: &ResolvedEncoder, cfg: &EncoderCfg,
+              x: &mut Mat, sizes: &mut Vec<f32>, mut lr: LayerRng,
+              s: &mut EncoderScratch) {
     for l in 0..cfg.depth {
         let n_in = cfg.plan[l];
         let n_out = cfg.plan[l + 1];
         debug_assert_eq!(x.rows, n_in, "plan mismatch at layer {l}");
-        let bp = &re.blocks[l];
+        let bp = re.block(ps, l);
 
-        block_attention_into(bp, cfg.heads, cfg.prop_attn, x, &sizes[..],
+        block_attention_into(&bp, cfg.heads, cfg.prop_attn, x, &sizes[..],
                              &mut s.bufs);
 
         // merge between attention and MLP (Eq. 2)
@@ -414,92 +510,157 @@ fn run_layers(re: &ResolvedEncoder, cfg: &EncoderCfg, x: &mut Mat,
             std::mem::swap(sizes, &mut s.merge.out_sizes);
         }
 
-        block_mlp_into(bp, x, &mut s.bufs);
+        block_mlp_into(&bp, x, &mut s.bufs);
     }
 }
 
 /// Run the encoder layer stack in place over pre-resolved weights — the
 /// zero-allocation steady-state core (`x` and `sizes` are updated in
-/// place; apply [`ResolvedEncoder::final_norm`] afterwards for the full
-/// forward).  With a warmed scratch this performs no heap allocations in
-/// any merge mode.  Exposed so benches and the alloc-counter tests can
-/// measure exactly the layer loop.
-pub fn encoder_layers(re: &ResolvedEncoder, cfg: &EncoderCfg, x: &mut Mat,
-                      sizes: &mut Vec<f32>, rng: &mut Rng,
-                      scratch: &mut EncoderScratch) {
-    run_layers(re, cfg, x, sizes, LayerRng::Shared(rng), scratch);
+/// place; apply [`ResolvedEncoder::final_norm_into`] afterwards for the
+/// full forward).  With a warmed scratch this performs no heap
+/// allocations in any merge mode.  Exposed so benches and the
+/// alloc-counter tests can measure exactly the layer loop.
+pub fn encoder_layers(ps: &ParamStore, re: &ResolvedEncoder,
+                      cfg: &EncoderCfg, x: &mut Mat, sizes: &mut Vec<f32>,
+                      rng: &mut Rng, scratch: &mut EncoderScratch) {
+    run_layers(ps, re, cfg, x, sizes, LayerRng::Shared(rng), scratch);
 }
 
-/// Run the encoder on one sample `x` (plan[0], dim) with a caller-owned
-/// scratch (reusable across calls).  Returns final tokens (plan[depth],
-/// dim) after the output LayerNorm.
+/// One sequence's state in the slot-based batch driver: the live token
+/// matrix (consumed in place by the layer loop) and its size vector.
+/// Slots are pooled by [`crate::engine::Session`] so a steady-state
+/// server refills them without allocating.
+pub struct SeqSlot {
+    /// token matrix; the layer loop shrinks it in place
+    pub x: Mat,
+    /// per-token merged-cardinality sizes (reset to 1.0 by `set_input`)
+    pub sizes: Vec<f32>,
+}
+
+impl SeqSlot {
+    /// Empty slot; buffers grow on first use.
+    pub fn new() -> SeqSlot {
+        SeqSlot { x: Mat::zeros(0, 0), sizes: Vec::new() }
+    }
+
+    /// Load an input sample: copy `x` in and reset sizes to 1.0
+    /// (allocation-free once the slot has seen the shape).
+    pub fn set_input(&mut self, x: &Mat) {
+        self.x.copy_from(x);
+        self.reset_sizes();
+    }
+
+    /// Reset the size vector to 1.0 per current token (callers that fill
+    /// `x` directly — e.g. embedding kernels — use this instead of
+    /// [`SeqSlot::set_input`]).
+    pub fn reset_sizes(&mut self) {
+        self.sizes.clear();
+        self.sizes.resize(self.x.rows, 1f32);
+    }
+}
+
+impl Default for SeqSlot {
+    fn default() -> Self {
+        SeqSlot::new()
+    }
+}
+
+/// Run the encoder over a batch of pre-filled slots, writing each final
+/// (normed) token matrix into the matching `outs` buffer — the shared
+/// zero-allocation batch core behind both [`crate::engine::Session`] and
+/// the legacy wrappers.
+///
+/// Samples fan out over `scratches.len()` scoped worker threads (1 =
+/// inline, no spawns), each worker reusing one scratch for every sample
+/// it processes.  `seed` derives one deterministic RNG seed per (layer,
+/// sample), so stochastic modes are reproducible under any thread
+/// schedule.  With warmed slots/outputs/scratches and one worker, the
+/// whole call performs zero heap allocations (`tests/alloc_free.rs`).
+pub fn encoder_forward_slots(ps: &ParamStore, re: &ResolvedEncoder,
+                             cfg: &EncoderCfg, slots: &mut [SeqSlot],
+                             outs: &mut [Mat], seed: u64,
+                             scratches: &mut [EncoderScratch]) {
+    debug_assert_eq!(slots.len(), outs.len());
+    parallel_for2_mut_ctx(
+        slots,
+        outs,
+        scratches,
+        &|i, slot: &mut SeqSlot, out: &mut Mat, scratch: &mut EncoderScratch| {
+            run_layers(ps, re, cfg, &mut slot.x, &mut slot.sizes,
+                       LayerRng::PerLayer { seed, sample: i as u64 }, scratch);
+            re.final_norm_into(ps, &slot.x, out);
+        },
+    );
+}
+
+/// Run the encoder on one pre-filled slot with the serial shared-RNG
+/// contract (the single-sample counterpart of [`encoder_forward_slots`];
+/// bitwise-identical to the historical [`encoder_forward`] for every
+/// mode, stochastic ones included, because it consumes the same caller
+/// RNG stream).
+pub fn encoder_forward_slot(ps: &ParamStore, re: &ResolvedEncoder,
+                            cfg: &EncoderCfg, slot: &mut SeqSlot,
+                            out: &mut Mat, rng: &mut Rng,
+                            scratch: &mut EncoderScratch) {
+    run_layers(ps, re, cfg, &mut slot.x, &mut slot.sizes,
+               LayerRng::Shared(rng), scratch);
+    re.final_norm_into(ps, &slot.x, out);
+}
+
+/// Run the encoder on one sample `x` (plan[0], dim). Returns final tokens
+/// (plan[depth], dim) after the output LayerNorm.  One-shot entry point
+/// (and the python-parity contract); hot callers hold a
+/// [`crate::engine::Session`] instead.
+pub fn encoder_forward(ps: &ParamStore, cfg: &EncoderCfg, x: Mat,
+                       rng: &mut Rng) -> Result<Mat> {
+    let re = ResolvedEncoder::new(ps, cfg)?;
+    let mut slot = SeqSlot { sizes: vec![1f32; x.rows], x };
+    let mut out = Mat::zeros(0, 0);
+    let mut scratch = EncoderScratch::new();
+    encoder_forward_slot(ps, &re, cfg, &mut slot, &mut out, rng, &mut scratch);
+    Ok(out)
+}
+
+/// Run the encoder on one sample `x` with a caller-owned scratch.
+#[deprecated(note = "hold a `crate::engine::Session` and use \
+                     `Session::forward_one` instead")]
 pub fn encoder_forward_scratch(ps: &ParamStore, cfg: &EncoderCfg, x: Mat,
                                rng: &mut Rng, scratch: &mut EncoderScratch)
                                -> Result<Mat> {
     let re = ResolvedEncoder::new(ps, cfg)?;
-    let mut x = x;
-    let mut sizes = vec![1f32; x.rows];
-    run_layers(&re, cfg, &mut x, &mut sizes, LayerRng::Shared(rng), scratch);
-    Ok(re.final_norm(&x))
-}
-
-/// Run the encoder on one sample `x` (plan[0], dim). Returns final tokens
-/// (plan[depth], dim) after the output LayerNorm.  (Allocating wrapper:
-/// creates a transient [`EncoderScratch`]; hot callers should hold one
-/// and use [`encoder_forward_scratch`].)
-pub fn encoder_forward(ps: &ParamStore, cfg: &EncoderCfg, x: Mat,
-                       rng: &mut Rng) -> Result<Mat> {
-    let mut scratch = EncoderScratch::new();
-    encoder_forward_scratch(ps, cfg, x, rng, &mut scratch)
-}
-
-/// Per-sequence state carried through the batch driver.
-struct SeqState {
-    x: Mat,
-    sizes: Vec<f32>,
+    let mut slot = SeqSlot { sizes: vec![1f32; x.rows], x };
+    let mut out = Mat::zeros(0, 0);
+    encoder_forward_slot(ps, &re, cfg, &mut slot, &mut out, rng, scratch);
+    Ok(out)
 }
 
 /// Run the encoder on a batch of samples with a caller-owned scratch
-/// pool: samples fan out over up to `workers` scoped threads, each worker
-/// reusing one [`EncoderScratch`] from `pool` for every sample (and
-/// layer) it processes — a long-lived server that keeps the pool alive
-/// reallocates no encoder buffers at steady state.
-///
-/// `seed` derives one deterministic RNG seed per (layer, sample), so
-/// stochastic modes are reproducible under any thread schedule; for the
-/// deterministic modes (PiToMe/ToMe/ToFu/DCT/DiffRate) the outputs match
-/// [`encoder_forward`] exactly.
+/// pool (per-sample outputs are still allocated; the engine API pools
+/// them too).
+#[deprecated(note = "use `crate::engine::Engine::session` → \
+                     `Session::forward_batch` instead")]
 pub fn encoder_forward_batch_pooled(ps: &ParamStore, cfg: &EncoderCfg,
                                     xs: Vec<Mat>, seed: u64, workers: usize,
                                     pool: &mut ScratchPool)
                                     -> Result<Vec<Mat>> {
     let re = ResolvedEncoder::new(ps, cfg)?;
-    let mut states: Vec<SeqState> = xs
+    let mut slots: Vec<SeqSlot> = xs
         .into_iter()
-        .map(|x| {
-            let sizes = vec![1f32; x.rows];
-            SeqState { x, sizes }
-        })
+        .map(|x| SeqSlot { sizes: vec![1f32; x.rows], x })
         .collect();
-    if states.is_empty() {
+    if slots.is_empty() {
         return Ok(Vec::new());
     }
-    let w = workers.max(1).min(states.len());
-    pool.ensure(w);
-    let outs = parallel_map_mut_ctx(
-        &mut states,
-        &mut pool.scratches[..w],
-        &|i, st: &mut SeqState, scratch: &mut EncoderScratch| {
-            run_layers(&re, cfg, &mut st.x, &mut st.sizes,
-                       LayerRng::PerLayer { seed, sample: i as u64 }, scratch);
-            re.final_norm(&st.x)
-        },
-    );
+    let mut outs: Vec<Mat> = (0..slots.len()).map(|_| Mat::zeros(0, 0)).collect();
+    let w = workers.max(1).min(slots.len());
+    encoder_forward_slots(ps, &re, cfg, &mut slots, &mut outs, seed,
+                          pool.take(w));
     Ok(outs)
 }
 
-/// Run the encoder on a batch of samples (allocating wrapper over
-/// [`encoder_forward_batch_pooled`] with a transient pool).
+/// Run the encoder on a batch of samples with a transient scratch pool.
+#[deprecated(note = "use `crate::engine::Engine::session` → \
+                     `Session::forward_batch` instead")]
 pub fn encoder_forward_batch(ps: &ParamStore, cfg: &EncoderCfg, xs: Vec<Mat>,
                              seed: u64, workers: usize) -> Result<Vec<Mat>> {
     let mut pool = ScratchPool::new();
@@ -514,6 +675,8 @@ pub fn plain_attention(q: &Mat, kf: &Mat, v: &Mat, heads: usize) -> Mat {
 
 #[cfg(test)]
 mod tests {
+    #![allow(deprecated)] // legacy wrappers stay parity-tested here
+
     use super::*;
     use crate::config::ViTConfig;
     use crate::model::params::synthetic_vit_store;

@@ -12,14 +12,19 @@ pub mod params;
 pub mod text;
 pub mod vit;
 
+#[allow(deprecated)]
+pub use encoder::{encoder_forward_batch, encoder_forward_batch_pooled,
+                  encoder_forward_scratch};
 pub use encoder::{attention, attention_into, encoder_forward,
-                  encoder_forward_batch, encoder_forward_batch_pooled,
-                  encoder_forward_scratch, encoder_layers, EncoderCfg,
-                  EncoderScratch, ResolvedEncoder, ScratchPool};
+                  encoder_forward_slot, encoder_forward_slots,
+                  encoder_layers, EncoderCfg, EncoderScratch,
+                  ResolvedEncoder, ScratchPool, SeqSlot};
 pub use flops::{block_flops, encoder_flops, flops_speedup, vit_gflops};
-pub use params::{synthetic_vit_store, ParamEntry, ParamStore};
-pub use text::{bert_logits, bert_logits_batch, bert_logits_batch_pooled,
-               clip_text_embed, embed_tokens, text_features};
+pub use params::{synthetic_vit_store, MatSpan, ParamEntry, ParamStore,
+                 VecSpan};
+#[allow(deprecated)]
+pub use text::{bert_logits_batch, bert_logits_batch_pooled};
+pub use text::{bert_logits, clip_text_embed, embed_tokens, text_features};
 pub use vit::ViTModel;
 
 use std::path::Path;

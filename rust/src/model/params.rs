@@ -26,6 +26,31 @@ pub struct ParamEntry {
     pub size: usize,
 }
 
+/// Resolved location of a 1-D parameter inside the store's flat vector.
+/// Spans are plain offsets — no borrow — so weight resolutions can be
+/// cached owned (see [`crate::engine::Engine`]) and turned back into
+/// slices with [`ParamStore::vec_at`] at zero cost.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct VecSpan {
+    /// offset into the flat vector
+    pub offset: usize,
+    /// element count
+    pub len: usize,
+}
+
+/// Resolved location of a 2-D parameter inside the store's flat vector
+/// (the owned counterpart of [`MatRef`]; rehydrate with
+/// [`ParamStore::mat_at`]).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct MatSpan {
+    /// offset into the flat vector
+    pub offset: usize,
+    /// number of rows
+    pub rows: usize,
+    /// number of columns
+    pub cols: usize,
+}
+
 /// Named parameter tensors plus the original flat vector.
 pub struct ParamStore {
     /// the flat f32 vector (fed to PJRT artifacts as-is)
@@ -112,6 +137,45 @@ impl ParamStore {
             cols: e.shape[1],
             data: &self.flat[e.offset..e.offset + e.size],
         })
+    }
+
+    /// Resolve a 1-D parameter to its [`VecSpan`] (one name lookup; the
+    /// span stays valid for the store's lifetime).
+    pub fn vec1_span(&self, name: &str) -> Result<VecSpan> {
+        let e = self.entry(name)?;
+        if e.shape.len() != 1 {
+            return Err(Error::Shape(format!(
+                "{name} has shape {:?}, expected 1-D", e.shape)));
+        }
+        Ok(VecSpan { offset: e.offset, len: e.size })
+    }
+
+    /// Resolve a 2-D parameter to its [`MatSpan`] (one name lookup; the
+    /// span stays valid for the store's lifetime).
+    pub fn mat2_span(&self, name: &str) -> Result<MatSpan> {
+        let e = self.entry(name)?;
+        if e.shape.len() != 2 {
+            return Err(Error::Shape(format!(
+                "{name} has shape {:?}, expected 2-D", e.shape)));
+        }
+        Ok(MatSpan { offset: e.offset, rows: e.shape[0], cols: e.shape[1] })
+    }
+
+    /// Slice behind a resolved [`VecSpan`] (no lookup, no copy).
+    #[inline]
+    pub fn vec_at(&self, s: VecSpan) -> &[f32] {
+        &self.flat[s.offset..s.offset + s.len]
+    }
+
+    /// Borrowed matrix view behind a resolved [`MatSpan`] (no lookup, no
+    /// copy).
+    #[inline]
+    pub fn mat_at(&self, s: MatSpan) -> MatRef<'_> {
+        MatRef {
+            rows: s.rows,
+            cols: s.cols,
+            data: &self.flat[s.offset..s.offset + s.rows * s.cols],
+        }
     }
 
     /// 2-D parameter as a Mat copy.

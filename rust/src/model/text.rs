@@ -7,8 +7,9 @@ use crate::error::Result;
 use crate::merge::MergeMode;
 use crate::tensor::{dense, Mat};
 
-use super::encoder::{encoder_forward, encoder_forward_batch_pooled,
-                     EncoderCfg, ScratchPool};
+#[allow(deprecated)]
+use super::encoder::encoder_forward_batch_pooled;
+use super::encoder::{encoder_forward, EncoderCfg, ScratchPool};
 use super::params::ParamStore;
 
 /// Token embedding + position for a prefix (e.g. "bert.", "txt.", "q.").
@@ -60,8 +61,7 @@ pub fn text_features(ps: &ParamStore, prefix: &str, tokens: &[i32],
 }
 
 fn bert_encoder_cfg(cfg: &TextConfig) -> EncoderCfg {
-    text_encoder_cfg("bert.", cfg.dim, cfg.depth, cfg.heads, cfg.mode(),
-                     cfg.plan(), cfg.tofu_threshold)
+    EncoderCfg::from_text(cfg)
 }
 
 fn bert_head(ps: &ParamStore, f: Vec<f32>) -> Result<Vec<f32>> {
@@ -81,8 +81,10 @@ pub fn bert_logits(ps: &ParamStore, cfg: &TextConfig, tokens: &[i32],
 
 /// BERT-style classifier logits for a batch of samples with a
 /// caller-owned scratch pool: sequences fan out over `workers` threads,
-/// each worker reusing one `EncoderScratch` from `pool` (see
-/// [`encoder_forward_batch_pooled`]).
+/// each worker reusing one `EncoderScratch` from `pool`.
+#[deprecated(note = "hold a `crate::engine::BertSession` (one per worker) \
+                     instead")]
+#[allow(deprecated)]
 pub fn bert_logits_batch_pooled(ps: &ParamStore, cfg: &TextConfig,
                                 token_seqs: &[Vec<i32>], seed: u64,
                                 workers: usize, pool: &mut ScratchPool)
@@ -100,6 +102,9 @@ pub fn bert_logits_batch_pooled(ps: &ParamStore, cfg: &TextConfig,
 
 /// BERT-style classifier logits for a batch of samples (transient scratch
 /// pool).
+#[deprecated(note = "hold a `crate::engine::BertSession` (one per worker) \
+                     instead")]
+#[allow(deprecated)]
 pub fn bert_logits_batch(ps: &ParamStore, cfg: &TextConfig,
                          token_seqs: &[Vec<i32>], seed: u64, workers: usize)
                          -> Result<Vec<Vec<f32>>> {

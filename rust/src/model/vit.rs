@@ -1,12 +1,17 @@
 //! CPU reference ViT classifier / feature extractor over [`ParamStore`].
+//!
+//! The batch methods are deprecated shims: hot callers hold a
+//! [`crate::engine::VitSession`] (one per worker), which runs the same
+//! pipeline through pooled buffers and never re-resolves weights.
 
 use crate::config::ViTConfig;
 use crate::data::Rng;
 use crate::error::Result;
 use crate::tensor::{dense, Mat};
 
-use super::encoder::{encoder_forward, encoder_forward_batch_pooled,
-                     EncoderCfg, ScratchPool};
+#[allow(deprecated)]
+use super::encoder::encoder_forward_batch_pooled;
+use super::encoder::{encoder_forward, EncoderCfg, ScratchPool};
 use super::params::ParamStore;
 
 /// A loaded ViT model (weights + config).
@@ -24,16 +29,7 @@ impl<'a> ViTModel<'a> {
     }
 
     fn encoder_cfg(&self) -> EncoderCfg {
-        EncoderCfg {
-            prefix: "vit.".into(),
-            dim: self.cfg.dim,
-            depth: self.cfg.depth,
-            heads: self.cfg.heads,
-            mode: self.cfg.mode(),
-            plan: self.cfg.plan(),
-            prop_attn: self.cfg.prop_attn,
-            tofu_threshold: self.cfg.tofu_threshold,
-        }
+        EncoderCfg::from_vit(&self.cfg)
     }
 
     /// Patch embed + CLS + positional embedding for one sample.
@@ -86,6 +82,9 @@ impl<'a> ViTModel<'a> {
     /// [`encoder_forward_batch_pooled`]).  Long-lived servers keep the
     /// pool alive across batches so steady state allocates no encoder
     /// buffers.
+    #[deprecated(note = "hold a `crate::engine::VitSession` (one per \
+                         worker) instead")]
+    #[allow(deprecated)]
     pub fn features_batch_pooled(&self, patches: &[Mat], seed: u64,
                                  workers: usize, pool: &mut ScratchPool)
                                  -> Result<Vec<Vec<f32>>> {
@@ -97,6 +96,9 @@ impl<'a> ViTModel<'a> {
     }
 
     /// Batched CLS features (transient scratch pool).
+    #[deprecated(note = "hold a `crate::engine::VitSession` (one per \
+                         worker) instead")]
+    #[allow(deprecated)]
     pub fn features_batch(&self, patches: &[Mat], seed: u64, workers: usize)
                           -> Result<Vec<Vec<f32>>> {
         let mut pool = ScratchPool::new();
@@ -104,6 +106,9 @@ impl<'a> ViTModel<'a> {
     }
 
     /// Batched class logits with a caller-owned scratch pool.
+    #[deprecated(note = "hold a `crate::engine::VitSession` (one per \
+                         worker) instead")]
+    #[allow(deprecated)]
     pub fn logits_batch_pooled(&self, patches: &[Mat], seed: u64,
                                workers: usize, pool: &mut ScratchPool)
                                -> Result<Vec<Vec<f32>>> {
@@ -120,6 +125,9 @@ impl<'a> ViTModel<'a> {
     }
 
     /// Batched class logits (transient scratch pool).
+    #[deprecated(note = "hold a `crate::engine::VitSession` (one per \
+                         worker) instead")]
+    #[allow(deprecated)]
     pub fn logits_batch(&self, patches: &[Mat], seed: u64, workers: usize)
                         -> Result<Vec<Vec<f32>>> {
         let mut pool = ScratchPool::new();
@@ -127,6 +135,9 @@ impl<'a> ViTModel<'a> {
     }
 
     /// Batched predictions with a caller-owned scratch pool.
+    #[deprecated(note = "hold a `crate::engine::VitSession` (one per \
+                         worker) instead")]
+    #[allow(deprecated)]
     pub fn predict_batch_pooled(&self, patches: &[Mat], seed: u64,
                                 workers: usize, pool: &mut ScratchPool)
                                 -> Result<Vec<usize>> {
@@ -138,6 +149,9 @@ impl<'a> ViTModel<'a> {
     }
 
     /// Batched predictions (transient scratch pool).
+    #[deprecated(note = "hold a `crate::engine::VitSession` (one per \
+                         worker) instead")]
+    #[allow(deprecated)]
     pub fn predict_batch(&self, patches: &[Mat], seed: u64, workers: usize)
                          -> Result<Vec<usize>> {
         let mut pool = ScratchPool::new();

@@ -182,8 +182,11 @@ pub fn matmul(a: &Mat, b: &Mat) -> Mat {
 
 /// C = A @ B into a reusable output buffer (ikj loop with contiguous
 /// row-axpy the compiler vectorizes).  `c` is reshaped to `(a.rows,
-/// b.cols)` in place — allocation-free once warm.
-pub fn matmul_into(a: &Mat, b: MatRef, c: &mut Mat) {
+/// b.cols)` in place — allocation-free once warm.  `a` is anything
+/// view-convertible (`&Mat` or a raw [`MatRef`] over caller memory, e.g.
+/// a request slice on the serving path).
+pub fn matmul_into<'a>(a: impl Into<MatRef<'a>>, b: MatRef, c: &mut Mat) {
+    let a: MatRef = a.into();
     assert_eq!(a.cols, b.rows, "matmul inner dim mismatch");
     c.reset(a.rows, b.cols);
     for i in 0..a.rows {
@@ -363,7 +366,9 @@ pub fn dense(x: &Mat, w: &Mat, b: Option<&[f32]>) -> Mat {
 }
 
 /// x @ w + b into a reusable output buffer — allocation-free once warm.
-pub fn dense_into(x: &Mat, w: MatRef, b: Option<&[f32]>, y: &mut Mat) {
+/// `x` is anything view-convertible, like [`matmul_into`]'s `a`.
+pub fn dense_into<'a>(x: impl Into<MatRef<'a>>, w: MatRef, b: Option<&[f32]>,
+                      y: &mut Mat) {
     matmul_into(x, w, y);
     if let Some(bias) = b {
         assert_eq!(bias.len(), y.cols);

@@ -1,8 +1,8 @@
 //! End-to-end serving over the pure-Rust CPU backend: boots the
 //! coordinator with `boot_cpu` (no PJRT artifacts anywhere), drives it
-//! with real requests, and checks every answer against direct model
+//! with real requests, and checks every answer against direct engine
 //! evaluation.  This exercises the full stack — router, dynamic batcher,
-//! batch encoder, shared-Gram merge steps across worker threads — in an
+//! engine sessions, shared-Gram merge steps across worker threads — in an
 //! artifact-free environment.
 
 use std::sync::Arc;
@@ -10,13 +10,27 @@ use std::sync::Arc;
 use pitome::config::{ServingConfig, ViTConfig};
 use pitome::coordinator::{Coordinator, Qos};
 use pitome::data::{patchify, shape_item, TEST_SEED};
-use pitome::model::{synthetic_vit_store, ViTModel};
+use pitome::engine::Engine;
+use pitome::model::synthetic_vit_store;
 use pitome::runtime::HostTensor;
 use pitome::tensor::argmax;
 
 fn patches_for(i: u64) -> pitome::tensor::Mat {
     let item = shape_item(TEST_SEED, i);
     patchify(&item.image, 4)
+}
+
+/// Direct engine predictions for `patches` under `cfg` (seed 0 — the
+/// same derivation the serving worker uses).
+fn direct_predictions(engine: &Engine, cfg: &ViTConfig,
+                      patches: &[pitome::tensor::Mat]) -> Vec<usize> {
+    let mut sess = engine.vit_session(cfg).unwrap();
+    sess.begin(patches.len());
+    for (i, p) in patches.iter().enumerate() {
+        sess.set_patches(i, p).unwrap();
+    }
+    sess.forward(0).unwrap();
+    (0..patches.len()).map(|i| sess.predict(i)).collect()
 }
 
 #[test]
@@ -28,12 +42,12 @@ fn cpu_coordinator_matches_direct_model() {
     let coord = Coordinator::boot_cpu(&ps, &selection, cfg).unwrap();
 
     // direct reference predictions on the compressed rung
+    let engine = Engine::new(ps.clone());
     let pitome_cfg = ViTConfig { merge_mode: "pitome".into(), merge_r: 0.9,
                                  ..Default::default() };
-    let model = ViTModel::new(&ps, pitome_cfg);
     let n = 12u64;
     let all_patches: Vec<_> = (0..n).map(patches_for).collect();
-    let expected = model.predict_batch(&all_patches, 0, 1).unwrap();
+    let expected = direct_predictions(&engine, &pitome_cfg, &all_patches);
 
     // burst-submit so the batcher actually aggregates
     let mut rxs = Vec::new();
@@ -57,9 +71,8 @@ fn cpu_coordinator_matches_direct_model() {
         vec![HostTensor::F32(all_patches[0].data.clone(),
                              vec![all_patches[0].rows, all_patches[0].cols])])
         .unwrap();
-    let none_cfg = ViTConfig::default();
-    let none_model = ViTModel::new(&ps, none_cfg);
-    let direct = none_model.predict_batch(&all_patches[..1], 0, 1).unwrap();
+    let direct = direct_predictions(&engine, &ViTConfig::default(),
+                                    &all_patches[..1]);
     assert_eq!(argmax(resp.outputs[0].as_f32().unwrap()), direct[0]);
 
     let metrics = coord.metrics();

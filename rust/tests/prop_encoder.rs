@@ -2,6 +2,11 @@
 //! `EncoderScratch` must be indistinguishable from a fresh one — across
 //! every merge mode, random shapes, and proportional attention on/off —
 //! and the shared-scratch batch driver must match the serial path.
+//!
+//! (The deprecated free-function wrappers are exercised deliberately:
+//! they are the historical contract the engine API is parity-tested
+//! against in `prop_engine.rs`.)
+#![allow(deprecated)]
 
 use pitome::config::ViTConfig;
 use pitome::data::Rng;

@@ -1,0 +1,338 @@
+//! Bitwise parity between the owning `Engine`/`Session` API and every
+//! deprecated legacy entry point, across all ten merge modes:
+//!
+//! * `Session::forward_batch` vs `encoder_forward_batch[_pooled]`
+//!   (identical per-(layer, sample) seeding — stochastic modes included);
+//! * `Session::forward_one` vs `encoder_forward` /
+//!   `encoder_forward_scratch` (identical shared-RNG stream);
+//! * `VitSession` vs `ViTModel::{features,logits,predict}_batch[_pooled]`
+//!   and the single-sample `ViTModel::{features,logits,predict}`;
+//! * `BertSession` vs `bert_logits_batch[_pooled]`.
+//!
+//! Plus the stale-pool regression: one session driven through growing and
+//! shrinking batch sizes must match fresh sessions exactly, and inputs
+//! whose shape contradicts the config must be rejected.
+#![allow(deprecated)]
+
+use pitome::config::{TextConfig, ViTConfig};
+use pitome::data::Rng;
+use pitome::engine::Engine;
+use pitome::model::{bert_logits_batch, bert_logits_batch_pooled,
+                    encoder_forward, encoder_forward_batch,
+                    encoder_forward_batch_pooled, encoder_forward_scratch,
+                    synthetic_vit_store, EncoderCfg, EncoderScratch,
+                    ParamEntry, ParamStore, ScratchPool, ViTModel};
+use pitome::tensor::Mat;
+
+/// Every mode the encoder can run (paper modes + ablations + baselines).
+const MODES: &[&str] = &[
+    "none", "pitome", "pitome_noprot", "pitome_rand", "pitome_attn",
+    "tome", "tofu", "dct", "diffrate", "random",
+];
+
+fn vit_cfg(mode: &str) -> ViTConfig {
+    ViTConfig { merge_mode: mode.into(), merge_r: 0.9, ..Default::default() }
+}
+
+fn random_input(n: usize, dim: usize, seed: u64) -> Mat {
+    let mut rng = Rng::new(seed);
+    Mat::from_fn(n, dim, |_, _| (rng.next_f64() * 0.2 - 0.1) as f32)
+}
+
+fn random_patches(vcfg: &ViTConfig, seed: u64) -> Mat {
+    random_input(vcfg.num_patches(), vcfg.patch_dim(), seed)
+}
+
+#[test]
+fn session_forward_batch_matches_batch_wrappers_in_every_mode() {
+    for &mode in MODES {
+        let vcfg = vit_cfg(mode);
+        let ps = synthetic_vit_store(&vcfg, 42);
+        let cfg = EncoderCfg::from_vit(&vcfg);
+        let xs: Vec<Mat> = (0..4)
+            .map(|i| random_input(cfg.plan[0], cfg.dim, 10 + i))
+            .collect();
+        let mut pool = ScratchPool::new();
+        let want_pooled = encoder_forward_batch_pooled(
+            &ps, &cfg, xs.clone(), 9, 2, &mut pool).unwrap();
+        let want_plain =
+            encoder_forward_batch(&ps, &cfg, xs.clone(), 9, 2).unwrap();
+
+        let engine = Engine::from_store(synthetic_vit_store(&vcfg, 42));
+        let mut sess = engine.session(cfg).unwrap();
+        sess.set_workers(2);
+        let got = sess.forward_batch(&xs, 9).unwrap();
+        assert_eq!(got.len(), want_pooled.len());
+        for (i, g) in got.iter().enumerate() {
+            assert!(g.max_abs_diff(&want_pooled[i]) == 0.0,
+                    "{mode} sample {i}: session != batch_pooled wrapper");
+            assert!(g.max_abs_diff(&want_plain[i]) == 0.0,
+                    "{mode} sample {i}: session != batch wrapper");
+        }
+    }
+}
+
+#[test]
+fn session_forward_one_matches_serial_wrappers_in_every_mode() {
+    for &mode in MODES {
+        let vcfg = vit_cfg(mode);
+        let ps = synthetic_vit_store(&vcfg, 7);
+        let cfg = EncoderCfg::from_vit(&vcfg);
+        let engine = Engine::from_store(synthetic_vit_store(&vcfg, 7));
+        let mut sess = engine.session(cfg.clone()).unwrap();
+        let mut scratch = EncoderScratch::new();
+        // three trials through ONE session: the shared RNG stream and the
+        // wrappers' streams must stay in lockstep (stochastic modes too)
+        for trial in 0..3u64 {
+            let x = random_input(cfg.plan[0], cfg.dim, 20 + trial);
+            let mut r1 = Rng::new(trial);
+            let want = encoder_forward(&ps, &cfg, x.clone(), &mut r1).unwrap();
+            let mut r2 = Rng::new(trial);
+            let want2 = encoder_forward_scratch(&ps, &cfg, x.clone(), &mut r2,
+                                                &mut scratch).unwrap();
+            let mut r3 = Rng::new(trial);
+            let got = sess.forward_one(&x, &mut r3).unwrap();
+            assert!(got.max_abs_diff(&want) == 0.0,
+                    "{mode} trial {trial}: session != encoder_forward");
+            assert!(got.max_abs_diff(&want2) == 0.0,
+                    "{mode} trial {trial}: session != encoder_forward_scratch");
+        }
+    }
+}
+
+#[test]
+fn vit_session_matches_vit_model_wrappers_in_every_mode() {
+    for &mode in MODES {
+        let vcfg = vit_cfg(mode);
+        let ps = synthetic_vit_store(&vcfg, 3);
+        let model = ViTModel::new(&ps, vcfg.clone());
+        let patches: Vec<Mat> =
+            (0..3).map(|i| random_patches(&vcfg, 60 + i)).collect();
+        let mut pool = ScratchPool::new();
+        let want_feats =
+            model.features_batch_pooled(&patches, 5, 2, &mut pool).unwrap();
+        let want_logits =
+            model.logits_batch_pooled(&patches, 5, 2, &mut pool).unwrap();
+        let want_logits2 = model.logits_batch(&patches, 5, 2).unwrap();
+        let want_preds =
+            model.predict_batch_pooled(&patches, 5, 2, &mut pool).unwrap();
+        let want_preds2 = model.predict_batch(&patches, 5, 2).unwrap();
+
+        let engine = Engine::from_store(synthetic_vit_store(&vcfg, 3));
+        let mut sess = engine.vit_session(&vcfg).unwrap();
+        sess.set_workers(2);
+        sess.begin(patches.len());
+        for (i, p) in patches.iter().enumerate() {
+            sess.set_patches(i, p).unwrap();
+        }
+        sess.forward(5).unwrap();
+        for i in 0..patches.len() {
+            assert_eq!(sess.features(i), &want_feats[i][..],
+                       "{mode} sample {i}: features diverged");
+            assert_eq!(sess.logits(i), &want_logits[i][..],
+                       "{mode} sample {i}: logits diverged");
+            assert_eq!(sess.logits(i), &want_logits2[i][..],
+                       "{mode} sample {i}: logits (plain wrapper) diverged");
+            assert_eq!(sess.predict(i), want_preds[i],
+                       "{mode} sample {i}: prediction diverged");
+            assert_eq!(sess.predict(i), want_preds2[i],
+                       "{mode} sample {i}: prediction (plain) diverged");
+        }
+
+        // single-sample serial contract vs ViTModel::{features,logits,
+        // predict}: one shared RNG stream threads through all samples
+        let mut r1 = Rng::new(77);
+        let mut r2 = Rng::new(77);
+        for (i, p) in patches.iter().enumerate() {
+            let want_f = model.features(p, &mut r1).unwrap();
+            let got_f = sess.features_one(p, &mut r2).unwrap();
+            assert_eq!(got_f, &want_f[..], "{mode} sample {i}: features_one");
+        }
+        let mut r1 = Rng::new(78);
+        let mut r2 = Rng::new(78);
+        for (i, p) in patches.iter().enumerate() {
+            let want_lg = model.logits(p, &mut r1).unwrap();
+            let want_pred = pitome::tensor::argmax(&want_lg);
+            sess.begin(1);
+            sess.set_patches(0, p).unwrap();
+            sess.forward_serial(&mut r2).unwrap();
+            assert_eq!(sess.logits(0), &want_lg[..],
+                       "{mode} sample {i}: serial logits diverged");
+            assert_eq!(sess.predict(0), want_pred,
+                       "{mode} sample {i}: serial prediction diverged");
+        }
+    }
+}
+
+/// Build a synthetic BERT-style parameter store covering every tensor the
+/// text encoder path names (mirrors `synthetic_vit_store`'s scheme).
+fn synthetic_bert_store(cfg: &TextConfig, seed: u64) -> ParamStore {
+    let dim = cfg.dim;
+    let hidden = (cfg.dim as f64 * cfg.mlp_ratio) as usize;
+    let scale = 1.0 / (dim as f32).sqrt();
+    let mut rng = Rng::new(seed);
+    let mut flat: Vec<f32> = Vec::new();
+    let mut entries: Vec<ParamEntry> = Vec::new();
+    let push = |flat: &mut Vec<f32>, entries: &mut Vec<ParamEntry>,
+                    name: &str, shape: &[usize], s: f32, rng: &mut Rng| {
+        let size: usize = shape.iter().product();
+        let offset = flat.len();
+        for _ in 0..size {
+            let v = if s == 0.0 {
+                if name.ends_with(".w") && name.contains("ln") { 1.0 } else { 0.0 }
+            } else {
+                (rng.next_f64() * 2.0 - 1.0) as f32 * s
+            };
+            flat.push(v);
+        }
+        entries.push(ParamEntry { name: name.into(), shape: shape.to_vec(),
+                                  offset, size });
+    };
+    push(&mut flat, &mut entries, "bert.tok", &[cfg.vocab_size, dim], 0.02, &mut rng);
+    push(&mut flat, &mut entries, "bert.pos", &[cfg.n_tokens(), dim], 0.02, &mut rng);
+    for l in 0..cfg.depth {
+        let p = format!("bert.blk{l}.");
+        push(&mut flat, &mut entries, &format!("{p}ln1.w"), &[dim], 0.0, &mut rng);
+        push(&mut flat, &mut entries, &format!("{p}ln1.b"), &[dim], 0.0, &mut rng);
+        push(&mut flat, &mut entries, &format!("{p}wq"), &[dim, dim], scale, &mut rng);
+        push(&mut flat, &mut entries, &format!("{p}wk"), &[dim, dim], scale, &mut rng);
+        push(&mut flat, &mut entries, &format!("{p}wv"), &[dim, dim], scale, &mut rng);
+        push(&mut flat, &mut entries, &format!("{p}wo"), &[dim, dim], scale, &mut rng);
+        push(&mut flat, &mut entries, &format!("{p}bo"), &[dim], 0.0, &mut rng);
+        push(&mut flat, &mut entries, &format!("{p}ln2.w"), &[dim], 0.0, &mut rng);
+        push(&mut flat, &mut entries, &format!("{p}ln2.b"), &[dim], 0.0, &mut rng);
+        push(&mut flat, &mut entries, &format!("{p}mlp1"), &[dim, hidden], scale, &mut rng);
+        push(&mut flat, &mut entries, &format!("{p}mlp1b"), &[hidden], 0.0, &mut rng);
+        push(&mut flat, &mut entries, &format!("{p}mlp2"), &[hidden, dim],
+             1.0 / (hidden as f32).sqrt(), &mut rng);
+        push(&mut flat, &mut entries, &format!("{p}mlp2b"), &[dim], 0.0, &mut rng);
+    }
+    push(&mut flat, &mut entries, "bert.lnf.w", &[dim], 0.0, &mut rng);
+    push(&mut flat, &mut entries, "bert.lnf.b", &[dim], 0.0, &mut rng);
+    push(&mut flat, &mut entries, "bert.head.w", &[dim, cfg.num_classes], scale, &mut rng);
+    push(&mut flat, &mut entries, "bert.head.b", &[cfg.num_classes], 0.0, &mut rng);
+    ParamStore::from_parts(flat, entries)
+}
+
+#[test]
+fn bert_session_matches_bert_wrappers_in_every_mode() {
+    for &mode in MODES {
+        let tcfg = TextConfig {
+            merge_mode: mode.into(),
+            merge_r: 0.8,
+            seq_len: 24,
+            vocab_size: 64,
+            ..Default::default()
+        };
+        let ps = synthetic_bert_store(&tcfg, 9);
+        let mut rng = Rng::new(31);
+        let seqs: Vec<Vec<i32>> = (0..3)
+            .map(|_| {
+                (0..tcfg.n_tokens())
+                    .map(|_| rng.next_below(tcfg.vocab_size as u64) as i32)
+                    .collect()
+            })
+            .collect();
+        let mut pool = ScratchPool::new();
+        let want = bert_logits_batch_pooled(&ps, &tcfg, &seqs, 4, 2,
+                                            &mut pool).unwrap();
+        let want2 = bert_logits_batch(&ps, &tcfg, &seqs, 4, 2).unwrap();
+
+        let engine = Engine::from_store(synthetic_bert_store(&tcfg, 9));
+        let mut sess = engine.bert_session(&tcfg).unwrap();
+        sess.set_workers(2);
+        sess.begin(seqs.len());
+        for (i, s) in seqs.iter().enumerate() {
+            sess.set_tokens(i, s).unwrap();
+        }
+        sess.forward(4).unwrap();
+        for i in 0..seqs.len() {
+            assert_eq!(sess.logits(i), &want[i][..],
+                       "{mode} seq {i}: logits != batch_pooled wrapper");
+            assert_eq!(sess.logits(i), &want2[i][..],
+                       "{mode} seq {i}: logits != batch wrapper");
+        }
+    }
+}
+
+#[test]
+fn one_session_survives_growing_and_shrinking_batches() {
+    // the stale-pool regression: ONE session (and one vit session) driven
+    // through interleaved batch sizes must match fresh sessions bitwise —
+    // any buffer whose logical length lags the round's shape would show up
+    let vcfg = vit_cfg("pitome");
+    let engine = Engine::from_store(synthetic_vit_store(&vcfg, 21));
+    let cfg = EncoderCfg::from_vit(&vcfg);
+    let mut reused = engine.session(cfg.clone()).unwrap();
+    for (round, &bs) in [5usize, 2, 7, 1, 4].iter().enumerate() {
+        let xs: Vec<Mat> = (0..bs)
+            .map(|i| random_input(cfg.plan[0], cfg.dim,
+                                  (round * 100 + i) as u64))
+            .collect();
+        let mut fresh = engine.session(cfg.clone()).unwrap();
+        let want: Vec<Mat> =
+            fresh.forward_batch(&xs, round as u64).unwrap().to_vec();
+        let got = reused.forward_batch(&xs, round as u64).unwrap();
+        assert_eq!(got.len(), bs, "round {round}");
+        for (i, g) in got.iter().enumerate() {
+            assert!(g.max_abs_diff(&want[i]) == 0.0,
+                    "round {round} (batch {bs}) sample {i}: reused session \
+                     diverged from fresh");
+        }
+    }
+
+    let mut vit = engine.vit_session(&vcfg).unwrap();
+    for (round, &bs) in [3usize, 1, 6, 2].iter().enumerate() {
+        let patches: Vec<Mat> = (0..bs)
+            .map(|i| random_patches(&vcfg, (round * 50 + i) as u64))
+            .collect();
+        let mut fresh = engine.vit_session(&vcfg).unwrap();
+        fresh.begin(bs);
+        vit.begin(bs);
+        for (i, p) in patches.iter().enumerate() {
+            fresh.set_patches(i, p).unwrap();
+            vit.set_patches(i, p).unwrap();
+        }
+        fresh.forward(round as u64).unwrap();
+        vit.forward(round as u64).unwrap();
+        for i in 0..bs {
+            assert_eq!(vit.logits(i), fresh.logits(i),
+                       "vit round {round} sample {i}: reused session diverged");
+        }
+    }
+}
+
+#[test]
+fn sessions_reject_stale_or_contradictory_shapes() {
+    let vcfg = vit_cfg("pitome");
+    let engine = Engine::from_store(synthetic_vit_store(&vcfg, 2));
+    // raw session: an input left at a previous (wrong) shape is an error
+    let mut sess = engine.session(EncoderCfg::from_vit(&vcfg)).unwrap();
+    sess.begin(2);
+    sess.input_mut(0).reshape(3, 3);
+    sess.input_mut(1).reshape(3, 3);
+    assert!(sess.forward(0).is_err(), "wrong-shape input must be rejected");
+    // and the session recovers once the inputs are refilled correctly
+    let xs: Vec<Mat> = (0..2)
+        .map(|i| random_input(vcfg.n_tokens(), vcfg.dim, i))
+        .collect();
+    sess.forward_batch(&xs, 0).unwrap();
+
+    // vit session: wrong patch shapes and wrong raw lengths are rejected
+    let mut vit = engine.vit_session(&vcfg).unwrap();
+    vit.begin(1);
+    let bad = Mat::zeros(3, 3);
+    assert!(vit.set_patches(0, &bad).is_err());
+    assert!(vit.set_patches_slice(0, &[0.0; 7]).is_err());
+
+    // bert session: wrong sequence length and out-of-vocab ids rejected
+    let tcfg = TextConfig { seq_len: 12, vocab_size: 32,
+                            ..Default::default() };
+    let bert_ps = synthetic_bert_store(&tcfg, 4);
+    let bert_engine = Engine::from_store(bert_ps);
+    let mut bert = bert_engine.bert_session(&tcfg).unwrap();
+    bert.begin(1);
+    assert!(bert.set_tokens(0, &[1, 2, 3]).is_err(), "short seq accepted");
+    let bad_ids = vec![999i32; tcfg.n_tokens()];
+    assert!(bert.set_tokens(0, &bad_ids).is_err(), "oov ids accepted");
+}
