@@ -1,13 +1,21 @@
 //! PERF/L3 — coordinator hot-path benchmarks without PJRT: queue
-//! round-trip latency, batcher aggregation, metrics overhead.  These keep
-//! the L3 overhead honest against the paper's "merging overhead must not
-//! eat the savings" requirement.
+//! round-trip latency, batcher aggregation, metrics overhead, and the
+//! typed-router section (per-workload queue depth, joint-batch split
+//! overhead, response-recycle hit rate).  These keep the L3 overhead
+//! honest against the paper's "merging overhead must not eat the
+//! savings" requirement.
 
 use std::sync::mpsc;
+use std::sync::Arc;
 use std::time::Instant;
 
-use pitome::coordinator::Metrics;
-use pitome::data::{generate_trace, TraceConfig};
+use pitome::config::{ServingConfig, ViTConfig};
+use pitome::coordinator::{Coordinator, CpuWorkloads, Metrics, Payload, Qos,
+                          Workload};
+use pitome::data::{generate_trace, patchify, sent_item, shape_item,
+                   vqa_item, TraceConfig, TEST_SEED};
+use pitome::engine::JointKind;
+use pitome::model::synthetic_mm_store;
 use pitome::util::{smoke, Bench};
 
 fn main() {
@@ -59,6 +67,95 @@ fn main() {
         data
     });
 
+    router_section(sm);
+
     let t0 = Instant::now();
     let _ = t0.elapsed();
+}
+
+/// Typed-router serving section: boots the CPU multi-workload
+/// coordinator on synthetic multimodal weights and reports per-workload
+/// latency, queue depth, joint-batch split overhead (a paired batch vs
+/// its two single-tower halves), and the response-recycle hit rate.
+fn router_section(sm: bool) {
+    println!("\n# typed router (vision + text + joint pools, synthetic weights)");
+    let reqs: usize = if sm { 12 } else { 120 };
+    let ps = Arc::new(synthetic_mm_store(&ViTConfig::default(), 7));
+    let workloads = CpuWorkloads {
+        vision: vec![("vit".to_string(),
+                      vec![("pitome".to_string(), 0.9)])],
+        text: vec![("bert".to_string(), vec![("none".to_string(), 1.0)])],
+        joint: vec![("vqa".to_string(), JointKind::Vqa,
+                     vec![("pitome".to_string(), 0.9)])],
+    };
+    let coord = Coordinator::boot_cpu_workloads(
+        &ps, &workloads, ServingConfig::default()).expect("boot");
+    let pool = coord.pool().clone();
+    let slot = coord.response_slot();
+    let tcfg = pitome::config::TextConfig::default();
+
+    let item = shape_item(TEST_SEED, 0);
+    let patches = patchify(&item.image, 4);
+    let (question, _) = vqa_item(TEST_SEED, 0);
+    let (tokens, _) = sent_item(TEST_SEED, 0, tcfg.seq_len, 16);
+
+    let submit_vision = |i: u64| {
+        let _ = i;
+        let mut vt = pool.take_f32(patches.data.len());
+        vt.fill_f32(&patches.data, &[patches.rows, patches.cols]);
+        coord.submit_pooled(Workload::Vision, "vit", Qos::Throughput,
+                            Payload::Vision(vt), &slot).expect("submit");
+        slot.recv().expect("vision response")
+    };
+    let submit_text = || {
+        let mut tt = pool.take_i32(tokens.len());
+        tt.fill_i32(&tokens, &[tokens.len()]);
+        coord.submit_pooled(Workload::Text, "bert", Qos::Throughput,
+                            Payload::Text(tt), &slot).expect("submit");
+        slot.recv().expect("text response")
+    };
+    let submit_joint = || {
+        let mut vt = pool.take_f32(patches.data.len());
+        vt.fill_f32(&patches.data, &[patches.rows, patches.cols]);
+        let mut qt = pool.take_i32(question.len());
+        qt.fill_i32(&question, &[question.len()]);
+        coord.submit_pooled(Workload::Joint, "vqa", Qos::Throughput,
+                            Payload::Joint { vision: vt, text: qt }, &slot)
+            .expect("submit");
+        slot.recv().expect("joint response")
+    };
+
+    // warm every pool (sessions grow their buffers, freelists fill)
+    for i in 0..3 {
+        drop(submit_vision(i));
+        drop(submit_text());
+        drop(submit_joint());
+    }
+
+    // per-workload round-trip latency; the joint-vs-halves gap is the
+    // split overhead (pair batches run both towers + fusion)
+    let lat = |label: &str, f: &mut dyn FnMut()| {
+        let t0 = Instant::now();
+        for _ in 0..reqs {
+            f();
+        }
+        let us = t0.elapsed().as_micros() as f64 / reqs as f64;
+        println!("  {label:<28} {us:>10.1} us/req");
+        us
+    };
+    let v_us = lat("vision round-trip", &mut || drop(submit_vision(1)));
+    let t_us = lat("text round-trip", &mut || drop(submit_text()));
+    let j_us = lat("joint (pair) round-trip", &mut || drop(submit_joint()));
+    println!("  joint split overhead: {:.1} us vs vision+text {:.1} us \
+              (x{:.2})",
+             j_us, v_us + t_us, j_us / (v_us + t_us).max(1.0));
+
+    // per-workload queue depth (all zero once drained — the admission
+    // signal the balanced router sheds on)
+    for (w, model, artifact, depth) in coord.router().queue_depths() {
+        println!("  depth {:<8} {model}/{artifact}: {depth}", w.name());
+    }
+    println!("  recycle hit rate: {}", pool.hit_rate_summary());
+    let total: u64 = coord.metrics().iter().map(|(_, _, s)| s.count).sum();
+    assert_eq!(total as usize, 3 * (reqs + 3), "router lost requests");
 }

@@ -12,7 +12,17 @@ fn main() -> anyhow::Result<()> {
     let dir = std::path::PathBuf::from(args.get("artifacts",
         Registry::default_dir().to_str().unwrap_or("artifacts")));
     let n = args.get_parse("n", 256);
-    let ps = load_model_params(&dir, "clip").map_err(|e| anyhow::anyhow!("{e}"))?;
+    let ps = match load_model_params(&dir, "clip") {
+        Ok(ps) => ps,
+        Err(e) => {
+            // loud degraded mode: synthetic weights are deterministic
+            // but untrained
+            println!("(clip params unavailable: {e})");
+            println!("(falling back to SYNTHETIC multimodal weights)");
+            pitome::model::synthetic_mm_store(
+                &pitome::config::ViTConfig::default(), 7)
+        }
+    };
     let engine = Engine::from_store(ps);
 
     if args.has("figure3") {

@@ -1,14 +1,20 @@
 //! T5 — Serving wall-time: end-to-end latency/throughput of the
 //! coordinator across compression variants and arrival rates (the Table 5
-//! inference-time shape), on the PJRT artifacts.
+//! inference-time shape).  With PJRT artifacts present it drives the
+//! compiled variants; without them it boots the multi-workload CPU
+//! coordinator (vision + text + joint pools over one engine) and replays
+//! a mixed trace through the typed router instead.
 
-use std::path::PathBuf;
+use std::path::{Path, PathBuf};
 use std::sync::Arc;
 use std::time::{Duration, Instant};
 
-use pitome::config::ServingConfig;
-use pitome::coordinator::{Coordinator, Qos};
-use pitome::data::{generate_trace, patchify, shape_item, TraceConfig, TEST_SEED};
+use pitome::config::{ServingConfig, ViTConfig};
+use pitome::coordinator::{Coordinator, CpuWorkloads, Payload, Qos, Workload};
+use pitome::data::{generate_trace, patchify, sent_item, shape_item,
+                   vqa_item, TraceConfig, TEST_SEED};
+use pitome::engine::JointKind;
+use pitome::model::synthetic_mm_store;
 use pitome::runtime::{HostTensor, Registry};
 use pitome::util::Args;
 
@@ -17,8 +23,18 @@ fn main() -> anyhow::Result<()> {
     let dir = PathBuf::from(args.get("artifacts",
         Registry::default_dir().to_str().unwrap_or("artifacts")));
     let requests = args.get_parse("requests", 400);
-    let reg = Registry::load(&dir).map_err(|e| anyhow::anyhow!("{e}"))?;
+    match Registry::load(&dir) {
+        Ok(reg) => pjrt_bench(&reg, &dir, requests),
+        Err(e) => {
+            println!("(no artifact registry: {e})");
+            println!("(benching the CPU multi-workload coordinator instead)");
+            cpu_mixed_bench(requests)
+        }
+    }
+}
 
+fn pjrt_bench(reg: &Registry, dir: &Path, requests: usize)
+              -> anyhow::Result<()> {
     println!("# Table 5 (serving substitution): wall-time per variant");
     println!("{:<22} {:>7} {:>10} {:>10} {:>10} {:>11} {:>10}",
              "variant", "rate", "wall s", "mean us", "p99 us", "mean batch",
@@ -33,7 +49,7 @@ fn main() -> anyhow::Result<()> {
         for rate in [200.0, 800.0, 3200.0] {
             let selection = [("m", vec![artifact.to_string()])];
             let coord = Arc::new(Coordinator::boot(
-                &reg, &dir, &selection, ServingConfig::default())
+                reg, dir, &selection, ServingConfig::default())
                 .map_err(|e| anyhow::anyhow!("{e}"))?);
             // allow the worker thread to finish compiling
             warmup(&coord)?;
@@ -66,6 +82,91 @@ fn main() -> anyhow::Result<()> {
                      snap.mean_batch, ok as f64 / wall);
         }
     }
+    Ok(())
+}
+
+/// Replay a mixed Vision/Text/Joint trace through the typed router over
+/// the CPU multi-workload coordinator (synthetic multimodal weights).
+fn cpu_mixed_bench(requests: usize) -> anyhow::Result<()> {
+    let ps = Arc::new(synthetic_mm_store(&ViTConfig::default(), 7));
+    let workloads = CpuWorkloads {
+        vision: vec![("vit".to_string(),
+                      vec![("none".to_string(), 1.0),
+                           ("pitome".to_string(), 0.9)])],
+        text: vec![("bert".to_string(), vec![("none".to_string(), 1.0)])],
+        joint: vec![("vqa".to_string(), JointKind::Vqa,
+                     vec![("pitome".to_string(), 0.9)])],
+    };
+    let cfg = ServingConfig {
+        workers: pitome::merge::batch::recommended_workers(),
+        ..Default::default()
+    };
+    let coord = Arc::new(Coordinator::boot_cpu_workloads(&ps, &workloads, cfg)
+        .map_err(|e| anyhow::anyhow!("{e}"))?);
+    let pool = coord.pool().clone();
+    let tcfg = pitome::config::TextConfig::default();
+
+    println!("# mixed-workload CPU serving: {requests} requests \
+              (3:1:1 vision:text:joint)");
+    let trace = generate_trace(&TraceConfig {
+        rate: 600.0, count: requests, seed: 3, ..Default::default()
+    });
+    let t0 = Instant::now();
+    let mut pending = Vec::new();
+    for (i, ev) in trace.iter().enumerate() {
+        let target = Duration::from_micros(ev.at_us);
+        if let Some(w) = target.checked_sub(t0.elapsed()) {
+            std::thread::sleep(w);
+        }
+        let rx = match i % 5 {
+            3 => {
+                let (toks, _) = sent_item(TEST_SEED, ev.item, tcfg.seq_len,
+                                          16);
+                let mut tt = pool.take_i32(toks.len());
+                tt.fill_i32(&toks, &[toks.len()]);
+                coord.submit_typed(Workload::Text, "bert", Qos::Accuracy,
+                                   Payload::Text(tt))
+            }
+            4 => {
+                let item = shape_item(TEST_SEED, ev.item);
+                let patches = patchify(&item.image, 4);
+                let (q, _) = vqa_item(TEST_SEED, ev.item);
+                let mut vt = pool.take_f32(patches.data.len());
+                vt.fill_f32(&patches.data, &[patches.rows, patches.cols]);
+                let mut qt = pool.take_i32(q.len());
+                qt.fill_i32(&q, &[q.len()]);
+                coord.submit_typed(Workload::Joint, "vqa", Qos::Throughput,
+                                   Payload::Joint { vision: vt, text: qt })
+            }
+            _ => {
+                let item = shape_item(TEST_SEED, ev.item);
+                let patches = patchify(&item.image, 4);
+                let mut vt = pool.take_f32(patches.data.len());
+                vt.fill_f32(&patches.data, &[patches.rows, patches.cols]);
+                coord.submit_typed(Workload::Vision, "vit", Qos::Balanced,
+                                   Payload::Vision(vt))
+            }
+        };
+        pending.push(rx.map_err(|e| anyhow::anyhow!("{e}"))?);
+    }
+    let mut ok = 0usize;
+    for rx in pending {
+        if rx.recv().is_ok() {
+            ok += 1;
+        }
+    }
+    let wall = t0.elapsed().as_secs_f64();
+    println!("served {ok}/{requests} in {wall:.2}s ({:.1} req/s)",
+             ok as f64 / wall);
+    println!("{:<8} {:<6} {:>18} {:>8} {:>10} {:>10} {:>11}",
+             "workload", "model", "artifact", "n", "mean us", "p99 us",
+             "mean batch");
+    for (w, model, artifact, snap) in coord.metrics_typed() {
+        println!("{:<8} {:<6} {:>18} {:>8} {:>10.0} {:>10} {:>11.2}",
+                 w.name(), model, artifact, snap.count, snap.mean_us,
+                 snap.p99_us, snap.mean_batch);
+    }
+    println!("recycle hit rate: {}", pool.hit_rate_summary());
     Ok(())
 }
 

@@ -1,10 +1,20 @@
 //! T4/F5 — VQA: answer accuracy per merge mode (Table 4 shape) and the
 //! accuracy-vs-r curve of Figure 5, on the synthetic VQA model
-//! (LLaVA stand-in, DESIGN.md §6).
+//! (LLaVA stand-in, DESIGN.md §6), driven through engine
+//! `JointSession`s.  `--serve` additionally routes (image, question)
+//! pairs through the coordinator's joint worker pool and reports the
+//! serving-side numbers (recycle hit rate included).
 
+use std::sync::Arc;
+
+use pitome::config::{ServingConfig, ViTConfig};
+use pitome::coordinator::{Coordinator, CpuWorkloads, Payload, Qos, Workload};
+use pitome::data::{patchify, shape_item, vqa_item, TEST_SEED};
+use pitome::engine::{Engine, JointKind};
 use pitome::eval::vqa::{eval_config, sweep};
-use pitome::model::load_model_params;
+use pitome::model::{load_model_params, synthetic_mm_store};
 use pitome::runtime::Registry;
+use pitome::tensor::argmax;
 use pitome::util::Args;
 
 fn main() -> anyhow::Result<()> {
@@ -12,14 +22,28 @@ fn main() -> anyhow::Result<()> {
     let dir = std::path::PathBuf::from(args.get("artifacts",
         Registry::default_dir().to_str().unwrap_or("artifacts")));
     let n = args.get_parse("n", 384);
-    let ps = load_model_params(&dir, "vqa").map_err(|e| anyhow::anyhow!("{e}"))?;
+    let ps = match load_model_params(&dir, "vqa") {
+        Ok(ps) => ps,
+        Err(e) => {
+            // make the degraded mode loud: synthetic multimodal weights
+            // are deterministic but untrained
+            println!("(vqa params unavailable: {e})");
+            println!("(falling back to SYNTHETIC multimodal weights)");
+            synthetic_mm_store(&ViTConfig::default(), 7)
+        }
+    };
+    let engine = Engine::from_store(ps);
+
+    if args.has("serve") {
+        return serve_section(&engine, n.min(64));
+    }
 
     if args.has("sweep") {
         println!("# Figure 5: VQA accuracy vs compression ratio r (pitome)");
         println!("{:<10} {:<7} {:>8} {:>9} {:>8}", "mode", "r", "acc%",
                  "GFLOPs", "vis-tok");
         let rs = [0.975, 0.95, 0.925, 0.9, 0.85, 0.8];
-        for row in sweep(&ps, &["pitome", "tome"], &rs, n)
+        for row in sweep(&engine, &["pitome", "tome"], &rs, n)
             .map_err(|e| anyhow::anyhow!("{e}"))? {
             println!("{:<10} {:<7} {:>8.2} {:>9.4} {:>8}",
                      row.mode, row.r, row.acc, row.gflops, row.visual_tokens);
@@ -29,14 +53,61 @@ fn main() -> anyhow::Result<()> {
 
     println!("# Table 4 (synthetic VQA substitution): r = 0.9");
     println!("{:<10} {:>8} {:>9} {:>8}", "mode", "acc%", "GFLOPs", "vis-tok");
-    let base = eval_config(&ps, "none", 1.0, n).map_err(|e| anyhow::anyhow!("{e}"))?;
+    let base = eval_config(&engine, "none", 1.0, n)
+        .map_err(|e| anyhow::anyhow!("{e}"))?;
     println!("{:<10} {:>8.2} {:>9.4} {:>8} (base)", base.mode, base.acc,
              base.gflops, base.visual_tokens);
     for mode in ["pitome", "tome", "tofu", "dct", "diffrate"] {
-        let row = eval_config(&ps, mode, 0.9, n).map_err(|e| anyhow::anyhow!("{e}"))?;
+        let row = eval_config(&engine, mode, 0.9, n)
+            .map_err(|e| anyhow::anyhow!("{e}"))?;
         println!("{:<10} {:>8.2} {:>9.4} {:>8}  (drop {:+.2})",
                  row.mode, row.acc, row.gflops, row.visual_tokens,
                  row.acc - base.acc);
     }
+    Ok(())
+}
+
+/// Route `n` (image, question) pairs through the coordinator's joint
+/// worker pool (the serving form of Table 5's VQA column) and compare
+/// against direct session evaluation.
+fn serve_section(engine: &Engine, n: usize) -> anyhow::Result<()> {
+    println!("# VQA through the typed router (joint workload, pitome r=0.9)");
+    let ps = engine.params_arc();
+    let workloads = CpuWorkloads {
+        joint: vec![("vqa".to_string(), JointKind::Vqa,
+                     vec![("pitome".to_string(), 0.9)])],
+        ..Default::default()
+    };
+    let coord = Arc::new(
+        Coordinator::boot_cpu_workloads(&ps, &workloads,
+                                        ServingConfig::default())
+            .map_err(|e| anyhow::anyhow!("{e}"))?);
+    let pool = coord.pool().clone();
+    let slot = coord.response_slot();
+    let t0 = std::time::Instant::now();
+    let mut answers = Vec::with_capacity(n);
+    for i in 0..n {
+        let item = shape_item(TEST_SEED, i as u64);
+        let patches = patchify(&item.image, 4);
+        let (q, _) = vqa_item(TEST_SEED, i as u64);
+        let mut vt = pool.take_f32(patches.data.len());
+        vt.fill_f32(&patches.data, &[patches.rows, patches.cols]);
+        let mut qt = pool.take_i32(q.len());
+        qt.fill_i32(&q, &[q.len()]);
+        coord.submit_pooled(Workload::Joint, "vqa", Qos::Throughput,
+                            Payload::Joint { vision: vt, text: qt }, &slot)
+            .map_err(|e| anyhow::anyhow!("{e}"))?;
+        let resp = slot.recv().map_err(|e| anyhow::anyhow!("{e}"))?;
+        answers.push(argmax(resp.outputs[0].as_f32()
+            .map_err(|e| anyhow::anyhow!("{e}"))?));
+    }
+    let wall = t0.elapsed().as_secs_f64();
+    let snap = &coord.metrics()[0].2;
+    println!("pairs={} wall={:.3}s ({:.1} pair/s) mean={:.0}us p99={}us \
+              mean_batch={:.2}",
+             n, wall, n as f64 / wall, snap.mean_us, snap.p99_us,
+             snap.mean_batch);
+    println!("recycle hit rate: {}", pool.hit_rate_summary());
+    println!("first answers: {:?}", &answers[..answers.len().min(8)]);
     Ok(())
 }

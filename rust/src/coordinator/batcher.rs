@@ -2,41 +2,52 @@
 //! requests up to `max_batch` or `batch_timeout_us`, executing the batch,
 //! and splitting the outputs back per request.
 //!
-//! Two execution backends share the same batching loop:
+//! Execution backends sharing the same batching loop:
 //! * **PJRT** ([`VariantWorker::spawn`]) — pads the batch to the
 //!   artifact's compiled batch size and executes the HLO artifact.
-//! * **CPU reference** ([`VariantWorker::spawn_cpu`]) — runs the pure-Rust
+//! * **CPU vision** ([`VariantWorker::spawn_cpu`]) — runs the pure-Rust
 //!   ViT through an engine [`VitSession`] the worker holds for its whole
-//!   lifetime: weights are resolved once at boot (never per batch), and
-//!   every buffer a request touches — input slots, encoder scratch,
-//!   final-norm outputs, logits — is pooled in the session, so a warmed
-//!   worker's inference region performs **zero** heap allocations per
-//!   request (tracked per batch in
-//!   [`Snapshot::last_infer_allocs`](super::metrics::Snapshot), asserted
-//!   by `tests/alloc_free.rs`).  Needs no artifacts, so serving works
-//!   even before `make artifacts`.
+//!   lifetime.
+//! * **CPU text** ([`VariantWorker::spawn_cpu_text`]) — the BERT-style
+//!   classifier through a long-lived [`BertSession`].
+//! * **CPU joint** ([`VariantWorker::spawn_cpu_joint`]) — paired
+//!   vision+text inference through a [`JointSession`], with a
+//!   ragged-batch splitter: a collected batch's vision half
+//!   (`Payload::{Vision,Joint}`) and text half (`Payload::{Text,Joint}`)
+//!   are sized independently and each tower runs once per batch.
+//!
+//! All CPU workers resolve weights once at boot (shared engine cache)
+//! and pool every buffer a request touches — including the **response
+//! tensors**, which are checked out of the coordinator's [`TensorPool`]
+//! and returned to it when the caller drops the response.  A warmed
+//! worker's whole batch cycle — parse, forward, fusion, response build,
+//! channel send — performs **zero** heap allocations
+//! ([`Snapshot::last_cycle_allocs`](super::metrics::Snapshot), asserted
+//! by `tests/alloc_free.rs`); the inference region alone is still
+//! tracked separately in `Snapshot::last_infer_allocs`.
 //!
 //! Built on std sync primitives (DESIGN.md §11): a bounded
 //! `mpsc::sync_channel` is the admission-control boundary; `recv_timeout`
 //! implements the batching deadline without spinning.
 
-use std::cell::RefCell;
 use std::sync::atomic::{AtomicUsize, Ordering};
-use std::sync::mpsc::{Receiver, RecvTimeoutError, SyncSender, TrySendError};
+use std::sync::mpsc::{Receiver, SyncSender, TrySendError};
 use std::sync::Arc;
 use std::time::{Duration, Instant};
 
 use std::path::PathBuf;
 
-use crate::config::{ServingConfig, ViTConfig};
-use crate::engine::{Engine, VitSession};
+use crate::config::{ServingConfig, TextConfig, ViTConfig};
+use crate::engine::{BertSession, Engine, JointConfig, JointKind,
+                    JointSession, VitSession};
 use crate::error::{Error, Result};
 use crate::runtime::{ArtifactEntry, Engine as PjrtEngine, Executable,
                      HostTensor};
 use crate::util::alloc::allocs_this_thread;
 
 use super::metrics::Metrics;
-use super::request::InferRequest;
+use super::pool::{PooledTensor, TensorPool};
+use super::request::{InferOutputs, InferRequest, InferResponse, Payload};
 
 /// Handle to a running variant worker.
 pub struct VariantWorker {
@@ -55,11 +66,13 @@ impl VariantWorker {
     /// `init` runs on the worker thread (handed the worker's metrics
     /// sink) and produces the batch-execution closure (returning `None`
     /// aborts the worker, e.g. when PJRT is unavailable — submitters then
-    /// observe a closed queue).
+    /// observe a closed queue).  The closure fills `outs` with exactly
+    /// one [`InferOutputs`] per request.
     fn spawn_worker<E, I>(name: String, cfg: &ServingConfig, max_batch: usize,
                           init: I) -> VariantWorker
     where
-        E: Fn(&[InferRequest]) -> Result<Vec<Vec<HostTensor>>> + 'static,
+        E: FnMut(&[InferRequest], &mut Vec<InferOutputs>) -> Result<()>
+            + 'static,
         I: FnOnce(&Arc<Metrics>) -> Option<E> + Send + 'static,
     {
         let (tx, rx) = std::sync::mpsc::sync_channel::<InferRequest>(cfg.queue_capacity);
@@ -107,21 +120,30 @@ impl VariantWorker {
                     return None;
                 }
             };
-            Some(move |batch: &[InferRequest]| {
+            Some(move |batch: &[InferRequest],
+                       outs: &mut Vec<InferOutputs>| {
                 // the client must outlive its executable
                 let _ = &engine;
-                run_batch(&exe, &params, batch)
+                let per_request = run_batch(&exe, &params, batch)?;
+                for tensors in per_request {
+                    outs.push(InferOutputs::Many(
+                        tensors.into_iter().map(PooledTensor::detached)
+                            .collect()));
+                }
+                Ok(())
             })
         })
     }
 
     /// Spawn a worker that serves the pure-Rust CPU reference ViT (no
     /// PJRT artifacts required).  Requests carry a single f32 patches
-    /// tensor `(n_patches, patch_dim)`; responses carry the class logits.
-    /// Each collected batch runs through the worker's [`VitSession`],
-    /// whose encoder fan-out uses `cfg.workers` threads.
+    /// tensor `(n_patches, patch_dim)`; responses carry the class logits
+    /// in a recycled buffer from `pool`.  Each collected batch runs
+    /// through the worker's [`VitSession`], whose encoder fan-out uses
+    /// `cfg.workers` threads.
     pub fn spawn_cpu(engine: Arc<Engine>, model_cfg: ViTConfig,
-                     cfg: &ServingConfig) -> VariantWorker {
+                     pool: Arc<TensorPool>, cfg: &ServingConfig)
+                     -> VariantWorker {
         let max_batch = cfg.max_batch;
         let workers = cfg.workers.max(1);
         let name = format!("pitome-cpu-{}-r{:.0}",
@@ -130,9 +152,8 @@ impl VariantWorker {
             // one session per variant worker, alive for the worker's
             // whole lifetime: weights resolve once here (the engine cache
             // shares the resolution across equal-config workers) and
-            // never again, and after the first batch warms the pools,
-            // steady-state inference allocates nothing (the worker loop
-            // is single-threaded, so the RefCell is never contended)
+            // never again; after the first batch warms the pools,
+            // steady-state inference allocates nothing
             let mut sess = match engine.vit_session(&model_cfg) {
                 Ok(s) => s,
                 Err(e) => {
@@ -141,10 +162,74 @@ impl VariantWorker {
                 }
             };
             sess.set_workers(workers);
-            let sess = RefCell::new(sess);
             let metrics = metrics.clone();
-            Some(move |batch: &[InferRequest]| {
-                cpu_run_batch(&mut sess.borrow_mut(), &metrics, batch)
+            Some(move |batch: &[InferRequest],
+                       outs: &mut Vec<InferOutputs>| {
+                cpu_run_batch(&mut sess, &metrics, &pool, batch, outs)
+            })
+        })
+    }
+
+    /// Spawn a worker that serves the pure-Rust BERT-style text
+    /// classifier.  Requests carry a single i32 token-id tensor
+    /// `(n_tokens,)`; responses carry the class logits in a recycled
+    /// buffer from `pool`.
+    pub fn spawn_cpu_text(engine: Arc<Engine>, model_cfg: TextConfig,
+                          pool: Arc<TensorPool>, cfg: &ServingConfig)
+                          -> VariantWorker {
+        let max_batch = cfg.max_batch;
+        let workers = cfg.workers.max(1);
+        let name = format!("pitome-text-{}-r{:.0}",
+                           model_cfg.merge_mode, model_cfg.merge_r * 1000.0);
+        Self::spawn_worker(name, cfg, max_batch, move |metrics: &Arc<Metrics>| {
+            let mut sess = match engine.bert_session(&model_cfg) {
+                Ok(s) => s,
+                Err(e) => {
+                    eprintln!("[pitome worker] text session init failed: {e}");
+                    return None;
+                }
+            };
+            sess.set_workers(workers);
+            let metrics = metrics.clone();
+            Some(move |batch: &[InferRequest],
+                       outs: &mut Vec<InferOutputs>| {
+                cpu_run_text_batch(&mut sess, &metrics, &pool, batch, outs)
+            })
+        })
+    }
+
+    /// Spawn a worker that serves joint vision+text requests through a
+    /// long-lived [`JointSession`].  The ragged-batch splitter sizes the
+    /// two halves independently per batch: `Payload::Joint` pairs join
+    /// both halves, `Payload::Vision` / `Payload::Text` singles join one
+    /// (their responses are the corresponding tower feature/embedding).
+    /// The vision tower fans out over `cfg.workers` threads; the short
+    /// text sequences run serially.
+    pub fn spawn_cpu_joint(engine: Arc<Engine>, model_cfg: JointConfig,
+                           pool: Arc<TensorPool>, cfg: &ServingConfig)
+                           -> VariantWorker {
+        let max_batch = cfg.max_batch;
+        let workers = cfg.workers.max(1);
+        let name = format!("pitome-joint-{}-r{:.0}",
+                           model_cfg.vision.merge_mode,
+                           model_cfg.vision.merge_r * 1000.0);
+        Self::spawn_worker(name, cfg, max_batch, move |metrics: &Arc<Metrics>| {
+            let mut sess = match engine.joint_session(&model_cfg) {
+                Ok(s) => s,
+                Err(e) => {
+                    eprintln!("[pitome worker] joint session init failed: {e}");
+                    return None;
+                }
+            };
+            sess.set_vision_workers(workers);
+            let metrics = metrics.clone();
+            // splitter scratch, reused across batches
+            let mut pairs: Vec<(usize, usize)> = Vec::new();
+            let mut slots: Vec<JointSlot> = Vec::new();
+            Some(move |batch: &[InferRequest],
+                       outs: &mut Vec<InferOutputs>| {
+                cpu_run_joint_batch(&mut sess, &metrics, &pool, batch, outs,
+                                    &mut pairs, &mut slots)
             })
         })
     }
@@ -194,17 +279,24 @@ impl Drop for VariantWorker {
 
 /// Shared batching loop: collect up to `max_batch` requests (or until the
 /// deadline), run them through `exec`, and fan the responses back out.
-fn worker_loop<E>(exec: E, rx: Receiver<InferRequest>, metrics: Arc<Metrics>,
-                  depth: Arc<AtomicUsize>, max_batch: usize, timeout: Duration)
+/// The batch and output vectors are loop-owned and reused, so a warmed
+/// cycle performs no allocations of its own; the per-cycle allocation
+/// count (inference + transport) lands in
+/// [`Snapshot::last_cycle_allocs`](super::metrics::Snapshot).
+fn worker_loop<E>(mut exec: E, rx: Receiver<InferRequest>,
+                  metrics: Arc<Metrics>, depth: Arc<AtomicUsize>,
+                  max_batch: usize, timeout: Duration)
 where
-    E: Fn(&[InferRequest]) -> Result<Vec<Vec<HostTensor>>>,
+    E: FnMut(&[InferRequest], &mut Vec<InferOutputs>) -> Result<()>,
 {
+    let mut batch: Vec<InferRequest> = Vec::new();
+    let mut outs: Vec<InferOutputs> = Vec::new();
     loop {
-        let first = match rx.recv() {
-            Ok(r) => r,
+        batch.clear();
+        match rx.recv() {
+            Ok(r) => batch.push(r),
             Err(_) => return,
-        };
-        let mut batch = vec![first];
+        }
         let deadline = Instant::now() + timeout;
         while batch.len() < max_batch {
             let remaining = deadline.saturating_duration_since(Instant::now());
@@ -213,23 +305,25 @@ where
             }
             match rx.recv_timeout(remaining) {
                 Ok(r) => batch.push(r),
-                Err(RecvTimeoutError::Timeout) => break,
-                Err(RecvTimeoutError::Disconnected) => break,
+                Err(_) => break,
             }
         }
         depth.fetch_sub(batch.len(), Ordering::Relaxed);
         let exec_start = Instant::now();
-        let result = exec(&batch);
+        let cycle_before = allocs_this_thread();
+        outs.clear();
+        let result = exec(&batch, &mut outs);
         let exec_us = exec_start.elapsed().as_micros() as u64;
         let batch_size = batch.len();
         metrics.record_batch(batch_size);
         match result {
-            Ok(per_request) => {
-                for (req, outputs) in batch.into_iter().zip(per_request) {
+            Ok(()) if outs.len() == batch_size => {
+                for (req, outputs) in batch.drain(..).zip(outs.drain(..)) {
                     let queue_us =
                         exec_start.duration_since(req.enqueued_at).as_micros() as u64;
                     metrics.record(queue_us + exec_us);
-                    let _ = req.respond.send(super::request::InferResponse {
+                    // a gone receiver just recycles the response buffers
+                    let _ = req.respond.send(InferResponse {
                         outputs,
                         queue_us,
                         exec_us,
@@ -237,26 +331,69 @@ where
                     });
                 }
             }
+            Ok(()) => {
+                eprintln!("[pitome worker] batch produced {} outputs for {} \
+                           requests", outs.len(), batch_size);
+                fail_batch(&mut batch, exec_us, batch_size);
+                outs.clear();
+            }
             Err(e) => {
                 eprintln!("[pitome worker] batch failed: {e}");
-                // responders dropped; submitters observe a closed channel
+                fail_batch(&mut batch, exec_us, batch_size);
+                outs.clear();
             }
         }
+        metrics.record_cycle_allocs(allocs_this_thread() - cycle_before);
     }
+}
+
+/// Drop a failed batch's requests.  Legacy per-request channels are
+/// simply dropped — their submitters observe a closed channel — but a
+/// reusable [`ResponseSlot`](super::request::ResponseSlot) keeps its own
+/// sender alive and can never disconnect, so slot-targeted requests get
+/// an explicit failure marker (a response with no outputs) that
+/// `ResponseSlot::recv` translates back into an error; a blocked client
+/// always wakes up.  Pooled inputs recycle as the requests drop.
+fn fail_batch(batch: &mut Vec<InferRequest>, exec_us: u64,
+              batch_size: usize) {
+    for req in batch.drain(..) {
+        if req.respond.is_slot() {
+            let _ = req.respond.send(InferResponse {
+                outputs: InferOutputs::Many(Vec::new()),
+                queue_us: 0,
+                exec_us,
+                batch_size,
+            });
+        }
+    }
+}
+
+/// Build one single-tensor response from a recycled pool buffer.
+fn respond_f32(pool: &Arc<TensorPool>, outs: &mut Vec<InferOutputs>,
+               data: &[f32], recycled: &mut u64, fresh: &mut u64) {
+    let mut t = pool.take_f32(data.len());
+    if t.recycled() {
+        *recycled += 1;
+    } else {
+        *fresh += 1;
+    }
+    t.fill_f32(data, &[data.len()]);
+    outs.push(InferOutputs::One(t));
 }
 
 /// Execute a batch on the CPU reference ViT through the worker's
 /// long-lived [`VitSession`]: parse each request's patches tensor into a
 /// pooled slot, run embed + encoder + head, and return one logits tensor
-/// per request.
+/// per request from the recycled response pool.
 ///
-/// The span from the first parse through `forward` — everything except
-/// materializing the owned response tensors handed to the submitter's
-/// channel — is the *inference region*; its allocation count is recorded
-/// per batch ([`Metrics::record_infer_allocs`]) and must be zero for a
-/// warmed worker (`tests/alloc_free.rs`).
+/// The span from the first parse through `forward` is the *inference
+/// region*; its allocation count is recorded per batch
+/// ([`Metrics::record_infer_allocs`]) and must be zero for a warmed
+/// worker (`tests/alloc_free.rs`).  Response construction happens after
+/// the region and is covered by the whole-cycle count instead.
 fn cpu_run_batch(sess: &mut VitSession, metrics: &Metrics,
-                 batch: &[InferRequest]) -> Result<Vec<Vec<HostTensor>>> {
+                 pool: &Arc<TensorPool>, batch: &[InferRequest],
+                 outs: &mut Vec<InferOutputs>) -> Result<()> {
     let before = allocs_this_thread();
     // exact-shape admission: a malformed request must become an error (the
     // responders are dropped, submitters see a closed channel), never a
@@ -265,8 +402,9 @@ fn cpu_run_batch(sess: &mut VitSession, metrics: &Metrics,
         (sess.cfg().num_patches(), sess.cfg().patch_dim());
     sess.begin(batch.len());
     for (i, req) in batch.iter().enumerate() {
-        let t = req.inputs.first().ok_or_else(|| {
-            Error::Coordinator(format!("cpu worker: request {i} has no inputs"))
+        let t = req.payload.vision_tensor().ok_or_else(|| {
+            Error::Coordinator(format!(
+                "cpu worker: request {i} carries no patches tensor"))
         })?;
         let d = t.as_f32()?;
         let shape = t.shape();
@@ -279,15 +417,173 @@ fn cpu_run_batch(sess: &mut VitSession, metrics: &Metrics,
     }
     sess.forward(0)?;
     metrics.record_infer_allocs(allocs_this_thread() - before);
-    // transport boundary: the response tensors are owned by the submitter
-    // and cross a channel, so they are allocated (outside the zero-alloc
-    // guarantee, which covers everything the model computes)
-    Ok((0..batch.len())
-        .map(|i| {
-            let lg = sess.logits(i);
-            vec![HostTensor::F32(lg.to_vec(), vec![lg.len()])]
-        })
-        .collect())
+    let (mut recycled, mut fresh) = (0u64, 0u64);
+    for i in 0..batch.len() {
+        respond_f32(pool, outs, sess.logits(i), &mut recycled, &mut fresh);
+    }
+    metrics.record_responses(recycled, fresh);
+    Ok(())
+}
+
+/// Execute a batch on the CPU text classifier through the worker's
+/// long-lived [`BertSession`] — the text-workload counterpart of
+/// [`cpu_run_batch`].
+fn cpu_run_text_batch(sess: &mut BertSession, metrics: &Metrics,
+                      pool: &Arc<TensorPool>, batch: &[InferRequest],
+                      outs: &mut Vec<InferOutputs>) -> Result<()> {
+    let before = allocs_this_thread();
+    sess.begin(batch.len());
+    for (i, req) in batch.iter().enumerate() {
+        let t = req.payload.text_tensor().ok_or_else(|| {
+            Error::Coordinator(format!(
+                "text worker: request {i} carries no token tensor"))
+        })?;
+        sess.set_tokens(i, t.as_i32()?)?;
+    }
+    sess.forward(0)?;
+    metrics.record_infer_allocs(allocs_this_thread() - before);
+    let (mut recycled, mut fresh) = (0u64, 0u64);
+    for i in 0..batch.len() {
+        respond_f32(pool, outs, sess.logits(i), &mut recycled, &mut fresh);
+    }
+    metrics.record_responses(recycled, fresh);
+    Ok(())
+}
+
+/// What each joint-batch request gets answered with (index into the
+/// session's pairs / vision half / text half).
+enum JointSlot {
+    /// fused pair `p`: VQA answer logits, or the retrieval score
+    Pair(usize),
+    /// vision-only sample `i`: tower feature (VQA kind) or normalized
+    /// image embedding (retrieval kind)
+    Vis(usize),
+    /// text-only sample `j`: tower feature or normalized text embedding
+    Txt(usize),
+}
+
+/// How a joint-worker request participates in the ragged split.
+enum JointWant {
+    Pair,
+    VisionOnly,
+    TextOnly,
+}
+
+fn classify_joint(p: &Payload) -> Result<JointWant> {
+    match p {
+        Payload::Joint { .. } => Ok(JointWant::Pair),
+        Payload::Vision(_) => Ok(JointWant::VisionOnly),
+        Payload::Text(_) => Ok(JointWant::TextOnly),
+        Payload::Tensors(v) if v.len() == 2 => Ok(JointWant::Pair),
+        Payload::Tensors(v) => Err(Error::Coordinator(format!(
+            "joint worker: legacy tensor payload must be the \
+             [patches, question] pair, got {} tensors", v.len()))),
+    }
+}
+
+/// Execute a mixed batch through the worker's long-lived
+/// [`JointSession`]: the ragged splitter files every request into the
+/// vision and/or text half, both towers run once over their halves
+/// (independently sized), the kind's fusion stage runs over the explicit
+/// pair list, and each request is answered from the recycled pool —
+/// pairs with answer logits (VQA) or the similarity score (retrieval),
+/// singles with their tower feature/embedding.
+fn cpu_run_joint_batch(sess: &mut JointSession, metrics: &Metrics,
+                       pool: &Arc<TensorPool>, batch: &[InferRequest],
+                       outs: &mut Vec<InferOutputs>,
+                       pairs: &mut Vec<(usize, usize)>,
+                       slots: &mut Vec<JointSlot>) -> Result<()> {
+    let before = allocs_this_thread();
+    pairs.clear();
+    slots.clear();
+    // pass 1: size the two halves independently
+    let (mut bv, mut bt) = (0usize, 0usize);
+    for req in batch {
+        match classify_joint(&req.payload)? {
+            JointWant::Pair => {
+                bv += 1;
+                bt += 1;
+            }
+            JointWant::VisionOnly => bv += 1,
+            JointWant::TextOnly => bt += 1,
+        }
+    }
+    sess.begin(bv, bt);
+    // pass 2: embed every half member into its pooled slot
+    let (mut vi, mut ti) = (0usize, 0usize);
+    for (ri, req) in batch.iter().enumerate() {
+        match classify_joint(&req.payload)? {
+            JointWant::Pair => {
+                let v = req.payload.vision_tensor().ok_or_else(|| {
+                    Error::Coordinator(format!(
+                        "joint worker: pair request {ri} lost its patches"))
+                })?;
+                let t = req.payload.text_tensor().ok_or_else(|| {
+                    Error::Coordinator(format!(
+                        "joint worker: pair request {ri} lost its tokens"))
+                })?;
+                sess.set_patches_slice(vi, v.as_f32()?)?;
+                sess.set_text(ti, t.as_i32()?)?;
+                slots.push(JointSlot::Pair(pairs.len()));
+                pairs.push((vi, ti));
+                vi += 1;
+                ti += 1;
+            }
+            JointWant::VisionOnly => {
+                let v = req.payload.vision_tensor().unwrap();
+                sess.set_patches_slice(vi, v.as_f32()?)?;
+                slots.push(JointSlot::Vis(vi));
+                vi += 1;
+            }
+            JointWant::TextOnly => {
+                let t = req.payload.text_tensor().unwrap();
+                sess.set_text(ti, t.as_i32()?)?;
+                slots.push(JointSlot::Txt(ti));
+                ti += 1;
+            }
+        }
+    }
+    // both towers, then the kind's fusion stage
+    sess.forward(0)?;
+    let kind = sess.cfg().kind;
+    match kind {
+        JointKind::Vqa => sess.fuse_vqa(pairs)?,
+        JointKind::Retrieval => sess.project()?,
+    }
+    metrics.record_infer_allocs(allocs_this_thread() - before);
+    // responses from the recycled pool
+    let (mut recycled, mut fresh) = (0u64, 0u64);
+    for slot in slots.iter() {
+        match (kind, slot) {
+            (JointKind::Vqa, JointSlot::Pair(p)) => {
+                respond_f32(pool, outs, sess.answer_logits(*p),
+                            &mut recycled, &mut fresh);
+            }
+            (JointKind::Retrieval, JointSlot::Pair(p)) => {
+                let (i, j) = pairs[*p];
+                respond_f32(pool, outs, &[sess.score(i, j)],
+                            &mut recycled, &mut fresh);
+            }
+            (JointKind::Vqa, JointSlot::Vis(i)) => {
+                respond_f32(pool, outs, sess.image_feature(*i),
+                            &mut recycled, &mut fresh);
+            }
+            (JointKind::Retrieval, JointSlot::Vis(i)) => {
+                respond_f32(pool, outs, sess.image_embed(*i),
+                            &mut recycled, &mut fresh);
+            }
+            (JointKind::Vqa, JointSlot::Txt(j)) => {
+                respond_f32(pool, outs, sess.text_feature(*j),
+                            &mut recycled, &mut fresh);
+            }
+            (JointKind::Retrieval, JointSlot::Txt(j)) => {
+                respond_f32(pool, outs, sess.text_embed(*j),
+                            &mut recycled, &mut fresh);
+            }
+        }
+    }
+    metrics.record_responses(recycled, fresh);
+    Ok(())
 }
 
 /// Stack per-request inputs into the artifact batch, execute, split.
@@ -303,15 +599,16 @@ fn run_batch(exe: &Executable, params: &[f32], batch: &[InferRequest])
     let mut full_inputs: Vec<HostTensor> = Vec::with_capacity(entry.inputs.len());
     full_inputs.push(HostTensor::F32(params.to_vec(),
                                      entry.inputs[0].shape.clone()));
+    let first_inputs = batch[0].payload.artifact_tensors()?;
     for si in 0..n_sample_inputs {
         let spec = &entry.inputs[si + 1];
         let per = spec.numel() / b_art;
-        match &batch[0].inputs[si] {
+        match &first_inputs[si] {
             HostTensor::F32(..) => {
                 let mut data = Vec::with_capacity(spec.numel());
                 for bi in 0..b_art {
                     let req = &batch[bi.min(batch.len() - 1)];
-                    let d = match &req.inputs[si] {
+                    let d = match &req.payload.artifact_tensors()?[si] {
                         HostTensor::F32(d, _) => d,
                         _ => return Err(Error::Shape("dtype mix in batch".into())),
                     };
@@ -328,7 +625,7 @@ fn run_batch(exe: &Executable, params: &[f32], batch: &[InferRequest])
                 let mut data = Vec::with_capacity(spec.numel());
                 for bi in 0..b_art {
                     let req = &batch[bi.min(batch.len() - 1)];
-                    let d = match &req.inputs[si] {
+                    let d = match &req.payload.artifact_tensors()?[si] {
                         HostTensor::I32(d, _) => d,
                         _ => return Err(Error::Shape("dtype mix in batch".into())),
                     };

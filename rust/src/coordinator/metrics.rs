@@ -17,6 +17,9 @@ struct Inner {
     batches: u64,
     batched_requests: u64,
     infer_allocs: u64,
+    cycle_allocs: u64,
+    resp_recycled: u64,
+    resp_fresh: u64,
 }
 
 /// Thread-safe metrics sink.
@@ -46,6 +49,17 @@ pub struct Snapshot {
     /// `CountingAllocator` test hook — the steady-state acceptance is 0
     /// (`tests/alloc_free.rs`).
     pub last_infer_allocs: u64,
+    /// heap allocations across the most recent **whole batch cycle** on
+    /// the worker thread — inference region *plus* response construction
+    /// and channel sends (the formerly-exempt transport boundary).  With
+    /// recycled response buffers and a bounded client slot this is 0 at
+    /// steady state (`tests/alloc_free.rs`); the legacy per-request
+    /// channel path still allocates here.
+    pub last_cycle_allocs: u64,
+    /// responses built from a recycled pool buffer (cumulative)
+    pub resp_recycled: u64,
+    /// responses that had to allocate a fresh buffer (cumulative)
+    pub resp_fresh: u64,
 }
 
 impl Metrics {
@@ -72,6 +86,21 @@ impl Metrics {
     pub fn record_infer_allocs(&self, allocs: u64) {
         let mut g = self.inner.lock().unwrap();
         g.infer_allocs = allocs;
+    }
+
+    /// Record the allocation count of one whole batch cycle (inference +
+    /// response transport) on the worker thread.
+    pub fn record_cycle_allocs(&self, allocs: u64) {
+        let mut g = self.inner.lock().unwrap();
+        g.cycle_allocs = allocs;
+    }
+
+    /// Record how many of a batch's responses reused a recycled pool
+    /// buffer vs allocated a fresh one.
+    pub fn record_responses(&self, recycled: u64, fresh: u64) {
+        let mut g = self.inner.lock().unwrap();
+        g.resp_recycled += recycled;
+        g.resp_fresh += fresh;
     }
 
     fn percentile(hist: &[u64; 16], count: u64, q: f64) -> u64 {
@@ -104,6 +133,9 @@ impl Metrics {
                 0.0
             },
             last_infer_allocs: g.infer_allocs,
+            last_cycle_allocs: g.cycle_allocs,
+            resp_recycled: g.resp_recycled,
+            resp_fresh: g.resp_fresh,
         }
     }
 }

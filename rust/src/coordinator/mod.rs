@@ -1,20 +1,29 @@
 //! L3 serving coordinator (the system contribution around the paper's
-//! algorithm): request routing over a compression ladder, dynamic batching,
-//! admission control, and metrics.
+//! algorithm): typed workload routing over compression ladders, dynamic
+//! batching with a ragged joint-batch splitter, admission control,
+//! response-buffer recycling, and metrics.
 //!
-//! Shape: vLLM-router-like.  Each logical model owns variants compiled at
-//! different merge ratios; the router picks a rung per request QoS and
-//! sheds to deeper compression under load; each variant has a dedicated
-//! batcher thread feeding the PJRT executable.
+//! Shape: vLLM-router-like.  Requests are typed by [`Workload`]
+//! (vision / text / joint); each workload owns worker pools whose
+//! logical models ladder variants compiled (or configured) at different
+//! merge ratios.  The router picks a rung per request QoS and sheds to
+//! deeper compression under load; each variant has a dedicated batcher
+//! thread feeding its session (CPU) or PJRT executable.  Response
+//! tensors are checked out of a shared [`TensorPool`] and return to it
+//! when the caller drops the [`InferResponse`] — the full
+//! request→response→release cycle is allocation-free once warm.
 
 pub mod batcher;
 pub mod metrics;
+pub mod pool;
 pub mod request;
 pub mod router;
 pub mod server;
 
 pub use batcher::VariantWorker;
 pub use metrics::{Metrics, Snapshot};
-pub use request::{InferRequest, InferResponse, Qos};
+pub use pool::{PooledTensor, TensorPool};
+pub use request::{InferOutputs, InferRequest, InferResponse, Payload, Qos,
+                  Responder, ResponseSlot, Workload};
 pub use router::{Router, Variant};
-pub use server::Coordinator;
+pub use server::{Coordinator, CpuWorkloads};

@@ -1,0 +1,309 @@
+//! Response/request tensor recycling: the pool that closes the
+//! "one remaining allocation per request" transport boundary.
+//!
+//! PR 4 made the worker-side inference region allocation-free but left
+//! the owned `HostTensor` responses crossing the submitter's channel as
+//! a documented per-request allocation.  A [`TensorPool`] is a bounded
+//! freelist of `HostTensor` buffers shared by the coordinator's workers
+//! and clients: workers build responses from recycled buffers
+//! ([`TensorPool::take_f32`] reuses both the data and the shape vectors
+//! in place), and a [`PooledTensor`] **returns its buffer to the pool on
+//! drop** — callers cannot leak pool capacity by forgetting a release.
+//! Request inputs ride the same pool, so a warmed
+//! request→response→release cycle allocates nothing on either side of
+//! the channel (`tests/alloc_free.rs`).
+//!
+//! Recycled-vs-fresh counters ([`TensorPool::stats`]) feed the serving
+//! metrics (`Snapshot::{resp_recycled,resp_fresh}`) and the
+//! `coordinator_bench` recycle-hit-rate section.
+
+use std::ops::Deref;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+
+use crate::runtime::HostTensor;
+
+/// Max buffers retained per dtype freelist; beyond this, returned
+/// buffers are simply dropped (bounds worst-case pool memory).
+const MAX_RETAINED: usize = 256;
+
+/// A bounded freelist of reusable [`HostTensor`] buffers (one list per
+/// dtype) with recycled/fresh accounting.  Shared as `Arc<TensorPool>`
+/// by the coordinator's workers and clients.
+#[derive(Default)]
+pub struct TensorPool {
+    f32s: Mutex<Vec<HostTensor>>,
+    i32s: Mutex<Vec<HostTensor>>,
+    recycled: AtomicU64,
+    fresh: AtomicU64,
+}
+
+impl TensorPool {
+    /// New empty pool.
+    pub fn new() -> TensorPool {
+        TensorPool::default()
+    }
+
+    /// Pop the buffer whose data capacity fits `min_len` most tightly
+    /// (true best-fit, so small checkouts never hog large buffers and a
+    /// warmed mixed-size pool stays reallocation-free); falls back to
+    /// the largest free buffer, which regrows in place at most once.
+    /// The second value reports whether the buffer genuinely fits —
+    /// only a true fit counts as a recycle hit (a fallback checkout
+    /// still reallocates on fill, so it is accounted as fresh).
+    fn pop(list: &Mutex<Vec<HostTensor>>, min_len: usize,
+           cap_of: impl Fn(&HostTensor) -> usize)
+           -> Option<(HostTensor, bool)> {
+        let mut g = list.lock().unwrap();
+        if g.is_empty() {
+            return None;
+        }
+        let mut fit: Option<(usize, usize)> = None;
+        let mut largest: (usize, usize) = (0, 0);
+        for (i, t) in g.iter().enumerate() {
+            let c = cap_of(t);
+            let tighter = match fit {
+                Some((_, fc)) => c < fc,
+                None => true,
+            };
+            if c >= min_len && tighter {
+                fit = Some((i, c));
+            }
+            if c > largest.1 {
+                largest = (i, c);
+            }
+        }
+        let (idx, fits) = match fit {
+            Some((i, _)) => (i, true),
+            None => (largest.0, false),
+        };
+        Some((g.swap_remove(idx), fits))
+    }
+
+    /// Account a checkout and wrap it (a fallback buffer that will have
+    /// to regrow counts as fresh, so the recycle hit rate stays honest).
+    fn checkout(self: &Arc<Self>, popped: Option<(HostTensor, bool)>,
+                empty: HostTensor) -> PooledTensor {
+        match popped {
+            Some((t, fits)) => {
+                if fits {
+                    self.recycled.fetch_add(1, Ordering::Relaxed);
+                } else {
+                    self.fresh.fetch_add(1, Ordering::Relaxed);
+                }
+                PooledTensor { t, home: Some(self.clone()), recycled: fits }
+            }
+            None => {
+                self.fresh.fetch_add(1, Ordering::Relaxed);
+                PooledTensor {
+                    t: empty,
+                    home: Some(self.clone()),
+                    recycled: false,
+                }
+            }
+        }
+    }
+
+    /// Check out an f32 buffer with room for `min_len` elements
+    /// (recycled when the freelist has a fitting one, fresh otherwise);
+    /// fill it with [`PooledTensor::fill_f32`].  Dropping the returned
+    /// handle puts the buffer back.
+    pub fn take_f32(self: &Arc<Self>, min_len: usize) -> PooledTensor {
+        let popped = Self::pop(&self.f32s, min_len, |t| match t {
+            HostTensor::F32(d, _) => d.capacity(),
+            HostTensor::I32(..) => 0,
+        });
+        self.checkout(popped, HostTensor::F32(Vec::new(), Vec::new()))
+    }
+
+    /// i32 counterpart of [`TensorPool::take_f32`] (token-id inputs).
+    pub fn take_i32(self: &Arc<Self>, min_len: usize) -> PooledTensor {
+        let popped = Self::pop(&self.i32s, min_len, |t| match t {
+            HostTensor::I32(d, _) => d.capacity(),
+            HostTensor::F32(..) => 0,
+        });
+        self.checkout(popped, HostTensor::I32(Vec::new(), Vec::new()))
+    }
+
+    /// Return a buffer to its freelist (no-op beyond the retention cap).
+    fn put(&self, t: HostTensor) {
+        let list = match &t {
+            HostTensor::F32(..) => &self.f32s,
+            HostTensor::I32(..) => &self.i32s,
+        };
+        let mut g = list.lock().unwrap();
+        if g.len() < MAX_RETAINED {
+            g.push(t);
+        }
+    }
+
+    /// `(recycled, fresh)` checkout counts since the pool was created —
+    /// the recycle hit rate is `recycled / (recycled + fresh)`.
+    pub fn stats(&self) -> (u64, u64) {
+        (self.recycled.load(Ordering::Relaxed),
+         self.fresh.load(Ordering::Relaxed))
+    }
+
+    /// Human-readable recycle summary, e.g. `"412/420 (98.1%)"` — the
+    /// one formatting of [`TensorPool::stats`] every bench/CLI report
+    /// shares.
+    pub fn hit_rate_summary(&self) -> String {
+        let (recycled, fresh) = self.stats();
+        format!("{recycled}/{} ({:.1}%)", recycled + fresh,
+                100.0 * recycled as f64 / (recycled + fresh).max(1) as f64)
+    }
+
+    /// Buffers currently idle in the freelists.
+    pub fn idle(&self) -> usize {
+        self.f32s.lock().unwrap().len() + self.i32s.lock().unwrap().len()
+    }
+}
+
+/// A [`HostTensor`] checked out of a [`TensorPool`] (or detached, for
+/// PJRT outputs that have no pool).  Dereferences to the tensor for
+/// reading; **returns the buffer to its pool on drop**, so response
+/// consumers release capacity by simply letting the response go out of
+/// scope.
+pub struct PooledTensor {
+    t: HostTensor,
+    home: Option<Arc<TensorPool>>,
+    recycled: bool,
+}
+
+impl PooledTensor {
+    /// Wrap an owned tensor with no pool behind it (PJRT outputs, tests);
+    /// drop simply frees it.
+    pub fn detached(t: HostTensor) -> PooledTensor {
+        PooledTensor { t, home: None, recycled: false }
+    }
+
+    /// Whether this checkout reused a freelist buffer (feeds the
+    /// recycled-vs-fresh serving metric).
+    pub fn recycled(&self) -> bool {
+        self.recycled
+    }
+
+    /// Overwrite with f32 `data` + `shape`, reusing the existing data and
+    /// shape vectors in place — allocation-free once the buffer has seen
+    /// the capacity.
+    pub fn fill_f32(&mut self, data: &[f32], shape: &[usize]) {
+        match &mut self.t {
+            HostTensor::F32(d, s) => {
+                d.clear();
+                d.extend_from_slice(data);
+                s.clear();
+                s.extend_from_slice(shape);
+            }
+            t @ HostTensor::I32(..) => {
+                *t = HostTensor::F32(data.to_vec(), shape.to_vec());
+            }
+        }
+    }
+
+    /// i32 counterpart of [`PooledTensor::fill_f32`].
+    pub fn fill_i32(&mut self, data: &[i32], shape: &[usize]) {
+        match &mut self.t {
+            HostTensor::I32(d, s) => {
+                d.clear();
+                d.extend_from_slice(data);
+                s.clear();
+                s.extend_from_slice(shape);
+            }
+            t @ HostTensor::F32(..) => {
+                *t = HostTensor::I32(data.to_vec(), shape.to_vec());
+            }
+        }
+    }
+
+    /// The wrapped tensor.
+    pub fn tensor(&self) -> &HostTensor {
+        &self.t
+    }
+}
+
+impl Deref for PooledTensor {
+    type Target = HostTensor;
+
+    fn deref(&self) -> &HostTensor {
+        &self.t
+    }
+}
+
+impl std::fmt::Debug for PooledTensor {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("PooledTensor")
+            .field("tensor", &self.t)
+            .field("pooled", &self.home.is_some())
+            .finish()
+    }
+}
+
+impl Drop for PooledTensor {
+    fn drop(&mut self) {
+        if let Some(home) = self.home.take() {
+            // swapping in an empty vec allocates nothing
+            let t = std::mem::replace(&mut self.t,
+                                      HostTensor::F32(Vec::new(), Vec::new()));
+            home.put(t);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn drop_returns_buffer_and_counts_recycles() {
+        let pool = Arc::new(TensorPool::new());
+        let mut a = pool.take_f32(4);
+        assert!(!a.recycled());
+        a.fill_f32(&[1.0, 2.0, 3.0, 4.0], &[4]);
+        let ptr = a.as_f32().unwrap().as_ptr();
+        drop(a);
+        assert_eq!(pool.idle(), 1);
+        let b = pool.take_f32(2);
+        assert!(b.recycled(), "freelist buffer must be reused");
+        assert_eq!(b.as_f32().unwrap().as_ptr(), ptr,
+                   "reused buffer must keep its allocation");
+        assert_eq!(pool.stats(), (1, 1));
+    }
+
+    #[test]
+    fn dtypes_use_separate_freelists() {
+        let pool = Arc::new(TensorPool::new());
+        drop(pool.take_i32(3));
+        assert_eq!(pool.idle(), 1);
+        let f = pool.take_f32(3);
+        assert!(!f.recycled(), "an i32 buffer must not satisfy an f32 take");
+        let i = pool.take_i32(0);
+        assert!(i.recycled());
+    }
+
+    #[test]
+    fn best_fit_prefers_large_enough_capacity() {
+        let pool = Arc::new(TensorPool::new());
+        let mut small = pool.take_f32(2);
+        small.fill_f32(&[0.0; 2], &[2]);
+        let mut big = pool.take_f32(100);
+        big.fill_f32(&[0.0; 100], &[100]);
+        drop(small);
+        drop(big);
+        let t = pool.take_f32(50);
+        // a popped buffer keeps its previous contents until refilled, so
+        // the retained shape identifies which one was chosen
+        assert_eq!(t.tensor().shape(), &[100],
+                   "take should prefer the buffer that already fits");
+        // nothing left that fits 1000: the fallback buffer will have to
+        // regrow, so it must NOT count as a recycle hit
+        let fallback = pool.take_f32(1000);
+        assert!(!fallback.recycled(),
+                "a too-small fallback checkout must be accounted fresh");
+        drop(fallback);
+        drop(t);
+        // detached tensors never re-enter the pool
+        let idle = pool.idle();
+        drop(PooledTensor::detached(HostTensor::F32(vec![1.0], vec![1])));
+        assert_eq!(pool.idle(), idle);
+    }
+}

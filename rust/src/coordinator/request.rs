@@ -1,33 +1,269 @@
 //! Request/response types crossing the coordinator boundary.
+//!
+//! Requests are **typed by workload** ([`Workload`]): the router keeps a
+//! separate worker pool per workload, and a request's [`Payload`] names
+//! which tower(s) it exercises.  Hot-path payloads carry
+//! [`PooledTensor`]s from the coordinator's [`TensorPool`](super::pool::TensorPool),
+//! so the whole request→response→release cycle recycles buffers instead
+//! of allocating; the legacy `Vec<HostTensor>` form remains for the PJRT
+//! artifact path and the untyped `submit` convenience.
 
 use std::sync::mpsc;
 use std::time::Instant;
 
+use crate::error::{Error, Result};
 use crate::runtime::HostTensor;
 
-/// A single-sample inference request (no batch dimension; the batcher adds
-/// it).  `inputs` holds the per-sample tensors in artifact order, *without*
-/// the leading params tensor (the worker prepends it).
-pub struct InferRequest {
-    /// per-sample input tensors
-    pub inputs: Vec<HostTensor>,
-    /// enqueue timestamp (set by the coordinator)
-    pub enqueued_at: Instant,
-    /// response channel (single-shot)
-    pub respond: mpsc::Sender<InferResponse>,
+use super::pool::PooledTensor;
+
+/// The workload class a request belongs to; the router dispatches each
+/// class to its own worker pool.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub enum Workload {
+    /// single-tower vision inference (patches → class logits)
+    Vision,
+    /// single-tower text inference (token ids → class logits)
+    Text,
+    /// joint vision+text inference (retrieval scoring / VQA)
+    Joint,
 }
 
-/// The coordinator's reply.
-#[derive(Clone, Debug)]
+impl Workload {
+    /// Stable display name.
+    pub fn name(&self) -> &'static str {
+        match self {
+            Workload::Vision => "vision",
+            Workload::Text => "text",
+            Workload::Joint => "joint",
+        }
+    }
+}
+
+/// What a request carries.  The joint worker's ragged-batch splitter
+/// sizes a batch's vision half ([`Payload::Vision`] + [`Payload::Joint`])
+/// and text half ([`Payload::Text`] + [`Payload::Joint`]) independently.
+pub enum Payload {
+    /// legacy/PJRT form: per-sample tensors in artifact order (without
+    /// the leading params tensor; the worker prepends it)
+    Tensors(Vec<HostTensor>),
+    /// one patches tensor (f32, `(n_patches, patch_dim)`)
+    Vision(PooledTensor),
+    /// one token-id tensor (i32, `(tokens,)`)
+    Text(PooledTensor),
+    /// a paired (patches, token-ids) sample — e.g. a VQA
+    /// (image, question) request
+    Joint {
+        /// patches tensor (f32)
+        vision: PooledTensor,
+        /// token-id tensor (i32)
+        text: PooledTensor,
+    },
+}
+
+impl Payload {
+    /// The patches tensor this payload contributes to a batch's vision
+    /// half, if any (legacy `Tensors` payloads contribute their first).
+    pub fn vision_tensor(&self) -> Option<&HostTensor> {
+        match self {
+            Payload::Tensors(v) => v.first(),
+            Payload::Vision(t) => Some(t.tensor()),
+            Payload::Joint { vision, .. } => Some(vision.tensor()),
+            Payload::Text(_) => None,
+        }
+    }
+
+    /// The token-id tensor this payload contributes to a batch's text
+    /// half, if any (legacy `Tensors` payloads contribute their second
+    /// tensor when present, else their first — the two-tensor form is
+    /// the legacy joint pair `[patches, question]`).
+    pub fn text_tensor(&self) -> Option<&HostTensor> {
+        match self {
+            Payload::Tensors(v) if v.len() >= 2 => v.get(1),
+            Payload::Tensors(v) => v.first(),
+            Payload::Text(t) => Some(t.tensor()),
+            Payload::Joint { text, .. } => Some(text.tensor()),
+            Payload::Vision(_) => None,
+        }
+    }
+
+    /// The artifact-order tensor list (PJRT workers only).
+    pub fn artifact_tensors(&self) -> Result<&[HostTensor]> {
+        match self {
+            Payload::Tensors(v) => Ok(v),
+            _ => Err(Error::Coordinator(
+                "PJRT workers take Payload::Tensors in artifact order".into())),
+        }
+    }
+}
+
+/// Where a response goes.  [`Responder::Slot`] targets a reusable
+/// bounded [`ResponseSlot`] channel — the zero-allocation transport —
+/// while [`Responder::Channel`] is the per-request unbounded channel the
+/// legacy submit convenience creates.
+pub enum Responder {
+    /// per-request unbounded channel (allocates per send; legacy path)
+    Channel(mpsc::Sender<InferResponse>),
+    /// reusable bounded client slot (allocation-free sends once warm)
+    Slot(mpsc::SyncSender<InferResponse>),
+}
+
+impl Responder {
+    /// Deliver the response; `false` when it could not be delivered (the
+    /// response is dropped and its pooled buffers recycle).  Slot sends
+    /// never block the worker: a client that stopped draining its
+    /// [`ResponseSlot`] (buffer full) loses the response instead of
+    /// wedging the batcher thread for every other client — size the slot
+    /// to the client's maximum in-flight requests
+    /// (`Coordinator::response_slot` uses the worker queue capacity).
+    pub fn send(&self, resp: InferResponse) -> bool {
+        match self {
+            Responder::Channel(tx) => tx.send(resp).is_ok(),
+            Responder::Slot(tx) => tx.try_send(resp).is_ok(),
+        }
+    }
+
+    /// True when this responder targets a reusable [`ResponseSlot`].
+    pub fn is_slot(&self) -> bool {
+        matches!(self, Responder::Slot(_))
+    }
+}
+
+/// A single-sample inference request (no batch dimension; the batcher
+/// adds it).
+pub struct InferRequest {
+    /// what the request carries
+    pub payload: Payload,
+    /// enqueue timestamp (set by the coordinator)
+    pub enqueued_at: Instant,
+    /// response destination
+    pub respond: Responder,
+}
+
+/// Per-request outputs: exactly one tensor for every CPU workload (the
+/// allocation-free form), or a list for multi-output PJRT artifacts.
+#[derive(Debug)]
+pub enum InferOutputs {
+    /// single output tensor (CPU serving paths)
+    One(PooledTensor),
+    /// multi-output artifact results
+    Many(Vec<PooledTensor>),
+}
+
+impl InferOutputs {
+    /// Number of output tensors.
+    pub fn len(&self) -> usize {
+        match self {
+            InferOutputs::One(_) => 1,
+            InferOutputs::Many(v) => v.len(),
+        }
+    }
+
+    /// True when there are no outputs.
+    pub fn is_empty(&self) -> bool {
+        match self {
+            InferOutputs::One(_) => false,
+            InferOutputs::Many(v) => v.is_empty(),
+        }
+    }
+
+    /// First output tensor, if any.
+    pub fn first(&self) -> Option<&PooledTensor> {
+        match self {
+            InferOutputs::One(t) => Some(t),
+            InferOutputs::Many(v) => v.first(),
+        }
+    }
+}
+
+impl std::ops::Index<usize> for InferOutputs {
+    type Output = PooledTensor;
+
+    fn index(&self, i: usize) -> &PooledTensor {
+        match self {
+            InferOutputs::One(t) => {
+                assert_eq!(i, 0, "single-output response indexed at {i}");
+                t
+            }
+            InferOutputs::Many(v) => &v[i],
+        }
+    }
+}
+
+/// The coordinator's reply.  Dropping it returns every pooled output
+/// buffer to the coordinator's [`TensorPool`](super::pool::TensorPool)
+/// automatically — consumers cannot leak pool capacity.
+#[derive(Debug)]
 pub struct InferResponse {
     /// per-sample output tensors (batch dim stripped)
-    pub outputs: Vec<HostTensor>,
+    pub outputs: InferOutputs,
     /// microseconds spent queued before execution began
     pub queue_us: u64,
-    /// microseconds of PJRT execution (shared by the whole batch)
+    /// microseconds of batch execution (shared by the whole batch)
     pub exec_us: u64,
     /// how many requests shared the batch
     pub batch_size: usize,
+}
+
+/// A reusable bounded response channel: create one per client thread,
+/// pass it to `Coordinator::submit_pooled`, and `recv` replies from it.
+/// The channel's ring buffer is allocated once here, so steady-state
+/// response delivery allocates nothing.
+///
+/// Because the slot keeps its own sender alive (that is what makes it
+/// reusable), a failed batch cannot surface as a closed channel the way
+/// the legacy per-request path does.  Workers instead deliver an
+/// explicit **failure marker** (a response with no outputs) for every
+/// slot-targeted request they drop; [`ResponseSlot::recv`] /
+/// [`ResponseSlot::try_recv`] translate it back into an error, so a
+/// blocked client always wakes up.
+pub struct ResponseSlot {
+    tx: mpsc::SyncSender<InferResponse>,
+    rx: mpsc::Receiver<InferResponse>,
+}
+
+impl ResponseSlot {
+    /// New slot holding at most `capacity` undelivered responses (size
+    /// it to the client's maximum in-flight requests: slot sends are
+    /// non-blocking, so overflowing responses are dropped).
+    pub fn new(capacity: usize) -> ResponseSlot {
+        let (tx, rx) = mpsc::sync_channel(capacity.max(1));
+        ResponseSlot { tx, rx }
+    }
+
+    /// The sender half a request carries back here.
+    pub(super) fn sender(&self) -> mpsc::SyncSender<InferResponse> {
+        self.tx.clone()
+    }
+
+    /// Reject the worker's failure marker as an error.
+    fn check(r: InferResponse) -> Result<InferResponse> {
+        if r.outputs.is_empty() {
+            return Err(Error::Coordinator(
+                "worker failed the batch and dropped the request".into()));
+        }
+        Ok(r)
+    }
+
+    /// Block until the next response arrives (`Err` when the worker
+    /// failed the batch this request was in).
+    pub fn recv(&self) -> Result<InferResponse> {
+        let r = self
+            .rx
+            .recv()
+            .map_err(|_| Error::Coordinator("worker dropped request".into()))?;
+        Self::check(r)
+    }
+
+    /// Non-blocking receive (`Ok(None)` when nothing is pending).
+    pub fn try_recv(&self) -> Result<Option<InferResponse>> {
+        match self.rx.try_recv() {
+            Ok(r) => Self::check(r).map(Some),
+            Err(mpsc::TryRecvError::Empty) => Ok(None),
+            Err(mpsc::TryRecvError::Disconnected) => {
+                Err(Error::Coordinator("worker dropped request".into()))
+            }
+        }
+    }
 }
 
 /// Quality-of-service class used by the router to pick a variant.

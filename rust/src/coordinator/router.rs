@@ -1,20 +1,26 @@
-//! Compression-aware variant router.
+//! Typed workload router over compression-aware variant ladders.
 //!
-//! Each logical model ("vit", "bert", ...) owns a ladder of compiled
-//! variants ordered from most accurate (mode=none) to most compressed.
-//! Routing policy:
+//! The router keys worker pools by **(workload, logical model)**: vision,
+//! text, and joint requests dispatch to separate pools
+//! ([`Workload`]), and within a pool each logical model ("vit", "bert",
+//! "mm", ...) owns a ladder of variants ordered from most accurate
+//! (mode=none) to most compressed.  Routing policy:
 //!   * explicit [`Qos`] picks a rung directly;
 //!   * under load (`Qos::Balanced` and the preferred rung saturated) the
 //!     router *sheds to a more compressed variant* instead of queueing —
 //!     the serving-side payoff of token merging that the paper's Table 5
 //!     wall-times imply.
+//!
+//! Lookups borrow the model name (nested maps, no key construction), so
+//! routing a request performs no heap allocations — part of the
+//! end-to-end zero-alloc submit cycle (`tests/alloc_free.rs`).
 
 use std::collections::HashMap;
 
 use crate::error::{Error, Result};
 
 use super::batcher::VariantWorker;
-use super::request::Qos;
+use super::request::{Qos, Workload};
 
 /// One rung on a model's compression ladder.
 pub struct Variant {
@@ -28,10 +34,10 @@ pub struct Variant {
     pub worker: VariantWorker,
 }
 
-/// Router over logical models.
+/// Router over (workload, logical model) worker pools.
 #[derive(Default)]
 pub struct Router {
-    ladders: HashMap<String, Vec<Variant>>,
+    pools: HashMap<Workload, HashMap<String, Vec<Variant>>>,
 }
 
 impl Router {
@@ -40,10 +46,23 @@ impl Router {
         Self::default()
     }
 
-    /// Register a variant; ladders keep most-accurate first (sorted by
-    /// descending r, mode "none" treated as r=1.0+).
+    /// Register a vision variant (back-compat shorthand for
+    /// [`Router::add_variant_for`] with [`Workload::Vision`]).
     pub fn add_variant(&mut self, model: &str, v: Variant) {
-        let ladder = self.ladders.entry(model.to_string()).or_default();
+        self.add_variant_for(Workload::Vision, model, v);
+    }
+
+    /// Register a variant under a workload pool; ladders keep
+    /// most-accurate first (sorted by descending r, mode "none" treated
+    /// as r=1.0+).
+    pub fn add_variant_for(&mut self, workload: Workload, model: &str,
+                           v: Variant) {
+        let ladder = self
+            .pools
+            .entry(workload)
+            .or_default()
+            .entry(model.to_string())
+            .or_default();
         ladder.push(v);
         ladder.sort_by(|a, b| {
             let ra = if a.mode == "none" { 1.5 } else { a.r };
@@ -52,24 +71,78 @@ impl Router {
         });
     }
 
-    /// Known logical models.
+    /// Known vision-workload logical models (back-compat).
     pub fn models(&self) -> Vec<&str> {
-        self.ladders.keys().map(|s| s.as_str()).collect()
+        self.models_for(Workload::Vision)
     }
 
-    /// The ladder of a model.
+    /// Known logical models under a workload, sorted by name.
+    pub fn models_for(&self, workload: Workload) -> Vec<&str> {
+        let mut out: Vec<&str> = self
+            .pools
+            .get(&workload)
+            .map(|m| m.keys().map(String::as_str).collect())
+            .unwrap_or_default();
+        out.sort_unstable();
+        out
+    }
+
+    /// Every registered (workload, model, ladder), ordered by workload
+    /// then model name (deterministic for metrics/reporting).
+    pub fn iter(&self) -> Vec<(Workload, &str, &[Variant])> {
+        let mut out: Vec<(Workload, &str, &[Variant])> = self
+            .pools
+            .iter()
+            .flat_map(|(w, models)| {
+                models.iter().map(|(m, l)| (*w, m.as_str(), l.as_slice()))
+            })
+            .collect();
+        out.sort_by(|a, b| (a.0, a.1).cmp(&(b.0, b.1)));
+        out
+    }
+
+    /// Queue depth of every variant: (workload, model, artifact, depth) —
+    /// the per-workload admission signal `coordinator_bench` reports.
+    pub fn queue_depths(&self) -> Vec<(Workload, String, String, usize)> {
+        self.iter()
+            .into_iter()
+            .flat_map(|(w, m, ladder)| {
+                ladder.iter().map(move |v| {
+                    (w, m.to_string(), v.artifact.clone(), v.worker.depth())
+                })
+            })
+            .collect()
+    }
+
+    /// The ladder of a vision-workload model (back-compat).
     pub fn ladder(&self, model: &str) -> Result<&[Variant]> {
-        self.ladders
-            .get(model)
-            .map(|v| v.as_slice())
-            .ok_or_else(|| Error::Coordinator(format!("unknown model {model}")))
+        self.ladder_for(Workload::Vision, model)
     }
 
-    /// Pick a variant for a request.
+    /// The ladder of a model under a workload (borrowed lookup — no
+    /// allocation on the routing hot path).
+    pub fn ladder_for(&self, workload: Workload, model: &str)
+                      -> Result<&[Variant]> {
+        self.pools
+            .get(&workload)
+            .and_then(|m| m.get(model))
+            .map(|v| v.as_slice())
+            .ok_or_else(|| Error::Coordinator(format!(
+                "unknown {} model {model}", workload.name())))
+    }
+
+    /// Pick a vision variant for a request (back-compat).
     pub fn route(&self, model: &str, qos: Qos) -> Result<&Variant> {
-        let ladder = self.ladder(model)?;
+        self.route_for(Workload::Vision, model, qos)
+    }
+
+    /// Pick a variant for a typed request.
+    pub fn route_for(&self, workload: Workload, model: &str, qos: Qos)
+                     -> Result<&Variant> {
+        let ladder = self.ladder_for(workload, model)?;
         if ladder.is_empty() {
-            return Err(Error::Coordinator(format!("model {model} has no variants")));
+            return Err(Error::Coordinator(format!(
+                "{} model {model} has no variants", workload.name())));
         }
         let v = match qos {
             Qos::Accuracy => &ladder[0],

@@ -1,25 +1,53 @@
 //! The serving coordinator: wires registry -> engine -> workers -> router
 //! and exposes submit APIs with admission control.
+//!
+//! Worker pools are typed by [`Workload`]: `boot_cpu_workloads` boots
+//! vision ([`VitSession`](crate::engine::VitSession)-backed), text
+//! ([`BertSession`](crate::engine::BertSession)) and joint
+//! ([`JointSession`](crate::engine::JointSession)) pools over one shared
+//! [`Engine`] and one shared response-recycling [`TensorPool`].  The
+//! hot-path submit ([`Coordinator::submit_pooled`]) carries pooled input
+//! tensors and answers into a reusable [`ResponseSlot`], so a warmed
+//! request→response→release cycle allocates nothing on either side of
+//! the channel (`tests/alloc_free.rs`).
 
 use std::path::Path;
 use std::sync::mpsc;
 use std::sync::Arc;
 use std::time::Instant;
 
-use crate::config::{ServingConfig, ViTConfig};
-use crate::engine::Engine;
+use crate::config::{ServingConfig, TextConfig, ViTConfig};
+use crate::engine::{Engine, JointConfig, JointKind};
 use crate::error::{Error, Result};
 use crate::model::ParamStore;
 use crate::runtime::{load_flat_params, HostTensor, Registry};
 
 use super::batcher::VariantWorker;
 use super::metrics::Snapshot;
-use super::request::{InferRequest, InferResponse, Qos};
+use super::pool::TensorPool;
+use super::request::{InferRequest, InferResponse, Payload, Qos, Responder,
+                     ResponseSlot, Workload};
 use super::router::{Router, Variant};
+
+/// CPU worker-pool selection for [`Coordinator::boot_cpu_workloads`]:
+/// each workload maps logical models to their compression ladders of
+/// `(merge mode, keep ratio)` rungs, most-accurate-first.
+#[derive(Default)]
+pub struct CpuWorkloads {
+    /// vision pools: (model, rungs) served by `VitSession` workers
+    pub vision: Vec<(String, Vec<(String, f64)>)>,
+    /// text pools: (model, rungs) served by `BertSession` workers
+    pub text: Vec<(String, Vec<(String, f64)>)>,
+    /// joint pools: (model, fusion kind, rungs — the vision tower sweeps
+    /// the ladder, the text tower stays uncompressed) served by
+    /// `JointSession` workers
+    pub joint: Vec<(String, JointKind, Vec<(String, f64)>)>,
+}
 
 /// The serving coordinator.
 pub struct Coordinator {
     router: Router,
+    pool: Arc<TensorPool>,
     /// serving config used for all workers
     pub cfg: ServingConfig,
 }
@@ -52,32 +80,47 @@ impl Coordinator {
                 });
             }
         }
-        Ok(Coordinator { router, cfg })
+        Ok(Coordinator { router, pool: Arc::new(TensorPool::new()), cfg })
     }
 
-    /// Boot a coordinator that serves the pure-Rust CPU reference ViT —
-    /// no PJRT artifacts required.  `selection` maps each logical model to
-    /// its compression ladder of `(merge mode, keep ratio)` rungs,
-    /// most-accurate-first.  Every rung shares one [`Engine`] (weights +
-    /// resolution cache); each variant worker holds a long-lived
-    /// `VitSession` from it, whose encoder fan-out uses `cfg.workers`
-    /// threads, so steady-state serving re-resolves nothing and allocates
-    /// nothing in the inference region.
+    /// Boot a vision-only CPU coordinator (back-compat shorthand for
+    /// [`Coordinator::boot_cpu_workloads`]).  `selection` maps each
+    /// logical model to its compression ladder of `(merge mode, keep
+    /// ratio)` rungs, most-accurate-first.
     pub fn boot_cpu(ps: &Arc<ParamStore>,
                     selection: &[(&str, Vec<(String, f64)>)],
                     cfg: ServingConfig) -> Result<Coordinator> {
+        let workloads = CpuWorkloads {
+            vision: selection
+                .iter()
+                .map(|(m, rungs)| (m.to_string(), rungs.clone()))
+                .collect(),
+            ..Default::default()
+        };
+        Self::boot_cpu_workloads(ps, &workloads, cfg)
+    }
+
+    /// Boot a multi-workload CPU coordinator — no PJRT artifacts
+    /// required.  Every worker across every pool shares one [`Engine`]
+    /// (weights + resolution cache) and one response-recycling
+    /// [`TensorPool`]; each holds its session for its whole lifetime, so
+    /// steady-state serving re-resolves nothing and allocates nothing in
+    /// a whole batch cycle.
+    pub fn boot_cpu_workloads(ps: &Arc<ParamStore>, workloads: &CpuWorkloads,
+                              cfg: ServingConfig) -> Result<Coordinator> {
         let engine = Arc::new(Engine::new(ps.clone()));
+        let pool = Arc::new(TensorPool::new());
         let mut router = Router::new();
-        for (model, rungs) in selection {
+        for (model, rungs) in &workloads.vision {
             for (mode, r) in rungs {
                 let model_cfg = ViTConfig {
                     merge_mode: mode.clone(),
                     merge_r: *r,
                     ..Default::default()
                 };
-                let worker =
-                    VariantWorker::spawn_cpu(engine.clone(), model_cfg, &cfg);
-                router.add_variant(model, Variant {
+                let worker = VariantWorker::spawn_cpu(
+                    engine.clone(), model_cfg, pool.clone(), &cfg);
+                router.add_variant_for(Workload::Vision, model, Variant {
                     artifact: format!("cpu_{}_r{:.0}", mode, r * 1000.0),
                     mode: mode.clone(),
                     r: *r,
@@ -85,10 +128,69 @@ impl Coordinator {
                 });
             }
         }
-        Ok(Coordinator { router, cfg })
+        for (model, rungs) in &workloads.text {
+            for (mode, r) in rungs {
+                let model_cfg = TextConfig {
+                    merge_mode: mode.clone(),
+                    merge_r: *r,
+                    ..Default::default()
+                };
+                let worker = VariantWorker::spawn_cpu_text(
+                    engine.clone(), model_cfg, pool.clone(), &cfg);
+                router.add_variant_for(Workload::Text, model, Variant {
+                    artifact: format!("text_{}_r{:.0}", mode, r * 1000.0),
+                    mode: mode.clone(),
+                    r: *r,
+                    worker,
+                });
+            }
+        }
+        for (model, kind, rungs) in &workloads.joint {
+            for (mode, r) in rungs {
+                let vision = ViTConfig {
+                    merge_mode: mode.clone(),
+                    merge_r: *r,
+                    ..Default::default()
+                };
+                let model_cfg = match kind {
+                    JointKind::Vqa => JointConfig::vqa(vision),
+                    JointKind::Retrieval => JointConfig::retrieval(vision),
+                };
+                let worker = VariantWorker::spawn_cpu_joint(
+                    engine.clone(), model_cfg, pool.clone(), &cfg);
+                router.add_variant_for(Workload::Joint, model, Variant {
+                    artifact: format!("joint_{}_r{:.0}", mode, r * 1000.0),
+                    mode: mode.clone(),
+                    r: *r,
+                    worker,
+                });
+            }
+        }
+        Ok(Coordinator { router, pool, cfg })
     }
 
-    /// Submit one request and block until its response arrives.
+    /// The coordinator's shared tensor-recycling pool: clients check
+    /// request buffers out of it ([`TensorPool::take_f32`] /
+    /// [`TensorPool::take_i32`]) and responses return theirs to it on
+    /// drop.
+    pub fn pool(&self) -> &Arc<TensorPool> {
+        &self.pool
+    }
+
+    /// A reusable bounded response channel for
+    /// [`Coordinator::submit_pooled`] (one per client thread).  Sized to
+    /// `queue_capacity + max_batch` — the most responses a client
+    /// pipelining against a single worker can ever have undelivered
+    /// (the queue plus the worker's in-flight batch), so slot sends
+    /// never overflow in that configuration.  A client fanning one slot
+    /// across several pools should drain between submits or build a
+    /// proportionally larger [`ResponseSlot`] itself.
+    pub fn response_slot(&self) -> ResponseSlot {
+        ResponseSlot::new(self.cfg.queue_capacity + self.cfg.max_batch)
+    }
+
+    /// Submit one vision request and block until its response arrives
+    /// (legacy convenience: per-request channel, untyped tensor list).
     pub fn submit(&self, model: &str, qos: Qos,
                   inputs: Vec<HostTensor>) -> Result<InferResponse> {
         self.submit_nowait(model, qos, inputs)?
@@ -96,37 +198,80 @@ impl Coordinator {
             .map_err(|_| Error::Coordinator("worker dropped request".into()))
     }
 
-    /// Submit and return the response channel without blocking on the
-    /// result (callers fan out and collect).
+    /// Submit a vision request and return the response channel without
+    /// blocking on the result (callers fan out and collect).
     pub fn submit_nowait(&self, model: &str, qos: Qos, inputs: Vec<HostTensor>)
                          -> Result<mpsc::Receiver<InferResponse>> {
-        let variant = self.router.route(model, qos)?;
-        let (tx, rx) = mpsc::channel();
-        let req = InferRequest { inputs, enqueued_at: Instant::now(), respond: tx };
-        variant.worker.submit(req)?;
-        Ok(rx)
+        self.submit_typed(Workload::Vision, model, qos,
+                          Payload::Tensors(inputs))
     }
 
-    /// Non-blocking admission-controlled submit: errors immediately when
-    /// the chosen variant's queue is full.
+    /// Non-blocking admission-controlled vision submit: errors
+    /// immediately when the chosen variant's queue is full.
     pub fn try_submit(&self, model: &str, qos: Qos, inputs: Vec<HostTensor>)
                       -> Result<mpsc::Receiver<InferResponse>> {
-        let variant = self.router.route(model, qos)?;
+        let variant = self.router.route_for(Workload::Vision, model, qos)?;
         let (tx, rx) = mpsc::channel();
-        let req = InferRequest { inputs, enqueued_at: Instant::now(), respond: tx };
+        let req = InferRequest {
+            payload: Payload::Tensors(inputs),
+            enqueued_at: Instant::now(),
+            respond: Responder::Channel(tx),
+        };
         variant.worker.try_submit(req)?;
         Ok(rx)
     }
 
-    /// Metrics snapshot of every variant: (model, artifact, snapshot).
+    /// Submit a typed request to its workload pool, returning a
+    /// per-request response channel (allocates the channel; use
+    /// [`Coordinator::submit_pooled`] on the hot path).
+    pub fn submit_typed(&self, workload: Workload, model: &str, qos: Qos,
+                        payload: Payload)
+                        -> Result<mpsc::Receiver<InferResponse>> {
+        let variant = self.router.route_for(workload, model, qos)?;
+        let (tx, rx) = mpsc::channel();
+        let req = InferRequest {
+            payload,
+            enqueued_at: Instant::now(),
+            respond: Responder::Channel(tx),
+        };
+        variant.worker.submit(req)?;
+        Ok(rx)
+    }
+
+    /// Hot-path typed submit: the response lands in the caller's
+    /// reusable `slot`.  With pooled payload tensors this whole
+    /// request→response→release cycle performs zero heap allocations
+    /// once warm (`tests/alloc_free.rs`).
+    pub fn submit_pooled(&self, workload: Workload, model: &str, qos: Qos,
+                         payload: Payload, slot: &ResponseSlot)
+                         -> Result<()> {
+        let variant = self.router.route_for(workload, model, qos)?;
+        let req = InferRequest {
+            payload,
+            enqueued_at: Instant::now(),
+            respond: Responder::Slot(slot.sender()),
+        };
+        variant.worker.submit(req)
+    }
+
+    /// Metrics snapshot of every variant across every workload:
+    /// (model, artifact, snapshot), ordered by workload then model.
     pub fn metrics(&self) -> Vec<(String, String, Snapshot)> {
+        self.metrics_typed()
+            .into_iter()
+            .map(|(_, m, a, s)| (m, a, s))
+            .collect()
+    }
+
+    /// Typed metrics snapshot: (workload, model, artifact, snapshot),
+    /// ordered by workload then model.
+    pub fn metrics_typed(&self)
+                         -> Vec<(Workload, String, String, Snapshot)> {
         let mut out = Vec::new();
-        for model in self.router.models() {
-            if let Ok(ladder) = self.router.ladder(model) {
-                for v in ladder {
-                    out.push((model.to_string(), v.artifact.clone(),
-                              v.worker.metrics.snapshot()));
-                }
+        for (w, model, ladder) in self.router.iter() {
+            for v in ladder {
+                out.push((w, model.to_string(), v.artifact.clone(),
+                          v.worker.metrics.snapshot()));
             }
         }
         out

@@ -65,10 +65,12 @@
 #![deny(missing_docs)]
 
 mod head;
+mod multimodal;
 mod output;
 mod text;
 mod vit;
 
+pub use multimodal::{JointConfig, JointKind, JointSession, TextTowerCfg};
 pub use output::OutputPool;
 pub use text::BertSession;
 pub use vit::VitSession;
@@ -83,7 +85,7 @@ use crate::error::{Error, Result};
 use crate::model::encoder::{encoder_forward_slot, encoder_forward_slots,
                             SeqSlot};
 use crate::model::{EncoderCfg, ParamStore, ResolvedEncoder, ScratchPool};
-use crate::tensor::Mat;
+use crate::tensor::{Mat, MatRef};
 
 /// Hash an [`EncoderCfg`] for the resolution cache (f32 via bit pattern).
 fn cfg_key(cfg: &EncoderCfg) -> u64 {
@@ -179,6 +181,13 @@ impl Engine {
         BertSession::new(self, cfg)
     }
 
+    /// Open a joint vision+text session (paired pooled towers + the
+    /// fusion stage `cfg.kind` selects) — the serving form of the
+    /// paper's multimodal workloads (retrieval scoring, VQA).
+    pub fn joint_session(&self, cfg: &JointConfig) -> Result<JointSession> {
+        JointSession::new(self, cfg)
+    }
+
     /// Number of distinct configs currently resolved in the cache.
     pub fn resolved_configs(&self) -> usize {
         self.resolved.lock().unwrap().values().map(Vec::len).sum()
@@ -242,6 +251,40 @@ impl Session {
     pub fn input_mut(&mut self, i: usize) -> &mut Mat {
         assert!(i < self.count, "input {i} outside the batch ({})", self.count);
         &mut self.slots[i].x
+    }
+
+    /// Embed a token-id sequence into pooled input slot `i` (token
+    /// `table` lookup + positional embedding `pos`, numerically identical
+    /// to the historical `embed_tokens`), validating the length against
+    /// the config's `plan[0]` and every id against the table — the text
+    /// embedding stage [`BertSession`] and [`JointSession`] share.
+    pub fn set_tokens(&mut self, i: usize, tokens: &[i32], table: MatRef,
+                      pos: MatRef) -> Result<()> {
+        let want = self.cfg.plan[0];
+        if tokens.len() != want {
+            return Err(Error::Shape(format!(
+                "token sequence {i}: length {} != expected {want}",
+                tokens.len())));
+        }
+        for &t in tokens {
+            if t < 0 || t as usize >= table.rows {
+                return Err(Error::Shape(format!(
+                    "token sequence {i}: id {t} outside vocab of {}",
+                    table.rows)));
+            }
+        }
+        let dim = self.cfg.dim;
+        let x = self.input_mut(i);
+        x.reshape(tokens.len(), dim);
+        for (r, &t) in tokens.iter().enumerate() {
+            let xr = x.row_mut(r);
+            let e = table.row(t as usize);
+            let p = pos.row(r);
+            for j in 0..dim {
+                xr[j] = e[j] + p[j];
+            }
+        }
+        Ok(())
     }
 
     /// Check every filled input against the config (the stale-shape

@@ -1,0 +1,550 @@
+//! Joint vision+text serving sessions: one pooled vision tower and one
+//! pooled text tower over a shared [`Engine`], fused through pooled
+//! buffers for the paper's two multimodal workloads — retrieval scoring
+//! (normalized feature similarity, Figure 3 / Tables 2-3) and VQA answer
+//! heads (Tables 4-5 / Figure 5).
+//!
+//! A [`JointSession`] follows the same ownership rules as every other
+//! session: one per worker thread, alive for the worker's lifetime.  Both
+//! towers resolve their weights through the engine's shared resolution
+//! cache, and every stage — patch/token embedding, both encoder loops,
+//! the concat + `vqa.fc1`/relu/answer head, the `proj.img`/`proj.txt`
+//! projections and their L2 normalization — writes into pooled buffers,
+//! so a whole warmed (patches, question)→answer-logits request performs
+//! **zero** heap allocations (`tests/alloc_free.rs`).
+//!
+//! # Ragged halves
+//!
+//! [`JointSession::begin`] sizes the vision and text halves
+//! *independently* (`bv` images, `bt` token sequences): a retrieval round
+//! can embed 30 images against 100 captions, and the coordinator's joint
+//! worker splits a mixed batch the same way.  Fusion is explicit:
+//! [`JointSession::fuse_vqa`] takes `(vision, text)` index pairs;
+//! [`JointSession::project`] embeds every sample of both halves for
+//! similarity scoring.
+
+use std::sync::Arc;
+
+use crate::config::ViTConfig;
+use crate::config::DEFAULT_TOFU_PRUNE_THRESHOLD;
+use crate::data::{Rng, CAP_LEN, VOCAB};
+use crate::error::{Error, Result};
+use crate::merge::MergeMode;
+use crate::model::params::{MatSpan, VecSpan};
+use crate::model::text::l2_normalize;
+use crate::model::{EncoderCfg, ParamStore, MM_TEXT_DEPTH, MM_TEXT_DIM};
+use crate::tensor::{dense_into, Mat};
+
+use super::{Engine, OutputPool, Session, VitSession};
+
+/// Decorrelate the text tower's per-(layer, sample) RNG streams from the
+/// vision tower's when both run under one batch seed.
+const TEXT_SEED_SALT: u64 = 0x9E37_79B9_7F4A_7C15;
+
+/// Which fusion stage a [`JointSession`] resolves and runs.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum JointKind {
+    /// CLIP-style retrieval scoring: both towers project into a shared
+    /// embedding space (`proj.img` / `proj.txt`), scores are dot products
+    /// of L2-normalized features.
+    Retrieval,
+    /// LLaVA-style VQA: the concatenated (vision CLS, question CLS)
+    /// feature runs through `vqa.fc1` + relu + the answer head.
+    Vqa,
+}
+
+/// Hyperparameters of a text tower paired into a [`JointSession`]
+/// (mirrors `python/compile/{clip,vqa}.py`: the caption tower lives
+/// under `"txt."`, the question tower under `"q."`).
+#[derive(Clone, Debug)]
+pub struct TextTowerCfg {
+    /// parameter-name prefix, e.g. `"q."` or `"txt."`
+    pub prefix: String,
+    /// vocabulary size (token-id validation bound)
+    pub vocab_size: usize,
+    /// total tokens per sequence, CLS included
+    pub tokens: usize,
+    /// embedding dim
+    pub dim: usize,
+    /// depth
+    pub depth: usize,
+    /// attention heads
+    pub heads: usize,
+}
+
+impl TextTowerCfg {
+    /// The encoder config this tower implies (mode `none`, flat plan —
+    /// exactly what the historical `text_features` calls used, so the
+    /// session path stays bitwise-compatible with them).
+    pub fn encoder_cfg(&self) -> EncoderCfg {
+        EncoderCfg {
+            prefix: self.prefix.clone(),
+            dim: self.dim,
+            depth: self.depth,
+            heads: self.heads,
+            mode: MergeMode::None,
+            plan: vec![self.tokens; self.depth + 1],
+            prop_attn: true,
+            tofu_threshold: DEFAULT_TOFU_PRUNE_THRESHOLD,
+        }
+    }
+}
+
+/// Configuration of a joint vision+text session: the vision tower's model
+/// config (merge mode/ratio sweep along it), the paired text tower, and
+/// the fusion stage to resolve.
+#[derive(Clone, Debug)]
+pub struct JointConfig {
+    /// vision tower config (token merging happens here)
+    pub vision: ViTConfig,
+    /// paired text tower
+    pub text: TextTowerCfg,
+    /// fusion stage
+    pub kind: JointKind,
+}
+
+impl JointConfig {
+    /// The VQA pairing (question tower `"q."`, answer head `vqa.*`) for a
+    /// vision config — hyperparameters mirror `python/compile/vqa.py`.
+    pub fn vqa(vision: ViTConfig) -> JointConfig {
+        JointConfig {
+            vision,
+            text: TextTowerCfg {
+                prefix: "q.".into(),
+                vocab_size: VOCAB,
+                tokens: CAP_LEN + 1,
+                dim: MM_TEXT_DIM,
+                depth: MM_TEXT_DEPTH,
+                heads: 4,
+            },
+            kind: JointKind::Vqa,
+        }
+    }
+
+    /// The retrieval pairing (caption tower `"txt."`, projections
+    /// `proj.img`/`proj.txt`) for a vision config — hyperparameters
+    /// mirror `python/compile/clip.py`.
+    pub fn retrieval(vision: ViTConfig) -> JointConfig {
+        JointConfig {
+            vision,
+            text: TextTowerCfg {
+                prefix: "txt.".into(),
+                vocab_size: VOCAB,
+                tokens: CAP_LEN + 1,
+                dim: MM_TEXT_DIM,
+                depth: MM_TEXT_DEPTH,
+                heads: 4,
+            },
+            kind: JointKind::Retrieval,
+        }
+    }
+}
+
+/// Resolved spans + pooled buffers of the VQA fusion stage.
+struct VqaStage {
+    fc1: MatSpan,
+    fc1b: VecSpan,
+    head_w: MatSpan,
+    head_b: VecSpan,
+    /// (1, vdim + tdim) concat staging — the pooled replacement for the
+    /// historical per-call `extend_from_slice` joint-feature copy
+    joint: Mat,
+    /// (1, fc1 out) relu hidden state
+    hidden: Mat,
+    /// pooled per-pair answer logits
+    logits: OutputPool,
+}
+
+/// Resolved spans + pooled buffers of the retrieval fusion stage.
+struct RetrievalStage {
+    proj_img: MatSpan,
+    proj_txt: MatSpan,
+    /// (1, dim) CLS staging for the projection matmuls
+    feat: Mat,
+    /// pooled per-image normalized embeddings
+    img: OutputPool,
+    /// pooled per-caption normalized embeddings
+    txt: OutputPool,
+}
+
+/// A paired vision+text session over one shared [`Engine`]: pooled
+/// towers plus the pooled fusion stage `kind` selects.  See the module
+/// docs for the lifecycle and the ragged-halves contract.
+pub struct JointSession {
+    ps: Arc<ParamStore>,
+    vision: VitSession,
+    text: Session,
+    tok: MatSpan,
+    pos: MatSpan,
+    cfg: JointConfig,
+    vqa: Option<VqaStage>,
+    ret: Option<RetrievalStage>,
+    bv: usize,
+    bt: usize,
+}
+
+impl JointSession {
+    pub(super) fn new(engine: &Engine, cfg: &JointConfig)
+                      -> Result<JointSession> {
+        let ps = engine.params_arc();
+        let vision = engine.vit_session(&cfg.vision)?;
+        let text = engine.session(cfg.text.encoder_cfg())?;
+        let p = &cfg.text.prefix;
+        let (vqa, ret) = match cfg.kind {
+            JointKind::Vqa => (
+                Some(VqaStage {
+                    fc1: ps.mat2_span("vqa.fc1")?,
+                    fc1b: ps.vec1_span("vqa.fc1b")?,
+                    head_w: ps.mat2_span("vqa.head.w")?,
+                    head_b: ps.vec1_span("vqa.head.b")?,
+                    joint: Mat::zeros(0, 0),
+                    hidden: Mat::zeros(0, 0),
+                    logits: OutputPool::new(),
+                }),
+                None,
+            ),
+            JointKind::Retrieval => (
+                None,
+                Some(RetrievalStage {
+                    proj_img: ps.mat2_span("proj.img")?,
+                    proj_txt: ps.mat2_span("proj.txt")?,
+                    feat: Mat::zeros(0, 0),
+                    img: OutputPool::new(),
+                    txt: OutputPool::new(),
+                }),
+            ),
+        };
+        Ok(JointSession {
+            tok: ps.mat2_span(&format!("{p}tok"))?,
+            pos: ps.mat2_span(&format!("{p}pos"))?,
+            ps,
+            vision,
+            text,
+            cfg: cfg.clone(),
+            vqa,
+            ret,
+            bv: 0,
+            bt: 0,
+        })
+    }
+
+    /// The session's joint config.
+    pub fn cfg(&self) -> &JointConfig {
+        &self.cfg
+    }
+
+    /// Set the vision tower's encoder fan-out width.
+    pub fn set_vision_workers(&mut self, workers: usize) {
+        self.vision.set_workers(workers);
+    }
+
+    /// Set the text tower's encoder fan-out width (the halves are sized
+    /// — and fanned out — independently; text sequences are short, so
+    /// serial is usually right).
+    pub fn set_text_workers(&mut self, workers: usize) {
+        self.text.set_workers(workers);
+    }
+
+    /// Start a round with `bv` images and `bt` token sequences — the two
+    /// halves are independent (a retrieval round may embed many captions
+    /// against few images; a VQA round uses `bv == bt` pairs).
+    pub fn begin(&mut self, bv: usize, bt: usize) {
+        self.vision.begin(bv);
+        self.text.begin(bt);
+        self.bv = bv;
+        self.bt = bt;
+    }
+
+    /// Number of images in the current round's vision half.
+    pub fn vision_len(&self) -> usize {
+        self.bv
+    }
+
+    /// Number of token sequences in the current round's text half.
+    pub fn text_len(&self) -> usize {
+        self.bt
+    }
+
+    /// Embed image `i`'s patches into its pooled vision slot.
+    pub fn set_patches(&mut self, i: usize, patches: &Mat) -> Result<()> {
+        self.vision.set_patches(i, patches)
+    }
+
+    /// [`JointSession::set_patches`] from a raw row-major slice (the
+    /// serving path — no staging copy).
+    pub fn set_patches_slice(&mut self, i: usize, data: &[f32]) -> Result<()> {
+        self.vision.set_patches_slice(i, data)
+    }
+
+    /// Embed sequence `i`'s token ids into its pooled text slot (the
+    /// shared [`Session::set_tokens`] stage: token table + positional
+    /// embedding, numerically identical to the historical
+    /// `embed_tokens`).  Rejects a length that contradicts the tower's
+    /// plan and ids outside the vocabulary.
+    pub fn set_text(&mut self, i: usize, tokens: &[i32]) -> Result<()> {
+        let table = self.ps.mat_at(self.tok);
+        let pos = self.ps.mat_at(self.pos);
+        self.text.set_tokens(i, tokens, table, pos)
+    }
+
+    /// Run both towers over the current round (fan-out seeded per
+    /// (layer, sample) from `seed`; the text tower draws from a salted
+    /// stream).  Fusion is separate — call [`JointSession::fuse_vqa`] or
+    /// [`JointSession::project`] next.
+    pub fn forward(&mut self, seed: u64) -> Result<()> {
+        self.vision.forward(seed)?;
+        self.text.forward(seed ^ TEXT_SEED_SALT)
+    }
+
+    /// Serial shared-RNG variant of [`JointSession::forward`]: the whole
+    /// vision half runs first, then the whole text half, all drawing from
+    /// one `rng` — for single-pair rounds this is bitwise-identical to
+    /// the historical per-sample `ViTModel::features` +
+    /// `text_features` call order.
+    pub fn forward_serial(&mut self, rng: &mut Rng) -> Result<()> {
+        self.vision.forward_serial(rng)?;
+        self.text.forward_serial(rng)
+    }
+
+    /// Vision CLS feature of image `i` (len vision dim) from the most
+    /// recent forward.
+    pub fn image_feature(&self, i: usize) -> &[f32] {
+        self.vision.features(i)
+    }
+
+    /// Text CLS feature of sequence `i` (len text dim) from the most
+    /// recent forward.
+    pub fn text_feature(&self, i: usize) -> &[f32] {
+        self.text.output(i).row(0)
+    }
+
+    /// VQA fusion over explicit `(vision, text)` index `pairs`: for each
+    /// pair, concatenate the two CLS features in the pooled joint buffer
+    /// and run `vqa.fc1` + relu + the answer head into pooled per-pair
+    /// logits ([`JointSession::answer_logits`]).  Allocation-free once
+    /// warm.  Errors when the session was built without the VQA stage or
+    /// an index falls outside the current round.
+    pub fn fuse_vqa(&mut self, pairs: &[(usize, usize)]) -> Result<()> {
+        let (bv, bt) = (self.bv, self.bt);
+        let Some(stage) = self.vqa.as_mut() else {
+            return Err(Error::Config(
+                "joint session was built without the VQA fusion stage \
+                 (JointKind::Retrieval)".into()));
+        };
+        for &(vi, ti) in pairs {
+            if vi >= bv || ti >= bt {
+                return Err(Error::Shape(format!(
+                    "VQA pair ({vi}, {ti}) outside the round's halves \
+                     ({bv} images, {bt} sequences)")));
+            }
+        }
+        let vdim = self.cfg.vision.dim;
+        let tdim = self.cfg.text.dim;
+        let logits = stage.logits.take(pairs.len());
+        for (out, &(vi, ti)) in logits.iter_mut().zip(pairs) {
+            let vf = self.vision.features(vi);
+            let tf = self.text.output(ti).row(0);
+            stage.joint.reshape(1, vdim + tdim);
+            let row = stage.joint.row_mut(0);
+            row[..vdim].copy_from_slice(vf);
+            row[vdim..].copy_from_slice(tf);
+            dense_into(&stage.joint, self.ps.mat_at(stage.fc1),
+                       Some(self.ps.vec_at(stage.fc1b)), &mut stage.hidden);
+            for v in stage.hidden.data.iter_mut() {
+                *v = v.max(0.0);
+            }
+            dense_into(&stage.hidden, self.ps.mat_at(stage.head_w),
+                       Some(self.ps.vec_at(stage.head_b)), out);
+        }
+        Ok(())
+    }
+
+    /// Answer logits of fused pair `p` (len `N_ANSWERS`) from the most
+    /// recent [`JointSession::fuse_vqa`].
+    pub fn answer_logits(&self, p: usize) -> &[f32] {
+        self.vqa
+            .as_ref()
+            .expect("joint session has no VQA stage")
+            .logits
+            .get(p)
+            .row(0)
+    }
+
+    /// Predicted answer of fused pair `p`.
+    pub fn answer(&self, p: usize) -> usize {
+        crate::tensor::argmax(self.answer_logits(p))
+    }
+
+    /// Retrieval fusion: project every image and caption of the current
+    /// round into the shared embedding space (`proj.img` / `proj.txt` +
+    /// L2 normalization) through pooled buffers
+    /// ([`JointSession::image_embed`] / [`JointSession::text_embed`]).
+    /// Allocation-free once warm.  Errors when the session was built
+    /// without the retrieval stage.
+    pub fn project(&mut self) -> Result<()> {
+        let (bv, bt) = (self.bv, self.bt);
+        let Some(stage) = self.ret.as_mut() else {
+            return Err(Error::Config(
+                "joint session was built without the retrieval fusion \
+                 stage (JointKind::Vqa)".into()));
+        };
+        let vdim = self.cfg.vision.dim;
+        let tdim = self.cfg.text.dim;
+        let imgs = stage.img.take(bv);
+        for (i, out) in imgs.iter_mut().enumerate() {
+            stage.feat.reshape(1, vdim);
+            stage.feat.row_mut(0).copy_from_slice(self.vision.features(i));
+            dense_into(&stage.feat, self.ps.mat_at(stage.proj_img), None,
+                       out);
+            l2_normalize(out.row_mut(0));
+        }
+        let txts = stage.txt.take(bt);
+        for (j, out) in txts.iter_mut().enumerate() {
+            stage.feat.reshape(1, tdim);
+            stage.feat.row_mut(0).copy_from_slice(self.text.output(j).row(0));
+            dense_into(&stage.feat, self.ps.mat_at(stage.proj_txt), None,
+                       out);
+            l2_normalize(out.row_mut(0));
+        }
+        Ok(())
+    }
+
+    /// Normalized embedding of image `i` from the most recent
+    /// [`JointSession::project`].
+    pub fn image_embed(&self, i: usize) -> &[f32] {
+        self.ret
+            .as_ref()
+            .expect("joint session has no retrieval stage")
+            .img
+            .get(i)
+            .row(0)
+    }
+
+    /// Normalized embedding of caption `j` from the most recent
+    /// [`JointSession::project`].
+    pub fn text_embed(&self, j: usize) -> &[f32] {
+        self.ret
+            .as_ref()
+            .expect("joint session has no retrieval stage")
+            .txt
+            .get(j)
+            .row(0)
+    }
+
+    /// Retrieval score of (image `i`, caption `j`): the dot product of
+    /// their normalized embeddings (cosine similarity).
+    pub fn score(&self, i: usize, j: usize) -> f32 {
+        let a = self.image_embed(i);
+        let b = self.text_embed(j);
+        a.iter().zip(b).map(|(x, y)| x * y).sum()
+    }
+
+    /// One-pair VQA convenience under the serial shared-RNG contract:
+    /// embed, run vision then text, fuse, and return the answer logits —
+    /// bitwise-identical to the historical per-sample
+    /// `eval::vqa::vqa_logits` (vision draws from `rng` first, then the
+    /// question tower), but through pooled buffers and the engine's
+    /// cached weight resolutions.
+    pub fn vqa_one(&mut self, patches: &Mat, question: &[i32],
+                   rng: &mut Rng) -> Result<&[f32]> {
+        self.begin(1, 1);
+        self.set_patches(0, patches)?;
+        self.set_text(0, question)?;
+        self.forward_serial(rng)?;
+        self.fuse_vqa(&[(0, 0)])?;
+        Ok(self.answer_logits(0))
+    }
+
+    /// One-pair retrieval convenience under the serial shared-RNG
+    /// contract: embed, run vision then text, project, and return the
+    /// (image, caption) embedding pair — bitwise-identical to the
+    /// historical `clip_image_embed` followed by `clip_text_embed` with
+    /// one shared RNG.
+    pub fn embed_pair_one(&mut self, patches: &Mat, caption: &[i32],
+                          rng: &mut Rng) -> Result<(&[f32], &[f32])> {
+        self.begin(1, 1);
+        self.set_patches(0, patches)?;
+        self.set_text(0, caption)?;
+        self.forward_serial(rng)?;
+        self.project()?;
+        Ok((self.image_embed(0), self.text_embed(0)))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::{patchify, shape_item, vqa_item, TEST_SEED};
+    use crate::model::synthetic_mm_store;
+
+    fn mm_engine(mode: &str) -> (ViTConfig, Engine) {
+        let vcfg = ViTConfig { merge_mode: mode.into(), merge_r: 0.9,
+                               ..Default::default() };
+        let engine = Engine::from_store(synthetic_mm_store(&vcfg, 11));
+        (vcfg, engine)
+    }
+
+    #[test]
+    fn vqa_session_answers_deterministically() {
+        let (vcfg, engine) = mm_engine("pitome");
+        let mut sess = engine.joint_session(&JointConfig::vqa(vcfg)).unwrap();
+        let item = shape_item(TEST_SEED, 0);
+        let patches = patchify(&item.image, 4);
+        let (q, _) = vqa_item(TEST_SEED, 0);
+        let mut r1 = Rng::new(5);
+        let a = sess.vqa_one(&patches, &q, &mut r1).unwrap().to_vec();
+        let mut r2 = Rng::new(5);
+        let b = sess.vqa_one(&patches, &q, &mut r2).unwrap().to_vec();
+        assert_eq!(a, b, "same RNG stream must reproduce the logits");
+        assert_eq!(a.len(), crate::data::N_ANSWERS);
+    }
+
+    #[test]
+    fn ragged_halves_are_sized_independently() {
+        let (vcfg, engine) = mm_engine("pitome");
+        let mut sess =
+            engine.joint_session(&JointConfig::retrieval(vcfg)).unwrap();
+        sess.begin(2, 3);
+        for i in 0..2 {
+            let item = shape_item(TEST_SEED, i as u64);
+            sess.set_patches(i, &patchify(&item.image, 4)).unwrap();
+        }
+        for j in 0..3 {
+            let cap = crate::data::caption_for(TEST_SEED, j as u64);
+            sess.set_text(j, &cap).unwrap();
+        }
+        sess.forward(0).unwrap();
+        sess.project().unwrap();
+        assert_eq!(sess.vision_len(), 2);
+        assert_eq!(sess.text_len(), 3);
+        // normalized embeddings: unit length, scores in [-1, 1]
+        for i in 0..2 {
+            let n: f32 = sess.image_embed(i).iter().map(|v| v * v).sum();
+            assert!((n - 1.0).abs() < 1e-3, "image embed {i} not unit: {n}");
+            for j in 0..3 {
+                let s = sess.score(i, j);
+                assert!((-1.001..=1.001).contains(&s), "score {s}");
+            }
+        }
+    }
+
+    #[test]
+    fn wrong_stage_and_bad_indices_are_rejected() {
+        let (vcfg, engine) = mm_engine("none");
+        let mut vqa = engine
+            .joint_session(&JointConfig::vqa(vcfg.clone()))
+            .unwrap();
+        assert!(vqa.project().is_err(), "VQA session must lack projections");
+        vqa.begin(1, 1);
+        assert!(vqa.fuse_vqa(&[(0, 1)]).is_err(), "pair outside text half");
+        let mut ret =
+            engine.joint_session(&JointConfig::retrieval(vcfg)).unwrap();
+        assert!(ret.fuse_vqa(&[]).is_err(),
+                "retrieval session must lack the VQA head");
+        // bad token ids and bad lengths
+        ret.begin(0, 1);
+        assert!(ret.set_text(0, &[1, 2, 3]).is_err(), "short caption");
+        let bad = vec![VOCAB as i32 + 5; CAP_LEN + 1];
+        assert!(ret.set_text(0, &bad).is_err(), "oov caption ids");
+    }
+}

@@ -5,7 +5,7 @@ use std::sync::Arc;
 
 use crate::config::TextConfig;
 use crate::data::Rng;
-use crate::error::{Error, Result};
+use crate::error::Result;
 use crate::model::params::MatSpan;
 use crate::model::{EncoderCfg, ParamStore};
 
@@ -60,33 +60,9 @@ impl BertSession {
     /// Rejects a length that contradicts the config's plan and ids
     /// outside the vocabulary.
     pub fn set_tokens(&mut self, i: usize, tokens: &[i32]) -> Result<()> {
-        let want = self.session.cfg().plan[0];
-        if tokens.len() != want {
-            return Err(Error::Shape(format!(
-                "token sequence {i}: length {} != plan[0]={want}",
-                tokens.len())));
-        }
         let table = self.ps.mat_at(self.tok);
         let pos = self.ps.mat_at(self.pos);
-        for &t in tokens {
-            if t < 0 || t as usize >= table.rows {
-                return Err(Error::Shape(format!(
-                    "token sequence {i}: id {t} outside vocab of {}",
-                    table.rows)));
-            }
-        }
-        let dim = self.tcfg.dim;
-        let x = self.session.input_mut(i);
-        x.reshape(tokens.len(), dim);
-        for (r, &t) in tokens.iter().enumerate() {
-            let xr = x.row_mut(r);
-            let e = table.row(t as usize);
-            let p = pos.row(r);
-            for j in 0..dim {
-                xr[j] = e[j] + p[j];
-            }
-        }
-        Ok(())
+        self.session.set_tokens(i, tokens, table, pos)
     }
 
     /// Run encoder + classifier head over the current batch; logits land

@@ -1,33 +1,34 @@
 //! Image-text retrieval experiments (Figure 3 / Tables 2-3): recall vs
 //! FLOPs on synthetic caption pairs with the CPU reference CLIP.
+//!
+//! The sweep drives one engine [`JointSession`] per configuration
+//! (retrieval kind: both towers project into the shared embedding space
+//! through pooled buffers).  The legacy single-sample helpers remain as
+//! `#[deprecated]` references; the session path is bitwise-identical to
+//! them (`tests/prop_engine.rs`).
 
 use crate::config::ViTConfig;
 use crate::data::{caption_for, patchify, shape_item, Rng, TEST_SEED};
-use crate::engine::{Engine, VitSession};
+use crate::engine::{Engine, JointConfig};
 use crate::error::Result;
-use crate::model::text::{clip_text_embed, l2_normalize};
 use crate::model::flops;
+use crate::model::text::l2_normalize;
 use crate::tensor::{dense, matmul_nt, Mat};
 
 use super::recall_at_k;
 
-/// CLIP vision-tower embedding through a caller-owned session (the
-/// sweep reuses one session — and its pooled buffers — for every image).
-fn image_embed_with(sess: &mut VitSession, engine: &Engine, patches: &Mat,
-                    rng: &mut Rng) -> Result<Vec<f32>> {
+/// CLIP vision-tower embedding for one sample under a merge config —
+/// builds a transient session and copies the feature per call.
+#[deprecated(note = "drive a `crate::engine::JointSession` \
+                     (embed_pair_one / project) instead")]
+pub fn clip_image_embed(engine: &Engine, cfg: &ViTConfig, patches: &Mat,
+                        rng: &mut Rng) -> Result<Vec<f32>> {
+    let mut sess = engine.vit_session(cfg)?;
     let f = sess.features_one(patches, rng)?;
     let fm = Mat::from_vec(1, f.len(), f.to_vec());
     let mut e = dense(&fm, &engine.params().mat2("proj.img")?, None).data;
     l2_normalize(&mut e);
     Ok(e)
-}
-
-/// CLIP vision-tower embedding for one sample under a merge config
-/// (one-shot convenience over a transient session).
-pub fn clip_image_embed(engine: &Engine, cfg: &ViTConfig, patches: &Mat,
-                        rng: &mut Rng) -> Result<Vec<f32>> {
-    let mut sess = engine.vit_session(cfg)?;
-    image_embed_with(&mut sess, engine, patches, rng)
 }
 
 /// One retrieval result row.
@@ -60,19 +61,19 @@ pub fn eval_config(engine: &Engine, mode: &str, r: f64, n: usize)
     let embed_dim = 64usize;
     let mut img = Mat::zeros(n, embed_dim);
     let mut txt = Mat::zeros(n, embed_dim);
-    let ps = engine.params();
-    // one vision session for the whole config: pooled buffers serve all
-    // `n` images (the serial shared-RNG contract matches the historical
-    // per-sample `ViTModel::features` loop bitwise)
-    let mut sess = engine.vit_session(&vcfg)?;
+    // one joint session for the whole config: pooled tower slots and
+    // projection buffers serve all `n` (image, caption) pairs; the
+    // serial shared-RNG contract matches the historical per-sample
+    // `clip_image_embed` + `clip_text_embed` loop bitwise
+    let mut sess =
+        engine.joint_session(&JointConfig::retrieval(vcfg.clone()))?;
     for i in 0..n {
         let item = shape_item(TEST_SEED, i as u64);
         let patches = patchify(&item.image, vcfg.patch_size);
-        let ie = image_embed_with(&mut sess, engine, &patches, &mut rng)?;
-        img.row_mut(i).copy_from_slice(&ie);
         let cap = caption_for(TEST_SEED, i as u64);
-        let te = clip_text_embed(ps, &cap, 64, 2, 4, embed_dim, &mut rng)?;
-        txt.row_mut(i).copy_from_slice(&te);
+        let (ie, te) = sess.embed_pair_one(&patches, &cap, &mut rng)?;
+        img.row_mut(i).copy_from_slice(ie);
+        txt.row_mut(i).copy_from_slice(te);
     }
     let sim = matmul_nt(&img, &txt);
     let (rt, ri, rsum) = recall_at_k(&sim, &[1, 5, 10]);

@@ -1,8 +1,17 @@
 //! VQA experiments (Tables 4-5 / Figure 5): answer accuracy vs compression
 //! ratio with the synthetic VQA model (DESIGN.md §6 LLaVA stand-in).
+//!
+//! The sweep drives one engine [`JointSession`] per configuration (all
+//! configurations share the engine's weight-resolution cache): patches
+//! and question embed into pooled tower slots, and the answer head runs
+//! over a pooled concat buffer — no per-call `ViTModel` construction and
+//! no per-call joint-feature copy.  The legacy single-sample
+//! [`vqa_logits`] remains as a `#[deprecated]` reference; the session
+//! path is bitwise-identical to it (`tests/prop_engine.rs`).
 
 use crate::config::ViTConfig;
 use crate::data::{patchify, shape_item, vqa_item, Rng, TEST_SEED};
+use crate::engine::{Engine, JointConfig, JointSession};
 use crate::error::Result;
 use crate::merge::MergeMode;
 use crate::model::text::text_features;
@@ -24,7 +33,11 @@ pub struct VqaRow {
     pub visual_tokens: usize,
 }
 
-/// Answer logits for one (image, question) pair.
+/// Answer logits for one (image, question) pair — builds a fresh
+/// `ViTModel`, re-resolves weights, and copies the joint feature per
+/// call.
+#[deprecated(note = "drive a `crate::engine::JointSession` (vqa_one) \
+                     instead — pooled buffers, cached weight resolution")]
 pub fn vqa_logits(ps: &ParamStore, vcfg: &ViTConfig, patches: &Mat,
                   question: &[i32], rng: &mut Rng) -> Result<Vec<f32>> {
     let model = ViTModel::new(ps, vcfg.clone());
@@ -41,22 +54,19 @@ pub fn vqa_logits(ps: &ParamStore, vcfg: &ViTConfig, patches: &Mat,
     Ok(dense(&h, &ps.mat2("vqa.head.w")?, Some(ps.vec1("vqa.head.b")?)).data)
 }
 
-/// Evaluate one configuration over `n` test QA pairs.
-pub fn eval_config(ps: &ParamStore, mode: &str, r: f64, n: usize)
-                   -> Result<VqaRow> {
-    let vcfg = ViTConfig {
-        merge_mode: mode.into(),
-        merge_r: r,
-        ..Default::default()
-    };
+/// Evaluate one configuration over `n` test QA pairs through a caller's
+/// session (exposed so the sweep and the serving bench share one
+/// warm-session path).
+fn eval_with(sess: &mut JointSession, mode: &str, r: f64, n: usize,
+             vcfg: &ViTConfig) -> Result<VqaRow> {
     let mut rng = Rng::new(0x0A0A);
     let mut correct = 0usize;
     for i in 0..n {
         let item = shape_item(TEST_SEED, i as u64);
         let patches = patchify(&item.image, vcfg.patch_size);
         let (q, ans) = vqa_item(TEST_SEED, i as u64);
-        let lg = vqa_logits(ps, &vcfg, &patches, &q, &mut rng)?;
-        if argmax(&lg) == ans {
+        let lg = sess.vqa_one(&patches, &q, &mut rng)?;
+        if argmax(lg) == ans {
             correct += 1;
         }
     }
@@ -64,18 +74,34 @@ pub fn eval_config(ps: &ParamStore, mode: &str, r: f64, n: usize)
         mode: mode.into(),
         r,
         acc: 100.0 * correct as f64 / n as f64,
-        gflops: flops::vit_gflops(&vcfg),
+        gflops: flops::vit_gflops(vcfg),
         visual_tokens: *vcfg.plan().last().unwrap(),
     })
 }
 
-/// Sweep (Figure 5 / Table 4 rows).
-pub fn sweep(ps: &ParamStore, modes: &[&str], rs: &[f64], n: usize)
+/// Evaluate one configuration over `n` test QA pairs (one pooled
+/// [`JointSession`] serves every pair; the serial shared-RNG contract
+/// keeps results bitwise-identical to the deprecated per-sample path).
+pub fn eval_config(engine: &Engine, mode: &str, r: f64, n: usize)
+                   -> Result<VqaRow> {
+    let vcfg = ViTConfig {
+        merge_mode: mode.into(),
+        merge_r: r,
+        ..Default::default()
+    };
+    let mut sess = engine.joint_session(&JointConfig::vqa(vcfg.clone()))?;
+    eval_with(&mut sess, mode, r, n, &vcfg)
+}
+
+/// Sweep (Figure 5 / Table 4 rows).  Every configuration shares the
+/// engine's weight-resolution cache, so the question tower and answer
+/// head resolve once for the whole sweep.
+pub fn sweep(engine: &Engine, modes: &[&str], rs: &[f64], n: usize)
              -> Result<Vec<VqaRow>> {
-    let mut rows = vec![eval_config(ps, "none", 1.0, n)?];
+    let mut rows = vec![eval_config(engine, "none", 1.0, n)?];
     for &mode in modes {
         for &r in rs {
-            rows.push(eval_config(ps, mode, r, n)?);
+            rows.push(eval_config(engine, mode, r, n)?);
         }
     }
     Ok(rows)

@@ -12,8 +12,10 @@ use std::path::PathBuf;
 use std::sync::Arc;
 
 use pitome::config::{ServingConfig, ViTConfig};
-use pitome::coordinator::{Coordinator, Qos};
-use pitome::data::{generate_trace, patchify, shape_item, TraceConfig, TEST_SEED};
+use pitome::coordinator::{Coordinator, CpuWorkloads, Payload, Qos, Workload};
+use pitome::data::{generate_trace, patchify, sent_item, shape_item,
+                   vqa_item, TraceConfig, TEST_SEED};
+use pitome::engine::JointKind;
 use pitome::eval;
 use pitome::model::load_model_params;
 use pitome::runtime::{HostTensor, Registry};
@@ -95,6 +97,11 @@ fn spectral(steps: usize, k: usize) {
 }
 
 fn serve(dir: &PathBuf, requests: usize, rate: f64) -> anyhow::Result<()> {
+    // mixed-workload traffic (vision + text + joint through the typed
+    // router) is available when the store covers every tower — i.e. the
+    // synthetic multimodal fallback; trained vit-only params serve the
+    // vision workload alone
+    let mut mixed = false;
     let coord = match Registry::load(dir) {
         Ok(reg) => {
             let selection = [("vit", vec!["vit_none_b8".to_string(),
@@ -107,46 +114,84 @@ fn serve(dir: &PathBuf, requests: usize, rate: f64) -> anyhow::Result<()> {
             // no artifacts: serve the pure-Rust CPU reference model
             // instead (trained weights if present, synthetic otherwise)
             println!("(no artifact registry: {e})");
-            println!("(serving the CPU reference model via boot_cpu)");
-            let ps = Arc::new(match load_model_params(dir, "vit") {
+            println!("(serving the CPU reference model via the typed router)");
+            let cfg = ServingConfig {
+                workers: pitome::merge::batch::recommended_workers(),
+                ..Default::default()
+            };
+            match load_model_params(dir, "vit") {
                 Ok(ps) => {
                     println!("(using trained vit params from {})", dir.display());
-                    ps
+                    let selection = [("vit", vec![("none".to_string(), 1.0),
+                                                  ("pitome".to_string(), 0.9)])];
+                    Arc::new(Coordinator::boot_cpu(&Arc::new(ps), &selection,
+                                                   cfg)
+                        .map_err(|e| anyhow::anyhow!("{e}"))?)
                 }
                 Err(e) => {
                     // make the degraded mode loud: predictions from
                     // synthetic weights are deterministic but untrained
                     println!("(vit params unavailable: {e})");
-                    println!("(falling back to SYNTHETIC weights — \
-                              predictions are untrained)");
-                    pitome::model::synthetic_vit_store(&ViTConfig::default(), 7)
+                    println!("(falling back to SYNTHETIC multimodal weights \
+                              — serving mixed vision/text/joint traffic)");
+                    mixed = true;
+                    let ps = Arc::new(pitome::model::synthetic_mm_store(
+                        &ViTConfig::default(), 7));
+                    let workloads = CpuWorkloads {
+                        vision: vec![("vit".to_string(),
+                                      vec![("none".to_string(), 1.0),
+                                           ("pitome".to_string(), 0.9)])],
+                        text: vec![("bert".to_string(),
+                                    vec![("none".to_string(), 1.0)])],
+                        joint: vec![("vqa".to_string(), JointKind::Vqa,
+                                     vec![("pitome".to_string(), 0.9)])],
+                    };
+                    Arc::new(Coordinator::boot_cpu_workloads(&ps, &workloads,
+                                                             cfg)
+                        .map_err(|e| anyhow::anyhow!("{e}"))?)
                 }
-            });
-            let selection = [("vit", vec![("none".to_string(), 1.0),
-                                          ("pitome".to_string(), 0.9)])];
-            let cfg = ServingConfig {
-                workers: pitome::merge::batch::recommended_workers(),
-                ..Default::default()
-            };
-            Arc::new(Coordinator::boot_cpu(&ps, &selection, cfg)
-                .map_err(|e| anyhow::anyhow!("{e}"))?)
+            }
         }
     };
 
     let trace = generate_trace(&TraceConfig {
         rate, count: requests, ..Default::default()
     });
+    let pool = coord.pool().clone();
+    let tcfg = pitome::config::TextConfig::default();
     let t0 = std::time::Instant::now();
     let mut pending = Vec::new();
-    for ev in trace {
+    for (i, ev) in trace.iter().enumerate() {
         let target = std::time::Duration::from_micros(ev.at_us);
         if let Some(wait) = target.checked_sub(t0.elapsed()) {
             std::thread::sleep(wait);
         }
-        let item = shape_item(TEST_SEED, ev.item);
-        let patches = patchify(&item.image, 4);
-        match coord.submit_nowait("vit", Qos::Balanced,
-                                  vec![HostTensor::F32(patches.data, vec![64, 16])]) {
+        // every 4th/5th request exercises the text/joint pools when the
+        // coordinator serves them
+        let submitted = if mixed && i % 5 == 3 {
+            let (toks, _) = sent_item(TEST_SEED, ev.item, tcfg.seq_len, 16);
+            let mut tt = pool.take_i32(toks.len());
+            tt.fill_i32(&toks, &[toks.len()]);
+            coord.submit_typed(Workload::Text, "bert", Qos::Accuracy,
+                               Payload::Text(tt))
+        } else if mixed && i % 5 == 4 {
+            let item = shape_item(TEST_SEED, ev.item);
+            let patches = patchify(&item.image, 4);
+            let (q, _) = vqa_item(TEST_SEED, ev.item);
+            let mut vt = pool.take_f32(patches.data.len());
+            vt.fill_f32(&patches.data, &[patches.rows, patches.cols]);
+            let mut qt = pool.take_i32(q.len());
+            qt.fill_i32(&q, &[q.len()]);
+            coord.submit_typed(Workload::Joint, "vqa", Qos::Throughput,
+                               Payload::Joint { vision: vt, text: qt })
+        } else {
+            let item = shape_item(TEST_SEED, ev.item);
+            let patches = patchify(&item.image, 4);
+            coord.submit_nowait("vit", Qos::Balanced,
+                                vec![HostTensor::F32(patches.data,
+                                                     vec![64, 16])])
+        };
+        match submitted {
             Ok(rx) => pending.push(rx),
             Err(e) => eprintln!("submit failed: {e}"),
         }
@@ -160,10 +205,14 @@ fn serve(dir: &PathBuf, requests: usize, rate: f64) -> anyhow::Result<()> {
     let dur = t0.elapsed().as_secs_f64();
     println!("served {ok}/{requests} in {dur:.2}s ({:.1} req/s)",
              ok as f64 / dur);
-    for (model, artifact, snap) in coord.metrics() {
-        println!("  {model}/{artifact}: n={} mean={:.0}us p50={}us p99={}us mean_batch={:.2}",
-                 snap.count, snap.mean_us, snap.p50_us, snap.p99_us,
-                 snap.mean_batch);
+    for (w, model, artifact, snap) in coord.metrics_typed() {
+        println!("  {}/{model}/{artifact}: n={} mean={:.0}us p50={}us \
+                  p99={}us mean_batch={:.2}",
+                 w.name(), snap.count, snap.mean_us, snap.p50_us,
+                 snap.p99_us, snap.mean_batch);
+    }
+    if mixed {
+        println!("  recycle hit rate: {}", pool.hit_rate_summary());
     }
     Ok(())
 }

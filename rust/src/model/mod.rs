@@ -20,8 +20,9 @@ pub use encoder::{attention, attention_into, encoder_forward,
                   encoder_layers, EncoderCfg, EncoderScratch,
                   ResolvedEncoder, ScratchPool, SeqSlot};
 pub use flops::{block_flops, encoder_flops, flops_speedup, vit_gflops};
-pub use params::{synthetic_vit_store, MatSpan, ParamEntry, ParamStore,
-                 VecSpan};
+pub use params::{synthetic_bert_store, synthetic_mm_store,
+                 synthetic_vit_store, MatSpan, ParamEntry, ParamStore,
+                 VecSpan, MM_TEXT_DEPTH, MM_TEXT_DIM, MM_VQA_HIDDEN};
 #[allow(deprecated)]
 pub use text::{bert_logits_batch, bert_logits_batch_pooled};
 pub use text::{bert_logits, clip_text_embed, embed_tokens, text_features};

@@ -7,7 +7,7 @@
 use std::collections::HashMap;
 use std::path::Path;
 
-use crate::config::ViTConfig;
+use crate::config::{TextConfig, ViTConfig};
 use crate::data::Rng;
 use crate::error::{Error, Result};
 use crate::tensor::{Mat, MatRef};
@@ -243,24 +243,13 @@ impl StoreBuilder {
     }
 }
 
-/// Build a randomly-initialized [`ParamStore`] covering every tensor the
-/// CPU reference ViT needs (`vit.embed` / `vit.cls` / `vit.pos` /
-/// per-block weights / `vit.lnf` / `vit.head`).
-///
-/// The weights are untrained — predictions are arbitrary but fully
-/// deterministic in `seed` — which is exactly what encoder-parity tests,
-/// merge benches, and artifact-free CPU serving need.
-pub fn synthetic_vit_store(cfg: &ViTConfig, seed: u64) -> ParamStore {
-    let dim = cfg.dim;
-    let hidden = cfg.mlp_hidden();
+/// Push one transformer block's tensors under `prefix` (shared by the
+/// ViT and every text tower — same naming scheme as `python/compile`).
+fn push_blocks(b: &mut StoreBuilder, prefix: &str, dim: usize,
+               hidden: usize, depth: usize) {
     let scale = 1.0 / (dim as f32).sqrt();
-    let mut b = StoreBuilder::new(seed);
-    b.randn_scaled("vit.embed.w", &[cfg.patch_dim(), dim], scale);
-    b.constant("vit.embed.b", &[dim], 0.0);
-    b.randn_scaled("vit.cls", &[dim], scale);
-    b.randn_scaled("vit.pos", &[cfg.n_tokens(), dim], 0.02);
-    for l in 0..cfg.depth {
-        let p = format!("vit.blk{l}.");
+    for l in 0..depth {
+        let p = format!("{prefix}blk{l}.");
         b.constant(&format!("{p}ln1.w"), &[dim], 1.0);
         b.constant(&format!("{p}ln1.b"), &[dim], 0.0);
         b.randn_scaled(&format!("{p}wq"), &[dim, dim], scale);
@@ -276,10 +265,115 @@ pub fn synthetic_vit_store(cfg: &ViTConfig, seed: u64) -> ParamStore {
                        1.0 / (hidden as f32).sqrt());
         b.constant(&format!("{p}mlp2b"), &[dim], 0.0);
     }
-    b.constant("vit.lnf.w", &[dim], 1.0);
-    b.constant("vit.lnf.b", &[dim], 0.0);
+    b.constant(&format!("{prefix}lnf.w"), &[dim], 1.0);
+    b.constant(&format!("{prefix}lnf.b"), &[dim], 0.0);
+}
+
+/// Push every ViT tensor (embed / cls / pos / blocks / lnf / head).
+fn push_vit(b: &mut StoreBuilder, cfg: &ViTConfig) {
+    let dim = cfg.dim;
+    let scale = 1.0 / (dim as f32).sqrt();
+    b.randn_scaled("vit.embed.w", &[cfg.patch_dim(), dim], scale);
+    b.constant("vit.embed.b", &[dim], 0.0);
+    b.randn_scaled("vit.cls", &[dim], scale);
+    b.randn_scaled("vit.pos", &[cfg.n_tokens(), dim], 0.02);
+    push_blocks(b, "vit.", dim, cfg.mlp_hidden(), cfg.depth);
     b.randn_scaled("vit.head.w", &[dim, cfg.num_classes], scale);
     b.constant("vit.head.b", &[cfg.num_classes], 0.0);
+}
+
+/// Push a text-encoder tower under `prefix` (tok / pos / blocks / lnf —
+/// mirror of `python/compile/model.py::init_text_encoder`).
+fn push_text_encoder(b: &mut StoreBuilder, prefix: &str, vocab: usize,
+                     n_tokens: usize, dim: usize, hidden: usize,
+                     depth: usize) {
+    b.randn_scaled(&format!("{prefix}tok"), &[vocab, dim], 0.02);
+    b.randn_scaled(&format!("{prefix}pos"), &[n_tokens, dim], 0.02);
+    push_blocks(b, prefix, dim, hidden, depth);
+}
+
+/// Build a randomly-initialized [`ParamStore`] covering every tensor the
+/// CPU reference ViT needs (`vit.embed` / `vit.cls` / `vit.pos` /
+/// per-block weights / `vit.lnf` / `vit.head`).
+///
+/// The weights are untrained — predictions are arbitrary but fully
+/// deterministic in `seed` — which is exactly what encoder-parity tests,
+/// merge benches, and artifact-free CPU serving need.
+pub fn synthetic_vit_store(cfg: &ViTConfig, seed: u64) -> ParamStore {
+    let mut b = StoreBuilder::new(seed);
+    push_vit(&mut b, cfg);
+    b.finish()
+}
+
+/// Push the BERT classifier (text tower + head) a [`TextConfig`] names.
+fn push_bert(b: &mut StoreBuilder, cfg: &TextConfig) {
+    let dim = cfg.dim;
+    let hidden = (dim as f64 * cfg.mlp_ratio) as usize;
+    push_text_encoder(b, "bert.", cfg.vocab_size, cfg.n_tokens(), dim,
+                      hidden, cfg.depth);
+    b.randn_scaled("bert.head.w", &[dim, cfg.num_classes],
+                   1.0 / (dim as f32).sqrt());
+    b.constant("bert.head.b", &[cfg.num_classes], 0.0);
+}
+
+/// Build a randomly-initialized [`ParamStore`] covering every tensor the
+/// BERT-style text classifier path names (`bert.tok` / `bert.pos` /
+/// per-block weights / `bert.lnf` / `bert.head`) — the text counterpart
+/// of [`synthetic_vit_store`].
+pub fn synthetic_bert_store(cfg: &TextConfig, seed: u64) -> ParamStore {
+    let mut b = StoreBuilder::new(seed);
+    push_bert(&mut b, cfg);
+    b.finish()
+}
+
+/// Hidden width of the synthetic joint VQA head (mirror of
+/// `python/compile/vqa.py`: `vqa.fc1` maps the concatenated
+/// vision+question feature to 128 units before the answer head).
+pub const MM_VQA_HIDDEN: usize = 128;
+/// Embedding/text-tower width of the synthetic multimodal towers
+/// (mirror of `clip.py::ClipConfig` / `vqa.py::VqaConfig`: text_dim =
+/// embed_dim = 64, text_depth = 2, MLP hidden = text_dim * 2).
+pub const MM_TEXT_DIM: usize = 64;
+/// Depth of the synthetic multimodal text towers.
+pub const MM_TEXT_DEPTH: usize = 2;
+
+/// Build a randomly-initialized [`ParamStore`] covering the **whole
+/// multimodal serving surface** in one store: the ViT vision tower
+/// (`vit.*`, including the classifier head), the BERT classifier
+/// (`bert.*` at [`TextConfig::default`] shapes), the CLIP caption tower
+/// + projections (`txt.*`, `proj.img`, `proj.txt`), and the VQA question
+/// tower + answer head (`q.*`, `vqa.fc1[b]`, `vqa.head.{w,b}`).
+///
+/// Tower hyperparameters mirror `python/compile/{clip,vqa}.py` (text
+/// dim 64, depth 2, heads 4, MLP hidden 128, caption/question length
+/// `CAP_LEN + 1`, vocab `VOCAB`), so the store drives every eval path
+/// and the mixed-workload coordinator without `make artifacts`.  The
+/// `vit.*` tensors are generated first from the same RNG stream, so they
+/// are bit-identical to `synthetic_vit_store(cfg, seed)`.
+pub fn synthetic_mm_store(cfg: &ViTConfig, seed: u64) -> ParamStore {
+    use crate::data::{CAP_LEN, N_ANSWERS, VOCAB};
+    let tdim = MM_TEXT_DIM;
+    let tscale = 1.0 / (tdim as f32).sqrt();
+    let mut b = StoreBuilder::new(seed);
+    push_vit(&mut b, cfg);
+    // BERT classifier tower at the default text-config shapes
+    push_bert(&mut b, &TextConfig::default());
+    // CLIP caption tower + shared-embedding projections
+    push_text_encoder(&mut b, "txt.", VOCAB, CAP_LEN + 1, tdim, tdim * 2,
+                      MM_TEXT_DEPTH);
+    b.randn_scaled("proj.img", &[cfg.dim, tdim],
+                   1.0 / (cfg.dim as f32).sqrt());
+    b.randn_scaled("proj.txt", &[tdim, tdim], tscale);
+    // VQA question tower + joint answer head
+    push_text_encoder(&mut b, "q.", VOCAB, CAP_LEN + 1, tdim, tdim * 2,
+                      MM_TEXT_DEPTH);
+    let joint = cfg.dim + tdim;
+    b.randn_scaled("vqa.fc1", &[joint, MM_VQA_HIDDEN],
+                   1.0 / (joint as f32).sqrt());
+    b.constant("vqa.fc1b", &[MM_VQA_HIDDEN], 0.0);
+    b.randn_scaled("vqa.head.w", &[MM_VQA_HIDDEN, N_ANSWERS],
+                   1.0 / (MM_VQA_HIDDEN as f32).sqrt());
+    b.constant("vqa.head.b", &[N_ANSWERS], 0.0);
     b.finish()
 }
 
@@ -339,5 +433,46 @@ mod tests {
         // deterministic in seed
         let s2 = synthetic_vit_store(&cfg, 1);
         assert_eq!(s.flat, s2.flat);
+    }
+
+    #[test]
+    fn synthetic_bert_store_covers_text_tensors() {
+        let cfg = crate::config::TextConfig::default();
+        let s = synthetic_bert_store(&cfg, 2);
+        assert_eq!(s.mat2("bert.tok").unwrap().rows, cfg.vocab_size);
+        assert_eq!(s.mat2("bert.pos").unwrap().rows, cfg.n_tokens());
+        for l in 0..cfg.depth {
+            assert_eq!(s.mat2(&format!("bert.blk{l}.wq")).unwrap().cols,
+                       cfg.dim);
+        }
+        assert_eq!(s.vec1("bert.lnf.w").unwrap().len(), cfg.dim);
+        assert_eq!(s.mat2("bert.head.w").unwrap().cols, cfg.num_classes);
+    }
+
+    #[test]
+    fn synthetic_mm_store_covers_all_towers() {
+        use crate::data::{CAP_LEN, N_ANSWERS, VOCAB};
+        let cfg = ViTConfig::default();
+        let s = synthetic_mm_store(&cfg, 3);
+        // vit prefix is bit-identical to the vision-only store
+        let vit = synthetic_vit_store(&cfg, 3);
+        assert_eq!(&s.flat[..vit.flat.len()], &vit.flat[..]);
+        assert_eq!(s.slice("vit.head.b").unwrap(),
+                   vit.slice("vit.head.b").unwrap());
+        // clip tower + projections
+        assert_eq!(s.mat2("txt.tok").unwrap().rows, VOCAB);
+        assert_eq!(s.mat2("txt.pos").unwrap().rows, CAP_LEN + 1);
+        assert_eq!(s.mat2("proj.img").unwrap().rows, cfg.dim);
+        assert_eq!(s.mat2("proj.txt").unwrap().cols, MM_TEXT_DIM);
+        // vqa tower + joint head
+        assert_eq!(s.mat2(&format!("q.blk{}.mlp1", MM_TEXT_DEPTH - 1))
+                       .unwrap().cols, MM_TEXT_DIM * 2);
+        assert_eq!(s.mat2("vqa.fc1").unwrap().rows, cfg.dim + MM_TEXT_DIM);
+        assert_eq!(s.mat2("vqa.head.w").unwrap().cols, N_ANSWERS);
+        assert_eq!(s.vec1("vqa.head.b").unwrap().len(), N_ANSWERS);
+        // bert classifier at default text shapes
+        let tcfg = crate::config::TextConfig::default();
+        assert_eq!(s.mat2("bert.tok").unwrap().rows, tcfg.vocab_size);
+        assert_eq!(s.mat2("bert.head.w").unwrap().cols, tcfg.num_classes);
     }
 }

@@ -34,6 +34,15 @@ impl HostTensor {
         }
     }
 
+    /// i32 payload or error (token-id inputs on the text/joint serving
+    /// paths).
+    pub fn as_i32(&self) -> Result<&[i32]> {
+        match self {
+            HostTensor::I32(d, _) => Ok(d),
+            HostTensor::F32(..) => Err(Error::Shape("expected i32 tensor".into())),
+        }
+    }
+
     fn to_literal(&self) -> Result<xla::Literal> {
         let dims: Vec<i64> = self.shape().iter().map(|&d| d as i64).collect();
         let lit = match self {

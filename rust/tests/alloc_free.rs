@@ -13,18 +13,25 @@
 //!   allocation-free, and a warmed CPU serving worker booted through
 //!   `Coordinator::boot_cpu` must report a **zero-allocation inference
 //!   region** for a complete request→response cycle (tracked per batch
-//!   in `Snapshot::last_infer_allocs`; only the owned response tensors
-//!   that cross the submitter's channel sit outside the guarantee).
+//!   in `Snapshot::last_infer_allocs`).
+//! * The transport boundary is no longer exempt: a warmed **joint**
+//!   (patches, question)→answer-logits request through
+//!   `Coordinator::boot_cpu_workloads` — pooled inputs, bounded channel,
+//!   recycled response buffer, release-on-drop — must allocate **zero**
+//!   on the submitter thread and across the worker's whole batch cycle
+//!   (`Snapshot::last_cycle_allocs`).
 //! * A warmed `iterative_coarsen_scratch` SD-sweep workspace must also
 //!   run allocation-free for every coarsening algorithm, and a warmed
 //!   [`EigScratch`] must evaluate the full SD(G, Gc) spectral distance —
 //!   coarsen, lift, Laplacians, eigensolves — without allocating.
 
 use std::sync::Arc;
+use std::time::Duration;
 
 use pitome::config::{ServingConfig, ViTConfig};
-use pitome::coordinator::{Coordinator, Qos};
+use pitome::coordinator::{Coordinator, CpuWorkloads, Payload, Qos, Workload};
 use pitome::data::Rng;
+use pitome::engine::JointKind;
 use pitome::engine::Engine;
 use pitome::eval::spectral::{clustered_tokens, iterative_coarsen_scratch,
                              ClusterSpec, CoarsenAlgo, CoarsenScratch,
@@ -32,8 +39,9 @@ use pitome::eval::spectral::{clustered_tokens, iterative_coarsen_scratch,
 use pitome::graph::{spectral_distance_scratch, token_graph, EigScratch,
                     Partition};
 use pitome::merge::MergeMode;
-use pitome::model::{encoder_layers, synthetic_vit_store, EncoderCfg,
-                    EncoderScratch, ResolvedEncoder};
+use pitome::model::{encoder_layers, synthetic_mm_store,
+                    synthetic_vit_store, EncoderCfg, EncoderScratch,
+                    ResolvedEncoder};
 use pitome::runtime::HostTensor;
 use pitome::tensor::Mat;
 use pitome::util::alloc::{allocs_this_thread, CountingAllocator};
@@ -222,6 +230,80 @@ fn warmed_cpu_serving_request_cycle_is_allocation_free() {
                "steady-state serving request allocated {} times in the \
                 inference region",
                snap.last_infer_allocs);
+}
+
+#[test]
+fn warmed_joint_request_cycle_is_allocation_free_including_transport() {
+    // the multimodal tentpole acceptance: a warmed joint
+    // (patches, question) → answer-logits request allocates ZERO —
+    // including the response transport that PR 4 documented as the one
+    // remaining per-request allocation.  Pooled input tensors are
+    // checked out of the coordinator's recycling pool, the request rides
+    // a bounded channel, the worker answers from a recycled buffer into
+    // the client's reusable ResponseSlot, and dropping the response
+    // releases everything back.  Measured on both sides: the submitter
+    // thread directly, the worker thread via
+    // Snapshot::{last_infer_allocs,last_cycle_allocs}.
+    let ps = Arc::new(synthetic_mm_store(&ViTConfig::default(), 7));
+    let workloads = CpuWorkloads {
+        joint: vec![("vqa".to_string(), JointKind::Vqa,
+                     vec![("pitome".to_string(), 0.9)])],
+        ..Default::default()
+    };
+    let cfg = ServingConfig { workers: 1, ..Default::default() };
+    let coord =
+        Coordinator::boot_cpu_workloads(&ps, &workloads, cfg).unwrap();
+    let pool = coord.pool().clone();
+    let slot = coord.response_slot();
+    let item = pitome::data::shape_item(pitome::data::TEST_SEED, 0);
+    let patches = pitome::data::patchify(&item.image, 4);
+    let (question, _) = pitome::data::vqa_item(pitome::data::TEST_SEED, 0);
+
+    let cycle = || {
+        let mut vt = pool.take_f32(patches.data.len());
+        vt.fill_f32(&patches.data, &[patches.rows, patches.cols]);
+        let mut qt = pool.take_i32(question.len());
+        qt.fill_i32(&question, &[question.len()]);
+        coord.submit_pooled(Workload::Joint, "vqa", Qos::Throughput,
+                            Payload::Joint { vision: vt, text: qt }, &slot)
+            .unwrap();
+        let resp = slot.recv().unwrap();
+        assert_eq!(resp.outputs[0].as_f32().unwrap().len(),
+                   pitome::data::N_ANSWERS);
+        // dropping `resp` returns the logits buffer to the pool
+    };
+    // generous warm-up: session pools grow, freelists stock every buffer
+    // size, channel/parking internals finish their lazy init
+    for _ in 0..8 {
+        cycle();
+    }
+    // let the worker finish recycling the last request's input tensors
+    std::thread::sleep(Duration::from_millis(50));
+
+    let before = allocs_this_thread();
+    cycle();
+    let allocs = allocs_this_thread() - before;
+    assert_eq!(allocs, 0,
+               "submitter-side joint request→response→release cycle \
+                allocated {allocs} times");
+
+    // worker side: the metrics land after the respond loop, so give the
+    // worker a beat before reading them
+    std::thread::sleep(Duration::from_millis(50));
+    let typed = coord.metrics_typed();
+    assert_eq!(typed.len(), 1);
+    let (w, _, _, snap) = &typed[0];
+    assert_eq!(*w, Workload::Joint);
+    assert_eq!(snap.count, 9);
+    assert_eq!(snap.last_infer_allocs, 0,
+               "joint worker inference region allocated {} times",
+               snap.last_infer_allocs);
+    assert_eq!(snap.last_cycle_allocs, 0,
+               "joint worker batch cycle (transport included) allocated \
+                {} times",
+               snap.last_cycle_allocs);
+    assert!(snap.resp_recycled > 0,
+            "steady-state responses must reuse recycled buffers");
 }
 
 #[test]

@@ -7,11 +7,11 @@
 
 use std::sync::Arc;
 
-use pitome::config::{ServingConfig, ViTConfig};
-use pitome::coordinator::{Coordinator, Qos};
-use pitome::data::{patchify, shape_item, TEST_SEED};
-use pitome::engine::Engine;
-use pitome::model::synthetic_vit_store;
+use pitome::config::{ServingConfig, TextConfig, ViTConfig};
+use pitome::coordinator::{Coordinator, CpuWorkloads, Payload, Qos, Workload};
+use pitome::data::{patchify, sent_item, shape_item, vqa_item, TEST_SEED};
+use pitome::engine::{Engine, JointConfig, JointKind};
+use pitome::model::{synthetic_mm_store, synthetic_vit_store};
 use pitome::runtime::HostTensor;
 use pitome::tensor::argmax;
 
@@ -79,6 +79,242 @@ fn cpu_coordinator_matches_direct_model() {
     assert_eq!(metrics.len(), 2);
     let total: u64 = metrics.iter().map(|(_, _, s)| s.count).sum();
     assert_eq!(total, n + 1);
+}
+
+#[test]
+fn mixed_workload_traffic_routes_fairly_with_per_workload_metrics() {
+    // one coordinator, three workload pools over one engine + one
+    // recycling pool; interleaved Vision/Text/Joint requests must each
+    // reach their own pool, answer correctly against direct session
+    // evaluation, and show up in their own per-workload metrics
+    let vcfg = ViTConfig { merge_mode: "pitome".into(), merge_r: 0.9,
+                           ..Default::default() };
+    let ps = Arc::new(synthetic_mm_store(&ViTConfig::default(), 7));
+    let workloads = CpuWorkloads {
+        vision: vec![("vit".to_string(),
+                      vec![("pitome".to_string(), 0.9)])],
+        text: vec![("bert".to_string(), vec![("none".to_string(), 1.0)])],
+        joint: vec![("vqa".to_string(), JointKind::Vqa,
+                     vec![("pitome".to_string(), 0.9)])],
+    };
+    let coord = Coordinator::boot_cpu_workloads(
+        &ps, &workloads, ServingConfig::default()).unwrap();
+    let pool = coord.pool().clone();
+    let tcfg = TextConfig { merge_mode: "none".into(), merge_r: 1.0,
+                            ..Default::default() };
+
+    // direct references (deterministic modes, so worker batching
+    // composition cannot change the results)
+    let engine = Engine::new(ps.clone());
+    let n = 6u64;
+    let mut want_vis = Vec::new();
+    let mut want_txt = Vec::new();
+    let mut want_ans = Vec::new();
+    {
+        let mut vs = engine.vit_session(&vcfg).unwrap();
+        let mut bs = engine.bert_session(&tcfg).unwrap();
+        let mut js =
+            engine.joint_session(&JointConfig::vqa(vcfg.clone())).unwrap();
+        for i in 0..n {
+            let item = shape_item(TEST_SEED, i);
+            let patches = patchify(&item.image, 4);
+            vs.begin(1);
+            vs.set_patches(0, &patches).unwrap();
+            vs.forward(0).unwrap();
+            want_vis.push(vs.predict(0));
+            let (toks, _) = sent_item(TEST_SEED, i, tcfg.seq_len, 16);
+            bs.begin(1);
+            bs.set_tokens(0, &toks).unwrap();
+            bs.forward(0).unwrap();
+            want_txt.push(bs.predict(0));
+            let (q, _) = vqa_item(TEST_SEED, i);
+            js.begin(1, 1);
+            js.set_patches(0, &patches).unwrap();
+            js.set_text(0, &q).unwrap();
+            js.forward(0).unwrap();
+            js.fuse_vqa(&[(0, 0)]).unwrap();
+            want_ans.push(js.answer(0));
+        }
+    }
+
+    // interleaved burst across the three pools
+    let mut rxs = Vec::new();
+    for i in 0..n {
+        let item = shape_item(TEST_SEED, i);
+        let patches = patchify(&item.image, 4);
+        let (toks, _) = sent_item(TEST_SEED, i, tcfg.seq_len, 16);
+        let (q, _) = vqa_item(TEST_SEED, i);
+        let mut vt = pool.take_f32(patches.data.len());
+        vt.fill_f32(&patches.data, &[patches.rows, patches.cols]);
+        rxs.push((Workload::Vision,
+                  coord.submit_typed(Workload::Vision, "vit",
+                                     Qos::Throughput, Payload::Vision(vt))
+                      .unwrap()));
+        let mut tt = pool.take_i32(toks.len());
+        tt.fill_i32(&toks, &[toks.len()]);
+        rxs.push((Workload::Text,
+                  coord.submit_typed(Workload::Text, "bert",
+                                     Qos::Throughput, Payload::Text(tt))
+                      .unwrap()));
+        let mut jv = pool.take_f32(patches.data.len());
+        jv.fill_f32(&patches.data, &[patches.rows, patches.cols]);
+        let mut jq = pool.take_i32(q.len());
+        jq.fill_i32(&q, &[q.len()]);
+        rxs.push((Workload::Joint,
+                  coord.submit_typed(Workload::Joint, "vqa",
+                                     Qos::Throughput,
+                                     Payload::Joint { vision: jv, text: jq })
+                      .unwrap()));
+    }
+    let (mut vi, mut ti, mut ji) = (0usize, 0usize, 0usize);
+    for (w, rx) in rxs {
+        let resp = rx.recv().expect("worker answered");
+        let logits = resp.outputs[0].as_f32().unwrap();
+        match w {
+            Workload::Vision => {
+                assert_eq!(argmax(logits), want_vis[vi],
+                           "vision request {vi} diverged");
+                vi += 1;
+            }
+            Workload::Text => {
+                assert_eq!(logits.len(), tcfg.num_classes);
+                assert_eq!(argmax(logits), want_txt[ti],
+                           "text request {ti} diverged");
+                ti += 1;
+            }
+            Workload::Joint => {
+                assert_eq!(logits.len(), pitome::data::N_ANSWERS);
+                assert_eq!(argmax(logits), want_ans[ji],
+                           "joint request {ji} diverged");
+                ji += 1;
+            }
+        }
+    }
+    assert_eq!((vi, ti, ji), (n as usize, n as usize, n as usize));
+
+    // routing fairness: every workload pool saw exactly its n requests,
+    // and the per-workload metrics expose them separately
+    let typed = coord.metrics_typed();
+    assert_eq!(typed.len(), 3);
+    for (w, model, _artifact, snap) in &typed {
+        assert_eq!(snap.count, n, "{} pool ({model}) count", w.name());
+        assert!(snap.mean_batch >= 1.0);
+    }
+    assert_eq!(typed.iter().filter(|(w, ..)| *w == Workload::Vision).count(),
+               1);
+    assert_eq!(typed.iter().filter(|(w, ..)| *w == Workload::Text).count(),
+               1);
+    assert_eq!(typed.iter().filter(|(w, ..)| *w == Workload::Joint).count(),
+               1);
+    // responses recycled buffers from the shared pool
+    let (recycled, _fresh) = pool.stats();
+    assert!(recycled > 0, "no response/request buffer was ever recycled");
+}
+
+#[test]
+fn joint_worker_splits_ragged_mixed_batches() {
+    // vision-only and text-only singles ride the joint pool next to full
+    // pairs: the splitter must size the halves independently and answer
+    // singles with their tower features
+    let vcfg = ViTConfig { merge_mode: "pitome".into(), merge_r: 0.9,
+                           ..Default::default() };
+    let ps = Arc::new(synthetic_mm_store(&ViTConfig::default(), 7));
+    let workloads = CpuWorkloads {
+        joint: vec![("vqa".to_string(), JointKind::Vqa,
+                     vec![("pitome".to_string(), 0.9)])],
+        ..Default::default()
+    };
+    let coord = Coordinator::boot_cpu_workloads(
+        &ps, &workloads, ServingConfig::default()).unwrap();
+    let pool = coord.pool().clone();
+
+    let item = shape_item(TEST_SEED, 1);
+    let patches = patchify(&item.image, 4);
+    let (q, _) = vqa_item(TEST_SEED, 1);
+
+    // direct references
+    let engine = Engine::new(ps.clone());
+    let mut js =
+        engine.joint_session(&JointConfig::vqa(vcfg.clone())).unwrap();
+    js.begin(1, 1);
+    js.set_patches(0, &patches).unwrap();
+    js.set_text(0, &q).unwrap();
+    js.forward(0).unwrap();
+    js.fuse_vqa(&[(0, 0)]).unwrap();
+    let want_ans = js.answer_logits(0).to_vec();
+    let want_vf = js.image_feature(0).to_vec();
+    let want_tf = js.text_feature(0).to_vec();
+
+    // burst: pair + vision-only + text-only into the same joint queue
+    let mut jv = pool.take_f32(patches.data.len());
+    jv.fill_f32(&patches.data, &[patches.rows, patches.cols]);
+    let mut jq = pool.take_i32(q.len());
+    jq.fill_i32(&q, &[q.len()]);
+    let rx_pair = coord.submit_typed(Workload::Joint, "vqa", Qos::Throughput,
+                                     Payload::Joint { vision: jv, text: jq })
+        .unwrap();
+    let mut v = pool.take_f32(patches.data.len());
+    v.fill_f32(&patches.data, &[patches.rows, patches.cols]);
+    let rx_vis = coord.submit_typed(Workload::Joint, "vqa", Qos::Throughput,
+                                    Payload::Vision(v)).unwrap();
+    let mut t = pool.take_i32(q.len());
+    t.fill_i32(&q, &[q.len()]);
+    let rx_txt = coord.submit_typed(Workload::Joint, "vqa", Qos::Throughput,
+                                    Payload::Text(t)).unwrap();
+
+    let pair = rx_pair.recv().expect("pair answered");
+    assert_eq!(pair.outputs[0].as_f32().unwrap(), &want_ans[..],
+               "ragged pair answer diverged");
+    let vis = rx_vis.recv().expect("vision single answered");
+    assert_eq!(vis.outputs[0].as_f32().unwrap(), &want_vf[..],
+               "vision single must get the tower feature");
+    let txt = rx_txt.recv().expect("text single answered");
+    assert_eq!(txt.outputs[0].as_f32().unwrap(), &want_tf[..],
+               "text single must get the tower feature");
+}
+
+#[test]
+fn pooled_clients_get_an_error_instead_of_hanging_on_a_failed_batch() {
+    // a ResponseSlot keeps its own sender alive, so a failed batch can't
+    // surface as a closed channel — the worker must deliver the explicit
+    // failure marker and recv must turn it into an error, not block
+    let ps = Arc::new(synthetic_mm_store(&ViTConfig::default(), 7));
+    let workloads = CpuWorkloads {
+        joint: vec![("vqa".to_string(), JointKind::Vqa,
+                     vec![("pitome".to_string(), 0.9)])],
+        ..Default::default()
+    };
+    let coord = Coordinator::boot_cpu_workloads(
+        &ps, &workloads, ServingConfig::default()).unwrap();
+    let pool = coord.pool().clone();
+    let slot = coord.response_slot();
+
+    // malformed: question of the wrong length fails set_text in the
+    // (singleton) batch
+    let mut bad = pool.take_i32(3);
+    bad.fill_i32(&[1, 2, 3], &[3]);
+    let item = shape_item(TEST_SEED, 0);
+    let patches = patchify(&item.image, 4);
+    let mut vt = pool.take_f32(patches.data.len());
+    vt.fill_f32(&patches.data, &[patches.rows, patches.cols]);
+    coord.submit_pooled(Workload::Joint, "vqa", Qos::Throughput,
+                        Payload::Joint { vision: vt, text: bad }, &slot)
+        .unwrap();
+    assert!(slot.recv().is_err(),
+            "failed batch must surface as an error on the slot");
+
+    // the worker survives and keeps answering on the same slot
+    let (q, _) = vqa_item(TEST_SEED, 0);
+    let mut vt = pool.take_f32(patches.data.len());
+    vt.fill_f32(&patches.data, &[patches.rows, patches.cols]);
+    let mut qt = pool.take_i32(q.len());
+    qt.fill_i32(&q, &[q.len()]);
+    coord.submit_pooled(Workload::Joint, "vqa", Qos::Throughput,
+                        Payload::Joint { vision: vt, text: qt }, &slot)
+        .unwrap();
+    let resp = slot.recv().expect("worker kept serving after the failure");
+    assert_eq!(resp.outputs[0].as_f32().unwrap().len(),
+               pitome::data::N_ANSWERS);
 }
 
 #[test]

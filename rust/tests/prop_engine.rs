@@ -12,16 +12,27 @@
 //! Plus the stale-pool regression: one session driven through growing and
 //! shrinking batch sizes must match fresh sessions exactly, and inputs
 //! whose shape contradicts the config must be rejected.
+//!
+//! The multimodal additions: a [`JointSession`] under the serial
+//! shared-RNG contract is bitwise-identical to the deprecated
+//! per-sample VQA path (`eval::vqa::vqa_logits`) and retrieval path
+//! (`clip_image_embed` + `clip_text_embed`) in **every** merge mode, and
+//! one joint session driven through ragged growing/shrinking halves
+//! matches fresh sessions exactly.
 #![allow(deprecated)]
 
 use pitome::config::{TextConfig, ViTConfig};
-use pitome::data::Rng;
-use pitome::engine::Engine;
+use pitome::data::{caption_for, patchify, shape_item, vqa_item, Rng,
+                   TEST_SEED};
+use pitome::engine::{Engine, JointConfig};
+use pitome::eval::retrieval::clip_image_embed;
+use pitome::eval::vqa::vqa_logits;
 use pitome::model::{bert_logits_batch, bert_logits_batch_pooled,
-                    encoder_forward, encoder_forward_batch,
+                    clip_text_embed, encoder_forward, encoder_forward_batch,
                     encoder_forward_batch_pooled, encoder_forward_scratch,
+                    synthetic_bert_store, synthetic_mm_store,
                     synthetic_vit_store, EncoderCfg, EncoderScratch,
-                    ParamEntry, ParamStore, ScratchPool, ViTModel};
+                    ScratchPool, ViTModel};
 use pitome::tensor::Mat;
 
 /// Every mode the encoder can run (paper modes + ablations + baselines).
@@ -164,56 +175,6 @@ fn vit_session_matches_vit_model_wrappers_in_every_mode() {
     }
 }
 
-/// Build a synthetic BERT-style parameter store covering every tensor the
-/// text encoder path names (mirrors `synthetic_vit_store`'s scheme).
-fn synthetic_bert_store(cfg: &TextConfig, seed: u64) -> ParamStore {
-    let dim = cfg.dim;
-    let hidden = (cfg.dim as f64 * cfg.mlp_ratio) as usize;
-    let scale = 1.0 / (dim as f32).sqrt();
-    let mut rng = Rng::new(seed);
-    let mut flat: Vec<f32> = Vec::new();
-    let mut entries: Vec<ParamEntry> = Vec::new();
-    let push = |flat: &mut Vec<f32>, entries: &mut Vec<ParamEntry>,
-                    name: &str, shape: &[usize], s: f32, rng: &mut Rng| {
-        let size: usize = shape.iter().product();
-        let offset = flat.len();
-        for _ in 0..size {
-            let v = if s == 0.0 {
-                if name.ends_with(".w") && name.contains("ln") { 1.0 } else { 0.0 }
-            } else {
-                (rng.next_f64() * 2.0 - 1.0) as f32 * s
-            };
-            flat.push(v);
-        }
-        entries.push(ParamEntry { name: name.into(), shape: shape.to_vec(),
-                                  offset, size });
-    };
-    push(&mut flat, &mut entries, "bert.tok", &[cfg.vocab_size, dim], 0.02, &mut rng);
-    push(&mut flat, &mut entries, "bert.pos", &[cfg.n_tokens(), dim], 0.02, &mut rng);
-    for l in 0..cfg.depth {
-        let p = format!("bert.blk{l}.");
-        push(&mut flat, &mut entries, &format!("{p}ln1.w"), &[dim], 0.0, &mut rng);
-        push(&mut flat, &mut entries, &format!("{p}ln1.b"), &[dim], 0.0, &mut rng);
-        push(&mut flat, &mut entries, &format!("{p}wq"), &[dim, dim], scale, &mut rng);
-        push(&mut flat, &mut entries, &format!("{p}wk"), &[dim, dim], scale, &mut rng);
-        push(&mut flat, &mut entries, &format!("{p}wv"), &[dim, dim], scale, &mut rng);
-        push(&mut flat, &mut entries, &format!("{p}wo"), &[dim, dim], scale, &mut rng);
-        push(&mut flat, &mut entries, &format!("{p}bo"), &[dim], 0.0, &mut rng);
-        push(&mut flat, &mut entries, &format!("{p}ln2.w"), &[dim], 0.0, &mut rng);
-        push(&mut flat, &mut entries, &format!("{p}ln2.b"), &[dim], 0.0, &mut rng);
-        push(&mut flat, &mut entries, &format!("{p}mlp1"), &[dim, hidden], scale, &mut rng);
-        push(&mut flat, &mut entries, &format!("{p}mlp1b"), &[hidden], 0.0, &mut rng);
-        push(&mut flat, &mut entries, &format!("{p}mlp2"), &[hidden, dim],
-             1.0 / (hidden as f32).sqrt(), &mut rng);
-        push(&mut flat, &mut entries, &format!("{p}mlp2b"), &[dim], 0.0, &mut rng);
-    }
-    push(&mut flat, &mut entries, "bert.lnf.w", &[dim], 0.0, &mut rng);
-    push(&mut flat, &mut entries, "bert.lnf.b", &[dim], 0.0, &mut rng);
-    push(&mut flat, &mut entries, "bert.head.w", &[dim, cfg.num_classes], scale, &mut rng);
-    push(&mut flat, &mut entries, "bert.head.b", &[cfg.num_classes], 0.0, &mut rng);
-    ParamStore::from_parts(flat, entries)
-}
-
 #[test]
 fn bert_session_matches_bert_wrappers_in_every_mode() {
     for &mode in MODES {
@@ -335,4 +296,136 @@ fn sessions_reject_stale_or_contradictory_shapes() {
     assert!(bert.set_tokens(0, &[1, 2, 3]).is_err(), "short seq accepted");
     let bad_ids = vec![999i32; tcfg.n_tokens()];
     assert!(bert.set_tokens(0, &bad_ids).is_err(), "oov ids accepted");
+}
+
+#[test]
+fn joint_session_matches_deprecated_vqa_path_in_every_mode() {
+    // the serial shared-RNG contract: sess.vqa_one must reproduce the
+    // deprecated per-sample ViTModel::features + text_features + dense
+    // head path bit-for-bit, stochastic merge modes included (one RNG
+    // stream threads vision-then-question through consecutive samples)
+    for &mode in MODES {
+        let vcfg = vit_cfg(mode);
+        let ps = synthetic_mm_store(&vcfg, 5);
+        let engine = Engine::from_store(synthetic_mm_store(&vcfg, 5));
+        let mut sess =
+            engine.joint_session(&JointConfig::vqa(vcfg.clone())).unwrap();
+        let mut r1 = Rng::new(3);
+        let mut r2 = Rng::new(3);
+        for i in 0..3u64 {
+            let item = shape_item(TEST_SEED, i);
+            let patches = patchify(&item.image, vcfg.patch_size);
+            let (q, _) = vqa_item(TEST_SEED, i);
+            let want = vqa_logits(&ps, &vcfg, &patches, &q, &mut r1).unwrap();
+            let got = sess.vqa_one(&patches, &q, &mut r2).unwrap();
+            assert_eq!(got, &want[..],
+                       "{mode} sample {i}: joint session diverged from the \
+                        deprecated VQA path");
+        }
+    }
+}
+
+#[test]
+fn joint_session_matches_deprecated_retrieval_path_in_every_mode() {
+    for &mode in MODES {
+        let vcfg = ViTConfig { merge_mode: mode.into(), merge_r: 0.9,
+                               num_classes: 10, ..Default::default() };
+        let engine = Engine::from_store(synthetic_mm_store(&vcfg, 8));
+        let mut sess = engine
+            .joint_session(&JointConfig::retrieval(vcfg.clone()))
+            .unwrap();
+        let mut r1 = Rng::new(4);
+        let mut r2 = Rng::new(4);
+        for i in 0..3u64 {
+            let item = shape_item(TEST_SEED, i);
+            let patches = patchify(&item.image, vcfg.patch_size);
+            let cap = caption_for(TEST_SEED, i);
+            let want_ie =
+                clip_image_embed(&engine, &vcfg, &patches, &mut r1).unwrap();
+            let want_te = clip_text_embed(engine.params(), &cap, 64, 2, 4,
+                                          64, &mut r1).unwrap();
+            let (ie, te) =
+                sess.embed_pair_one(&patches, &cap, &mut r2).unwrap();
+            assert_eq!(ie, &want_ie[..],
+                       "{mode} sample {i}: image embed diverged");
+            assert_eq!(te, &want_te[..],
+                       "{mode} sample {i}: text embed diverged");
+        }
+    }
+}
+
+#[test]
+fn one_joint_session_survives_ragged_growing_and_shrinking_halves() {
+    // the joint stale-pool regression: ONE session driven through
+    // interleaved (bv, bt) half sizes must match fresh sessions bitwise
+    let vcfg = vit_cfg("pitome");
+    let engine = Engine::from_store(synthetic_mm_store(&vcfg, 21));
+    let jcfg = JointConfig::vqa(vcfg.clone());
+    let mut reused = engine.joint_session(&jcfg).unwrap();
+    for (round, &(bv, bt)) in
+        [(3usize, 3usize), (1, 4), (5, 2), (2, 2)].iter().enumerate()
+    {
+        let mut fresh = engine.joint_session(&jcfg).unwrap();
+        for sess in [&mut reused, &mut fresh] {
+            sess.begin(bv, bt);
+            for i in 0..bv {
+                let item = shape_item(TEST_SEED, (round * 10 + i) as u64);
+                sess.set_patches(i, &patchify(&item.image, vcfg.patch_size))
+                    .unwrap();
+            }
+            for j in 0..bt {
+                let (q, _) = vqa_item(TEST_SEED, (round * 10 + j) as u64);
+                sess.set_text(j, &q).unwrap();
+            }
+            sess.forward(round as u64).unwrap();
+        }
+        let pairs: Vec<(usize, usize)> =
+            (0..bv.min(bt)).map(|i| (i, i)).collect();
+        reused.fuse_vqa(&pairs).unwrap();
+        fresh.fuse_vqa(&pairs).unwrap();
+        for p in 0..pairs.len() {
+            assert_eq!(reused.answer_logits(p), fresh.answer_logits(p),
+                       "round {round} ({bv}, {bt}) pair {p}: reused joint \
+                        session diverged from fresh");
+        }
+        for i in 0..bv {
+            assert_eq!(reused.image_feature(i), fresh.image_feature(i),
+                       "round {round} image {i} diverged");
+        }
+        for j in 0..bt {
+            assert_eq!(reused.text_feature(j), fresh.text_feature(j),
+                       "round {round} text {j} diverged");
+        }
+    }
+
+    // retrieval kind: ragged projection rounds through one session
+    let rcfg = JointConfig::retrieval(vcfg.clone());
+    let mut reused = engine.joint_session(&rcfg).unwrap();
+    for (round, &(bv, bt)) in [(2usize, 4usize), (4, 1), (1, 3)]
+        .iter().enumerate()
+    {
+        let mut fresh = engine.joint_session(&rcfg).unwrap();
+        for sess in [&mut reused, &mut fresh] {
+            sess.begin(bv, bt);
+            for i in 0..bv {
+                let item = shape_item(TEST_SEED, (round * 7 + i) as u64);
+                sess.set_patches(i, &patchify(&item.image, vcfg.patch_size))
+                    .unwrap();
+            }
+            for j in 0..bt {
+                let cap = caption_for(TEST_SEED, (round * 7 + j) as u64);
+                sess.set_text(j, &cap).unwrap();
+            }
+            sess.forward(round as u64).unwrap();
+            sess.project().unwrap();
+        }
+        for i in 0..bv {
+            assert_eq!(reused.image_embed(i), fresh.image_embed(i),
+                       "retrieval round {round} image {i} diverged");
+            for j in 0..bt {
+                assert_eq!(reused.score(i, j), fresh.score(i, j),
+                           "retrieval round {round} score ({i}, {j})");
+            }
+        }
+    }
 }
