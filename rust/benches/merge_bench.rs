@@ -16,6 +16,7 @@ fn random_tokens(n: usize, h: usize, seed: u64) -> Mat {
     Mat::from_fn(n, h, |_, _| (rng.next_f64() * 2.0 - 1.0) as f32)
 }
 
+// lint: allow(one-gram) reason=bench rebuilds the Gram per timed iteration by design
 fn main() {
     let sm = smoke();
     let mut b = if sm { Bench::new(1, 3) } else { Bench::new(3, 15) };

@@ -27,6 +27,7 @@ use pitome::util::{smoke, Bench};
 /// The pre-scratch coarsening pipeline, kept verbatim as the parity
 /// reference: every step builds a fresh Gram and allocates its plan and
 /// merged tokens.
+// lint: allow(one-gram) reason=reference baseline deliberately rebuilds the Gram each level
 fn reference_coarsen(kf0: &Mat, algo: CoarsenAlgo, steps: usize, k: usize,
                      margin: f32, seed: u64) -> Partition {
     let n0 = kf0.rows;

@@ -82,6 +82,7 @@ impl TensorPool {
 
     /// Account a checkout and wrap it (a fallback buffer that will have
     /// to regrow counts as fresh, so the recycle hit rate stays honest).
+    // lint: allow(alloc) reason=Arc refcount clones handing the shared pool to a session (startup, not per-request)
     fn checkout(self: &Arc<Self>, popped: Option<(HostTensor, bool)>,
                 empty: HostTensor) -> PooledTensor {
         match popped {
@@ -108,6 +109,7 @@ impl TensorPool {
     /// (recycled when the freelist has a fitting one, fresh otherwise);
     /// fill it with [`PooledTensor::fill_f32`].  Dropping the returned
     /// handle puts the buffer back.
+    // lint: allow(alloc) reason=empty-Vec sentinel on a pool miss; capacity grows once and is recycled
     pub fn take_f32(self: &Arc<Self>, min_len: usize) -> PooledTensor {
         let popped = Self::pop(&self.f32s, min_len, |t| match t {
             HostTensor::F32(d, _) => d.capacity(),
@@ -117,6 +119,7 @@ impl TensorPool {
     }
 
     /// i32 counterpart of [`TensorPool::take_f32`] (token-id inputs).
+    // lint: allow(alloc) reason=empty-Vec sentinel on a pool miss; capacity grows once and is recycled
     pub fn take_i32(self: &Arc<Self>, min_len: usize) -> PooledTensor {
         let popped = Self::pop(&self.i32s, min_len, |t| match t {
             HostTensor::I32(d, _) => d.capacity(),
@@ -147,6 +150,7 @@ impl TensorPool {
     /// Human-readable recycle summary, e.g. `"412/420 (98.1%)"` — the
     /// one formatting of [`TensorPool::stats`] every bench/CLI report
     /// shares.
+    // lint: allow(alloc) reason=diagnostics string for operator tooling, never on the serving path
     pub fn hit_rate_summary(&self) -> String {
         let (recycled, fresh) = self.stats();
         format!("{recycled}/{} ({:.1}%)", recycled + fresh,
@@ -155,6 +159,9 @@ impl TensorPool {
 
     /// Buffers currently idle in the freelists.
     pub fn idle(&self) -> usize {
+        // lock-order: f32s before i32s (matches every other dual-freelist
+        // path in this module; neither lock is held across the other's
+        // unlock elsewhere, but keep the order anyway)
         self.f32s.lock().unwrap().len() + self.i32s.lock().unwrap().len()
     }
 }
@@ -186,6 +193,7 @@ impl PooledTensor {
     /// Overwrite with f32 `data` + `shape`, reusing the existing data and
     /// shape vectors in place — allocation-free once the buffer has seen
     /// the capacity.
+    // lint: allow(alloc) reason=dtype-flip fallback copies once before the slot is recycled
     pub fn fill_f32(&mut self, data: &[f32], shape: &[usize]) {
         match &mut self.t {
             HostTensor::F32(d, s) => {
@@ -201,6 +209,7 @@ impl PooledTensor {
     }
 
     /// i32 counterpart of [`PooledTensor::fill_f32`].
+    // lint: allow(alloc) reason=dtype-flip fallback copies once before the slot is recycled
     pub fn fill_i32(&mut self, data: &[i32], shape: &[usize]) {
         match &mut self.t {
             HostTensor::I32(d, s) => {
@@ -239,6 +248,7 @@ impl std::fmt::Debug for PooledTensor {
 }
 
 impl Drop for PooledTensor {
+    // lint: allow(alloc) reason=teardown swaps empty Vecs in to drain the pool
     fn drop(&mut self) {
         if let Some(home) = self.home.take() {
             // swapping in an empty vec allocates nothing

@@ -131,6 +131,7 @@ impl Engine {
     }
 
     /// Shared handle to the parameter store.
+    // lint: allow(alloc) reason=Arc refcount clone, no heap data copied
     pub fn params_arc(&self) -> Arc<ParamStore> {
         self.ps.clone()
     }
@@ -138,6 +139,7 @@ impl Engine {
     /// Resolve (or fetch from cache) the weights `cfg` names.  Every
     /// session for an equal config shares one resolution — nothing is
     /// re-resolved per session, let alone per batch.
+    // lint: allow(alloc) reason=Arc clones and a one-time cfg clone at engine construction
     pub fn resolve(&self, cfg: &EncoderCfg) -> Result<Arc<ResolvedEncoder>> {
         let key = cfg_key(cfg);
         let mut cache = self.resolved.lock().unwrap();
@@ -155,6 +157,7 @@ impl Engine {
 
     /// Open a raw encoder session for `cfg` (per worker thread — see the
     /// module docs for the lifecycle).
+    // lint: allow(alloc) reason=cold constructor: session-owned pools start empty and grow on first use
     pub fn session(&self, cfg: EncoderCfg) -> Result<Session> {
         let re = self.resolve(&cfg)?;
         Ok(Session {
@@ -258,6 +261,7 @@ impl Session {
     /// to the historical `embed_tokens`), validating the length against
     /// the config's `plan[0]` and every id against the table — the text
     /// embedding stage [`BertSession`] and [`JointSession`] share.
+    // lint: allow(alloc) reason=error-path format! only, never taken on the steady-state path
     pub fn set_tokens(&mut self, i: usize, tokens: &[i32], table: MatRef,
                       pos: MatRef) -> Result<()> {
         let want = self.cfg.plan[0];
@@ -290,6 +294,7 @@ impl Session {
     /// Check every filled input against the config (the stale-shape
     /// guard: a slot refilled at the wrong shape is an error, never a
     /// silent mis-merge).
+    // lint: allow(alloc) reason=error-path format! only, never taken on the steady-state path
     fn validate_inputs(&self) -> Result<()> {
         let (want_n, want_d) = (self.cfg.plan[0], self.cfg.dim);
         for (i, s) in self.slots[..self.count].iter().enumerate() {

@@ -76,6 +76,7 @@ impl TextTowerCfg {
     /// The encoder config this tower implies (mode `none`, flat plan —
     /// exactly what the historical `text_features` calls used, so the
     /// session path stays bitwise-compatible with them).
+    // lint: allow(alloc) reason=one-time EncoderCfg assembly at session construction
     pub fn encoder_cfg(&self) -> EncoderCfg {
         EncoderCfg {
             prefix: self.prefix.clone(),
@@ -184,6 +185,7 @@ pub struct JointSession {
 }
 
 impl JointSession {
+    // lint: allow(alloc) reason=cold constructor: parameter-name strings built once per session
     pub(super) fn new(engine: &Engine, cfg: &JointConfig)
                       -> Result<JointSession> {
         let ps = engine.params_arc();
@@ -324,6 +326,7 @@ impl JointSession {
     /// logits ([`JointSession::answer_logits`]).  Allocation-free once
     /// warm.  Errors when the session was built without the VQA stage or
     /// an index falls outside the current round.
+    // lint: allow(alloc) reason=error-path format! only
     pub fn fuse_vqa(&mut self, pairs: &[(usize, usize)]) -> Result<()> {
         let (bv, bt) = (self.bv, self.bt);
         let Some(stage) = self.vqa.as_mut() else {

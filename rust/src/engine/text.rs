@@ -26,6 +26,7 @@ pub struct BertSession {
 }
 
 impl BertSession {
+    // lint: allow(alloc) reason=Arc refcount clone at session construction
     pub(super) fn new(engine: &Engine, cfg: &TextConfig) -> Result<BertSession> {
         let ps = engine.params_arc();
         let session = engine.session(EncoderCfg::from_text(cfg))?;

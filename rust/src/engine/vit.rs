@@ -35,6 +35,7 @@ pub struct VitSession {
 }
 
 impl VitSession {
+    // lint: allow(alloc) reason=Arc refcount clone at session construction
     pub(super) fn new(engine: &Engine, cfg: &ViTConfig) -> Result<VitSession> {
         let ps = engine.params_arc();
         let session = engine.session(EncoderCfg::from_vit(cfg))?;
@@ -78,6 +79,7 @@ impl VitSession {
     /// [`VitSession::set_patches`] from a raw row-major slice (the
     /// serving path: request tensors arrive as flat f32 data and are
     /// consumed in place, no staging copy).
+    // lint: allow(alloc) reason=error-path format! only
     pub fn set_patches_slice(&mut self, i: usize, data: &[f32]) -> Result<()> {
         let (rows, cols) = (self.vcfg.num_patches(), self.vcfg.patch_dim());
         if data.len() != rows * cols {
@@ -88,6 +90,7 @@ impl VitSession {
         self.set_patches_view(i, MatRef { rows, cols, data })
     }
 
+    // lint: allow(alloc) reason=error-path format! only
     fn set_patches_view(&mut self, i: usize, patches: MatRef<'_>)
                         -> Result<()> {
         let (want_rows, want_cols) =

@@ -46,6 +46,7 @@ pub fn recommended_workers() -> usize {
 
 /// Map `f` over `items` using up to `workers` scoped threads, preserving
 /// order.  `workers <= 1` (or a single item) runs inline with no spawns.
+// lint: allow(alloc) reason=batch driver: worker/result collects amortize over the whole batch
 pub fn parallel_map<T, U, F>(items: &[T], workers: usize, f: &F) -> Vec<U>
 where
     T: Sync,
@@ -80,6 +81,7 @@ where
 
 /// In-place variant of [`parallel_map`]: `f` mutates each item and its
 /// return values are collected in order.
+// lint: allow(alloc) reason=batch driver: worker/result collects amortize over the whole batch
 pub fn parallel_map_mut<T, U, F>(items: &mut [T], workers: usize, f: &F) -> Vec<U>
 where
     T: Send,
@@ -118,6 +120,7 @@ where
 /// chunk and survives the call for the caller to reuse again.  This is
 /// how the batch encoder gives each worker thread a persistent
 /// `EncoderScratch`.
+// lint: allow(alloc) reason=batch driver: worker/result collects amortize over the whole batch
 pub fn parallel_map_mut_ctx<T, U, C, F>(items: &mut [T], ctxs: &mut [C],
                                         f: &F) -> Vec<U>
 where

@@ -33,6 +33,7 @@ pub fn dct_matrix(n: usize) -> Mat {
 
 /// Thread-locally cached [`dct_matrix`]: the first call per (thread, n)
 /// builds the basis, later calls share it.
+// lint: allow(alloc) reason=Rc refcount clone of the cached DCT matrix
 pub fn dct_matrix_cached(n: usize) -> Rc<Mat> {
     DCT_BASES.with(|c| {
         c.borrow_mut()
@@ -46,6 +47,7 @@ pub fn dct_matrix_cached(n: usize) -> Rc<Mat> {
 /// resynthesize `n - protect_first - k` tokens on the coarse grid
 /// (allocating wrapper over [`dct_merge_into`]).
 /// Sizes reset to 1 (no tracking, as in the paper's DCT baseline).
+// lint: allow(alloc) reason=allocating convenience wrapper over dct_merge_into
 pub fn dct_merge(x: &Mat, sizes: &[f32], k: usize, protect_first: usize)
     -> (Mat, Vec<f32>) {
     let mut body = Mat::zeros(0, 0);

@@ -36,6 +36,7 @@ pub fn energy_scores(kf: &Mat, margin: f32) -> Vec<f32> {
 
 /// Energy scores from a precomputed shared Gram (allocating wrapper over
 /// [`energy_from_gram_into`]).
+// lint: allow(alloc) reason=allocating convenience wrapper; hot callers use the _into form
 pub fn energy_from_gram(g: &CosineGram, margin: f32) -> Vec<f32> {
     let mut e = Vec::new();
     energy_from_gram_into(g, margin, &mut e);
@@ -70,6 +71,7 @@ pub fn energy_from_gram_into(g: &CosineGram, margin: f32, e: &mut Vec<f32>) {
 
 /// Energy scores given a precomputed cosine matrix (used when the caller
 /// already built W for matching — avoids the second Gram pass).
+// lint: allow(alloc) reason=allocating convenience wrapper; hot callers use the _into form
 pub fn energy_from_cosine(w: &Mat, margin: f32) -> Vec<f32> {
     let n = w.rows;
     let mut e = vec![0f32; n];

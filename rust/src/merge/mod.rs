@@ -163,6 +163,7 @@ pub struct MergeCtx<'a> {
 /// Similarity-driven modes build exactly one [`CosineGram`] here and share
 /// it between scoring and matching; DCT and random pruning never touch
 /// pairwise similarities and build none.
+// lint: allow(alloc) reason=k==0 early-out copies input through the allocating wrapper API
 pub fn merge_step(mode: MergeMode, ctx: &MergeCtx, rng: &mut Rng) -> (Mat, Vec<f32>) {
     if ctx.k == 0 || mode == MergeMode::None {
         return (ctx.x.clone(), ctx.sizes.to_vec());
@@ -183,6 +184,7 @@ pub fn merge_step(mode: MergeMode, ctx: &MergeCtx, rng: &mut Rng) -> (Mat, Vec<f
 
 /// Build the merge plan for a similarity-driven mode from the shared Gram
 /// (allocating wrapper over [`plan_with_gram_into`]).
+// lint: allow(alloc) reason=allocating convenience wrapper; hot callers use merge_step_scratch
 fn plan_with_gram(mode: MergeMode, ctx: &MergeCtx, g: &CosineGram,
                   rng: &mut Rng) -> MergePlan {
     let mut energy = Vec::new();
@@ -242,6 +244,7 @@ fn plan_with_gram_into(mode: MergeMode, ctx: &MergeCtx, g: &CosineGram,
 /// Run one merge step against a caller-provided shared Gram (must have
 /// been built from `ctx.kf`).  Gram-free modes (None/DCT/Random) fall
 /// through to the plain path and ignore `g`.
+// lint: allow(alloc) reason=allocating wrapper; k==0 path copies input
 pub fn merge_step_with_gram(mode: MergeMode, ctx: &MergeCtx, g: &CosineGram,
                             rng: &mut Rng) -> (Mat, Vec<f32>) {
     debug_assert_eq!(g.n(), ctx.kf.rows, "Gram/feature shape mismatch");
@@ -291,6 +294,7 @@ pub struct MergeScratch {
 
 impl MergeScratch {
     /// Empty scratch; buffers grow on first use and are then reused.
+    // lint: allow(alloc) reason=cold constructor: scratch buffers grow on first use
     pub fn new() -> MergeScratch {
         MergeScratch {
             gram: CosineGram::empty(),

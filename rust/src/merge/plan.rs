@@ -47,6 +47,7 @@ pub struct MergePlan {
 impl MergePlan {
     /// An empty plan to rebuild into (the start of the in-place
     /// lifecycle; see the module docs).
+    // lint: allow(alloc) reason=zero-capacity Vecs, no heap allocation occurs
     pub fn empty() -> MergePlan {
         MergePlan {
             protect: Vec::new(),
@@ -80,6 +81,7 @@ impl MergePlan {
     /// scan over the chained index lists instead of a seen-bitmap — m is
     /// a few hundred at most, and the scan only exists off the release
     /// hot path.
+    // lint: allow(alloc) reason=error-path format! only, off the release hot path
     pub fn validate(&self, n: usize) -> Result<(), String> {
         let all = || self.protect.iter().chain(&self.a).chain(&self.b);
         for (pos, &i) in all().enumerate() {
@@ -134,6 +136,7 @@ pub struct PlanScratch {
 
 impl PlanScratch {
     /// Empty scratch; buffers grow on first use and are then reused.
+    // lint: allow(alloc) reason=cold constructor: scratch buffers grow on first use
     pub fn new() -> PlanScratch {
         PlanScratch {
             scores_tmp: Vec::new(),
@@ -155,6 +158,7 @@ impl Default for PlanScratch {
 
 /// Apply a merge plan: size-weighted averaging with size tracking
 /// (allocating wrapper over [`apply_plan_into`]).
+// lint: allow(alloc) reason=allocating convenience wrapper over apply_plan_into
 pub fn apply_plan(x: &Mat, sizes: &[f32], plan: &MergePlan) -> (Mat, Vec<f32>) {
     let mut out = Mat::zeros(0, 0);
     let mut out_sizes = Vec::new();

@@ -14,6 +14,7 @@ pub fn tokens_after_merge(n: usize, r: f64, protect_first: usize) -> usize {
 /// Static token-count plan: entry l = tokens entering block l, plus a final
 /// entry for the output count. `merge_layers` restricts merging to specific
 /// blocks (BERT compresses only the first 3, Sec 4.4).
+// lint: allow(alloc) reason=per-run schedule built once at configuration time
 pub fn merge_plan(n0: usize, r: f64, num_layers: usize, protect_first: usize,
                   merge_layers: Option<&[usize]>) -> Vec<usize> {
     let mut plan = vec![n0];
@@ -29,6 +30,7 @@ pub fn merge_plan(n0: usize, r: f64, num_layers: usize, protect_first: usize,
 }
 
 /// ToMe's original schedule: remove a fixed k tokens per layer (App. C).
+// lint: allow(alloc) reason=per-run schedule built once at configuration time
 pub fn fixed_k_plan(n0: usize, k: usize, num_layers: usize,
                     protect_first: usize) -> Vec<usize> {
     let mut plan = vec![n0];

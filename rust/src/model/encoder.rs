@@ -175,6 +175,7 @@ pub struct ResolvedEncoder {
 
 impl ResolvedEncoder {
     /// Resolve every tensor `cfg` names inside `ps`.
+    // lint: allow(alloc) reason=one-time parameter-name resolution at engine construction
     pub fn new(ps: &ParamStore, cfg: &EncoderCfg) -> Result<ResolvedEncoder> {
         let mut blocks = Vec::with_capacity(cfg.depth);
         for l in 0..cfg.depth {
@@ -265,6 +266,7 @@ struct BlockBufs {
 }
 
 impl BlockBufs {
+    // lint: allow(alloc) reason=cold constructor: scratch buffers grow on first use
     fn new() -> BlockBufs {
         BlockBufs {
             ln: Mat::zeros(0, 0),
@@ -313,6 +315,7 @@ pub struct ScratchPool {
 
 impl ScratchPool {
     /// Empty pool; scratches are created on first use and then reused.
+    // lint: allow(alloc) reason=cold constructor: pool starts empty and grows on first use
     pub fn new() -> ScratchPool {
         ScratchPool { scratches: Vec::new() }
     }
@@ -415,6 +418,7 @@ pub fn attention_into(q: &Mat, kf: &Mat, v: &Mat, sizes: &[f32], heads: usize,
 ///
 /// q, kf, v: (n, dim) pre-split projections; sizes: len n.
 /// Returns (attn output (n, dim), mean CLS attention over heads (n,)).
+// lint: allow(alloc) reason=allocating convenience wrapper over attention_into
 pub fn attention(q: &Mat, kf: &Mat, v: &Mat, sizes: &[f32], heads: usize,
                  prop_attn: bool) -> (Mat, Vec<f32>) {
     let mut scores = Mat::zeros(0, 0);
@@ -539,6 +543,7 @@ pub struct SeqSlot {
 
 impl SeqSlot {
     /// Empty slot; buffers grow on first use.
+    // lint: allow(alloc) reason=cold constructor: slot buffers grow on first use
     pub fn new() -> SeqSlot {
         SeqSlot { x: Mat::zeros(0, 0), sizes: Vec::new() }
     }
@@ -611,6 +616,7 @@ pub fn encoder_forward_slot(ps: &ParamStore, re: &ResolvedEncoder,
 /// (plan[depth], dim) after the output LayerNorm.  One-shot entry point
 /// (and the python-parity contract); hot callers hold a
 /// [`crate::engine::Session`] instead.
+// lint: allow(alloc) reason=one-shot parity entry point; hot callers hold a Session
 pub fn encoder_forward(ps: &ParamStore, cfg: &EncoderCfg, x: Mat,
                        rng: &mut Rng) -> Result<Mat> {
     let re = ResolvedEncoder::new(ps, cfg)?;
@@ -622,6 +628,7 @@ pub fn encoder_forward(ps: &ParamStore, cfg: &EncoderCfg, x: Mat,
 }
 
 /// Run the encoder on one sample `x` with a caller-owned scratch.
+// lint: allow(alloc) reason=deprecated one-shot wrapper retained for parity tests
 #[deprecated(note = "hold a `crate::engine::Session` and use \
                      `Session::forward_one` instead")]
 pub fn encoder_forward_scratch(ps: &ParamStore, cfg: &EncoderCfg, x: Mat,
@@ -636,6 +643,7 @@ pub fn encoder_forward_scratch(ps: &ParamStore, cfg: &EncoderCfg, x: Mat,
 
 /// Run the encoder on a batch of samples with a caller-owned scratch
 /// pool (per-sample outputs are still allocated; the engine API pools
+// lint: allow(alloc) reason=deprecated batch wrapper retained for compatibility
 /// them too).
 #[deprecated(note = "use `crate::engine::Engine::session` → \
                      `Session::forward_batch` instead")]
@@ -668,6 +676,7 @@ pub fn encoder_forward_batch(ps: &ParamStore, cfg: &EncoderCfg, xs: Vec<Mat>,
 }
 
 /// Plain (non-proportional) attention convenience used in tests.
+// lint: allow(alloc) reason=reference implementation used by parity tests only
 pub fn plain_attention(q: &Mat, kf: &Mat, v: &Mat, heads: usize) -> Mat {
     let ones = vec![1.0; q.rows];
     attention(q, kf, v, &ones, heads, true).0

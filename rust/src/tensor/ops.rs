@@ -332,6 +332,7 @@ pub fn argsort_asc_into(vals: &[f32], idx: &mut Vec<usize>) {
 
 /// Indices that sort `vals` descending (stable ordering; allocating
 /// wrapper over [`argsort_desc_into`]).
+// lint: allow(alloc) reason=allocating convenience wrapper over argsort_desc_into
 pub fn argsort_desc(vals: &[f32]) -> Vec<usize> {
     let mut idx = Vec::new();
     argsort_desc_into(vals, &mut idx);
@@ -340,6 +341,7 @@ pub fn argsort_desc(vals: &[f32]) -> Vec<usize> {
 
 /// Indices that sort `vals` ascending (stable ordering; allocating
 /// wrapper over [`argsort_asc_into`]).
+// lint: allow(alloc) reason=allocating convenience wrapper over argsort_asc_into
 pub fn argsort_asc(vals: &[f32]) -> Vec<usize> {
     let mut idx = Vec::new();
     argsort_asc_into(vals, &mut idx);

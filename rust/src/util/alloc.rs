@@ -34,22 +34,33 @@ pub fn allocs_this_thread() -> u64 {
 /// System-allocator wrapper that counts allocations per thread.
 pub struct CountingAllocator;
 
+// SAFETY: every method defers to `System`, which upholds the GlobalAlloc
+// contract; the only extra work is bumping a thread-local counter, which
+// cannot itself allocate or unwind.
 unsafe impl GlobalAlloc for CountingAllocator {
+    // SAFETY: caller guarantees `layout` has non-zero size; forwarded
+    // verbatim to `System.alloc`.
     unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
         ALLOC_COUNT.with(|c| c.set(c.get() + 1));
         System.alloc(layout)
     }
 
+    // SAFETY: caller guarantees `ptr` came from this allocator with this
+    // `layout`; forwarded verbatim to `System.dealloc`.
     unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
         System.dealloc(ptr, layout)
     }
 
+    // SAFETY: caller guarantees `ptr`/`layout` match a live allocation and
+    // `new_size` is non-zero; forwarded verbatim to `System.realloc`.
     unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize)
                       -> *mut u8 {
         ALLOC_COUNT.with(|c| c.set(c.get() + 1));
         System.realloc(ptr, layout, new_size)
     }
 
+    // SAFETY: same contract as `alloc`; `System.alloc_zeroed` returns
+    // zeroed memory or null.
     unsafe fn alloc_zeroed(&self, layout: Layout) -> *mut u8 {
         ALLOC_COUNT.with(|c| c.set(c.get() + 1));
         System.alloc_zeroed(layout)

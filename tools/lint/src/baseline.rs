@@ -1,0 +1,127 @@
+//! Baseline file support: triage pre-existing findings without blocking
+//! CI on them.
+//!
+//! A baseline is a text file of finding *keys* (one per line, `#`
+//! comments and blanks ignored).  Keys are line-insensitive —
+//! `rule file fn=<name>` — so unrelated edits don't invalidate them; a
+//! key suppresses every finding of that rule in that function.  The
+//! intended workflow: a new rule lands with its pre-existing findings
+//! captured via `--write-baseline`, and the baseline only ever shrinks
+//! as findings are fixed (`check` reports stale entries).
+
+use std::path::Path;
+
+use crate::rules::Finding;
+
+/// Result of filtering findings through a baseline.
+pub struct Applied {
+    /// Findings not covered by the baseline (these fail the check).
+    pub active: Vec<Finding>,
+    /// Number of findings suppressed by the baseline.
+    pub suppressed: usize,
+    /// Baseline entries that matched nothing (stale; should be removed).
+    pub unused: Vec<String>,
+}
+
+/// Load baseline keys from `path`; a missing file is an empty baseline.
+pub fn load(path: &Path) -> Vec<String> {
+    let Ok(text) = std::fs::read_to_string(path) else {
+        return Vec::new();
+    };
+    parse(&text)
+}
+
+/// Parse baseline text into keys.
+pub fn parse(text: &str) -> Vec<String> {
+    text.lines()
+        .map(str::trim)
+        .filter(|l| !l.is_empty() && !l.starts_with('#'))
+        .map(str::to_string)
+        .collect()
+}
+
+/// Split `findings` into active vs baselined.
+pub fn apply(findings: Vec<Finding>, baseline: &[String]) -> Applied {
+    let mut used = vec![false; baseline.len()];
+    let mut active = Vec::new();
+    let mut suppressed = 0usize;
+    for f in findings {
+        match baseline.iter().position(|k| *k == f.key) {
+            Some(i) => {
+                used[i] = true;
+                suppressed += 1;
+            }
+            None => active.push(f),
+        }
+    }
+    let unused = baseline
+        .iter()
+        .zip(used.iter())
+        .filter(|(_, u)| !**u)
+        .map(|(k, _)| k.clone())
+        .collect();
+    Applied {
+        active,
+        suppressed,
+        unused,
+    }
+}
+
+/// Render findings as baseline text (sorted unique keys + header).
+pub fn render(findings: &[Finding]) -> String {
+    let mut keys: Vec<&str> = findings.iter().map(|f| f.key.as_str()).collect();
+    keys.sort_unstable();
+    keys.dedup();
+    let mut out = String::from(
+        "# pitome-lint baseline: pre-existing findings triaged out of CI.\n\
+         # One key per line (`rule file fn=<name>`); regenerate with\n\
+         # `cargo run -p pitome-lint -- check --write-baseline`.\n\
+         # This file should only ever shrink.\n",
+    );
+    for k in keys {
+        out.push_str(k);
+        out.push('\n');
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn f(rule: &'static str, file: &str, fnn: &str, line: usize) -> Finding {
+        Finding {
+            rule,
+            file: file.to_string(),
+            line,
+            msg: "m".to_string(),
+            key: format!("{rule} {file} fn={fnn}"),
+        }
+    }
+
+    #[test]
+    fn apply_suppresses_and_reports_stale() {
+        let findings = vec![
+            f("one-gram", "rust/src/a.rs", "x", 3),
+            f("one-gram", "rust/src/a.rs", "x", 9),
+            f("unsafe-audit", "rust/src/b.rs", "y", 1),
+        ];
+        let baseline = vec![
+            "one-gram rust/src/a.rs fn=x".to_string(),
+            "lock-discipline rust/src/gone.rs fn=z".to_string(),
+        ];
+        let a = apply(findings, &baseline);
+        assert_eq!(a.suppressed, 2, "one key suppresses all findings in the fn");
+        assert_eq!(a.active.len(), 1);
+        assert_eq!(a.active[0].rule, "unsafe-audit");
+        assert_eq!(a.unused, vec!["lock-discipline rust/src/gone.rs fn=z".to_string()]);
+    }
+
+    #[test]
+    fn render_roundtrips_through_parse() {
+        let findings = vec![f("one-gram", "a.rs", "x", 3), f("one-gram", "a.rs", "x", 9)];
+        let text = render(&findings);
+        let keys = parse(&text);
+        assert_eq!(keys, vec!["one-gram a.rs fn=x".to_string()]);
+    }
+}

@@ -1,0 +1,64 @@
+//! Repo-specific rule configuration: the declared hot-path module list
+//! and the sanctioned `CosineGram` build sites.
+//!
+//! Paths are matched against repo-relative file paths like
+//! `rust/src/merge/plan.rs`; entries ending in `/` are directory
+//! prefixes, all others are suffix matches.
+
+/// Modules whose steady-state loops must stay allocation-free
+/// (statically complementing `rust/tests/alloc_free.rs`).
+pub const HOT_PATH_MODULES: &[&str] = &[
+    "src/tensor/ops.rs",
+    "src/merge/",
+    "src/model/encoder.rs",
+    "src/engine/",
+    "src/coordinator/pool.rs",
+];
+
+/// Sanctioned `CosineGram::build` / `.rebuild(...)` call sites, as
+/// `(path suffix, function name)` pairs; `"*"` sanctions a whole file.
+/// This mirrors the runtime `gram_builds_this_thread()` counter: exactly
+/// one Gram build per merge/coarsen step, owned by the dispatch points
+/// below, plus the allocating convenience wrappers that the hot path
+/// never calls.
+pub const ONE_GRAM_ALLOWED: &[(&str, &str)] = &[
+    // defining module (build/rebuild themselves, cosine_matrix helper)
+    ("src/tensor/ops.rs", "*"),
+    // allocating convenience wrappers that build their own Gram
+    ("src/merge/pitome.rs", "ordered_bsm_plan"),
+    ("src/merge/tome.rs", "tome_plan"),
+    ("src/merge/diffrate.rs", "diffrate_plan"),
+    ("src/merge/energy.rs", "energy_scores"),
+    // the two hot-path dispatch points: one build/rebuild per merge step
+    ("src/merge/mod.rs", "merge_step"),
+    ("src/merge/mod.rs", "merge_step_scratch"),
+    // one rebuild per spectral coarsening step
+    ("src/eval/spectral.rs", "iterative_coarsen_scratch"),
+];
+
+/// Allocating constructs forbidden on hot paths: `Path::new`-style calls.
+pub const ALLOC_PATHS: &[&str] = &["Vec", "Box", "String"];
+
+/// Allocating constructs forbidden on hot paths: macros.
+pub const ALLOC_MACROS: &[&str] = &["vec", "format"];
+
+/// Allocating constructs forbidden on hot paths: method calls.
+pub const ALLOC_METHODS: &[&str] = &["to_vec", "clone", "collect"];
+
+/// Whether `rel` is inside the declared hot-path module list.
+pub fn is_hot_path(rel: &str) -> bool {
+    HOT_PATH_MODULES.iter().any(|m| {
+        if m.ends_with('/') {
+            rel.contains(m)
+        } else {
+            rel.ends_with(m)
+        }
+    })
+}
+
+/// Whether `(rel, fn_name)` is a sanctioned Gram build site.
+pub fn one_gram_allowed(rel: &str, fn_name: &str) -> bool {
+    ONE_GRAM_ALLOWED
+        .iter()
+        .any(|(path, f)| rel.ends_with(path) && (*f == "*" || *f == fn_name))
+}

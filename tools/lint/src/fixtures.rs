@@ -1,0 +1,322 @@
+//! Embedded fixture snippets: each rule × one seeded violation + one
+//! clean near-miss, run by `pitome-lint selftest` and by the crate's
+//! test suite.  The fixtures are linted through the exact same engine
+//! as the real tree (`crate::lint_sources`), so they prove each rule
+//! fires on a violation and stays quiet on clean code.
+
+use crate::rules::Finding;
+use crate::{lint_sources, SourceFile};
+
+/// One self-test case.
+pub struct Fixture {
+    /// Case name (reported by `selftest`).
+    pub name: &'static str,
+    /// `(repo-relative path, source)` pairs fed to the engine.
+    pub files: &'static [(&'static str, &'static str)],
+    /// Rule under test.
+    pub rule: &'static str,
+    /// Whether the rule must fire (`true`) or stay quiet (`false`).
+    pub should_fire: bool,
+}
+
+/// All fixture cases.
+pub const FIXTURES: &[Fixture] = &[
+    Fixture {
+        name: "hot-path-alloc fires on a stray to_vec in a merge builder",
+        files: &[(
+            "rust/src/merge/fixture.rs",
+            r##"
+pub fn stray_into(xs: &[f32], out: &mut Vec<f32>) {
+    let tmp = xs.to_vec();
+    out.copy_from_slice(&tmp);
+}
+"##,
+        )],
+        rule: "hot-path-alloc",
+        should_fire: true,
+    },
+    Fixture {
+        name: "hot-path-alloc fires on vec![] and Vec::new in engine code",
+        files: &[(
+            "rust/src/engine/fixture.rs",
+            r##"
+pub fn hot(n: usize) -> usize {
+    let a = vec![0f32; n];
+    let b: Vec<f32> = Vec::new();
+    a.len() + b.len()
+}
+"##,
+        )],
+        rule: "hot-path-alloc",
+        should_fire: true,
+    },
+    Fixture {
+        name: "hot-path-alloc stays quiet behind an allow(alloc) marker",
+        files: &[(
+            "rust/src/merge/fixture.rs",
+            r##"
+/// Cold-path constructor.
+// lint: allow(alloc) reason=cold-path constructor, called once per worker
+pub fn empty() -> Vec<f32> {
+    Vec::new()
+}
+"##,
+        )],
+        rule: "hot-path-alloc",
+        should_fire: false,
+    },
+    Fixture {
+        name: "hot-path-alloc fires when the marker has no reason",
+        files: &[(
+            "rust/src/merge/fixture.rs",
+            r##"
+// lint: allow(alloc)
+pub fn empty() -> Vec<f32> {
+    Vec::new()
+}
+"##,
+        )],
+        rule: "hot-path-alloc",
+        should_fire: true,
+    },
+    Fixture {
+        name: "hot-path-alloc ignores cold modules and test mods",
+        files: &[
+            (
+                "rust/src/eval/fixture.rs",
+                r##"
+pub fn cold(xs: &[f32]) -> Vec<f32> {
+    xs.to_vec()
+}
+"##,
+            ),
+            (
+                "rust/src/merge/fixture.rs",
+                r##"
+pub fn hot(xs: &mut [f32]) {
+    xs[0] = 1.0;
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn t() {
+        let v = vec![1f32, 2.0];
+        assert_eq!(v.to_vec().len(), 2);
+    }
+}
+"##,
+            ),
+        ],
+        rule: "hot-path-alloc",
+        should_fire: false,
+    },
+    Fixture {
+        name: "one-gram fires on an unsanctioned CosineGram::build",
+        files: &[(
+            "rust/src/engine/fixture.rs",
+            r##"
+use crate::tensor::{CosineGram, Mat};
+
+pub fn sneaky_second_gram(kf: &Mat) -> CosineGram {
+    CosineGram::build(kf)
+}
+"##,
+        )],
+        rule: "one-gram",
+        should_fire: true,
+    },
+    Fixture {
+        name: "one-gram fires on an unsanctioned .rebuild(...)",
+        files: &[(
+            "rust/src/model/encoder.rs",
+            r##"
+pub fn hidden_rebuild(g: &mut CosineGram, kf: &Mat, kn: &mut Mat) {
+    g.rebuild(kf, kn);
+}
+"##,
+        )],
+        rule: "one-gram",
+        should_fire: true,
+    },
+    Fixture {
+        name: "one-gram stays quiet at a sanctioned call site",
+        files: &[(
+            "rust/src/merge/tome.rs",
+            r##"
+pub fn tome_plan(kf: &Mat, k: usize) -> MergePlan {
+    tome_plan_gram(&CosineGram::build(kf), k)
+}
+"##,
+        )],
+        rule: "one-gram",
+        should_fire: false,
+    },
+    Fixture {
+        name: "deprecated-internal-use fires on a cross-module call",
+        files: &[
+            (
+                "rust/src/model/fixture.rs",
+                r##"
+#[deprecated(note = "use the session API")]
+pub fn old_api(x: u32) -> u32 {
+    x + 1
+}
+"##,
+            ),
+            (
+                "rust/src/eval/fixture.rs",
+                r##"
+pub fn caller() -> u32 {
+    old_api(1)
+}
+"##,
+            ),
+        ],
+        rule: "deprecated-internal-use",
+        should_fire: true,
+    },
+    Fixture {
+        name: "deprecated-internal-use honors allow(deprecated) wrappers",
+        files: &[
+            (
+                "rust/src/model/fixture.rs",
+                r##"
+#[deprecated(note = "use the session API")]
+pub fn old_api(x: u32) -> u32 {
+    x + 1
+}
+
+#[deprecated(note = "use the session API")]
+#[allow(deprecated)]
+pub fn old_api_batch(x: u32) -> u32 {
+    old_api(x)
+}
+"##,
+            ),
+            (
+                "rust/src/eval/fixture.rs",
+                r##"
+#![allow(deprecated)]
+
+pub fn parity_reference() -> u32 {
+    old_api(1)
+}
+"##,
+            ),
+        ],
+        rule: "deprecated-internal-use",
+        should_fire: false,
+    },
+    Fixture {
+        name: "unsafe-audit fires on an undocumented unsafe block",
+        files: &[(
+            "rust/src/util/fixture.rs",
+            r##"
+pub fn peek(xs: &[f32]) -> f32 {
+    unsafe { *xs.get_unchecked(0) }
+}
+"##,
+        )],
+        rule: "unsafe-audit",
+        should_fire: true,
+    },
+    Fixture {
+        name: "unsafe-audit stays quiet with SAFETY comments",
+        files: &[(
+            "rust/src/util/fixture.rs",
+            r##"
+pub fn peek(xs: &[f32]) -> f32 {
+    // SAFETY: caller guarantees xs is non-empty.
+    unsafe { *xs.get_unchecked(0) }
+}
+
+// SAFETY: the wrapper only forwards to the system allocator.
+unsafe impl Send for Holder {}
+"##,
+        )],
+        rule: "unsafe-audit",
+        should_fire: false,
+    },
+    Fixture {
+        name: "lock-discipline fires on two undocumented locks",
+        files: &[(
+            "rust/src/coordinator/fixture.rs",
+            r##"
+pub fn drain(&self) -> usize {
+    let a = self.pool.lock().unwrap().len();
+    let b = self.metrics.lock().unwrap().len();
+    a + b
+}
+"##,
+        )],
+        rule: "lock-discipline",
+        should_fire: true,
+    },
+    Fixture {
+        name: "lock-discipline honors a lock-order comment",
+        files: &[(
+            "rust/src/coordinator/fixture.rs",
+            r##"
+// lock-order: pool before metrics; never held across a batch cycle.
+pub fn drain(&self) -> usize {
+    let a = self.pool.lock().unwrap().len();
+    let b = self.metrics.lock().unwrap().len();
+    a + b
+}
+"##,
+        )],
+        rule: "lock-discipline",
+        should_fire: false,
+    },
+    Fixture {
+        name: "lock-discipline ignores repeated locks of one mutex",
+        files: &[(
+            "rust/src/coordinator/fixture.rs",
+            r##"
+pub fn twice(&self) -> usize {
+    let a = self.pool.lock().unwrap().len();
+    let b = self.pool.lock().unwrap().len();
+    a + b
+}
+"##,
+        )],
+        rule: "lock-discipline",
+        should_fire: false,
+    },
+];
+
+/// Run one fixture; `Ok` findings-count on expectation match, else a
+/// human-readable failure description.
+pub fn run_fixture(fx: &Fixture) -> Result<usize, String> {
+    let files: Vec<SourceFile> = fx
+        .files
+        .iter()
+        .map(|(rel, src)| SourceFile {
+            rel: rel.to_string(),
+            text: src.to_string(),
+        })
+        .collect();
+    let findings: Vec<Finding> = lint_sources(&files)
+        .into_iter()
+        .filter(|f| f.rule == fx.rule)
+        .collect();
+    let fired = !findings.is_empty();
+    if fired == fx.should_fire {
+        Ok(findings.len())
+    } else {
+        Err(format!(
+            "fixture `{}`: expected rule `{}` to {} but it {} ({} findings)",
+            fx.name,
+            fx.rule,
+            if fx.should_fire { "fire" } else { "stay quiet" },
+            if fired { "fired" } else { "stayed quiet" },
+            findings.len(),
+        ))
+    }
+}
+
+/// Run all fixtures; collect failures.
+pub fn run_all() -> Vec<String> {
+    FIXTURES.iter().filter_map(|fx| run_fixture(fx).err()).collect()
+}

@@ -1,0 +1,347 @@
+//! Minimal hand-rolled Rust lexer.
+//!
+//! Produces a flat token stream (identifiers, punctuation, delimiters,
+//! opaque literals) plus a side channel of comments with their line
+//! numbers.  String/char literal *contents* are deliberately dropped so
+//! that rule matching (`contains("deprecated")`, `CosineGram :: build`,
+//! ...) can never be fooled by text inside a literal.  Lifetimes are
+//! consumed and discarded; doc comments land in the comment channel like
+//! any other comment.
+//!
+//! This is not a full Rust lexer — it only needs to be faithful enough
+//! for block structure (brace matching), attribute text, and the handful
+//! of token patterns the rules in [`crate::rules`] look for.
+
+/// Kind of a lexed token.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum TokKind {
+    /// Identifier or keyword (`fn`, `Vec`, `self`, ...).
+    Ident,
+    /// Single punctuation character (`.`, `:`, `#`, `!`, `;`, ...).
+    Punct,
+    /// Opening delimiter: one of `(`, `[`, `{`.
+    Open,
+    /// Closing delimiter: one of `)`, `]`, `}`.
+    Close,
+    /// String/char/number literal (contents dropped, `text` is empty).
+    Lit,
+}
+
+/// One source token with its 1-based line number.
+#[derive(Debug, Clone)]
+pub struct Tok {
+    /// Token class.
+    pub kind: TokKind,
+    /// Token text (empty for [`TokKind::Lit`]).
+    pub text: String,
+    /// 1-based source line the token starts on.
+    pub line: usize,
+}
+
+/// One comment (line, block, or doc) with markers stripped.
+#[derive(Debug, Clone)]
+pub struct Comment {
+    /// 1-based line the comment starts on.
+    pub line: usize,
+    /// Comment text without the `//` / `/* */` markers, trimmed.
+    pub text: String,
+}
+
+/// Lexer output: the token stream plus all comments.
+#[derive(Debug, Default)]
+pub struct Lexed {
+    /// Code tokens in source order.
+    pub toks: Vec<Tok>,
+    /// Comments in source order.
+    pub comments: Vec<Comment>,
+}
+
+/// If `cs[i]` starts a raw string (`r"`, `r#"`, `br#"` ...), return the
+/// index one past its closing quote+hashes; otherwise `None`.
+fn raw_string_end(cs: &[char], i: usize) -> Option<usize> {
+    let mut j = i;
+    if j < cs.len() && cs[j] == 'b' {
+        j += 1;
+    }
+    if j >= cs.len() || cs[j] != 'r' {
+        return None;
+    }
+    j += 1;
+    let mut hashes = 0usize;
+    while j < cs.len() && cs[j] == '#' {
+        hashes += 1;
+        j += 1;
+    }
+    if j >= cs.len() || cs[j] != '"' {
+        return None;
+    }
+    j += 1;
+    while j < cs.len() {
+        if cs[j] == '"' {
+            let mut k = j + 1;
+            let mut h = 0usize;
+            while k < cs.len() && h < hashes && cs[k] == '#' {
+                h += 1;
+                k += 1;
+            }
+            if h == hashes {
+                return Some(k);
+            }
+        }
+        j += 1;
+    }
+    Some(cs.len())
+}
+
+/// Skip a normal `"..."` string starting at the opening quote index;
+/// returns the index one past the closing quote and bumps `line` for any
+/// embedded newlines.
+fn skip_string(cs: &[char], quote: usize, line: &mut usize) -> usize {
+    let mut j = quote + 1;
+    while j < cs.len() {
+        match cs[j] {
+            '\\' => j += 2,
+            '"' => return j + 1,
+            '\n' => {
+                *line += 1;
+                j += 1;
+            }
+            _ => j += 1,
+        }
+    }
+    j
+}
+
+/// Lex `src` into tokens + comments.
+pub fn lex(src: &str) -> Lexed {
+    let cs: Vec<char> = src.chars().collect();
+    let n = cs.len();
+    let mut out = Lexed::default();
+    let mut i = 0usize;
+    let mut line = 1usize;
+    while i < n {
+        let c = cs[i];
+        if c == '\n' {
+            line += 1;
+            i += 1;
+            continue;
+        }
+        if c.is_whitespace() {
+            i += 1;
+            continue;
+        }
+        // line comment (incl. /// and //! doc comments)
+        if c == '/' && i + 1 < n && cs[i + 1] == '/' {
+            let mut j = i + 2;
+            while j < n && (cs[j] == '/' || cs[j] == '!') {
+                j += 1;
+            }
+            let start = j;
+            while j < n && cs[j] != '\n' {
+                j += 1;
+            }
+            let text: String = cs[start..j].iter().collect();
+            out.comments.push(Comment {
+                line,
+                text: text.trim().to_string(),
+            });
+            i = j;
+            continue;
+        }
+        // block comment (Rust block comments nest)
+        if c == '/' && i + 1 < n && cs[i + 1] == '*' {
+            let start_line = line;
+            let mut depth = 1usize;
+            let mut j = i + 2;
+            let mut text = String::new();
+            while j < n && depth > 0 {
+                if cs[j] == '/' && j + 1 < n && cs[j + 1] == '*' {
+                    depth += 1;
+                    j += 2;
+                    continue;
+                }
+                if cs[j] == '*' && j + 1 < n && cs[j + 1] == '/' {
+                    depth -= 1;
+                    j += 2;
+                    continue;
+                }
+                if cs[j] == '\n' {
+                    line += 1;
+                }
+                text.push(cs[j]);
+                j += 1;
+            }
+            out.comments.push(Comment {
+                line: start_line,
+                text: text.trim().to_string(),
+            });
+            i = j;
+            continue;
+        }
+        // raw strings: r"..." / r#"..."# / br"..." ...
+        if c == 'r' || c == 'b' {
+            if let Some(end) = raw_string_end(&cs, i) {
+                let start_line = line;
+                for k in i..end.min(n) {
+                    if cs[k] == '\n' {
+                        line += 1;
+                    }
+                }
+                out.toks.push(Tok {
+                    kind: TokKind::Lit,
+                    text: String::new(),
+                    line: start_line,
+                });
+                i = end;
+                continue;
+            }
+            if c == 'b' && i + 1 < n && cs[i + 1] == '"' {
+                let start_line = line;
+                i = skip_string(&cs, i + 1, &mut line);
+                out.toks.push(Tok {
+                    kind: TokKind::Lit,
+                    text: String::new(),
+                    line: start_line,
+                });
+                continue;
+            }
+        }
+        // normal string
+        if c == '"' {
+            let start_line = line;
+            i = skip_string(&cs, i, &mut line);
+            out.toks.push(Tok {
+                kind: TokKind::Lit,
+                text: String::new(),
+                line: start_line,
+            });
+            continue;
+        }
+        // char literal vs lifetime
+        if c == '\'' {
+            if i + 1 < n && cs[i + 1] == '\\' {
+                // escaped char literal: skip to closing quote
+                let mut j = i + 2;
+                while j < n && cs[j] != '\'' {
+                    j += 1;
+                }
+                out.toks.push(Tok {
+                    kind: TokKind::Lit,
+                    text: String::new(),
+                    line,
+                });
+                i = j + 1;
+                continue;
+            }
+            if i + 2 < n && cs[i + 2] == '\'' {
+                // plain 'x' char literal
+                out.toks.push(Tok {
+                    kind: TokKind::Lit,
+                    text: String::new(),
+                    line,
+                });
+                i += 3;
+                continue;
+            }
+            // lifetime: consume quote + identifier, emit nothing
+            let mut j = i + 1;
+            while j < n && (cs[j].is_alphanumeric() || cs[j] == '_') {
+                j += 1;
+            }
+            i = j.max(i + 1);
+            continue;
+        }
+        // identifier / keyword
+        if c.is_alphabetic() || c == '_' {
+            let mut j = i;
+            while j < n && (cs[j].is_alphanumeric() || cs[j] == '_') {
+                j += 1;
+            }
+            let text: String = cs[i..j].iter().collect();
+            out.toks.push(Tok {
+                kind: TokKind::Ident,
+                text,
+                line,
+            });
+            i = j;
+            continue;
+        }
+        // number literal (dots only when followed by a digit, so `0..n`
+        // still yields two `.` puncts)
+        if c.is_ascii_digit() {
+            let mut j = i;
+            while j < n {
+                let d = cs[j];
+                if d.is_alphanumeric() || d == '_' {
+                    j += 1;
+                    continue;
+                }
+                if d == '.' && j + 1 < n && cs[j + 1].is_ascii_digit() {
+                    j += 2;
+                    continue;
+                }
+                break;
+            }
+            out.toks.push(Tok {
+                kind: TokKind::Lit,
+                text: String::new(),
+                line,
+            });
+            i = j;
+            continue;
+        }
+        // delimiters and single-char punctuation
+        let kind = match c {
+            '(' | '[' | '{' => TokKind::Open,
+            ')' | ']' | '}' => TokKind::Close,
+            _ => TokKind::Punct,
+        };
+        out.toks.push(Tok {
+            kind,
+            text: c.to_string(),
+            line,
+        });
+        i += 1;
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn comments_and_strings_are_side_channeled() {
+        let lx = lex("// top\nfn a() { let s = \"vec![]\"; } /* block */\n");
+        assert_eq!(lx.comments.len(), 2);
+        assert_eq!(lx.comments[0].text, "top");
+        assert_eq!(lx.comments[1].text, "block");
+        // the vec![] inside the string must NOT appear as tokens
+        assert!(!lx.toks.iter().any(|t| t.text == "vec"));
+        assert!(lx.toks.iter().any(|t| t.text == "fn" && t.line == 2));
+    }
+
+    #[test]
+    fn raw_strings_and_lifetimes() {
+        let lx = lex("fn f<'a>(x: &'a str) -> &'a str { r#\"clone()\"# ; x }");
+        assert!(!lx.toks.iter().any(|t| t.text == "clone"));
+        assert!(lx.toks.iter().any(|t| t.text == "fn"));
+    }
+
+    #[test]
+    fn char_literal_is_not_a_lifetime() {
+        let lx = lex("let c = 'x'; let nl = '\\n'; let lt: &'static str = s;");
+        let idents: Vec<&str> =
+            lx.toks.iter().filter(|t| t.kind == TokKind::Ident).map(|t| t.text.as_str()).collect();
+        assert!(idents.contains(&"c"));
+        // 'static consumed as lifetime, not an ident
+        assert!(!idents.contains(&"static"));
+    }
+
+    #[test]
+    fn number_range_keeps_dot_puncts() {
+        let lx = lex("for i in 0..n.len() {}");
+        let dots = lx.toks.iter().filter(|t| t.text == ".").count();
+        assert_eq!(dots, 3); // two from `..`, one from `n.len`
+    }
+}

@@ -1,0 +1,131 @@
+//! `pitome-lint` — offline static analysis for the PiToMe repo.
+//!
+//! Enforces the serving stack's load-bearing invariants at the source
+//! level, complementing the runtime counting-allocator and parity tests
+//! (`rust/tests/alloc_free.rs`, `rust/tests/prop_engine.rs`):
+//!
+//! * **hot-path-alloc** — no allocating constructs inside the declared
+//!   hot-path modules without an explicit `// lint: allow(alloc)
+//!   reason=...` marker.
+//! * **one-gram** — `CosineGram::build`/`.rebuild` only at sanctioned
+//!   call sites (one Gram per merge/coarsen step).
+//! * **deprecated-internal-use** — non-test source must not call
+//!   `#[deprecated]` entry points.
+//! * **unsafe-audit** — every `unsafe` fn/impl/block carries a
+//!   `// SAFETY:` comment.
+//! * **lock-discipline** — multi-mutex functions declare their
+//!   acquisition order with a `// lock-order:` comment.
+//!
+//! The crate is dependency-free: a hand-rolled lexer ([`lexer`]) and
+//! block parser ([`parse`]) feed the rule engine ([`rules`]); a
+//! checked-in baseline ([`baseline`]) triages pre-existing findings and
+//! embedded fixtures ([`fixtures`]) self-test every rule.
+
+pub mod baseline;
+pub mod config;
+pub mod fixtures;
+pub mod lexer;
+pub mod parse;
+pub mod rules;
+
+use std::collections::BTreeSet;
+use std::path::Path;
+
+use rules::{FileCtx, Finding};
+
+/// One source file to lint.
+pub struct SourceFile {
+    /// Repo-relative path with forward slashes (`rust/src/...`).
+    pub rel: String,
+    /// File contents.
+    pub text: String,
+}
+
+/// Lint a set of sources; findings are sorted and deduplicated.
+pub fn lint_sources(files: &[SourceFile]) -> Vec<Finding> {
+    let prepped: Vec<(&str, lexer::Lexed, parse::Parsed)> = files
+        .iter()
+        .map(|f| {
+            let lx = lexer::lex(&f.text);
+            let p = parse::parse(&lx);
+            (f.rel.as_str(), lx, p)
+        })
+        .collect();
+    let mut deprecated: BTreeSet<String> = BTreeSet::new();
+    for (_, _, p) in &prepped {
+        rules::deprecated_names(p, &mut deprecated);
+    }
+    let mut out: Vec<Finding> = Vec::new();
+    for (rel, lx, p) in &prepped {
+        let ctx = FileCtx {
+            rel,
+            lexed: lx,
+            parsed: p,
+        };
+        rules::hot_path_alloc(&ctx, &mut out);
+        rules::one_gram(&ctx, &mut out);
+        rules::deprecated_use(&ctx, &deprecated, &mut out);
+        rules::unsafe_audit(&ctx, &mut out);
+        rules::lock_discipline(&ctx, &mut out);
+    }
+    out.sort_by(|a, b| {
+        (&a.file, a.line, a.rule, &a.msg).cmp(&(&b.file, b.line, b.rule, &b.msg))
+    });
+    out.dedup_by(|a, b| {
+        a.file == b.file && a.line == b.line && a.rule == b.rule && a.msg == b.msg
+    });
+    out
+}
+
+/// Collect the lintable tree under `root`: `rust/src`, `rust/benches`,
+/// `rust/tests` (vendored stubs are deliberately out of scope).
+pub fn collect_repo_files(root: &Path) -> std::io::Result<Vec<SourceFile>> {
+    let mut files = Vec::new();
+    for sub in ["rust/src", "rust/benches", "rust/tests"] {
+        let dir = root.join(sub);
+        if dir.is_dir() {
+            walk(&dir, root, &mut files)?;
+        }
+    }
+    files.sort_by(|a, b| a.rel.cmp(&b.rel));
+    Ok(files)
+}
+
+fn walk(dir: &Path, root: &Path, out: &mut Vec<SourceFile>) -> std::io::Result<()> {
+    for entry in std::fs::read_dir(dir)? {
+        let path = entry?.path();
+        if path.is_dir() {
+            walk(&path, root, out)?;
+        } else if path.extension().map(|x| x == "rs").unwrap_or(false) {
+            let rel = path
+                .strip_prefix(root)
+                .unwrap_or(&path)
+                .to_string_lossy()
+                .replace('\\', "/");
+            out.push(SourceFile {
+                rel,
+                text: std::fs::read_to_string(&path)?,
+            });
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn findings_are_sorted_and_deduped() {
+        let files = vec![SourceFile {
+            rel: "rust/src/merge/x.rs".to_string(),
+            text: "pub fn a() { let v = vec![1]; }\npub fn b() { let w = vec![2]; }\n"
+                .to_string(),
+        }];
+        let fs = lint_sources(&files);
+        assert_eq!(fs.len(), 2);
+        assert!(fs[0].line <= fs[1].line);
+        assert!(fs.iter().all(|f| f.rule == "hot-path-alloc"));
+        assert_eq!(fs[0].key, "hot-path-alloc rust/src/merge/x.rs fn=a");
+    }
+}

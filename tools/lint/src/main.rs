@@ -1,0 +1,144 @@
+//! `pitome-lint` CLI.
+//!
+//! ```text
+//! cargo run -p pitome-lint -- check [--root DIR] [--baseline FILE]
+//!                                   [--write-baseline]
+//! cargo run -p pitome-lint -- selftest
+//! ```
+//!
+//! `check` lints `rust/src`, `rust/benches`, and `rust/tests` under the
+//! workspace root, filters findings through the checked-in baseline
+//! (`tools/lint/baseline.txt`), prints rustc-style diagnostics, and
+//! exits nonzero on any active finding.  `selftest` runs the embedded
+//! fixture suite (each rule × seeded violation + clean near-miss).
+
+use std::path::PathBuf;
+use std::process::ExitCode;
+
+use pitome_lint::{baseline, collect_repo_files, fixtures, lint_sources};
+
+fn find_root() -> PathBuf {
+    let mut dir = std::env::current_dir().unwrap_or_else(|_| PathBuf::from("."));
+    loop {
+        if dir.join("rust/src").is_dir() && dir.join("Cargo.toml").is_file() {
+            return dir;
+        }
+        if !dir.pop() {
+            return PathBuf::from(".");
+        }
+    }
+}
+
+fn usage() -> ExitCode {
+    eprintln!(
+        "usage: pitome-lint <check|selftest> [--root DIR] [--baseline FILE] \
+         [--write-baseline]"
+    );
+    ExitCode::from(2)
+}
+
+fn main() -> ExitCode {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let mut cmd: Option<String> = None;
+    let mut root: Option<PathBuf> = None;
+    let mut baseline_path: Option<PathBuf> = None;
+    let mut write_baseline = false;
+    let mut i = 0usize;
+    while i < args.len() {
+        match args[i].as_str() {
+            "--root" => {
+                i += 1;
+                root = args.get(i).map(PathBuf::from);
+            }
+            "--baseline" => {
+                i += 1;
+                baseline_path = args.get(i).map(PathBuf::from);
+            }
+            "--write-baseline" => write_baseline = true,
+            a if a.starts_with('-') => return usage(),
+            a => {
+                if cmd.is_some() {
+                    return usage();
+                }
+                cmd = Some(a.to_string());
+            }
+        }
+        i += 1;
+    }
+    match cmd.as_deref().unwrap_or("check") {
+        "selftest" => {
+            let failures = fixtures::run_all();
+            let total = fixtures::FIXTURES.len();
+            if failures.is_empty() {
+                println!("pitome-lint selftest: {total}/{total} fixtures ok");
+                ExitCode::SUCCESS
+            } else {
+                for f in &failures {
+                    eprintln!("selftest failure: {f}");
+                }
+                eprintln!(
+                    "pitome-lint selftest: {}/{} fixtures ok",
+                    total - failures.len(),
+                    total
+                );
+                ExitCode::FAILURE
+            }
+        }
+        "check" => {
+            let root = root.unwrap_or_else(find_root);
+            let bpath =
+                baseline_path.unwrap_or_else(|| root.join("tools/lint/baseline.txt"));
+            let files = match collect_repo_files(&root) {
+                Ok(f) => f,
+                Err(e) => {
+                    eprintln!("pitome-lint: cannot read tree under {}: {e}", root.display());
+                    return ExitCode::FAILURE;
+                }
+            };
+            if files.is_empty() {
+                eprintln!(
+                    "pitome-lint: no .rs files under {} (wrong --root?)",
+                    root.display()
+                );
+                return ExitCode::FAILURE;
+            }
+            let findings = lint_sources(&files);
+            if write_baseline {
+                let text = baseline::render(&findings);
+                if let Err(e) = std::fs::write(&bpath, text) {
+                    eprintln!("pitome-lint: cannot write {}: {e}", bpath.display());
+                    return ExitCode::FAILURE;
+                }
+                println!(
+                    "pitome-lint: wrote {} baseline keys to {}",
+                    findings.len(),
+                    bpath.display()
+                );
+                return ExitCode::SUCCESS;
+            }
+            let keys = baseline::load(&bpath);
+            let applied = baseline::apply(findings, &keys);
+            for f in &applied.active {
+                println!("error[{}]: {}", f.rule, f.msg);
+                println!("  --> {}:{}", f.file, f.line);
+            }
+            for k in &applied.unused {
+                println!("warning: stale baseline entry (fixed? remove it): {k}");
+            }
+            println!(
+                "pitome-lint: {} file(s), {} violation(s), {} baselined, \
+                 {} stale baseline entr(ies)",
+                files.len(),
+                applied.active.len(),
+                applied.suppressed,
+                applied.unused.len()
+            );
+            if applied.active.is_empty() {
+                ExitCode::SUCCESS
+            } else {
+                ExitCode::FAILURE
+            }
+        }
+        _ => usage(),
+    }
+}

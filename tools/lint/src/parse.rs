@@ -1,0 +1,399 @@
+//! Light block parser over the token stream from [`crate::lexer`].
+//!
+//! Recovers just enough structure for the rules: function items with
+//! their attributes and body spans, `#[cfg(test)] mod` regions,
+//! `#![allow(deprecated)]` regions, and `unsafe` sites.  It is a single
+//! forward pass with a delimiter stack — no expression parsing.
+
+use crate::lexer::{Lexed, Tok, TokKind};
+
+/// A function item (free fn, method, or nested fn).
+#[derive(Debug, Clone)]
+pub struct FnItem {
+    /// Function name (empty if unnamed/unparseable).
+    pub name: String,
+    /// Outer attribute texts attached to the item (token texts joined
+    /// with spaces, literals dropped), e.g. `"deprecated ( note = )"`.
+    pub attrs: Vec<String>,
+    /// Line of the first attribute (== `sig_line` when there are none).
+    pub attr_line: usize,
+    /// Line of the `fn` keyword.
+    pub sig_line: usize,
+    /// Token index of the body `{` (`usize::MAX` for bodyless decls).
+    pub body_open: usize,
+    /// Token index of the body `}` (`usize::MAX` for bodyless decls).
+    pub body_close: usize,
+    /// Line of the body `{`.
+    pub body_open_line: usize,
+    /// Line of the body `}`.
+    pub body_close_line: usize,
+}
+
+impl FnItem {
+    /// Whether `line` falls inside this item (signature or body).
+    pub fn contains_line(&self, line: usize) -> bool {
+        line >= self.sig_line && line <= self.body_close_line
+    }
+
+    /// First line of the item including attributes.
+    pub fn span_lo(&self) -> usize {
+        self.attr_line.min(self.sig_line)
+    }
+}
+
+/// An inclusive line region.
+#[derive(Debug, Clone, Copy)]
+pub struct Region {
+    /// First line of the region.
+    pub start_line: usize,
+    /// Last line of the region.
+    pub end_line: usize,
+}
+
+impl Region {
+    /// Whether `line` falls inside the region.
+    pub fn contains(&self, line: usize) -> bool {
+        line >= self.start_line && line <= self.end_line
+    }
+}
+
+/// What kind of `unsafe` introduced a site.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum UnsafeKind {
+    /// `unsafe fn`.
+    Fn,
+    /// `unsafe impl`.
+    Impl,
+    /// `unsafe { ... }` block.
+    Block,
+}
+
+/// One `unsafe` occurrence.
+#[derive(Debug, Clone, Copy)]
+pub struct UnsafeSite {
+    /// Line of the `unsafe` keyword.
+    pub line: usize,
+    /// Site kind.
+    pub kind: UnsafeKind,
+}
+
+/// Parser output for one file.
+#[derive(Debug, Default)]
+pub struct Parsed {
+    /// All function items, in source order (nested fns included).
+    pub fns: Vec<FnItem>,
+    /// Line regions of `#[cfg(test)] mod` blocks.
+    pub test_regions: Vec<Region>,
+    /// Line regions of blocks carrying `#![allow(deprecated)]`.
+    pub allow_dep_regions: Vec<Region>,
+    /// All `unsafe` fn/impl/block sites.
+    pub unsafe_sites: Vec<UnsafeSite>,
+    /// Whether the file carries a top-level `#![allow(deprecated)]`.
+    pub file_allows_deprecated: bool,
+}
+
+fn is_punct(toks: &[Tok], i: usize, text: &str) -> bool {
+    toks.get(i).is_some_and(|t| t.kind == TokKind::Punct && t.text == text)
+}
+
+fn is_open(toks: &[Tok], i: usize, text: &str) -> bool {
+    toks.get(i).is_some_and(|t| t.kind == TokKind::Open && t.text == text)
+}
+
+fn is_ident(toks: &[Tok], i: usize, text: &str) -> bool {
+    toks.get(i).is_some_and(|t| t.kind == TokKind::Ident && t.text == text)
+}
+
+/// Index of the delimiter closing the one opened at `open`.
+fn matching(toks: &[Tok], open: usize) -> usize {
+    let oc = toks[open].text.clone();
+    let cc = match oc.as_str() {
+        "(" => ")",
+        "[" => "]",
+        _ => "}",
+    };
+    let mut depth = 0usize;
+    let mut j = open;
+    while j < toks.len() {
+        if toks[j].kind == TokKind::Open && toks[j].text == oc {
+            depth += 1;
+        } else if toks[j].kind == TokKind::Close && toks[j].text == cc {
+            depth -= 1;
+            if depth == 0 {
+                return j;
+            }
+        }
+        j += 1;
+    }
+    toks.len().saturating_sub(1)
+}
+
+/// Join attribute tokens into a matchable string (literal contents were
+/// already dropped by the lexer, so strings can't spoof a match).
+fn join(toks: &[Tok]) -> String {
+    let mut s = String::new();
+    for t in toks {
+        if !s.is_empty() {
+            s.push(' ');
+        }
+        s.push_str(&t.text);
+    }
+    s
+}
+
+/// Does any collected attribute mark a `#[cfg(test)]` item?
+fn attrs_mark_test(attrs: &[(String, usize)]) -> bool {
+    attrs
+        .iter()
+        .any(|(a, _)| a.contains("cfg") && a.contains("test") && !a.contains("not"))
+}
+
+/// Parse the token stream of one file.
+pub fn parse(lx: &Lexed) -> Parsed {
+    struct Blk {
+        open_line: usize,
+        test_mod: bool,
+        allow_dep: bool,
+    }
+    let toks = &lx.toks;
+    let mut p = Parsed::default();
+    let mut stack: Vec<Blk> = Vec::new();
+    let mut pending_attrs: Vec<(String, usize)> = Vec::new();
+    let mut pending_test_mod = false;
+    let mut i = 0usize;
+    while i < toks.len() {
+        let line = toks[i].line;
+        // attributes: #[...] (outer) and #![...] (inner)
+        if is_punct(toks, i, "#") {
+            let inner = is_punct(toks, i + 1, "!");
+            let open = if inner { i + 2 } else { i + 1 };
+            if is_open(toks, open, "[") {
+                let close = matching(toks, open);
+                let text = join(&toks[open + 1..close]);
+                if inner {
+                    if text.contains("allow") && text.contains("deprecated") {
+                        match stack.last_mut() {
+                            Some(top) => top.allow_dep = true,
+                            None => p.file_allows_deprecated = true,
+                        }
+                    }
+                } else {
+                    pending_attrs.push((text, line));
+                }
+                i = close + 1;
+                continue;
+            }
+            i += 1;
+            continue;
+        }
+        if toks[i].kind == TokKind::Ident {
+            match toks[i].text.as_str() {
+                "fn" => {
+                    let name = match toks.get(i + 1) {
+                        Some(t) if t.kind == TokKind::Ident => t.text.clone(),
+                        _ => String::new(),
+                    };
+                    // find the body `{` (or `;` for bodyless decls) at
+                    // paren depth 0 after the signature
+                    let mut j = i + 1;
+                    let mut depth = 0isize;
+                    let mut body_open = None;
+                    while j < toks.len() {
+                        match toks[j].kind {
+                            TokKind::Open => {
+                                if toks[j].text == "{" && depth == 0 {
+                                    body_open = Some(j);
+                                    break;
+                                }
+                                depth += 1;
+                            }
+                            TokKind::Close => depth -= 1,
+                            TokKind::Punct => {
+                                if toks[j].text == ";" && depth == 0 {
+                                    break;
+                                }
+                            }
+                            _ => {}
+                        }
+                        j += 1;
+                    }
+                    let attrs: Vec<String> =
+                        pending_attrs.iter().map(|(a, _)| a.clone()).collect();
+                    let attr_line =
+                        pending_attrs.first().map(|(_, l)| *l).unwrap_or(line);
+                    pending_attrs.clear();
+                    let item = match body_open {
+                        Some(bo) => {
+                            let bc = matching(toks, bo);
+                            FnItem {
+                                name,
+                                attrs,
+                                attr_line,
+                                sig_line: line,
+                                body_open: bo,
+                                body_close: bc,
+                                body_open_line: toks[bo].line,
+                                body_close_line: toks[bc].line,
+                            }
+                        }
+                        None => FnItem {
+                            name,
+                            attrs,
+                            attr_line,
+                            sig_line: line,
+                            body_open: usize::MAX,
+                            body_close: usize::MAX,
+                            body_open_line: line,
+                            body_close_line: line,
+                        },
+                    };
+                    p.fns.push(item);
+                    i += 1;
+                    continue;
+                }
+                "mod" => {
+                    if attrs_mark_test(&pending_attrs) {
+                        pending_test_mod = true;
+                    }
+                    pending_attrs.clear();
+                    i += 1;
+                    continue;
+                }
+                "unsafe" => {
+                    let kind = if is_ident(toks, i + 1, "fn") {
+                        Some(UnsafeKind::Fn)
+                    } else if is_ident(toks, i + 1, "impl") {
+                        Some(UnsafeKind::Impl)
+                    } else if is_open(toks, i + 1, "{") {
+                        Some(UnsafeKind::Block)
+                    } else {
+                        None
+                    };
+                    if let Some(k) = kind {
+                        p.unsafe_sites.push(UnsafeSite { line, kind: k });
+                    }
+                    i += 1;
+                    continue;
+                }
+                _ => {
+                    i += 1;
+                    continue;
+                }
+            }
+        }
+        if toks[i].kind == TokKind::Open && toks[i].text == "{" {
+            stack.push(Blk {
+                open_line: line,
+                test_mod: pending_test_mod,
+                allow_dep: false,
+            });
+            pending_test_mod = false;
+            pending_attrs.clear();
+            i += 1;
+            continue;
+        }
+        if toks[i].kind == TokKind::Close && toks[i].text == "}" {
+            if let Some(b) = stack.pop() {
+                if b.test_mod {
+                    p.test_regions.push(Region {
+                        start_line: b.open_line,
+                        end_line: line,
+                    });
+                }
+                if b.allow_dep {
+                    p.allow_dep_regions.push(Region {
+                        start_line: b.open_line,
+                        end_line: line,
+                    });
+                }
+            }
+            pending_attrs.clear();
+            i += 1;
+            continue;
+        }
+        if is_punct(toks, i, ";") {
+            pending_attrs.clear();
+            pending_test_mod = false; // `#[cfg(test)] mod foo;` declaration
+        }
+        i += 1;
+    }
+    p
+}
+
+/// Innermost function item containing `line`, if any.
+pub fn enclosing_fn(parsed: &Parsed, line: usize) -> Option<&FnItem> {
+    parsed
+        .fns
+        .iter()
+        .filter(|f| f.contains_line(line))
+        .min_by_key(|f| f.body_close_line.saturating_sub(f.sig_line))
+}
+
+/// Whether `line` falls inside any of `regions`.
+pub fn in_regions(regions: &[Region], line: usize) -> bool {
+    regions.iter().any(|r| r.contains(line))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::lexer::lex;
+
+    #[test]
+    fn fn_items_and_attrs() {
+        let src = "#[deprecated(note = \"old\")]\npub fn old_api(x: u32) -> u32 {\n    x\n}\n\npub fn fresh() {}\n";
+        let p = parse(&lex(src));
+        assert_eq!(p.fns.len(), 2);
+        assert_eq!(p.fns[0].name, "old_api");
+        assert!(p.fns[0].attrs[0].starts_with("deprecated"));
+        assert_eq!(p.fns[0].attr_line, 1);
+        assert_eq!(p.fns[0].sig_line, 2);
+        assert_eq!(p.fns[0].body_close_line, 4);
+        assert_eq!(p.fns[1].name, "fresh");
+        assert!(p.fns[1].attrs.is_empty(), "attrs must not leak across items");
+    }
+
+    #[test]
+    fn test_mod_region_detected() {
+        let src = "fn a() {}\n#[cfg(test)]\nmod tests {\n    fn b() {}\n}\n";
+        let p = parse(&lex(src));
+        assert_eq!(p.test_regions.len(), 1);
+        assert!(in_regions(&p.test_regions, 4));
+        assert!(!in_regions(&p.test_regions, 1));
+    }
+
+    #[test]
+    fn cfg_not_test_is_not_a_test_region() {
+        let src = "#[cfg(not(test))]\nmod real {\n    fn b() {}\n}\n";
+        let p = parse(&lex(src));
+        assert!(p.test_regions.is_empty());
+    }
+
+    #[test]
+    fn inner_allow_deprecated_regions() {
+        let src = "mod legacy {\n    #![allow(deprecated)]\n    fn c() {}\n}\nfn d() {}\n";
+        let p = parse(&lex(src));
+        assert_eq!(p.allow_dep_regions.len(), 1);
+        assert!(in_regions(&p.allow_dep_regions, 3));
+        assert!(!in_regions(&p.allow_dep_regions, 5));
+        assert!(!p.file_allows_deprecated);
+        let p2 = parse(&lex("#![allow(deprecated)]\nfn e() {}\n"));
+        assert!(p2.file_allows_deprecated);
+    }
+
+    #[test]
+    fn unsafe_sites_classified() {
+        let src = "unsafe impl Send for X {}\nunsafe fn f() {}\nfn g() { unsafe { h() } }\n";
+        let p = parse(&lex(src));
+        let kinds: Vec<UnsafeKind> = p.unsafe_sites.iter().map(|s| s.kind).collect();
+        assert_eq!(kinds, vec![UnsafeKind::Impl, UnsafeKind::Fn, UnsafeKind::Block]);
+    }
+
+    #[test]
+    fn enclosing_fn_is_innermost() {
+        let src = "fn outer() {\n    fn inner() {\n        body();\n    }\n}\n";
+        let p = parse(&lex(src));
+        assert_eq!(enclosing_fn(&p, 3).unwrap().name, "inner");
+        assert_eq!(enclosing_fn(&p, 5).unwrap().name, "outer");
+    }
+}

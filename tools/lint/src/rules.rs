@@ -1,0 +1,419 @@
+//! The five invariant rules.
+//!
+//! Each rule is a pure function from a lexed+parsed file (plus, for the
+//! deprecated rule, a cross-file name set) to [`Finding`]s.  Escape
+//! hatches are source comments, never linter edits:
+//!
+//! * `// lint: allow(alloc) reason=...` — sanction an intentional
+//!   cold-path allocation inside a hot-path function.
+//! * `// lint: allow(one-gram) reason=...` — sanction an extra Gram
+//!   build site.
+//! * `// lint: allow(deprecated) reason=...` — sanction a deprecated
+//!   call (normally `#[allow(deprecated)]` should be used instead).
+//! * `// lint: allow(lock) reason=...` or a `// lock-order: ...`
+//!   comment — document a multi-mutex function's acquisition order.
+//! * `// SAFETY: ...` — document an `unsafe` site.
+
+use std::collections::BTreeSet;
+
+use crate::config;
+use crate::lexer::{Lexed, Tok, TokKind};
+use crate::parse::{enclosing_fn, in_regions, FnItem, Parsed, UnsafeKind};
+
+/// One rule violation.
+#[derive(Debug, Clone)]
+pub struct Finding {
+    /// Rule id (`hot-path-alloc`, `one-gram`, ...).
+    pub rule: &'static str,
+    /// Repo-relative file path.
+    pub file: String,
+    /// 1-based line of the violation.
+    pub line: usize,
+    /// Human-readable message.
+    pub msg: String,
+    /// Stable baseline key: `rule file fn=<name>` (line-insensitive so
+    /// baselines survive unrelated edits).
+    pub key: String,
+}
+
+/// One file ready for rule evaluation.
+pub struct FileCtx<'a> {
+    /// Repo-relative path (`rust/src/...`).
+    pub rel: &'a str,
+    /// Lexer output.
+    pub lexed: &'a Lexed,
+    /// Parser output.
+    pub parsed: &'a Parsed,
+}
+
+fn is_punct(toks: &[Tok], i: usize, text: &str) -> bool {
+    toks.get(i).is_some_and(|t| t.kind == TokKind::Punct && t.text == text)
+}
+
+fn is_open(toks: &[Tok], i: usize, text: &str) -> bool {
+    toks.get(i).is_some_and(|t| t.kind == TokKind::Open && t.text == text)
+}
+
+fn is_ident(toks: &[Tok], i: usize, text: &str) -> bool {
+    toks.get(i).is_some_and(|t| t.kind == TokKind::Ident && t.text == text)
+}
+
+fn fn_name_or_dash(f: Option<&FnItem>) -> String {
+    match f {
+        Some(f) if !f.name.is_empty() => f.name.clone(),
+        _ => "-".to_string(),
+    }
+}
+
+fn push(
+    out: &mut Vec<Finding>,
+    rule: &'static str,
+    rel: &str,
+    line: usize,
+    fn_name: &str,
+    msg: String,
+) {
+    out.push(Finding {
+        rule,
+        file: rel.to_string(),
+        line,
+        msg,
+        key: format!("{rule} {rel} fn={fn_name}"),
+    });
+}
+
+/// Result of looking for a `// lint: allow(<rule>) reason=...` marker.
+enum Marker {
+    Absent,
+    Ok,
+    MissingReason(usize),
+}
+
+/// Look for a marker comment for `rule_key` between lines `lo..=hi`.
+fn find_marker(lexed: &Lexed, lo: usize, hi: usize, rule_key: &str) -> Marker {
+    let want = format!("allow({rule_key})");
+    for c in &lexed.comments {
+        if c.line < lo || c.line > hi {
+            continue;
+        }
+        if let Some(p) = c.text.find("lint:") {
+            let rest = &c.text[p + 5..];
+            if rest.contains(want.as_str()) {
+                if let Some(rp) = rest.find("reason=") {
+                    if !rest[rp + 7..].trim().is_empty() {
+                        return Marker::Ok;
+                    }
+                }
+                return Marker::MissingReason(c.line);
+            }
+        }
+    }
+    Marker::Absent
+}
+
+/// Marker lookup for a violation at `line`: scoped to the enclosing
+/// function when there is one, otherwise to the two lines around the
+/// violation (top-level items).
+fn marker_for(ctx: &FileCtx, f: Option<&FnItem>, line: usize, rule_key: &str) -> Marker {
+    match f {
+        Some(f) => find_marker(
+            ctx.lexed,
+            f.span_lo().saturating_sub(3),
+            f.body_close_line,
+            rule_key,
+        ),
+        None => find_marker(ctx.lexed, line.saturating_sub(2), line + 1, rule_key),
+    }
+}
+
+/// Apply a marker decision to a candidate violation.
+fn flag_unless_marked(
+    ctx: &FileCtx,
+    out: &mut Vec<Finding>,
+    rule: &'static str,
+    rule_key: &str,
+    line: usize,
+    msg: String,
+) {
+    let f = enclosing_fn(ctx.parsed, line);
+    let name = fn_name_or_dash(f);
+    match marker_for(ctx, f, line, rule_key) {
+        Marker::Ok => {}
+        Marker::MissingReason(ml) => {
+            let m = format!(
+                "`lint: allow({rule_key})` marker is missing a non-empty `reason=`",
+            );
+            push(out, rule, ctx.rel, ml, &name, m);
+        }
+        Marker::Absent => push(out, rule, ctx.rel, line, &name, msg),
+    }
+}
+
+/// **hot-path-alloc** — allocating constructs are forbidden inside the
+/// declared hot-path modules unless the enclosing function carries a
+/// `// lint: allow(alloc) reason=...` marker.  Complements the runtime
+/// counting-allocator assertions in `rust/tests/alloc_free.rs`.
+pub fn hot_path_alloc(ctx: &FileCtx, out: &mut Vec<Finding>) {
+    if !config::is_hot_path(ctx.rel) {
+        return;
+    }
+    let toks = &ctx.lexed.toks;
+    for i in 0..toks.len() {
+        let t = &toks[i];
+        if t.kind != TokKind::Ident {
+            continue;
+        }
+        if in_regions(&ctx.parsed.test_regions, t.line) {
+            continue;
+        }
+        let name = t.text.as_str();
+        let construct = if config::ALLOC_PATHS.contains(&name)
+            && is_punct(toks, i + 1, ":")
+            && is_punct(toks, i + 2, ":")
+            && is_ident(toks, i + 3, "new")
+        {
+            Some(format!("{name}::new"))
+        } else if config::ALLOC_MACROS.contains(&name) && is_punct(toks, i + 1, "!") {
+            Some(format!("{name}!"))
+        } else if config::ALLOC_METHODS.contains(&name)
+            && i > 0
+            && is_punct(toks, i - 1, ".")
+            && (is_open(toks, i + 1, "(") || is_punct(toks, i + 1, ":"))
+        {
+            Some(format!(".{name}()"))
+        } else {
+            None
+        };
+        if let Some(c) = construct {
+            let msg = format!(
+                "allocating construct `{c}` in hot-path module (add \
+                 `// lint: allow(alloc) reason=...` if this is an \
+                 intentional cold-path allocation)",
+            );
+            flag_unless_marked(ctx, out, "hot-path-alloc", "alloc", t.line, msg);
+        }
+    }
+}
+
+/// **one-gram** — `CosineGram::build` / `.rebuild(...)` may only be
+/// called from the sanctioned sites in
+/// [`config::ONE_GRAM_ALLOWED`], mirroring the runtime
+/// `gram_builds_this_thread()` counter.
+pub fn one_gram(ctx: &FileCtx, out: &mut Vec<Finding>) {
+    if ctx.rel.starts_with("rust/tests/") {
+        return;
+    }
+    let toks = &ctx.lexed.toks;
+    for i in 0..toks.len() {
+        let t = &toks[i];
+        if t.kind != TokKind::Ident {
+            continue;
+        }
+        if in_regions(&ctx.parsed.test_regions, t.line) {
+            continue;
+        }
+        let hit = if t.text == "CosineGram"
+            && is_punct(toks, i + 1, ":")
+            && is_punct(toks, i + 2, ":")
+            && is_ident(toks, i + 3, "build")
+        {
+            Some("CosineGram::build")
+        } else if t.text == "rebuild"
+            && i > 0
+            && is_punct(toks, i - 1, ".")
+            && is_open(toks, i + 1, "(")
+        {
+            Some(".rebuild(...)")
+        } else {
+            None
+        };
+        if let Some(what) = hit {
+            let f = enclosing_fn(ctx.parsed, t.line);
+            let name = fn_name_or_dash(f);
+            if config::one_gram_allowed(ctx.rel, &name) {
+                continue;
+            }
+            let msg = format!(
+                "`{what}` outside the sanctioned one-Gram call sites \
+                 (see tools/lint/src/config.rs)",
+            );
+            flag_unless_marked(ctx, out, "one-gram", "one-gram", t.line, msg);
+        }
+    }
+}
+
+/// Collect the names of `#[deprecated]` functions defined in a file.
+pub fn deprecated_names(parsed: &Parsed, into: &mut BTreeSet<String>) {
+    for f in &parsed.fns {
+        if f.name.is_empty() {
+            continue;
+        }
+        if f.attrs.iter().any(|a| a.trim_start().starts_with("deprecated")) {
+            into.insert(f.name.clone());
+        }
+    }
+}
+
+/// **deprecated-internal-use** — non-test source must not call the
+/// `#[deprecated]` entry points unless the call sits under an
+/// `#[allow(deprecated)]` (file, block, or item level), is itself inside
+/// a deprecated wrapper, or carries an explicit marker.
+pub fn deprecated_use(ctx: &FileCtx, names: &BTreeSet<String>, out: &mut Vec<Finding>) {
+    if ctx.parsed.file_allows_deprecated {
+        return;
+    }
+    let toks = &ctx.lexed.toks;
+    for i in 0..toks.len() {
+        let t = &toks[i];
+        if t.kind != TokKind::Ident || !names.contains(&t.text) {
+            continue;
+        }
+        // definitions are not calls
+        if i > 0 && is_ident(toks, i - 1, "fn") {
+            continue;
+        }
+        // only call syntax: `name(` or `name::<`
+        if !(is_open(toks, i + 1, "(") || is_punct(toks, i + 1, ":")) {
+            continue;
+        }
+        if in_regions(&ctx.parsed.test_regions, t.line)
+            || in_regions(&ctx.parsed.allow_dep_regions, t.line)
+        {
+            continue;
+        }
+        let f = enclosing_fn(ctx.parsed, t.line);
+        if let Some(f) = f {
+            let sanctioned = f.attrs.iter().any(|a| {
+                let a = a.trim_start();
+                a.starts_with("deprecated") || (a.starts_with("allow") && a.contains("deprecated"))
+            });
+            if sanctioned {
+                continue;
+            }
+        }
+        let msg = format!(
+            "call to `#[deprecated]` entry point `{}` from non-test source \
+             (migrate to the engine/session API, or add `#[allow(deprecated)]` \
+             on a wrapper that must keep exercising it)",
+            t.text,
+        );
+        flag_unless_marked(ctx, out, "deprecated-internal-use", "deprecated", t.line, msg);
+    }
+}
+
+/// **unsafe-audit** — every `unsafe` fn/impl/block needs a `// SAFETY:`
+/// comment immediately around it (up to 3 lines above, trailing, or the
+/// first line inside a block).
+pub fn unsafe_audit(ctx: &FileCtx, out: &mut Vec<Finding>) {
+    for site in &ctx.parsed.unsafe_sites {
+        let lo = site.line.saturating_sub(3);
+        let hi = site.line + 1;
+        let documented = ctx
+            .lexed
+            .comments
+            .iter()
+            .any(|c| c.line >= lo && c.line <= hi && c.text.contains("SAFETY:"));
+        if documented {
+            continue;
+        }
+        let what = match site.kind {
+            UnsafeKind::Fn => "unsafe fn",
+            UnsafeKind::Impl => "unsafe impl",
+            UnsafeKind::Block => "unsafe block",
+        };
+        let f = enclosing_fn(ctx.parsed, site.line);
+        let name = fn_name_or_dash(f);
+        let msg = format!("`{what}` without a `// SAFETY:` comment");
+        push(out, "unsafe-audit", ctx.rel, site.line, &name, msg);
+    }
+}
+
+/// Extract the receiver path of a `.lock()` call, walking back from the
+/// `.` token.  Non-path receivers (`foo().lock()`) come back as a
+/// position-unique placeholder so they conservatively count as distinct.
+fn lock_receiver(toks: &[Tok], dot: usize) -> String {
+    let mut parts: Vec<String> = Vec::new();
+    let mut j = dot;
+    while j > 0 {
+        j -= 1;
+        let t = &toks[j];
+        match t.kind {
+            TokKind::Ident => parts.push(t.text.clone()),
+            TokKind::Punct if t.text == "." || t.text == ":" => parts.push(t.text.clone()),
+            _ => break,
+        }
+    }
+    if parts.is_empty() {
+        return format!("<expr@{}>", toks[dot].line);
+    }
+    parts.reverse();
+    parts.concat()
+}
+
+/// **lock-discipline** — a function that acquires two *different*
+/// mutexes must declare the ordering with a `// lock-order: ...` comment
+/// (or a `// lint: allow(lock) reason=...` marker), so pool/metrics/
+/// cache interactions can't deadlock silently as pools multiply.
+pub fn lock_discipline(ctx: &FileCtx, out: &mut Vec<Finding>) {
+    let toks = &ctx.lexed.toks;
+    // (fn sig_line, receiver, line) per .lock() call, innermost-fn owned
+    let mut hits: Vec<(usize, String, usize)> = Vec::new();
+    for i in 0..toks.len() {
+        if toks[i].kind == TokKind::Ident
+            && toks[i].text == "lock"
+            && i > 0
+            && is_punct(toks, i - 1, ".")
+            && is_open(toks, i + 1, "(")
+        {
+            if in_regions(&ctx.parsed.test_regions, toks[i].line) {
+                continue;
+            }
+            if let Some(f) = enclosing_fn(ctx.parsed, toks[i].line) {
+                hits.push((f.sig_line, lock_receiver(toks, i - 1), toks[i].line));
+            }
+        }
+    }
+    let mut seen_fns: BTreeSet<usize> = BTreeSet::new();
+    for &(sig, _, _) in &hits {
+        if !seen_fns.insert(sig) {
+            continue;
+        }
+        let mut recvs: Vec<String> = Vec::new();
+        let mut second_line = 0usize;
+        for h in hits.iter().filter(|h| h.0 == sig) {
+            if !recvs.iter().any(|r| *r == h.1) {
+                recvs.push(h.1.clone());
+                if recvs.len() == 2 {
+                    second_line = h.2;
+                }
+            }
+        }
+        if recvs.len() < 2 {
+            continue;
+        }
+        let f = match ctx.parsed.fns.iter().find(|f| f.sig_line == sig) {
+            Some(f) => f,
+            None => continue,
+        };
+        let has_order = ctx.lexed.comments.iter().any(|c| {
+            c.line >= f.span_lo().saturating_sub(3)
+                && c.line <= f.body_close_line
+                && c.text.contains("lock-order:")
+        });
+        if has_order {
+            continue;
+        }
+        if let Marker::Ok = marker_for(ctx, Some(f), second_line, "lock") {
+            continue;
+        }
+        let name = fn_name_or_dash(Some(f));
+        let msg = format!(
+            "function `{}` acquires {} different locks ({}) without a \
+             `// lock-order:` comment declaring the acquisition order",
+            name,
+            recvs.len(),
+            recvs.join(", "),
+        );
+        push(out, "lock-discipline", ctx.rel, second_line, &name, msg);
+    }
+}

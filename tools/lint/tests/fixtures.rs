@@ -1,0 +1,59 @@
+//! Rule self-tests: every embedded fixture (seeded violation + clean
+//! near-miss per rule) must behave as declared, and the baseline
+//! mechanism must suppress a seeded violation end-to-end.
+
+use pitome_lint::fixtures::{run_fixture, FIXTURES};
+use pitome_lint::{baseline, lint_sources, SourceFile};
+
+#[test]
+fn every_fixture_behaves_as_declared() {
+    let mut failures = Vec::new();
+    for fx in FIXTURES {
+        if let Err(e) = run_fixture(fx) {
+            failures.push(e);
+        }
+    }
+    assert!(failures.is_empty(), "fixture failures:\n{}", failures.join("\n"));
+}
+
+#[test]
+fn each_rule_has_a_firing_and_a_quiet_fixture() {
+    for rule in [
+        "hot-path-alloc",
+        "one-gram",
+        "deprecated-internal-use",
+        "unsafe-audit",
+        "lock-discipline",
+    ] {
+        let fires = FIXTURES.iter().any(|f| f.rule == rule && f.should_fire);
+        let quiet = FIXTURES.iter().any(|f| f.rule == rule && !f.should_fire);
+        assert!(fires, "rule {rule} has no seeded-violation fixture");
+        assert!(quiet, "rule {rule} has no clean near-miss fixture");
+    }
+}
+
+#[test]
+fn baseline_suppresses_a_seeded_violation_end_to_end() {
+    let files = vec![SourceFile {
+        rel: "rust/src/merge/seeded.rs".to_string(),
+        text: "pub fn stray(xs: &[f32]) -> Vec<f32> {\n    xs.to_vec()\n}\n".to_string(),
+    }];
+    let findings = lint_sources(&files);
+    assert_eq!(findings.len(), 1, "seeded violation must fire");
+    // capture into a baseline, re-apply: nothing active, nothing stale
+    let keys = baseline::parse(&baseline::render(&findings));
+    let applied = baseline::apply(lint_sources(&files), &keys);
+    assert!(applied.active.is_empty());
+    assert_eq!(applied.suppressed, 1);
+    assert!(applied.unused.is_empty());
+    // a fixed tree makes the entry stale
+    let clean = vec![SourceFile {
+        rel: "rust/src/merge/seeded.rs".to_string(),
+        text: "pub fn stray(xs: &[f32], out: &mut Vec<f32>) {\n    \
+               out.extend_from_slice(xs);\n}\n"
+            .to_string(),
+    }];
+    let applied = baseline::apply(lint_sources(&clean), &keys);
+    assert!(applied.active.is_empty());
+    assert_eq!(applied.unused.len(), 1);
+}

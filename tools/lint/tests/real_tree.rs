@@ -1,0 +1,61 @@
+//! The real tree must lint clean modulo the checked-in baseline — this
+//! is the same gate CI runs via `cargo run -p pitome-lint -- check`.
+
+use std::path::PathBuf;
+
+use pitome_lint::{baseline, collect_repo_files, lint_sources};
+
+fn repo_root() -> PathBuf {
+    // tools/lint/ -> workspace root
+    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("../..")
+}
+
+#[test]
+fn repo_lints_clean_modulo_baseline() {
+    let root = repo_root();
+    let files = collect_repo_files(&root).expect("read repo tree");
+    assert!(
+        files.len() > 40,
+        "expected the full rust tree, got {} files",
+        files.len()
+    );
+    let findings = lint_sources(&files);
+    let keys = baseline::load(&root.join("tools/lint/baseline.txt"));
+    let applied = baseline::apply(findings, &keys);
+    let rendered: Vec<String> = applied
+        .active
+        .iter()
+        .map(|f| format!("error[{}] {}:{}: {}", f.rule, f.file, f.line, f.msg))
+        .collect();
+    assert!(
+        applied.active.is_empty(),
+        "pitome-lint found {} non-baselined violation(s):\n{}",
+        applied.active.len(),
+        rendered.join("\n")
+    );
+    assert!(
+        applied.unused.is_empty(),
+        "stale baseline entries (fixed findings — remove them):\n{}",
+        applied.unused.join("\n")
+    );
+}
+
+#[test]
+fn tree_contains_known_invariant_anchors() {
+    // sanity: the scan actually sees the hot-path modules and the
+    // one-gram dispatch point, so a path refactor can't silently turn
+    // the whole check into a no-op
+    let files = collect_repo_files(&repo_root()).expect("read repo tree");
+    for anchor in [
+        "rust/src/tensor/ops.rs",
+        "rust/src/merge/mod.rs",
+        "rust/src/model/encoder.rs",
+        "rust/src/coordinator/pool.rs",
+        "rust/src/util/alloc.rs",
+    ] {
+        assert!(
+            files.iter().any(|f| f.rel == anchor),
+            "expected {anchor} in the lint scan"
+        );
+    }
+}
