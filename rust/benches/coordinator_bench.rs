@@ -1,9 +1,10 @@
 //! PERF/L3 — coordinator hot-path benchmarks without PJRT: queue
-//! round-trip latency, batcher aggregation, metrics overhead, and the
-//! typed-router section (per-workload queue depth, joint-batch split
-//! overhead, response-recycle hit rate).  These keep the L3 overhead
-//! honest against the paper's "merging overhead must not eat the
-//! savings" requirement.
+//! round-trip latency, batcher aggregation, metrics overhead, the
+//! typed-router section (queue-depth max/mean over the run, joint-batch
+//! split overhead, response-recycle hit rate), the bucketed-pool O(1)
+//! take/put check, and the serial-vs-work-stealing joint throughput
+//! comparison.  These keep the L3 overhead honest against the paper's
+//! "merging overhead must not eat the savings" requirement.
 
 use std::sync::mpsc;
 use std::sync::Arc;
@@ -11,7 +12,7 @@ use std::time::Instant;
 
 use pitome::config::{ServingConfig, ViTConfig};
 use pitome::coordinator::{Coordinator, CpuWorkloads, Metrics, Payload, Qos,
-                          Workload};
+                          TensorPool, Workload};
 use pitome::data::{generate_trace, patchify, sent_item, shape_item,
                    vqa_item, TraceConfig, TEST_SEED};
 use pitome::engine::JointKind;
@@ -67,16 +68,85 @@ fn main() {
         data
     });
 
+    pool_section(&mut b, sm);
     router_section(sm);
+    stealing_section(sm);
 
-    let t0 = Instant::now();
-    let _ = t0.elapsed();
+    b.write_json("coordinator");
+}
+
+/// Running queue-depth statistics sampled over a serving run — the
+/// per-cycle max and mean (summed across every workload queue), instead
+/// of only the final drained snapshot that used to be reported and was
+/// always zero by the time it printed.
+#[derive(Default)]
+struct DepthTrack {
+    max: usize,
+    sum: u64,
+    n: u64,
+}
+
+impl DepthTrack {
+    /// Sample the total queued depth across every variant queue.
+    fn sample(&mut self, coord: &Coordinator) {
+        let depth: usize = coord
+            .router()
+            .queue_depths()
+            .iter()
+            .map(|(_, _, _, d)| d)
+            .sum();
+        self.max = self.max.max(depth);
+        self.sum += depth as u64;
+        self.n += 1;
+    }
+
+    /// Report the run's max/mean depth under `label`.
+    fn report(&self, label: &str) {
+        let mean = self.sum as f64 / self.n.max(1) as f64;
+        println!("  {label:<28} queue depth max {} mean {:.2} \
+                  ({} samples)", self.max, mean, self.n);
+    }
+}
+
+/// Bucketed-pool O(1) check: take/put latency of one fixed shape while
+/// the pool holds 0 / 64 / 256 idle buffers in *other* capacity classes.
+/// The retired best-fit freelist scanned every resident buffer per take,
+/// so its latency grew with the distractor count; the bucketed pool
+/// indexes the capacity class directly and these rows must stay flat.
+fn pool_section(b: &mut Bench, sm: bool) {
+    println!("\n# bucketed pool: take/put vs resident idle buffers (O(1) check)");
+    let iters: u64 = if sm { 200 } else { 20_000 };
+    for &distractors in &[0usize, 64, 256] {
+        let pool = Arc::new(TensorPool::new());
+        // park idle buffers across many capacity classes (none in the
+        // measured class): each take below must step over none of them
+        let mut held = Vec::new();
+        for i in 0..distractors {
+            let len = 3usize << (i % 8); // classes 2..=9
+            held.push(pool.take_f32(len));
+        }
+        drop(held);
+        // warm the measured class (len 1500 -> class 11) so steady-state
+        // takes recycle from the thread-local shelf
+        drop(pool.take_f32(1500));
+        let name = format!("pool take/put len=1500, {distractors} idle");
+        b.run_throughput(&name, iters, || {
+            for _ in 0..iters {
+                drop(std::hint::black_box(pool.take_f32(1500)));
+            }
+        });
+        let (recycled, fresh) = pool.stats();
+        assert!(recycled > fresh,
+                "warmed take/put must recycle, not allocate \
+                 ({recycled} recycled vs {fresh} fresh)");
+    }
 }
 
 /// Typed-router serving section: boots the CPU multi-workload
 /// coordinator on synthetic multimodal weights and reports per-workload
-/// latency, queue depth, joint-batch split overhead (a paired batch vs
-/// its two single-tower halves), and the response-recycle hit rate.
+/// latency, queue-depth max/mean over the run, joint-batch split
+/// overhead (a paired batch vs its two single-tower halves), and the
+/// response-recycle hit rate.
 fn router_section(sm: bool) {
     println!("\n# typed router (vision + text + joint pools, synthetic weights)");
     let reqs: usize = if sm { 12 } else { 120 };
@@ -133,14 +203,20 @@ fn router_section(sm: bool) {
     }
 
     // per-workload round-trip latency; the joint-vs-halves gap is the
-    // split overhead (pair batches run both towers + fusion)
+    // split overhead (pair batches run both towers + fusion).  Queue
+    // depth is sampled once per cycle and reported as max/mean over the
+    // whole run — the final snapshot is always drained to zero and says
+    // nothing about batching behavior.
     let lat = |label: &str, f: &mut dyn FnMut()| {
+        let mut depths = DepthTrack::default();
         let t0 = Instant::now();
         for _ in 0..reqs {
             f();
+            depths.sample(&coord);
         }
         let us = t0.elapsed().as_micros() as f64 / reqs as f64;
         println!("  {label:<28} {us:>10.1} us/req");
+        depths.report(label);
         us
     };
     let v_us = lat("vision round-trip", &mut || drop(submit_vision(1)));
@@ -150,12 +226,74 @@ fn router_section(sm: bool) {
               (x{:.2})",
              j_us, v_us + t_us, j_us / (v_us + t_us).max(1.0));
 
-    // per-workload queue depth (all zero once drained — the admission
-    // signal the balanced router sheds on)
-    for (w, model, artifact, depth) in coord.router().queue_depths() {
-        println!("  depth {:<8} {model}/{artifact}: {depth}", w.name());
-    }
     println!("  recycle hit rate: {}", pool.hit_rate_summary());
     let total: u64 = coord.metrics().iter().map(|(_, _, s)| s.count).sum();
     assert_eq!(total as usize, 3 * (reqs + 3), "router lost requests");
+}
+
+/// Mixed-workload burst throughput at 1 vs N workers: the same joint
+/// request burst through a serial coordinator and a work-stealing one.
+/// With `workers > 1` the joint worker drains both tower halves through
+/// one stealing pool, so the burst should clear meaningfully faster than
+/// the serial fan-out (and the answers are bitwise identical — asserted
+/// in `engine::multimodal`'s tests, not re-proved here).
+fn stealing_section(sm: bool) {
+    println!("\n# joint burst: serial fan-out vs work-stealing workers");
+    let bursts: usize = if sm { 2 } else { 8 };
+    let pairs: usize = if sm { 8 } else { 32 };
+    let ps = Arc::new(synthetic_mm_store(&ViTConfig::default(), 7));
+    let workloads = CpuWorkloads {
+        vision: Vec::new(),
+        text: Vec::new(),
+        joint: vec![("vqa".to_string(), JointKind::Vqa,
+                     vec![("pitome".to_string(), 0.9)])],
+    };
+    let item = shape_item(TEST_SEED, 0);
+    let patches = patchify(&item.image, 4);
+    let (question, _) = vqa_item(TEST_SEED, 0);
+    let mut serial_us = 0.0f64;
+    for workers in [1usize, 4] {
+        let cfg = ServingConfig { workers, ..Default::default() };
+        let coord = Coordinator::boot_cpu_workloads(&ps, &workloads, cfg)
+            .expect("boot");
+        let pool = coord.pool().clone();
+        let burst = |depths: &mut DepthTrack| {
+            let rxs: Vec<_> = (0..pairs)
+                .map(|_| {
+                    let mut vt = pool.take_f32(patches.data.len());
+                    vt.fill_f32(&patches.data, &[patches.rows, patches.cols]);
+                    let mut qt = pool.take_i32(question.len());
+                    qt.fill_i32(&question, &[question.len()]);
+                    let rx = coord
+                        .submit_typed(Workload::Joint, "vqa",
+                                      Qos::Throughput,
+                                      Payload::Joint { vision: vt, text: qt })
+                        .expect("submit");
+                    depths.sample(&coord);
+                    rx
+                })
+                .collect();
+            for rx in rxs {
+                drop(rx.recv().expect("joint response"));
+            }
+        };
+        // warm sessions and pools outside the timed region
+        burst(&mut DepthTrack::default());
+        let mut depths = DepthTrack::default();
+        let t0 = Instant::now();
+        for _ in 0..bursts {
+            burst(&mut depths);
+        }
+        let us =
+            t0.elapsed().as_micros() as f64 / (bursts * pairs) as f64;
+        let label = format!("{workers} worker(s)");
+        println!("  {label:<28} {us:>10.1} us/pair");
+        depths.report(&label);
+        if workers == 1 {
+            serial_us = us;
+        } else if !sm {
+            println!("  stealing speedup over serial: x{:.2}",
+                     serial_us / us.max(1e-9));
+        }
+    }
 }

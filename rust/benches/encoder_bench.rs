@@ -103,14 +103,16 @@ fn main() {
     b.run(&format!("attention seed-alloc n={n} dim={dim} h={heads}"), || {
         seed_attention(&q, &kf, &v, &sizes, heads, true)
     });
+    let mut ktile = Mat::zeros(0, 0);
     let mut scores = Mat::zeros(0, 0);
     let mut attn_out = Mat::zeros(0, 0);
     let mut attn_cls = Vec::new();
     let mut log_m = Vec::new();
     let mut row0 = Vec::new();
     b.run(&format!("attention scratch    n={n} dim={dim} h={heads}"), || {
-        attention_into(&q, &kf, &v, &sizes, heads, true, &mut scores,
-                       &mut attn_out, &mut attn_cls, &mut log_m, &mut row0);
+        attention_into(&q, &kf, &v, &sizes, heads, true, &mut ktile,
+                       &mut scores, &mut attn_out, &mut attn_cls, &mut log_m,
+                       &mut row0);
     });
     let seed_p50 = b.results[b.results.len() - 2].p50_ns() as f64;
     let scratch_p50 = b.results[b.results.len() - 1].p50_ns() as f64;
@@ -219,6 +221,8 @@ fn main() {
               {per_request} (acceptance: 0)");
     assert_eq!(per_request, 0.0,
                "warmed engine serving request must not allocate");
+
+    b.write_json("encoder");
 }
 
 /// Warm `scratch` with one pass, then count allocations over a second,

@@ -93,4 +93,6 @@ fn main() {
     let ratio = pitome.p50_ns() as f64 / tome.p50_ns() as f64;
     println!("\npitome/tome runtime ratio (p50) at n={n}: {ratio:.2}x \
               (paper: comparable; scoring and matching share one Gram)");
+
+    b.write_json("merge");
 }

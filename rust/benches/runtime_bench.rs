@@ -60,4 +60,6 @@ fn main() {
                   (paper shape: >1x, FLOPs bound {:.2}x)",
                  none / pit, 65f64.powi(2) / 47f64.powi(2));
     }
+
+    b.write_json("runtime");
 }

@@ -150,4 +150,6 @@ fn main() {
                                   &mut scratch, &mut p);
         spectral_distance(&w, &p)
     });
+
+    b.write_json("spectral");
 }

@@ -14,7 +14,14 @@
 //!   vision+text inference through a [`JointSession`], with a
 //!   ragged-batch splitter: a collected batch's vision half
 //!   (`Payload::{Vision,Joint}`) and text half (`Payload::{Text,Joint}`)
-//!   are sized independently and each tower runs once per batch.
+//!   are sized independently.  With `cfg.workers > 1` the two halves are
+//!   split into batch fragments and drained by one pool of
+//!   **work-stealing** workers (idle workers steal fragments across
+//!   towers; see [`crate::model::encoder::encoder_forward_towers`]), so
+//!   one oversized half no longer idles the rest of the pool.  Each
+//!   fragment queue's mutex is a leaf lock held only for the O(1) split —
+//!   never while running a sample or touching the other queue — so the
+//!   two queues need no lock ordering between them.
 //!
 //! All CPU workers resolve weights once at boot (shared engine cache)
 //! and pool every buffer a request touches — including the **response
@@ -68,6 +75,7 @@ impl VariantWorker {
     /// aborts the worker, e.g. when PJRT is unavailable — submitters then
     /// observe a closed queue).  The closure fills `outs` with exactly
     /// one [`InferOutputs`] per request.
+    // lint: allow(alloc) reason=cold bootstrap: channel, metrics Arcs, and thread spawn happen once per worker
     fn spawn_worker<E, I>(name: String, cfg: &ServingConfig, max_batch: usize,
                           init: I) -> VariantWorker
     where
@@ -101,6 +109,7 @@ impl VariantWorker {
     /// (PJRT handles are not Send; per-thread clients keep this safe) and
     /// serves batches.  `params` is the artifact's leading flat-weights
     /// input (empty vec for artifacts without params).
+    // lint: allow(alloc) reason=PJRT transport path copies host tensors by design; zero-alloc serving is the CPU path
     pub fn spawn(hlo_path: PathBuf, entry: ArtifactEntry, params: Vec<f32>,
                  cfg: &ServingConfig) -> VariantWorker {
         let max_batch = cfg.max_batch.min(entry.meta.batch);
@@ -141,6 +150,7 @@ impl VariantWorker {
     /// in a recycled buffer from `pool`.  Each collected batch runs
     /// through the worker's [`VitSession`], whose encoder fan-out uses
     /// `cfg.workers` threads.
+    // lint: allow(alloc) reason=cold bootstrap: worker-name format! and Arc clones happen once per worker
     pub fn spawn_cpu(engine: Arc<Engine>, model_cfg: ViTConfig,
                      pool: Arc<TensorPool>, cfg: &ServingConfig)
                      -> VariantWorker {
@@ -174,6 +184,7 @@ impl VariantWorker {
     /// classifier.  Requests carry a single i32 token-id tensor
     /// `(n_tokens,)`; responses carry the class logits in a recycled
     /// buffer from `pool`.
+    // lint: allow(alloc) reason=cold bootstrap: worker-name format! and Arc clones happen once per worker
     pub fn spawn_cpu_text(engine: Arc<Engine>, model_cfg: TextConfig,
                           pool: Arc<TensorPool>, cfg: &ServingConfig)
                           -> VariantWorker {
@@ -203,8 +214,11 @@ impl VariantWorker {
     /// two halves independently per batch: `Payload::Joint` pairs join
     /// both halves, `Payload::Vision` / `Payload::Text` singles join one
     /// (their responses are the corresponding tower feature/embedding).
-    /// The vision tower fans out over `cfg.workers` threads; the short
-    /// text sequences run serially.
+    /// With `cfg.workers > 1` both halves drain through one pool of
+    /// work-stealing workers (fragments stolen across towers, results
+    /// bitwise-independent of the schedule); with one worker the towers
+    /// run back-to-back on the worker thread, allocation-free once warm.
+    // lint: allow(alloc) reason=cold bootstrap: worker-name format!, Arc clones, and empty splitter scratch built once per worker
     pub fn spawn_cpu_joint(engine: Arc<Engine>, model_cfg: JointConfig,
                            pool: Arc<TensorPool>, cfg: &ServingConfig)
                            -> VariantWorker {
@@ -283,6 +297,7 @@ impl Drop for VariantWorker {
 /// cycle performs no allocations of its own; the per-cycle allocation
 /// count (inference + transport) lands in
 /// [`Snapshot::last_cycle_allocs`](super::metrics::Snapshot).
+// lint: allow(alloc) reason=loop-owned batch/output vectors allocated once and reused every cycle
 fn worker_loop<E>(mut exec: E, rx: Receiver<InferRequest>,
                   metrics: Arc<Metrics>, depth: Arc<AtomicUsize>,
                   max_batch: usize, timeout: Duration)
@@ -354,6 +369,7 @@ where
 /// an explicit failure marker (a response with no outputs) that
 /// `ResponseSlot::recv` translates back into an error; a blocked client
 /// always wakes up.  Pooled inputs recycle as the requests drop.
+// lint: allow(alloc) reason=failure path only, never taken in steady state
 fn fail_batch(batch: &mut Vec<InferRequest>, exec_us: u64,
               batch_size: usize) {
     for req in batch.drain(..) {
@@ -391,6 +407,7 @@ fn respond_f32(pool: &Arc<TensorPool>, outs: &mut Vec<InferOutputs>,
 /// ([`Metrics::record_infer_allocs`]) and must be zero for a warmed
 /// worker (`tests/alloc_free.rs`).  Response construction happens after
 /// the region and is covered by the whole-cycle count instead.
+// lint: allow(alloc) reason=error-path format! only, never taken on the steady-state path
 fn cpu_run_batch(sess: &mut VitSession, metrics: &Metrics,
                  pool: &Arc<TensorPool>, batch: &[InferRequest],
                  outs: &mut Vec<InferOutputs>) -> Result<()> {
@@ -428,6 +445,7 @@ fn cpu_run_batch(sess: &mut VitSession, metrics: &Metrics,
 /// Execute a batch on the CPU text classifier through the worker's
 /// long-lived [`BertSession`] — the text-workload counterpart of
 /// [`cpu_run_batch`].
+// lint: allow(alloc) reason=error-path format! only, never taken on the steady-state path
 fn cpu_run_text_batch(sess: &mut BertSession, metrics: &Metrics,
                       pool: &Arc<TensorPool>, batch: &[InferRequest],
                       outs: &mut Vec<InferOutputs>) -> Result<()> {
@@ -469,6 +487,7 @@ enum JointWant {
     TextOnly,
 }
 
+// lint: allow(alloc) reason=error-path format! only, never taken on the steady-state path
 fn classify_joint(p: &Payload) -> Result<JointWant> {
     match p {
         Payload::Joint { .. } => Ok(JointWant::Pair),
@@ -488,6 +507,7 @@ fn classify_joint(p: &Payload) -> Result<JointWant> {
 /// pair list, and each request is answered from the recycled pool —
 /// pairs with answer logits (VQA) or the similarity score (retrieval),
 /// singles with their tower feature/embedding.
+// lint: allow(alloc) reason=error-path format! only, never taken on the steady-state path
 fn cpu_run_joint_batch(sess: &mut JointSession, metrics: &Metrics,
                        pool: &Arc<TensorPool>, batch: &[InferRequest],
                        outs: &mut Vec<InferOutputs>,
@@ -587,6 +607,7 @@ fn cpu_run_joint_batch(sess: &mut JointSession, metrics: &Metrics,
 }
 
 /// Stack per-request inputs into the artifact batch, execute, split.
+// lint: allow(alloc) reason=PJRT transport path stacks/splits host tensors by design; zero-alloc serving is the CPU path
 fn run_batch(exe: &Executable, params: &[f32], batch: &[InferRequest])
              -> Result<Vec<Vec<HostTensor>>> {
     let entry = &exe.entry;

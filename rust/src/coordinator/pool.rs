@@ -3,140 +3,299 @@
 //!
 //! PR 4 made the worker-side inference region allocation-free but left
 //! the owned `HostTensor` responses crossing the submitter's channel as
-//! a documented per-request allocation.  A [`TensorPool`] is a bounded
-//! freelist of `HostTensor` buffers shared by the coordinator's workers
-//! and clients: workers build responses from recycled buffers
-//! ([`TensorPool::take_f32`] reuses both the data and the shape vectors
-//! in place), and a [`PooledTensor`] **returns its buffer to the pool on
-//! drop** — callers cannot leak pool capacity by forgetting a release.
-//! Request inputs ride the same pool, so a warmed
-//! request→response→release cycle allocates nothing on either side of
-//! the channel (`tests/alloc_free.rs`).
+//! a documented per-request allocation.  A [`TensorPool`] recycles those
+//! buffers; PR 7 reworked it from two Mutex'd freelists with an O(n)
+//! best-fit scan into **size-bucketed capacity classes with per-thread
+//! sub-pools**:
 //!
-//! Recycled-vs-fresh counters ([`TensorPool::stats`]) feed the serving
-//! metrics (`Snapshot::{resp_recycled,resp_fresh}`) and the
-//! `coordinator_bench` recycle-hit-rate section.
+//! * Buffers live in power-of-two capacity classes (class `c` holds
+//!   capacities in `[2^c, 2^(c+1))`), so a take is an O(1) shelf pop
+//!   and a put is an O(1) shelf push — no scan, no scaling with pool
+//!   population.  Fresh checkouts pre-reserve the class boundary and
+//!   [`PooledTensor::fill_f32`] regrows straight to the next power of
+//!   two, so every buffer that re-enters the pool sits on a shelf that
+//!   future takes of its class actually probe.
+//! * Each thread keeps a small **lock-free local sub-pool** (a
+//!   `thread_local!` registry keyed by pool identity): takes probe the
+//!   local shelf first, and a dropped [`PooledTensor`] returns to the
+//!   *releasing* thread's sub-pool, spilling to the shared shelves —
+//!   where other workers can steal it — only past a small per-class
+//!   cap.  Same-thread reuse never touches a lock.
+//! * The shared class shelves are **leaf mutexes**: no shelf lock is
+//!   ever held while acquiring another lock, so the pool cannot
+//!   participate in a lock cycle no matter how many pools or workers
+//!   exist.
+//!
+//! Workers build responses from recycled buffers ([`TensorPool::take_f32`]
+//! reuses both the data and the shape vectors in place), and a
+//! [`PooledTensor`] **returns its buffer to the pool on drop** — callers
+//! cannot leak pool capacity by forgetting a release.  Request inputs
+//! ride the same pool, so a warmed request→response→release cycle
+//! allocates nothing on either side of the channel
+//! (`tests/alloc_free.rs`).
+//!
+//! Recycled/fresh/steal counters ([`TensorPool::stats`],
+//! [`TensorPool::steals`]) feed the serving metrics
+//! (`Snapshot::{resp_recycled,resp_fresh}`) and the `coordinator_bench`
+//! recycle-hit-rate and O(1)-take sections.
 
+use std::cell::RefCell;
 use std::ops::Deref;
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::{Arc, Mutex};
+use std::sync::{Arc, Mutex, Weak};
 
 use crate::runtime::HostTensor;
 
-/// Max buffers retained per dtype freelist; beyond this, returned
-/// buffers are simply dropped (bounds worst-case pool memory).
-const MAX_RETAINED: usize = 256;
+/// Number of power-of-two capacity classes (class 31 holds multi-GB
+/// buffers; anything larger bypasses the pool entirely).
+pub const POOL_CLASSES: usize = 32;
 
-/// A bounded freelist of reusable [`HostTensor`] buffers (one list per
-/// dtype) with recycled/fresh accounting.  Shared as `Arc<TensorPool>`
-/// by the coordinator's workers and clients.
-#[derive(Default)]
+/// Max buffers retained per shared class shelf; beyond this, returned
+/// buffers are simply dropped (bounds worst-case pool memory).
+const SHARED_PER_CLASS: usize = 64;
+
+/// Max buffers a thread's local sub-pool retains per class before a
+/// release spills to the shared shelves.  Two covers the common
+/// steady-state (one in flight, one returning) while keeping buffers
+/// visible to other workers quickly.
+const LOCAL_PER_CLASS: usize = 2;
+
+/// Capacity class that can *serve* a request for `len` elements: the
+/// smallest `c` with `2^c >= len` (0 for `len <= 1`).
+fn class_for_len(len: usize) -> usize {
+    (usize::BITS - len.saturating_sub(1).leading_zeros()) as usize
+}
+
+/// Capacity class a buffer with `cap > 0` elements *lands on*: floor
+/// log2, so a shelf only ever holds buffers at least as large as the
+/// takes that probe it.
+fn class_for_cap(cap: usize) -> usize {
+    debug_assert!(cap > 0);
+    (usize::BITS - 1 - cap.leading_zeros()) as usize
+}
+
+/// Pop one buffer from a shared class shelf (leaf lock, O(1)).
+fn pop_shelf(shelf: &Mutex<Vec<HostTensor>>) -> Option<HostTensor> {
+    shelf.lock().unwrap().pop()
+}
+
+/// Push a buffer onto a shared class shelf (leaf lock, O(1)); beyond
+/// the retention cap the buffer is dropped, bounding pool memory.
+fn push_shelf(shelf: &Mutex<Vec<HostTensor>>, t: HostTensor) {
+    let mut g = shelf.lock().unwrap();
+    if g.len() < SHARED_PER_CLASS {
+        g.push(t);
+    }
+}
+
+/// One thread's lock-free sub-pool for one [`TensorPool`] instance.
+///
+/// Keyed by the pool's `Arc` address; the `Weak` both proves liveness
+/// and pins the allocation so the key cannot be reused by a different
+/// pool while this entry exists (no ABA).
+struct LocalShelves {
+    key: *const TensorPool,
+    pool: Weak<TensorPool>,
+    f32s: [Vec<HostTensor>; POOL_CLASSES],
+    i32s: [Vec<HostTensor>; POOL_CLASSES],
+}
+
+impl LocalShelves {
+    // lint: allow(alloc) reason=once-per-(thread,pool) registry entry; the shelves start empty and their spines warm with the pool
+    fn new(pool: &Arc<TensorPool>) -> LocalShelves {
+        LocalShelves {
+            key: Arc::as_ptr(pool),
+            pool: Arc::downgrade(pool),
+            f32s: std::array::from_fn(|_| Vec::new()),
+            i32s: std::array::from_fn(|_| Vec::new()),
+        }
+    }
+
+    /// Reuse a dead entry (its pool dropped) for a new pool.
+    fn rebind(&mut self, pool: &Arc<TensorPool>) {
+        self.key = Arc::as_ptr(pool);
+        self.pool = Arc::downgrade(pool);
+        for s in self.f32s.iter_mut().chain(self.i32s.iter_mut()) {
+            s.clear();
+        }
+    }
+}
+
+/// Per-thread registry of sub-pools (one entry per live pool this
+/// thread has touched).
+struct LocalPools {
+    entries: Vec<LocalShelves>,
+}
+
+thread_local! {
+    // lint: allow(alloc) reason=per-thread registry shell, built once per thread
+    static LOCAL: RefCell<LocalPools> =
+        RefCell::new(LocalPools { entries: Vec::new() });
+}
+
+/// Run `f` against the calling thread's sub-pool for `pool`, creating
+/// or rebinding the registry entry as needed.  Returns `None` during
+/// thread teardown (TLS destroyed) — callers fall back to the shared
+/// shelves.
+fn with_local<R>(
+    pool: &Arc<TensorPool>,
+    f: impl FnOnce(&mut LocalShelves) -> R,
+) -> Option<R> {
+    LOCAL
+        .try_with(|cell| {
+            let mut reg = cell.borrow_mut();
+            let key = Arc::as_ptr(pool);
+            let mut found = None;
+            let mut dead = None;
+            for (i, e) in reg.entries.iter().enumerate() {
+                if e.key == key && e.pool.strong_count() > 0 {
+                    found = Some(i);
+                    break;
+                }
+                if dead.is_none() && e.pool.strong_count() == 0 {
+                    dead = Some(i);
+                }
+            }
+            let idx = match (found, dead) {
+                (Some(i), _) => i,
+                (None, Some(i)) => {
+                    reg.entries[i].rebind(pool);
+                    i
+                }
+                (None, None) => {
+                    reg.entries.push(LocalShelves::new(pool));
+                    reg.entries.len() - 1
+                }
+            };
+            f(&mut reg.entries[idx])
+        })
+        .ok()
+}
+
+/// A bucketed pool of reusable [`HostTensor`] buffers: power-of-two
+/// capacity classes (per dtype) behind per-class leaf mutexes, fronted
+/// by lock-free per-thread sub-pools, with recycled/fresh/steal
+/// accounting.  Shared as `Arc<TensorPool>` by the coordinator's
+/// workers and clients.
 pub struct TensorPool {
-    f32s: Mutex<Vec<HostTensor>>,
-    i32s: Mutex<Vec<HostTensor>>,
+    f32s: [Mutex<Vec<HostTensor>>; POOL_CLASSES],
+    i32s: [Mutex<Vec<HostTensor>>; POOL_CLASSES],
     recycled: AtomicU64,
     fresh: AtomicU64,
+    steals: AtomicU64,
+}
+
+impl Default for TensorPool {
+    fn default() -> TensorPool {
+        TensorPool::new()
+    }
 }
 
 impl TensorPool {
     /// New empty pool.
+    // lint: allow(alloc) reason=cold constructor: empty class shelves, populated only by recycling
     pub fn new() -> TensorPool {
-        TensorPool::default()
-    }
-
-    /// Pop the buffer whose data capacity fits `min_len` most tightly
-    /// (true best-fit, so small checkouts never hog large buffers and a
-    /// warmed mixed-size pool stays reallocation-free); falls back to
-    /// the largest free buffer, which regrows in place at most once.
-    /// The second value reports whether the buffer genuinely fits —
-    /// only a true fit counts as a recycle hit (a fallback checkout
-    /// still reallocates on fill, so it is accounted as fresh).
-    fn pop(list: &Mutex<Vec<HostTensor>>, min_len: usize,
-           cap_of: impl Fn(&HostTensor) -> usize)
-           -> Option<(HostTensor, bool)> {
-        let mut g = list.lock().unwrap();
-        if g.is_empty() {
-            return None;
-        }
-        let mut fit: Option<(usize, usize)> = None;
-        let mut largest: (usize, usize) = (0, 0);
-        for (i, t) in g.iter().enumerate() {
-            let c = cap_of(t);
-            let tighter = match fit {
-                Some((_, fc)) => c < fc,
-                None => true,
-            };
-            if c >= min_len && tighter {
-                fit = Some((i, c));
-            }
-            if c > largest.1 {
-                largest = (i, c);
-            }
-        }
-        let (idx, fits) = match fit {
-            Some((i, _)) => (i, true),
-            None => (largest.0, false),
-        };
-        Some((g.swap_remove(idx), fits))
-    }
-
-    /// Account a checkout and wrap it (a fallback buffer that will have
-    /// to regrow counts as fresh, so the recycle hit rate stays honest).
-    // lint: allow(alloc) reason=Arc refcount clones handing the shared pool to a session (startup, not per-request)
-    fn checkout(self: &Arc<Self>, popped: Option<(HostTensor, bool)>,
-                empty: HostTensor) -> PooledTensor {
-        match popped {
-            Some((t, fits)) => {
-                if fits {
-                    self.recycled.fetch_add(1, Ordering::Relaxed);
-                } else {
-                    self.fresh.fetch_add(1, Ordering::Relaxed);
-                }
-                PooledTensor { t, home: Some(self.clone()), recycled: fits }
-            }
-            None => {
-                self.fresh.fetch_add(1, Ordering::Relaxed);
-                PooledTensor {
-                    t: empty,
-                    home: Some(self.clone()),
-                    recycled: false,
-                }
-            }
+        TensorPool {
+            f32s: std::array::from_fn(|_| Mutex::new(Vec::new())),
+            i32s: std::array::from_fn(|_| Mutex::new(Vec::new())),
+            recycled: AtomicU64::new(0),
+            fresh: AtomicU64::new(0),
+            steals: AtomicU64::new(0),
         }
     }
 
-    /// Check out an f32 buffer with room for `min_len` elements
-    /// (recycled when the freelist has a fitting one, fresh otherwise);
-    /// fill it with [`PooledTensor::fill_f32`].  Dropping the returned
-    /// handle puts the buffer back.
-    // lint: allow(alloc) reason=empty-Vec sentinel on a pool miss; capacity grows once and is recycled
+    /// Check out an f32 buffer with room for `min_len` elements: the
+    /// calling thread's sub-pool first (lock-free), then the shared
+    /// class shelf (and the one above it, covering allocator round-up),
+    /// fresh otherwise — every path O(1).  Fill it with
+    /// [`PooledTensor::fill_f32`]; dropping the returned handle puts
+    /// the buffer back.
+    // lint: allow(alloc) reason=fresh checkout reserves the class boundary once (then recycles) + Arc refcount clone for the drop hook
     pub fn take_f32(self: &Arc<Self>, min_len: usize) -> PooledTensor {
-        let popped = Self::pop(&self.f32s, min_len, |t| match t {
-            HostTensor::F32(d, _) => d.capacity(),
-            HostTensor::I32(..) => 0,
-        });
-        self.checkout(popped, HostTensor::F32(Vec::new(), Vec::new()))
+        let cls = class_for_len(min_len);
+        if cls < POOL_CLASSES {
+            let local = with_local(self, |ls| ls.f32s[cls].pop()).flatten();
+            if let Some(t) = local {
+                self.recycled.fetch_add(1, Ordering::Relaxed);
+                return PooledTensor { t, home: Some(self.clone()), recycled: true };
+            }
+            for c in [cls, cls + 1] {
+                if c >= POOL_CLASSES {
+                    break;
+                }
+                if let Some(t) = pop_shelf(&self.f32s[c]) {
+                    self.recycled.fetch_add(1, Ordering::Relaxed);
+                    self.steals.fetch_add(1, Ordering::Relaxed);
+                    return PooledTensor { t, home: Some(self.clone()), recycled: true };
+                }
+            }
+        }
+        self.fresh.fetch_add(1, Ordering::Relaxed);
+        let cap = fresh_cap(min_len, cls);
+        PooledTensor {
+            t: HostTensor::F32(Vec::with_capacity(cap), Vec::new()),
+            home: Some(self.clone()),
+            recycled: false,
+        }
     }
 
     /// i32 counterpart of [`TensorPool::take_f32`] (token-id inputs).
-    // lint: allow(alloc) reason=empty-Vec sentinel on a pool miss; capacity grows once and is recycled
+    // lint: allow(alloc) reason=fresh checkout reserves the class boundary once (then recycles) + Arc refcount clone for the drop hook
     pub fn take_i32(self: &Arc<Self>, min_len: usize) -> PooledTensor {
-        let popped = Self::pop(&self.i32s, min_len, |t| match t {
-            HostTensor::I32(d, _) => d.capacity(),
-            HostTensor::F32(..) => 0,
-        });
-        self.checkout(popped, HostTensor::I32(Vec::new(), Vec::new()))
+        let cls = class_for_len(min_len);
+        if cls < POOL_CLASSES {
+            let local = with_local(self, |ls| ls.i32s[cls].pop()).flatten();
+            if let Some(t) = local {
+                self.recycled.fetch_add(1, Ordering::Relaxed);
+                return PooledTensor { t, home: Some(self.clone()), recycled: true };
+            }
+            for c in [cls, cls + 1] {
+                if c >= POOL_CLASSES {
+                    break;
+                }
+                if let Some(t) = pop_shelf(&self.i32s[c]) {
+                    self.recycled.fetch_add(1, Ordering::Relaxed);
+                    self.steals.fetch_add(1, Ordering::Relaxed);
+                    return PooledTensor { t, home: Some(self.clone()), recycled: true };
+                }
+            }
+        }
+        self.fresh.fetch_add(1, Ordering::Relaxed);
+        let cap = fresh_cap(min_len, cls);
+        PooledTensor {
+            t: HostTensor::I32(Vec::with_capacity(cap), Vec::new()),
+            home: Some(self.clone()),
+            recycled: false,
+        }
     }
 
-    /// Return a buffer to its freelist (no-op beyond the retention cap).
-    fn put(&self, t: HostTensor) {
-        let list = match &t {
-            HostTensor::F32(..) => &self.f32s,
-            HostTensor::I32(..) => &self.i32s,
+    /// Return a buffer: the releasing thread's sub-pool first
+    /// (lock-free), spilling to the shared class shelf past
+    /// `LOCAL_PER_CLASS`, dropped past the shared retention cap.
+    fn put(home: &Arc<TensorPool>, t: HostTensor) {
+        let (cap, is_f32) = match &t {
+            HostTensor::F32(d, _) => (d.capacity(), true),
+            HostTensor::I32(d, _) => (d.capacity(), false),
         };
-        let mut g = list.lock().unwrap();
-        if g.len() < MAX_RETAINED {
-            g.push(t);
+        if cap == 0 {
+            return;
+        }
+        let cls = class_for_cap(cap);
+        if cls >= POOL_CLASSES {
+            return;
+        }
+        let mut carry = Some(t);
+        with_local(home, |ls| {
+            let shelf = if is_f32 { &mut ls.f32s[cls] } else { &mut ls.i32s[cls] };
+            if shelf.len() < LOCAL_PER_CLASS {
+                if let Some(t) = carry.take() {
+                    shelf.push(t);
+                }
+            }
+        });
+        if let Some(t) = carry {
+            let shelf = if is_f32 { &home.f32s[cls] } else { &home.i32s[cls] };
+            push_shelf(shelf, t);
         }
     }
 
@@ -147,22 +306,57 @@ impl TensorPool {
          self.fresh.load(Ordering::Relaxed))
     }
 
-    /// Human-readable recycle summary, e.g. `"412/420 (98.1%)"` — the
-    /// one formatting of [`TensorPool::stats`] every bench/CLI report
-    /// shares.
+    /// Recycled checkouts satisfied from the *shared* shelves rather
+    /// than the calling thread's sub-pool — i.e. the buffer crossed
+    /// threads since its release (a steal).  Subset of the recycled
+    /// count in [`TensorPool::stats`].
+    pub fn steals(&self) -> u64 {
+        self.steals.load(Ordering::Relaxed)
+    }
+
+    /// Human-readable recycle summary, e.g. `"412/420 (98.1%, 31
+    /// stolen)"` — the one formatting of [`TensorPool::stats`] every
+    /// bench/CLI report shares.
     // lint: allow(alloc) reason=diagnostics string for operator tooling, never on the serving path
     pub fn hit_rate_summary(&self) -> String {
         let (recycled, fresh) = self.stats();
-        format!("{recycled}/{} ({:.1}%)", recycled + fresh,
-                100.0 * recycled as f64 / (recycled + fresh).max(1) as f64)
+        format!("{recycled}/{} ({:.1}%, {} stolen)", recycled + fresh,
+                100.0 * recycled as f64 / (recycled + fresh).max(1) as f64,
+                self.steals())
     }
 
-    /// Buffers currently idle in the freelists.
+    /// Buffers currently idle on the **shared** class shelves (other
+    /// threads' sub-pools are not visible; see
+    /// [`TensorPool::local_idle`]).  Shelf mutexes are leaf locks taken
+    /// one at a time, never nested.
     pub fn idle(&self) -> usize {
-        // lock-order: f32s before i32s (matches every other dual-freelist
-        // path in this module; neither lock is held across the other's
-        // unlock elsewhere, but keep the order anyway)
-        self.f32s.lock().unwrap().len() + self.i32s.lock().unwrap().len()
+        let mut n = 0;
+        for shelf in self.f32s.iter().chain(self.i32s.iter()) {
+            n += shelf.lock().unwrap().len();
+        }
+        n
+    }
+
+    /// Buffers idle on the *calling thread's* sub-pool for this pool
+    /// (test/diagnostic hook).
+    pub fn local_idle(self: &Arc<Self>) -> usize {
+        with_local(self, |ls| {
+            ls.f32s.iter().chain(ls.i32s.iter()).map(Vec::len).sum()
+        })
+        .unwrap_or(0)
+    }
+}
+
+/// Data capacity for a fresh checkout: the class boundary (so the
+/// buffer recycles into the class that serves `min_len`), zero for
+/// empty takes, exact for beyond-pool sizes.
+fn fresh_cap(min_len: usize, cls: usize) -> usize {
+    if min_len == 0 {
+        0
+    } else if cls < POOL_CLASSES {
+        1usize << cls
+    } else {
+        min_len
     }
 }
 
@@ -184,7 +378,7 @@ impl PooledTensor {
         PooledTensor { t, home: None, recycled: false }
     }
 
-    /// Whether this checkout reused a freelist buffer (feeds the
+    /// Whether this checkout reused a pooled buffer (feeds the
     /// recycled-vs-fresh serving metric).
     pub fn recycled(&self) -> bool {
         self.recycled
@@ -192,34 +386,45 @@ impl PooledTensor {
 
     /// Overwrite with f32 `data` + `shape`, reusing the existing data and
     /// shape vectors in place — allocation-free once the buffer has seen
-    /// the capacity.
-    // lint: allow(alloc) reason=dtype-flip fallback copies once before the slot is recycled
+    /// the capacity.  A regrow jumps straight to the next power of two
+    /// so the buffer re-enters the pool on a class boundary.
+    // lint: allow(alloc) reason=one-time pow2 regrow to the class boundary + dtype-flip fallback; steady state reuses capacity
     pub fn fill_f32(&mut self, data: &[f32], shape: &[usize]) {
         match &mut self.t {
             HostTensor::F32(d, s) => {
                 d.clear();
+                if d.capacity() < data.len() {
+                    d.reserve_exact(data.len().next_power_of_two());
+                }
                 d.extend_from_slice(data);
                 s.clear();
                 s.extend_from_slice(shape);
             }
             t @ HostTensor::I32(..) => {
-                *t = HostTensor::F32(data.to_vec(), shape.to_vec());
+                let mut d = Vec::with_capacity(data.len().next_power_of_two());
+                d.extend_from_slice(data);
+                *t = HostTensor::F32(d, shape.to_vec());
             }
         }
     }
 
     /// i32 counterpart of [`PooledTensor::fill_f32`].
-    // lint: allow(alloc) reason=dtype-flip fallback copies once before the slot is recycled
+    // lint: allow(alloc) reason=one-time pow2 regrow to the class boundary + dtype-flip fallback; steady state reuses capacity
     pub fn fill_i32(&mut self, data: &[i32], shape: &[usize]) {
         match &mut self.t {
             HostTensor::I32(d, s) => {
                 d.clear();
+                if d.capacity() < data.len() {
+                    d.reserve_exact(data.len().next_power_of_two());
+                }
                 d.extend_from_slice(data);
                 s.clear();
                 s.extend_from_slice(shape);
             }
             t @ HostTensor::F32(..) => {
-                *t = HostTensor::I32(data.to_vec(), shape.to_vec());
+                let mut d = Vec::with_capacity(data.len().next_power_of_two());
+                d.extend_from_slice(data);
+                *t = HostTensor::I32(d, shape.to_vec());
             }
         }
     }
@@ -254,7 +459,7 @@ impl Drop for PooledTensor {
             // swapping in an empty vec allocates nothing
             let t = std::mem::replace(&mut self.t,
                                       HostTensor::F32(Vec::new(), Vec::new()));
-            home.put(t);
+            TensorPool::put(&home, t);
         }
     }
 }
@@ -264,56 +469,165 @@ mod tests {
     use super::*;
 
     #[test]
-    fn drop_returns_buffer_and_counts_recycles() {
+    fn capacity_classes_are_pow2_buckets() {
+        assert_eq!(class_for_len(0), 0);
+        assert_eq!(class_for_len(1), 0);
+        assert_eq!(class_for_len(2), 1);
+        assert_eq!(class_for_len(8), 3);
+        assert_eq!(class_for_len(9), 4);
+        assert_eq!(class_for_cap(1), 0);
+        assert_eq!(class_for_cap(8), 3);
+        // floor: a cap-9 buffer lands where class-3 takes can use it
+        assert_eq!(class_for_cap(9), 3);
+        assert_eq!(class_for_cap(16), 4);
+    }
+
+    #[test]
+    fn local_subpool_recycles_on_the_same_thread() {
         let pool = Arc::new(TensorPool::new());
         let mut a = pool.take_f32(4);
         assert!(!a.recycled());
         a.fill_f32(&[1.0, 2.0, 3.0, 4.0], &[4]);
         let ptr = a.as_f32().unwrap().as_ptr();
         drop(a);
-        assert_eq!(pool.idle(), 1);
-        let b = pool.take_f32(2);
-        assert!(b.recycled(), "freelist buffer must be reused");
+        assert_eq!(pool.local_idle(), 1, "drop lands on the local sub-pool");
+        assert_eq!(pool.idle(), 0, "shared shelves stay untouched");
+        let b = pool.take_f32(3);
+        assert!(b.recycled(), "same-class take must reuse the local buffer");
         assert_eq!(b.as_f32().unwrap().as_ptr(), ptr,
                    "reused buffer must keep its allocation");
         assert_eq!(pool.stats(), (1, 1));
+        assert_eq!(pool.steals(), 0, "same-thread recycling is not a steal");
     }
 
     #[test]
-    fn dtypes_use_separate_freelists() {
+    fn dtypes_use_separate_class_shelves() {
         let pool = Arc::new(TensorPool::new());
         drop(pool.take_i32(3));
-        assert_eq!(pool.idle(), 1);
+        assert_eq!(pool.local_idle(), 1);
         let f = pool.take_f32(3);
         assert!(!f.recycled(), "an i32 buffer must not satisfy an f32 take");
-        let i = pool.take_i32(0);
-        assert!(i.recycled());
+        let i = pool.take_i32(4);
+        assert!(i.recycled(), "same class + dtype hits the local shelf");
     }
 
     #[test]
-    fn best_fit_prefers_large_enough_capacity() {
+    fn bucket_boundaries_exact_one_over_and_regrow() {
         let pool = Arc::new(TensorPool::new());
-        let mut small = pool.take_f32(2);
-        small.fill_f32(&[0.0; 2], &[2]);
-        let mut big = pool.take_f32(100);
-        big.fill_f32(&[0.0; 100], &[100]);
-        drop(small);
-        drop(big);
-        let t = pool.take_f32(50);
-        // a popped buffer keeps its previous contents until refilled, so
-        // the retained shape identifies which one was chosen
-        assert_eq!(t.tensor().shape(), &[100],
-                   "take should prefer the buffer that already fits");
-        // nothing left that fits 1000: the fallback buffer will have to
-        // regrow, so it must NOT count as a recycle hit
-        let fallback = pool.take_f32(1000);
-        assert!(!fallback.recycled(),
-                "a too-small fallback checkout must be accounted fresh");
-        drop(fallback);
+        // exact capacity: a cap-8 buffer serves any take in its class
+        let mut t = pool.take_f32(8);
+        t.fill_f32(&[0.0; 8], &[8]);
+        let ptr = t.as_f32().unwrap().as_ptr();
         drop(t);
-        // detached tensors never re-enter the pool
-        let idle = pool.idle();
+        let t = pool.take_f32(5);
+        assert!(t.recycled());
+        assert_eq!(t.as_f32().unwrap().as_ptr(), ptr);
+        drop(t);
+        // one-over: len 9 is the next class; the idle cap-8 buffer must
+        // NOT serve it (it could not hold the data without regrowing)
+        let mut t9 = pool.take_f32(9);
+        assert!(!t9.recycled(), "class-3 buffer must not serve a class-4 take");
+        match t9.tensor() {
+            HostTensor::F32(d, _) => {
+                assert_eq!(d.capacity(), 16, "fresh take reserves the class boundary");
+            }
+            HostTensor::I32(..) => unreachable!(),
+        }
+        // ...and once released at its pow2 capacity it serves the whole
+        // class, including the exact boundary
+        t9.fill_f32(&[0.0; 9], &[9]);
+        drop(t9);
+        let t16 = pool.take_f32(16);
+        assert!(t16.recycled(), "cap-16 buffer serves the exact boundary take");
+        drop(t16);
+        // regrow: filling past capacity normalizes to the next pow2, so
+        // the regrown buffer recycles at its NEW class
+        let mut small = pool.take_f32(4);
+        assert!(!small.recycled());
+        small.fill_f32(&[0.0; 100], &[100]);
+        match small.tensor() {
+            HostTensor::F32(d, _) => assert_eq!(d.capacity(), 128),
+            HostTensor::I32(..) => unreachable!(),
+        }
+        drop(small);
+        let big = pool.take_f32(100);
+        assert!(big.recycled(), "a regrown buffer recycles at its new class");
+    }
+
+    #[test]
+    fn overflow_spills_to_shared_and_other_threads_steal() {
+        let pool = Arc::new(TensorPool::new());
+        let ts = [pool.take_f32(8), pool.take_f32(8),
+                  pool.take_f32(8), pool.take_f32(8)];
+        drop(ts);
+        assert_eq!(pool.local_idle(), 2,
+                   "local sub-pool keeps LOCAL_PER_CLASS buffers");
+        assert_eq!(pool.idle(), 2, "the rest spill to the shared shelf");
+        std::thread::scope(|s| {
+            s.spawn(|| {
+                let t = pool.take_f32(8);
+                assert!(t.recycled(),
+                        "cross-thread take recycles via the shared shelf");
+            });
+        });
+        assert!(pool.steals() >= 1, "shared-shelf hits count as steals");
+        assert_eq!(pool.stats().1, 4, "only the four originals were fresh");
+    }
+
+    #[test]
+    fn multithread_take_put_stress_mostly_recycles() {
+        let pool = Arc::new(TensorPool::new());
+        let iters = 200usize;
+        std::thread::scope(|s| {
+            for w in 0..4usize {
+                let pool = &pool;
+                s.spawn(move || {
+                    for i in 0..iters {
+                        let len = [3usize, 17, 65, 300][(i + w) % 4];
+                        let mut t = pool.take_f32(len);
+                        t.fill_f32(&vec![0.5; len], &[len]);
+                        let mut q = pool.take_i32(len);
+                        q.fill_i32(&vec![1; len], &[len]);
+                    }
+                });
+            }
+        });
+        let (recycled, fresh) = pool.stats();
+        assert_eq!(recycled + fresh, (4 * iters * 2) as u64,
+                   "every take is accounted exactly once");
+        assert!(recycled > fresh,
+                "steady-state stress must mostly recycle ({recycled} vs {fresh})");
+    }
+
+    #[test]
+    fn warmed_steady_state_is_fully_recycled() {
+        let pool = Arc::new(TensorPool::new());
+        for _ in 0..3 {
+            let mut a = pool.take_f32(10);
+            a.fill_f32(&[0.0; 10], &[10]);
+            let mut b = pool.take_f32(100);
+            b.fill_f32(&[0.0; 100], &[100]);
+        }
+        let fresh0 = pool.stats().1;
+        for _ in 0..100 {
+            let a = pool.take_f32(10);
+            assert!(a.recycled());
+            let b = pool.take_f32(100);
+            assert!(b.recycled());
+            drop((a, b));
+        }
+        let (recycled, fresh) = pool.stats();
+        assert_eq!(fresh, fresh0,
+                   "warmed steady-state checkouts take no fresh buffers");
+        assert!(recycled >= 200);
+    }
+
+    #[test]
+    fn detached_tensors_never_reenter_the_pool() {
+        let pool = Arc::new(TensorPool::new());
+        drop(pool.take_f32(4));
+        let idle = pool.idle() + pool.local_idle();
         drop(PooledTensor::detached(HostTensor::F32(vec![1.0], vec![1])));
-        assert_eq!(pool.idle(), idle);
+        assert_eq!(pool.idle() + pool.local_idle(), idle);
     }
 }

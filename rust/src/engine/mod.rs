@@ -87,6 +87,24 @@ use crate::model::encoder::{encoder_forward_slot, encoder_forward_slots,
 use crate::model::{EncoderCfg, ParamStore, ResolvedEncoder, ScratchPool};
 use crate::tensor::{Mat, MatRef};
 
+/// Disjoint borrows of everything one tower contributes to a stealing
+/// joint forward ([`crate::model::encoder::encoder_forward_towers`]):
+/// resolved weights, config, validated input slots, matching pooled
+/// output buffers, and the session's scratch pool.  Produced by
+/// `Session::tower_parts`, consumed by [`JointSession::forward`].
+struct TowerParts<'a> {
+    /// resolved weights of this tower
+    re: &'a ResolvedEncoder,
+    /// this tower's encoder config
+    cfg: &'a EncoderCfg,
+    /// validated, size-reset input slots of the current batch
+    slots: &'a mut [SeqSlot],
+    /// matching pooled output buffers (same length as `slots`)
+    outs: &'a mut [Mat],
+    /// the session's scratch pool (one tower lends it to the joint pool)
+    pool: &'a mut ScratchPool,
+}
+
 /// Hash an [`EncoderCfg`] for the resolution cache (f32 via bit pattern).
 fn cfg_key(cfg: &EncoderCfg) -> u64 {
     let mut h = std::collections::hash_map::DefaultHasher::new();
@@ -232,6 +250,31 @@ impl Session {
     /// default 1 = inline, no thread spawns).
     pub fn set_workers(&mut self, workers: usize) {
         self.workers = workers.max(1);
+    }
+
+    /// The configured fan-out width.
+    fn workers(&self) -> usize {
+        self.workers
+    }
+
+    /// Split the session into the disjoint borrows a stealing joint
+    /// forward needs: validate inputs, reset per-slot sizes, check out
+    /// the output buffers, and lend out weights/slots/outputs/pool —
+    /// the front half of [`Session::forward`], with the encoder drive
+    /// left to [`crate::model::encoder::encoder_forward_towers`].
+    fn tower_parts(&mut self) -> Result<TowerParts<'_>> {
+        self.validate_inputs()?;
+        for s in &mut self.slots[..self.count] {
+            s.reset_sizes();
+        }
+        let outs = self.outputs.take(self.count);
+        Ok(TowerParts {
+            re: &*self.re,
+            cfg: &self.cfg,
+            slots: &mut self.slots[..self.count],
+            outs,
+            pool: &mut self.pool,
+        })
     }
 
     /// Start a batch of `count` samples: pooled input slots are handed

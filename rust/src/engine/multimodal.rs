@@ -30,6 +30,7 @@ use crate::config::DEFAULT_TOFU_PRUNE_THRESHOLD;
 use crate::data::{Rng, CAP_LEN, VOCAB};
 use crate::error::{Error, Result};
 use crate::merge::MergeMode;
+use crate::model::encoder::{encoder_forward_towers, TowerBatch};
 use crate::model::params::{MatSpan, VecSpan};
 use crate::model::text::l2_normalize;
 use crate::model::{EncoderCfg, ParamStore, MM_TEXT_DEPTH, MM_TEXT_DIM};
@@ -235,14 +236,19 @@ impl JointSession {
         &self.cfg
     }
 
-    /// Set the vision tower's encoder fan-out width.
+    /// Set the joint fan-out width: with more than one worker,
+    /// [`JointSession::forward`] drains *both* towers with this many
+    /// work-stealing workers (one pool, fragments stolen across towers),
+    /// so a slow or oversized half can no longer idle the rest.
     pub fn set_vision_workers(&mut self, workers: usize) {
         self.vision.set_workers(workers);
     }
 
-    /// Set the text tower's encoder fan-out width (the halves are sized
-    /// — and fanned out — independently; text sequences are short, so
-    /// serial is usually right).
+    /// Set the text tower's own fan-out width.  Only the serial-vision
+    /// configuration uses it (with one vision worker the towers run
+    /// back-to-back and the text half fans out independently); the
+    /// stealing path sizes one shared pool from
+    /// [`JointSession::set_vision_workers`].
     pub fn set_text_workers(&mut self, workers: usize) {
         self.text.set_workers(workers);
     }
@@ -289,13 +295,36 @@ impl JointSession {
         self.text.set_tokens(i, tokens, table, pos)
     }
 
-    /// Run both towers over the current round (fan-out seeded per
-    /// (layer, sample) from `seed`; the text tower draws from a salted
-    /// stream).  Fusion is separate — call [`JointSession::fuse_vqa`] or
-    /// [`JointSession::project`] next.
+    /// Run both towers over the current round.  With one vision worker
+    /// (the default, and the allocation-free serving configuration) the
+    /// towers run back-to-back on the calling thread; with more, both
+    /// towers' slots are drained by one pool of work-stealing workers
+    /// ([`crate::model::encoder::encoder_forward_towers`]).  Every
+    /// sample's RNG stream is derived per (layer, sample) from `seed`
+    /// (the text tower from a salted stream), so the results are
+    /// **bitwise identical at every worker count** — stealing never
+    /// changes an answer.  Fusion is separate — call
+    /// [`JointSession::fuse_vqa`] or [`JointSession::project`] next.
     pub fn forward(&mut self, seed: u64) -> Result<()> {
-        self.vision.forward(seed)?;
-        self.text.forward(seed ^ TEXT_SEED_SALT)
+        let workers = self.vision.workers();
+        if workers <= 1 {
+            self.vision.forward(seed)?;
+            return self.text.forward(seed ^ TEXT_SEED_SALT);
+        }
+        let vp = self.vision.tower_parts()?;
+        let tp = self.text.tower_parts()?;
+        let total = vp.slots.len() + tp.slots.len();
+        let w = workers.min(total).max(1);
+        encoder_forward_towers(
+            &self.ps,
+            TowerBatch { re: vp.re, cfg: vp.cfg, slots: vp.slots,
+                         outs: vp.outs, seed },
+            TowerBatch { re: tp.re, cfg: tp.cfg, slots: tp.slots,
+                         outs: tp.outs, seed: seed ^ TEXT_SEED_SALT },
+            vp.pool.take(w),
+        );
+        self.vision.apply_head();
+        Ok(())
     }
 
     /// Serial shared-RNG variant of [`JointSession::forward`]: the whole
@@ -527,6 +556,40 @@ mod tests {
             for j in 0..3 {
                 let s = sess.score(i, j);
                 assert!((-1.001..=1.001).contains(&s), "score {s}");
+            }
+        }
+    }
+
+    #[test]
+    fn stealing_forward_is_bitwise_identical_at_every_worker_count() {
+        let (vcfg, engine) = mm_engine("pitome");
+        let cfg = JointConfig::retrieval(vcfg);
+        let fill = |sess: &mut JointSession| {
+            sess.begin(3, 5);
+            for i in 0..3 {
+                let item = shape_item(TEST_SEED, i as u64);
+                sess.set_patches(i, &patchify(&item.image, 4)).unwrap();
+            }
+            for j in 0..5 {
+                let cap = crate::data::caption_for(TEST_SEED, j as u64);
+                sess.set_text(j, &cap).unwrap();
+            }
+            sess.forward(7).unwrap();
+            sess.project().unwrap();
+        };
+        let mut serial = engine.joint_session(&cfg).unwrap();
+        fill(&mut serial);
+        for workers in [2, 4] {
+            let mut stealing = engine.joint_session(&cfg).unwrap();
+            stealing.set_vision_workers(workers);
+            fill(&mut stealing);
+            for i in 0..3 {
+                assert_eq!(serial.image_embed(i), stealing.image_embed(i),
+                           "image {i} diverged at {workers} workers");
+            }
+            for j in 0..5 {
+                assert_eq!(serial.text_embed(j), stealing.text_embed(j),
+                           "caption {j} diverged at {workers} workers");
             }
         }
     }

@@ -46,7 +46,10 @@ impl BertSession {
     }
 
     /// Set the encoder fan-out width (see
-    /// [`Session::set_workers`](super::Session::set_workers)).
+    /// [`Session::set_workers`](super::Session::set_workers)).  This is
+    /// a plain per-tower fan-out; only joint sessions get cross-tower
+    /// work-stealing
+    /// ([`JointSession::forward`](super::JointSession::forward)).
     pub fn set_workers(&mut self, workers: usize) {
         self.session.set_workers(workers);
     }

@@ -11,7 +11,7 @@ use crate::model::{EncoderCfg, ParamStore};
 use crate::tensor::{dense_into, Mat, MatRef};
 
 use super::head::ClassifierHead;
-use super::{Engine, Session};
+use super::{Engine, Session, TowerParts};
 
 /// A [`Session`](super::Session) extended with the ViT model's
 /// non-encoder stages — patch embedding (+ CLS + positional embedding) on
@@ -127,6 +127,26 @@ impl VitSession {
         self.session.forward(seed)?;
         self.head.apply(&self.ps, &self.session);
         Ok(())
+    }
+
+    /// The configured encoder fan-out width (the joint session reads it
+    /// to size the shared stealing pool).
+    pub(super) fn workers(&self) -> usize {
+        self.session.workers()
+    }
+
+    /// Lend out the encoder-stage borrows for a stealing joint forward.
+    /// The caller owns the encoder drive and must finish with
+    /// [`VitSession::apply_head`].
+    pub(super) fn tower_parts(&mut self) -> Result<TowerParts<'_>> {
+        self.session.tower_parts()
+    }
+
+    /// Run the classifier head over the session's current outputs — the
+    /// back half of [`VitSession::forward`], for callers that drove the
+    /// encoder externally via [`VitSession::tower_parts`].
+    pub(super) fn apply_head(&mut self) {
+        self.head.apply(&self.ps, &self.session);
     }
 
     /// Serial shared-RNG variant (the historical single-sample contract;

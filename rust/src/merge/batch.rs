@@ -21,10 +21,20 @@
 //!   nothing, which is what the engine's slot-based batch driver
 //!   (`model::encoder::encoder_forward_slots`) runs on — the fan-out
 //!   itself allocates nothing.
+//! * [`FragQueue`] — a work-stealing fragment queue over a pair of
+//!   slices: concurrent workers `pop` disjoint `(base, items, outs)`
+//!   fragments until the batch is drained.  Unlike the chunked fan-outs
+//!   above (static assignment), fragments go to whichever worker asks
+//!   next, so a slow item cannot strand the rest of its chunk behind one
+//!   worker — this is what the joint vision+text tower driver
+//!   (`model::encoder::encoder_forward_towers`) steals across towers
+//!   with.
 //!
 //! Each sequence still builds exactly one cosine Gram, on whichever worker
 //! thread processes it — batching composes with the shared-Gram pipeline
 //! rather than replacing it.
+
+use std::sync::Mutex;
 
 use super::{merge_step, MergeCtx, MergeMode};
 use crate::data::Rng;
@@ -213,6 +223,62 @@ where
     });
 }
 
+/// Interior state of a [`FragQueue`]: the not-yet-handed-out tail of
+/// the paired slices and the absolute index of its first element.
+struct FragState<'a, A, B> {
+    rest: Option<(&'a mut [A], &'a mut [B])>,
+    base: usize,
+}
+
+/// A work-stealing fragment queue over two paired slices.
+///
+/// `new` takes ownership of the borrows; concurrent workers call
+/// [`FragQueue::pop`] to receive disjoint fragments of up to `frag`
+/// pairs — `(base_index, &mut items, &mut outs)` — until the slices are
+/// exhausted.  Dynamic assignment (first worker to ask gets the next
+/// fragment) is what makes cross-tower stealing work: an idle worker
+/// can always grab the next fragment of *either* tower's queue.
+///
+/// The internal mutex is a **leaf lock** held only for the O(1)
+/// `split_at_mut`; callers process fragments entirely outside it, so
+/// queues never serialize the actual work and two queues can be polled
+/// in any order without a lock-ordering hazard.
+pub struct FragQueue<'a, A, B> {
+    state: Mutex<FragState<'a, A, B>>,
+    frag: usize,
+}
+
+impl<'a, A, B> FragQueue<'a, A, B> {
+    /// Queue the paired slices for fragment-wise draining (`frag` pairs
+    /// per pop, minimum 1).  The slices must be the same length.
+    pub fn new(items: &'a mut [A], outs: &'a mut [B], frag: usize)
+               -> FragQueue<'a, A, B> {
+        assert_eq!(items.len(), outs.len(), "FragQueue slice length mismatch");
+        let rest =
+            if items.is_empty() { None } else { Some((items, outs)) };
+        FragQueue {
+            state: Mutex::new(FragState { rest, base: 0 }),
+            frag: frag.max(1),
+        }
+    }
+
+    /// Claim the next fragment: `(absolute base index, items, outs)`,
+    /// or `None` once the queue is drained.
+    pub fn pop(&self) -> Option<(usize, &'a mut [A], &'a mut [B])> {
+        let mut g = self.state.lock().unwrap();
+        let (items, outs) = g.rest.take()?;
+        let k = self.frag.min(items.len());
+        let (fa, ra) = items.split_at_mut(k);
+        let (fb, rb) = outs.split_at_mut(k);
+        let base = g.base;
+        g.base += k;
+        if !ra.is_empty() {
+            g.rest = Some((ra, rb));
+        }
+        Some((base, fa, fb))
+    }
+}
+
 /// Run one merge step per sequence across up to `workers` threads,
 /// returning (merged tokens, new sizes) in input order.
 pub fn merge_step_batch(mode: MergeMode, seqs: &[BatchSeq], workers: usize)
@@ -329,6 +395,77 @@ mod tests {
                 assert_eq!(got_sizes, &want_sizes, "{mode:?} seq {i}");
             }
         }
+    }
+
+    #[test]
+    fn frag_queue_serial_drain_covers_everything_in_order() {
+        let mut items: Vec<u32> = (0..11).collect();
+        let mut outs = vec![0u32; 11];
+        let q = FragQueue::new(&mut items, &mut outs, 4);
+        let mut seen = Vec::new();
+        while let Some((base, fa, fb)) = q.pop() {
+            assert_eq!(fa.len(), fb.len());
+            for (off, (item, out)) in fa.iter().zip(fb.iter_mut()).enumerate() {
+                assert_eq!(*item as usize, base + off, "fragment base indexes");
+                *out = *item * 10;
+                seen.push(base + off);
+            }
+        }
+        // fragments of 4, 4, then the 3-item tail, in order, no overlap
+        assert_eq!(seen, (0..11).collect::<Vec<_>>());
+        assert_eq!(outs, (0..11).map(|v| v * 10).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn frag_queue_fragment_sizing() {
+        // frag larger than the batch hands everything out in one pop
+        let mut items = vec![7u8; 3];
+        let mut outs = vec![0u8; 3];
+        let q = FragQueue::new(&mut items, &mut outs, 64);
+        let (base, fa, _) = q.pop().expect("one fragment");
+        assert_eq!((base, fa.len()), (0, 3));
+        assert!(q.pop().is_none());
+
+        // frag=0 clamps to 1 (one pair per pop)
+        let mut items = vec![1u8, 2, 3];
+        let mut outs = vec![0u8; 3];
+        let q = FragQueue::new(&mut items, &mut outs, 0);
+        let mut pops = 0;
+        while let Some((_, fa, _)) = q.pop() {
+            assert_eq!(fa.len(), 1);
+            pops += 1;
+        }
+        assert_eq!(pops, 3);
+
+        // empty slices drain immediately
+        let mut items: Vec<u8> = Vec::new();
+        let mut outs: Vec<u8> = Vec::new();
+        let q = FragQueue::new(&mut items, &mut outs, 4);
+        assert!(q.pop().is_none());
+    }
+
+    #[test]
+    fn frag_queue_concurrent_drain_processes_each_item_once() {
+        let n = 103;
+        let mut items: Vec<usize> = (0..n).collect();
+        let mut outs = vec![0usize; n];
+        let q = FragQueue::new(&mut items, &mut outs, 3);
+        std::thread::scope(|s| {
+            for _ in 0..4 {
+                s.spawn(|| {
+                    while let Some((base, fa, fb)) = q.pop() {
+                        for (off, (item, out)) in
+                            fa.iter().zip(fb.iter_mut()).enumerate()
+                        {
+                            assert_eq!(*item, base + off);
+                            *out += item + 1; // += catches double delivery
+                        }
+                    }
+                });
+            }
+        });
+        // every slot written exactly once, regardless of which worker won
+        assert_eq!(outs, (1..=n).collect::<Vec<_>>());
     }
 
     #[test]

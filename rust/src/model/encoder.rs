@@ -9,7 +9,8 @@
 //! # The `EncoderScratch` workspace
 //!
 //! Every buffer the forward pass needs — the pre-LN output, the Q/K/V
-//! projections, the per-head (n, n) score tile, the attention output, the
+//! projections, the head-major packed K tile, the per-head (n, n) score
+//! tile, the attention output, the
 //! MLP hidden state, and the merge step's Gram/normalization/plan/output
 //! buffers (including the plan builders' index vectors, via
 //! [`PlanScratch`](crate::merge::PlanScratch) and the in-place
@@ -65,7 +66,7 @@
 
 use crate::data::Rng;
 use crate::error::Result;
-use crate::merge::batch::parallel_for2_mut_ctx;
+use crate::merge::batch::{parallel_for2_mut_ctx, FragQueue};
 use crate::merge::energy::layer_margin;
 use crate::merge::{merge_step_scratch, MergeCtx, MergeMode, MergeScratch};
 use crate::tensor::{add_inplace, dense_into, dot, gelu_inplace, layernorm,
@@ -249,6 +250,10 @@ struct BlockBufs {
     k: Mat,
     /// V projection (n, dim)
     v: Mat,
+    /// head-major packed K tile (heads·n, d): row `h·n + j` is head h's
+    /// K row j, so the scoring loop streams d-contiguous rows instead of
+    /// striding across the full (n, dim) K matrix
+    ktile: Mat,
     /// per-head (n, n) score tile
     scores: Mat,
     /// attention output (n, dim)
@@ -273,6 +278,7 @@ impl BlockBufs {
             q: Mat::zeros(0, 0),
             k: Mat::zeros(0, 0),
             v: Mat::zeros(0, 0),
+            ktile: Mat::zeros(0, 0),
             scores: Mat::zeros(0, 0),
             attn: Mat::zeros(0, 0),
             proj: Mat::zeros(0, 0),
@@ -341,16 +347,21 @@ impl Default for ScratchPool {
 ///
 /// q, kf, v: (n, dim) pre-split projections; sizes: len n.  Leaves the
 /// attention output (n, dim) in `out` and the mean CLS attention over
-/// heads (len n) in `attn_cls`; `scores`, `log_m`, and `row0` are
-/// internal scratch.  The per-head score tile is computed row-wise over
-/// the 8-lane [`dot`], and `out += P·Vₕ` runs as contiguous d-length
-/// axpys over the head slice — the vectorized replacement for the seed's
-/// scalar triple loop (benched in `benches/encoder_bench.rs`).
+/// heads (len n) in `attn_cls`; `ktile`, `scores`, `log_m`, and `row0`
+/// are internal scratch.  K is first packed into a head-major tile
+/// (`ktile` row `h·n + j` = head h's K row j), so the per-head scoring
+/// loop streams d-contiguous packed rows through the [`dot`] kernel
+/// instead of striding `dim`-length rows of `kf` — same values, same
+/// summation order, bitwise-identical results
+/// (`tests/prop_encoder.rs::ktiled_attention_matches_row_streaming_bitwise`).
+/// `out += P·Vₕ` runs as contiguous d-length axpys over the head slice —
+/// the vectorized replacement for the seed's scalar triple loop (benched
+/// in `benches/encoder_bench.rs`).
 #[allow(clippy::too_many_arguments)]
 pub fn attention_into(q: &Mat, kf: &Mat, v: &Mat, sizes: &[f32], heads: usize,
-                      prop_attn: bool, scores: &mut Mat, out: &mut Mat,
-                      attn_cls: &mut Vec<f32>, log_m: &mut Vec<f32>,
-                      row0: &mut Vec<f32>) {
+                      prop_attn: bool, ktile: &mut Mat, scores: &mut Mat,
+                      out: &mut Mat, attn_cls: &mut Vec<f32>,
+                      log_m: &mut Vec<f32>, row0: &mut Vec<f32>) {
     let n = q.rows;
     let dim = q.cols;
     let d = dim / heads;
@@ -367,15 +378,28 @@ pub fn attention_into(q: &Mat, kf: &Mat, v: &Mat, sizes: &[f32], heads: usize,
     attn_cls.resize(n, 0.0);
     row0.clear();
     row0.resize(n, 0.0);
+    // pack K head-major once per block: row h·n + j holds head h's K row
+    // j as a dense d-length slice, so every head's scoring pass below
+    // reads a compact (n, d) tile instead of touching d useful floats
+    // out of every dim-length row of `kf`
+    ktile.reshape(heads * n, d);
+    for j in 0..n {
+        let kr = kf.row(j);
+        for hh in 0..heads {
+            ktile.row_mut(hh * n + j)
+                .copy_from_slice(&kr[hh * d..(hh + 1) * d]);
+        }
+    }
     for hh in 0..heads {
         let col0 = hh * d;
+        let h0 = hh * n;
         // scores = qh @ kh^T * scale + log m
         scores.reshape(n, n);
         for i in 0..n {
             let qi = &q.row(i)[col0..col0 + d];
             let srow = scores.row_mut(i);
             for (j, sj) in srow.iter_mut().enumerate() {
-                let kj = &kf.row(j)[col0..col0 + d];
+                let kj = ktile.row(h0 + j);
                 *sj = dot(qi, kj) * scale + log_m[j];
             }
         }
@@ -421,13 +445,14 @@ pub fn attention_into(q: &Mat, kf: &Mat, v: &Mat, sizes: &[f32], heads: usize,
 // lint: allow(alloc) reason=allocating convenience wrapper over attention_into
 pub fn attention(q: &Mat, kf: &Mat, v: &Mat, sizes: &[f32], heads: usize,
                  prop_attn: bool) -> (Mat, Vec<f32>) {
+    let mut ktile = Mat::zeros(0, 0);
     let mut scores = Mat::zeros(0, 0);
     let mut out = Mat::zeros(0, 0);
     let mut attn_cls = Vec::new();
     let mut log_m = Vec::new();
     let mut row0 = Vec::new();
-    attention_into(q, kf, v, sizes, heads, prop_attn, &mut scores, &mut out,
-                   &mut attn_cls, &mut log_m, &mut row0);
+    attention_into(q, kf, v, sizes, heads, prop_attn, &mut ktile, &mut scores,
+                   &mut out, &mut attn_cls, &mut log_m, &mut row0);
     (out, attn_cls)
 }
 
@@ -441,8 +466,9 @@ fn block_attention_into(bp: &BlockParams, heads: usize, prop_attn: bool,
     matmul_into(&b.ln, bp.wq, &mut b.q);
     matmul_into(&b.ln, bp.wk, &mut b.k);
     matmul_into(&b.ln, bp.wv, &mut b.v);
-    attention_into(&b.q, &b.k, &b.v, sizes, heads, prop_attn, &mut b.scores,
-                   &mut b.attn, &mut b.attn_cls, &mut b.log_m, &mut b.row0);
+    attention_into(&b.q, &b.k, &b.v, sizes, heads, prop_attn, &mut b.ktile,
+                   &mut b.scores, &mut b.attn, &mut b.attn_cls, &mut b.log_m,
+                   &mut b.row0);
     dense_into(&b.attn, bp.wo, Some(bp.bo), &mut b.proj);
     add_inplace(x, &b.proj);
 }
@@ -675,6 +701,130 @@ pub fn encoder_forward_batch(ps: &ParamStore, cfg: &EncoderCfg, xs: Vec<Mat>,
     encoder_forward_batch_pooled(ps, cfg, xs, seed, workers, &mut pool)
 }
 
+/// One tower's pre-filled batch for [`encoder_forward_towers`]: the
+/// resolved weights and config, the input slots, the matching output
+/// buffers, and the tower's batch seed (per-(layer, sample) RNG
+/// derivation, so results are identical under any worker schedule).
+pub struct TowerBatch<'a> {
+    /// resolved weights of this tower
+    pub re: &'a ResolvedEncoder,
+    /// this tower's encoder config
+    pub cfg: &'a EncoderCfg,
+    /// pre-filled input slots (consumed in place by the layer loop)
+    pub slots: &'a mut [SeqSlot],
+    /// per-sample output buffers (same length as `slots`)
+    pub outs: &'a mut [Mat],
+    /// batch seed for this tower
+    pub seed: u64,
+}
+
+/// A tower's fragment queue plus the context workers need to drain it.
+struct TowerQueue<'a> {
+    frags: FragQueue<'a, SeqSlot, Mat>,
+    re: &'a ResolvedEncoder,
+    cfg: &'a EncoderCfg,
+    seed: u64,
+}
+
+/// Drain one tower serially in slot order — the exact per-sample
+/// computation of [`encoder_forward_slots`] (per-(layer, sample) seeds),
+/// shared by the inline path and the stealing workers.
+fn run_tower_serial(ps: &ParamStore, tb: TowerBatch<'_>,
+                    scratch: &mut EncoderScratch) {
+    for (i, (slot, out)) in
+        tb.slots.iter_mut().zip(tb.outs.iter_mut()).enumerate()
+    {
+        run_layers(ps, tb.re, tb.cfg, &mut slot.x, &mut slot.sizes,
+                   LayerRng::PerLayer { seed: tb.seed, sample: i as u64 },
+                   scratch);
+        tb.re.final_norm_into(ps, &slot.x, out);
+    }
+}
+
+/// One stealing worker: drain the preferred tower's queue, stealing
+/// fragments from the other tower whenever the preferred one runs dry,
+/// until both are empty.  Each queue's internal mutex is a leaf lock
+/// held only for the O(1) fragment split — never across the layer loop
+/// and never while touching the other queue — so workers cannot
+/// deadlock or serialize on each other.
+fn drain_towers(ps: &ParamStore, queues: [&TowerQueue<'_>; 2], prefer: usize,
+                scratch: &mut EncoderScratch) {
+    loop {
+        let mut next = None;
+        for qi in [prefer, 1 - prefer] {
+            if let Some(frag) = queues[qi].frags.pop() {
+                next = Some((qi, frag));
+                break;
+            }
+        }
+        let Some((qi, (base, slots, outs))) = next else { return };
+        let q = queues[qi];
+        for (off, (slot, out)) in
+            slots.iter_mut().zip(outs.iter_mut()).enumerate()
+        {
+            run_layers(ps, q.re, q.cfg, &mut slot.x, &mut slot.sizes,
+                       LayerRng::PerLayer { seed: q.seed,
+                                            sample: (base + off) as u64 },
+                       scratch);
+            q.re.final_norm_into(ps, &slot.x, out);
+        }
+    }
+}
+
+/// Run two towers' batches (e.g. a joint request's vision and text
+/// halves) over one pool of stealing workers: each tower's slots are
+/// split into batch fragments behind a [`FragQueue`], `scratches.len()`
+/// workers drain them — each preferring one tower but stealing from the
+/// other when idle — so one slow or oversized tower half can no longer
+/// idle the rest of the pool (ROADMAP item 5).
+///
+/// Per-(layer, sample) RNG seeding makes the result **bitwise identical**
+/// to running [`encoder_forward_slots`] per tower at any worker count,
+/// no matter which worker steals which fragment
+/// (`engine::multimodal` tests assert this across worker counts).
+/// With one scratch the towers run inline, serially, with zero spawns —
+/// the allocation-free serving configuration.
+pub fn encoder_forward_towers(ps: &ParamStore, vis: TowerBatch<'_>,
+                              txt: TowerBatch<'_>,
+                              scratches: &mut [EncoderScratch]) {
+    debug_assert_eq!(vis.slots.len(), vis.outs.len());
+    debug_assert_eq!(txt.slots.len(), txt.outs.len());
+    let total = vis.slots.len() + txt.slots.len();
+    let workers = scratches.len().min(total).max(1);
+    if workers <= 1 {
+        let scratch = &mut scratches[0];
+        run_tower_serial(ps, vis, scratch);
+        run_tower_serial(ps, txt, scratch);
+        return;
+    }
+    // fragments sized for ~2 per worker across both towers, so stealing
+    // has slack without shredding cache locality
+    let frag = (total / (workers * 2)).max(1);
+    let vq = TowerQueue {
+        frags: FragQueue::new(vis.slots, vis.outs, frag),
+        re: vis.re,
+        cfg: vis.cfg,
+        seed: vis.seed,
+    };
+    let tq = TowerQueue {
+        frags: FragQueue::new(txt.slots, txt.outs, frag),
+        re: txt.re,
+        cfg: txt.cfg,
+        seed: txt.seed,
+    };
+    let queues = [&vq, &tq];
+    let (first, rest) = scratches.split_first_mut().expect("workers >= 1");
+    std::thread::scope(|scope| {
+        for (w, scratch) in rest.iter_mut().enumerate().take(workers - 1) {
+            scope.spawn(move || {
+                drain_towers(ps, queues, (w + 1) % 2, scratch);
+            });
+        }
+        // the calling thread is worker 0 and prefers the vision tower
+        drain_towers(ps, queues, 0, first);
+    });
+}
+
 /// Plain (non-proportional) attention convenience used in tests.
 // lint: allow(alloc) reason=reference implementation used by parity tests only
 pub fn plain_attention(q: &Mat, kf: &Mat, v: &Mat, heads: usize) -> Mat {
@@ -727,6 +877,7 @@ mod tests {
     #[test]
     fn attention_into_reused_buffers_match_fresh() {
         let mut rng = Rng::new(5);
+        let mut ktile = Mat::zeros(0, 0);
         let mut scores = Mat::zeros(0, 0);
         let mut out = Mat::zeros(0, 0);
         let mut attn_cls = Vec::new();
@@ -740,8 +891,9 @@ mod tests {
             let sizes: Vec<f32> = (0..n).map(|i| 1.0 + (i % 3) as f32).collect();
             for prop in [true, false] {
                 let (want, want_cls) = attention(&q, &kf, &v, &sizes, heads, prop);
-                attention_into(&q, &kf, &v, &sizes, heads, prop, &mut scores,
-                               &mut out, &mut attn_cls, &mut log_m, &mut row0);
+                attention_into(&q, &kf, &v, &sizes, heads, prop, &mut ktile,
+                               &mut scores, &mut out, &mut attn_cls,
+                               &mut log_m, &mut row0);
                 assert_eq!(out.rows, want.rows);
                 assert!(out.max_abs_diff(&want) == 0.0, "n={n} prop={prop}");
                 assert_eq!(attn_cls, want_cls, "n={n} prop={prop}");

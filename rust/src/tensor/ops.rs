@@ -20,14 +20,21 @@ pub fn gram_builds_this_thread() -> usize {
 }
 
 /// f32 lanes per accumulator block in [`dot`], selected per target
-/// (ROADMAP "SIMD-width audit"): 8 on the AVX-shaped default, 4 on 128-bit
-/// NEON targets where an 8-lane block spills to two registers for no
-/// gain.  All widths produce results within float tolerance of each other
-/// (parity-tested in this module across 4/8/16 lanes).
+/// (ROADMAP "SIMD-width audit"): 4 on 128-bit NEON targets where an
+/// 8-lane block spills to two registers for no gain, 16 on x86-64 built
+/// with AVX-512 enabled (`-C target-feature=+avx512f` / a `znver4`-class
+/// `target-cpu`) so one accumulator block fills a zmm register, and 8 on
+/// the AVX-shaped default.  All widths produce results within float
+/// tolerance of each other (parity-tested in this module across
+/// 1/2/4/8/16 lanes, plus the target's own default selection).
 #[cfg(any(target_arch = "aarch64", target_arch = "arm"))]
 pub const DOT_LANES: usize = 4;
+/// f32 lanes per accumulator block in [`dot`] (16: one AVX-512 zmm).
+#[cfg(all(target_arch = "x86_64", target_feature = "avx512f"))]
+pub const DOT_LANES: usize = 16;
 /// f32 lanes per accumulator block in [`dot`] (8: AVX-shaped default).
-#[cfg(not(any(target_arch = "aarch64", target_arch = "arm")))]
+#[cfg(not(any(target_arch = "aarch64", target_arch = "arm",
+              all(target_arch = "x86_64", target_feature = "avx512f"))))]
 pub const DOT_LANES: usize = 8;
 
 /// Dot product with `L` independent partial sums (`L` >= 1; powers of
@@ -483,6 +490,25 @@ mod tests {
             assert_eq!(dot(&a, &b), dot_with_lanes::<DOT_LANES>(&a, &b),
                        "len {len}");
         }
+    }
+
+    #[test]
+    fn dot_default_lane_selection_matches_target() {
+        // the cfg ladder must resolve to exactly the width documented for
+        // the build target — a cfg typo would silently fall through to the
+        // 8-lane default and this is the only place that would notice
+        #[cfg(any(target_arch = "aarch64", target_arch = "arm"))]
+        assert_eq!(DOT_LANES, 4, "NEON targets select 4 lanes");
+        #[cfg(all(target_arch = "x86_64", target_feature = "avx512f"))]
+        assert_eq!(DOT_LANES, 16, "AVX-512 builds select 16 lanes");
+        #[cfg(not(any(target_arch = "aarch64", target_arch = "arm",
+                      all(target_arch = "x86_64",
+                          target_feature = "avx512f"))))]
+        assert_eq!(DOT_LANES, 8, "default targets select 8 lanes");
+        // and whatever was selected must be bitwise what `dot` computes
+        let a: Vec<f32> = (0..67).map(|i| (i as f32 * 0.37).sin()).collect();
+        let b: Vec<f32> = (0..67).map(|i| (i as f32 * 0.91).cos()).collect();
+        assert_eq!(dot(&a, &b), dot_with_lanes::<DOT_LANES>(&a, &b));
     }
 
     #[test]

@@ -131,6 +131,50 @@ impl Bench {
     pub fn within_budget(&self, started: Instant, budget: Duration) -> bool {
         started.elapsed() < budget
     }
+
+    /// Write every recorded result to `BENCH_<tag>.json` in the current
+    /// directory (hand-rolled serialization — no serde dependency):
+    /// name, mean/p50/p99 nanoseconds, and sample count per entry.  The
+    /// CI bench-smoke step uploads these as workflow artifacts so bench
+    /// output is diffable across runs instead of living only in logs.
+    /// Write failures are reported but never fail the bench.
+    pub fn write_json(&self, tag: &str) {
+        let mut s = String::from("{\n  \"results\": [\n");
+        for (i, r) in self.results.iter().enumerate() {
+            let sep = if i + 1 == self.results.len() { "" } else { "," };
+            s.push_str(&format!(
+                "    {{\"name\": \"{}\", \"mean_ns\": {:.1}, \
+                 \"p50_ns\": {}, \"p99_ns\": {}, \"samples\": {}}}{sep}\n",
+                json_escape(&r.name), r.mean_ns(), r.p50_ns(), r.p99_ns(),
+                r.samples_ns.len()));
+        }
+        s.push_str("  ]\n}\n");
+        let path = format!("BENCH_{tag}.json");
+        match std::fs::write(&path, s) {
+            Ok(()) => println!("wrote {path}"),
+            Err(e) => eprintln!("[bench] failed to write {path}: {e}"),
+        }
+    }
+}
+
+/// Escape a string for embedding in a JSON string literal (quotes,
+/// backslashes, and control characters; bench names contain nothing
+/// more exotic).
+fn json_escape(s: &str) -> String {
+    let mut out = String::with_capacity(s.len());
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\t' => out.push_str("\\t"),
+            c if (c as u32) < 0x20 => {
+                out.push_str(&format!("\\u{:04x}", c as u32));
+            }
+            c => out.push(c),
+        }
+    }
+    out
 }
 
 #[cfg(test)]
@@ -151,5 +195,14 @@ mod tests {
         assert!(fmt_ns(500.0).contains("ns"));
         assert!(fmt_ns(5_000.0).contains("us"));
         assert!(fmt_ns(5_000_000.0).contains("ms"));
+    }
+
+    #[test]
+    fn json_escape_handles_quotes_and_controls() {
+        assert_eq!(json_escape(r#"a "b" c"#), r#"a \"b\" c"#);
+        assert_eq!(json_escape("back\\slash"), "back\\\\slash");
+        assert_eq!(json_escape("line\nbreak\ttab"), "line\\nbreak\\ttab");
+        assert_eq!(json_escape("bell\u{7}"), "bell\\u0007");
+        assert_eq!(json_escape("plain"), "plain");
     }
 }

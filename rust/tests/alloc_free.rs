@@ -280,12 +280,19 @@ fn warmed_joint_request_cycle_is_allocation_free_including_transport() {
     // let the worker finish recycling the last request's input tensors
     std::thread::sleep(Duration::from_millis(50));
 
+    let (_, fresh_before) = pool.stats();
     let before = allocs_this_thread();
     cycle();
     let allocs = allocs_this_thread() - before;
     assert_eq!(allocs, 0,
                "submitter-side joint request→response→release cycle \
                 allocated {allocs} times");
+    // the bucketed pool must serve the whole warmed cycle from recycled
+    // buffers: zero fresh backing allocations in any capacity class
+    let (_, fresh_after) = pool.stats();
+    assert_eq!(fresh_after, fresh_before,
+               "warmed joint cycle took {} fresh pool buffers",
+               fresh_after - fresh_before);
 
     // worker side: the metrics land after the respond loop, so give the
     // worker a beat before reading them

@@ -206,7 +206,21 @@ fn mixed_workload_traffic_routes_fairly_with_per_workload_metrics() {
                1);
     assert_eq!(typed.iter().filter(|(w, ..)| *w == Workload::Joint).count(),
                1);
-    // responses recycled buffers from the shared pool
+    // settle round: every burst response has been received and dropped by
+    // now, so the pool's class shelves are warm and the follow-up request
+    // must recycle its response buffer from them
+    let item = shape_item(TEST_SEED, 0);
+    let patches = patchify(&item.image, 4);
+    let mut vt = pool.take_f32(patches.data.len());
+    vt.fill_f32(&patches.data, &[patches.rows, patches.cols]);
+    let resp = coord
+        .submit_typed(Workload::Vision, "vit", Qos::Throughput,
+                      Payload::Vision(vt))
+        .unwrap()
+        .recv()
+        .expect("settle round answered");
+    assert_eq!(argmax(resp.outputs[0].as_f32().unwrap()), want_vis[0]);
+    drop(resp);
     let (recycled, _fresh) = pool.stats();
     assert!(recycled > 0, "no response/request buffer was ever recycled");
 }

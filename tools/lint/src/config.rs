@@ -13,6 +13,9 @@ pub const HOT_PATH_MODULES: &[&str] = &[
     "src/model/encoder.rs",
     "src/engine/",
     "src/coordinator/pool.rs",
+    // the batching loop and its work-stealing joint fan-out: every warmed
+    // cycle through these workers must allocate nothing
+    "src/coordinator/batcher.rs",
 ];
 
 /// Sanctioned `CosineGram::build` / `.rebuild(...)` call sites, as
