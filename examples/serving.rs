@@ -41,7 +41,7 @@ fn main() -> anyhow::Result<()> {
 
     let trace = generate_trace(&TraceConfig {
         rate, count: requests, burstiness: 0.7, seed: 11, ..Default::default()
-    });
+    }).map_err(|e| anyhow::anyhow!("{e}"))?;
     let t0 = Instant::now();
     let mut pending = Vec::new();
     let mut correct_possible = 0usize;

@@ -56,6 +56,7 @@ fn main() {
     b.run(&format!("generate_trace {reps} events"), || {
         generate_trace(&TraceConfig { count: reps as usize,
                                       ..Default::default() })
+            .expect("trace")
     });
 
     // batch assembly: stack 8 x (64x16) f32 inputs (what run_batch does)

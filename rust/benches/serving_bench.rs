@@ -1,0 +1,193 @@
+//! Serving load-harness bench: replays deterministic multi-workload
+//! traces end-to-end against `boot_cpu_workloads` through the
+//! admission-controlled submit path (ROADMAP item 4).
+//!
+//! Phases:
+//!   1. closed-loop capacity probe (fixed user population → goodput is
+//!      the coordinator's sustainable rate);
+//!   2. steady open-loop replay at 0.5x capacity with diurnal + mild
+//!      burst modulation (healthy regime: no shedding expected);
+//!   3. deliberate 2x-overload bursty replay with per-request deadlines
+//!      (shed rate must go positive while admitted-request percentiles
+//!      stay bounded — no `u64::MAX` sentinels anywhere);
+//!   4. an unpaced spike (submission is microseconds, service is
+//!      milliseconds) — the worst-case admission-control stress.
+//!
+//! Every phase's goodput, shed rate, and per-workload p50/p99/p999 and
+//! queue-depth stats land in `BENCH_serving.json` via `Bench::write_json`
+//! so scaling progress is measurable PR-over-PR.
+
+use std::sync::Arc;
+
+use pitome::config::{ServingConfig, ViTConfig};
+use pitome::coordinator::{run_load, Coordinator, CpuWorkloads, LoadOptions,
+                          LoadReport};
+use pitome::data::{ArrivalModel, TraceConfig, WorkloadMix};
+use pitome::engine::JointKind;
+use pitome::model::synthetic_mm_store;
+use pitome::util::{smoke, Bench};
+
+/// Boot the multi-workload CPU coordinator the trace replays against:
+/// a 3-rung vision ladder (so Balanced routing has somewhere to shed),
+/// single-rung text and joint pools, small queues (capacity 8) so
+/// overload actually exercises admission control.
+fn boot() -> Coordinator {
+    let ps = Arc::new(synthetic_mm_store(&ViTConfig::default(), 7));
+    let workloads = CpuWorkloads {
+        vision: vec![("vit".to_string(),
+                      vec![("none".to_string(), 1.0),
+                           ("pitome".to_string(), 0.9),
+                           ("tome".to_string(), 0.5)])],
+        text: vec![("bert".to_string(), vec![("none".to_string(), 1.0)])],
+        joint: vec![("vqa".to_string(), JointKind::Vqa,
+                     vec![("pitome".to_string(), 0.9)])],
+    };
+    let cfg = ServingConfig {
+        max_batch: 4,
+        batch_timeout_us: 500,
+        queue_capacity: 8,
+        workers: 1,
+    };
+    Coordinator::boot_cpu_workloads(&ps, &workloads, cfg).expect("boot")
+}
+
+/// Closed-loop options: `users` in flight per workload, balanced mix.
+fn closed(count: usize, users: usize, seed: u64) -> LoadOptions {
+    LoadOptions {
+        trace: TraceConfig {
+            count,
+            mix: WorkloadMix::balanced(),
+            arrival: ArrivalModel::Closed { users, think_time_us: 0 },
+            seed,
+            ..Default::default()
+        },
+        ..Default::default()
+    }
+}
+
+/// Record one phase's metrics and pin the "no sentinel" acceptance:
+/// every reported percentile is clamped to the observed max, never the
+/// open top bucket's `u64::MAX` bound.
+fn record(b: &mut Bench, tag: &str, rep: &LoadReport) {
+    b.metric(&format!("{tag}.goodput_rps"), rep.goodput_rps());
+    b.metric(&format!("{tag}.shed_rate"), rep.shed_rate());
+    b.metric(&format!("{tag}.offered"), rep.offered() as f64);
+    b.metric(&format!("{tag}.shed"), rep.shed() as f64);
+    b.metric(&format!("{tag}.expired"), rep.expired() as f64);
+    for w in &rep.per_workload {
+        let name = w.workload.name();
+        assert!(w.latency.p99_us <= w.latency.max_us.max(1),
+                "{tag}/{name}: p99 {} exceeds observed max {}",
+                w.latency.p99_us, w.latency.max_us);
+        assert!(w.latency.p999_us < u64::MAX / 2,
+                "{tag}/{name}: unclamped sentinel leaked into p999");
+        b.metric(&format!("{tag}.{name}.p50_us"), w.latency.p50_us as f64);
+        b.metric(&format!("{tag}.{name}.p99_us"), w.latency.p99_us as f64);
+        b.metric(&format!("{tag}.{name}.p999_us"),
+                 w.latency.p999_us as f64);
+        b.metric(&format!("{tag}.{name}.depth_max"), w.depth_max as f64);
+        b.metric(&format!("{tag}.{name}.depth_mean"), w.depth_mean);
+    }
+}
+
+fn main() {
+    let sm = smoke();
+    let mut b = Bench::new(0, 1);
+    println!("# serving load harness: closed-loop probe + open-loop \
+              replay{}", if sm { " [smoke]" } else { "" });
+    let coord = boot();
+
+    // warmup: fill session scratch and pool freelists outside the
+    // measured phases
+    let warm = run_load(&coord, &closed(12, 4, 5)).expect("warmup");
+    assert_eq!(warm.offered(), 12);
+
+    // phase 1: closed-loop capacity probe
+    let probe_n = if sm { 36 } else { 240 };
+    println!("\n# phase 1: closed-loop capacity probe ({probe_n} requests)");
+    let probe = run_load(&coord, &closed(probe_n, 8, 6)).expect("probe");
+    probe.print();
+    let cap_rps = probe.goodput_rps().max(1.0);
+    b.metric("probe.capacity_rps", cap_rps);
+    record(&mut b, "probe", &probe);
+
+    // phase 2: steady open loop at half capacity, diurnal + mild bursts
+    let steady_n = if sm { 60 } else { 480 };
+    println!("\n# phase 2: steady open loop at 0.5x capacity \
+              ({steady_n} requests)");
+    let steady = run_load(&coord, &LoadOptions {
+        trace: TraceConfig {
+            rate: cap_rps * 0.5,
+            count: steady_n,
+            burstiness: 0.5,
+            diurnal: 0.3,
+            diurnal_period_s: 2.0,
+            mix: WorkloadMix::balanced(),
+            seed: 7,
+            ..Default::default()
+        },
+        ..Default::default()
+    }).expect("steady");
+    steady.print();
+    record(&mut b, "steady", &steady);
+
+    // deadline for the overload phases: generous against the healthy
+    // p50, so only genuine overload queueing expires requests
+    let p50_max = steady
+        .per_workload
+        .iter()
+        .map(|w| w.latency.p50_us)
+        .max()
+        .unwrap_or(0);
+    let deadline_us = (p50_max * 20).max(5_000);
+    b.metric("overload.deadline_us", deadline_us as f64);
+
+    // phase 3: deliberate 2x overload, heavy bursts, deadlines armed
+    let over_n = if sm { 160 } else { 640 };
+    println!("\n# phase 3: 2x overload, bursty, deadline {deadline_us} us \
+              ({over_n} requests)");
+    let over = run_load(&coord, &LoadOptions {
+        trace: TraceConfig {
+            rate: cap_rps * 2.0,
+            count: over_n,
+            burstiness: 1.0,
+            mix: WorkloadMix::balanced(),
+            deadline_us,
+            seed: 8,
+            ..Default::default()
+        },
+        ..Default::default()
+    }).expect("overload");
+    over.print();
+    record(&mut b, "overload", &over);
+
+    // phase 4: unpaced spike — every request submitted immediately
+    let spike_n = if sm { 64 } else { 192 };
+    println!("\n# phase 4: unpaced spike ({spike_n} requests at once)");
+    let spike = run_load(&coord, &LoadOptions {
+        trace: TraceConfig {
+            count: spike_n,
+            mix: WorkloadMix::balanced(),
+            deadline_us,
+            seed: 9,
+            ..Default::default()
+        },
+        time_scale: 0.0,
+        ..Default::default()
+    }).expect("spike");
+    spike.print();
+    record(&mut b, "spike", &spike);
+
+    // the overload acceptance: deliberate 2x overload + spike must shed
+    // or expire (capacity-8 queues cannot absorb them), while the
+    // percentile assertions in record() pin admitted p99 to bounded,
+    // sentinel-free values
+    let dropped =
+        over.shed() + over.expired() + spike.shed() + spike.expired();
+    assert!(dropped > 0,
+            "2x overload + unpaced spike against capacity-8 queues must \
+             shed or expire requests");
+    b.metric("overload.dropped_total", dropped as f64);
+
+    b.write_json("serving");
+}

@@ -55,7 +55,7 @@ fn pjrt_bench(reg: &Registry, dir: &Path, requests: usize)
             warmup(&coord)?;
             let trace = generate_trace(&TraceConfig {
                 rate, count: requests, seed: 3, ..Default::default()
-            });
+            }).map_err(|e| anyhow::anyhow!("{e}"))?;
             let t0 = Instant::now();
             let mut pending = Vec::new();
             for ev in &trace {
@@ -110,7 +110,7 @@ fn cpu_mixed_bench(requests: usize) -> anyhow::Result<()> {
               (3:1:1 vision:text:joint)");
     let trace = generate_trace(&TraceConfig {
         rate: 600.0, count: requests, seed: 3, ..Default::default()
-    });
+    }).map_err(|e| anyhow::anyhow!("{e}"))?;
     let t0 = Instant::now();
     let mut pending = Vec::new();
     for (i, ev) in trace.iter().enumerate() {

@@ -54,7 +54,8 @@ use crate::util::alloc::allocs_this_thread;
 
 use super::metrics::Metrics;
 use super::pool::{PooledTensor, TensorPool};
-use super::request::{InferOutputs, InferRequest, InferResponse, Payload};
+use super::request::{Admission, InferOutputs, InferRequest, InferResponse,
+                     Payload};
 
 /// Handle to a running variant worker.
 pub struct VariantWorker {
@@ -270,9 +271,37 @@ impl VariantWorker {
         })
     }
 
+    /// Non-blocking admission-controlled submit: enqueue if the bounded
+    /// queue has room, otherwise refuse immediately ([`Admission::Shed`],
+    /// counted in the worker's `shed` metric).  Unlike [`try_submit`],
+    /// a full queue is a normal, non-error outcome here — the load
+    /// harness and `Coordinator::try_submit_pooled` use this as the shed
+    /// path so overload never blocks the submitting thread.
+    ///
+    /// [`try_submit`]: VariantWorker::try_submit
+    pub fn submit_shed(&self, req: InferRequest) -> Result<Admission> {
+        self.depth.fetch_add(1, Ordering::Relaxed);
+        match self.tx.try_send(req) {
+            Ok(()) => Ok(Admission::Admitted),
+            Err(TrySendError::Full(_)) => {
+                self.depth.fetch_sub(1, Ordering::Relaxed);
+                self.metrics.record_shed();
+                Ok(Admission::Shed)
+            }
+            Err(TrySendError::Disconnected(_)) => {
+                self.depth.fetch_sub(1, Ordering::Relaxed);
+                Err(Error::Coordinator("worker queue closed".into()))
+            }
+        }
+    }
+
     /// Queue headroom signal used by the router's load-shedding policy.
+    /// The threshold is a ceiling half: `depth < capacity / 2` was always
+    /// false for `queue_capacity = 1` (threshold 0), so `Qos::Balanced`
+    /// routing permanently shed to the deepest-compression rung on small
+    /// queues even when the preferred worker sat idle.
     pub fn has_capacity(&self) -> bool {
-        self.depth.load(Ordering::Relaxed) < self.capacity / 2
+        self.depth.load(Ordering::Relaxed) < (self.capacity + 1) / 2
     }
 
     /// Current approximate depth.
@@ -324,6 +353,37 @@ where
             }
         }
         depth.fetch_sub(batch.len(), Ordering::Relaxed);
+        // deadline-aware batching: drop requests whose deadline already
+        // passed *before* spending execution on them.  Counted first
+        // (so a client that observes the expiry marker sees the count),
+        // then answered with an explicit expiry marker (batch_size 0)
+        // so slot clients never hang; legacy channel submitters observe
+        // a closed channel as the request drops.
+        let now = Instant::now();
+        let expired = batch
+            .iter()
+            .filter(|r| matches!(r.deadline, Some(d) if d <= now))
+            .count();
+        if expired > 0 {
+            metrics.record_expired(expired as u64);
+            batch.retain(|req| {
+                let dead = matches!(req.deadline, Some(d) if d <= now);
+                if dead && req.respond.is_slot() {
+                    let _ = req.respond.send(InferResponse {
+                        outputs: InferOutputs::Many(Vec::new()),
+                        queue_us: now
+                            .duration_since(req.enqueued_at)
+                            .as_micros() as u64,
+                        exec_us: 0,
+                        batch_size: 0,
+                    });
+                }
+                !dead
+            });
+            if batch.is_empty() {
+                continue;
+            }
+        }
         let exec_start = Instant::now();
         let cycle_before = allocs_this_thread();
         outs.clear();
@@ -678,4 +738,130 @@ fn run_batch(exe: &Executable, params: &[f32], batch: &[InferRequest])
         }
     }
     Ok(per_request)
+}
+
+#[cfg(test)]
+mod tests {
+    use std::sync::mpsc;
+
+    use super::super::request::{Responder, ResponseSlot};
+    use super::*;
+
+    fn one_output(outs: &mut Vec<InferOutputs>) {
+        outs.push(InferOutputs::One(PooledTensor::detached(
+            HostTensor::F32(vec![0.0], vec![1]))));
+    }
+
+    /// Worker whose exec answers every request with a dummy tensor.
+    fn noop_worker(cfg: &ServingConfig) -> VariantWorker {
+        VariantWorker::spawn_worker(
+            "test-noop".to_string(), cfg, cfg.max_batch,
+            |_m: &Arc<Metrics>| {
+                Some(|batch: &[InferRequest],
+                      outs: &mut Vec<InferOutputs>| {
+                    for _ in batch {
+                        one_output(outs);
+                    }
+                    Ok(())
+                })
+            })
+    }
+
+    fn slot_request(slot: &ResponseSlot, deadline: Option<Instant>)
+                    -> InferRequest {
+        InferRequest {
+            payload: Payload::Tensors(Vec::new()),
+            enqueued_at: Instant::now(),
+            deadline,
+            respond: Responder::Slot(slot.sender()),
+        }
+    }
+
+    /// Regression for the `depth < capacity / 2` headroom test: with
+    /// `queue_capacity = 1` the old threshold was 0, so an idle worker
+    /// reported no capacity and Balanced routing permanently shed.
+    #[test]
+    fn capacity_one_queue_reports_headroom_when_idle() {
+        let cfg = ServingConfig {
+            max_batch: 1,
+            batch_timeout_us: 100,
+            queue_capacity: 1,
+            workers: 1,
+        };
+        let w = noop_worker(&cfg);
+        assert!(w.has_capacity(),
+                "idle capacity-1 worker must report headroom");
+    }
+
+    /// A full queue sheds without blocking the submitter, and the shed
+    /// is counted in the worker's metrics.
+    #[test]
+    fn full_queue_sheds_nonblocking_and_counts() {
+        let cfg = ServingConfig {
+            max_batch: 1,
+            batch_timeout_us: 100,
+            queue_capacity: 2,
+            workers: 1,
+        };
+        let (started_tx, started_rx) = mpsc::channel::<()>();
+        let (release_tx, release_rx) = mpsc::channel::<()>();
+        let w = VariantWorker::spawn_worker(
+            "test-gated".to_string(), &cfg, cfg.max_batch,
+            move |_m: &Arc<Metrics>| {
+                Some(move |batch: &[InferRequest],
+                           outs: &mut Vec<InferOutputs>| {
+                    let _ = started_tx.send(());
+                    let _ = release_rx.recv();
+                    for _ in batch {
+                        one_output(outs);
+                    }
+                    Ok(())
+                })
+            });
+        let slot = ResponseSlot::new(8);
+        // first request: picked up by the worker, which then blocks in
+        // exec until released — the queue itself is empty again
+        w.submit(slot_request(&slot, None)).unwrap();
+        started_rx.recv().unwrap();
+        // fill the 2-slot queue behind the blocked worker
+        assert_eq!(w.submit_shed(slot_request(&slot, None)).unwrap(),
+                   Admission::Admitted);
+        assert_eq!(w.submit_shed(slot_request(&slot, None)).unwrap(),
+                   Admission::Admitted);
+        // queue full: shed, without blocking this thread
+        assert_eq!(w.submit_shed(slot_request(&slot, None)).unwrap(),
+                   Admission::Shed);
+        assert_eq!(w.metrics.snapshot().shed, 1);
+        // release the three admitted batches and drain their responses
+        for _ in 0..3 {
+            release_tx.send(()).unwrap();
+        }
+        for _ in 0..3 {
+            slot.recv().expect("admitted request must answer");
+        }
+    }
+
+    /// Deadline-expired requests are dropped before execution, counted,
+    /// and answered with an expiry marker — never a hang, and never a
+    /// silent drop.
+    #[test]
+    fn expired_requests_are_counted_and_answered_with_markers() {
+        let cfg = ServingConfig {
+            max_batch: 4,
+            batch_timeout_us: 100,
+            queue_capacity: 8,
+            workers: 1,
+        };
+        let w = noop_worker(&cfg);
+        let slot = ResponseSlot::new(8);
+        // already-expired deadline: the worker must drop it pre-exec
+        w.submit(slot_request(&slot, Some(Instant::now()))).unwrap();
+        let err = slot.recv().expect_err("expired request must error");
+        assert!(err.to_string().contains("deadline"),
+                "unexpected error: {err}");
+        assert_eq!(w.metrics.snapshot().expired, 1);
+        // the worker keeps serving after dropping an expired batch
+        w.submit(slot_request(&slot, None)).unwrap();
+        slot.recv().expect("live request must answer");
+    }
 }

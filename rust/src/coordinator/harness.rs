@@ -1,0 +1,595 @@
+//! Closed-loop load harness: replay typed arrival traces against a
+//! booted [`Coordinator`] end-to-end (ROADMAP item 4).
+//!
+//! The harness drives the admission-controlled submit path
+//! ([`Coordinator::try_submit_pooled`]) with pooled payloads built from
+//! the synthetic dataset generators, under either arrival model:
+//!
+//! * **Open loop** ([`ArrivalModel::Open`]): events are submitted on
+//!   their trace timestamps (optionally time-scaled, or unpaced for a
+//!   worst-case spike), regardless of completions — overload is real,
+//!   and the coordinator answers it by shedding at admission and
+//!   dropping deadline-expired work before execution.
+//! * **Closed loop** ([`ArrivalModel::Closed`]): a fixed user
+//!   population submits its next request only after the previous one
+//!   completes — the classic saturation probe that measures capacity.
+//!
+//! Every offered request is accounted for exactly once:
+//! `offered = admitted + shed` and
+//! `admitted = completed + failed` (expiry markers land in `failed` on
+//! the client side; the authoritative expiry count comes from the
+//! worker metrics).  The per-workload [`WorkloadReport`] carries its own
+//! latency [`Snapshot`] (p50/p99/p999 clamped to the observed max) plus
+//! queue-depth max/mean sampled over the run.  `serving_bench` and the
+//! `pitome loadtest` subcommand are thin wrappers over [`run_load`].
+
+use std::time::{Duration, Instant};
+
+use crate::config::TextConfig;
+use crate::data::{generate_trace, patchify, sent_item, shape_item,
+                  vqa_item, ArrivalModel, TraceConfig, TraceEvent,
+                  TraceWorkload, TEST_SEED};
+use crate::error::{Error, Result};
+use crate::tensor::Mat;
+
+use super::metrics::{Metrics, Snapshot};
+use super::request::{Admission, InferResponse, Payload, Qos, ResponseSlot,
+                     Workload};
+use super::server::Coordinator;
+
+/// Distinct request templates cycled through per workload (item index
+/// modulo this), enough to exercise the pools without re-generating
+/// dataset items inside the timed loop.
+const N_TEMPLATES: u64 = 8;
+
+fn widx(w: TraceWorkload) -> usize {
+    match w {
+        TraceWorkload::Vision => 0,
+        TraceWorkload::Text => 1,
+        TraceWorkload::Joint => 2,
+    }
+}
+
+fn to_workload(w: TraceWorkload) -> Workload {
+    match w {
+        TraceWorkload::Vision => Workload::Vision,
+        TraceWorkload::Text => Workload::Text,
+        TraceWorkload::Joint => Workload::Joint,
+    }
+}
+
+/// How to drive a trace against the coordinator.
+#[derive(Clone, Debug)]
+pub struct LoadOptions {
+    /// the arrival trace to generate and replay
+    pub trace: TraceConfig,
+    /// QoS class stamped on every request (Balanced exercises the
+    /// ladder-shedding router policy)
+    pub qos: Qos,
+    /// open-loop pacing factor: 1.0 replays trace timestamps in real
+    /// time, 2.0 at half speed, ... ; 0.0 disables pacing entirely
+    /// (submit as fast as possible — a worst-case spike)
+    pub time_scale: f64,
+    /// sample queue depths every N submissions (>= 1)
+    pub sample_every: usize,
+}
+
+impl Default for LoadOptions {
+    fn default() -> Self {
+        LoadOptions {
+            trace: TraceConfig::default(),
+            qos: Qos::Balanced,
+            time_scale: 1.0,
+            sample_every: 1,
+        }
+    }
+}
+
+/// Per-workload accounting for one load run.
+#[derive(Clone, Debug)]
+pub struct WorkloadReport {
+    /// the typed pool this lane drove
+    pub workload: Workload,
+    /// logical model the lane's requests named
+    pub model: String,
+    /// requests the trace offered
+    pub offered: u64,
+    /// requests that passed admission
+    pub admitted: u64,
+    /// requests refused at admission (queue full)
+    pub shed: u64,
+    /// admitted requests the workers dropped as deadline-expired
+    /// (from the worker metrics delta over the run)
+    pub expired: u64,
+    /// admitted requests answered with a failure/expiry marker
+    pub failed: u64,
+    /// admitted requests answered with real outputs
+    pub completed: u64,
+    /// completed requests that finished within the trace deadline
+    /// (equals `completed` when the trace carries no deadline)
+    pub deadline_met: u64,
+    /// end-to-end latency distribution of completed requests
+    pub latency: Snapshot,
+    /// max queue depth sampled across the workload's variant queues
+    pub depth_max: usize,
+    /// mean sampled queue depth
+    pub depth_mean: f64,
+}
+
+/// Whole-run result of [`run_load`].
+#[derive(Clone, Debug)]
+pub struct LoadReport {
+    /// wall-clock duration of the replay, seconds
+    pub wall_s: f64,
+    /// whether the trace stamped per-request deadlines
+    pub had_deadline: bool,
+    /// one report per workload present in the trace
+    pub per_workload: Vec<WorkloadReport>,
+}
+
+impl LoadReport {
+    /// Total requests offered across workloads.
+    pub fn offered(&self) -> u64 {
+        self.per_workload.iter().map(|w| w.offered).sum()
+    }
+
+    /// Total requests admitted.
+    pub fn admitted(&self) -> u64 {
+        self.per_workload.iter().map(|w| w.admitted).sum()
+    }
+
+    /// Total requests shed at admission.
+    pub fn shed(&self) -> u64 {
+        self.per_workload.iter().map(|w| w.shed).sum()
+    }
+
+    /// Total admitted requests dropped as deadline-expired.
+    pub fn expired(&self) -> u64 {
+        self.per_workload.iter().map(|w| w.expired).sum()
+    }
+
+    /// Total requests completed with real outputs.
+    pub fn completed(&self) -> u64 {
+        self.per_workload.iter().map(|w| w.completed).sum()
+    }
+
+    /// Total completions within deadline.
+    pub fn deadline_met(&self) -> u64 {
+        self.per_workload.iter().map(|w| w.deadline_met).sum()
+    }
+
+    /// Useful completions per second: deadline-met completions when the
+    /// trace carried deadlines, all completions otherwise.
+    pub fn goodput_rps(&self) -> f64 {
+        let good =
+            if self.had_deadline { self.deadline_met() } else { self.completed() };
+        good as f64 / self.wall_s.max(1e-9)
+    }
+
+    /// Fraction of offered load refused or expired instead of served.
+    pub fn shed_rate(&self) -> f64 {
+        (self.shed() + self.expired()) as f64 / self.offered().max(1) as f64
+    }
+
+    /// Human-readable per-workload summary.
+    pub fn print(&self) {
+        println!("  load report: {:.3}s wall, goodput {:.1} req/s, \
+                  shed rate {:.3}",
+                 self.wall_s, self.goodput_rps(), self.shed_rate());
+        for w in &self.per_workload {
+            println!("    {:<7} {:<6} offered {:>6} admitted {:>6} \
+                      shed {:>5} expired {:>5} failed {:>5}",
+                     w.workload.name(), w.model, w.offered, w.admitted,
+                     w.shed, w.expired, w.failed);
+            println!("            p50 {} us  p99 {} us  p999 {} us  \
+                      max {} us  depth max {} mean {:.2}",
+                     w.latency.p50_us, w.latency.p99_us, w.latency.p999_us,
+                     w.latency.max_us, w.depth_max, w.depth_mean);
+        }
+    }
+}
+
+/// Pre-built request payloads, one set per workload, generated outside
+/// the timed loop from the shared synthetic datasets.
+struct Templates {
+    patches: Vec<Mat>,
+    tokens: Vec<Vec<i32>>,
+    questions: Vec<Vec<i32>>,
+}
+
+impl Templates {
+    fn build() -> Templates {
+        let tcfg = TextConfig::default();
+        let mut patches = Vec::new();
+        let mut tokens = Vec::new();
+        let mut questions = Vec::new();
+        for i in 0..N_TEMPLATES {
+            let item = shape_item(TEST_SEED, i);
+            patches.push(patchify(&item.image, 4));
+            tokens.push(sent_item(TEST_SEED, i, tcfg.seq_len, 16).0);
+            questions.push(vqa_item(TEST_SEED, i).0);
+        }
+        Templates { patches, tokens, questions }
+    }
+}
+
+/// Per-workload driver state: its own [`ResponseSlot`] (responses carry
+/// no request id, so each workload drains its own slot), client-side
+/// latency metrics, and the accounting counters.  The slot is sized to
+/// the lane's total event count so no response can ever overflow it —
+/// the final blocking drain relies on every admitted request delivering
+/// exactly one response or marker.
+struct Lane {
+    workload: TraceWorkload,
+    model: String,
+    slot: ResponseSlot,
+    metrics: Metrics,
+    offered: u64,
+    admitted: u64,
+    shed: u64,
+    failed: u64,
+    completed: u64,
+    deadline_met: u64,
+    drained: u64,
+    depth_max: usize,
+    depth_sum: u64,
+    depth_n: u64,
+}
+
+fn lane_index(lanes: &[Lane], w: TraceWorkload) -> usize {
+    lanes
+        .iter()
+        .position(|l| l.workload == w)
+        .expect("a lane exists for every workload present in the trace")
+}
+
+/// Build the event's pooled payload and submit it through the shed path.
+/// Returns whether the request was admitted.
+fn submit_event(coord: &Coordinator, tpl: &Templates, lane: &mut Lane,
+                ev: &TraceEvent, qos: Qos) -> Result<bool> {
+    let pool = coord.pool();
+    let ti = (ev.item % N_TEMPLATES) as usize;
+    let payload = match ev.workload {
+        TraceWorkload::Vision => {
+            let m = &tpl.patches[ti];
+            let mut t = pool.take_f32(m.data.len());
+            t.fill_f32(&m.data, &[m.rows, m.cols]);
+            Payload::Vision(t)
+        }
+        TraceWorkload::Text => {
+            let toks = &tpl.tokens[ti];
+            let mut t = pool.take_i32(toks.len());
+            t.fill_i32(toks, &[toks.len()]);
+            Payload::Text(t)
+        }
+        TraceWorkload::Joint => {
+            let m = &tpl.patches[ti];
+            let mut vt = pool.take_f32(m.data.len());
+            vt.fill_f32(&m.data, &[m.rows, m.cols]);
+            let q = &tpl.questions[ti];
+            let mut qt = pool.take_i32(q.len());
+            qt.fill_i32(q, &[q.len()]);
+            Payload::Joint { vision: vt, text: qt }
+        }
+    };
+    let deadline = if ev.deadline_us > 0 {
+        Some(Duration::from_micros(ev.deadline_us))
+    } else {
+        None
+    };
+    lane.offered += 1;
+    match coord.try_submit_pooled(to_workload(ev.workload), &lane.model, qos,
+                                  payload, deadline, &lane.slot)? {
+        Admission::Admitted => {
+            lane.admitted += 1;
+            Ok(true)
+        }
+        Admission::Shed => {
+            lane.shed += 1;
+            Ok(false)
+        }
+    }
+}
+
+/// Account one delivered response (or failure/expiry marker).
+fn absorb(lane: &mut Lane, r: Result<InferResponse>, deadline_us: u64) {
+    lane.drained += 1;
+    match r {
+        Ok(resp) => {
+            let lat = resp.queue_us + resp.exec_us;
+            lane.metrics.record(lat);
+            lane.completed += 1;
+            if deadline_us == 0 || lat <= deadline_us {
+                lane.deadline_met += 1;
+            }
+        }
+        Err(_) => lane.failed += 1,
+    }
+}
+
+/// Sample the lane's workload queue depth (summed over its variants).
+fn sample_depth(coord: &Coordinator, lane: &mut Lane) {
+    let target = to_workload(lane.workload);
+    let depth: usize = coord
+        .router()
+        .queue_depths()
+        .iter()
+        .filter(|(w, _, _, _)| *w == target)
+        .map(|(_, _, _, d)| *d)
+        .sum();
+    lane.depth_max = lane.depth_max.max(depth);
+    lane.depth_sum += depth as u64;
+    lane.depth_n += 1;
+}
+
+/// Sum of worker-side `expired` counters per workload — the
+/// authoritative deadline-drop count (client-side markers land in
+/// `failed` without distinguishing expiry from batch failure).
+fn expired_by_workload(coord: &Coordinator) -> [u64; 3] {
+    let mut out = [0u64; 3];
+    for (w, _, _, s) in coord.metrics_typed() {
+        let i = match w {
+            Workload::Vision => 0,
+            Workload::Text => 1,
+            Workload::Joint => 2,
+        };
+        out[i] += s.expired;
+    }
+    out
+}
+
+/// Open-loop replay: submit on (scaled) trace timestamps, draining
+/// responses non-blockingly between submissions, then drain every
+/// outstanding admitted request.
+fn run_open(coord: &Coordinator, tpl: &Templates, lanes: &mut [Lane],
+            trace: &[TraceEvent], opts: &LoadOptions, t0: Instant)
+            -> Result<()> {
+    let every = opts.sample_every.max(1);
+    for (i, ev) in trace.iter().enumerate() {
+        if opts.time_scale > 0.0 {
+            let target = Duration::from_micros(
+                (ev.at_us as f64 * opts.time_scale) as u64);
+            if let Some(wait) = target.checked_sub(t0.elapsed()) {
+                if !wait.is_zero() {
+                    std::thread::sleep(wait);
+                }
+            }
+        }
+        for lane in lanes.iter_mut() {
+            loop {
+                match lane.slot.try_recv() {
+                    Ok(Some(resp)) => {
+                        absorb(lane, Ok(resp), opts.trace.deadline_us);
+                    }
+                    Ok(None) => break,
+                    // a failure/expiry marker: one delivery, consumed
+                    Err(e) => absorb(lane, Err(e), opts.trace.deadline_us),
+                }
+            }
+        }
+        let li = lane_index(lanes, ev.workload);
+        submit_event(coord, tpl, &mut lanes[li], ev, opts.qos)?;
+        if i % every == 0 {
+            sample_depth(coord, &mut lanes[li]);
+        }
+    }
+    for lane in lanes.iter_mut() {
+        while lane.drained < lane.admitted {
+            let r = lane.slot.recv();
+            absorb(lane, r, opts.trace.deadline_us);
+        }
+    }
+    Ok(())
+}
+
+/// Closed-loop replay: per workload, keep `users` requests in flight,
+/// submitting the next only after a completion (plus think time).
+fn run_closed(coord: &Coordinator, tpl: &Templates, lanes: &mut [Lane],
+              trace: &[TraceEvent], opts: &LoadOptions, users: usize,
+              think_time_us: u64) -> Result<()> {
+    let users = users.max(1);
+    for lane in lanes.iter_mut() {
+        let mut events =
+            trace.iter().filter(|e| e.workload == lane.workload);
+        let mut inflight = 0usize;
+        loop {
+            while inflight < users {
+                match events.next() {
+                    Some(ev) => {
+                        if submit_event(coord, tpl, lane, ev, opts.qos)? {
+                            inflight += 1;
+                        }
+                    }
+                    None => break,
+                }
+            }
+            if inflight == 0 {
+                break;
+            }
+            let r = lane.slot.recv();
+            absorb(lane, r, opts.trace.deadline_us);
+            inflight -= 1;
+            sample_depth(coord, lane);
+            if think_time_us > 0 {
+                std::thread::sleep(Duration::from_micros(think_time_us));
+            }
+        }
+    }
+    Ok(())
+}
+
+/// Generate `opts.trace` and replay it against `coord`, returning the
+/// full accounting.  The coordinator must have a pool for every
+/// workload the trace's mix produces (the lane targets the first model
+/// registered under that workload).
+pub fn run_load(coord: &Coordinator, opts: &LoadOptions)
+                -> Result<LoadReport> {
+    let trace = generate_trace(&opts.trace)?;
+    let tpl = Templates::build();
+    let mut counts = [0usize; 3];
+    for ev in &trace {
+        counts[widx(ev.workload)] += 1;
+    }
+    let tws =
+        [TraceWorkload::Vision, TraceWorkload::Text, TraceWorkload::Joint];
+    let mut lanes: Vec<Lane> = Vec::new();
+    for (i, tw) in tws.iter().enumerate() {
+        if counts[i] == 0 {
+            continue;
+        }
+        let w = to_workload(*tw);
+        let model = coord
+            .router()
+            .models_for(w)
+            .first()
+            .map(|s| s.to_string())
+            .ok_or_else(|| {
+                Error::Config(format!(
+                    "load trace targets the {} pool but the coordinator \
+                     has no {} models",
+                    w.name(),
+                    w.name()
+                ))
+            })?;
+        lanes.push(Lane {
+            workload: *tw,
+            model,
+            slot: ResponseSlot::new(counts[i]),
+            metrics: Metrics::default(),
+            offered: 0,
+            admitted: 0,
+            shed: 0,
+            failed: 0,
+            completed: 0,
+            deadline_met: 0,
+            drained: 0,
+            depth_max: 0,
+            depth_sum: 0,
+            depth_n: 0,
+        });
+    }
+    let expired_before = expired_by_workload(coord);
+    let t0 = Instant::now();
+    match opts.trace.arrival {
+        ArrivalModel::Open => {
+            run_open(coord, &tpl, &mut lanes, &trace, opts, t0)?;
+        }
+        ArrivalModel::Closed { users, think_time_us } => {
+            run_closed(coord, &tpl, &mut lanes, &trace, opts, users,
+                       think_time_us)?;
+        }
+    }
+    let wall_s = t0.elapsed().as_secs_f64();
+    let expired_after = expired_by_workload(coord);
+    let had_deadline = opts.trace.deadline_us > 0;
+    let per_workload = lanes
+        .into_iter()
+        .map(|lane| {
+            let i = widx(lane.workload);
+            WorkloadReport {
+                workload: to_workload(lane.workload),
+                model: lane.model,
+                offered: lane.offered,
+                admitted: lane.admitted,
+                shed: lane.shed,
+                expired: expired_after[i]
+                    .saturating_sub(expired_before[i]),
+                failed: lane.failed,
+                completed: lane.completed,
+                deadline_met: lane.deadline_met,
+                latency: lane.metrics.snapshot(),
+                depth_max: lane.depth_max,
+                depth_mean: lane.depth_sum as f64
+                    / lane.depth_n.max(1) as f64,
+            }
+        })
+        .collect();
+    Ok(LoadReport { wall_s, had_deadline, per_workload })
+}
+
+#[cfg(test)]
+mod tests {
+    use std::sync::Arc;
+
+    use crate::config::{ServingConfig, ViTConfig};
+    use crate::data::WorkloadMix;
+    use crate::engine::JointKind;
+    use crate::model::synthetic_mm_store;
+
+    use super::super::server::CpuWorkloads;
+    use super::*;
+
+    fn boot(queue_capacity: usize) -> Coordinator {
+        let ps = Arc::new(synthetic_mm_store(&ViTConfig::default(), 7));
+        let workloads = CpuWorkloads {
+            vision: vec![("vit".to_string(),
+                          vec![("pitome".to_string(), 0.9)])],
+            text: vec![("bert".to_string(),
+                        vec![("none".to_string(), 1.0)])],
+            joint: vec![("vqa".to_string(), JointKind::Vqa,
+                         vec![("pitome".to_string(), 0.9)])],
+        };
+        let cfg = ServingConfig {
+            max_batch: 4,
+            batch_timeout_us: 500,
+            queue_capacity,
+            workers: 1,
+        };
+        Coordinator::boot_cpu_workloads(&ps, &workloads, cfg).expect("boot")
+    }
+
+    /// Closed loop with ample queue room: every offered request is
+    /// admitted and completed, and the per-lane accounting balances.
+    #[test]
+    fn closed_loop_accounts_for_every_request() {
+        let coord = boot(64);
+        let opts = LoadOptions {
+            trace: TraceConfig {
+                count: 12,
+                mix: WorkloadMix::balanced(),
+                arrival: ArrivalModel::Closed { users: 3, think_time_us: 0 },
+                seed: 3,
+                ..Default::default()
+            },
+            ..Default::default()
+        };
+        let rep = run_load(&coord, &opts).unwrap();
+        assert_eq!(rep.offered(), 12);
+        assert_eq!(rep.shed(), 0, "closed loop under capacity must not shed");
+        assert_eq!(rep.completed(), 12);
+        for w in &rep.per_workload {
+            assert_eq!(w.admitted, w.completed + w.failed,
+                       "{} lane lost a request", w.workload.name());
+            assert_eq!(w.latency.count, w.completed);
+        }
+        assert!(rep.goodput_rps() > 0.0);
+    }
+
+    /// Unpaced open-loop burst against a capacity-1 queue: submission is
+    /// microseconds, service is milliseconds, so admission control must
+    /// shed — and every admitted request still gets answered.
+    #[test]
+    fn unpaced_open_overload_sheds_instead_of_blocking() {
+        let coord = boot(1);
+        let opts = LoadOptions {
+            trace: TraceConfig {
+                count: 40,
+                rate: 10_000.0,
+                deadline_us: 50_000,
+                seed: 4,
+                ..Default::default()
+            },
+            time_scale: 0.0,
+            ..Default::default()
+        };
+        let rep = run_load(&coord, &opts).unwrap();
+        assert_eq!(rep.offered(), 40);
+        assert_eq!(rep.admitted() + rep.shed(), 40);
+        assert!(rep.shed() > 0,
+                "capacity-1 queue under an unpaced burst must shed");
+        let answered: u64 =
+            rep.per_workload.iter().map(|w| w.completed + w.failed).sum();
+        assert_eq!(answered, rep.admitted(),
+                   "every admitted request must be answered");
+    }
+}

@@ -20,6 +20,8 @@ struct Inner {
     cycle_allocs: u64,
     resp_recycled: u64,
     resp_fresh: u64,
+    shed: u64,
+    expired: u64,
 }
 
 /// Thread-safe metrics sink.
@@ -35,10 +37,13 @@ pub struct Snapshot {
     pub count: u64,
     /// mean end-to-end latency, microseconds
     pub mean_us: f64,
-    /// p50 latency (bucket upper bound)
+    /// p50 latency (bucket upper bound, clamped to `max_us`)
     pub p50_us: u64,
-    /// p99 latency (bucket upper bound)
+    /// p99 latency (bucket upper bound, clamped to `max_us` so a sample
+    /// in the open-ended top bucket never reports `u64::MAX`)
     pub p99_us: u64,
+    /// p999 latency (bucket upper bound, clamped to `max_us`)
+    pub p999_us: u64,
     /// max observed latency
     pub max_us: u64,
     /// mean requests per executed batch
@@ -60,6 +65,11 @@ pub struct Snapshot {
     pub resp_recycled: u64,
     /// responses that had to allocate a fresh buffer (cumulative)
     pub resp_fresh: u64,
+    /// requests refused at admission because the queue was full
+    pub shed: u64,
+    /// admitted requests dropped by the worker because their deadline
+    /// had already passed when their batch was picked up
+    pub expired: u64,
 }
 
 impl Metrics {
@@ -103,6 +113,19 @@ impl Metrics {
         g.resp_fresh += fresh;
     }
 
+    /// Record one request shed at admission (queue full).
+    pub fn record_shed(&self) {
+        let mut g = self.inner.lock().unwrap();
+        g.shed += 1;
+    }
+
+    /// Record `n` admitted requests dropped because their deadline
+    /// expired before execution.
+    pub fn record_expired(&self, n: u64) {
+        let mut g = self.inner.lock().unwrap();
+        g.expired += n;
+    }
+
     fn percentile(hist: &[u64; 16], count: u64, q: f64) -> u64 {
         if count == 0 {
             return 0;
@@ -124,8 +147,10 @@ impl Metrics {
         Snapshot {
             count: g.count,
             mean_us: if g.count > 0 { g.total_us as f64 / g.count as f64 } else { 0.0 },
-            p50_us: Self::percentile(&g.hist, g.count, 0.5),
-            p99_us: Self::percentile(&g.hist, g.count, 0.99),
+            p50_us: Self::percentile(&g.hist, g.count, 0.5).min(g.max_us),
+            p99_us: Self::percentile(&g.hist, g.count, 0.99).min(g.max_us),
+            p999_us: Self::percentile(&g.hist, g.count, 0.999)
+                .min(g.max_us),
             max_us: g.max_us,
             mean_batch: if g.batches > 0 {
                 g.batched_requests as f64 / g.batches as f64
@@ -136,6 +161,8 @@ impl Metrics {
             last_cycle_allocs: g.cycle_allocs,
             resp_recycled: g.resp_recycled,
             resp_fresh: g.resp_fresh,
+            shed: g.shed,
+            expired: g.expired,
         }
     }
 }
@@ -155,6 +182,35 @@ mod tests {
         assert!(s.p50_us <= s.p99_us);
         assert!(s.p99_us <= s.max_us.max(BUCKETS_US[14]));
         assert!(s.mean_us > 0.0);
+    }
+
+    /// Samples in the open-ended top bucket (> 819.2 ms) used to make
+    /// every high percentile report `BUCKETS_US[15] = u64::MAX`; the
+    /// snapshot now clamps bucket bounds to the observed max.
+    #[test]
+    fn top_bucket_percentiles_clamp_to_observed_max() {
+        let m = Metrics::default();
+        m.record(100);
+        for _ in 0..10 {
+            m.record(2_000_000); // top bucket: beyond 819_200 us
+        }
+        let s = m.snapshot();
+        assert_eq!(s.max_us, 2_000_000);
+        assert!(s.p99_us <= s.max_us, "p99 {} > max {}", s.p99_us, s.max_us);
+        assert!(s.p999_us <= s.max_us);
+        assert_ne!(s.p99_us, u64::MAX);
+        assert!(s.p50_us <= s.p99_us && s.p99_us <= s.p999_us);
+    }
+
+    #[test]
+    fn shed_and_expired_counters_accumulate() {
+        let m = Metrics::default();
+        m.record_shed();
+        m.record_shed();
+        m.record_expired(3);
+        let s = m.snapshot();
+        assert_eq!(s.shed, 2);
+        assert_eq!(s.expired, 3);
     }
 
     #[test]

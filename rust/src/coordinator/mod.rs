@@ -12,8 +12,15 @@
 //! tensors are checked out of a shared [`TensorPool`] and return to it
 //! when the caller drops the [`InferResponse`] — the full
 //! request→response→release cycle is allocation-free once warm.
+//!
+//! The [`harness`] module closes the loop: it replays typed arrival
+//! traces ([`crate::data::generate_trace`]) against a booted coordinator
+//! through the admission-controlled submit path
+//! ([`Coordinator::try_submit_pooled`]), measuring goodput, shed rate,
+//! and latency percentiles under open- and closed-loop load.
 
 pub mod batcher;
+pub mod harness;
 pub mod metrics;
 pub mod pool;
 pub mod request;
@@ -21,9 +28,10 @@ pub mod router;
 pub mod server;
 
 pub use batcher::VariantWorker;
+pub use harness::{run_load, LoadOptions, LoadReport, WorkloadReport};
 pub use metrics::{Metrics, Snapshot};
 pub use pool::{PooledTensor, TensorPool};
-pub use request::{InferOutputs, InferRequest, InferResponse, Payload, Qos,
-                  Responder, ResponseSlot, Workload};
+pub use request::{Admission, InferOutputs, InferRequest, InferResponse,
+                  Payload, Qos, Responder, ResponseSlot, Workload};
 pub use router::{Router, Variant};
 pub use server::{Coordinator, CpuWorkloads};

@@ -128,6 +128,19 @@ impl Responder {
     }
 }
 
+/// Outcome of a non-blocking admission attempt
+/// (`Coordinator::try_submit_pooled` / `VariantWorker::submit_shed`).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Admission {
+    /// the request was enqueued and will receive exactly one response
+    /// (or failure/expiry marker) on its responder
+    Admitted,
+    /// the queue was full; the request was refused without blocking and
+    /// counted in the worker's `shed` metric — nothing will arrive on
+    /// the responder
+    Shed,
+}
+
 /// A single-sample inference request (no batch dimension; the batcher
 /// adds it).
 pub struct InferRequest {
@@ -135,6 +148,10 @@ pub struct InferRequest {
     pub payload: Payload,
     /// enqueue timestamp (set by the coordinator)
     pub enqueued_at: Instant,
+    /// absolute deadline; the worker drops the request (counted, with an
+    /// expiry marker to slot responders) if this has passed when its
+    /// batch is picked up
+    pub deadline: Option<Instant>,
     /// response destination
     pub respond: Responder,
 }
@@ -235,9 +252,15 @@ impl ResponseSlot {
         self.tx.clone()
     }
 
-    /// Reject the worker's failure marker as an error.
+    /// Reject the worker's failure/expiry markers as errors.  Expiry
+    /// markers (deadline passed before execution) carry `batch_size: 0`;
+    /// batch-failure markers report the failed batch's size.
     fn check(r: InferResponse) -> Result<InferResponse> {
         if r.outputs.is_empty() {
+            if r.batch_size == 0 {
+                return Err(Error::Coordinator(
+                    "request deadline expired before execution".into()));
+            }
             return Err(Error::Coordinator(
                 "worker failed the batch and dropped the request".into()));
         }

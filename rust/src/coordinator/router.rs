@@ -77,6 +77,7 @@ impl Router {
     }
 
     /// Known logical models under a workload, sorted by name.
+    // lint: allow(alloc) reason=introspection helper for boot/tests, not a routing path
     pub fn models_for(&self, workload: Workload) -> Vec<&str> {
         let mut out: Vec<&str> = self
             .pools
@@ -89,6 +90,7 @@ impl Router {
 
     /// Every registered (workload, model, ladder), ordered by workload
     /// then model name (deterministic for metrics/reporting).
+    // lint: allow(alloc) reason=observability enumeration, not a routing path
     pub fn iter(&self) -> Vec<(Workload, &str, &[Variant])> {
         let mut out: Vec<(Workload, &str, &[Variant])> = self
             .pools
@@ -103,6 +105,7 @@ impl Router {
 
     /// Queue depth of every variant: (workload, model, artifact, depth) —
     /// the per-workload admission signal `coordinator_bench` reports.
+    // lint: allow(alloc) reason=observability snapshot clones names, not a routing path
     pub fn queue_depths(&self) -> Vec<(Workload, String, String, usize)> {
         self.iter()
             .into_iter()
@@ -121,6 +124,7 @@ impl Router {
 
     /// The ladder of a model under a workload (borrowed lookup — no
     /// allocation on the routing hot path).
+    // lint: allow(alloc) reason=error-path format! only, never taken on the steady-state path
     pub fn ladder_for(&self, workload: Workload, model: &str)
                       -> Result<&[Variant]> {
         self.pools
@@ -137,6 +141,7 @@ impl Router {
     }
 
     /// Pick a variant for a typed request.
+    // lint: allow(alloc) reason=error-path format! only, never taken on the steady-state path
     pub fn route_for(&self, workload: Workload, model: &str, qos: Qos)
                      -> Result<&Variant> {
         let ladder = self.ladder_for(workload, model)?;

@@ -14,7 +14,7 @@
 use std::path::Path;
 use std::sync::mpsc;
 use std::sync::Arc;
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
 use crate::config::{ServingConfig, TextConfig, ViTConfig};
 use crate::engine::{Engine, JointConfig, JointKind};
@@ -25,8 +25,8 @@ use crate::runtime::{load_flat_params, HostTensor, Registry};
 use super::batcher::VariantWorker;
 use super::metrics::Snapshot;
 use super::pool::TensorPool;
-use super::request::{InferRequest, InferResponse, Payload, Qos, Responder,
-                     ResponseSlot, Workload};
+use super::request::{Admission, InferRequest, InferResponse, Payload, Qos,
+                     Responder, ResponseSlot, Workload};
 use super::router::{Router, Variant};
 
 /// CPU worker-pool selection for [`Coordinator::boot_cpu_workloads`]:
@@ -57,6 +57,7 @@ impl Coordinator {
     /// artifact on its own PJRT client thread.
     ///
     /// `selection`: (logical model, artifact names most-accurate-first).
+    // lint: allow(alloc) reason=cold boot path: per-variant params/entry clones happen once
     pub fn boot(registry: &Registry, artifacts_dir: &Path,
                 selection: &[(&str, Vec<String>)], cfg: ServingConfig)
                 -> Result<Coordinator> {
@@ -87,6 +88,7 @@ impl Coordinator {
     /// [`Coordinator::boot_cpu_workloads`]).  `selection` maps each
     /// logical model to its compression ladder of `(merge mode, keep
     /// ratio)` rungs, most-accurate-first.
+    // lint: allow(alloc) reason=cold boot path: selection clones into the workload table once
     pub fn boot_cpu(ps: &Arc<ParamStore>,
                     selection: &[(&str, Vec<(String, f64)>)],
                     cfg: ServingConfig) -> Result<Coordinator> {
@@ -106,6 +108,7 @@ impl Coordinator {
     /// [`TensorPool`]; each holds its session for its whole lifetime, so
     /// steady-state serving re-resolves nothing and allocates nothing in
     /// a whole batch cycle.
+    // lint: allow(alloc) reason=cold boot path: per-worker config clones and artifact-name format! happen once
     pub fn boot_cpu_workloads(ps: &Arc<ParamStore>, workloads: &CpuWorkloads,
                               cfg: ServingConfig) -> Result<Coordinator> {
         let engine = Arc::new(Engine::new(ps.clone()));
@@ -215,6 +218,7 @@ impl Coordinator {
         let req = InferRequest {
             payload: Payload::Tensors(inputs),
             enqueued_at: Instant::now(),
+            deadline: None,
             respond: Responder::Channel(tx),
         };
         variant.worker.try_submit(req)?;
@@ -232,6 +236,7 @@ impl Coordinator {
         let req = InferRequest {
             payload,
             enqueued_at: Instant::now(),
+            deadline: None,
             respond: Responder::Channel(tx),
         };
         variant.worker.submit(req)?;
@@ -249,13 +254,37 @@ impl Coordinator {
         let req = InferRequest {
             payload,
             enqueued_at: Instant::now(),
+            deadline: None,
             respond: Responder::Slot(slot.sender()),
         };
         variant.worker.submit(req)
     }
 
+    /// Admission-controlled hot-path submit: like
+    /// [`Coordinator::submit_pooled`], but never blocks — a full queue
+    /// refuses the request ([`Admission::Shed`], counted in the chosen
+    /// worker's `shed` metric) instead of applying backpressure, and an
+    /// optional relative `deadline` arms the worker's pre-execution
+    /// expiry drop (counted in `expired`, answered with an error through
+    /// the slot).  The load harness drives overload through this path.
+    pub fn try_submit_pooled(&self, workload: Workload, model: &str,
+                             qos: Qos, payload: Payload,
+                             deadline: Option<Duration>,
+                             slot: &ResponseSlot) -> Result<Admission> {
+        let variant = self.router.route_for(workload, model, qos)?;
+        let now = Instant::now();
+        let req = InferRequest {
+            payload,
+            enqueued_at: now,
+            deadline: deadline.map(|d| now + d),
+            respond: Responder::Slot(slot.sender()),
+        };
+        variant.worker.submit_shed(req)
+    }
+
     /// Metrics snapshot of every variant across every workload:
     /// (model, artifact, snapshot), ordered by workload then model.
+    // lint: allow(alloc) reason=observability snapshot, not a serving path
     pub fn metrics(&self) -> Vec<(String, String, Snapshot)> {
         self.metrics_typed()
             .into_iter()
@@ -265,6 +294,7 @@ impl Coordinator {
 
     /// Typed metrics snapshot: (workload, model, artifact, snapshot),
     /// ordered by workload then model.
+    // lint: allow(alloc) reason=observability snapshot, not a serving path
     pub fn metrics_typed(&self)
                          -> Vec<(Workload, String, String, Snapshot)> {
         let mut out = Vec::new();

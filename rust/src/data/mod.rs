@@ -12,7 +12,8 @@ pub mod traces;
 pub use rng::{item_seed, splitmix64, Rng};
 pub use shapes::{patchify, shape_batch, shape_item, ShapeItem, IMG, N_SHAPE_CLASSES};
 pub use text::{caption_for, sent_batch, sent_item, vqa_item, CAP_LEN, N_ANSWERS, VOCAB};
-pub use traces::{generate_trace, TraceConfig, TraceEvent};
+pub use traces::{generate_trace, ArrivalModel, TraceConfig, TraceEvent,
+                 TraceWorkload, WorkloadMix};
 
 /// Dataset seeds shared with `python/compile/train.py`.
 pub const TRAIN_SEED: u64 = 1000;

@@ -1,20 +1,114 @@
-//! Serving request traces: Poisson and bursty arrival processes.
+//! Serving request traces: Poisson and bursty arrival processes over
+//! typed workloads, with open- and closed-loop arrival models.
 //!
-//! Used by the coordinator benches (Table 5-style wall-time runs) and the
-//! serving example.  Inter-arrival sampling uses inverse-CDF on the shared
-//! SplitMix64 stream — deterministic across runs.
+//! Used by the coordinator benches (Table 5-style wall-time runs), the
+//! serving example, and the closed-loop load harness
+//! (`coordinator::harness`).  Inter-arrival sampling uses inverse-CDF on
+//! the shared SplitMix64 stream — deterministic across runs.
 
 use super::rng::Rng;
+use crate::error::{Error, Result};
+
+/// Fraction of the nominal rate used as a hard positive floor for the
+/// effective arrival rate after burst/diurnal modulation.  Without it,
+/// `burstiness >= 1.25` drives the gap-phase rate to zero or below, the
+/// exponential inter-arrival sample goes negative, `t` runs backwards,
+/// and the `(t * 1e6) as u64` cast silently saturates — breaking the
+/// trace's own sorted invariant.
+const RATE_FLOOR_FRAC: f64 = 0.01;
+
+/// Which typed coordinator pool a trace event targets.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum TraceWorkload {
+    /// patches → class logits (ViT tower)
+    Vision,
+    /// tokens → sentiment logits (BERT tower)
+    Text,
+    /// paired vision+text request (VQA / retrieval)
+    Joint,
+}
+
+/// Relative traffic weights across the three typed workloads.  Weights
+/// are normalized at sampling time; they need not sum to 1.
+#[derive(Clone, Copy, Debug)]
+pub struct WorkloadMix {
+    /// relative weight of `TraceWorkload::Vision`
+    pub vision: f64,
+    /// relative weight of `TraceWorkload::Text`
+    pub text: f64,
+    /// relative weight of `TraceWorkload::Joint`
+    pub joint: f64,
+}
+
+impl WorkloadMix {
+    /// All traffic on the vision pool (the pre-multimodal default).
+    pub fn vision_only() -> Self {
+        WorkloadMix { vision: 1.0, text: 0.0, joint: 0.0 }
+    }
+
+    /// Equal weight across vision, text, and joint.
+    pub fn balanced() -> Self {
+        WorkloadMix { vision: 1.0, text: 1.0, joint: 1.0 }
+    }
+
+    /// Validate the mix and return the total weight.  Weights must be
+    /// finite and non-negative, and at least one must be positive.
+    pub fn validate(&self) -> Result<f64> {
+        for (name, w) in
+            [("vision", self.vision), ("text", self.text), ("joint", self.joint)]
+        {
+            if !w.is_finite() || w < 0.0 {
+                return Err(Error::Config(format!(
+                    "workload mix weight `{name}` must be finite and >= 0, got {w}"
+                )));
+            }
+        }
+        let sum = self.vision + self.text + self.joint;
+        if sum <= 0.0 {
+            return Err(Error::Config(
+                "workload mix has zero total weight".into(),
+            ));
+        }
+        Ok(sum)
+    }
+}
+
+impl Default for WorkloadMix {
+    fn default() -> Self {
+        WorkloadMix::vision_only()
+    }
+}
+
+/// How arrivals are driven against the serving stack.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum ArrivalModel {
+    /// Open loop: events carry absolute arrival timestamps; the driver
+    /// submits on schedule regardless of completions (overload possible).
+    Open,
+    /// Closed loop: a fixed population of users, each submitting its next
+    /// request only after the previous one completes (plus think time).
+    /// Events carry `at_us = 0`; ordering is the submission order.
+    Closed {
+        /// concurrent user count (in-flight ceiling)
+        users: usize,
+        /// per-user pause between completion and next submission, µs
+        think_time_us: u64,
+    },
+}
 
 /// One synthetic request arrival.
 #[derive(Clone, Debug)]
 pub struct TraceEvent {
-    /// arrival time in microseconds from trace start
+    /// arrival time in microseconds from trace start (0 for closed loops)
     pub at_us: u64,
     /// dataset item index to run
     pub item: u64,
     /// requested model key (index into the router's variant table)
     pub variant: usize,
+    /// which typed pool this request targets
+    pub workload: TraceWorkload,
+    /// end-to-end deadline in microseconds (0 = no deadline)
+    pub deadline_us: u64,
 }
 
 /// Trace generator configuration.
@@ -28,18 +122,73 @@ pub struct TraceConfig {
     pub n_variants: usize,
     /// burstiness: 0 = pure Poisson; >0 mixes in on/off bursts
     pub burstiness: f64,
+    /// diurnal modulation depth in [0, 1]: 0 = flat, 1 = full-depth
+    /// sinusoid (rate swings between the floor and 2x nominal)
+    pub diurnal: f64,
+    /// diurnal period in seconds (trace time, not wall time)
+    pub diurnal_period_s: f64,
+    /// traffic split across typed workloads
+    pub mix: WorkloadMix,
+    /// per-request deadline stamped on every event, µs (0 = none)
+    pub deadline_us: u64,
+    /// open- vs closed-loop arrival semantics
+    pub arrival: ArrivalModel,
     /// RNG seed
     pub seed: u64,
 }
 
 impl Default for TraceConfig {
     fn default() -> Self {
-        TraceConfig { rate: 200.0, count: 1000, n_variants: 1, burstiness: 0.0, seed: 1 }
+        TraceConfig {
+            rate: 200.0,
+            count: 1000,
+            n_variants: 1,
+            burstiness: 0.0,
+            diurnal: 0.0,
+            diurnal_period_s: 60.0,
+            mix: WorkloadMix::default(),
+            deadline_us: 0,
+            arrival: ArrivalModel::Open,
+            seed: 1,
+        }
     }
 }
 
 /// Generate a deterministic arrival trace.
-pub fn generate_trace(cfg: &TraceConfig) -> Vec<TraceEvent> {
+///
+/// Validates the configuration up front: `rate` must be finite and
+/// positive, `n_variants >= 1` (the per-event variant draw is a modulo),
+/// `burstiness` finite and non-negative, and `diurnal` in `[0, 1]`.
+/// The effective rate after burst + diurnal modulation is clamped to
+/// `RATE_FLOOR_FRAC * rate`, so inter-arrival times stay positive and
+/// the output is always sorted by `at_us`.
+pub fn generate_trace(cfg: &TraceConfig) -> Result<Vec<TraceEvent>> {
+    if !cfg.rate.is_finite() || cfg.rate <= 0.0 {
+        return Err(Error::Config(format!(
+            "trace rate must be finite and > 0, got {}",
+            cfg.rate
+        )));
+    }
+    if cfg.n_variants == 0 {
+        return Err(Error::Config(
+            "trace n_variants must be >= 1 (variant draw is modulo n_variants)"
+                .into(),
+        ));
+    }
+    if !cfg.burstiness.is_finite() || cfg.burstiness < 0.0 {
+        return Err(Error::Config(format!(
+            "trace burstiness must be finite and >= 0, got {}",
+            cfg.burstiness
+        )));
+    }
+    if !cfg.diurnal.is_finite() || !(0.0..=1.0).contains(&cfg.diurnal) {
+        return Err(Error::Config(format!(
+            "trace diurnal depth must be in [0, 1], got {}",
+            cfg.diurnal
+        )));
+    }
+    let wsum = cfg.mix.validate()?;
+    let closed = matches!(cfg.arrival, ArrivalModel::Closed { .. });
     let mut rng = Rng::new(cfg.seed);
     let mut t = 0f64; // seconds
     let mut out = Vec::with_capacity(cfg.count);
@@ -49,20 +198,45 @@ pub fn generate_trace(cfg: &TraceConfig) -> Vec<TraceEvent> {
         let u = rng.next_f64().max(1e-12);
         let mut rate = cfg.rate;
         if cfg.burstiness > 0.0 {
-            // flip burst state occasionally; bursts run 5x rate, gaps 0.2x
+            // flip burst state occasionally; bursts speed up, gaps slow
+            // down (floored below so time never runs backwards)
             if rng.next_f64() < 0.05 {
                 in_burst = !in_burst;
             }
-            rate *= if in_burst { 1.0 + 4.0 * cfg.burstiness } else { 1.0 - 0.8 * cfg.burstiness };
+            rate *= if in_burst {
+                1.0 + 4.0 * cfg.burstiness
+            } else {
+                1.0 - 0.8 * cfg.burstiness
+            };
         }
+        if cfg.diurnal > 0.0 {
+            let phase = std::f64::consts::TAU * t
+                / cfg.diurnal_period_s.max(1e-6);
+            rate *= 1.0 + cfg.diurnal * phase.sin();
+        }
+        // positive floor: high burstiness / deep diurnal troughs must
+        // slow arrivals down, never reverse them
+        let rate = rate.max(cfg.rate * RATE_FLOOR_FRAC);
         t += -u.ln() / rate;
+        let workload = {
+            let draw = rng.next_f64() * wsum;
+            if draw < cfg.mix.vision {
+                TraceWorkload::Vision
+            } else if draw < cfg.mix.vision + cfg.mix.text {
+                TraceWorkload::Text
+            } else {
+                TraceWorkload::Joint
+            }
+        };
         out.push(TraceEvent {
-            at_us: (t * 1e6) as u64,
+            at_us: if closed { 0 } else { (t * 1e6) as u64 },
             item: rng.next_u64() % 512,
             variant: (rng.next_u64() % cfg.n_variants as u64) as usize,
+            workload,
+            deadline_us: cfg.deadline_us,
         });
     }
-    out
+    Ok(out)
 }
 
 #[cfg(test)]
@@ -72,8 +246,8 @@ mod tests {
     #[test]
     fn trace_is_sorted_and_deterministic() {
         let cfg = TraceConfig { count: 200, ..Default::default() };
-        let a = generate_trace(&cfg);
-        let b = generate_trace(&cfg);
+        let a = generate_trace(&cfg).unwrap();
+        let b = generate_trace(&cfg).unwrap();
         assert_eq!(a.len(), 200);
         for w in a.windows(2) {
             assert!(w[0].at_us <= w[1].at_us);
@@ -83,10 +257,117 @@ mod tests {
 
     #[test]
     fn mean_rate_roughly_matches() {
-        let cfg = TraceConfig { rate: 1000.0, count: 5000, ..Default::default() };
-        let tr = generate_trace(&cfg);
+        let cfg =
+            TraceConfig { rate: 1000.0, count: 5000, ..Default::default() };
+        let tr = generate_trace(&cfg).unwrap();
         let dur_s = tr.last().unwrap().at_us as f64 / 1e6;
         let rate = tr.len() as f64 / dur_s;
         assert!((rate - 1000.0).abs() < 150.0, "rate {rate}");
+    }
+
+    /// Property sweep: for every burstiness in [0, 2], every mix, and
+    /// diurnal depth 0 and 1, the trace stays sorted (time never runs
+    /// backwards) and the total span is bounded by what the rate floor
+    /// allows — the burstiness >= 1.25 regression made both fail.
+    #[test]
+    fn high_burstiness_stays_sorted_and_positive_rate() {
+        let mixes = [
+            WorkloadMix::vision_only(),
+            WorkloadMix::balanced(),
+            WorkloadMix { vision: 0.0, text: 2.0, joint: 1.0 },
+        ];
+        let count = 400usize;
+        let rate = 500.0f64;
+        for &burstiness in &[0.0, 0.5, 1.0, 1.5, 2.0] {
+            for mix in mixes {
+                for &diurnal in &[0.0, 1.0] {
+                    let cfg = TraceConfig {
+                        rate,
+                        count,
+                        burstiness,
+                        diurnal,
+                        diurnal_period_s: 2.0,
+                        mix,
+                        seed: 42,
+                        ..Default::default()
+                    };
+                    let tr = generate_trace(&cfg).unwrap();
+                    assert_eq!(tr.len(), count);
+                    for w in tr.windows(2) {
+                        assert!(
+                            w[0].at_us <= w[1].at_us,
+                            "trace unsorted at burstiness {burstiness}: \
+                             {} > {}",
+                            w[0].at_us,
+                            w[1].at_us
+                        );
+                    }
+                    // the floored rate bounds the total span: worst case
+                    // every gap runs at rate * RATE_FLOOR_FRAC, and the
+                    // u64 cast saturating would blow far past this
+                    let bound =
+                        count as f64 * 1e6 * 1000.0 / rate;
+                    let last = tr.last().unwrap().at_us as f64;
+                    assert!(
+                        last < bound,
+                        "span {last} exceeds floor bound {bound} \
+                         (burstiness {burstiness}, diurnal {diurnal})"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn zero_variants_is_rejected_not_a_panic() {
+        let cfg = TraceConfig { n_variants: 0, ..Default::default() };
+        let err = generate_trace(&cfg).unwrap_err();
+        assert!(err.to_string().contains("n_variants"));
+    }
+
+    #[test]
+    fn bad_rate_and_diurnal_are_rejected() {
+        let bad_rate = TraceConfig { rate: 0.0, ..Default::default() };
+        assert!(generate_trace(&bad_rate).is_err());
+        let nan_rate = TraceConfig { rate: f64::NAN, ..Default::default() };
+        assert!(generate_trace(&nan_rate).is_err());
+        let bad_diurnal = TraceConfig { diurnal: 1.5, ..Default::default() };
+        assert!(generate_trace(&bad_diurnal).is_err());
+        let bad_mix = TraceConfig {
+            mix: WorkloadMix { vision: 0.0, text: 0.0, joint: 0.0 },
+            ..Default::default()
+        };
+        assert!(generate_trace(&bad_mix).is_err());
+    }
+
+    #[test]
+    fn balanced_mix_produces_all_three_workloads() {
+        let cfg = TraceConfig {
+            count: 600,
+            mix: WorkloadMix::balanced(),
+            ..Default::default()
+        };
+        let tr = generate_trace(&cfg).unwrap();
+        for want in
+            [TraceWorkload::Vision, TraceWorkload::Text, TraceWorkload::Joint]
+        {
+            assert!(
+                tr.iter().any(|e| e.workload == want),
+                "balanced mix never produced {want:?}"
+            );
+        }
+    }
+
+    #[test]
+    fn closed_model_zeroes_timestamps_and_stamps_deadlines() {
+        let cfg = TraceConfig {
+            count: 50,
+            deadline_us: 25_000,
+            arrival: ArrivalModel::Closed { users: 4, think_time_us: 100 },
+            ..Default::default()
+        };
+        let tr = generate_trace(&cfg).unwrap();
+        assert!(tr.iter().all(|e| e.at_us == 0));
+        assert!(tr.iter().all(|e| e.deadline_us == 25_000));
     }
 }

@@ -5,6 +5,7 @@
 //!   * `classify` — off-the-shelf ShapeBench accuracy for one config.
 //!   * `spectral` — Theorem-1 spectral-distance experiment.
 //!   * `serve`    — boot the coordinator and run a trace through it.
+//!   * `loadtest` — closed-loop load harness against the typed router.
 //!
 //! Flags: `--artifacts DIR`, per-subcommand flags below.
 
@@ -12,9 +13,11 @@ use std::path::PathBuf;
 use std::sync::Arc;
 
 use pitome::config::{ServingConfig, ViTConfig};
-use pitome::coordinator::{Coordinator, CpuWorkloads, Payload, Qos, Workload};
+use pitome::coordinator::{run_load, Coordinator, CpuWorkloads, LoadOptions,
+                          Payload, Qos, Workload};
 use pitome::data::{generate_trace, patchify, sent_item, shape_item,
-                   vqa_item, TraceConfig, TEST_SEED};
+                   vqa_item, ArrivalModel, TraceConfig, WorkloadMix,
+                   TEST_SEED};
 use pitome::engine::JointKind;
 use pitome::eval;
 use pitome::model::load_model_params;
@@ -27,6 +30,9 @@ pitome <command> [flags]
   classify --mode M --r R --n N     off-the-shelf accuracy
   spectral --steps S --k K          Theorem-1 experiment
   serve --requests N --rate R       serve a synthetic trace
+  loadtest --requests N --rate R    load harness (shed/deadline aware)
+    [--burst B] [--diurnal D] [--deadline-ms MS] [--users U --think-ms MS]
+    [--queue CAP] [--scale S] [--mix-vision W --mix-text W --mix-joint W]
 global: --artifacts DIR (default ./artifacts)";
 
 fn main() -> anyhow::Result<()> {
@@ -50,6 +56,7 @@ fn main() -> anyhow::Result<()> {
             args.get_parse("requests", 256),
             args.get_parse("rate", 300.0),
         ),
+        Some("loadtest") => loadtest(&args),
         _ => {
             println!("{USAGE}");
             Ok(())
@@ -156,7 +163,7 @@ fn serve(dir: &PathBuf, requests: usize, rate: f64) -> anyhow::Result<()> {
 
     let trace = generate_trace(&TraceConfig {
         rate, count: requests, ..Default::default()
-    });
+    }).map_err(|e| anyhow::anyhow!("{e}"))?;
     let pool = coord.pool().clone();
     let tcfg = pitome::config::TextConfig::default();
     let t0 = std::time::Instant::now();
@@ -214,5 +221,65 @@ fn serve(dir: &PathBuf, requests: usize, rate: f64) -> anyhow::Result<()> {
     if mixed {
         println!("  recycle hit rate: {}", pool.hit_rate_summary());
     }
+    Ok(())
+}
+
+/// `pitome loadtest` — replay a typed arrival trace through the
+/// admission-controlled submit path and print the accounting.  Shares
+/// `coordinator::harness::run_load` with `benches/serving_bench.rs`;
+/// `--users > 0` switches from open-loop pacing to a closed loop.
+fn loadtest(args: &pitome::util::Args) -> anyhow::Result<()> {
+    let users: usize = args.get_parse("users", 0usize);
+    let trace = TraceConfig {
+        rate: args.get_parse("rate", 300.0),
+        count: args.get_parse("requests", 256usize),
+        burstiness: args.get_parse("burst", 1.0),
+        diurnal: args.get_parse("diurnal", 0.0),
+        diurnal_period_s: args.get_parse("diurnal-period", 10.0),
+        mix: WorkloadMix {
+            vision: args.get_parse("mix-vision", 1.0),
+            text: args.get_parse("mix-text", 1.0),
+            joint: args.get_parse("mix-joint", 1.0),
+        },
+        deadline_us: args.get_parse("deadline-ms", 0u64) * 1000,
+        arrival: if users > 0 {
+            ArrivalModel::Closed {
+                users,
+                think_time_us: args.get_parse("think-ms", 0u64) * 1000,
+            }
+        } else {
+            ArrivalModel::Open
+        },
+        seed: args.get_parse("seed", 11u64),
+        ..Default::default()
+    };
+    println!("(loadtest serves SYNTHETIC multimodal weights — \
+              deterministic, untrained)");
+    let ps = Arc::new(pitome::model::synthetic_mm_store(
+        &ViTConfig::default(), 7));
+    let workloads = CpuWorkloads {
+        vision: vec![("vit".to_string(),
+                      vec![("none".to_string(), 1.0),
+                           ("pitome".to_string(), 0.9),
+                           ("tome".to_string(), 0.5)])],
+        text: vec![("bert".to_string(), vec![("none".to_string(), 1.0)])],
+        joint: vec![("vqa".to_string(), JointKind::Vqa,
+                     vec![("pitome".to_string(), 0.9)])],
+    };
+    let scfg = ServingConfig {
+        workers: pitome::merge::batch::recommended_workers(),
+        queue_capacity: args.get_parse("queue", 64usize),
+        ..Default::default()
+    };
+    let coord = Coordinator::boot_cpu_workloads(&ps, &workloads, scfg)
+        .map_err(|e| anyhow::anyhow!("{e}"))?;
+    let opts = LoadOptions {
+        trace,
+        time_scale: args.get_parse("scale", 1.0),
+        ..Default::default()
+    };
+    let report = run_load(&coord, &opts)
+        .map_err(|e| anyhow::anyhow!("{e}"))?;
+    report.print();
     Ok(())
 }

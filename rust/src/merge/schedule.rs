@@ -3,9 +3,15 @@
 //! produce identical static token plans.
 
 /// Number of tokens after one ratio-r merge step; `protect_first` tokens
-/// (CLS) are never candidates.
+/// (CLS) are never candidates.  Degenerate inputs (`n < protect_first`,
+/// or fewer than two merge candidates) return `n` unchanged — the old
+/// `n - protect_first` underflowed (debug panic, release wraparound)
+/// when every token was protected.
 pub fn tokens_after_merge(n: usize, r: f64, protect_first: usize) -> usize {
-    let n_c = n - protect_first;
+    let n_c = n.saturating_sub(protect_first);
+    if n_c < 2 {
+        return n;
+    }
     let k = n_c as i64 - (n_c as f64 * r).floor() as i64;
     let k = k.max(0).min(n_c as i64 / 2).min(n_c as i64 - 2).max(0) as usize;
     n - k
@@ -90,5 +96,27 @@ mod tests {
     fn never_below_two_candidates() {
         let plan = merge_plan(10, 0.5, 30, 1, None);
         assert!(*plan.last().unwrap() >= 3);
+    }
+
+    /// Degenerate (n, protect_first) pairs must never underflow: when
+    /// everything is protected (or fewer than two candidates remain) the
+    /// count passes through unchanged.
+    #[test]
+    fn degenerate_protect_first_never_underflows() {
+        let pairs = [(0usize, 0usize), (0, 1), (1, 1), (1, 5), (2, 3),
+                     (3, 4), (2, 1), (3, 1), (2, 0), (1, 0)];
+        for &(n, pf) in &pairs {
+            for &r in &[0.0, 0.5, 0.9, 1.0] {
+                let out = tokens_after_merge(n, r, pf);
+                assert!(out <= n, "grew: n={n} pf={pf} r={r} -> {out}");
+                if n <= pf + 1 {
+                    assert_eq!(out, n,
+                               "degenerate n={n} pf={pf} must pass through");
+                }
+            }
+        }
+        // a fully-degenerate plan stays flat instead of panicking
+        let plan = merge_plan(2, 0.5, 4, 3, None);
+        assert!(plan.iter().all(|&x| x == 2), "{plan:?}");
     }
 }

@@ -82,18 +82,31 @@ pub struct Bench {
     pub samples: usize,
     /// collected results
     pub results: Vec<BenchResult>,
+    /// named scalar metrics (goodput, shed rate, ...) recorded alongside
+    /// the timing results and emitted into the JSON output
+    pub metrics: Vec<(String, f64)>,
 }
 
 impl Default for Bench {
     fn default() -> Self {
-        Bench { warmup: 3, samples: 20, results: Vec::new() }
+        Bench { warmup: 3, samples: 20, results: Vec::new(),
+                metrics: Vec::new() }
     }
 }
 
 impl Bench {
     /// Runner with explicit sample counts.
     pub fn new(warmup: usize, samples: usize) -> Self {
-        Bench { warmup, samples, results: Vec::new() }
+        Bench { warmup, samples, results: Vec::new(), metrics: Vec::new() }
+    }
+
+    /// Record a named scalar metric (printed and included in
+    /// [`Bench::write_json`] output).  Non-finite values are clamped to
+    /// 0.0 so the hand-rolled JSON stays parseable.
+    pub fn metric(&mut self, name: &str, value: f64) {
+        let v = if value.is_finite() { value } else { 0.0 };
+        println!("{name:<44} = {v:.4}");
+        self.metrics.push((name.to_string(), v));
     }
 
     /// Time `f` and record under `name`. The closure's return value is
@@ -148,7 +161,17 @@ impl Bench {
                 json_escape(&r.name), r.mean_ns(), r.p50_ns(), r.p99_ns(),
                 r.samples_ns.len()));
         }
-        s.push_str("  ]\n}\n");
+        if self.metrics.is_empty() {
+            s.push_str("  ]\n}\n");
+        } else {
+            s.push_str("  ],\n  \"metrics\": {\n");
+            for (i, (name, v)) in self.metrics.iter().enumerate() {
+                let sep = if i + 1 == self.metrics.len() { "" } else { "," };
+                s.push_str(&format!("    \"{}\": {:.4}{sep}\n",
+                                    json_escape(name), v));
+            }
+            s.push_str("  }\n}\n");
+        }
         let path = format!("BENCH_{tag}.json");
         match std::fs::write(&path, s) {
             Ok(()) => println!("wrote {path}"),
@@ -195,6 +218,18 @@ mod tests {
         assert!(fmt_ns(500.0).contains("ns"));
         assert!(fmt_ns(5_000.0).contains("us"));
         assert!(fmt_ns(5_000_000.0).contains("ms"));
+    }
+
+    #[test]
+    fn metrics_record_and_clamp_nonfinite() {
+        let mut b = Bench::new(0, 1);
+        b.metric("goodput_rps", 123.4567);
+        b.metric("bad_nan", f64::NAN);
+        b.metric("bad_inf", f64::INFINITY);
+        assert_eq!(b.metrics.len(), 3);
+        assert!((b.metrics[0].1 - 123.4567).abs() < 1e-9);
+        assert_eq!(b.metrics[1].1, 0.0);
+        assert_eq!(b.metrics[2].1, 0.0);
     }
 
     #[test]

@@ -29,7 +29,8 @@ use std::sync::Arc;
 use std::time::Duration;
 
 use pitome::config::{ServingConfig, ViTConfig};
-use pitome::coordinator::{Coordinator, CpuWorkloads, Payload, Qos, Workload};
+use pitome::coordinator::{Admission, Coordinator, CpuWorkloads, Payload, Qos,
+                          Workload};
 use pitome::data::Rng;
 use pitome::engine::JointKind;
 use pitome::engine::Engine;
@@ -259,14 +260,20 @@ fn warmed_joint_request_cycle_is_allocation_free_including_transport() {
     let patches = pitome::data::patchify(&item.image, 4);
     let (question, _) = pitome::data::vqa_item(pitome::data::TEST_SEED, 0);
 
+    // the admission-controlled path (deadline stamp + non-blocking
+    // try_send) must preserve the zero-allocation guarantee, so the
+    // cycle submits through it with a deadline armed
     let cycle = || {
         let mut vt = pool.take_f32(patches.data.len());
         vt.fill_f32(&patches.data, &[patches.rows, patches.cols]);
         let mut qt = pool.take_i32(question.len());
         qt.fill_i32(&question, &[question.len()]);
-        coord.submit_pooled(Workload::Joint, "vqa", Qos::Throughput,
-                            Payload::Joint { vision: vt, text: qt }, &slot)
+        let adm = coord
+            .try_submit_pooled(Workload::Joint, "vqa", Qos::Throughput,
+                               Payload::Joint { vision: vt, text: qt },
+                               Some(Duration::from_secs(60)), &slot)
             .unwrap();
+        assert_eq!(adm, Admission::Admitted);
         let resp = slot.recv().unwrap();
         assert_eq!(resp.outputs[0].as_f32().unwrap().len(),
                    pitome::data::N_ANSWERS);

@@ -6,9 +6,11 @@
 //! artifact-free environment.
 
 use std::sync::Arc;
+use std::time::Duration;
 
 use pitome::config::{ServingConfig, TextConfig, ViTConfig};
-use pitome::coordinator::{Coordinator, CpuWorkloads, Payload, Qos, Workload};
+use pitome::coordinator::{Admission, Coordinator, CpuWorkloads, Payload, Qos,
+                          Workload};
 use pitome::data::{patchify, sent_item, shape_item, vqa_item, TEST_SEED};
 use pitome::engine::{Engine, JointConfig, JointKind};
 use pitome::model::{synthetic_mm_store, synthetic_vit_store};
@@ -329,6 +331,85 @@ fn pooled_clients_get_an_error_instead_of_hanging_on_a_failed_batch() {
     let resp = slot.recv().expect("worker kept serving after the failure");
     assert_eq!(resp.outputs[0].as_f32().unwrap().len(),
                pitome::data::N_ANSWERS);
+}
+
+#[test]
+fn balanced_routing_keeps_preferred_rung_on_small_idle_queues() {
+    // regression: `has_capacity` used to compute `depth < capacity / 2`,
+    // which is `depth < 0` at queue_capacity 1 — an *idle* small queue
+    // reported "no headroom" and Balanced traffic silently shed down the
+    // whole ladder.  With the ceiling division an idle queue always has
+    // capacity, so a lone Balanced request must land on the preferred
+    // rung (most-compressed-but-one: pitome r=0.9), not on tome r=0.5.
+    let ps = Arc::new(synthetic_vit_store(&ViTConfig::default(), 7));
+    let selection = [("vit", vec![("none".to_string(), 1.0),
+                                  ("pitome".to_string(), 0.9),
+                                  ("tome".to_string(), 0.5)])];
+    let cfg = ServingConfig { queue_capacity: 1, workers: 1,
+                              ..Default::default() };
+    let coord = Coordinator::boot_cpu(&ps, &selection, cfg).unwrap();
+
+    let p = patches_for(0);
+    let resp = coord.submit(
+        "vit", Qos::Balanced,
+        vec![HostTensor::F32(p.data.clone(), vec![p.rows, p.cols])]).unwrap();
+    assert_eq!(resp.outputs[0].as_f32().unwrap().len(), 10);
+
+    let metrics = coord.metrics();
+    assert_eq!(metrics.len(), 3);
+    for (_, artifact, snap) in &metrics {
+        if artifact == "cpu_pitome_r900" {
+            assert_eq!(snap.count, 1,
+                       "Balanced must route to the preferred rung");
+        } else {
+            assert_eq!(snap.count, 0,
+                       "{artifact} must stay idle — Balanced shed off an \
+                        idle preferred rung");
+        }
+    }
+}
+
+#[test]
+fn deadline_expired_requests_fail_fast_with_a_counted_response() {
+    // admission-control acceptance: a request whose deadline has already
+    // passed when the worker dequeues it is dropped *before* execution,
+    // counted in Snapshot::expired, and answered with an explicit expiry
+    // marker (never silently) — and the worker keeps serving afterwards
+    let ps = Arc::new(synthetic_vit_store(&ViTConfig::default(), 7));
+    let selection = [("vit", vec![("pitome".to_string(), 0.9)])];
+    let cfg = ServingConfig { workers: 1, ..Default::default() };
+    let coord = Coordinator::boot_cpu(&ps, &selection, cfg).unwrap();
+    let pool = coord.pool().clone();
+    let slot = coord.response_slot();
+    let p = patches_for(0);
+    let submit = |deadline: Option<Duration>| {
+        let mut vt = pool.take_f32(p.data.len());
+        vt.fill_f32(&p.data, &[p.rows, p.cols]);
+        let adm = coord.try_submit_pooled(Workload::Vision, "vit",
+                                          Qos::Throughput,
+                                          Payload::Vision(vt), deadline,
+                                          &slot).unwrap();
+        assert_eq!(adm, Admission::Admitted);
+    };
+
+    // warm: no deadline, normal answer
+    submit(None);
+    assert_eq!(slot.recv().unwrap().outputs[0].as_f32().unwrap().len(), 10);
+
+    // an already-expired deadline must surface as a counted expiry error
+    submit(Some(Duration::from_micros(0)));
+    let err = slot.recv().expect_err("expired request must not be executed");
+    assert!(err.to_string().contains("deadline"),
+            "expiry marker must name the deadline, got: {err}");
+    let metrics = coord.metrics();
+    assert_eq!(metrics.len(), 1);
+    assert_eq!(metrics[0].2.expired, 1, "worker must count the expiry");
+    assert_eq!(metrics[0].2.count, 1,
+               "expired request must not reach the inference region");
+
+    // the worker survives and keeps answering on the same slot
+    submit(None);
+    assert_eq!(slot.recv().unwrap().outputs[0].as_f32().unwrap().len(), 10);
 }
 
 #[test]

@@ -16,6 +16,11 @@ pub const HOT_PATH_MODULES: &[&str] = &[
     // the batching loop and its work-stealing joint fan-out: every warmed
     // cycle through these workers must allocate nothing
     "src/coordinator/batcher.rs",
+    // admission control rides the submit path: routing (ladder shedding),
+    // deadline stamping, and the non-blocking shed decision must all stay
+    // allocation-free or overload handling itself becomes the bottleneck
+    "src/coordinator/router.rs",
+    "src/coordinator/server.rs",
 ];
 
 /// Sanctioned `CosineGram::build` / `.rebuild(...)` call sites, as
