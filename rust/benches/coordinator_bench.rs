@@ -158,6 +158,7 @@ fn router_section(sm: bool) {
         text: vec![("bert".to_string(), vec![("none".to_string(), 1.0)])],
         joint: vec![("vqa".to_string(), JointKind::Vqa,
                      vec![("pitome".to_string(), 0.9)])],
+        ..Default::default()
     };
     let coord = Coordinator::boot_cpu_workloads(
         &ps, &workloads, ServingConfig::default()).expect("boot");
@@ -248,6 +249,7 @@ fn stealing_section(sm: bool) {
         text: Vec::new(),
         joint: vec![("vqa".to_string(), JointKind::Vqa,
                      vec![("pitome".to_string(), 0.9)])],
+        ..Default::default()
     };
     let item = shape_item(TEST_SEED, 0);
     let patches = patchify(&item.image, 4);

@@ -1,0 +1,174 @@
+//! PERF — embedding-gallery scan benchmarks: exact blocked-scan
+//! throughput and worker-count scaling, the two-stage coarse-probe
+//! speed/recall trade-off, and the warmed zero-allocation query cycle
+//! (the serving-path contract, enforced with the thread-local
+//! [`CountingAllocator`] hook).  The exact kernel is asserted against a
+//! naive score-everything-then-full-sort reference at every size, so
+//! the bench doubles as a correctness harness at scales the unit tests
+//! do not reach.
+
+use pitome::data::Rng;
+use pitome::gallery::{scan_into, scan_two_stage_into, GalleryOptions,
+                      GalleryScratch, GalleryStore, Hit, ScanMode};
+use pitome::merge::batch::recommended_workers;
+use pitome::tensor::dot;
+use pitome::util::{allocs_this_thread, smoke, Bench, CountingAllocator};
+
+#[global_allocator]
+static ALLOC: CountingAllocator = CountingAllocator;
+
+/// Embedding dimension (matches the retrieval towers' shared space).
+const DIM: usize = 64;
+/// Hits per query.
+const K: usize = 16;
+
+fn main() {
+    let sm = smoke();
+    let mut b = if sm { Bench::new(1, 3) } else { Bench::new(2, 10) };
+    println!("# gallery: blocked scan over the sharded embedding store{}",
+             if sm { " [smoke]" } else { "" });
+    let sizes: &[usize] = if sm { &[4_096] } else { &[20_000, 200_000] };
+    for &n in sizes {
+        scan_section(&mut b, n);
+    }
+    alloc_section(&mut b, if sm { 2_048 } else { 50_000 });
+    b.write_json("gallery");
+}
+
+/// Seeded random gallery with `n` rows, bulk-ingested in bounded chunks.
+fn build_store(n: usize, seed: u64) -> GalleryStore {
+    let store = GalleryStore::new(DIM, GalleryOptions::default());
+    let mut rng = Rng::new(seed);
+    const CHUNK: usize = 8_192;
+    let mut buf = vec![0f32; CHUNK.min(n.max(1)) * DIM];
+    let mut done = 0usize;
+    while done < n {
+        let take = CHUNK.min(n - done);
+        for v in buf[..take * DIM].iter_mut() {
+            *v = rng.uniform(-1.0, 1.0) as f32;
+        }
+        store.ingest_bulk(&buf[..take * DIM]).expect("bulk ingest");
+        done += take;
+    }
+    store
+}
+
+/// Seeded probe vector.
+fn probe_for(seed: u64) -> Vec<f32> {
+    let mut rng = Rng::new(seed);
+    (0..DIM).map(|_| rng.uniform(-1.0, 1.0) as f32).collect()
+}
+
+/// Full-sort reference: score every stored row with the same lane-split
+/// dot the scan kernel uses, sort all of them, keep the first `k`.
+fn naive_topk(store: &GalleryStore, probe: &[f32], k: usize) -> Vec<Hit> {
+    let mut all: Vec<Hit> = Vec::with_capacity(store.len());
+    store.for_each_row(|id, row, _norm| {
+        all.push(Hit { id, score: dot(probe, row) });
+    });
+    all.sort_unstable_by(|a, b| {
+        b.score
+            .partial_cmp(&a.score)
+            .unwrap_or(std::cmp::Ordering::Equal)
+            .then(a.id.cmp(&b.id))
+    });
+    all.truncate(k);
+    all
+}
+
+/// Exact-scan correctness + worker scaling + two-stage recall at one
+/// gallery size.
+fn scan_section(b: &mut Bench, n: usize) {
+    println!("\n# n={n} rows x {DIM} dims, k={K}");
+    let store = build_store(n, 0x6A11);
+    let probe = probe_for(0xBEEF ^ n as u64);
+    let mut scratch = GalleryScratch::new();
+    let mut out: Vec<Hit> = Vec::new();
+
+    // correctness at scale: the blocked top-k scan must equal the
+    // full-sort reference exactly (same kernel, same tie order)
+    scan_into(&store, &probe, K, ScanMode::Dot, 1, &mut scratch, &mut out)
+        .expect("scan");
+    let exact = naive_topk(&store, &probe, K);
+    assert_eq!(out, exact,
+               "exact scan diverged from the full-sort reference (n={n})");
+
+    // worker-count scaling on the same store/probe (results are
+    // bitwise identical at any worker count — shard selections never
+    // interact until the deterministic merge)
+    let max_w = recommended_workers().max(2);
+    let mut serial_ns = 0.0f64;
+    for w in [1usize, max_w] {
+        let name = format!("exact scan n={n} workers={w}");
+        let mean = b
+            .run_throughput(&name, n as u64, || {
+                scan_into(&store, &probe, K, ScanMode::Dot, w,
+                          &mut scratch, &mut out)
+                    .expect("scan")
+            })
+            .mean_ns();
+        if w == 1 {
+            serial_ns = mean;
+        } else {
+            b.metric(&format!("scan_scaling_n{n}_w{max_w}"),
+                     serial_ns / mean.max(1.0));
+        }
+    }
+
+    // two-stage coarse probe: exact when probing every block, then
+    // probe 1/8 of the blocks and report recall@K against the exact
+    // selection (approximate by design — reported, not asserted)
+    let stats_all = scan_two_stage_into(&store, &probe, K, usize::MAX,
+                                        ScanMode::Dot, &mut scratch,
+                                        &mut out)
+        .expect("two-stage");
+    assert_eq!(out, exact,
+               "two-stage probing every block must be exact (n={n})");
+    let nprobe = (stats_all.blocks_total as usize / 8).max(1);
+    let name = format!("two-stage scan n={n} probe={nprobe}/{} blocks",
+                       stats_all.blocks_total);
+    b.run(&name, || {
+        scan_two_stage_into(&store, &probe, K, nprobe, ScanMode::Dot,
+                            &mut scratch, &mut out)
+            .expect("two-stage")
+    });
+    let hit = out
+        .iter()
+        .filter(|h| exact.iter().any(|e| e.id == h.id))
+        .count();
+    b.metric(&format!("two_stage_recall_at_{K}_n{n}"),
+             hit as f64 / exact.len().max(1) as f64);
+}
+
+/// The serving-path contract: a warmed query→top-k cycle performs zero
+/// allocations (scratch heaps, merge cursors and the output vector are
+/// all reused), so steady-state query cost is pure compute.
+fn alloc_section(b: &mut Bench, n: usize) {
+    println!("\n# warmed query cycle allocation audit (n={n})");
+    let store = build_store(n, 0x600D);
+    let probe = probe_for(0xA110C);
+    let mut scratch = GalleryScratch::new();
+    let mut out: Vec<Hit> = Vec::new();
+    // warm: heaps size to k, cursors/blocks/out grow to steady state
+    for _ in 0..3 {
+        scan_into(&store, &probe, K, ScanMode::Dot, 1, &mut scratch,
+                  &mut out)
+            .expect("scan");
+        scan_two_stage_into(&store, &probe, K, 4, ScanMode::Dot,
+                            &mut scratch, &mut out)
+            .expect("two-stage");
+    }
+    let iters = 32u64;
+    let before = allocs_this_thread();
+    for _ in 0..iters {
+        std::hint::black_box(
+            scan_into(&store, &probe, K, ScanMode::Dot, 1, &mut scratch,
+                      &mut out)
+                .expect("scan"));
+    }
+    let delta = allocs_this_thread() - before;
+    assert_eq!(delta, 0,
+               "warmed exact scan allocated {delta} times in {iters} \
+                cycles");
+    b.metric("warmed_scan_allocs_per_query", delta as f64 / iters as f64);
+}

@@ -41,6 +41,7 @@ fn boot() -> Coordinator {
         text: vec![("bert".to_string(), vec![("none".to_string(), 1.0)])],
         joint: vec![("vqa".to_string(), JointKind::Vqa,
                      vec![("pitome".to_string(), 0.9)])],
+        ..Default::default()
     };
     let cfg = ServingConfig {
         max_batch: 4,

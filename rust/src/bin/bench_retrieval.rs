@@ -1,5 +1,8 @@
 //! T2/F3 — Image-text retrieval: recall vs FLOPs (Figure 3 curves,
 //! Table 2 rows) on synthetic caption pairs with the CPU reference CLIP.
+//! Recall runs on the gallery scan kernel; `--pairwise` cross-checks one
+//! config against the deprecated per-pair full-sort reference (the two
+//! must agree exactly).
 
 use pitome::engine::Engine;
 use pitome::eval::retrieval::{eval_config, sweep};
@@ -24,6 +27,10 @@ fn main() -> anyhow::Result<()> {
         }
     };
     let engine = Engine::from_store(ps);
+
+    if args.has("pairwise") {
+        return pairwise_parity(&engine, n);
+    }
 
     if args.has("figure3") {
         println!("# Figure 3: Rsum vs GFLOPs per algorithm (synthetic Flickr stand-in)");
@@ -51,5 +58,25 @@ fn main() -> anyhow::Result<()> {
                  format!("{mode} r={r}"), row.rt1, row.ri1, row.rsum,
                  row.gflops, row.rsum - base.rsum);
     }
+    Ok(())
+}
+
+/// `--pairwise`: cross-check the gallery-backed recall against the
+/// historical per-pair O(n^2) reference — the two must agree exactly.
+#[allow(deprecated)]
+fn pairwise_parity(engine: &Engine, n: usize) -> anyhow::Result<()> {
+    let a = eval_config(engine, "pitome", 0.9, n)
+        .map_err(|e| anyhow::anyhow!("{e}"))?;
+    let b = pitome::eval::retrieval::eval_config_pairwise(
+        engine, "pitome", 0.9, n)
+        .map_err(|e| anyhow::anyhow!("{e}"))?;
+    println!("# pairwise parity (pitome r=0.9, n={n})");
+    println!("gallery : Rt@1 {:.2} Ri@1 {:.2} Rsum {:.2}",
+             a.rt1, a.ri1, a.rsum);
+    println!("pairwise: Rt@1 {:.2} Ri@1 {:.2} Rsum {:.2}",
+             b.rt1, b.ri1, b.rsum);
+    anyhow::ensure!(a.rt1 == b.rt1 && a.ri1 == b.ri1 && a.rsum == b.rsum,
+                    "gallery recall diverged from the pairwise reference");
+    println!("parity OK (exact)");
     Ok(())
 }

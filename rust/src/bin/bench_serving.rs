@@ -96,6 +96,7 @@ fn cpu_mixed_bench(requests: usize) -> anyhow::Result<()> {
         text: vec![("bert".to_string(), vec![("none".to_string(), 1.0)])],
         joint: vec![("vqa".to_string(), JointKind::Vqa,
                      vec![("pitome".to_string(), 0.9)])],
+        ..Default::default()
     };
     let cfg = ServingConfig {
         workers: pitome::merge::batch::recommended_workers(),

@@ -22,6 +22,11 @@
 //!   fragment queue's mutex is a leaf lock held only for the O(1) split —
 //!   never while running a sample or touching the other queue — so the
 //!   two queues need no lock ordering between them.
+//! * **CPU gallery** ([`VariantWorker::spawn_cpu_gallery`]) —
+//!   embedding-gallery serving through a retrieval [`JointSession`]:
+//!   ingest requests embed once and append to the shared
+//!   [`GalleryStore`]; query requests embed one probe and scan the
+//!   store with the blocked top-k kernel ([`crate::gallery`]).
 //!
 //! All CPU workers resolve weights once at boot (shared engine cache)
 //! and pool every buffer a request touches — including the **response
@@ -48,6 +53,7 @@ use crate::config::{ServingConfig, TextConfig, ViTConfig};
 use crate::engine::{BertSession, Engine, JointConfig, JointKind,
                     JointSession, VitSession};
 use crate::error::{Error, Result};
+use crate::gallery::{scan_into, GalleryScratch, GalleryStore, Hit, ScanMode};
 use crate::runtime::{ArtifactEntry, Engine as PjrtEngine, Executable,
                      HostTensor};
 use crate::util::alloc::allocs_this_thread;
@@ -249,6 +255,58 @@ impl VariantWorker {
         })
     }
 
+    /// Spawn a worker that serves the embedding gallery: ingest
+    /// requests embed once through the retrieval [`JointSession`]
+    /// towers (f32 patches → image tower, i32 token ids → text tower)
+    /// and append the normalized embedding to the shared
+    /// [`GalleryStore`]; query requests embed one probe the same way,
+    /// then scan the store with the blocked lane-split kernel and
+    /// answer the best `k` hits from the recycled pool.  Ingests and
+    /// queries mix freely in a batch: all ingests apply before any
+    /// query scans, so a query observes every ingest that shared its
+    /// batch.  `model_cfg` must be a retrieval-kind joint config.
+    // lint: allow(alloc) reason=cold bootstrap: worker-name format!, Arc clones, and empty gallery scratch built once per worker
+    pub fn spawn_cpu_gallery(engine: Arc<Engine>, model_cfg: JointConfig,
+                             store: Arc<GalleryStore>,
+                             pool: Arc<TensorPool>, cfg: &ServingConfig)
+                             -> VariantWorker {
+        let max_batch = cfg.max_batch;
+        let workers = cfg.workers.max(1);
+        let name = format!("pitome-gallery-{}-r{:.0}",
+                           model_cfg.vision.merge_mode,
+                           model_cfg.vision.merge_r * 1000.0);
+        Self::spawn_worker(name, cfg, max_batch, move |metrics: &Arc<Metrics>| {
+            if model_cfg.kind != JointKind::Retrieval {
+                eprintln!("[pitome worker] gallery worker needs a \
+                           retrieval-kind joint config");
+                return None;
+            }
+            let mut sess = match engine.joint_session(&model_cfg) {
+                Ok(s) => s,
+                Err(e) => {
+                    eprintln!("[pitome worker] gallery session init \
+                               failed: {e}");
+                    return None;
+                }
+            };
+            sess.set_vision_workers(workers);
+            let metrics = metrics.clone();
+            // per-worker batch + scan scratch, reused across batches
+            let mut slots: Vec<GallerySlot> = Vec::new();
+            let mut ids: Vec<u64> = Vec::new();
+            let mut scratch = GalleryScratch::new();
+            let mut hits: Vec<Hit> = Vec::new();
+            let mut flat: Vec<f32> = Vec::new();
+            Some(move |batch: &[InferRequest],
+                       outs: &mut Vec<InferOutputs>| {
+                cpu_run_gallery_batch(&mut sess, &store, &metrics, &pool,
+                                      batch, outs, &mut slots, &mut ids,
+                                      &mut scratch, &mut hits, &mut flat,
+                                      workers)
+            })
+        })
+    }
+
     /// Blocking submit (backpressure by blocking on the bounded queue).
     pub fn submit(&self, req: InferRequest) -> Result<()> {
         self.depth.fetch_add(1, Ordering::Relaxed);
@@ -321,38 +379,102 @@ impl Drop for VariantWorker {
 }
 
 /// Shared batching loop: collect up to `max_batch` requests (or until the
-/// deadline), run them through `exec`, and fan the responses back out.
-/// The batch and output vectors are loop-owned and reused, so a warmed
-/// cycle performs no allocations of its own; the per-cycle allocation
-/// count (inference + transport) lands in
+/// deadline), order them earliest-deadline-first, run the front of the
+/// queue through `exec`, and fan the responses back out.
+///
+/// **Deadline-aware ordering:** after the timed gather, everything
+/// already queued is drained opportunistically and the pending set is
+/// sorted earliest-deadline-first (deadline-less requests after all
+/// deadlined ones, FIFO within a class).  Only the first `max_batch`
+/// requests execute this cycle; the rest carry over and run *before*
+/// the worker blocks for new arrivals, so under overload a
+/// tight-deadline request buried behind a full batch is promoted
+/// instead of expiring mid-queue.
+///
+/// The pending/batch/output vectors are loop-owned and reused, so a
+/// warmed cycle performs no allocations of its own; the per-cycle
+/// allocation count (inference + transport) lands in
 /// [`Snapshot::last_cycle_allocs`](super::metrics::Snapshot).
-// lint: allow(alloc) reason=loop-owned batch/output vectors allocated once and reused every cycle
+// lint: allow(alloc) reason=loop-owned pending/batch/output vectors allocated once and reused every cycle
 fn worker_loop<E>(mut exec: E, rx: Receiver<InferRequest>,
                   metrics: Arc<Metrics>, depth: Arc<AtomicUsize>,
                   max_batch: usize, timeout: Duration)
 where
     E: FnMut(&[InferRequest], &mut Vec<InferOutputs>) -> Result<()>,
 {
+    let mut pending: Vec<InferRequest> = Vec::new();
     let mut batch: Vec<InferRequest> = Vec::new();
     let mut outs: Vec<InferOutputs> = Vec::new();
-    loop {
+    let mut open = true;
+    while open || !pending.is_empty() {
+        if open && pending.is_empty() {
+            // idle: block for the first arrival, then gather its batch
+            match rx.recv() {
+                Ok(r) => {
+                    depth.fetch_sub(1, Ordering::Relaxed);
+                    pending.push(r);
+                }
+                Err(_) => {
+                    open = false;
+                    continue;
+                }
+            }
+            let deadline = Instant::now() + timeout;
+            while pending.len() < max_batch {
+                let remaining =
+                    deadline.saturating_duration_since(Instant::now());
+                if remaining.is_zero() {
+                    break;
+                }
+                match rx.recv_timeout(remaining) {
+                    Ok(r) => {
+                        depth.fetch_sub(1, Ordering::Relaxed);
+                        pending.push(r);
+                    }
+                    Err(std::sync::mpsc::RecvTimeoutError::Timeout) => break,
+                    Err(std::sync::mpsc::RecvTimeoutError::Disconnected) => {
+                        open = false;
+                        break;
+                    }
+                }
+            }
+        }
+        if open {
+            // opportunistic drain: pull everything already queued so the
+            // EDF sort can promote near-deadline requests past a full
+            // batch (carried-over requests run before new arrivals)
+            loop {
+                match rx.try_recv() {
+                    Ok(r) => {
+                        depth.fetch_sub(1, Ordering::Relaxed);
+                        pending.push(r);
+                    }
+                    Err(std::sync::mpsc::TryRecvError::Empty) => break,
+                    Err(std::sync::mpsc::TryRecvError::Disconnected) => {
+                        open = false;
+                        break;
+                    }
+                }
+            }
+        }
+        if pending.is_empty() {
+            continue;
+        }
+        if pending.len() > 1 {
+            // earliest-deadline-first; in-place unstable sort (ties are
+            // fully ordered by enqueue time, so stability is irrelevant)
+            pending.sort_unstable_by(|a, b| match (a.deadline, b.deadline) {
+                (Some(x), Some(y)) => {
+                    x.cmp(&y).then(a.enqueued_at.cmp(&b.enqueued_at))
+                }
+                (Some(_), None) => std::cmp::Ordering::Less,
+                (None, Some(_)) => std::cmp::Ordering::Greater,
+                (None, None) => a.enqueued_at.cmp(&b.enqueued_at),
+            });
+        }
         batch.clear();
-        match rx.recv() {
-            Ok(r) => batch.push(r),
-            Err(_) => return,
-        }
-        let deadline = Instant::now() + timeout;
-        while batch.len() < max_batch {
-            let remaining = deadline.saturating_duration_since(Instant::now());
-            if remaining.is_zero() {
-                break;
-            }
-            match rx.recv_timeout(remaining) {
-                Ok(r) => batch.push(r),
-                Err(_) => break,
-            }
-        }
-        depth.fetch_sub(batch.len(), Ordering::Relaxed);
+        let take = pending.len().min(max_batch);
+        batch.extend(pending.drain(..take));
         // deadline-aware batching: drop requests whose deadline already
         // passed *before* spending execution on them.  Counted first
         // (so a client that observes the expiry marker sees the count),
@@ -557,6 +679,11 @@ fn classify_joint(p: &Payload) -> Result<JointWant> {
         Payload::Tensors(v) => Err(Error::Coordinator(format!(
             "joint worker: legacy tensor payload must be the \
              [patches, question] pair, got {} tensors", v.len()))),
+        Payload::GalleryIngest(_) | Payload::GalleryQuery { .. } => {
+            Err(Error::Coordinator(
+                "joint worker: gallery payload routed to joint worker \
+                 (route it to Workload::Gallery)".into()))
+        }
     }
 }
 
@@ -661,6 +788,163 @@ fn cpu_run_joint_batch(sess: &mut JointSession, metrics: &Metrics,
                             &mut recycled, &mut fresh);
             }
         }
+    }
+    metrics.record_responses(recycled, fresh);
+    Ok(())
+}
+
+/// What each gallery-batch request gets answered with (index into the
+/// session's vision or text half, plus the query's `k`).
+enum GallerySlot {
+    /// ingest of the image embedding at vision slot `vi`
+    IngestVis(usize),
+    /// ingest of the caption embedding at text slot `ti`
+    IngestTxt(usize),
+    /// query probing with the image embedding at vision slot `vi`
+    QueryVis(usize, usize),
+    /// query probing with the caption embedding at text slot `ti`
+    QueryTxt(usize, usize),
+}
+
+/// Build one single-tensor response with an explicit shape from a
+/// recycled pool buffer (the gallery query's `(hits, 2)` layout).
+fn respond_f32_shaped(pool: &Arc<TensorPool>, outs: &mut Vec<InferOutputs>,
+                      data: &[f32], shape: &[usize],
+                      recycled: &mut u64, fresh: &mut u64) {
+    let mut t = pool.take_f32(data.len().max(1));
+    if t.recycled() {
+        *recycled += 1;
+    } else {
+        *fresh += 1;
+    }
+    t.fill_f32(data, shape);
+    outs.push(InferOutputs::One(t));
+}
+
+/// Execute a mixed gallery batch through the worker's long-lived
+/// retrieval [`JointSession`]: every request's tensor is filed into
+/// the tower matching its dtype (f32 patches → image tower, i32 token
+/// ids → text tower), both towers run once over the ragged halves,
+/// ingests append their normalized embedding to the shared store
+/// *before* any query scans (a query observes every ingest that
+/// shared its batch), then each query scans the store through the
+/// worker's reusable [`GalleryScratch`].  Ingests answer
+/// `[id, gallery_len]`; queries answer a `(hits, 2)` tensor of
+/// `[id, score]` rows.
+///
+/// The inference region spans parse → embed → ingest; scans and
+/// responses land in the whole-cycle allocation count.  A warmed
+/// query-only batch allocates nothing in either region
+/// (`tests/alloc_free.rs`); ingest batches may grow the store's
+/// append-only segments, which is the documented cold path.
+// lint: allow(alloc) reason=error-path format! only, never taken on the steady-state path
+#[allow(clippy::too_many_arguments)]
+fn cpu_run_gallery_batch(sess: &mut JointSession, store: &Arc<GalleryStore>,
+                         metrics: &Metrics, pool: &Arc<TensorPool>,
+                         batch: &[InferRequest],
+                         outs: &mut Vec<InferOutputs>,
+                         slots: &mut Vec<GallerySlot>, ids: &mut Vec<u64>,
+                         scratch: &mut GalleryScratch, hits: &mut Vec<Hit>,
+                         flat: &mut Vec<f32>, workers: usize) -> Result<()> {
+    let before = allocs_this_thread();
+    slots.clear();
+    ids.clear();
+    // pass 1: size the ragged halves by payload dtype
+    let (mut bv, mut bt) = (0usize, 0usize);
+    for (ri, req) in batch.iter().enumerate() {
+        let (t, k) = match &req.payload {
+            Payload::GalleryIngest(t) => (t, None),
+            Payload::GalleryQuery { probe, k } => (probe, Some(*k)),
+            _ => {
+                return Err(Error::Coordinator(format!(
+                    "gallery worker: request {ri} carries a non-gallery \
+                     payload")))
+            }
+        };
+        let vision = matches!(t.tensor(), HostTensor::F32(..));
+        let slot = match (vision, k) {
+            (true, None) => {
+                bv += 1;
+                GallerySlot::IngestVis(bv - 1)
+            }
+            (false, None) => {
+                bt += 1;
+                GallerySlot::IngestTxt(bt - 1)
+            }
+            (true, Some(k)) => {
+                bv += 1;
+                GallerySlot::QueryVis(bv - 1, k)
+            }
+            (false, Some(k)) => {
+                bt += 1;
+                GallerySlot::QueryTxt(bt - 1, k)
+            }
+        };
+        slots.push(slot);
+    }
+    sess.begin(bv, bt);
+    // pass 2: file each tensor into its tower slot
+    for (ri, (req, slot)) in batch.iter().zip(slots.iter()).enumerate() {
+        let t = match &req.payload {
+            Payload::GalleryIngest(t) => t,
+            Payload::GalleryQuery { probe, .. } => probe,
+            _ => {
+                return Err(Error::Coordinator(format!(
+                    "gallery worker: request {ri} changed payload class")))
+            }
+        };
+        match slot {
+            GallerySlot::IngestVis(vi) | GallerySlot::QueryVis(vi, _) => {
+                sess.set_patches_slice(*vi, t.as_f32()?)?;
+            }
+            GallerySlot::IngestTxt(ti) | GallerySlot::QueryTxt(ti, _) => {
+                sess.set_text(*ti, t.as_i32()?)?;
+            }
+        }
+    }
+    // both towers once, then the retrieval projection
+    sess.forward(0)?;
+    sess.project()?;
+    // ingests first, so queries in this batch observe them
+    for slot in slots.iter() {
+        let id = match slot {
+            GallerySlot::IngestVis(vi) => store.ingest(sess.image_embed(*vi))?,
+            GallerySlot::IngestTxt(ti) => store.ingest(sess.text_embed(*ti))?,
+            GallerySlot::QueryVis(..) | GallerySlot::QueryTxt(..) => 0,
+        };
+        ids.push(id);
+    }
+    metrics.record_infer_allocs(allocs_this_thread() - before);
+    // queries scan, everything answers from the recycled pool
+    let (mut rows, mut evictions, mut scan_us) = (0u64, 0u64, 0u64);
+    let (mut recycled, mut fresh) = (0u64, 0u64);
+    for (si, slot) in slots.iter().enumerate() {
+        let (probe, k) = match slot {
+            GallerySlot::IngestVis(_) | GallerySlot::IngestTxt(_) => {
+                respond_f32(pool, outs,
+                            &[ids[si] as f32, store.len() as f32],
+                            &mut recycled, &mut fresh);
+                continue;
+            }
+            GallerySlot::QueryVis(vi, k) => (sess.image_embed(*vi), *k),
+            GallerySlot::QueryTxt(ti, k) => (sess.text_embed(*ti), *k),
+        };
+        let scan_start = Instant::now();
+        let stats =
+            scan_into(store, probe, k, ScanMode::Dot, workers, scratch, hits)?;
+        scan_us += scan_start.elapsed().as_micros() as u64;
+        rows += stats.rows;
+        evictions += stats.evictions;
+        flat.clear();
+        for h in hits.iter() {
+            flat.push(h.id as f32);
+            flat.push(h.score);
+        }
+        respond_f32_shaped(pool, outs, flat, &[hits.len(), 2],
+                           &mut recycled, &mut fresh);
+    }
+    if rows > 0 || evictions > 0 || scan_us > 0 {
+        metrics.record_gallery(store.len() as u64, rows, evictions, scan_us);
     }
     metrics.record_responses(recycled, fresh);
     Ok(())
@@ -863,5 +1147,62 @@ mod tests {
         // the worker keeps serving after dropping an expired batch
         w.submit(slot_request(&slot, None)).unwrap();
         slot.recv().expect("live request must answer");
+    }
+
+    /// Earliest-deadline-first ordering: a tight-deadline request
+    /// enqueued *behind* a full batch of deadline-less requests is
+    /// promoted into the next executing batch instead of waiting its
+    /// FIFO turn (and possibly expiring mid-queue).
+    #[test]
+    fn tight_deadline_request_is_promoted_past_a_full_batch() {
+        let cfg = ServingConfig {
+            max_batch: 2,
+            batch_timeout_us: 100,
+            queue_capacity: 8,
+            workers: 1,
+        };
+        let (started_tx, started_rx) = mpsc::channel::<()>();
+        let (release_tx, release_rx) = mpsc::channel::<()>();
+        let w = VariantWorker::spawn_worker(
+            "test-edf".to_string(), &cfg, cfg.max_batch,
+            move |_m: &Arc<Metrics>| {
+                Some(move |batch: &[InferRequest],
+                           outs: &mut Vec<InferOutputs>| {
+                    let _ = started_tx.send(());
+                    let _ = release_rx.recv();
+                    for _ in batch {
+                        one_output(outs);
+                    }
+                    Ok(())
+                })
+            });
+        let bulk = ResponseSlot::new(8);
+        let urgent = ResponseSlot::new(8);
+        // occupy the worker so everything below queues up behind it
+        w.submit(slot_request(&bulk, None)).unwrap();
+        started_rx.recv().unwrap();
+        // a full batch of deadline-less requests, then the deadlined one
+        // last — strict FIFO would execute it in the *third* batch
+        for _ in 0..3 {
+            w.submit(slot_request(&bulk, None)).unwrap();
+        }
+        let deadline = Instant::now() + Duration::from_secs(60);
+        w.submit(slot_request(&urgent, Some(deadline))).unwrap();
+        // run the three batches to completion
+        release_tx.send(()).unwrap(); // batch 1: the occupier
+        started_rx.recv().unwrap();
+        release_tx.send(()).unwrap(); // batch 2: must contain `urgent`
+        started_rx.recv().unwrap();
+        release_tx.send(()).unwrap(); // batch 3: the remaining two
+        let r = urgent.recv().expect("deadlined request must answer");
+        assert_eq!(r.batch_size, 2,
+                   "deadlined request must ride the first post-occupier \
+                    batch (EDF promotion), not its FIFO slot");
+        for _ in 0..4 {
+            bulk.recv().expect("deadline-less request must answer");
+        }
+        assert_eq!(w.metrics.snapshot().expired, 0,
+                   "nothing expired: the deadline was generous, only the \
+                    ordering changed");
     }
 }

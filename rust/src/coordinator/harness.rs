@@ -42,11 +42,15 @@ use super::server::Coordinator;
 /// dataset items inside the timed loop.
 const N_TEMPLATES: u64 = 8;
 
+/// Hits requested by every gallery-lane query.
+const GALLERY_K: usize = 8;
+
 fn widx(w: TraceWorkload) -> usize {
     match w {
         TraceWorkload::Vision => 0,
         TraceWorkload::Text => 1,
         TraceWorkload::Joint => 2,
+        TraceWorkload::Gallery => 3,
     }
 }
 
@@ -55,6 +59,7 @@ fn to_workload(w: TraceWorkload) -> Workload {
         TraceWorkload::Vision => Workload::Vision,
         TraceWorkload::Text => Workload::Text,
         TraceWorkload::Joint => Workload::Joint,
+        TraceWorkload::Gallery => Workload::Gallery,
     }
 }
 
@@ -72,6 +77,11 @@ pub struct LoadOptions {
     pub time_scale: f64,
     /// sample queue depths every N submissions (>= 1)
     pub sample_every: usize,
+    /// items ingested into the gallery (through the serving-path
+    /// [`Payload::GalleryIngest`]) before the replay starts, so gallery
+    /// queries scan a non-trivial store.  Requires a booted gallery pool
+    /// when > 0; ignored otherwise.
+    pub gallery_prefill: usize,
 }
 
 impl Default for LoadOptions {
@@ -81,6 +91,7 @@ impl Default for LoadOptions {
             qos: Qos::Balanced,
             time_scale: 1.0,
             sample_every: 1,
+            gallery_prefill: 0,
         }
     }
 }
@@ -271,6 +282,13 @@ fn submit_event(coord: &Coordinator, tpl: &Templates, lane: &mut Lane,
             qt.fill_i32(q, &[q.len()]);
             Payload::Joint { vision: vt, text: qt }
         }
+        TraceWorkload::Gallery => {
+            // image-probe query: embed the probe once, scan the store
+            let m = &tpl.patches[ti];
+            let mut t = pool.take_f32(m.data.len());
+            t.fill_f32(&m.data, &[m.rows, m.cols]);
+            Payload::GalleryQuery { probe: t, k: GALLERY_K }
+        }
     };
     let deadline = if ev.deadline_us > 0 {
         Some(Duration::from_micros(ev.deadline_us))
@@ -325,17 +343,36 @@ fn sample_depth(coord: &Coordinator, lane: &mut Lane) {
 /// Sum of worker-side `expired` counters per workload — the
 /// authoritative deadline-drop count (client-side markers land in
 /// `failed` without distinguishing expiry from batch failure).
-fn expired_by_workload(coord: &Coordinator) -> [u64; 3] {
-    let mut out = [0u64; 3];
+fn expired_by_workload(coord: &Coordinator) -> [u64; 4] {
+    let mut out = [0u64; 4];
     for (w, _, _, s) in coord.metrics_typed() {
         let i = match w {
             Workload::Vision => 0,
             Workload::Text => 1,
             Workload::Joint => 2,
+            Workload::Gallery => 3,
         };
         out[i] += s.expired;
     }
     out
+}
+
+/// Ingest `n` template items into the gallery through the serving path
+/// (one blocking request per item — ids are then the insertion order),
+/// so the replay's queries scan a populated store.
+fn prefill_gallery(coord: &Coordinator, tpl: &Templates, model: &str,
+                   n: usize) -> Result<()> {
+    let pool = coord.pool();
+    let slot = coord.response_slot();
+    for i in 0..n as u64 {
+        let m = &tpl.patches[(i % N_TEMPLATES) as usize];
+        let mut t = pool.take_f32(m.data.len());
+        t.fill_f32(&m.data, &[m.rows, m.cols]);
+        coord.submit_pooled(Workload::Gallery, model, Qos::Accuracy,
+                            Payload::GalleryIngest(t), &slot)?;
+        slot.recv()?;
+    }
+    Ok(())
 }
 
 /// Open-loop replay: submit on (scaled) trace timestamps, draining
@@ -426,12 +463,16 @@ pub fn run_load(coord: &Coordinator, opts: &LoadOptions)
                 -> Result<LoadReport> {
     let trace = generate_trace(&opts.trace)?;
     let tpl = Templates::build();
-    let mut counts = [0usize; 3];
+    let mut counts = [0usize; 4];
     for ev in &trace {
         counts[widx(ev.workload)] += 1;
     }
-    let tws =
-        [TraceWorkload::Vision, TraceWorkload::Text, TraceWorkload::Joint];
+    let tws = [
+        TraceWorkload::Vision,
+        TraceWorkload::Text,
+        TraceWorkload::Joint,
+        TraceWorkload::Gallery,
+    ];
     let mut lanes: Vec<Lane> = Vec::new();
     for (i, tw) in tws.iter().enumerate() {
         if counts[i] == 0 {
@@ -467,6 +508,20 @@ pub fn run_load(coord: &Coordinator, opts: &LoadOptions)
             depth_sum: 0,
             depth_n: 0,
         });
+    }
+    if opts.gallery_prefill > 0 {
+        let model = coord
+            .router()
+            .models_for(Workload::Gallery)
+            .first()
+            .map(|s| s.to_string())
+            .ok_or_else(|| {
+                Error::Config(
+                    "gallery_prefill > 0 but the coordinator has no \
+                     gallery models".into(),
+                )
+            })?;
+        prefill_gallery(coord, &tpl, &model, opts.gallery_prefill)?;
     }
     let expired_before = expired_by_workload(coord);
     let t0 = Instant::now();
@@ -528,6 +583,7 @@ mod tests {
                         vec![("none".to_string(), 1.0)])],
             joint: vec![("vqa".to_string(), JointKind::Vqa,
                          vec![("pitome".to_string(), 0.9)])],
+            ..Default::default()
         };
         let cfg = ServingConfig {
             max_batch: 4,
@@ -563,6 +619,62 @@ mod tests {
             assert_eq!(w.latency.count, w.completed);
         }
         assert!(rep.goodput_rps() > 0.0);
+    }
+
+    /// Gallery lane end-to-end: prefill the store through the serving
+    /// path, then replay a gallery-only query trace and check both the
+    /// client-side accounting and the worker-side gallery counters.
+    #[test]
+    fn gallery_lane_replays_queries_against_a_prefilled_store() {
+        let ps = Arc::new(synthetic_mm_store(&ViTConfig::default(), 7));
+        let workloads = CpuWorkloads {
+            gallery: vec![("gal".to_string(),
+                           vec![("pitome".to_string(), 0.9)])],
+            ..Default::default()
+        };
+        let cfg = ServingConfig {
+            max_batch: 4,
+            batch_timeout_us: 500,
+            queue_capacity: 64,
+            workers: 1,
+        };
+        let coord =
+            Coordinator::boot_cpu_workloads(&ps, &workloads, cfg).unwrap();
+        let opts = LoadOptions {
+            trace: TraceConfig {
+                count: 10,
+                mix: WorkloadMix {
+                    vision: 0.0,
+                    text: 0.0,
+                    joint: 0.0,
+                    gallery: 1.0,
+                },
+                arrival: ArrivalModel::Closed { users: 2, think_time_us: 0 },
+                seed: 9,
+                ..Default::default()
+            },
+            gallery_prefill: 12,
+            ..Default::default()
+        };
+        let rep = run_load(&coord, &opts).unwrap();
+        assert_eq!(rep.offered(), 10);
+        assert_eq!(rep.completed(), 10,
+                   "every gallery query must answer");
+        let gal = rep
+            .per_workload
+            .iter()
+            .find(|w| w.workload == Workload::Gallery)
+            .expect("gallery lane present in the report");
+        assert_eq!(gal.completed, 10);
+        let snaps = coord.metrics_typed();
+        let snap = &snaps
+            .iter()
+            .find(|(w, _, _, _)| *w == Workload::Gallery)
+            .expect("gallery pool metrics")
+            .3;
+        assert_eq!(snap.gallery_len, 12, "prefill must populate the store");
+        assert_eq!(snap.gallery_scanned_rows, 10 * 12,
+                   "each query scans the whole prefilled store");
     }
 
     /// Unpaced open-loop burst against a capacity-1 queue: submission is

@@ -22,6 +22,10 @@ struct Inner {
     resp_fresh: u64,
     shed: u64,
     expired: u64,
+    gallery_len: u64,
+    gallery_scanned_rows: u64,
+    gallery_evictions: u64,
+    gallery_scan_us: u64,
 }
 
 /// Thread-safe metrics sink.
@@ -70,6 +74,17 @@ pub struct Snapshot {
     /// admitted requests dropped by the worker because their deadline
     /// had already passed when their batch was picked up
     pub expired: u64,
+    /// embeddings resident in the gallery store at the last gallery
+    /// batch (gauge; 0 when no gallery workload runs)
+    pub gallery_len: u64,
+    /// gallery rows scored by query scans (cumulative); divide by
+    /// `gallery_scan_us` for the serving-side scan rate
+    pub gallery_scanned_rows: u64,
+    /// top-k heap evictions across gallery scans (cumulative) — how
+    /// often a candidate displaced a weaker provisional hit
+    pub gallery_evictions: u64,
+    /// microseconds spent inside gallery scans (cumulative)
+    pub gallery_scan_us: u64,
 }
 
 impl Metrics {
@@ -126,6 +141,18 @@ impl Metrics {
         g.expired += n;
     }
 
+    /// Record one gallery batch's scan work: the store size at the time
+    /// (a gauge) plus cumulative rows scored, top-k heap evictions, and
+    /// scan wall time.
+    pub fn record_gallery(&self, len: u64, rows: u64, evictions: u64,
+                          scan_us: u64) {
+        let mut g = self.inner.lock().unwrap();
+        g.gallery_len = len;
+        g.gallery_scanned_rows += rows;
+        g.gallery_evictions += evictions;
+        g.gallery_scan_us += scan_us;
+    }
+
     fn percentile(hist: &[u64; 16], count: u64, q: f64) -> u64 {
         if count == 0 {
             return 0;
@@ -163,6 +190,10 @@ impl Metrics {
             resp_fresh: g.resp_fresh,
             shed: g.shed,
             expired: g.expired,
+            gallery_len: g.gallery_len,
+            gallery_scanned_rows: g.gallery_scanned_rows,
+            gallery_evictions: g.gallery_evictions,
+            gallery_scan_us: g.gallery_scan_us,
         }
     }
 }
@@ -211,6 +242,18 @@ mod tests {
         let s = m.snapshot();
         assert_eq!(s.shed, 2);
         assert_eq!(s.expired, 3);
+    }
+
+    #[test]
+    fn gallery_counters_accumulate_and_len_is_a_gauge() {
+        let m = Metrics::default();
+        m.record_gallery(100, 100, 5, 40);
+        m.record_gallery(250, 250, 9, 90);
+        let s = m.snapshot();
+        assert_eq!(s.gallery_len, 250);
+        assert_eq!(s.gallery_scanned_rows, 350);
+        assert_eq!(s.gallery_evictions, 14);
+        assert_eq!(s.gallery_scan_us, 130);
     }
 
     #[test]

@@ -4,7 +4,7 @@
 //! response-buffer recycling, and metrics.
 //!
 //! Shape: vLLM-router-like.  Requests are typed by [`Workload`]
-//! (vision / text / joint); each workload owns worker pools whose
+//! (vision / text / joint / gallery); each workload owns worker pools whose
 //! logical models ladder variants compiled (or configured) at different
 //! merge ratios.  The router picks a rung per request QoS and sheds to
 //! deeper compression under load; each variant has a dedicated batcher

@@ -26,6 +26,9 @@ pub enum Workload {
     Text,
     /// joint vision+text inference (retrieval scoring / VQA)
     Joint,
+    /// embedding-gallery serving: ingest embeds an item once into the
+    /// gallery store, query embeds one probe and scans the store
+    Gallery,
 }
 
 impl Workload {
@@ -35,6 +38,7 @@ impl Workload {
             Workload::Vision => "vision",
             Workload::Text => "text",
             Workload::Joint => "joint",
+            Workload::Gallery => "gallery",
         }
     }
 }
@@ -58,6 +62,22 @@ pub enum Payload {
         /// token-id tensor (i32)
         text: PooledTensor,
     },
+    /// gallery ingest: embed this item once and append it to the
+    /// gallery store.  An f32 patches tensor goes through the image
+    /// tower, an i32 token-id tensor through the text tower.  The
+    /// response is `[id, gallery_len]` as f32 (ids are exact below
+    /// 2^24).
+    GalleryIngest(PooledTensor),
+    /// gallery query: embed the probe once, scan the store, and answer
+    /// the best `k` hits as an f32 tensor of shape `(hits, 2)` with
+    /// `[id, score]` rows (`hits = min(k, gallery_len)`)
+    GalleryQuery {
+        /// probe tensor — f32 patches (image tower) or i32 token ids
+        /// (text tower)
+        probe: PooledTensor,
+        /// number of hits requested
+        k: usize,
+    },
 }
 
 impl Payload {
@@ -69,6 +89,9 @@ impl Payload {
             Payload::Vision(t) => Some(t.tensor()),
             Payload::Joint { vision, .. } => Some(vision.tensor()),
             Payload::Text(_) => None,
+            // gallery payloads route by dtype inside the gallery
+            // worker, not through the joint splitter
+            Payload::GalleryIngest(_) | Payload::GalleryQuery { .. } => None,
         }
     }
 
@@ -83,6 +106,7 @@ impl Payload {
             Payload::Text(t) => Some(t.tensor()),
             Payload::Joint { text, .. } => Some(text.tensor()),
             Payload::Vision(_) => None,
+            Payload::GalleryIngest(_) | Payload::GalleryQuery { .. } => None,
         }
     }
 

@@ -19,6 +19,7 @@ use std::time::{Duration, Instant};
 use crate::config::{ServingConfig, TextConfig, ViTConfig};
 use crate::engine::{Engine, JointConfig, JointKind};
 use crate::error::{Error, Result};
+use crate::gallery::{GalleryOptions, GalleryStore};
 use crate::model::ParamStore;
 use crate::runtime::{load_flat_params, HostTensor, Registry};
 
@@ -42,12 +43,20 @@ pub struct CpuWorkloads {
     /// the ladder, the text tower stays uncompressed) served by
     /// `JointSession` workers
     pub joint: Vec<(String, JointKind, Vec<(String, f64)>)>,
+    /// embedding-gallery pools: (model, rungs) served by gallery workers
+    /// over a retrieval-kind `JointSession`.  Every rung of a model
+    /// shares one [`GalleryStore`], so an item ingested through any rung
+    /// is visible to queries on every rung.
+    pub gallery: Vec<(String, Vec<(String, f64)>)>,
 }
 
 /// The serving coordinator.
 pub struct Coordinator {
     router: Router,
     pool: Arc<TensorPool>,
+    /// per-gallery-model shared embedding stores (empty unless
+    /// [`CpuWorkloads::gallery`] booted a gallery pool)
+    galleries: Vec<(String, Arc<GalleryStore>)>,
     /// serving config used for all workers
     pub cfg: ServingConfig,
 }
@@ -81,7 +90,12 @@ impl Coordinator {
                 });
             }
         }
-        Ok(Coordinator { router, pool: Arc::new(TensorPool::new()), cfg })
+        Ok(Coordinator {
+            router,
+            pool: Arc::new(TensorPool::new()),
+            galleries: Vec::new(),
+            cfg,
+        })
     }
 
     /// Boot a vision-only CPU coordinator (back-compat shorthand for
@@ -169,7 +183,45 @@ impl Coordinator {
                 });
             }
         }
-        Ok(Coordinator { router, pool, cfg })
+        let mut galleries = Vec::new();
+        for (model, rungs) in &workloads.gallery {
+            // one store per logical gallery model, shared by every rung:
+            // the embedding dim is the retrieval projection width, which
+            // the compression ladder does not change
+            let dim = JointConfig::retrieval(ViTConfig::default()).text.dim;
+            let store =
+                Arc::new(GalleryStore::new(dim, GalleryOptions::default()));
+            galleries.push((model.clone(), store.clone()));
+            for (mode, r) in rungs {
+                let vision = ViTConfig {
+                    merge_mode: mode.clone(),
+                    merge_r: *r,
+                    ..Default::default()
+                };
+                let model_cfg = JointConfig::retrieval(vision);
+                let worker = VariantWorker::spawn_cpu_gallery(
+                    engine.clone(), model_cfg, store.clone(), pool.clone(),
+                    &cfg);
+                router.add_variant_for(Workload::Gallery, model, Variant {
+                    artifact: format!("gallery_{}_r{:.0}", mode, r * 1000.0),
+                    mode: mode.clone(),
+                    r: *r,
+                    worker,
+                });
+            }
+        }
+        Ok(Coordinator { router, pool, galleries, cfg })
+    }
+
+    /// The shared embedding store behind a gallery model's worker pool
+    /// (`None` when no gallery pool was booted under that name).  Exposed
+    /// for bulk raw-row ingest and snapshot management; serving-path
+    /// ingest goes through [`Payload::GalleryIngest`](super::request::Payload).
+    pub fn gallery_store(&self, model: &str) -> Option<&Arc<GalleryStore>> {
+        self.galleries
+            .iter()
+            .find(|(m, _)| m == model)
+            .map(|(_, s)| s)
     }
 
     /// The coordinator's shared tensor-recycling pool: clients check

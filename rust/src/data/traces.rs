@@ -26,9 +26,11 @@ pub enum TraceWorkload {
     Text,
     /// paired vision+text request (VQA / retrieval)
     Joint,
+    /// embedding-gallery query (probe embed + store scan)
+    Gallery,
 }
 
-/// Relative traffic weights across the three typed workloads.  Weights
+/// Relative traffic weights across the typed workloads.  Weights
 /// are normalized at sampling time; they need not sum to 1.
 #[derive(Clone, Copy, Debug)]
 pub struct WorkloadMix {
@@ -38,32 +40,38 @@ pub struct WorkloadMix {
     pub text: f64,
     /// relative weight of `TraceWorkload::Joint`
     pub joint: f64,
+    /// relative weight of `TraceWorkload::Gallery`
+    pub gallery: f64,
 }
 
 impl WorkloadMix {
     /// All traffic on the vision pool (the pre-multimodal default).
     pub fn vision_only() -> Self {
-        WorkloadMix { vision: 1.0, text: 0.0, joint: 0.0 }
+        WorkloadMix { vision: 1.0, text: 0.0, joint: 0.0, gallery: 0.0 }
     }
 
-    /// Equal weight across vision, text, and joint.
+    /// Equal weight across vision, text, and joint (no gallery traffic;
+    /// opt in by setting `gallery` explicitly).
     pub fn balanced() -> Self {
-        WorkloadMix { vision: 1.0, text: 1.0, joint: 1.0 }
+        WorkloadMix { vision: 1.0, text: 1.0, joint: 1.0, gallery: 0.0 }
     }
 
     /// Validate the mix and return the total weight.  Weights must be
     /// finite and non-negative, and at least one must be positive.
     pub fn validate(&self) -> Result<f64> {
-        for (name, w) in
-            [("vision", self.vision), ("text", self.text), ("joint", self.joint)]
-        {
+        for (name, w) in [
+            ("vision", self.vision),
+            ("text", self.text),
+            ("joint", self.joint),
+            ("gallery", self.gallery),
+        ] {
             if !w.is_finite() || w < 0.0 {
                 return Err(Error::Config(format!(
                     "workload mix weight `{name}` must be finite and >= 0, got {w}"
                 )));
             }
         }
-        let sum = self.vision + self.text + self.joint;
+        let sum = self.vision + self.text + self.joint + self.gallery;
         if sum <= 0.0 {
             return Err(Error::Config(
                 "workload mix has zero total weight".into(),
@@ -224,7 +232,12 @@ pub fn generate_trace(cfg: &TraceConfig) -> Result<Vec<TraceEvent>> {
                 TraceWorkload::Vision
             } else if draw < cfg.mix.vision + cfg.mix.text {
                 TraceWorkload::Text
+            } else if draw < cfg.mix.vision + cfg.mix.text + cfg.mix.joint {
+                TraceWorkload::Joint
+            } else if cfg.mix.gallery > 0.0 {
+                TraceWorkload::Gallery
             } else {
+                // fp rounding pushed the draw past every positive weight
                 TraceWorkload::Joint
             }
         };
@@ -274,7 +287,7 @@ mod tests {
         let mixes = [
             WorkloadMix::vision_only(),
             WorkloadMix::balanced(),
-            WorkloadMix { vision: 0.0, text: 2.0, joint: 1.0 },
+            WorkloadMix { vision: 0.0, text: 2.0, joint: 1.0, gallery: 0.5 },
         ];
         let count = 400usize;
         let rate = 500.0f64;
@@ -334,7 +347,12 @@ mod tests {
         let bad_diurnal = TraceConfig { diurnal: 1.5, ..Default::default() };
         assert!(generate_trace(&bad_diurnal).is_err());
         let bad_mix = TraceConfig {
-            mix: WorkloadMix { vision: 0.0, text: 0.0, joint: 0.0 },
+            mix: WorkloadMix {
+                vision: 0.0,
+                text: 0.0,
+                joint: 0.0,
+                gallery: 0.0,
+            },
             ..Default::default()
         };
         assert!(generate_trace(&bad_mix).is_err());
@@ -356,6 +374,30 @@ mod tests {
                 "balanced mix never produced {want:?}"
             );
         }
+        assert!(
+            tr.iter().all(|e| e.workload != TraceWorkload::Gallery),
+            "balanced mix carries no gallery weight"
+        );
+    }
+
+    #[test]
+    fn gallery_weight_produces_gallery_events() {
+        let cfg = TraceConfig {
+            count: 600,
+            mix: WorkloadMix { gallery: 1.0, ..WorkloadMix::balanced() },
+            ..Default::default()
+        };
+        let tr = generate_trace(&cfg).unwrap();
+        let n_gallery = tr
+            .iter()
+            .filter(|e| e.workload == TraceWorkload::Gallery)
+            .count();
+        // ~1/4 of 600 draws; a wide band keeps this deterministic-seed
+        // test robust to RNG-stream changes
+        assert!(
+            (60..=300).contains(&n_gallery),
+            "expected roughly a quarter gallery events, got {n_gallery}"
+        );
     }
 
     #[test]

@@ -464,11 +464,12 @@ impl JointSession {
     }
 
     /// Retrieval score of (image `i`, caption `j`): the dot product of
-    /// their normalized embeddings (cosine similarity).
+    /// their normalized embeddings (cosine similarity), computed with
+    /// the lane-split `tensor::dot` kernel so it is bitwise-identical
+    /// to the gallery scan (`gallery::scan_into`) scoring the same
+    /// embeddings.
     pub fn score(&self, i: usize, j: usize) -> f32 {
-        let a = self.image_embed(i);
-        let b = self.text_embed(j);
-        a.iter().zip(b).map(|(x, y)| x * y).sum()
+        crate::tensor::dot(self.image_embed(i), self.text_embed(j))
     }
 
     /// One-pair VQA convenience under the serial shared-RNG contract:

@@ -1,19 +1,26 @@
 //! Image-text retrieval experiments (Figure 3 / Tables 2-3): recall vs
 //! FLOPs on synthetic caption pairs with the CPU reference CLIP.
 //!
-//! The sweep drives one engine [`JointSession`] per configuration
-//! (retrieval kind: both towers project into the shared embedding space
-//! through pooled buffers).  The legacy single-sample helpers remain as
-//! `#[deprecated]` references; the session path is bitwise-identical to
-//! them (`tests/prop_engine.rs`).
+//! The sweep drives one engine [`JointSession`](crate::engine::JointSession)
+//! per configuration to embed every (image, caption) pair **once**, then
+//! computes recall through the embedding-gallery scan kernel
+//! ([`crate::gallery::scan_into`]): each direction ingests one side into
+//! a [`GalleryStore`] and ranks the other side's probes by blocked
+//! lane-split dot products — the embed-once/score-many shape the gallery
+//! serving path uses.  The historical per-pair scoring loop remains as
+//! the `#[deprecated]` reference [`eval_config_pairwise`]; the gallery
+//! path reproduces its recall numbers exactly (same dot kernel, same
+//! tie order — asserted by this module's tests).
 
 use crate::config::ViTConfig;
 use crate::data::{caption_for, patchify, shape_item, Rng, TEST_SEED};
 use crate::engine::{Engine, JointConfig};
 use crate::error::Result;
+use crate::gallery::{scan_into, GalleryOptions, GalleryScratch,
+                     GalleryStore, Hit, ScanMode};
 use crate::model::flops;
 use crate::model::text::l2_normalize;
-use crate::tensor::{dense, matmul_nt, Mat};
+use crate::tensor::{dense, dot, Mat};
 
 use super::recall_at_k;
 
@@ -48,9 +55,12 @@ pub struct RetrievalRow {
     pub gflops: f64,
 }
 
-/// Evaluate one merge config over `n` test pairs.
-pub fn eval_config(engine: &Engine, mode: &str, r: f64, n: usize)
-                   -> Result<RetrievalRow> {
+/// Embed `n` (image, caption) test pairs once through a joint retrieval
+/// session, returning the vision config and the two embedding matrices.
+/// The serial shared-RNG contract matches the historical per-sample
+/// `clip_image_embed` + `clip_text_embed` loop bitwise.
+fn embed_pairs(engine: &Engine, mode: &str, r: f64, n: usize)
+               -> Result<(ViTConfig, Mat, Mat)> {
     let vcfg = ViTConfig {
         merge_mode: mode.into(),
         merge_r: r,
@@ -61,10 +71,6 @@ pub fn eval_config(engine: &Engine, mode: &str, r: f64, n: usize)
     let embed_dim = 64usize;
     let mut img = Mat::zeros(n, embed_dim);
     let mut txt = Mat::zeros(n, embed_dim);
-    // one joint session for the whole config: pooled tower slots and
-    // projection buffers serve all `n` (image, caption) pairs; the
-    // serial shared-RNG contract matches the historical per-sample
-    // `clip_image_embed` + `clip_text_embed` loop bitwise
     let mut sess =
         engine.joint_session(&JointConfig::retrieval(vcfg.clone()))?;
     for i in 0..n {
@@ -75,7 +81,84 @@ pub fn eval_config(engine: &Engine, mode: &str, r: f64, n: usize)
         img.row_mut(i).copy_from_slice(ie);
         txt.row_mut(i).copy_from_slice(te);
     }
-    let sim = matmul_nt(&img, &txt);
+    Ok((vcfg, img, txt))
+}
+
+/// Recall@`ks` of `probes` against `items` through the gallery scan
+/// kernel: `items.row(i)` is the match for `probes.row(i)`.  Items
+/// ingest sequentially into a fresh [`GalleryStore`] (ids are then row
+/// indices), each probe scans for the top `max(ks)` hits, and a probe
+/// scores a hit at `@k` when its own row ranks inside the first `k`.
+/// The gallery ranking (score descending, ties by ascending id) is the
+/// order `crate::tensor::argsort_desc` produces, so the result is
+/// identical to full-sort recall over the pairwise similarity matrix.
+fn gallery_recall(probes: &Mat, items: &Mat, ks: &[usize])
+                  -> Result<Vec<f64>> {
+    let store = GalleryStore::new(items.cols, GalleryOptions::default());
+    for i in 0..items.rows {
+        store.ingest(items.row(i))?;
+    }
+    let kmax = ks.iter().copied().max().unwrap_or(1);
+    let mut scratch = GalleryScratch::new();
+    let mut hits: Vec<Hit> = Vec::new();
+    let mut recall = vec![0f64; ks.len()];
+    for i in 0..probes.rows {
+        scan_into(&store, probes.row(i), kmax, ScanMode::Dot, 1,
+                  &mut scratch, &mut hits)?;
+        let rank = hits
+            .iter()
+            .position(|h| h.id == i as u64)
+            .unwrap_or(usize::MAX);
+        for (qi, &k) in ks.iter().enumerate() {
+            if rank < k {
+                recall[qi] += 1.0;
+            }
+        }
+    }
+    for v in recall.iter_mut() {
+        *v = *v * 100.0 / probes.rows.max(1) as f64;
+    }
+    Ok(recall)
+}
+
+/// Evaluate one merge config over `n` test pairs: embed every pair once,
+/// then compute both retrieval directions through the gallery scan
+/// kernel (text retrieval probes with image embeddings over a caption
+/// gallery; image retrieval the reverse).
+pub fn eval_config(engine: &Engine, mode: &str, r: f64, n: usize)
+                   -> Result<RetrievalRow> {
+    let (vcfg, img, txt) = embed_pairs(engine, mode, r, n)?;
+    let ks = [1usize, 5, 10];
+    let rt = gallery_recall(&img, &txt, &ks)?;
+    let ri = gallery_recall(&txt, &img, &ks)?;
+    let rsum = rt.iter().sum::<f64>() + ri.iter().sum::<f64>();
+    Ok(RetrievalRow {
+        mode: mode.into(),
+        r,
+        rt1: rt[0],
+        ri1: ri[0],
+        rsum,
+        gflops: flops::vit_gflops(&vcfg),
+    })
+}
+
+/// Historical reference: score every (image, caption) pair individually
+/// into the full `n x n` similarity matrix and full-sort the ranks.
+/// Scoring uses the same lane-split [`dot`] as the gallery scan (and as
+/// [`JointSession::score`](crate::engine::JointSession::score)), so the
+/// gallery-backed [`eval_config`] reproduces these numbers exactly —
+/// kept solely as the parity oracle for that claim.
+#[deprecated(note = "use the gallery-backed `eval_config`; this per-pair \
+                     O(n^2) loop is its recall parity reference")]
+pub fn eval_config_pairwise(engine: &Engine, mode: &str, r: f64, n: usize)
+                            -> Result<RetrievalRow> {
+    let (vcfg, img, txt) = embed_pairs(engine, mode, r, n)?;
+    let mut sim = Mat::zeros(n, n);
+    for i in 0..n {
+        for j in 0..n {
+            sim.data[i * n + j] = dot(img.row(i), txt.row(j));
+        }
+    }
     let (rt, ri, rsum) = recall_at_k(&sim, &[1, 5, 10]);
     Ok(RetrievalRow {
         mode: mode.into(),
@@ -97,4 +180,28 @@ pub fn sweep(engine: &Engine, modes: &[&str], rs: &[f64], n: usize)
         }
     }
     Ok(rows)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::synthetic_mm_store;
+
+    /// The gallery-backed recall sweep must reproduce the per-pair
+    /// full-sort reference **exactly** (f64 equality, no tolerance):
+    /// identical dot kernel, identical tie order, top-k == full-sort
+    /// prefix.
+    #[test]
+    #[allow(deprecated)]
+    fn gallery_recall_matches_pairwise_reference_exactly() {
+        let engine = Engine::from_store(synthetic_mm_store(
+            &ViTConfig::default(), 7));
+        for (mode, r) in [("none", 1.0f64), ("pitome", 0.9)] {
+            let a = eval_config(&engine, mode, r, 24).unwrap();
+            let b = eval_config_pairwise(&engine, mode, r, 24).unwrap();
+            assert_eq!(a.rt1, b.rt1, "{mode}: rt1 diverged");
+            assert_eq!(a.ri1, b.ri1, "{mode}: ri1 diverged");
+            assert_eq!(a.rsum, b.rsum, "{mode}: rsum diverged");
+        }
+    }
 }

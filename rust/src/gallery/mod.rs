@@ -1,0 +1,25 @@
+//! Embedding gallery: embed once, score millions.
+//!
+//! The paper's CLIP retrieval result is an embed-heavy, score-light
+//! workload — the expensive merged-tower forward should be amortized
+//! across millions of cheap cosine scores, not re-run per pair.  This
+//! module is the serving-side answer: a persistent, shard-partitioned
+//! [`GalleryStore`] of fixed-dimension embeddings plus blocked
+//! matrix–vector scan kernels ([`scan_into`], [`scan_two_stage_into`])
+//! with bounded per-shard top-k selection ([`TopK`]) and a k-way
+//! shard merge.
+//!
+//! The coordinator wires this in as `Workload::Gallery`: ingest
+//! requests embed once through the `JointSession` towers and append
+//! to the store; query requests embed one probe and scan.  Everything
+//! on the query path writes into reusable scratch
+//! ([`GalleryScratch`]) and pooled response buffers, so a warmed
+//! query→top-k cycle allocates nothing (`tests/alloc_free.rs`).
+
+pub mod scan;
+pub mod store;
+pub mod topk;
+
+pub use scan::{scan_into, scan_two_stage_into, GalleryScratch, ScanMode, ScanStats};
+pub use store::{GalleryOptions, GalleryStore};
+pub use topk::{merge_shards_into, ranks_ahead, Hit, TopK};

@@ -1,0 +1,384 @@
+//! Persistent, shard-partitioned embedding store.
+//!
+//! A [`GalleryStore`] holds fixed-dimension f32 embedding rows in
+//! append-only segments, partitioned across independently locked
+//! shards so ingest (a shard write lock) never stalls queries on the
+//! other shards (shard read locks).  Each row's L2 norm is stored at
+//! ingest, and every segment maintains per-block coordinate sums so
+//! the two-stage scan can score coarse block centroids without
+//! touching the rows.  The store can snapshot itself to disk and load
+//! back for persistence across boots.
+//!
+//! Row ids are `local_index * n_shards + shard`: single-threaded
+//! ingest into an empty store assigns ids equal to the insertion
+//! order (the round-robin cursor and the id layout agree), which the
+//! retrieval eval relies on for parity with the dense reference.
+
+use std::io::{Read as _, Write as _};
+use std::path::Path;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::RwLock;
+
+use crate::error::{Error, Result};
+
+/// Magic prefix of the snapshot file format.
+const SNAP_MAGIC: &[u8; 4] = b"PGAL";
+/// Snapshot format version.
+const SNAP_VERSION: u32 = 1;
+
+/// Tuning knobs for [`GalleryStore`].
+#[derive(Clone, Copy, Debug)]
+pub struct GalleryOptions {
+    /// Number of independently locked shards.
+    pub shards: usize,
+    /// Rows per append-only segment (segment capacity).
+    pub seg_rows: usize,
+    /// Rows per coarse block (two-stage search granularity).
+    pub block_rows: usize,
+}
+
+impl Default for GalleryOptions {
+    fn default() -> Self {
+        GalleryOptions { shards: 8, seg_rows: 4096, block_rows: 256 }
+    }
+}
+
+/// One append-only run of rows inside a shard.
+pub(crate) struct Segment {
+    /// Row-major embeddings, `rows * dim` values.
+    pub(crate) data: Vec<f32>,
+    /// Per-row L2 norms, stored at ingest.
+    pub(crate) norms: Vec<f32>,
+    /// Per-block coordinate sums (`n_blocks * dim`), maintained on
+    /// append; block centroids are `sum / rows_in_block`.
+    pub(crate) block_sums: Vec<f32>,
+    /// Rows currently in the segment.
+    pub(crate) rows: usize,
+}
+
+/// One lock domain: a list of segments plus its row count.
+pub(crate) struct Shard {
+    /// Append-only segments, oldest first.
+    pub(crate) segs: Vec<Segment>,
+    /// Total rows across segments.
+    pub(crate) rows: usize,
+}
+
+impl Shard {
+    /// Append one row, opening a new segment when the last is full
+    /// and folding the row into its block's coordinate sums.
+    // lint: allow(alloc) reason=cold ingest path: append-only segment growth, never on the query path
+    fn append(&mut self, emb: &[f32], dim: usize, opts: &GalleryOptions) {
+        let need_new = self.segs.last().map_or(true, |s| s.rows == opts.seg_rows);
+        if need_new {
+            self.segs.push(Segment {
+                data: Vec::with_capacity(opts.seg_rows * dim),
+                norms: Vec::with_capacity(opts.seg_rows),
+                block_sums: Vec::new(),
+                rows: 0,
+            });
+        }
+        let seg = self.segs.last_mut().expect("segment just ensured");
+        let b = seg.rows / opts.block_rows;
+        if (b + 1) * dim > seg.block_sums.len() {
+            seg.block_sums.resize((b + 1) * dim, 0.0);
+        }
+        let sums = &mut seg.block_sums[b * dim..(b + 1) * dim];
+        let mut norm2 = 0.0f32;
+        for (s, &x) in sums.iter_mut().zip(emb) {
+            *s += x;
+            norm2 += x * x;
+        }
+        seg.data.extend_from_slice(emb);
+        seg.norms.push(norm2.sqrt());
+        seg.rows += 1;
+        self.rows += 1;
+    }
+}
+
+/// Sharded, append-only embedding gallery.  See the module docs for
+/// the locking and id-assignment contracts.
+pub struct GalleryStore {
+    dim: usize,
+    opts: GalleryOptions,
+    shards: Vec<RwLock<Shard>>,
+    /// Round-robin ingest cursor (reserves shard slots, not ids).
+    rr: AtomicUsize,
+}
+
+impl GalleryStore {
+    /// Empty store for `dim`-dimensional embeddings.  Degenerate
+    /// options are clamped to 1 so the store is always usable.
+    // lint: allow(alloc) reason=cold constructor: empty shard table built once per gallery
+    pub fn new(dim: usize, opts: GalleryOptions) -> Self {
+        let opts = GalleryOptions {
+            shards: opts.shards.max(1),
+            seg_rows: opts.seg_rows.max(1),
+            block_rows: opts.block_rows.max(1),
+        };
+        let shards = (0..opts.shards)
+            .map(|_| RwLock::new(Shard { segs: Vec::new(), rows: 0 }))
+            .collect();
+        GalleryStore { dim, opts, shards, rr: AtomicUsize::new(0) }
+    }
+
+    /// Empty store with default [`GalleryOptions`].
+    pub fn with_dim(dim: usize) -> Self {
+        Self::new(dim, GalleryOptions::default())
+    }
+
+    /// Embedding dimension.
+    pub fn dim(&self) -> usize {
+        self.dim
+    }
+
+    /// Number of shards.
+    pub fn n_shards(&self) -> usize {
+        self.shards.len()
+    }
+
+    /// The (clamped) options the store was built with.
+    pub fn options(&self) -> GalleryOptions {
+        self.opts
+    }
+
+    /// Total rows across all shards (takes each shard's read lock).
+    pub fn len(&self) -> usize {
+        self.shards
+            .iter()
+            .map(|s| s.read().expect("gallery shard lock poisoned").rows)
+            .sum()
+    }
+
+    /// `true` when no rows have been ingested.
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Shard lock for the scan kernels.
+    pub(crate) fn shard(&self, s: usize) -> &RwLock<Shard> {
+        &self.shards[s]
+    }
+
+    /// Ingest one embedding row; returns its stable id.  Takes a
+    /// single shard write lock, so queries on other shards proceed
+    /// concurrently.
+    pub fn ingest(&self, emb: &[f32]) -> Result<u64> {
+        if emb.len() != self.dim {
+            return Err(Error::Shape("gallery ingest row has wrong dimension".into()));
+        }
+        let ns = self.shards.len();
+        let s = self.rr.fetch_add(1, Ordering::Relaxed) % ns;
+        let mut shard = self.shards[s].write().expect("gallery shard lock poisoned");
+        let local = shard.rows;
+        shard.append(emb, self.dim, &self.opts);
+        Ok((local * ns + s) as u64)
+    }
+
+    /// Bulk-ingest `rows.len() / dim` rows, locking each shard once.
+    /// Rows are distributed round-robin exactly as repeated
+    /// [`GalleryStore::ingest`] calls would; returns the row count.
+    pub fn ingest_bulk(&self, rows: &[f32]) -> Result<usize> {
+        if self.dim == 0 || rows.len() % self.dim != 0 {
+            return Err(Error::Shape("gallery bulk ingest not a multiple of dim".into()));
+        }
+        let n = rows.len() / self.dim;
+        let ns = self.shards.len();
+        let start = self.rr.fetch_add(n, Ordering::Relaxed);
+        for off in 0..ns.min(n) {
+            let s = (start + off) % ns;
+            let mut shard = self.shards[s].write().expect("gallery shard lock poisoned");
+            let mut i = off;
+            while i < n {
+                shard.append(&rows[i * self.dim..(i + 1) * self.dim], self.dim, &self.opts);
+                i += ns;
+            }
+        }
+        Ok(n)
+    }
+
+    /// Visit every row as `(id, row, stored_norm)` under shard read
+    /// locks — for tests and benches building reference results.
+    pub fn for_each_row(&self, mut f: impl FnMut(u64, &[f32], f32)) {
+        let ns = self.shards.len();
+        for (s, lock) in self.shards.iter().enumerate() {
+            let shard = lock.read().expect("gallery shard lock poisoned");
+            let mut local = 0usize;
+            for seg in &shard.segs {
+                for r in 0..seg.rows {
+                    let row = &seg.data[r * self.dim..(r + 1) * self.dim];
+                    f(((local + r) * ns + s) as u64, row, seg.norms[r]);
+                }
+                local += seg.rows;
+            }
+        }
+    }
+
+    /// Write the gallery to `path` (magic + version + dim + shard
+    /// layout + per-shard rows).  Cold persistence path.
+    // lint: allow(alloc) reason=cold persistence path: one write buffer per snapshot
+    pub fn snapshot_to(&self, path: &Path) -> Result<()> {
+        let mut buf: Vec<u8> = Vec::new();
+        buf.extend_from_slice(SNAP_MAGIC);
+        buf.extend_from_slice(&SNAP_VERSION.to_le_bytes());
+        buf.extend_from_slice(&(self.dim as u64).to_le_bytes());
+        buf.extend_from_slice(&(self.shards.len() as u64).to_le_bytes());
+        for lock in &self.shards {
+            let shard = lock.read().expect("gallery shard lock poisoned");
+            buf.extend_from_slice(&(shard.rows as u64).to_le_bytes());
+            for seg in &shard.segs {
+                for x in &seg.data[..seg.rows * self.dim] {
+                    buf.extend_from_slice(&x.to_le_bytes());
+                }
+            }
+        }
+        let mut f = std::fs::File::create(path)?;
+        f.write_all(&buf)?;
+        Ok(())
+    }
+
+    /// Load a snapshot written by [`GalleryStore::snapshot_to`].  The
+    /// shard count comes from the file; `opts.seg_rows`/`block_rows`
+    /// shape the rebuilt segments (norms and block sums are
+    /// recomputed on append).
+    // lint: allow(alloc) reason=cold persistence path: one read buffer per load
+    pub fn load(path: &Path, opts: GalleryOptions) -> Result<Self> {
+        let mut bytes: Vec<u8> = Vec::new();
+        std::fs::File::open(path)?.read_to_end(&mut bytes)?;
+        let mut off = 0usize;
+        fn take<'a>(bytes: &'a [u8], off: &mut usize, n: usize) -> Result<&'a [u8]> {
+            if *off + n > bytes.len() {
+                return Err(Error::Io(std::io::Error::new(
+                    std::io::ErrorKind::UnexpectedEof,
+                    "gallery snapshot truncated",
+                )));
+            }
+            let s = &bytes[*off..*off + n];
+            *off += n;
+            Ok(s)
+        }
+        if take(&bytes, &mut off, 4)? != SNAP_MAGIC {
+            return Err(Error::Config("not a gallery snapshot (bad magic)".into()));
+        }
+        let ver = u32::from_le_bytes(take(&bytes, &mut off, 4)?.try_into().expect("4 bytes"));
+        if ver != SNAP_VERSION {
+            return Err(Error::Config("unsupported gallery snapshot version".into()));
+        }
+        let dim = u64::from_le_bytes(take(&bytes, &mut off, 8)?.try_into().expect("8 bytes")) as usize;
+        let ns = u64::from_le_bytes(take(&bytes, &mut off, 8)?.try_into().expect("8 bytes")) as usize;
+        if dim == 0 || ns == 0 {
+            return Err(Error::Config("gallery snapshot has empty layout".into()));
+        }
+        let store = Self::new(dim, GalleryOptions { shards: ns, ..opts });
+        let mut total = 0usize;
+        let mut row = vec![0.0f32; dim];
+        for lock in &store.shards {
+            let rows = u64::from_le_bytes(take(&bytes, &mut off, 8)?.try_into().expect("8 bytes")) as usize;
+            let mut shard = lock.write().expect("gallery shard lock poisoned");
+            for _ in 0..rows {
+                let raw = take(&bytes, &mut off, dim * 4)?;
+                for (d, chunk) in row.iter_mut().zip(raw.chunks_exact(4)) {
+                    *d = f32::from_le_bytes(chunk.try_into().expect("4 bytes"));
+                }
+                shard.append(&row, dim, &store.opts);
+            }
+            total += rows;
+        }
+        store.rr.store(total, Ordering::Relaxed);
+        Ok(store)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::rng::Rng;
+
+    fn random_rows(rng: &mut Rng, n: usize, dim: usize) -> Vec<f32> {
+        (0..n * dim).map(|_| rng.next_f64() as f32 - 0.5).collect()
+    }
+
+    #[test]
+    fn sequential_ingest_assigns_ids_in_insertion_order() {
+        let store = GalleryStore::new(4, GalleryOptions { shards: 3, ..Default::default() });
+        for i in 0..20u64 {
+            let id = store.ingest(&[i as f32; 4]).expect("ingest");
+            assert_eq!(id, i);
+        }
+        assert_eq!(store.len(), 20);
+        let mut seen = vec![false; 20];
+        store.for_each_row(|id, row, _| {
+            assert_eq!(row[0] as u64, id);
+            seen[id as usize] = true;
+        });
+        assert!(seen.iter().all(|&b| b));
+    }
+
+    #[test]
+    fn bulk_ingest_matches_repeated_single_ingest() {
+        let mut rng = Rng::new(0xB0_17);
+        let rows = random_rows(&mut rng, 37, 8);
+        let opts = GalleryOptions { shards: 4, seg_rows: 8, block_rows: 4 };
+        let a = GalleryStore::new(8, opts);
+        let b = GalleryStore::new(8, opts);
+        for r in rows.chunks(8) {
+            a.ingest(r).expect("ingest");
+        }
+        assert_eq!(b.ingest_bulk(&rows).expect("bulk"), 37);
+        let mut rows_a: Vec<(u64, Vec<f32>, f32)> = Vec::new();
+        a.for_each_row(|id, row, n| rows_a.push((id, row.to_vec(), n)));
+        let mut i = 0;
+        b.for_each_row(|id, row, n| {
+            assert_eq!((id, row, n), (rows_a[i].0, &rows_a[i].1[..], rows_a[i].2));
+            i += 1;
+        });
+        assert_eq!(i, 37);
+    }
+
+    #[test]
+    fn stored_norms_match_row_l2() {
+        let store = GalleryStore::new(3, GalleryOptions { shards: 2, ..Default::default() });
+        store.ingest(&[3.0, 4.0, 0.0]).expect("ingest");
+        store.for_each_row(|_, _, n| assert!((n - 5.0).abs() < 1e-6));
+    }
+
+    #[test]
+    fn block_sums_track_appended_rows() {
+        let opts = GalleryOptions { shards: 1, seg_rows: 8, block_rows: 2 };
+        let store = GalleryStore::new(2, opts);
+        for i in 0..5 {
+            store.ingest(&[i as f32, 1.0]).expect("ingest");
+        }
+        let shard = store.shard(0).read().expect("lock");
+        let seg = &shard.segs[0];
+        // blocks: [0,1] [2,3] [4]
+        assert_eq!(seg.block_sums.len(), 6);
+        assert_eq!(&seg.block_sums[0..2], &[1.0, 2.0]);
+        assert_eq!(&seg.block_sums[2..4], &[5.0, 2.0]);
+        assert_eq!(&seg.block_sums[4..6], &[4.0, 1.0]);
+    }
+
+    #[test]
+    fn snapshot_roundtrip_preserves_rows_ids_and_norms() {
+        let mut rng = Rng::new(0x51A9);
+        let opts = GalleryOptions { shards: 3, seg_rows: 16, block_rows: 4 };
+        let store = GalleryStore::new(6, opts);
+        store.ingest_bulk(&random_rows(&mut rng, 41, 6)).expect("bulk");
+        let path = std::env::temp_dir().join("pitome_gallery_snap_test.bin");
+        store.snapshot_to(&path).expect("snapshot");
+        let loaded = GalleryStore::load(&path, opts).expect("load");
+        std::fs::remove_file(&path).ok();
+        assert_eq!(loaded.len(), 41);
+        assert_eq!(loaded.n_shards(), 3);
+        let mut orig: Vec<(u64, Vec<f32>, f32)> = Vec::new();
+        store.for_each_row(|id, row, n| orig.push((id, row.to_vec(), n)));
+        let mut i = 0;
+        loaded.for_each_row(|id, row, n| {
+            assert_eq!((id, row, n), (orig[i].0, &orig[i].1[..], orig[i].2));
+            i += 1;
+        });
+        // ingest after load continues the id sequence
+        let next = loaded.ingest(&[0.0; 6]).expect("ingest");
+        assert_eq!(next, 41);
+    }
+}

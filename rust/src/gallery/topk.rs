@@ -1,0 +1,311 @@
+//! Bounded top-k selection and k-way shard merge for gallery scans.
+//!
+//! [`TopK`] is a fixed-bound min-heap ordered so the *worst* retained
+//! hit sits at the root; offering a better candidate replaces the root
+//! in O(log k) without allocating once the spine is warm.  Ranking
+//! matches `tensor::argsort_desc`: higher score first, ties broken by
+//! smaller id, so gallery results are directly comparable to the dense
+//! argsort reference used by `eval::recall_at_k`.
+//! [`merge_shards_into`] consumes per-shard selections through a
+//! cursor-based k-way merge into a caller-owned output buffer.
+
+/// One scored gallery row.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct Hit {
+    /// Stable row id assigned at ingest.
+    pub id: u64,
+    /// Similarity score (dot or cosine, per the scan mode).
+    pub score: f32,
+}
+
+/// `true` when `a` ranks strictly ahead of `b`: higher score first,
+/// ties broken by smaller id (the `argsort_desc` contract).  NaN
+/// scores rank behind every finite score; two NaNs fall back to id
+/// order, so the relation stays a strict weak ordering.
+#[inline]
+pub fn ranks_ahead(a: Hit, b: Hit) -> bool {
+    if a.score > b.score {
+        return true;
+    }
+    if a.score < b.score {
+        return false;
+    }
+    if a.score == b.score {
+        return a.id < b.id;
+    }
+    // at least one NaN: non-NaN ranks ahead, NaN-vs-NaN by id
+    match (a.score.is_nan(), b.score.is_nan()) {
+        (false, true) => true,
+        (true, false) => false,
+        _ => a.id < b.id,
+    }
+}
+
+/// Best-first ordering for sorts: the [`ranks_ahead`] relation as a
+/// total order.
+#[inline]
+fn best_first(a: &Hit, b: &Hit) -> std::cmp::Ordering {
+    if ranks_ahead(*a, *b) {
+        std::cmp::Ordering::Less
+    } else if ranks_ahead(*b, *a) {
+        std::cmp::Ordering::Greater
+    } else {
+        std::cmp::Ordering::Equal
+    }
+}
+
+/// Bounded min-heap of the best `k` hits seen so far.
+pub struct TopK {
+    k: usize,
+    heap: Vec<Hit>,
+    offered: u64,
+    evictions: u64,
+}
+
+impl TopK {
+    /// Empty selector; call [`TopK::reset`] with the query's `k`
+    /// before offering candidates.
+    // lint: allow(alloc) reason=cold constructor: empty heap spine, warmed by the first query
+    pub fn new() -> Self {
+        TopK { k: 0, heap: Vec::new(), offered: 0, evictions: 0 }
+    }
+
+    /// Clear retained hits and set the bound for the next scan.  The
+    /// heap spine is kept, so a warmed selector does not allocate.
+    pub fn reset(&mut self, k: usize) {
+        self.k = k;
+        self.heap.clear();
+        self.offered = 0;
+        self.evictions = 0;
+        if self.heap.capacity() < k {
+            self.heap.reserve_exact(k);
+        }
+    }
+
+    /// Number of retained hits (≤ k).
+    pub fn len(&self) -> usize {
+        self.heap.len()
+    }
+
+    /// `true` when nothing has been retained.
+    pub fn is_empty(&self) -> bool {
+        self.heap.is_empty()
+    }
+
+    /// Candidates offered since the last [`TopK::reset`].
+    pub fn offered(&self) -> u64 {
+        self.offered
+    }
+
+    /// Root replacements since the last [`TopK::reset`] — a full heap
+    /// discarding its worst member for a better candidate.
+    pub fn evictions(&self) -> u64 {
+        self.evictions
+    }
+
+    /// Offer one candidate; O(log k) and allocation-free once warm.
+    #[inline]
+    pub fn offer(&mut self, id: u64, score: f32) {
+        self.offered += 1;
+        if self.k == 0 {
+            return;
+        }
+        let h = Hit { id, score };
+        if self.heap.len() < self.k {
+            self.heap.push(h);
+            self.sift_up(self.heap.len() - 1);
+        } else if ranks_ahead(h, self.heap[0]) {
+            self.evictions += 1;
+            self.heap[0] = h;
+            self.sift_down(0);
+        }
+    }
+
+    /// Restore the heap property upward from leaf `i` (the root must
+    /// stay the worst-ranked retained hit).
+    fn sift_up(&mut self, mut i: usize) {
+        while i > 0 {
+            let p = (i - 1) / 2;
+            if ranks_ahead(self.heap[p], self.heap[i]) {
+                self.heap.swap(p, i);
+                i = p;
+            } else {
+                break;
+            }
+        }
+    }
+
+    /// Restore the heap property downward from the root after a
+    /// replacement.
+    fn sift_down(&mut self, mut i: usize) {
+        let n = self.heap.len();
+        loop {
+            let l = 2 * i + 1;
+            if l >= n {
+                break;
+            }
+            let r = l + 1;
+            let mut worst = l;
+            if r < n && ranks_ahead(self.heap[l], self.heap[r]) {
+                worst = r;
+            }
+            if ranks_ahead(self.heap[i], self.heap[worst]) {
+                self.heap.swap(i, worst);
+                i = worst;
+            } else {
+                break;
+            }
+        }
+    }
+}
+
+impl Default for TopK {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+/// Cursor-based k-way merge of per-shard selections into `out`,
+/// best-first, bounded by `k`.  Each shard's retained hits are sorted
+/// in place (consuming the heap order — [`TopK::reset`] before
+/// reusing a selector) and then drained through per-shard cursors
+/// held in `cursors`.  Allocation-free once the scratch buffers are
+/// warm.
+pub fn merge_shards_into(
+    shards: &mut [TopK],
+    cursors: &mut Vec<usize>,
+    k: usize,
+    out: &mut Vec<Hit>,
+) {
+    out.clear();
+    cursors.clear();
+    cursors.resize(shards.len(), 0);
+    for s in shards.iter_mut() {
+        s.heap.sort_unstable_by(best_first);
+    }
+    while out.len() < k {
+        let mut best: Option<usize> = None;
+        for (si, s) in shards.iter().enumerate() {
+            let c = cursors[si];
+            if c >= s.heap.len() {
+                continue;
+            }
+            best = match best {
+                Some(bi) if !ranks_ahead(s.heap[c], shards[bi].heap[cursors[bi]]) => Some(bi),
+                _ => Some(si),
+            };
+        }
+        match best {
+            Some(si) => {
+                out.push(shards[si].heap[cursors[si]]);
+                cursors[si] += 1;
+            }
+            None => break,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::rng::Rng;
+
+    fn drain_sorted(t: &mut TopK, k: usize) -> Vec<Hit> {
+        let mut cursors = Vec::new();
+        let mut out = Vec::new();
+        merge_shards_into(std::slice::from_mut(t), &mut cursors, k, &mut out);
+        out
+    }
+
+    #[test]
+    fn empty_selector_merges_to_nothing() {
+        let mut t = TopK::new();
+        t.reset(5);
+        assert!(t.is_empty());
+        assert!(drain_sorted(&mut t, 5).is_empty());
+    }
+
+    #[test]
+    fn k_larger_than_candidates_returns_all_sorted() {
+        let mut t = TopK::new();
+        t.reset(10);
+        t.offer(0, 0.25);
+        t.offer(1, 0.75);
+        t.offer(2, 0.5);
+        let out = drain_sorted(&mut t, 10);
+        assert_eq!(out.len(), 3);
+        assert_eq!(out[0], Hit { id: 1, score: 0.75 });
+        assert_eq!(out[1], Hit { id: 2, score: 0.5 });
+        assert_eq!(out[2], Hit { id: 0, score: 0.25 });
+    }
+
+    #[test]
+    fn ties_rank_by_smaller_id_like_argsort_desc() {
+        let mut t = TopK::new();
+        t.reset(2);
+        t.offer(7, 1.0);
+        t.offer(3, 1.0);
+        t.offer(5, 1.0);
+        let out = drain_sorted(&mut t, 2);
+        assert_eq!(out.iter().map(|h| h.id).collect::<Vec<_>>(), vec![3, 5]);
+    }
+
+    #[test]
+    fn evictions_count_root_replacements() {
+        let mut t = TopK::new();
+        t.reset(1);
+        t.offer(0, 0.1);
+        t.offer(1, 0.2); // replaces
+        t.offer(2, 0.05); // rejected
+        t.offer(3, 0.3); // replaces
+        assert_eq!(t.evictions(), 2);
+        assert_eq!(t.offered(), 4);
+        assert_eq!(drain_sorted(&mut t, 1)[0].id, 3);
+    }
+
+    /// Property: distributing the same candidate stream across 1, 3 or
+    /// 7 shard selectors and k-way merging yields exactly the result
+    /// of one full sort (shard boundaries must be invisible).
+    #[test]
+    fn shard_split_is_invisible_to_the_merge() {
+        let mut rng = Rng::new(0x70_9c);
+        for &k in &[1usize, 4, 16, 100] {
+            let n = 257;
+            let cand: Vec<Hit> = (0..n)
+                .map(|i| Hit {
+                    id: i as u64,
+                    // quantized scores force plenty of ties
+                    score: ((rng.next_u64() % 17) as f32) / 16.0,
+                })
+                .collect();
+            let mut reference = cand.clone();
+            reference.sort_unstable_by(best_first);
+            reference.truncate(k);
+            for &nshards in &[1usize, 3, 7] {
+                let mut shards: Vec<TopK> = (0..nshards).map(|_| TopK::new()).collect();
+                for s in shards.iter_mut() {
+                    s.reset(k);
+                }
+                for (i, h) in cand.iter().enumerate() {
+                    shards[i % nshards].offer(h.id, h.score);
+                }
+                let mut cursors = Vec::new();
+                let mut out = Vec::new();
+                merge_shards_into(&mut shards, &mut cursors, k, &mut out);
+                assert_eq!(out, reference, "k={k} nshards={nshards}");
+            }
+        }
+    }
+
+    #[test]
+    fn nan_scores_rank_behind_everything() {
+        let mut t = TopK::new();
+        t.reset(2);
+        t.offer(0, f32::NAN);
+        t.offer(1, -1.0);
+        t.offer(2, 0.5);
+        let out = drain_sorted(&mut t, 2);
+        assert_eq!(out[0].id, 2);
+        assert_eq!(out[1].id, 1);
+    }
+}

@@ -23,6 +23,7 @@ pub mod data;
 pub mod engine;
 pub mod error;
 pub mod eval;
+pub mod gallery;
 pub mod graph;
 pub mod merge;
 pub mod model;

@@ -6,6 +6,7 @@
 //!   * `spectral` — Theorem-1 spectral-distance experiment.
 //!   * `serve`    — boot the coordinator and run a trace through it.
 //!   * `loadtest` — closed-loop load harness against the typed router.
+//!   * `gallery`  — embed-once/score-millions gallery serving demo.
 //!
 //! Flags: `--artifacts DIR`, per-subcommand flags below.
 
@@ -33,6 +34,9 @@ pitome <command> [flags]
   loadtest --requests N --rate R    load harness (shed/deadline aware)
     [--burst B] [--diurnal D] [--deadline-ms MS] [--users U --think-ms MS]
     [--queue CAP] [--scale S] [--mix-vision W --mix-text W --mix-joint W]
+    [--mix-gallery W --gallery-prefill N]
+  gallery --items N --queries Q     sharded embedding-gallery demo
+    [--users U] [--rate R] [--seed S]
 global: --artifacts DIR (default ./artifacts)";
 
 fn main() -> anyhow::Result<()> {
@@ -57,6 +61,7 @@ fn main() -> anyhow::Result<()> {
             args.get_parse("rate", 300.0),
         ),
         Some("loadtest") => loadtest(&args),
+        Some("gallery") => gallery(&args),
         _ => {
             println!("{USAGE}");
             Ok(())
@@ -152,6 +157,7 @@ fn serve(dir: &PathBuf, requests: usize, rate: f64) -> anyhow::Result<()> {
                                     vec![("none".to_string(), 1.0)])],
                         joint: vec![("vqa".to_string(), JointKind::Vqa,
                                      vec![("pitome".to_string(), 0.9)])],
+                        ..Default::default()
                     };
                     Arc::new(Coordinator::boot_cpu_workloads(&ps, &workloads,
                                                              cfg)
@@ -230,6 +236,7 @@ fn serve(dir: &PathBuf, requests: usize, rate: f64) -> anyhow::Result<()> {
 /// `--users > 0` switches from open-loop pacing to a closed loop.
 fn loadtest(args: &pitome::util::Args) -> anyhow::Result<()> {
     let users: usize = args.get_parse("users", 0usize);
+    let mix_gallery: f64 = args.get_parse("mix-gallery", 0.0);
     let trace = TraceConfig {
         rate: args.get_parse("rate", 300.0),
         count: args.get_parse("requests", 256usize),
@@ -240,6 +247,7 @@ fn loadtest(args: &pitome::util::Args) -> anyhow::Result<()> {
             vision: args.get_parse("mix-vision", 1.0),
             text: args.get_parse("mix-text", 1.0),
             joint: args.get_parse("mix-joint", 1.0),
+            gallery: mix_gallery,
         },
         deadline_us: args.get_parse("deadline-ms", 0u64) * 1000,
         arrival: if users > 0 {
@@ -265,6 +273,11 @@ fn loadtest(args: &pitome::util::Args) -> anyhow::Result<()> {
         text: vec![("bert".to_string(), vec![("none".to_string(), 1.0)])],
         joint: vec![("vqa".to_string(), JointKind::Vqa,
                      vec![("pitome".to_string(), 0.9)])],
+        gallery: if mix_gallery > 0.0 {
+            vec![("gal".to_string(), vec![("pitome".to_string(), 0.9)])]
+        } else {
+            Vec::new()
+        },
     };
     let scfg = ServingConfig {
         workers: pitome::merge::batch::recommended_workers(),
@@ -276,10 +289,120 @@ fn loadtest(args: &pitome::util::Args) -> anyhow::Result<()> {
     let opts = LoadOptions {
         trace,
         time_scale: args.get_parse("scale", 1.0),
+        gallery_prefill: args.get_parse(
+            "gallery-prefill",
+            if mix_gallery > 0.0 { 256usize } else { 0 }),
         ..Default::default()
     };
     let report = run_load(&coord, &opts)
         .map_err(|e| anyhow::anyhow!("{e}"))?;
     report.print();
+    Ok(())
+}
+
+/// `pitome gallery` — the embed-once/score-millions serving demo.  Boots
+/// a gallery pool over synthetic multimodal weights, bulk-ingests
+/// `--items` seeded embedding rows straight into the sharded store (the
+/// offline-indexing path), pushes a few end-to-end
+/// [`Payload::GalleryIngest`] requests through the coordinator (the
+/// embed-once path), then replays `--queries` closed-loop gallery
+/// queries and prints the scan accounting.
+fn gallery(args: &pitome::util::Args) -> anyhow::Result<()> {
+    let items: usize = args.get_parse("items", 1_000_000usize);
+    let queries: usize = args.get_parse("queries", 64usize);
+    println!("(gallery demo serves SYNTHETIC multimodal weights — \
+              deterministic, untrained)");
+    let ps = Arc::new(pitome::model::synthetic_mm_store(
+        &ViTConfig::default(), 7));
+    let workloads = CpuWorkloads {
+        gallery: vec![("gal".to_string(),
+                       vec![("pitome".to_string(), 0.9)])],
+        ..Default::default()
+    };
+    let scfg = ServingConfig {
+        workers: pitome::merge::batch::recommended_workers(),
+        ..Default::default()
+    };
+    let coord = Coordinator::boot_cpu_workloads(&ps, &workloads, scfg)
+        .map_err(|e| anyhow::anyhow!("{e}"))?;
+    let store = coord
+        .gallery_store("gal")
+        .ok_or_else(|| anyhow::anyhow!("gallery pool failed to boot"))?
+        .clone();
+
+    // offline indexing: seeded random rows in bounded chunks, straight
+    // into the shard segments (no tower forward pass)
+    let dim = store.dim();
+    let mut rng = pitome::data::Rng::new(args.get_parse("seed", 0x6A11u64));
+    const CHUNK: usize = 4096;
+    let mut buf = vec![0f32; CHUNK * dim];
+    let t0 = std::time::Instant::now();
+    let mut done = 0usize;
+    while done < items {
+        let n = CHUNK.min(items - done);
+        for v in buf[..n * dim].iter_mut() {
+            *v = rng.uniform(-1.0, 1.0) as f32;
+        }
+        store.ingest_bulk(&buf[..n * dim])
+            .map_err(|e| anyhow::anyhow!("{e}"))?;
+        done += n;
+    }
+    let dt = t0.elapsed().as_secs_f64();
+    println!("indexed {done} rows x {dim} dims ({:.0} MB) in {dt:.2}s \
+              ({:.0} rows/s) across {} shards",
+             (done * dim * 4) as f64 / 1e6, done as f64 / dt.max(1e-9),
+             store.n_shards());
+
+    // embed-once path: a few live ingests through the serving pipeline
+    let pool = coord.pool().clone();
+    let slot = coord.response_slot();
+    let mut last_len = store.len();
+    for i in 0..4u64 {
+        let item = shape_item(TEST_SEED, i);
+        let patches = patchify(&item.image, 4);
+        let mut t = pool.take_f32(patches.data.len());
+        t.fill_f32(&patches.data, &[patches.rows, patches.cols]);
+        coord.submit_pooled(Workload::Gallery, "gal", Qos::Accuracy,
+                            Payload::GalleryIngest(t), &slot)
+            .map_err(|e| anyhow::anyhow!("{e}"))?;
+        let resp = slot.recv().map_err(|e| anyhow::anyhow!("{e}"))?;
+        if let Some(HostTensor::F32(data, _)) =
+            resp.outputs.first().map(|t| t.tensor())
+        {
+            last_len = data.get(1).copied().unwrap_or(0.0) as usize;
+        }
+    }
+    println!("embed-once ingest: 4 live requests, gallery now holds \
+              {last_len} rows");
+
+    // score-millions path: closed-loop query replay through run_load
+    let opts = LoadOptions {
+        trace: TraceConfig {
+            rate: args.get_parse("rate", 200.0),
+            count: queries,
+            mix: WorkloadMix { vision: 0.0, text: 0.0, joint: 0.0,
+                               gallery: 1.0 },
+            arrival: ArrivalModel::Closed {
+                users: args.get_parse("users", 2usize),
+                think_time_us: 0,
+            },
+            seed: args.get_parse("seed", 0x6A11u64),
+            ..Default::default()
+        },
+        ..Default::default()
+    };
+    let report = run_load(&coord, &opts)
+        .map_err(|e| anyhow::anyhow!("{e}"))?;
+    report.print();
+    for (w, model, artifact, snap) in coord.metrics_typed() {
+        if snap.gallery_scanned_rows > 0 {
+            println!("  {}/{model}/{artifact}: scanned {} rows over {} \
+                      requests ({:.1} Mrows/s), {} heap evictions",
+                     w.name(), snap.gallery_scanned_rows, snap.count,
+                     snap.gallery_scanned_rows as f64
+                         / snap.gallery_scan_us.max(1) as f64,
+                     snap.gallery_evictions);
+        }
+    }
     Ok(())
 }

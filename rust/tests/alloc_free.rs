@@ -20,6 +20,12 @@
 //!   recycled response buffer, release-on-drop — must allocate **zero**
 //!   on the submitter thread and across the worker's whole batch cycle
 //!   (`Snapshot::last_cycle_allocs`).
+//! * A warmed **gallery** query — probe embed through the vision tower,
+//!   blocked top-k scan over the sharded embedding store, `[id, score]`
+//!   response rows — must likewise allocate zero on the submitter thread
+//!   and across the worker's whole batch cycle once the store and the
+//!   worker's scan scratch are warm (ingests may grow shard segments;
+//!   queries never do).
 //! * A warmed `iterative_coarsen_scratch` SD-sweep workspace must also
 //!   run allocation-free for every coarsening algorithm, and a warmed
 //!   [`EigScratch`] must evaluate the full SD(G, Gc) spectral distance —
@@ -318,6 +324,87 @@ fn warmed_joint_request_cycle_is_allocation_free_including_transport() {
                snap.last_cycle_allocs);
     assert!(snap.resp_recycled > 0,
             "steady-state responses must reuse recycled buffers");
+}
+
+#[test]
+fn warmed_gallery_query_cycle_is_allocation_free_including_transport() {
+    // the gallery tentpole acceptance: after ingests have grown the
+    // shard segments and warm-up queries have sized the worker's scan
+    // scratch (per-shard heaps, merge cursors, hit/flat buffers), a
+    // query→top-k→release cycle allocates ZERO on the submitter thread
+    // and across the worker's whole batch cycle, and takes no fresh
+    // pool buffers.
+    let ps = Arc::new(synthetic_mm_store(&ViTConfig::default(), 7));
+    let workloads = CpuWorkloads {
+        gallery: vec![("gal".to_string(),
+                       vec![("pitome".to_string(), 0.9)])],
+        ..Default::default()
+    };
+    let cfg = ServingConfig { workers: 1, ..Default::default() };
+    let coord =
+        Coordinator::boot_cpu_workloads(&ps, &workloads, cfg).unwrap();
+    let pool = coord.pool().clone();
+    let slot = coord.response_slot();
+    let item = pitome::data::shape_item(pitome::data::TEST_SEED, 0);
+    let patches = pitome::data::patchify(&item.image, 4);
+
+    // populate the store through the embed-once ingest path (segment
+    // growth is expected and allowed here)
+    for _ in 0..6 {
+        let mut t = pool.take_f32(patches.data.len());
+        t.fill_f32(&patches.data, &[patches.rows, patches.cols]);
+        coord.submit_pooled(Workload::Gallery, "gal", Qos::Accuracy,
+                            Payload::GalleryIngest(t), &slot)
+            .unwrap();
+        drop(slot.recv().unwrap());
+    }
+
+    let cycle = || {
+        let mut t = pool.take_f32(patches.data.len());
+        t.fill_f32(&patches.data, &[patches.rows, patches.cols]);
+        coord.submit_pooled(Workload::Gallery, "gal", Qos::Throughput,
+                            Payload::GalleryQuery { probe: t, k: 4 },
+                            &slot)
+            .unwrap();
+        let resp = slot.recv().unwrap();
+        // (hits, 2) rows of [id, score]; 6 rows ingested, k = 4
+        assert_eq!(resp.outputs[0].as_f32().unwrap().len(), 4 * 2);
+        // dropping `resp` returns the hit buffer to the pool
+    };
+    // warm-up queries grow the scan scratch and every pool class
+    for _ in 0..8 {
+        cycle();
+    }
+    // let the worker finish recycling the last request's input tensor
+    std::thread::sleep(Duration::from_millis(50));
+
+    let (_, fresh_before) = pool.stats();
+    let before = allocs_this_thread();
+    cycle();
+    let allocs = allocs_this_thread() - before;
+    assert_eq!(allocs, 0,
+               "submitter-side gallery query→top-k→release cycle \
+                allocated {allocs} times");
+    let (_, fresh_after) = pool.stats();
+    assert_eq!(fresh_after, fresh_before,
+               "warmed gallery query took {} fresh pool buffers",
+               fresh_after - fresh_before);
+
+    std::thread::sleep(Duration::from_millis(50));
+    let typed = coord.metrics_typed();
+    assert_eq!(typed.len(), 1);
+    let (w, _, _, snap) = &typed[0];
+    assert_eq!(*w, Workload::Gallery);
+    assert_eq!(snap.gallery_len, 6, "every ingest must land in the store");
+    assert_eq!(snap.last_infer_allocs, 0,
+               "gallery worker inference region allocated {} times",
+               snap.last_infer_allocs);
+    assert_eq!(snap.last_cycle_allocs, 0,
+               "gallery worker batch cycle (scan + transport) allocated \
+                {} times",
+               snap.last_cycle_allocs);
+    assert!(snap.resp_recycled > 0,
+            "steady-state gallery responses must reuse recycled buffers");
 }
 
 #[test]

@@ -98,6 +98,7 @@ fn mixed_workload_traffic_routes_fairly_with_per_workload_metrics() {
         text: vec![("bert".to_string(), vec![("none".to_string(), 1.0)])],
         joint: vec![("vqa".to_string(), JointKind::Vqa,
                      vec![("pitome".to_string(), 0.9)])],
+        ..Default::default()
     };
     let coord = Coordinator::boot_cpu_workloads(
         &ps, &workloads, ServingConfig::default()).unwrap();

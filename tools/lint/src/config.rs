@@ -21,6 +21,10 @@ pub const HOT_PATH_MODULES: &[&str] = &[
     // allocation-free or overload handling itself becomes the bottleneck
     "src/coordinator/router.rs",
     "src/coordinator/server.rs",
+    // the embedding gallery: the blocked scan, bounded top-k selection
+    // and k-way merge are the per-query serving path — a warmed
+    // query→top-k cycle must allocate nothing
+    "src/gallery/",
 ];
 
 /// Sanctioned `CosineGram::build` / `.rebuild(...)` call sites, as

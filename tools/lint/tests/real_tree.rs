@@ -51,6 +51,7 @@ fn tree_contains_known_invariant_anchors() {
         "rust/src/merge/mod.rs",
         "rust/src/model/encoder.rs",
         "rust/src/coordinator/pool.rs",
+        "rust/src/gallery/scan.rs",
         "rust/src/util/alloc.rs",
     ] {
         assert!(
