@@ -68,7 +68,9 @@ pub struct VariantWorker {
     tx: SyncSender<InferRequest>,
     /// shared metrics
     pub metrics: Arc<Metrics>,
-    /// approximate queued-request count (admission signal)
+    /// approximate backlog (admission signal): requests submitted but
+    /// not yet entered into an executing batch — counts both the
+    /// bounded channel and the worker's carried-over pending set
     depth: Arc<AtomicUsize>,
     /// queue capacity
     pub capacity: usize,
@@ -362,7 +364,8 @@ impl VariantWorker {
         self.depth.load(Ordering::Relaxed) < (self.capacity + 1) / 2
     }
 
-    /// Current approximate depth.
+    /// Current approximate backlog: requests submitted but not yet
+    /// executing (queued in the channel or held pending by the worker).
     pub fn depth(&self) -> usize {
         self.depth.load(Ordering::Relaxed)
     }
@@ -382,14 +385,24 @@ impl Drop for VariantWorker {
 /// deadline), order them earliest-deadline-first, run the front of the
 /// queue through `exec`, and fan the responses back out.
 ///
-/// **Deadline-aware ordering:** after the timed gather, everything
-/// already queued is drained opportunistically and the pending set is
-/// sorted earliest-deadline-first (deadline-less requests after all
-/// deadlined ones, FIFO within a class).  Only the first `max_batch`
-/// requests execute this cycle; the rest carry over and run *before*
-/// the worker blocks for new arrivals, so under overload a
-/// tight-deadline request buried behind a full batch is promoted
-/// instead of expiring mid-queue.
+/// **Deadline-aware ordering:** after the timed gather, already-queued
+/// requests are drained opportunistically — but only until the worker
+/// holds two batches' worth (`2 * max_batch`); the rest stay in the
+/// bounded channel so the queue fills, `submit_shed` sheds, and the
+/// backlog stays bounded instead of laundering into an unbounded Vec.
+/// The pending set is sorted earliest-deadline-first (deadline-less
+/// requests after all deadlined ones, FIFO within a class) and only
+/// the first `max_batch` requests execute this cycle; the rest carry
+/// over and run *before* the worker blocks for new arrivals, so under
+/// overload a tight-deadline request buried behind a full batch is
+/// promoted instead of expiring mid-queue.  One fairness floor caps
+/// how long EDF may bypass a request: the globally oldest pending
+/// request always rides the executing batch, so a continuous stream
+/// of deadlined traffic cannot starve deadline-less carry-overs.
+///
+/// `depth` counts a request from submit until it enters an executing
+/// batch — requests the worker holds in `pending` still register as
+/// backlog for `has_capacity()`/`depth()` admission signals.
 ///
 /// The pending/batch/output vectors are loop-owned and reused, so a
 /// warmed cycle performs no allocations of its own; the per-cycle
@@ -405,15 +418,16 @@ where
     let mut pending: Vec<InferRequest> = Vec::new();
     let mut batch: Vec<InferRequest> = Vec::new();
     let mut outs: Vec<InferOutputs> = Vec::new();
+    // worker-held backlog cap: one executing batch plus one carried-over
+    // batch.  Anything beyond stays in the bounded channel, preserving
+    // submit_shed backpressure and bounding memory under overload.
+    let pending_cap = max_batch.saturating_mul(2).max(1);
     let mut open = true;
     while open || !pending.is_empty() {
         if open && pending.is_empty() {
             // idle: block for the first arrival, then gather its batch
             match rx.recv() {
-                Ok(r) => {
-                    depth.fetch_sub(1, Ordering::Relaxed);
-                    pending.push(r);
-                }
+                Ok(r) => pending.push(r),
                 Err(_) => {
                     open = false;
                     continue;
@@ -427,10 +441,7 @@ where
                     break;
                 }
                 match rx.recv_timeout(remaining) {
-                    Ok(r) => {
-                        depth.fetch_sub(1, Ordering::Relaxed);
-                        pending.push(r);
-                    }
+                    Ok(r) => pending.push(r),
                     Err(std::sync::mpsc::RecvTimeoutError::Timeout) => break,
                     Err(std::sync::mpsc::RecvTimeoutError::Disconnected) => {
                         open = false;
@@ -440,15 +451,13 @@ where
             }
         }
         if open {
-            // opportunistic drain: pull everything already queued so the
-            // EDF sort can promote near-deadline requests past a full
-            // batch (carried-over requests run before new arrivals)
-            loop {
+            // opportunistic drain: pull already-queued requests (capped
+            // at pending_cap) so the EDF sort can promote near-deadline
+            // requests past a full batch; carried-over requests run
+            // before new arrivals
+            while pending.len() < pending_cap {
                 match rx.try_recv() {
-                    Ok(r) => {
-                        depth.fetch_sub(1, Ordering::Relaxed);
-                        pending.push(r);
-                    }
+                    Ok(r) => pending.push(r),
                     Err(std::sync::mpsc::TryRecvError::Empty) => break,
                     Err(std::sync::mpsc::TryRecvError::Disconnected) => {
                         open = false;
@@ -474,7 +483,25 @@ where
         }
         batch.clear();
         let take = pending.len().min(max_batch);
+        if pending.len() > take {
+            // fairness floor: the globally oldest request always rides
+            // this batch, so EDF cannot bypass any request indefinitely
+            // (deadline-less carry-overs would otherwise starve under a
+            // continuous stream of deadlined traffic)
+            let oldest = pending
+                .iter()
+                .enumerate()
+                .min_by_key(|(_, r)| r.enqueued_at)
+                .map(|(i, _)| i)
+                .expect("pending is non-empty");
+            if oldest >= take {
+                pending.swap(take - 1, oldest);
+            }
+        }
         batch.extend(pending.drain(..take));
+        // requests leave the admission-visible backlog only now, as they
+        // enter the executing batch
+        depth.fetch_sub(take, Ordering::Relaxed);
         // deadline-aware batching: drop requests whose deadline already
         // passed *before* spending execution on them.  Counted first
         // (so a client that observes the expiry marker sees the count),
@@ -943,9 +970,9 @@ fn cpu_run_gallery_batch(sess: &mut JointSession, store: &Arc<GalleryStore>,
         respond_f32_shaped(pool, outs, flat, &[hits.len(), 2],
                            &mut recycled, &mut fresh);
     }
-    if rows > 0 || evictions > 0 || scan_us > 0 {
-        metrics.record_gallery(store.len() as u64, rows, evictions, scan_us);
-    }
+    // unconditional: the gallery_len gauge must track ingest-only
+    // batches too; the cumulative counters just add zero for them
+    metrics.record_gallery(store.len() as u64, rows, evictions, scan_us);
     metrics.record_responses(recycled, fresh);
     Ok(())
 }
@@ -1204,5 +1231,60 @@ mod tests {
         assert_eq!(w.metrics.snapshot().expired, 0,
                    "nothing expired: the deadline was generous, only the \
                     ordering changed");
+    }
+
+    /// Fairness floor under EDF: the globally oldest pending request
+    /// always rides the executing batch, so a continuous stream of
+    /// deadlined traffic cannot starve a deadline-less request that is
+    /// carried over in the worker's pending set.
+    #[test]
+    fn oldest_deadline_less_request_is_not_starved_by_deadlined_traffic() {
+        let cfg = ServingConfig {
+            max_batch: 1,
+            batch_timeout_us: 100,
+            queue_capacity: 8,
+            workers: 1,
+        };
+        let (started_tx, started_rx) = mpsc::channel::<()>();
+        let (release_tx, release_rx) = mpsc::channel::<()>();
+        let w = VariantWorker::spawn_worker(
+            "test-fairness".to_string(), &cfg, cfg.max_batch,
+            move |_m: &Arc<Metrics>| {
+                Some(move |batch: &[InferRequest],
+                           outs: &mut Vec<InferOutputs>| {
+                    let _ = started_tx.send(());
+                    let _ = release_rx.recv();
+                    for _ in batch {
+                        one_output(outs);
+                    }
+                    Ok(())
+                })
+            });
+        let deadlined = ResponseSlot::new(8);
+        let patient = ResponseSlot::new(8);
+        // occupy the worker so everything below queues up behind it
+        w.submit(slot_request(&deadlined, None)).unwrap();
+        started_rx.recv().unwrap();
+        // the deadline-less request is enqueued first, then buried under
+        // deadlined traffic that pure EDF would always order ahead of it
+        w.submit(slot_request(&patient, None)).unwrap();
+        let d = Instant::now() + Duration::from_secs(60);
+        for _ in 0..4 {
+            w.submit(slot_request(&deadlined, Some(d))).unwrap();
+        }
+        release_tx.send(()).unwrap(); // batch 1: the occupier
+        started_rx.recv().unwrap();
+        release_tx.send(()).unwrap(); // batch 2: must be `patient`
+        patient.recv().expect(
+            "oldest (deadline-less) request must ride the first \
+             post-occupier batch instead of being bypassed by EDF");
+        // drain the four deadlined batches
+        for _ in 0..4 {
+            started_rx.recv().unwrap();
+            release_tx.send(()).unwrap();
+        }
+        for _ in 0..5 {
+            deadlined.recv().expect("deadlined request must answer");
+        }
     }
 }

@@ -247,10 +247,12 @@ pub fn scan_two_stage_into(
     }
     let total = scratch.blocks.len();
     let nprobe = probe_blocks.min(total);
+    // total_cmp keeps the comparator a strict total order even if NaN
+    // embeddings were ingested (partial_cmp's Equal fallback violated
+    // transitivity, which sort_unstable_by may detect and panic on)
     scratch.blocks.sort_unstable_by(|a, b| {
         b.score
-            .partial_cmp(&a.score)
-            .unwrap_or(std::cmp::Ordering::Equal)
+            .total_cmp(&a.score)
             .then((a.shard, a.seg, a.block).cmp(&(b.shard, b.seg, b.block)))
     });
     // stage two: exact rescan of the selected blocks
@@ -304,10 +306,7 @@ mod tests {
             all.push(Hit { id, score: score_row(d, norm, mode, inv_probe) });
         });
         all.sort_unstable_by(|a, b| {
-            b.score
-                .partial_cmp(&a.score)
-                .unwrap_or(std::cmp::Ordering::Equal)
-                .then(a.id.cmp(&b.id))
+            b.score.total_cmp(&a.score).then(a.id.cmp(&b.id))
         });
         all.truncate(k);
         all
