@@ -11,7 +11,10 @@
 //!      (shed rate must go positive while admitted-request percentiles
 //!      stay bounded — no `u64::MAX` sentinels anywhere);
 //!   4. an unpaced spike (submission is microseconds, service is
-//!      milliseconds) — the worst-case admission-control stress.
+//!      milliseconds) — the worst-case admission-control stress;
+//!   5. tracing-overhead probe: the identical closed-loop replay with
+//!      the span rings off vs on — recording is a few relaxed atomic
+//!      stores per request, so the goodput cost must stay within 2%.
 //!
 //! Every phase's goodput, shed rate, and per-workload p50/p99/p999 and
 //! queue-depth stats land in `BENCH_serving.json` via `Bench::write_json`
@@ -30,8 +33,9 @@ use pitome::util::{smoke, Bench};
 /// Boot the multi-workload CPU coordinator the trace replays against:
 /// a 3-rung vision ladder (so Balanced routing has somewhere to shed),
 /// single-rung text and joint pools, small queues (capacity 8) so
-/// overload actually exercises admission control.
-fn boot() -> Coordinator {
+/// overload actually exercises admission control.  `trace_capacity`
+/// sizes the per-worker span rings (0 = tracing off).
+fn boot(trace_capacity: usize) -> Coordinator {
     let ps = Arc::new(synthetic_mm_store(&ViTConfig::default(), 7));
     let workloads = CpuWorkloads {
         vision: vec![("vit".to_string(),
@@ -48,6 +52,7 @@ fn boot() -> Coordinator {
         batch_timeout_us: 500,
         queue_capacity: 8,
         workers: 1,
+        trace_capacity,
     };
     Coordinator::boot_cpu_workloads(&ps, &workloads, cfg).expect("boot")
 }
@@ -96,7 +101,7 @@ fn main() {
     let mut b = Bench::new(0, 1);
     println!("# serving load harness: closed-loop probe + open-loop \
               replay{}", if sm { " [smoke]" } else { "" });
-    let coord = boot();
+    let coord = boot(0);
 
     // warmup: fill session scratch and pool freelists outside the
     // measured phases
@@ -189,6 +194,38 @@ fn main() {
             "2x overload + unpaced spike against capacity-8 queues must \
              shed or expire requests");
     b.metric("overload.dropped_total", dropped as f64);
+
+    // phase 5: tracing overhead — the same closed-loop replay against a
+    // traced and an untraced coordinator.  Best-of-3 goodput per arm
+    // damps scheduler noise; the rings are preallocated at boot and a
+    // recorded span is a handful of relaxed atomic stores, so the
+    // budget is 2% (relaxed in smoke runs, where a few dozen requests
+    // cannot resolve that tightly).
+    let trace_n = if sm { 48 } else { 320 };
+    println!("\n# phase 5: tracing overhead (closed loop, \
+              {trace_n} requests per arm, best of 3)");
+    let mut best = [0f64; 2]; // [off, on]
+    for round in 0u64..3 {
+        for (arm, cap) in [0usize, 4096].into_iter().enumerate() {
+            let c = boot(cap);
+            run_load(&c, &closed(12, 4, 5)).expect("trace warmup");
+            let rep = run_load(&c, &closed(trace_n, 8, 20 + round))
+                .expect("trace arm");
+            assert_eq!(rep.offered() as usize, trace_n);
+            best[arm] = best[arm].max(rep.goodput_rps());
+        }
+    }
+    let overhead_pct = ((best[0] - best[1]) / best[0] * 100.0).max(0.0);
+    println!("  tracing off {:.1} rps, on {:.1} rps -> overhead {:.2}%",
+             best[0], best[1], overhead_pct);
+    b.metric("trace.goodput_off_rps", best[0]);
+    b.metric("trace.goodput_on_rps", best[1]);
+    b.metric("trace.overhead_pct", overhead_pct);
+    let budget_pct = if sm { 10.0 } else { 2.0 };
+    assert!(overhead_pct <= budget_pct,
+            "span tracing cost {overhead_pct:.2}% exceeds the \
+             {budget_pct}% budget ({:.1} rps off vs {:.1} rps on)",
+            best[0], best[1]);
 
     b.write_json("serving");
 }

@@ -214,6 +214,10 @@ pub struct ServingConfig {
     pub queue_capacity: usize,
     /// number of worker tasks
     pub workers: usize,
+    /// per-worker span-ring capacity in events; 0 (the default)
+    /// disables tracing entirely — no rings are allocated and the
+    /// serving path records nothing
+    pub trace_capacity: usize,
 }
 
 impl Default for ServingConfig {
@@ -223,6 +227,7 @@ impl Default for ServingConfig {
             batch_timeout_us: 2_000,
             queue_capacity: 1024,
             workers: 1,
+            trace_capacity: 0,
         }
     }
 }

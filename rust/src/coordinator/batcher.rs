@@ -54,6 +54,7 @@ use crate::engine::{BertSession, Engine, JointConfig, JointKind,
                     JointSession, VitSession};
 use crate::error::{Error, Result};
 use crate::gallery::{scan_into, GalleryScratch, GalleryStore, Hit, ScanMode};
+use crate::obs::{ObsHub, RingWriter, SpanEvent, Stage};
 use crate::runtime::{ArtifactEntry, Engine as PjrtEngine, Executable,
                      HostTensor};
 use crate::util::alloc::allocs_this_thread;
@@ -80,17 +81,22 @@ pub struct VariantWorker {
 impl VariantWorker {
     /// Shared worker bootstrap: channel, metrics, depth counter, thread.
     /// `init` runs on the worker thread (handed the worker's metrics
-    /// sink) and produces the batch-execution closure (returning `None`
-    /// aborts the worker, e.g. when PJRT is unavailable — submitters then
-    /// observe a closed queue).  The closure fills `outs` with exactly
-    /// one [`InferOutputs`] per request.
-    // lint: allow(alloc) reason=cold bootstrap: channel, metrics Arcs, and thread spawn happen once per worker
+    /// sink and, when tracing is on, the worker's span recorder to
+    /// attach to its session) and produces the batch-execution closure
+    /// (returning `None` aborts the worker, e.g. when PJRT is
+    /// unavailable — submitters then observe a closed queue).  The
+    /// closure fills `outs` with exactly one [`InferOutputs`] per
+    /// request.  When `hub` is `Some`, one span ring is registered under
+    /// the worker's name; batch-stage spans record into it from the
+    /// worker thread only (the ring's single-producer contract).
+    // lint: allow(alloc) reason=cold bootstrap: channel, metrics Arcs, ring registration, and thread spawn happen once per worker
     fn spawn_worker<E, I>(name: String, cfg: &ServingConfig, max_batch: usize,
-                          init: I) -> VariantWorker
+                          hub: Option<&Arc<ObsHub>>, init: I) -> VariantWorker
     where
         E: FnMut(&[InferRequest], &mut Vec<InferOutputs>) -> Result<()>
             + 'static,
-        I: FnOnce(&Arc<Metrics>) -> Option<E> + Send + 'static,
+        I: FnOnce(&Arc<Metrics>, Option<&RingWriter>) -> Option<E>
+            + Send + 'static,
     {
         let (tx, rx) = std::sync::mpsc::sync_channel::<InferRequest>(cfg.queue_capacity);
         let metrics = Arc::new(Metrics::default());
@@ -98,11 +104,12 @@ impl VariantWorker {
         let m2 = metrics.clone();
         let d2 = depth.clone();
         let timeout = Duration::from_micros(cfg.batch_timeout_us);
+        let rec = hub.map(|h| h.recorder(&name));
         let join = std::thread::Builder::new()
             .name(name)
             .spawn(move || {
-                let Some(exec) = init(&m2) else { return };
-                worker_loop(exec, rx, m2, d2, max_batch, timeout)
+                let Some(exec) = init(&m2, rec.as_ref()) else { return };
+                worker_loop(exec, rx, m2, d2, max_batch, timeout, rec)
             })
             .expect("spawn worker");
         VariantWorker {
@@ -120,10 +127,13 @@ impl VariantWorker {
     /// input (empty vec for artifacts without params).
     // lint: allow(alloc) reason=PJRT transport path copies host tensors by design; zero-alloc serving is the CPU path
     pub fn spawn(hlo_path: PathBuf, entry: ArtifactEntry, params: Vec<f32>,
-                 cfg: &ServingConfig) -> VariantWorker {
+                 cfg: &ServingConfig, hub: Option<&Arc<ObsHub>>)
+                 -> VariantWorker {
         let max_batch = cfg.max_batch.min(entry.meta.batch);
         let name = format!("pitome-worker-{}", entry.file);
-        Self::spawn_worker(name, cfg, max_batch, move |_metrics: &Arc<Metrics>| {
+        Self::spawn_worker(name, cfg, max_batch, hub,
+                           move |_metrics: &Arc<Metrics>,
+                                 _rec: Option<&RingWriter>| {
             let engine = match PjrtEngine::cpu() {
                 Ok(e) => e,
                 Err(e) => {
@@ -161,13 +171,16 @@ impl VariantWorker {
     /// `cfg.workers` threads.
     // lint: allow(alloc) reason=cold bootstrap: worker-name format! and Arc clones happen once per worker
     pub fn spawn_cpu(engine: Arc<Engine>, model_cfg: ViTConfig,
-                     pool: Arc<TensorPool>, cfg: &ServingConfig)
+                     pool: Arc<TensorPool>, cfg: &ServingConfig,
+                     hub: Option<&Arc<ObsHub>>)
                      -> VariantWorker {
         let max_batch = cfg.max_batch;
         let workers = cfg.workers.max(1);
         let name = format!("pitome-cpu-{}-r{:.0}",
                            model_cfg.merge_mode, model_cfg.merge_r * 1000.0);
-        Self::spawn_worker(name, cfg, max_batch, move |metrics: &Arc<Metrics>| {
+        Self::spawn_worker(name, cfg, max_batch, hub,
+                           move |metrics: &Arc<Metrics>,
+                                 rec: Option<&RingWriter>| {
             // one session per variant worker, alive for the worker's
             // whole lifetime: weights resolve once here (the engine cache
             // shares the resolution across equal-config workers) and
@@ -181,6 +194,10 @@ impl VariantWorker {
                 }
             };
             sess.set_workers(workers);
+            if let Some(r) = rec {
+                sess.set_observability(Some(r.clone()),
+                                       model_cfg.depth * max_batch);
+            }
             let metrics = metrics.clone();
             Some(move |batch: &[InferRequest],
                        outs: &mut Vec<InferOutputs>| {
@@ -195,13 +212,16 @@ impl VariantWorker {
     /// buffer from `pool`.
     // lint: allow(alloc) reason=cold bootstrap: worker-name format! and Arc clones happen once per worker
     pub fn spawn_cpu_text(engine: Arc<Engine>, model_cfg: TextConfig,
-                          pool: Arc<TensorPool>, cfg: &ServingConfig)
+                          pool: Arc<TensorPool>, cfg: &ServingConfig,
+                          hub: Option<&Arc<ObsHub>>)
                           -> VariantWorker {
         let max_batch = cfg.max_batch;
         let workers = cfg.workers.max(1);
         let name = format!("pitome-text-{}-r{:.0}",
                            model_cfg.merge_mode, model_cfg.merge_r * 1000.0);
-        Self::spawn_worker(name, cfg, max_batch, move |metrics: &Arc<Metrics>| {
+        Self::spawn_worker(name, cfg, max_batch, hub,
+                           move |metrics: &Arc<Metrics>,
+                                 rec: Option<&RingWriter>| {
             let mut sess = match engine.bert_session(&model_cfg) {
                 Ok(s) => s,
                 Err(e) => {
@@ -210,6 +230,10 @@ impl VariantWorker {
                 }
             };
             sess.set_workers(workers);
+            if let Some(r) = rec {
+                sess.set_observability(Some(r.clone()),
+                                       model_cfg.depth * max_batch);
+            }
             let metrics = metrics.clone();
             Some(move |batch: &[InferRequest],
                        outs: &mut Vec<InferOutputs>| {
@@ -229,14 +253,17 @@ impl VariantWorker {
     /// run back-to-back on the worker thread, allocation-free once warm.
     // lint: allow(alloc) reason=cold bootstrap: worker-name format!, Arc clones, and empty splitter scratch built once per worker
     pub fn spawn_cpu_joint(engine: Arc<Engine>, model_cfg: JointConfig,
-                           pool: Arc<TensorPool>, cfg: &ServingConfig)
+                           pool: Arc<TensorPool>, cfg: &ServingConfig,
+                           hub: Option<&Arc<ObsHub>>)
                            -> VariantWorker {
         let max_batch = cfg.max_batch;
         let workers = cfg.workers.max(1);
         let name = format!("pitome-joint-{}-r{:.0}",
                            model_cfg.vision.merge_mode,
                            model_cfg.vision.merge_r * 1000.0);
-        Self::spawn_worker(name, cfg, max_batch, move |metrics: &Arc<Metrics>| {
+        Self::spawn_worker(name, cfg, max_batch, hub,
+                           move |metrics: &Arc<Metrics>,
+                                 rec: Option<&RingWriter>| {
             let mut sess = match engine.joint_session(&model_cfg) {
                 Ok(s) => s,
                 Err(e) => {
@@ -245,6 +272,10 @@ impl VariantWorker {
                 }
             };
             sess.set_vision_workers(workers);
+            if let Some(r) = rec {
+                sess.set_observability(Some(r.clone()),
+                                       model_cfg.vision.depth * max_batch);
+            }
             let metrics = metrics.clone();
             // splitter scratch, reused across batches
             let mut pairs: Vec<(usize, usize)> = Vec::new();
@@ -270,14 +301,17 @@ impl VariantWorker {
     // lint: allow(alloc) reason=cold bootstrap: worker-name format!, Arc clones, and empty gallery scratch built once per worker
     pub fn spawn_cpu_gallery(engine: Arc<Engine>, model_cfg: JointConfig,
                              store: Arc<GalleryStore>,
-                             pool: Arc<TensorPool>, cfg: &ServingConfig)
+                             pool: Arc<TensorPool>, cfg: &ServingConfig,
+                             hub: Option<&Arc<ObsHub>>)
                              -> VariantWorker {
         let max_batch = cfg.max_batch;
         let workers = cfg.workers.max(1);
         let name = format!("pitome-gallery-{}-r{:.0}",
                            model_cfg.vision.merge_mode,
                            model_cfg.vision.merge_r * 1000.0);
-        Self::spawn_worker(name, cfg, max_batch, move |metrics: &Arc<Metrics>| {
+        Self::spawn_worker(name, cfg, max_batch, hub,
+                           move |metrics: &Arc<Metrics>,
+                                 rec: Option<&RingWriter>| {
             if model_cfg.kind != JointKind::Retrieval {
                 eprintln!("[pitome worker] gallery worker needs a \
                            retrieval-kind joint config");
@@ -292,11 +326,16 @@ impl VariantWorker {
                 }
             };
             sess.set_vision_workers(workers);
+            if let Some(r) = rec {
+                sess.set_observability(Some(r.clone()),
+                                       model_cfg.vision.depth * max_batch);
+            }
             let metrics = metrics.clone();
             // per-worker batch + scan scratch, reused across batches
             let mut slots: Vec<GallerySlot> = Vec::new();
             let mut ids: Vec<u64> = Vec::new();
             let mut scratch = GalleryScratch::new();
+            scratch.set_recorder(rec.cloned());
             let mut hits: Vec<Hit> = Vec::new();
             let mut flat: Vec<f32> = Vec::new();
             Some(move |batch: &[InferRequest],
@@ -411,7 +450,8 @@ impl Drop for VariantWorker {
 // lint: allow(alloc) reason=loop-owned pending/batch/output vectors allocated once and reused every cycle
 fn worker_loop<E>(mut exec: E, rx: Receiver<InferRequest>,
                   metrics: Arc<Metrics>, depth: Arc<AtomicUsize>,
-                  max_batch: usize, timeout: Duration)
+                  max_batch: usize, timeout: Duration,
+                  rec: Option<RingWriter>)
 where
     E: FnMut(&[InferRequest], &mut Vec<InferOutputs>) -> Result<()>,
 {
@@ -422,12 +462,21 @@ where
     // batch.  Anything beyond stays in the bounded channel, preserving
     // submit_shed backpressure and bounding memory under overload.
     let pending_cap = max_batch.saturating_mul(2).max(1);
+    // worker-local batch ordinal: every span of one batch cycle carries
+    // it, so an exporter can group a cycle's stages back together
+    let mut batch_id: u64 = 0;
     let mut open = true;
     while open || !pending.is_empty() {
+        // gather clock starts when work is in hand (after the idle
+        // block, so a quiet queue doesn't inflate the gather span)
+        let mut gather_t0 = rec.as_ref().map(|w| w.now_us());
         if open && pending.is_empty() {
             // idle: block for the first arrival, then gather its batch
             match rx.recv() {
-                Ok(r) => pending.push(r),
+                Ok(r) => {
+                    gather_t0 = rec.as_ref().map(|w| w.now_us());
+                    pending.push(r);
+                }
                 Err(_) => {
                     open = false;
                     continue;
@@ -469,6 +518,7 @@ where
         if pending.is_empty() {
             continue;
         }
+        let sort_t0 = rec.as_ref().map(|w| w.now_us());
         if pending.len() > 1 {
             // earliest-deadline-first; in-place unstable sort (ties are
             // fully ordered by enqueue time, so stability is irrelevant)
@@ -480,6 +530,19 @@ where
                 (None, Some(_)) => std::cmp::Ordering::Greater,
                 (None, None) => a.enqueued_at.cmp(&b.enqueued_at),
             });
+        }
+        if let Some(w) = rec.as_ref() {
+            w.record(SpanEvent {
+                stage: Stage::BatchGather,
+                id: batch_id,
+                t_start_us: gather_t0.unwrap_or(0),
+                t_end_us: sort_t0.unwrap_or(0),
+                payload: pending.len() as u32,
+                a: 0.0,
+                b: 0.0,
+            });
+            w.span_since(Stage::EdfSort, batch_id, sort_t0.unwrap_or(0),
+                         pending.len() as u32);
         }
         batch.clear();
         let take = pending.len().min(max_batch);
@@ -502,6 +565,21 @@ where
         // requests leave the admission-visible backlog only now, as they
         // enter the executing batch
         depth.fetch_sub(take, Ordering::Relaxed);
+        if let Some(w) = rec.as_ref() {
+            // one queue-wait span per request: submit time → batch entry,
+            // payload = position in the executing batch
+            for (pos, req) in batch.iter().enumerate() {
+                w.record(SpanEvent {
+                    stage: Stage::QueueWait,
+                    id: batch_id,
+                    t_start_us: w.us_of(req.enqueued_at),
+                    t_end_us: w.now_us(),
+                    payload: pos as u32,
+                    a: 0.0,
+                    b: 0.0,
+                });
+            }
+        }
         // deadline-aware batching: drop requests whose deadline already
         // passed *before* spending execution on them.  Counted first
         // (so a client that observes the expiry marker sees the count),
@@ -540,6 +618,11 @@ where
         let exec_us = exec_start.elapsed().as_micros() as u64;
         let batch_size = batch.len();
         metrics.record_batch(batch_size);
+        if let Some(w) = rec.as_ref() {
+            w.span_since(Stage::Exec, batch_id, w.us_of(exec_start),
+                         batch_size as u32);
+        }
+        let respond_t0 = rec.as_ref().map(|w| w.now_us());
         match result {
             Ok(()) if outs.len() == batch_size => {
                 for (req, outputs) in batch.drain(..).zip(outs.drain(..)) {
@@ -567,6 +650,11 @@ where
                 outs.clear();
             }
         }
+        if let Some(w) = rec.as_ref() {
+            w.span_since(Stage::Respond, batch_id, respond_t0.unwrap_or(0),
+                         batch_size as u32);
+        }
+        batch_id += 1;
         metrics.record_cycle_allocs(allocs_this_thread() - cycle_before);
     }
 }
@@ -621,6 +709,8 @@ fn cpu_run_batch(sess: &mut VitSession, metrics: &Metrics,
                  pool: &Arc<TensorPool>, batch: &[InferRequest],
                  outs: &mut Vec<InferOutputs>) -> Result<()> {
     let before = allocs_this_thread();
+    sess.reset_merge_telemetry();
+    let t_embed = sess.recorder().map(|r| r.now_us());
     // exact-shape admission: a malformed request must become an error (the
     // responders are dropped, submitters see a closed channel), never a
     // panic that would kill the worker thread for every later request
@@ -641,6 +731,10 @@ fn cpu_run_batch(sess: &mut VitSession, metrics: &Metrics,
         }
         sess.set_patches_slice(i, d)?;
     }
+    if let Some(r) = sess.recorder() {
+        r.span_since(Stage::Embed, 0, t_embed.unwrap_or(0),
+                     batch.len() as u32);
+    }
     sess.forward(0)?;
     metrics.record_infer_allocs(allocs_this_thread() - before);
     let (mut recycled, mut fresh) = (0u64, 0u64);
@@ -659,6 +753,8 @@ fn cpu_run_text_batch(sess: &mut BertSession, metrics: &Metrics,
                       pool: &Arc<TensorPool>, batch: &[InferRequest],
                       outs: &mut Vec<InferOutputs>) -> Result<()> {
     let before = allocs_this_thread();
+    sess.reset_merge_telemetry();
+    let t_embed = sess.recorder().map(|r| r.now_us());
     sess.begin(batch.len());
     for (i, req) in batch.iter().enumerate() {
         let t = req.payload.text_tensor().ok_or_else(|| {
@@ -666,6 +762,10 @@ fn cpu_run_text_batch(sess: &mut BertSession, metrics: &Metrics,
                 "text worker: request {i} carries no token tensor"))
         })?;
         sess.set_tokens(i, t.as_i32()?)?;
+    }
+    if let Some(r) = sess.recorder() {
+        r.span_since(Stage::Embed, 0, t_embed.unwrap_or(0),
+                     batch.len() as u32);
     }
     sess.forward(0)?;
     metrics.record_infer_allocs(allocs_this_thread() - before);
@@ -728,6 +828,8 @@ fn cpu_run_joint_batch(sess: &mut JointSession, metrics: &Metrics,
                        pairs: &mut Vec<(usize, usize)>,
                        slots: &mut Vec<JointSlot>) -> Result<()> {
     let before = allocs_this_thread();
+    sess.reset_merge_telemetry();
+    let t_embed = sess.recorder().map(|r| r.now_us());
     pairs.clear();
     slots.clear();
     // pass 1: size the two halves independently
@@ -776,6 +878,10 @@ fn cpu_run_joint_batch(sess: &mut JointSession, metrics: &Metrics,
                 ti += 1;
             }
         }
+    }
+    if let Some(r) = sess.recorder() {
+        r.span_since(Stage::Embed, 0, t_embed.unwrap_or(0),
+                     batch.len() as u32);
     }
     // both towers, then the kind's fusion stage
     sess.forward(0)?;
@@ -874,6 +980,8 @@ fn cpu_run_gallery_batch(sess: &mut JointSession, store: &Arc<GalleryStore>,
                          scratch: &mut GalleryScratch, hits: &mut Vec<Hit>,
                          flat: &mut Vec<f32>, workers: usize) -> Result<()> {
     let before = allocs_this_thread();
+    sess.reset_merge_telemetry();
+    let t_embed = sess.recorder().map(|r| r.now_us());
     slots.clear();
     ids.clear();
     // pass 1: size the ragged halves by payload dtype
@@ -928,6 +1036,10 @@ fn cpu_run_gallery_batch(sess: &mut JointSession, store: &Arc<GalleryStore>,
                 sess.set_text(*ti, t.as_i32()?)?;
             }
         }
+    }
+    if let Some(r) = sess.recorder() {
+        r.span_since(Stage::Embed, 0, t_embed.unwrap_or(0),
+                     batch.len() as u32);
     }
     // both towers once, then the retrieval projection
     sess.forward(0)?;
@@ -1066,8 +1178,8 @@ mod tests {
     /// Worker whose exec answers every request with a dummy tensor.
     fn noop_worker(cfg: &ServingConfig) -> VariantWorker {
         VariantWorker::spawn_worker(
-            "test-noop".to_string(), cfg, cfg.max_batch,
-            |_m: &Arc<Metrics>| {
+            "test-noop".to_string(), cfg, cfg.max_batch, None,
+            |_m: &Arc<Metrics>, _rec: Option<&RingWriter>| {
                 Some(|batch: &[InferRequest],
                       outs: &mut Vec<InferOutputs>| {
                     for _ in batch {
@@ -1098,6 +1210,7 @@ mod tests {
             batch_timeout_us: 100,
             queue_capacity: 1,
             workers: 1,
+            trace_capacity: 0,
         };
         let w = noop_worker(&cfg);
         assert!(w.has_capacity(),
@@ -1113,12 +1226,13 @@ mod tests {
             batch_timeout_us: 100,
             queue_capacity: 2,
             workers: 1,
+            trace_capacity: 0,
         };
         let (started_tx, started_rx) = mpsc::channel::<()>();
         let (release_tx, release_rx) = mpsc::channel::<()>();
         let w = VariantWorker::spawn_worker(
-            "test-gated".to_string(), &cfg, cfg.max_batch,
-            move |_m: &Arc<Metrics>| {
+            "test-gated".to_string(), &cfg, cfg.max_batch, None,
+            move |_m: &Arc<Metrics>, _rec: Option<&RingWriter>| {
                 Some(move |batch: &[InferRequest],
                            outs: &mut Vec<InferOutputs>| {
                     let _ = started_tx.send(());
@@ -1162,6 +1276,7 @@ mod tests {
             batch_timeout_us: 100,
             queue_capacity: 8,
             workers: 1,
+            trace_capacity: 0,
         };
         let w = noop_worker(&cfg);
         let slot = ResponseSlot::new(8);
@@ -1187,12 +1302,13 @@ mod tests {
             batch_timeout_us: 100,
             queue_capacity: 8,
             workers: 1,
+            trace_capacity: 0,
         };
         let (started_tx, started_rx) = mpsc::channel::<()>();
         let (release_tx, release_rx) = mpsc::channel::<()>();
         let w = VariantWorker::spawn_worker(
-            "test-edf".to_string(), &cfg, cfg.max_batch,
-            move |_m: &Arc<Metrics>| {
+            "test-edf".to_string(), &cfg, cfg.max_batch, None,
+            move |_m: &Arc<Metrics>, _rec: Option<&RingWriter>| {
                 Some(move |batch: &[InferRequest],
                            outs: &mut Vec<InferOutputs>| {
                     let _ = started_tx.send(());
@@ -1244,12 +1360,13 @@ mod tests {
             batch_timeout_us: 100,
             queue_capacity: 8,
             workers: 1,
+            trace_capacity: 0,
         };
         let (started_tx, started_rx) = mpsc::channel::<()>();
         let (release_tx, release_rx) = mpsc::channel::<()>();
         let w = VariantWorker::spawn_worker(
-            "test-fairness".to_string(), &cfg, cfg.max_batch,
-            move |_m: &Arc<Metrics>| {
+            "test-fairness".to_string(), &cfg, cfg.max_batch, None,
+            move |_m: &Arc<Metrics>, _rec: Option<&RingWriter>| {
                 Some(move |batch: &[InferRequest],
                            outs: &mut Vec<InferOutputs>| {
                     let _ = started_tx.send(());
@@ -1286,5 +1403,50 @@ mod tests {
         for _ in 0..5 {
             deadlined.recv().expect("deadlined request must answer");
         }
+    }
+
+    /// End-to-end worker tracing: with an [`ObsHub`] attached, a served
+    /// batch leaves a reconstructable gather → sort → queue-wait → exec →
+    /// respond span sequence in the worker's ring, attributed to the
+    /// worker's name.
+    #[test]
+    fn hub_attached_worker_records_batch_spans() {
+        let cfg = ServingConfig {
+            max_batch: 4,
+            batch_timeout_us: 100,
+            queue_capacity: 8,
+            workers: 1,
+            trace_capacity: 256,
+        };
+        let hub = ObsHub::new(cfg.trace_capacity);
+        let w = VariantWorker::spawn_worker(
+            "test-traced".to_string(), &cfg, cfg.max_batch, Some(&hub),
+            |_m: &Arc<Metrics>, rec: Option<&RingWriter>| {
+                assert!(rec.is_some(), "hub must hand the worker a recorder");
+                Some(|batch: &[InferRequest],
+                      outs: &mut Vec<InferOutputs>| {
+                    for _ in batch {
+                        one_output(outs);
+                    }
+                    Ok(())
+                })
+            });
+        let slot = ResponseSlot::new(8);
+        w.submit(slot_request(&slot, None)).unwrap();
+        slot.recv().expect("traced request must answer");
+        drop(w); // join the worker so every span is published
+        let threads = hub.drain();
+        let t = threads.iter().find(|t| t.name == "test-traced")
+            .expect("worker ring must be registered under its name");
+        assert_eq!(t.dropped, 0);
+        for s in [Stage::BatchGather, Stage::EdfSort, Stage::QueueWait,
+                  Stage::Exec, Stage::Respond] {
+            assert!(t.events.iter().any(|e| e.stage == s),
+                    "missing {} span", s.name());
+        }
+        let qw = t.events.iter().find(|e| e.stage == Stage::QueueWait)
+            .unwrap();
+        assert!(qw.t_end_us >= qw.t_start_us,
+                "queue-wait span must not run backwards");
     }
 }

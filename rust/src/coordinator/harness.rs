@@ -23,6 +23,7 @@
 //! queue-depth max/mean sampled over the run.  `serving_bench` and the
 //! `pitome loadtest` subcommand are thin wrappers over [`run_load`].
 
+use std::sync::Arc;
 use std::time::{Duration, Instant};
 
 use crate::config::TextConfig;
@@ -30,6 +31,7 @@ use crate::data::{generate_trace, patchify, sent_item, shape_item,
                   vqa_item, ArrivalModel, TraceConfig, TraceEvent,
                   TraceWorkload, TEST_SEED};
 use crate::error::{Error, Result};
+use crate::obs::{ObsHub, SpanEvent, Stage, TraceThread};
 use crate::tensor::Mat;
 
 use super::metrics::{Metrics, Snapshot};
@@ -82,6 +84,13 @@ pub struct LoadOptions {
     /// queries scan a non-trivial store.  Requires a booted gallery pool
     /// when > 0; ignored otherwise.
     pub gallery_prefill: usize,
+    /// sample every Nth completed request per lane into a reconstructed
+    /// admission → queue-wait → exec timeline
+    /// ([`LoadReport::request_lanes`]); 0 disables capture.  When the
+    /// coordinator has tracing enabled the timelines share the hub's
+    /// timebase, so a Chrome trace shows them aligned with the worker
+    /// span rings.
+    pub trace_sample: usize,
 }
 
 impl Default for LoadOptions {
@@ -92,6 +101,7 @@ impl Default for LoadOptions {
             time_scale: 1.0,
             sample_every: 1,
             gallery_prefill: 0,
+            trace_sample: 0,
         }
     }
 }
@@ -121,6 +131,12 @@ pub struct WorkloadReport {
     pub deadline_met: u64,
     /// end-to-end latency distribution of completed requests
     pub latency: Snapshot,
+    /// queue-wait component (submit → execution start) of the same
+    /// completed requests — where time goes when the pool is saturated
+    pub queue_wait: Snapshot,
+    /// execution component (batch exec wall time attributed to the
+    /// request) of the same completed requests
+    pub exec: Snapshot,
     /// max queue depth sampled across the workload's variant queues
     pub depth_max: usize,
     /// mean sampled queue depth
@@ -136,6 +152,11 @@ pub struct LoadReport {
     pub had_deadline: bool,
     /// one report per workload present in the trace
     pub per_workload: Vec<WorkloadReport>,
+    /// sampled per-request timelines, one synthetic trace lane per
+    /// workload (empty unless [`LoadOptions::trace_sample`] > 0); feed
+    /// them to [`chrome_trace_json`](crate::obs::export::chrome_trace_json)
+    /// alongside the drained worker rings
+    pub request_lanes: Vec<TraceThread>,
 }
 
 impl LoadReport {
@@ -196,7 +217,63 @@ impl LoadReport {
                       max {} us  depth max {} mean {:.2}",
                      w.latency.p50_us, w.latency.p99_us, w.latency.p999_us,
                      w.latency.max_us, w.depth_max, w.depth_mean);
+            println!("            queue-wait p50 {} us p99 {} us | \
+                      exec p50 {} us p99 {} us",
+                     w.queue_wait.p50_us, w.queue_wait.p99_us,
+                     w.exec.p50_us, w.exec.p99_us);
         }
+    }
+}
+
+/// Clock the sampled request timelines are stamped with: the hub's
+/// epoch when the coordinator traces (so request lanes and worker span
+/// rings align in one Chrome trace), a local epoch otherwise.
+enum TraceClock {
+    /// microseconds since the coordinator hub's epoch
+    Hub(Arc<ObsHub>),
+    /// microseconds since the replay's own start
+    Local(Instant),
+}
+
+impl TraceClock {
+    fn now_us(&self) -> u64 {
+        match self {
+            TraceClock::Hub(h) => h.now_us(),
+            TraceClock::Local(t0) => t0.elapsed().as_micros() as u64,
+        }
+    }
+}
+
+/// Per-lane sampled request-timeline capture (client side of the span
+/// story: the worker rings see batches, this sees requests).
+struct LaneTrace {
+    every: u64,
+    events: Vec<SpanEvent>,
+}
+
+impl LaneTrace {
+    /// Reconstruct one completed request's timeline from its response
+    /// latency decomposition: execution ended (approximately) when the
+    /// client drained the response, ran for `exec_us` before that, and
+    /// waited `queue_us` before *that*.  The drain delay rides the
+    /// Admission/Exec spans — an accepted skew, since responses are
+    /// drained non-blockingly between submissions.
+    fn push(&mut self, id: u64, resp: &InferResponse, end_us: u64) {
+        let exec_start = end_us.saturating_sub(resp.exec_us);
+        let submit = exec_start.saturating_sub(resp.queue_us);
+        let b = resp.batch_size as u32;
+        self.events.push(SpanEvent {
+            stage: Stage::Admission, id, t_start_us: submit,
+            t_end_us: end_us, payload: b, a: 0.0, b: 0.0,
+        });
+        self.events.push(SpanEvent {
+            stage: Stage::QueueWait, id, t_start_us: submit,
+            t_end_us: exec_start, payload: 0, a: 0.0, b: 0.0,
+        });
+        self.events.push(SpanEvent {
+            stage: Stage::Exec, id, t_start_us: exec_start,
+            t_end_us: end_us, payload: b, a: 0.0, b: 0.0,
+        });
     }
 }
 
@@ -235,6 +312,9 @@ struct Lane {
     model: String,
     slot: ResponseSlot,
     metrics: Metrics,
+    queue_metrics: Metrics,
+    exec_metrics: Metrics,
+    trace: Option<LaneTrace>,
     offered: u64,
     admitted: u64,
     shed: u64,
@@ -310,15 +390,24 @@ fn submit_event(coord: &Coordinator, tpl: &Templates, lane: &mut Lane,
 }
 
 /// Account one delivered response (or failure/expiry marker).
-fn absorb(lane: &mut Lane, r: Result<InferResponse>, deadline_us: u64) {
+fn absorb(lane: &mut Lane, r: Result<InferResponse>, deadline_us: u64,
+          clock: &TraceClock) {
     lane.drained += 1;
     match r {
         Ok(resp) => {
             let lat = resp.queue_us + resp.exec_us;
             lane.metrics.record(lat);
+            lane.queue_metrics.record(resp.queue_us);
+            lane.exec_metrics.record(resp.exec_us);
             lane.completed += 1;
             if deadline_us == 0 || lat <= deadline_us {
                 lane.deadline_met += 1;
+            }
+            if let Some(tr) = lane.trace.as_mut() {
+                let n = lane.completed - 1;
+                if n % tr.every == 0 {
+                    tr.push(n, &resp, clock.now_us());
+                }
             }
         }
         Err(_) => lane.failed += 1,
@@ -379,8 +468,8 @@ fn prefill_gallery(coord: &Coordinator, tpl: &Templates, model: &str,
 /// responses non-blockingly between submissions, then drain every
 /// outstanding admitted request.
 fn run_open(coord: &Coordinator, tpl: &Templates, lanes: &mut [Lane],
-            trace: &[TraceEvent], opts: &LoadOptions, t0: Instant)
-            -> Result<()> {
+            trace: &[TraceEvent], opts: &LoadOptions, t0: Instant,
+            clock: &TraceClock) -> Result<()> {
     let every = opts.sample_every.max(1);
     for (i, ev) in trace.iter().enumerate() {
         if opts.time_scale > 0.0 {
@@ -396,11 +485,13 @@ fn run_open(coord: &Coordinator, tpl: &Templates, lanes: &mut [Lane],
             loop {
                 match lane.slot.try_recv() {
                     Ok(Some(resp)) => {
-                        absorb(lane, Ok(resp), opts.trace.deadline_us);
+                        absorb(lane, Ok(resp), opts.trace.deadline_us, clock);
                     }
                     Ok(None) => break,
                     // a failure/expiry marker: one delivery, consumed
-                    Err(e) => absorb(lane, Err(e), opts.trace.deadline_us),
+                    Err(e) => {
+                        absorb(lane, Err(e), opts.trace.deadline_us, clock);
+                    }
                 }
             }
         }
@@ -413,7 +504,7 @@ fn run_open(coord: &Coordinator, tpl: &Templates, lanes: &mut [Lane],
     for lane in lanes.iter_mut() {
         while lane.drained < lane.admitted {
             let r = lane.slot.recv();
-            absorb(lane, r, opts.trace.deadline_us);
+            absorb(lane, r, opts.trace.deadline_us, clock);
         }
     }
     Ok(())
@@ -421,9 +512,10 @@ fn run_open(coord: &Coordinator, tpl: &Templates, lanes: &mut [Lane],
 
 /// Closed-loop replay: per workload, keep `users` requests in flight,
 /// submitting the next only after a completion (plus think time).
+#[allow(clippy::too_many_arguments)]
 fn run_closed(coord: &Coordinator, tpl: &Templates, lanes: &mut [Lane],
               trace: &[TraceEvent], opts: &LoadOptions, users: usize,
-              think_time_us: u64) -> Result<()> {
+              think_time_us: u64, clock: &TraceClock) -> Result<()> {
     let users = users.max(1);
     for lane in lanes.iter_mut() {
         let mut events =
@@ -444,7 +536,7 @@ fn run_closed(coord: &Coordinator, tpl: &Templates, lanes: &mut [Lane],
                 break;
             }
             let r = lane.slot.recv();
-            absorb(lane, r, opts.trace.deadline_us);
+            absorb(lane, r, opts.trace.deadline_us, clock);
             inflight -= 1;
             sample_depth(coord, lane);
             if think_time_us > 0 {
@@ -497,6 +589,12 @@ pub fn run_load(coord: &Coordinator, opts: &LoadOptions)
             model,
             slot: ResponseSlot::new(counts[i]),
             metrics: Metrics::default(),
+            queue_metrics: Metrics::default(),
+            exec_metrics: Metrics::default(),
+            trace: (opts.trace_sample > 0).then(|| LaneTrace {
+                every: opts.trace_sample as u64,
+                events: Vec::new(),
+            }),
             offered: 0,
             admitted: 0,
             shed: 0,
@@ -524,23 +622,36 @@ pub fn run_load(coord: &Coordinator, opts: &LoadOptions)
         prefill_gallery(coord, &tpl, &model, opts.gallery_prefill)?;
     }
     let expired_before = expired_by_workload(coord);
+    let clock = match coord.obs_hub() {
+        Some(h) => TraceClock::Hub(h.clone()),
+        None => TraceClock::Local(Instant::now()),
+    };
     let t0 = Instant::now();
     match opts.trace.arrival {
         ArrivalModel::Open => {
-            run_open(coord, &tpl, &mut lanes, &trace, opts, t0)?;
+            run_open(coord, &tpl, &mut lanes, &trace, opts, t0, &clock)?;
         }
         ArrivalModel::Closed { users, think_time_us } => {
             run_closed(coord, &tpl, &mut lanes, &trace, opts, users,
-                       think_time_us)?;
+                       think_time_us, &clock)?;
         }
     }
     let wall_s = t0.elapsed().as_secs_f64();
     let expired_after = expired_by_workload(coord);
     let had_deadline = opts.trace.deadline_us > 0;
+    let mut request_lanes = Vec::new();
     let per_workload = lanes
         .into_iter()
-        .map(|lane| {
+        .map(|mut lane| {
             let i = widx(lane.workload);
+            if let Some(tr) = lane.trace.take() {
+                request_lanes.push(TraceThread {
+                    name: format!("requests-{}",
+                                  to_workload(lane.workload).name()),
+                    events: tr.events,
+                    dropped: 0,
+                });
+            }
             WorkloadReport {
                 workload: to_workload(lane.workload),
                 model: lane.model,
@@ -553,13 +664,15 @@ pub fn run_load(coord: &Coordinator, opts: &LoadOptions)
                 completed: lane.completed,
                 deadline_met: lane.deadline_met,
                 latency: lane.metrics.snapshot(),
+                queue_wait: lane.queue_metrics.snapshot(),
+                exec: lane.exec_metrics.snapshot(),
                 depth_max: lane.depth_max,
                 depth_mean: lane.depth_sum as f64
                     / lane.depth_n.max(1) as f64,
             }
         })
         .collect();
-    Ok(LoadReport { wall_s, had_deadline, per_workload })
+    Ok(LoadReport { wall_s, had_deadline, per_workload, request_lanes })
 }
 
 #[cfg(test)]
@@ -590,6 +703,7 @@ mod tests {
             batch_timeout_us: 500,
             queue_capacity,
             workers: 1,
+            trace_capacity: 0,
         };
         Coordinator::boot_cpu_workloads(&ps, &workloads, cfg).expect("boot")
     }
@@ -637,6 +751,7 @@ mod tests {
             batch_timeout_us: 500,
             queue_capacity: 64,
             workers: 1,
+            trace_capacity: 0,
         };
         let coord =
             Coordinator::boot_cpu_workloads(&ps, &workloads, cfg).unwrap();
@@ -703,5 +818,73 @@ mod tests {
             rep.per_workload.iter().map(|w| w.completed + w.failed).sum();
         assert_eq!(answered, rep.admitted(),
                    "every admitted request must be answered");
+    }
+
+    /// Tracing end-to-end: a coordinator booted with a span-ring hub
+    /// plus request-lane sampling yields a Chrome trace carrying both
+    /// the worker-side batch spans and the client-side request lanes,
+    /// and the queue-wait/exec decomposition covers every completion.
+    #[test]
+    fn traced_run_reconstructs_request_and_worker_timelines() {
+        let ps = Arc::new(synthetic_mm_store(&ViTConfig::default(), 7));
+        let workloads = CpuWorkloads {
+            vision: vec![("vit".to_string(),
+                          vec![("pitome".to_string(), 0.9)])],
+            ..Default::default()
+        };
+        let cfg = ServingConfig {
+            max_batch: 4,
+            batch_timeout_us: 500,
+            queue_capacity: 64,
+            workers: 1,
+            trace_capacity: 4096,
+        };
+        let coord =
+            Coordinator::boot_cpu_workloads(&ps, &workloads, cfg).unwrap();
+        let opts = LoadOptions {
+            trace: TraceConfig {
+                count: 8,
+                mix: WorkloadMix {
+                    vision: 1.0,
+                    text: 0.0,
+                    joint: 0.0,
+                    gallery: 0.0,
+                },
+                arrival: ArrivalModel::Closed { users: 2, think_time_us: 0 },
+                seed: 5,
+                ..Default::default()
+            },
+            trace_sample: 1,
+            ..Default::default()
+        };
+        let rep = run_load(&coord, &opts).unwrap();
+        assert_eq!(rep.completed(), 8);
+        let w = &rep.per_workload[0];
+        assert_eq!(w.queue_wait.count, 8,
+                   "decomposition covers every completion");
+        assert_eq!(w.exec.count, 8);
+        let lane = rep
+            .request_lanes
+            .iter()
+            .find(|t| t.name == "requests-vision")
+            .expect("vision request lane");
+        assert_eq!(lane.events.len(), 8 * 3,
+                   "three spans per sampled request");
+        assert!(lane.events.iter().all(|e| e.t_end_us >= e.t_start_us),
+                "request spans must not run backwards");
+        // the worker rings carry the batch-side story on the same hub
+        let hub = coord.obs_hub().expect("tracing enabled").clone();
+        let mut all = hub.drain();
+        let exec_spans = all
+            .iter()
+            .flat_map(|t| t.events.iter())
+            .filter(|e| e.stage == Stage::Exec)
+            .count();
+        assert!(exec_spans > 0, "worker rings must record Exec spans");
+        // and the combined trace exports as valid Chrome-trace JSON
+        all.extend(rep.request_lanes);
+        let json = crate::obs::export::chrome_trace_json(&all);
+        let doc = crate::util::parse_json(&json).expect("valid JSON");
+        assert!(doc.get("traceEvents").and_then(|e| e.arr()).is_some());
     }
 }

@@ -1,6 +1,23 @@
 //! Serving metrics: counters + latency histogram with percentile queries.
+//!
+//! Recording is **lock-free**: every field is an atomic updated with
+//! relaxed read-modify-write ops, so a submitter thread recording a shed
+//! and four workers recording latencies never serialize on a `Mutex`
+//! (the previous design took one lock per request, a measurable
+//! contention point at high worker counts).  Aggregation happens at
+//! [`Metrics::snapshot`] time: the reader loads each counter once;
+//! counters updated mid-snapshot may land in this snapshot or the next,
+//! which is the usual (and acceptable) monitoring semantics.
+//!
+//! Percentiles come from a fixed log-scaled histogram and are **linearly
+//! interpolated inside the winning bucket** (rank position between the
+//! bucket's lower and upper bound), so a p50 of uniform samples lands
+//! near the true median instead of snapping to a bucket edge.  The
+//! open-ended top bucket uses the observed max as its upper bound, and
+//! every percentile stays clamped to `max_us`.
 
-use std::sync::Mutex;
+use std::fmt;
+use std::sync::atomic::{AtomicU64, Ordering::Relaxed};
 
 /// Fixed log-scaled latency buckets (microseconds).
 const BUCKETS_US: [u64; 16] = [
@@ -8,30 +25,28 @@ const BUCKETS_US: [u64; 16] = [
     102_400, 204_800, 409_600, 819_200, u64::MAX,
 ];
 
-#[derive(Default, Clone, Debug)]
-struct Inner {
-    count: u64,
-    total_us: u64,
-    max_us: u64,
-    hist: [u64; 16],
-    batches: u64,
-    batched_requests: u64,
-    infer_allocs: u64,
-    cycle_allocs: u64,
-    resp_recycled: u64,
-    resp_fresh: u64,
-    shed: u64,
-    expired: u64,
-    gallery_len: u64,
-    gallery_scanned_rows: u64,
-    gallery_evictions: u64,
-    gallery_scan_us: u64,
-}
-
-/// Thread-safe metrics sink.
+/// Thread-safe, lock-free metrics sink.  Cumulative counters use
+/// `fetch_add`, the latency max uses `fetch_max`, and the gauges
+/// (`infer_allocs`, `cycle_allocs`, `gallery_len`) use plain stores —
+/// all relaxed, merged by [`Metrics::snapshot`].
 #[derive(Default)]
 pub struct Metrics {
-    inner: Mutex<Inner>,
+    count: AtomicU64,
+    total_us: AtomicU64,
+    max_us: AtomicU64,
+    hist: [AtomicU64; 16],
+    batches: AtomicU64,
+    batched_requests: AtomicU64,
+    infer_allocs: AtomicU64,
+    cycle_allocs: AtomicU64,
+    resp_recycled: AtomicU64,
+    resp_fresh: AtomicU64,
+    shed: AtomicU64,
+    expired: AtomicU64,
+    gallery_len: AtomicU64,
+    gallery_scanned_rows: AtomicU64,
+    gallery_evictions: AtomicU64,
+    gallery_scan_us: AtomicU64,
 }
 
 /// A point-in-time snapshot.
@@ -41,12 +56,13 @@ pub struct Snapshot {
     pub count: u64,
     /// mean end-to-end latency, microseconds
     pub mean_us: f64,
-    /// p50 latency (bucket upper bound, clamped to `max_us`)
+    /// p50 latency (interpolated within its bucket, clamped to `max_us`)
     pub p50_us: u64,
-    /// p99 latency (bucket upper bound, clamped to `max_us` so a sample
-    /// in the open-ended top bucket never reports `u64::MAX`)
+    /// p99 latency (interpolated within its bucket, clamped to `max_us`
+    /// so a sample in the open-ended top bucket never reports
+    /// `u64::MAX`)
     pub p99_us: u64,
-    /// p999 latency (bucket upper bound, clamped to `max_us`)
+    /// p999 latency (interpolated within its bucket, clamped to `max_us`)
     pub p999_us: u64,
     /// max observed latency
     pub max_us: u64,
@@ -88,57 +104,51 @@ pub struct Snapshot {
 }
 
 impl Metrics {
-    /// Record one completed request.
+    /// Record one completed request.  Lock-free: four relaxed atomic
+    /// read-modify-writes.
     pub fn record(&self, latency_us: u64) {
-        let mut g = self.inner.lock().unwrap();
-        g.count += 1;
-        g.total_us += latency_us;
-        g.max_us = g.max_us.max(latency_us);
+        self.count.fetch_add(1, Relaxed);
+        self.total_us.fetch_add(latency_us, Relaxed);
+        self.max_us.fetch_max(latency_us, Relaxed);
         let idx = BUCKETS_US.iter().position(|&b| latency_us <= b).unwrap_or(15);
-        g.hist[idx] += 1;
+        self.hist[idx].fetch_add(1, Relaxed);
     }
 
     /// Record one executed batch of `n` requests.
     pub fn record_batch(&self, n: usize) {
-        let mut g = self.inner.lock().unwrap();
-        g.batches += 1;
-        g.batched_requests += n as u64;
+        self.batches.fetch_add(1, Relaxed);
+        self.batched_requests.fetch_add(n as u64, Relaxed);
     }
 
     /// Record the allocation count of one batch's inference region (the
     /// CPU worker calls this with the `CountingAllocator` delta around
     /// its parse→forward→heads span).
     pub fn record_infer_allocs(&self, allocs: u64) {
-        let mut g = self.inner.lock().unwrap();
-        g.infer_allocs = allocs;
+        self.infer_allocs.store(allocs, Relaxed);
     }
 
     /// Record the allocation count of one whole batch cycle (inference +
     /// response transport) on the worker thread.
     pub fn record_cycle_allocs(&self, allocs: u64) {
-        let mut g = self.inner.lock().unwrap();
-        g.cycle_allocs = allocs;
+        self.cycle_allocs.store(allocs, Relaxed);
     }
 
     /// Record how many of a batch's responses reused a recycled pool
     /// buffer vs allocated a fresh one.
     pub fn record_responses(&self, recycled: u64, fresh: u64) {
-        let mut g = self.inner.lock().unwrap();
-        g.resp_recycled += recycled;
-        g.resp_fresh += fresh;
+        self.resp_recycled.fetch_add(recycled, Relaxed);
+        self.resp_fresh.fetch_add(fresh, Relaxed);
     }
 
     /// Record one request shed at admission (queue full).
     pub fn record_shed(&self) {
-        let mut g = self.inner.lock().unwrap();
-        g.shed += 1;
+        self.shed.fetch_add(1, Relaxed);
     }
 
     /// Record `n` admitted requests dropped because their deadline
     /// expired before execution.
     pub fn record_expired(&self, n: u64) {
-        let mut g = self.inner.lock().unwrap();
-        g.expired += n;
+        self.expired.fetch_add(n, Relaxed);
     }
 
     /// Record one gallery batch's scan work: the store size at the time
@@ -146,55 +156,104 @@ impl Metrics {
     /// scan wall time.
     pub fn record_gallery(&self, len: u64, rows: u64, evictions: u64,
                           scan_us: u64) {
-        let mut g = self.inner.lock().unwrap();
-        g.gallery_len = len;
-        g.gallery_scanned_rows += rows;
-        g.gallery_evictions += evictions;
-        g.gallery_scan_us += scan_us;
+        self.gallery_len.store(len, Relaxed);
+        self.gallery_scanned_rows.fetch_add(rows, Relaxed);
+        self.gallery_evictions.fetch_add(evictions, Relaxed);
+        self.gallery_scan_us.fetch_add(scan_us, Relaxed);
     }
 
-    fn percentile(hist: &[u64; 16], count: u64, q: f64) -> u64 {
+    /// Rank-`q` latency from the histogram: find the winning bucket,
+    /// then linearly interpolate the target rank between the bucket's
+    /// lower bound (the previous bucket's edge, 0 for the first) and its
+    /// upper bound (the observed max for the open-ended top bucket).
+    fn percentile(hist: &[u64; 16], count: u64, max_us: u64, q: f64) -> u64 {
         if count == 0 {
             return 0;
         }
-        let target = (count as f64 * q).ceil() as u64;
-        let mut acc = 0;
+        let target = (count as f64 * q).ceil().max(1.0) as u64;
+        let mut acc = 0u64;
         for (i, &c) in hist.iter().enumerate() {
-            acc += c;
-            if acc >= target {
-                return BUCKETS_US[i];
+            if acc + c >= target && c > 0 {
+                let lo = if i == 0 { 0 } else { BUCKETS_US[i - 1] };
+                let hi = if i == 15 { max_us.max(lo) } else { BUCKETS_US[i] };
+                // rank position inside this bucket, in (0, 1]
+                let frac = (target - acc) as f64 / c as f64;
+                let v = lo as f64 + frac * (hi - lo) as f64;
+                return (v.round() as u64).min(max_us);
             }
+            acc += c;
         }
-        BUCKETS_US[15]
+        max_us
     }
 
-    /// Take a snapshot.
+    /// Take a snapshot.  Lock-free; counters racing with the snapshot
+    /// land in this one or the next.
     pub fn snapshot(&self) -> Snapshot {
-        let g = self.inner.lock().unwrap();
+        let count = self.count.load(Relaxed);
+        let total_us = self.total_us.load(Relaxed);
+        let max_us = self.max_us.load(Relaxed);
+        let mut hist = [0u64; 16];
+        for (h, a) in hist.iter_mut().zip(self.hist.iter()) {
+            *h = a.load(Relaxed);
+        }
+        let batches = self.batches.load(Relaxed);
+        let batched_requests = self.batched_requests.load(Relaxed);
         Snapshot {
-            count: g.count,
-            mean_us: if g.count > 0 { g.total_us as f64 / g.count as f64 } else { 0.0 },
-            p50_us: Self::percentile(&g.hist, g.count, 0.5).min(g.max_us),
-            p99_us: Self::percentile(&g.hist, g.count, 0.99).min(g.max_us),
-            p999_us: Self::percentile(&g.hist, g.count, 0.999)
-                .min(g.max_us),
-            max_us: g.max_us,
-            mean_batch: if g.batches > 0 {
-                g.batched_requests as f64 / g.batches as f64
+            count,
+            mean_us: if count > 0 { total_us as f64 / count as f64 } else { 0.0 },
+            p50_us: Self::percentile(&hist, count, max_us, 0.5),
+            p99_us: Self::percentile(&hist, count, max_us, 0.99),
+            p999_us: Self::percentile(&hist, count, max_us, 0.999),
+            max_us,
+            mean_batch: if batches > 0 {
+                batched_requests as f64 / batches as f64
             } else {
                 0.0
             },
-            last_infer_allocs: g.infer_allocs,
-            last_cycle_allocs: g.cycle_allocs,
-            resp_recycled: g.resp_recycled,
-            resp_fresh: g.resp_fresh,
-            shed: g.shed,
-            expired: g.expired,
-            gallery_len: g.gallery_len,
-            gallery_scanned_rows: g.gallery_scanned_rows,
-            gallery_evictions: g.gallery_evictions,
-            gallery_scan_us: g.gallery_scan_us,
+            last_infer_allocs: self.infer_allocs.load(Relaxed),
+            last_cycle_allocs: self.cycle_allocs.load(Relaxed),
+            resp_recycled: self.resp_recycled.load(Relaxed),
+            resp_fresh: self.resp_fresh.load(Relaxed),
+            shed: self.shed.load(Relaxed),
+            expired: self.expired.load(Relaxed),
+            gallery_len: self.gallery_len.load(Relaxed),
+            gallery_scanned_rows: self.gallery_scanned_rows.load(Relaxed),
+            gallery_evictions: self.gallery_evictions.load(Relaxed),
+            gallery_scan_us: self.gallery_scan_us.load(Relaxed),
         }
+    }
+}
+
+impl Snapshot {
+    /// The canonical one-line human rendering — the single formatter the
+    /// `serve`/`loadtest`/`gallery` subcommands and test logs all share
+    /// (previously each call site hand-rolled its own subset of fields).
+    /// Gallery scan accounting is appended only when the snapshot saw
+    /// gallery work.
+    // lint: allow(alloc) reason=cold reporting path: human-readable summary string
+    pub fn to_text(&self) -> String {
+        let mut s = format!(
+            "n={} mean={:.0}us p50={}us p99={}us p999={}us max={}us \
+             mean_batch={:.2} shed={} expired={}",
+            self.count, self.mean_us, self.p50_us, self.p99_us,
+            self.p999_us, self.max_us, self.mean_batch, self.shed,
+            self.expired);
+        if self.gallery_scanned_rows > 0 {
+            s.push_str(&format!(
+                " | gallery len={} scanned={} rows ({:.1} Mrows/s) \
+                 evictions={}",
+                self.gallery_len, self.gallery_scanned_rows,
+                self.gallery_scanned_rows as f64
+                    / self.gallery_scan_us.max(1) as f64,
+                self.gallery_evictions));
+        }
+        s
+    }
+}
+
+impl fmt::Display for Snapshot {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.to_text())
     }
 }
 
@@ -233,6 +292,43 @@ mod tests {
         assert!(s.p50_us <= s.p99_us && s.p99_us <= s.p999_us);
     }
 
+    /// Known distribution, closed-form check: 1..=100 µs, one sample
+    /// each.  Ranks 1..=50 land in bucket [0, 50], ranks 51..=100 in
+    /// (50, 100].  Interpolation puts p50 at the bucket top (rank 50 of
+    /// 50 → 0+1.0·50 = 50) and p99 at rank 49 of 50 inside (50, 100] →
+    /// 50+0.98·50 = 99 — both exactly the true order statistics, where
+    /// the old bucket-edge rounding reported 50 and 100.
+    #[test]
+    fn percentiles_interpolate_within_buckets() {
+        let m = Metrics::default();
+        for v in 1..=100u64 {
+            m.record(v);
+        }
+        let s = m.snapshot();
+        assert_eq!(s.p50_us, 50);
+        assert_eq!(s.p99_us, 99);
+        assert_eq!(s.max_us, 100);
+        // all mass in one bucket: interpolation stays inside it
+        let m2 = Metrics::default();
+        for _ in 0..4 {
+            m2.record(300); // bucket (200, 400]
+        }
+        let s2 = m2.snapshot();
+        assert!(s2.p50_us > 200 && s2.p50_us <= 300,
+                "p50 {} must stay in-bucket and clamped to max", s2.p50_us);
+        assert_eq!(s2.p999_us, 300, "top rank clamps to observed max");
+    }
+
+    /// A single sample reports itself (clamped) at every percentile.
+    #[test]
+    fn single_sample_percentiles_clamp_to_it() {
+        let m = Metrics::default();
+        m.record(75);
+        let s = m.snapshot();
+        assert_eq!((s.p50_us, s.p99_us, s.p999_us, s.max_us),
+                   (75, 75, 75, 75));
+    }
+
     #[test]
     fn shed_and_expired_counters_accumulate() {
         let m = Metrics::default();
@@ -262,5 +358,50 @@ mod tests {
         m.record_batch(8);
         m.record_batch(4);
         assert!((m.snapshot().mean_batch - 6.0).abs() < 1e-9);
+    }
+
+    /// Many threads hammer the sink lock-free; the final snapshot sums
+    /// must be exact (relaxed RMWs never lose increments).
+    #[test]
+    fn concurrent_recording_loses_nothing() {
+        let m = std::sync::Arc::new(Metrics::default());
+        let mut handles = Vec::new();
+        for t in 0..8u64 {
+            let m = m.clone();
+            handles.push(std::thread::spawn(move || {
+                for i in 0..1000u64 {
+                    m.record(t * 1000 + i);
+                    if i % 10 == 0 {
+                        m.record_shed();
+                    }
+                    m.record_responses(1, 0);
+                }
+                m.record_batch(5);
+            }));
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+        let s = m.snapshot();
+        assert_eq!(s.count, 8000);
+        assert_eq!(s.shed, 800);
+        assert_eq!(s.resp_recycled, 8000);
+        assert_eq!(s.max_us, 7999);
+        assert!((s.mean_batch - 5.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn snapshot_text_is_shared_and_complete() {
+        let m = Metrics::default();
+        m.record(100);
+        m.record_shed();
+        let s = m.snapshot();
+        let text = s.to_text();
+        assert!(text.contains("n=1"));
+        assert!(text.contains("shed=1"));
+        assert!(!text.contains("gallery"), "no gallery work → no suffix");
+        assert_eq!(format!("{s}"), text, "Display delegates to to_text");
+        m.record_gallery(10, 500, 1, 20);
+        assert!(m.snapshot().to_text().contains("gallery len=10"));
     }
 }

@@ -21,6 +21,7 @@ use crate::engine::{Engine, JointConfig, JointKind};
 use crate::error::{Error, Result};
 use crate::gallery::{GalleryOptions, GalleryStore};
 use crate::model::ParamStore;
+use crate::obs::ObsHub;
 use crate::runtime::{load_flat_params, HostTensor, Registry};
 
 use super::batcher::VariantWorker;
@@ -57,6 +58,9 @@ pub struct Coordinator {
     /// per-gallery-model shared embedding stores (empty unless
     /// [`CpuWorkloads::gallery`] booted a gallery pool)
     galleries: Vec<(String, Arc<GalleryStore>)>,
+    /// span-ring hub shared by every worker; `None` unless
+    /// [`ServingConfig::trace_capacity`] > 0
+    hub: Option<Arc<ObsHub>>,
     /// serving config used for all workers
     pub cfg: ServingConfig,
 }
@@ -70,6 +74,8 @@ impl Coordinator {
     pub fn boot(registry: &Registry, artifacts_dir: &Path,
                 selection: &[(&str, Vec<String>)], cfg: ServingConfig)
                 -> Result<Coordinator> {
+        let hub = (cfg.trace_capacity > 0)
+            .then(|| ObsHub::new(cfg.trace_capacity));
         let mut router = Router::new();
         for (model, names) in selection {
             for name in names {
@@ -81,7 +87,8 @@ impl Coordinator {
                 let hlo = registry.hlo_path(name)?;
                 let mode = entry.meta.mode.clone();
                 let r = entry.meta.r;
-                let worker = VariantWorker::spawn(hlo, entry, params, &cfg);
+                let worker = VariantWorker::spawn(hlo, entry, params, &cfg,
+                                                  hub.as_ref());
                 router.add_variant(model, Variant {
                     artifact: name.clone(),
                     mode,
@@ -94,6 +101,7 @@ impl Coordinator {
             router,
             pool: Arc::new(TensorPool::new()),
             galleries: Vec::new(),
+            hub,
             cfg,
         })
     }
@@ -127,6 +135,8 @@ impl Coordinator {
                               cfg: ServingConfig) -> Result<Coordinator> {
         let engine = Arc::new(Engine::new(ps.clone()));
         let pool = Arc::new(TensorPool::new());
+        let hub = (cfg.trace_capacity > 0)
+            .then(|| ObsHub::new(cfg.trace_capacity));
         let mut router = Router::new();
         for (model, rungs) in &workloads.vision {
             for (mode, r) in rungs {
@@ -136,7 +146,8 @@ impl Coordinator {
                     ..Default::default()
                 };
                 let worker = VariantWorker::spawn_cpu(
-                    engine.clone(), model_cfg, pool.clone(), &cfg);
+                    engine.clone(), model_cfg, pool.clone(), &cfg,
+                    hub.as_ref());
                 router.add_variant_for(Workload::Vision, model, Variant {
                     artifact: format!("cpu_{}_r{:.0}", mode, r * 1000.0),
                     mode: mode.clone(),
@@ -153,7 +164,8 @@ impl Coordinator {
                     ..Default::default()
                 };
                 let worker = VariantWorker::spawn_cpu_text(
-                    engine.clone(), model_cfg, pool.clone(), &cfg);
+                    engine.clone(), model_cfg, pool.clone(), &cfg,
+                    hub.as_ref());
                 router.add_variant_for(Workload::Text, model, Variant {
                     artifact: format!("text_{}_r{:.0}", mode, r * 1000.0),
                     mode: mode.clone(),
@@ -174,7 +186,8 @@ impl Coordinator {
                     JointKind::Retrieval => JointConfig::retrieval(vision),
                 };
                 let worker = VariantWorker::spawn_cpu_joint(
-                    engine.clone(), model_cfg, pool.clone(), &cfg);
+                    engine.clone(), model_cfg, pool.clone(), &cfg,
+                    hub.as_ref());
                 router.add_variant_for(Workload::Joint, model, Variant {
                     artifact: format!("joint_{}_r{:.0}", mode, r * 1000.0),
                     mode: mode.clone(),
@@ -201,7 +214,7 @@ impl Coordinator {
                 let model_cfg = JointConfig::retrieval(vision);
                 let worker = VariantWorker::spawn_cpu_gallery(
                     engine.clone(), model_cfg, store.clone(), pool.clone(),
-                    &cfg);
+                    &cfg, hub.as_ref());
                 router.add_variant_for(Workload::Gallery, model, Variant {
                     artifact: format!("gallery_{}_r{:.0}", mode, r * 1000.0),
                     mode: mode.clone(),
@@ -210,7 +223,15 @@ impl Coordinator {
                 });
             }
         }
-        Ok(Coordinator { router, pool, galleries, cfg })
+        Ok(Coordinator { router, pool, galleries, hub, cfg })
+    }
+
+    /// The shared span-ring hub, when tracing is enabled
+    /// ([`ServingConfig::trace_capacity`] > 0).  Callers drain it
+    /// ([`ObsHub::drain`]) to reconstruct per-stage request timelines —
+    /// the load harness turns the drained spans into a Chrome trace.
+    pub fn obs_hub(&self) -> Option<&Arc<ObsHub>> {
+        self.hub.as_ref()
     }
 
     /// The shared embedding store behind a gallery model's worker pool

@@ -85,6 +85,7 @@ use crate::error::{Error, Result};
 use crate::model::encoder::{encoder_forward_slot, encoder_forward_slots,
                             SeqSlot};
 use crate::model::{EncoderCfg, ParamStore, ResolvedEncoder, ScratchPool};
+use crate::obs::{MergeTelemetry, RingWriter};
 use crate::tensor::{Mat, MatRef};
 
 /// Disjoint borrows of everything one tower contributes to a stealing
@@ -255,6 +256,34 @@ impl Session {
     /// The configured fan-out width.
     fn workers(&self) -> usize {
         self.workers
+    }
+
+    /// Attach (or detach, with `None`) a span recorder plus per-layer
+    /// merge-telemetry capture with room for `telemetry_rows` rows (size
+    /// as depth × max batch).  Instrumentation rides the scratch pool's
+    /// primary lane only — see the single-producer contract in
+    /// [`crate::obs::ring`].  Cold path: call at boot, never per batch.
+    pub fn set_observability(&mut self, rec: Option<RingWriter>,
+                             telemetry_rows: usize) {
+        self.pool.set_observability(rec, telemetry_rows);
+    }
+
+    /// The attached span recorder, if any (model heads record through
+    /// the same ring as the layer loop).
+    pub fn recorder(&self) -> Option<&RingWriter> {
+        self.pool.recorder()
+    }
+
+    /// Per-layer merge telemetry captured by the primary scratch lane
+    /// since its last reset (`None` until a scratch lane exists).
+    pub fn merge_telemetry(&self) -> Option<&MergeTelemetry> {
+        self.pool.merge_telemetry()
+    }
+
+    /// Reset the captured merge telemetry (start of an observation
+    /// window).
+    pub fn reset_merge_telemetry(&mut self) {
+        self.pool.reset_merge_telemetry();
     }
 
     /// Split the session into the disjoint borrows a stealing joint

@@ -34,6 +34,7 @@ use crate::model::encoder::{encoder_forward_towers, TowerBatch};
 use crate::model::params::{MatSpan, VecSpan};
 use crate::model::text::l2_normalize;
 use crate::model::{EncoderCfg, ParamStore, MM_TEXT_DEPTH, MM_TEXT_DIM};
+use crate::obs::{MergeTelemetry, RingWriter};
 use crate::tensor::{dense_into, Mat};
 
 use super::{Engine, OutputPool, Session, VitSession};
@@ -251,6 +252,32 @@ impl JointSession {
     /// [`JointSession::set_vision_workers`].
     pub fn set_text_workers(&mut self, workers: usize) {
         self.text.set_workers(workers);
+    }
+
+    /// Attach a span recorder + merge-telemetry capture to the vision
+    /// tower's scratch pool — merging happens there, and the stealing
+    /// joint forward drains both towers through that pool, so one
+    /// primary lane covers the whole round (see
+    /// [`Session::set_observability`](super::Session::set_observability)).
+    pub fn set_observability(&mut self, rec: Option<RingWriter>,
+                             telemetry_rows: usize) {
+        self.vision.set_observability(rec, telemetry_rows);
+    }
+
+    /// The attached span recorder, if any (callers use it to record
+    /// model-level stages around session calls).
+    pub fn recorder(&self) -> Option<&RingWriter> {
+        self.vision.recorder()
+    }
+
+    /// Per-layer merge telemetry captured since the last reset.
+    pub fn merge_telemetry(&self) -> Option<&MergeTelemetry> {
+        self.vision.merge_telemetry()
+    }
+
+    /// Reset the captured merge telemetry.
+    pub fn reset_merge_telemetry(&mut self) {
+        self.vision.reset_merge_telemetry();
     }
 
     /// Start a round with `bv` images and `bt` token sequences — the two

@@ -8,6 +8,7 @@ use crate::data::Rng;
 use crate::error::{Error, Result};
 use crate::model::params::{MatSpan, VecSpan};
 use crate::model::{EncoderCfg, ParamStore};
+use crate::obs::{MergeTelemetry, RingWriter, Stage};
 use crate::tensor::{dense_into, Mat, MatRef};
 
 use super::head::ClassifierHead;
@@ -61,6 +62,30 @@ impl VitSession {
     /// [`Session::set_workers`](super::Session::set_workers)).
     pub fn set_workers(&mut self, workers: usize) {
         self.session.set_workers(workers);
+    }
+
+    /// Attach a span recorder + merge-telemetry capture (see
+    /// [`Session::set_observability`](super::Session::set_observability));
+    /// the classifier-head stage records through the same ring.
+    pub fn set_observability(&mut self, rec: Option<RingWriter>,
+                             telemetry_rows: usize) {
+        self.session.set_observability(rec, telemetry_rows);
+    }
+
+    /// The attached span recorder, if any (callers use it to record
+    /// model-level stages around session calls).
+    pub fn recorder(&self) -> Option<&RingWriter> {
+        self.session.recorder()
+    }
+
+    /// Per-layer merge telemetry captured since the last reset.
+    pub fn merge_telemetry(&self) -> Option<&MergeTelemetry> {
+        self.session.merge_telemetry()
+    }
+
+    /// Reset the captured merge telemetry.
+    pub fn reset_merge_telemetry(&mut self) {
+        self.session.reset_merge_telemetry();
     }
 
     /// Start a batch of `count` samples.
@@ -125,7 +150,7 @@ impl VitSession {
     /// per-sample buffers ([`VitSession::logits`]).
     pub fn forward(&mut self, seed: u64) -> Result<()> {
         self.session.forward(seed)?;
-        self.head.apply(&self.ps, &self.session);
+        self.apply_head();
         Ok(())
     }
 
@@ -146,14 +171,19 @@ impl VitSession {
     /// back half of [`VitSession::forward`], for callers that drove the
     /// encoder externally via [`VitSession::tower_parts`].
     pub(super) fn apply_head(&mut self) {
+        let t0 = self.session.recorder().map(|r| r.now_us());
         self.head.apply(&self.ps, &self.session);
+        if let Some(r) = self.session.recorder() {
+            r.span_since(Stage::Head, 0, t0.unwrap_or(0),
+                         self.session.batch_len() as u32);
+        }
     }
 
     /// Serial shared-RNG variant (the historical single-sample contract;
     /// see [`Session::forward_serial`](super::Session::forward_serial)).
     pub fn forward_serial(&mut self, rng: &mut Rng) -> Result<()> {
         self.session.forward_serial(rng)?;
-        self.head.apply(&self.ps, &self.session);
+        self.apply_head();
         Ok(())
     }
 

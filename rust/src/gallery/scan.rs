@@ -21,6 +21,7 @@
 use super::store::GalleryStore;
 use super::topk::{merge_shards_into, Hit, TopK};
 use crate::error::{Error, Result};
+use crate::obs::{RingWriter, SpanEvent, Stage};
 use crate::tensor::{dot_with_lanes, DOT_LANES};
 
 /// How row similarities are scored.
@@ -65,13 +66,34 @@ pub struct GalleryScratch {
     topks: Vec<TopK>,
     cursors: Vec<usize>,
     blocks: Vec<BlockRef>,
+    /// span recorder for this scratch's owning worker (recording stays
+    /// on the calling thread — scoped scan workers never touch it, so
+    /// the ring's single-producer contract holds)
+    recorder: Option<RingWriter>,
+    /// monotonically increasing query ordinal stamped on scan spans
+    queries: u64,
 }
 
 impl GalleryScratch {
     /// Empty scratch; buffers warm on first use.
     // lint: allow(alloc) reason=cold constructor: empty scratch spines, warmed by the first query
     pub fn new() -> Self {
-        GalleryScratch { topks: Vec::new(), cursors: Vec::new(), blocks: Vec::new() }
+        GalleryScratch { topks: Vec::new(), cursors: Vec::new(),
+                         blocks: Vec::new(), recorder: None, queries: 0 }
+    }
+
+    /// Attach (or detach) a span recorder: subsequent scans record
+    /// coarse-rank / exact-scan / rescan / k-way-merge spans through it.
+    /// Cold path: call once when the owning worker boots.
+    pub fn set_recorder(&mut self, rec: Option<RingWriter>) {
+        self.recorder = rec;
+    }
+
+    /// Next query ordinal (advances the counter).
+    fn next_query(&mut self) -> u64 {
+        let q = self.queries;
+        self.queries += 1;
+        q
     }
 }
 
@@ -161,6 +183,8 @@ pub fn scan_into(
     if probe.len() != store.dim() {
         return Err(Error::Shape("gallery probe has wrong dimension".into()));
     }
+    let qid = scratch.next_query();
+    let t0 = scratch.recorder.as_ref().map(|r| r.now_us());
     let ns = store.n_shards();
     while scratch.topks.len() < ns {
         scratch.topks.push(TopK::new());
@@ -192,7 +216,21 @@ pub fn scan_into(
         stats.rows += t.offered();
         stats.evictions += t.evictions();
     }
+    let t1 = scratch.recorder.as_ref().map(|r| r.now_us());
     merge_shards_into(&mut scratch.topks[..ns], &mut scratch.cursors, k, out);
+    if let Some(r) = scratch.recorder.as_ref() {
+        r.record(SpanEvent {
+            stage: Stage::GalleryScan,
+            id: qid,
+            t_start_us: t0.unwrap_or(0),
+            t_end_us: t1.unwrap_or(0),
+            payload: stats.rows.min(u32::MAX as u64) as u32,
+            a: stats.evictions as f32,
+            b: 0.0,
+        });
+        r.span_since(Stage::GalleryMerge, qid, t1.unwrap_or(0),
+                     out.len() as u32);
+    }
     Ok(stats)
 }
 
@@ -214,6 +252,8 @@ pub fn scan_two_stage_into(
     if probe.len() != store.dim() {
         return Err(Error::Shape("gallery probe has wrong dimension".into()));
     }
+    let qid = scratch.next_query();
+    let t0 = scratch.recorder.as_ref().map(|r| r.now_us());
     let dim = store.dim();
     let ns = store.n_shards();
     let block_rows = store.options().block_rows;
@@ -255,6 +295,18 @@ pub fn scan_two_stage_into(
             .total_cmp(&a.score)
             .then((a.shard, a.seg, a.block).cmp(&(b.shard, b.seg, b.block)))
     });
+    let t1 = scratch.recorder.as_ref().map(|r| r.now_us());
+    if let Some(r) = scratch.recorder.as_ref() {
+        r.record(SpanEvent {
+            stage: Stage::GalleryCoarse,
+            id: qid,
+            t_start_us: t0.unwrap_or(0),
+            t_end_us: t1.unwrap_or(0),
+            payload: total.min(u32::MAX as usize) as u32,
+            a: nprobe as f32,
+            b: 0.0,
+        });
+    }
     // stage two: exact rescan of the selected blocks
     for br in scratch.blocks[..nprobe].iter() {
         let s = br.shard as usize;
@@ -279,7 +331,23 @@ pub fn scan_two_stage_into(
         blocks_probed: nprobe as u64,
         blocks_total: total as u64,
     };
+    let t2 = scratch.recorder.as_ref().map(|r| r.now_us());
+    if let Some(r) = scratch.recorder.as_ref() {
+        r.record(SpanEvent {
+            stage: Stage::GalleryRescan,
+            id: qid,
+            t_start_us: t1.unwrap_or(0),
+            t_end_us: t2.unwrap_or(0),
+            payload: stats.rows.min(u32::MAX as u64) as u32,
+            a: nprobe as f32,
+            b: 0.0,
+        });
+    }
     merge_shards_into(&mut scratch.topks[..1], &mut scratch.cursors, k, out);
+    if let Some(r) = scratch.recorder.as_ref() {
+        r.span_since(Stage::GalleryMerge, qid, t2.unwrap_or(0),
+                     out.len() as u32);
+    }
     Ok(stats)
 }
 
@@ -428,6 +496,40 @@ mod tests {
         assert!(stats.blocks_total > 8);
         assert!(stats.rows < 512);
         assert!(!out.is_empty());
+    }
+
+    /// A recorder-attached scan returns identical hits and records the
+    /// gallery stage spans with advancing query ordinals.
+    #[test]
+    fn instrumented_scans_record_spans_and_match_bare_results() {
+        let store = build_store(301, 16, 4, 0x5CA1);
+        let probe = probe_for(16, 0x90_B3);
+        let mut bare = GalleryScratch::new();
+        let mut want = Vec::new();
+        scan_into(&store, &probe, 10, ScanMode::Dot, 1, &mut bare, &mut want)
+            .expect("bare scan");
+
+        let ring = crate::obs::SpanRing::with_capacity(64);
+        let mut obs = GalleryScratch::new();
+        obs.set_recorder(Some(ring.writer(std::time::Instant::now())));
+        let mut out = Vec::new();
+        scan_into(&store, &probe, 10, ScanMode::Dot, 1, &mut obs, &mut out)
+            .expect("instrumented scan");
+        assert_eq!(out, want, "recorder must not change results");
+        scan_two_stage_into(&store, &probe, 10, 8, ScanMode::Dot, &mut obs,
+                            &mut out)
+            .expect("instrumented two-stage");
+        let mut evs = Vec::new();
+        ring.drain_into(&mut evs);
+        let stages: Vec<Stage> = evs.iter().map(|e| e.stage).collect();
+        assert_eq!(stages,
+                   vec![Stage::GalleryScan, Stage::GalleryMerge,
+                        Stage::GalleryCoarse, Stage::GalleryRescan,
+                        Stage::GalleryMerge]);
+        assert_eq!(evs[0].payload, 301, "exact scan scored every row");
+        assert_eq!(evs[0].id, 0);
+        assert_eq!(evs[2].id, 1, "query ordinal advances per scan");
+        assert_eq!(evs[3].a, 8.0, "rescan probed 8 blocks");
     }
 
     #[test]

@@ -27,6 +27,7 @@ pub mod gallery;
 pub mod graph;
 pub mod merge;
 pub mod model;
+pub mod obs;
 pub mod runtime;
 pub mod tensor;
 pub mod util;

@@ -7,6 +7,7 @@
 //!   * `serve`    — boot the coordinator and run a trace through it.
 //!   * `loadtest` — closed-loop load harness against the typed router.
 //!   * `gallery`  — embed-once/score-millions gallery serving demo.
+//!   * `trace-check` — validate a Chrome trace emitted by `--trace-out`.
 //!
 //! Flags: `--artifacts DIR`, per-subcommand flags below.
 
@@ -31,12 +32,15 @@ pitome <command> [flags]
   classify --mode M --r R --n N     off-the-shelf accuracy
   spectral --steps S --k K          Theorem-1 experiment
   serve --requests N --rate R       serve a synthetic trace
+    [--prom-every N]  (dump Prometheus exposition every N requests)
   loadtest --requests N --rate R    load harness (shed/deadline aware)
     [--burst B] [--diurnal D] [--deadline-ms MS] [--users U --think-ms MS]
     [--queue CAP] [--scale S] [--mix-vision W --mix-text W --mix-joint W]
     [--mix-gallery W --gallery-prefill N]
+    [--trace-out FILE [--trace-cap EVENTS] [--trace-sample N]]
   gallery --items N --queries Q     sharded embedding-gallery demo
     [--users U] [--rate R] [--seed S]
+  trace-check FILE                  validate a --trace-out Chrome trace
 global: --artifacts DIR (default ./artifacts)";
 
 fn main() -> anyhow::Result<()> {
@@ -59,9 +63,18 @@ fn main() -> anyhow::Result<()> {
             &dir,
             args.get_parse("requests", 256),
             args.get_parse("rate", 300.0),
+            args.get_parse("prom-every", 0usize),
         ),
         Some("loadtest") => loadtest(&args),
         Some("gallery") => gallery(&args),
+        Some("trace-check") => trace_check(
+            args.positional
+                .get(1)
+                .map(String::as_str)
+                .ok_or_else(|| {
+                    anyhow::anyhow!("usage: pitome trace-check FILE")
+                })?,
+        ),
         _ => {
             println!("{USAGE}");
             Ok(())
@@ -108,7 +121,8 @@ fn spectral(steps: usize, k: usize) {
     }
 }
 
-fn serve(dir: &PathBuf, requests: usize, rate: f64) -> anyhow::Result<()> {
+fn serve(dir: &PathBuf, requests: usize, rate: f64, prom_every: usize)
+         -> anyhow::Result<()> {
     // mixed-workload traffic (vision + text + joint through the typed
     // router) is available when the store covers every tower — i.e. the
     // synthetic multimodal fallback; trained vit-only params serve the
@@ -208,6 +222,12 @@ fn serve(dir: &PathBuf, requests: usize, rate: f64) -> anyhow::Result<()> {
             Ok(rx) => pending.push(rx),
             Err(e) => eprintln!("submit failed: {e}"),
         }
+        // periodic Prometheus dump: the scrape-endpoint stand-in for a
+        // process with no HTTP listener
+        if prom_every > 0 && i > 0 && i % prom_every == 0 {
+            print!("{}", pitome::obs::export::prometheus_text(
+                &coord.metrics_typed()));
+        }
     }
     let mut ok = 0usize;
     for rx in pending {
@@ -219,13 +239,14 @@ fn serve(dir: &PathBuf, requests: usize, rate: f64) -> anyhow::Result<()> {
     println!("served {ok}/{requests} in {dur:.2}s ({:.1} req/s)",
              ok as f64 / dur);
     for (w, model, artifact, snap) in coord.metrics_typed() {
-        println!("  {}/{model}/{artifact}: n={} mean={:.0}us p50={}us \
-                  p99={}us mean_batch={:.2}",
-                 w.name(), snap.count, snap.mean_us, snap.p50_us,
-                 snap.p99_us, snap.mean_batch);
+        println!("  {}/{model}/{artifact}: {snap}", w.name());
     }
     if mixed {
         println!("  recycle hit rate: {}", pool.hit_rate_summary());
+    }
+    if prom_every > 0 {
+        print!("{}", pitome::obs::export::prometheus_text(
+            &coord.metrics_typed()));
     }
     Ok(())
 }
@@ -279,9 +300,15 @@ fn loadtest(args: &pitome::util::Args) -> anyhow::Result<()> {
             Vec::new()
         },
     };
+    // --trace-out implies tracing: span rings sized by --trace-cap plus
+    // client-side request sampling every --trace-sample completions
+    let trace_out = args.get("trace-out", "");
     let scfg = ServingConfig {
         workers: pitome::merge::batch::recommended_workers(),
         queue_capacity: args.get_parse("queue", 64usize),
+        trace_capacity: args.get_parse(
+            "trace-cap",
+            if trace_out.is_empty() { 0usize } else { 65_536 }),
         ..Default::default()
     };
     let coord = Coordinator::boot_cpu_workloads(&ps, &workloads, scfg)
@@ -292,11 +319,68 @@ fn loadtest(args: &pitome::util::Args) -> anyhow::Result<()> {
         gallery_prefill: args.get_parse(
             "gallery-prefill",
             if mix_gallery > 0.0 { 256usize } else { 0 }),
+        trace_sample: args.get_parse(
+            "trace-sample",
+            if trace_out.is_empty() { 0usize } else { 1 }),
         ..Default::default()
     };
     let report = run_load(&coord, &opts)
         .map_err(|e| anyhow::anyhow!("{e}"))?;
     report.print();
+    for (w, model, artifact, snap) in coord.metrics_typed() {
+        println!("  {}/{model}/{artifact}: {snap}", w.name());
+    }
+    if !trace_out.is_empty() {
+        let mut threads = coord
+            .obs_hub()
+            .map(|h| h.drain())
+            .unwrap_or_default();
+        threads.extend(report.request_lanes);
+        let path = PathBuf::from(&trace_out);
+        pitome::obs::export::write_chrome_trace(&path, &threads)
+            .map_err(|e| anyhow::anyhow!("{e}"))?;
+        let spans: usize = threads.iter().map(|t| t.events.len()).sum();
+        println!("wrote Chrome trace {trace_out}: {} lanes, {spans} spans \
+                  (open in Perfetto or chrome://tracing)", threads.len());
+    }
+    Ok(())
+}
+
+/// `pitome trace-check FILE` — validate a Chrome trace-event file
+/// emitted by `loadtest --trace-out` (the CI smoke gate): the JSON must
+/// parse, carry a non-empty `traceEvents` array, and every complete
+/// (`ph == "X"`) event must have a name, timestamp and duration.
+fn trace_check(path: &str) -> anyhow::Result<()> {
+    let text = std::fs::read_to_string(path)
+        .map_err(|e| anyhow::anyhow!("{path}: {e}"))?;
+    let doc = pitome::util::parse_json(&text)
+        .map_err(|e| anyhow::anyhow!("{path}: invalid JSON: {e}"))?;
+    let events = doc
+        .get("traceEvents")
+        .and_then(|e| e.arr())
+        .ok_or_else(|| anyhow::anyhow!("{path}: no traceEvents array"))?;
+    if events.is_empty() {
+        return Err(anyhow::anyhow!("{path}: traceEvents is empty"));
+    }
+    let mut spans = 0usize;
+    for (i, ev) in events.iter().enumerate() {
+        let name = ev.get("name").and_then(|n| n.str());
+        let ph = ev.get("ph").and_then(|p| p.str());
+        if name.is_none() || ph.is_none() {
+            return Err(anyhow::anyhow!(
+                "{path}: event {i} missing name/ph"));
+        }
+        if ph == Some("X") {
+            if ev.get("ts").and_then(|t| t.num()).is_none()
+                || ev.get("dur").and_then(|d| d.num()).is_none()
+            {
+                return Err(anyhow::anyhow!(
+                    "{path}: span event {i} missing ts/dur"));
+            }
+            spans += 1;
+        }
+    }
+    println!("{path}: OK — {} trace events ({spans} spans)", events.len());
     Ok(())
 }
 
@@ -396,12 +480,7 @@ fn gallery(args: &pitome::util::Args) -> anyhow::Result<()> {
     report.print();
     for (w, model, artifact, snap) in coord.metrics_typed() {
         if snap.gallery_scanned_rows > 0 {
-            println!("  {}/{model}/{artifact}: scanned {} rows over {} \
-                      requests ({:.1} Mrows/s), {} heap evictions",
-                     w.name(), snap.gallery_scanned_rows, snap.count,
-                     snap.gallery_scanned_rows as f64
-                         / snap.gallery_scan_us.max(1) as f64,
-                     snap.gallery_evictions);
+            println!("  {}/{model}/{artifact}: {snap}", w.name());
         }
     }
     Ok(())

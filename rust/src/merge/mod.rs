@@ -60,6 +60,10 @@ pub use schedule::{fixed_k_plan, merge_plan, tokens_after_merge};
 pub use unmerge::{unmerge, MergeTracker};
 
 use crate::data::Rng;
+use crate::obs::merge_stats::{energy_summary, MergeLayerStats,
+                              MergeTelemetry};
+use crate::obs::ring::{RingWriter, SpanEvent};
+use crate::obs::stages::Stage;
 use crate::tensor::{CosineGram, Mat};
 
 /// Which merge algorithm to run in a block.
@@ -290,6 +294,13 @@ pub struct MergeScratch {
     pub out_x: Mat,
     /// merged sizes (valid after a [`merge_step_scratch`] call)
     pub out_sizes: Vec<f32>,
+    /// per-layer merge telemetry sink (disabled — zero capacity — by
+    /// default; the encoder stamps the layer index before each step)
+    pub telemetry: MergeTelemetry,
+    /// span recorder for per-layer gram/plan/apply timings (None by
+    /// default; attached by the owning worker at boot, primary lane only
+    /// — see the single-producer contract in [`crate::obs::ring`])
+    pub recorder: Option<RingWriter>,
 }
 
 impl MergeScratch {
@@ -306,7 +317,42 @@ impl MergeScratch {
             dct_freq: Mat::zeros(0, 0),
             out_x: Mat::zeros(0, 0),
             out_sizes: Vec::new(),
+            telemetry: MergeTelemetry::default(),
+            recorder: None,
         }
+    }
+
+    /// Record the apply span + telemetry row for one finished merge step
+    /// (no-op unless telemetry or a recorder is live; allocation-free —
+    /// the span ring and the telemetry buffer are both fixed-capacity).
+    fn note_apply(&mut self, li: u64, ctx: &MergeCtx, e_mean: f32,
+                  e_max: f32, e_p90: f32, t_start: Option<u64>,
+                  observed: bool) {
+        if !observed {
+            return;
+        }
+        let before = ctx.x.rows as u32;
+        let after = self.out_x.rows as u32;
+        if let Some(r) = self.recorder.as_ref() {
+            r.record(SpanEvent {
+                stage: Stage::LayerApply,
+                id: li,
+                t_start_us: t_start.unwrap_or(0),
+                t_end_us: r.now_us(),
+                payload: (before.min(0xFFFF) << 16) | after.min(0xFFFF),
+                a: e_mean,
+                b: e_p90,
+            });
+        }
+        self.telemetry.push(MergeLayerStats {
+            layer: 0, // stamped from the telemetry's current layer
+            tokens_before: before,
+            tokens_after: after,
+            protected: ctx.protect_first as u32,
+            energy_mean: e_mean,
+            energy_max: e_max,
+            energy_p90: e_p90,
+        });
     }
 }
 
@@ -325,7 +371,18 @@ impl Default for MergeScratch {
 /// into `s.plan` via the `*_plan_gram_into` builders, and apply it via
 /// [`apply_plan_into`]; DCT resynthesizes through its own scratch tiles;
 /// `k == 0` / `None` copies the input through.  Every path performs zero
-/// heap allocations once the scratch is warm.
+/// heap allocations once the scratch is warm — including when the
+/// embedded [`MergeTelemetry`] sink and span recorder are live (both are
+/// fixed-capacity; `tests/alloc_free.rs` runs warmed cycles with tracing
+/// enabled).
+///
+/// When `s.telemetry` is enabled or `s.recorder` is attached, the
+/// similarity-driven modes also summarize the step's ranking signal
+/// (the Eq.-4 energy scores; negated CLS attention for
+/// [`MergeMode::PiToMeAttn`]) into one [`MergeLayerStats`] row and three
+/// spans ([`Stage::LayerGram`]/[`Stage::LayerPlan`]/[`Stage::LayerApply`]);
+/// the similarity-free baselines record the apply span and a row with
+/// zero energies.
 pub fn merge_step_scratch(mode: MergeMode, ctx: &MergeCtx, rng: &mut Rng,
                           s: &mut MergeScratch) {
     if ctx.k == 0 || mode == MergeMode::None {
@@ -334,25 +391,55 @@ pub fn merge_step_scratch(mode: MergeMode, ctx: &MergeCtx, rng: &mut Rng,
         s.out_sizes.extend_from_slice(ctx.sizes);
         return;
     }
+    let observed = s.telemetry.enabled() || s.recorder.is_some();
+    let li = s.telemetry.layer() as u64;
     match mode {
         MergeMode::None => unreachable!(),
         MergeMode::Dct => {
+            let t0 = s.recorder.as_ref().map(|r| r.now_us());
             dct::dct_merge_into(ctx.x, ctx.sizes, ctx.k, ctx.protect_first,
                                 &mut s.dct_body, &mut s.dct_freq,
                                 &mut s.out_x, &mut s.out_sizes);
+            s.note_apply(li, ctx, 0.0, 0.0, 0.0, t0, observed);
         }
         MergeMode::Random => {
+            let t0 = s.recorder.as_ref().map(|r| r.now_us());
             random::random_plan_into(ctx.x.rows, ctx.k, ctx.protect_first,
                                      rng, &mut s.plan_bufs, &mut s.plan);
             apply_plan_into(ctx.x, ctx.sizes, &s.plan, &mut s.out_x,
                             &mut s.out_sizes);
+            s.note_apply(li, ctx, 0.0, 0.0, 0.0, t0, observed);
         }
         _ => {
+            let t0 = s.recorder.as_ref().map(|r| r.now_us());
             s.gram.rebuild(ctx.kf, &mut s.kn);
+            if let Some(r) = s.recorder.as_ref() {
+                r.span_since(Stage::LayerGram, li, t0.unwrap_or(0),
+                             ctx.x.rows as u32);
+            }
+            let t1 = s.recorder.as_ref().map(|r| r.now_us());
             plan_with_gram_into(mode, ctx, &s.gram, rng, &mut s.energy,
                                 &mut s.plan_bufs, &mut s.plan);
+            let (e_mean, e_max, e_p90) = if observed {
+                energy_summary(&s.energy)
+            } else {
+                (0.0, 0.0, 0.0)
+            };
+            if let Some(r) = s.recorder.as_ref() {
+                r.record(SpanEvent {
+                    stage: Stage::LayerPlan,
+                    id: li,
+                    t_start_us: t1.unwrap_or(0),
+                    t_end_us: r.now_us(),
+                    payload: ctx.protect_first as u32,
+                    a: e_max,
+                    b: e_mean,
+                });
+            }
+            let t2 = s.recorder.as_ref().map(|r| r.now_us());
             apply_plan_into(ctx.x, ctx.sizes, &s.plan, &mut s.out_x,
                             &mut s.out_sizes);
+            s.note_apply(li, ctx, e_mean, e_max, e_p90, t2, observed);
         }
     }
 }
@@ -512,6 +599,64 @@ mod tests {
             let total: f32 = out_sizes.iter().sum();
             assert!((total - 31.0).abs() < 1e-3, "{mode:?} {total}");
         }
+    }
+
+    /// Telemetry + spans ride the scratch step without changing its
+    /// numerics: every observed mode produces one row with the real
+    /// before/after counts, the similarity-driven step records gram/
+    /// plan/apply spans, and the energy summary matches a direct
+    /// summary of the step's ranking signal.
+    #[test]
+    fn scratch_step_captures_telemetry_and_spans() {
+        let (x, sizes) = mk(25, 8, 3);
+        let attn: Vec<f32> = (0..25).map(|i| 0.01 * i as f32).collect();
+        let ctx = MergeCtx {
+            x: &x, kf: &x, sizes: &sizes, attn_cls: &attn,
+            margin: 0.4, k: 6, protect_first: 1,
+            tofu_threshold: crate::config::DEFAULT_TOFU_PRUNE_THRESHOLD,
+        };
+        let mut bare = MergeScratch::new();
+        let mut r1 = Rng::new(1);
+        merge_step_scratch(MergeMode::PiToMe, &ctx, &mut r1, &mut bare);
+
+        let ring = crate::obs::SpanRing::with_capacity(64);
+        let mut s = MergeScratch::new();
+        s.telemetry.enable(8);
+        s.recorder = Some(ring.writer(std::time::Instant::now()));
+        s.telemetry.set_layer(5);
+        let mut r2 = Rng::new(1);
+        merge_step_scratch(MergeMode::PiToMe, &ctx, &mut r2, &mut s);
+        assert_eq!(s.out_x.rows, bare.out_x.rows,
+                   "observation must not change the merge");
+        assert!(s.out_x.max_abs_diff(&bare.out_x) == 0.0);
+
+        let rows = s.telemetry.rows();
+        assert_eq!(rows.len(), 1);
+        assert_eq!(rows[0].layer, 5);
+        assert_eq!(rows[0].tokens_before, 25);
+        assert_eq!(rows[0].tokens_after, 19);
+        assert_eq!(rows[0].protected, 1);
+        assert!(rows[0].energy_max >= rows[0].energy_p90);
+        assert!(rows[0].energy_max >= rows[0].energy_mean);
+        let mut events = Vec::new();
+        ring.drain_into(&mut events);
+        let stages: Vec<Stage> = events.iter().map(|e| e.stage).collect();
+        assert_eq!(stages, vec![Stage::LayerGram, Stage::LayerPlan,
+                                Stage::LayerApply]);
+        assert!(events.iter().all(|e| e.id == 5));
+        assert_eq!(events[2].payload, (25 << 16) | 19);
+
+        // similarity-free baseline: apply span + zero-energy row
+        s.telemetry.reset();
+        s.telemetry.set_layer(2);
+        let mut r3 = Rng::new(1);
+        merge_step_scratch(MergeMode::Random, &ctx, &mut r3, &mut s);
+        assert_eq!(s.telemetry.rows().len(), 1);
+        assert_eq!(s.telemetry.rows()[0].energy_max, 0.0);
+        events.clear();
+        ring.drain_into(&mut events);
+        assert_eq!(events.len(), 1);
+        assert_eq!(events[0].stage, Stage::LayerApply);
     }
 
     #[test]

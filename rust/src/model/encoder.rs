@@ -69,6 +69,9 @@ use crate::error::Result;
 use crate::merge::batch::{parallel_for2_mut_ctx, FragQueue};
 use crate::merge::energy::layer_margin;
 use crate::merge::{merge_step_scratch, MergeCtx, MergeMode, MergeScratch};
+use crate::obs::merge_stats::MergeTelemetry;
+use crate::obs::ring::RingWriter;
+use crate::obs::stages::Stage;
 use crate::tensor::{add_inplace, dense_into, dot, gelu_inplace, layernorm,
                     layernorm_into, matmul_into, softmax_rows, Mat, MatRef};
 
@@ -304,6 +307,35 @@ impl EncoderScratch {
     pub fn new() -> EncoderScratch {
         EncoderScratch { bufs: BlockBufs::new(), merge: MergeScratch::new() }
     }
+
+    /// Attach (or detach) a span recorder: the layer loop then records
+    /// per-layer attention/gram/plan/apply spans through it.  One live
+    /// recorder per ring — attach to exactly one scratch (the primary
+    /// lane); see the single-producer contract in [`crate::obs::ring`].
+    pub fn set_recorder(&mut self, rec: Option<RingWriter>) {
+        self.merge.recorder = rec;
+    }
+
+    /// Whether a span recorder is attached.
+    pub fn has_recorder(&self) -> bool {
+        self.merge.recorder.is_some()
+    }
+
+    /// Enable per-layer merge telemetry capture with room for `rows`
+    /// entries (size as depth × max batch for a serving worker).
+    pub fn enable_merge_telemetry(&mut self, rows: usize) {
+        self.merge.telemetry.enable(rows);
+    }
+
+    /// Forget captured merge telemetry rows (start of a batch).
+    pub fn reset_merge_telemetry(&mut self) {
+        self.merge.telemetry.reset();
+    }
+
+    /// The merge telemetry captured since the last reset.
+    pub fn merge_telemetry(&self) -> &MergeTelemetry {
+        &self.merge.telemetry
+    }
 }
 
 impl Default for EncoderScratch {
@@ -317,23 +349,72 @@ impl Default for EncoderScratch {
 /// encoder buffers; it grows lazily to the worker count in use.
 pub struct ScratchPool {
     scratches: Vec<EncoderScratch>,
+    /// span recorder for the primary lane (scratch 0); parallel fan-out
+    /// lanes stay uninstrumented so the ring keeps a single producer
+    recorder: Option<RingWriter>,
+    /// merge-telemetry capacity for the primary lane (0 = disabled)
+    telemetry_rows: usize,
 }
 
 impl ScratchPool {
     /// Empty pool; scratches are created on first use and then reused.
     // lint: allow(alloc) reason=cold constructor: pool starts empty and grows on first use
     pub fn new() -> ScratchPool {
-        ScratchPool { scratches: Vec::new() }
+        ScratchPool { scratches: Vec::new(), recorder: None,
+                      telemetry_rows: 0 }
+    }
+
+    /// Configure observability for the pool's primary lane: scratch 0
+    /// gets the span recorder and a telemetry buffer of `telemetry_rows`
+    /// rows; every other scratch stays silent (the ring's single-producer
+    /// contract — a multi-worker fan-out samples the primary lane's
+    /// layers rather than racing all lanes into one ring).
+    pub fn set_observability(&mut self, rec: Option<RingWriter>,
+                             telemetry_rows: usize) {
+        self.recorder = rec;
+        self.telemetry_rows = telemetry_rows;
+        self.attach_observability();
+    }
+
+    /// (Re)attach the configured recorder/telemetry to scratch 0.
+    // lint: allow(alloc) reason=cold boot/grow path: recorder Arc clone only when the pool grows or is reconfigured
+    fn attach_observability(&mut self) {
+        if let Some(first) = self.scratches.first_mut() {
+            first.set_recorder(self.recorder.clone());
+            first.enable_merge_telemetry(self.telemetry_rows);
+        }
     }
 
     /// Hand out `workers` scratches, growing the pool on first use (the
     /// grown scratches are reused on every later call — a pool that has
     /// seen its peak worker count never allocates again).
     pub fn take(&mut self, workers: usize) -> &mut [EncoderScratch] {
-        while self.scratches.len() < workers {
-            self.scratches.push(EncoderScratch::new());
+        if self.scratches.len() < workers {
+            while self.scratches.len() < workers {
+                self.scratches.push(EncoderScratch::new());
+            }
+            self.attach_observability();
         }
         &mut self.scratches[..workers]
+    }
+
+    /// The configured span recorder, if any (model-level stages — embed,
+    /// head — record through the same ring as the layer loop).
+    pub fn recorder(&self) -> Option<&RingWriter> {
+        self.recorder.as_ref()
+    }
+
+    /// The merge telemetry captured by the primary lane since its last
+    /// reset (empty when observability is off or nothing ran yet).
+    pub fn merge_telemetry(&self) -> Option<&MergeTelemetry> {
+        self.scratches.first().map(|s| s.merge_telemetry())
+    }
+
+    /// Reset the primary lane's merge telemetry (start of a batch).
+    pub fn reset_merge_telemetry(&mut self) {
+        if let Some(first) = self.scratches.first_mut() {
+            first.reset_merge_telemetry();
+        }
     }
 }
 
@@ -507,12 +588,18 @@ fn run_layers(ps: &ParamStore, re: &ResolvedEncoder, cfg: &EncoderCfg,
         debug_assert_eq!(x.rows, n_in, "plan mismatch at layer {l}");
         let bp = re.block(ps, l);
 
+        let t0 = s.merge.recorder.as_ref().map(|r| r.now_us());
         block_attention_into(&bp, cfg.heads, cfg.prop_attn, x, &sizes[..],
                              &mut s.bufs);
+        if let Some(r) = s.merge.recorder.as_ref() {
+            r.span_since(Stage::LayerAttention, l as u64, t0.unwrap_or(0),
+                         n_in as u32);
+        }
 
         // merge between attention and MLP (Eq. 2)
         let k = n_in - n_out;
         if k > 0 {
+            s.merge.telemetry.set_layer(l as u32);
             let margin = layer_margin(l, cfg.depth);
             let ctx = MergeCtx {
                 x: &*x,
@@ -972,6 +1059,61 @@ mod tests {
         for (a, b) in wrapper.iter().zip(&pooled) {
             assert!(a.max_abs_diff(b) == 0.0);
         }
+    }
+
+    /// A forward with a recorder + telemetry attached is bitwise
+    /// identical to an unobserved one, records one attention span per
+    /// layer, and captures one telemetry row per merging layer with the
+    /// plan's token counts.
+    #[test]
+    fn instrumented_forward_matches_and_reports_layers() {
+        let (vcfg, cfg) = test_cfg("pitome");
+        let ps = synthetic_vit_store(&vcfg, 42);
+        let re = ResolvedEncoder::new(&ps, &cfg).unwrap();
+        let n0 = cfg.plan[0];
+        let mut rng = Rng::new(9);
+        let x = Mat::from_fn(n0, cfg.dim,
+                             |_, _| (rng.next_f64() * 0.2 - 0.1) as f32);
+
+        let mut bare = EncoderScratch::new();
+        let mut slot = SeqSlot::new();
+        slot.set_input(&x);
+        let mut want = Mat::zeros(0, 0);
+        let mut r1 = Rng::new(1);
+        encoder_forward_slot(&ps, &re, &cfg, &mut slot, &mut want, &mut r1,
+                             &mut bare);
+
+        let ring = crate::obs::SpanRing::with_capacity(256);
+        let mut obs = EncoderScratch::new();
+        obs.set_recorder(Some(ring.writer(std::time::Instant::now())));
+        obs.enable_merge_telemetry(cfg.depth);
+        let mut slot2 = SeqSlot::new();
+        slot2.set_input(&x);
+        let mut got = Mat::zeros(0, 0);
+        let mut r2 = Rng::new(1);
+        encoder_forward_slot(&ps, &re, &cfg, &mut slot2, &mut got, &mut r2,
+                             &mut obs);
+        assert!(got.max_abs_diff(&want) == 0.0,
+                "observation must not change the forward");
+
+        let merging_layers: Vec<usize> = (0..cfg.depth)
+            .filter(|&l| cfg.plan[l] > cfg.plan[l + 1])
+            .collect();
+        let rows = obs.merge_telemetry().rows();
+        assert_eq!(rows.len(), merging_layers.len());
+        for (row, &l) in rows.iter().zip(&merging_layers) {
+            assert_eq!(row.layer as usize, l);
+            assert_eq!(row.tokens_before as usize, cfg.plan[l]);
+            assert_eq!(row.tokens_after as usize, cfg.plan[l + 1]);
+        }
+        let mut events = Vec::new();
+        ring.drain_into(&mut events);
+        let attn = events.iter()
+            .filter(|e| e.stage == Stage::LayerAttention).count();
+        assert_eq!(attn, cfg.depth, "one attention span per layer");
+        let applies = events.iter()
+            .filter(|e| e.stage == Stage::LayerApply).count();
+        assert_eq!(applies, merging_layers.len());
     }
 
     #[test]

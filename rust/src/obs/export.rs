@@ -1,0 +1,284 @@
+//! Exporters — everything here is **off the hot path**: rings are
+//! drained and formatted by whoever asks for a report (the `pitome
+//! serve` periodic dump, `pitome loadtest --trace-out`, the load
+//! harness), never by the workers that record.
+//!
+//! Two formats:
+//! * [`prometheus_text`] — Prometheus text exposition of every worker's
+//!   [`Snapshot`] (the counters `Metrics::snapshot` already aggregates),
+//!   labelled by workload/model/artifact.
+//! * [`chrome_trace_json`] / [`write_chrome_trace`] — Chrome trace-event
+//!   JSON (the `[{"ph":"X",...}]` array format) built from drained span
+//!   rings; load the file in Perfetto / `chrome://tracing` to see each
+//!   request's admission→respond timeline with per-layer merge stats in
+//!   the span args.
+
+use std::fmt::Write as _;
+use std::io::Write as _;
+use std::path::Path;
+
+use crate::coordinator::metrics::Snapshot;
+use crate::coordinator::request::Workload;
+
+use super::TraceThread;
+
+/// Stable lowercase label for a workload.
+fn workload_label(w: Workload) -> &'static str {
+    match w {
+        Workload::Vision => "vision",
+        Workload::Text => "text",
+        Workload::Joint => "joint",
+        Workload::Gallery => "gallery",
+    }
+}
+
+/// Append one labelled sample line.
+fn sample(out: &mut String, metric: &str, labels: &str, v: f64) {
+    let _ = writeln!(out, "{metric}{{{labels}}} {v}");
+}
+
+/// Render every variant's [`Snapshot`] as Prometheus text exposition
+/// (`# HELP`/`# TYPE` headers once per metric, one labelled sample per
+/// variant).  Input is exactly what `Coordinator::metrics_typed`
+/// returns.
+// lint: allow(alloc) reason=cold exporter: text exposition is built off the hot path
+pub fn prometheus_text(entries: &[(Workload, String, String, Snapshot)])
+                       -> String {
+    let mut out = String::new();
+    let metrics: [(&str, &str, &str); 12] = [
+        ("pitome_requests_total", "counter", "completed requests"),
+        ("pitome_latency_us", "gauge",
+         "end-to-end latency, microseconds (mean/p50/p99/p999/max in the \
+          quantile label)"),
+        ("pitome_batch_mean_requests", "gauge", "mean requests per batch"),
+        ("pitome_shed_total", "counter",
+         "requests refused at admission (queue full)"),
+        ("pitome_expired_total", "counter",
+         "admitted requests dropped after their deadline passed"),
+        ("pitome_responses_recycled_total", "counter",
+         "responses served from a recycled pool buffer"),
+        ("pitome_responses_fresh_total", "counter",
+         "responses that allocated a fresh buffer"),
+        ("pitome_last_cycle_allocs", "gauge",
+         "heap allocations in the most recent whole batch cycle"),
+        ("pitome_gallery_len", "gauge", "embeddings resident in the gallery"),
+        ("pitome_gallery_scanned_rows_total", "counter",
+         "gallery rows scored by query scans"),
+        ("pitome_gallery_evictions_total", "counter",
+         "gallery top-k heap evictions"),
+        ("pitome_gallery_scan_us_total", "counter",
+         "microseconds spent in gallery scans"),
+    ];
+    for (name, kind, help) in metrics {
+        let _ = writeln!(out, "# HELP {name} {help}");
+        let _ = writeln!(out, "# TYPE {name} {kind}");
+        for (w, model, artifact, s) in entries {
+            let labels = format!(
+                "workload=\"{}\",model=\"{}\",artifact=\"{}\"",
+                workload_label(*w), model, artifact);
+            match name {
+                "pitome_requests_total" => {
+                    sample(&mut out, name, &labels, s.count as f64)
+                }
+                "pitome_latency_us" => {
+                    for (q, v) in [("mean", s.mean_us),
+                                   ("p50", s.p50_us as f64),
+                                   ("p99", s.p99_us as f64),
+                                   ("p999", s.p999_us as f64),
+                                   ("max", s.max_us as f64)] {
+                        sample(&mut out, name,
+                               &format!("{labels},quantile=\"{q}\""), v);
+                    }
+                }
+                "pitome_batch_mean_requests" => {
+                    sample(&mut out, name, &labels, s.mean_batch)
+                }
+                "pitome_shed_total" => {
+                    sample(&mut out, name, &labels, s.shed as f64)
+                }
+                "pitome_expired_total" => {
+                    sample(&mut out, name, &labels, s.expired as f64)
+                }
+                "pitome_responses_recycled_total" => {
+                    sample(&mut out, name, &labels, s.resp_recycled as f64)
+                }
+                "pitome_responses_fresh_total" => {
+                    sample(&mut out, name, &labels, s.resp_fresh as f64)
+                }
+                "pitome_last_cycle_allocs" => {
+                    sample(&mut out, name, &labels, s.last_cycle_allocs as f64)
+                }
+                "pitome_gallery_len" => {
+                    sample(&mut out, name, &labels, s.gallery_len as f64)
+                }
+                "pitome_gallery_scanned_rows_total" => {
+                    sample(&mut out, name, &labels,
+                           s.gallery_scanned_rows as f64)
+                }
+                "pitome_gallery_evictions_total" => {
+                    sample(&mut out, name, &labels, s.gallery_evictions as f64)
+                }
+                "pitome_gallery_scan_us_total" => {
+                    sample(&mut out, name, &labels, s.gallery_scan_us as f64)
+                }
+                _ => unreachable!("metric {name} not rendered"),
+            }
+        }
+    }
+    out
+}
+
+/// Escape a string for a JSON literal (worker names are plain ASCII,
+/// but a malformed name must corrupt nothing).
+fn json_escape(s: &str) -> String {
+    let mut out = String::with_capacity(s.len());
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            c if (c as u32) < 0x20 => {
+                let _ = write!(out, "\\u{:04x}", c as u32);
+            }
+            c => out.push(c),
+        }
+    }
+    out
+}
+
+/// A float that is always valid JSON (NaN/inf become 0).
+fn json_f32(v: f32) -> f32 {
+    if v.is_finite() {
+        v
+    } else {
+        0.0
+    }
+}
+
+/// Render drained span rings as Chrome trace-event JSON: one `"X"`
+/// (complete) event per span, one trace thread per ring, with the
+/// stage-specific `id`/`payload`/`a`/`b` fields in `args` — per-layer
+/// merge spans carry tokens before/after and the energy summary there.
+/// Rings that dropped events get a visible `spans_dropped` instant
+/// event so a truncated timeline never masquerades as complete.
+// lint: allow(alloc) reason=cold exporter: the JSON string is built off the hot path
+pub fn chrome_trace_json(threads: &[TraceThread]) -> String {
+    let mut out = String::from("{\"traceEvents\":[");
+    let mut first = true;
+    let mut push = |out: &mut String, ev: String| {
+        if !first {
+            out.push(',');
+        }
+        first = false;
+        out.push_str(&ev);
+    };
+    for (tid, t) in threads.iter().enumerate() {
+        push(&mut out, format!(
+            "{{\"name\":\"thread_name\",\"ph\":\"M\",\"pid\":1,\
+             \"tid\":{},\"args\":{{\"name\":\"{}\"}}}}",
+            tid, json_escape(&t.name)));
+        for e in &t.events {
+            let dur = e.t_end_us.saturating_sub(e.t_start_us);
+            push(&mut out, format!(
+                "{{\"name\":\"{}\",\"cat\":\"pitome\",\"ph\":\"X\",\
+                 \"ts\":{},\"dur\":{},\"pid\":1,\"tid\":{},\
+                 \"args\":{{\"id\":{},\"payload\":{},\"a\":{},\"b\":{}}}}}",
+                e.stage.name(), e.t_start_us, dur, tid, e.id, e.payload,
+                json_f32(e.a), json_f32(e.b)));
+        }
+        if t.dropped > 0 {
+            push(&mut out, format!(
+                "{{\"name\":\"spans_dropped\",\"cat\":\"pitome\",\
+                 \"ph\":\"i\",\"ts\":0,\"s\":\"t\",\"pid\":1,\"tid\":{},\
+                 \"args\":{{\"dropped\":{}}}}}",
+                tid, t.dropped));
+        }
+    }
+    out.push_str("],\"displayTimeUnit\":\"ms\"}");
+    out
+}
+
+/// Write [`chrome_trace_json`] to `path`.
+// lint: allow(alloc) reason=cold exporter: file write happens off the hot path
+pub fn write_chrome_trace(path: &Path, threads: &[TraceThread])
+                          -> std::io::Result<()> {
+    let mut f = std::fs::File::create(path)?;
+    f.write_all(chrome_trace_json(threads).as_bytes())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::obs::ring::SpanEvent;
+    use crate::obs::stages::Stage;
+    use crate::util::parse_json;
+
+    fn snap() -> Snapshot {
+        Snapshot {
+            count: 10,
+            mean_us: 1234.5,
+            p50_us: 1000,
+            p99_us: 4000,
+            p999_us: 5000,
+            max_us: 6000,
+            mean_batch: 2.5,
+            last_infer_allocs: 0,
+            last_cycle_allocs: 0,
+            resp_recycled: 9,
+            resp_fresh: 1,
+            shed: 2,
+            expired: 1,
+            gallery_len: 0,
+            gallery_scanned_rows: 0,
+            gallery_evictions: 0,
+            gallery_scan_us: 0,
+        }
+    }
+
+    #[test]
+    fn prometheus_exposition_has_headers_and_labelled_samples() {
+        let entries = vec![
+            (Workload::Vision, "default".to_string(), "cpu_pitome_r900"
+                 .to_string(), snap()),
+        ];
+        let text = prometheus_text(&entries);
+        assert!(text.contains("# TYPE pitome_requests_total counter"));
+        assert!(text.contains(
+            "pitome_requests_total{workload=\"vision\",model=\"default\",\
+             artifact=\"cpu_pitome_r900\"} 10"));
+        assert!(text.contains("quantile=\"p99\"} 4000"));
+        assert!(text.contains("pitome_shed_total{"));
+        // every sample line is parseable: metric{labels} value
+        for line in text.lines().filter(|l| !l.starts_with('#')) {
+            assert!(line.contains('{') && line.contains("} "), "{line}");
+        }
+    }
+
+    #[test]
+    fn chrome_trace_is_valid_json_with_thread_names_and_drops() {
+        let threads = vec![TraceThread {
+            name: "pitome-cpu-\"x\"".to_string(),
+            events: vec![SpanEvent {
+                stage: Stage::LayerApply,
+                id: 3,
+                t_start_us: 100,
+                t_end_us: 150,
+                payload: (65 << 16) | 59,
+                a: 0.5,
+                b: f32::NAN,
+            }],
+            dropped: 7,
+        }];
+        let json = chrome_trace_json(&threads);
+        let v = parse_json(&json).expect("trace JSON must parse");
+        let events = v.get("traceEvents").and_then(|e| e.arr())
+            .expect("traceEvents array");
+        assert_eq!(events.len(), 3, "metadata + span + drop marker");
+        let span = &events[1];
+        assert_eq!(span.get("name").and_then(|n| n.str()),
+                   Some("layer_apply"));
+        assert_eq!(span.get("dur").and_then(|d| d.num()), Some(50.0));
+        assert_eq!(events[2].get("args").and_then(|a| a.get("dropped"))
+                       .and_then(|d| d.num()),
+                   Some(7.0));
+    }
+}

@@ -1,0 +1,223 @@
+//! Per-layer merge telemetry: the energy distribution the paper's
+//! spectrum-preservation argument rests on, captured as an observable.
+//!
+//! Every merge step already computes the energy score of Eq. 4 for every
+//! token and then discards it.  [`MergeTelemetry`] is a caller-owned,
+//! fixed-capacity buffer that `merge_step_scratch` fills with one
+//! [`MergeLayerStats`] row per step — tokens before/after, protected
+//! count, and the energy mean/max/p90 — so adaptive-k policies (ROADMAP
+//! item 2) and the trace exporters can see *why* a layer merged hard or
+//! held back.
+//!
+//! The p90 is computed **streaming, without sorting**: one pass for
+//! min/max/mean, one pass binning into a fixed histogram, then linear
+//! interpolation inside the p90 bucket.  No allocation, no reordering of
+//! the (scratch-owned) energy buffer.
+
+/// Number of fixed histogram bins for the streaming p90.  64 bins over
+/// the observed [min, max] keep the interpolation error well under the
+/// spread of real energy distributions while the bin array stays a
+/// stack-friendly 512 bytes.
+const ENERGY_BINS: usize = 64;
+
+/// One merge step's telemetry row.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct MergeLayerStats {
+    /// encoder layer index of this merge step
+    pub layer: u32,
+    /// tokens entering the step
+    pub tokens_before: u32,
+    /// tokens after the plan applied
+    pub tokens_after: u32,
+    /// tokens protected from merging (CLS + any protected prefix)
+    pub protected: u32,
+    /// mean energy score across the step's tokens
+    pub energy_mean: f32,
+    /// max energy score
+    pub energy_max: f32,
+    /// 90th-percentile energy score (streaming histogram estimate)
+    pub energy_p90: f32,
+}
+
+/// Summarize an energy slice without sorting or allocating: two passes
+/// (min/max/mean, then a fixed-bin histogram) and an interpolated p90.
+/// Returns `(mean, max, p90)`; all zeros for an empty slice.
+pub fn energy_summary(energy: &[f32]) -> (f32, f32, f32) {
+    if energy.is_empty() {
+        return (0.0, 0.0, 0.0);
+    }
+    let (mut lo, mut hi, mut sum) = (f32::INFINITY, f32::NEG_INFINITY, 0.0f64);
+    let mut n = 0u32;
+    for &e in energy {
+        if !e.is_finite() {
+            continue;
+        }
+        lo = lo.min(e);
+        hi = hi.max(e);
+        sum += e as f64;
+        n += 1;
+    }
+    if n == 0 {
+        return (0.0, 0.0, 0.0);
+    }
+    let mean = (sum / n as f64) as f32;
+    if hi <= lo {
+        // degenerate distribution: every finite score identical
+        return (mean, hi, hi);
+    }
+    let mut bins = [0u32; ENERGY_BINS];
+    let scale = ENERGY_BINS as f32 / (hi - lo);
+    for &e in energy {
+        if !e.is_finite() {
+            continue;
+        }
+        let b = (((e - lo) * scale) as usize).min(ENERGY_BINS - 1);
+        bins[b] += 1;
+    }
+    let target = (n as f64 * 0.9).ceil() as u32;
+    let mut acc = 0u32;
+    for (i, &c) in bins.iter().enumerate() {
+        if acc + c >= target {
+            // linear interpolation inside the winning bin
+            let frac = if c > 0 {
+                (target - acc) as f32 / c as f32
+            } else {
+                0.0
+            };
+            let bin_lo = lo + i as f32 / scale;
+            let p90 = bin_lo + frac / scale;
+            return (mean, hi, p90.min(hi));
+        }
+        acc += c;
+    }
+    (mean, hi, hi)
+}
+
+/// Caller-owned per-layer merge telemetry buffer.
+///
+/// Disabled (zero-capacity) by default so the merge engine pays two
+/// branch checks per step when nobody is listening.  Enable with
+/// [`MergeTelemetry::enable`] (the only allocation); rows past capacity
+/// are dropped and counted, mirroring the span-ring semantics.
+#[derive(Default)]
+pub struct MergeTelemetry {
+    rows: Vec<MergeLayerStats>,
+    capacity: usize,
+    /// rows discarded because the buffer was full
+    dropped: u64,
+    /// layer index the owner stamps before each merge step
+    cur_layer: u32,
+}
+
+impl MergeTelemetry {
+    /// Enable capture with room for `rows` entries (one per merge step;
+    /// size as `depth × max batch` for a serving worker).  Idempotent;
+    /// growing re-allocates (cold path).
+    // lint: allow(alloc) reason=cold setup: the row buffer is allocated once at enable time
+    pub fn enable(&mut self, rows: usize) {
+        self.capacity = rows;
+        if self.rows.capacity() < rows {
+            self.rows.reserve(rows.saturating_sub(self.rows.len()));
+        }
+    }
+
+    /// Whether capture is enabled.
+    #[inline]
+    pub fn enabled(&self) -> bool {
+        self.capacity > 0
+    }
+
+    /// Forget captured rows (start of a batch); capacity is retained.
+    pub fn reset(&mut self) {
+        self.rows.clear();
+        self.dropped = 0;
+    }
+
+    /// Stamp the layer index for subsequent [`MergeTelemetry::push`]
+    /// calls (the encoder loop sets this; the merge engine doesn't know
+    /// its layer).
+    #[inline]
+    pub fn set_layer(&mut self, layer: u32) {
+        self.cur_layer = layer;
+    }
+
+    /// The stamped layer index.
+    #[inline]
+    pub fn layer(&self) -> u32 {
+        self.cur_layer
+    }
+
+    /// Append one row (no-op when disabled; dropped + counted when
+    /// full).  Never allocates once enabled.
+    #[inline]
+    pub fn push(&mut self, mut row: MergeLayerStats) {
+        if self.capacity == 0 {
+            return;
+        }
+        if self.rows.len() >= self.capacity {
+            self.dropped += 1;
+            return;
+        }
+        row.layer = self.cur_layer;
+        self.rows.push(row);
+    }
+
+    /// Captured rows since the last reset, in merge-step order.
+    pub fn rows(&self) -> &[MergeLayerStats] {
+        &self.rows
+    }
+
+    /// Rows discarded since the last reset because the buffer was full.
+    pub fn dropped(&self) -> u64 {
+        self.dropped
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn summary_of_uniform_ramp_matches_closed_form() {
+        // 0, 1, ..., 999: mean 499.5, max 999, p90 ≈ 900
+        let e: Vec<f32> = (0..1000).map(|i| i as f32).collect();
+        let (mean, max, p90) = energy_summary(&e);
+        assert!((mean - 499.5).abs() < 1e-3, "mean {mean}");
+        assert_eq!(max, 999.0);
+        assert!((p90 - 900.0).abs() < 1000.0 / ENERGY_BINS as f32,
+                "p90 {p90} not within one bin of 900");
+    }
+
+    #[test]
+    fn summary_handles_empty_constant_and_nan() {
+        assert_eq!(energy_summary(&[]), (0.0, 0.0, 0.0));
+        let (mean, max, p90) = energy_summary(&[2.5; 17]);
+        assert_eq!((mean, max, p90), (2.5, 2.5, 2.5));
+        let (mean, max, p90) = energy_summary(&[1.0, f32::NAN, 3.0]);
+        assert_eq!(max, 3.0);
+        assert!((mean - 2.0).abs() < 1e-6);
+        assert!(p90 <= 3.0 && p90 >= 1.0);
+    }
+
+    #[test]
+    fn disabled_buffer_ignores_rows_and_full_buffer_counts_drops() {
+        let mut t = MergeTelemetry::default();
+        t.push(MergeLayerStats::default());
+        assert!(t.rows().is_empty());
+        assert_eq!(t.dropped(), 0);
+        t.enable(2);
+        t.set_layer(3);
+        t.push(MergeLayerStats { tokens_before: 10, ..Default::default() });
+        t.set_layer(4);
+        t.push(MergeLayerStats { tokens_before: 8, ..Default::default() });
+        t.push(MergeLayerStats::default()); // full: dropped
+        assert_eq!(t.rows().len(), 2);
+        assert_eq!(t.dropped(), 1);
+        assert_eq!(t.rows()[0].layer, 3);
+        assert_eq!(t.rows()[1].layer, 4);
+        t.reset();
+        assert!(t.rows().is_empty());
+        assert_eq!(t.dropped(), 0);
+        assert!(t.enabled());
+    }
+}

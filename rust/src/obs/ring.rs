@@ -1,0 +1,356 @@
+//! Per-worker fixed-capacity SPSC ring buffer of POD span events.
+//!
+//! The hot-path contract: [`RingWriter::record`] performs **no locks and
+//! no heap activity** — a record is five relaxed atomic stores plus one
+//! release store of the write cursor into slots allocated once at
+//! construction, so recording cannot break the warmed zero-allocation
+//! invariant (`tests/alloc_free.rs` runs the serving cycles with tracing
+//! enabled).
+//!
+//! **Overflow semantics are drop-newest**: when the ring is full the
+//! incoming event is discarded and the `dropped` counter increments —
+//! never an overwrite of unread history, never a block, never an
+//! allocation.  Exporters read [`SpanRing::dropped`] and say so, instead
+//! of silently presenting a truncated timeline as complete.
+//!
+//! Single producer at a time: exactly one execution context may hold the
+//! ring's [`RingWriter`].  Producer ownership may migrate between threads
+//! across a happens-before edge (the encoder fan-out's scoped-thread join
+//! is one), which the release/acquire cursor protocol supports; two
+//! threads recording *concurrently* to one ring is a contract violation
+//! (events could collide in a slot) — give each concurrent context its
+//! own ring.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+use std::time::Instant;
+
+use super::stages::Stage;
+
+/// One POD span record: stage id, request/batch id, microsecond start
+/// and end timestamps (relative to the owning hub's epoch), a `u32`
+/// payload and two stage-specific `f32`s (see [`Stage`] for the
+/// per-stage meaning of `payload`/`a`/`b`).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct SpanEvent {
+    /// pipeline stage
+    pub stage: Stage,
+    /// request id, batch id, or layer index — stage-dependent
+    pub id: u64,
+    /// span start, microseconds since the hub epoch
+    pub t_start_us: u64,
+    /// span end, microseconds since the hub epoch
+    pub t_end_us: u64,
+    /// stage-specific integer payload
+    pub payload: u32,
+    /// stage-specific float (e.g. energy mean)
+    pub a: f32,
+    /// stage-specific float (e.g. energy p90)
+    pub b: f32,
+}
+
+/// One ring slot: the five words of a [`SpanEvent`], individually
+/// atomic.  Slot contents are published by the release store of the
+/// write cursor and consumed after its acquire load, so the relaxed
+/// per-word accesses can never be observed half-written.
+#[derive(Default)]
+struct Slot {
+    /// stage id (low 16 bits) | payload (high 32 bits)
+    w0: AtomicU64,
+    id: AtomicU64,
+    t_start: AtomicU64,
+    t_end: AtomicU64,
+    /// a.to_bits() (low 32) | b.to_bits() (high 32)
+    ab: AtomicU64,
+}
+
+/// Fixed-capacity single-producer/single-consumer span ring.
+///
+/// Construct via [`SpanRing::with_capacity`]; hand the producer side to
+/// the worker as a [`RingWriter`] and drain from any one consumer via
+/// [`SpanRing::drain_into`].
+pub struct SpanRing {
+    slots: Box<[Slot]>,
+    mask: u64,
+    /// next write position (monotonic; slot = head & mask)
+    head: AtomicU64,
+    /// next read position (monotonic)
+    tail: AtomicU64,
+    /// events discarded because the ring was full (drop-newest)
+    dropped: AtomicU64,
+}
+
+impl SpanRing {
+    /// A ring holding at least `capacity` events (rounded up to a power
+    /// of two, minimum 2).  The only allocation the ring ever performs.
+    // lint: allow(alloc) reason=cold constructor: slots allocated once, recording never allocates
+    pub fn with_capacity(capacity: usize) -> Arc<SpanRing> {
+        let cap = capacity.max(2).next_power_of_two();
+        let slots: Vec<Slot> = (0..cap).map(|_| Slot::default()).collect();
+        Arc::new(SpanRing {
+            slots: slots.into_boxed_slice(),
+            mask: (cap - 1) as u64,
+            head: AtomicU64::new(0),
+            tail: AtomicU64::new(0),
+            dropped: AtomicU64::new(0),
+        })
+    }
+
+    /// Slot count.
+    pub fn capacity(&self) -> usize {
+        self.slots.len()
+    }
+
+    /// Events currently buffered (racy by nature; exact when producer
+    /// and consumer are quiescent).
+    pub fn len(&self) -> usize {
+        let head = self.head.load(Ordering::Acquire);
+        let tail = self.tail.load(Ordering::Acquire);
+        head.wrapping_sub(tail) as usize
+    }
+
+    /// Whether the ring holds no events.
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Events discarded so far because the ring was full.
+    pub fn dropped(&self) -> u64 {
+        self.dropped.load(Ordering::Relaxed)
+    }
+
+    /// The preallocated producer handle (clone of the shared ring plus
+    /// the timestamp epoch).  One live writer per ring — see the module
+    /// docs for the single-producer contract.
+    // lint: allow(alloc) reason=cold setup: Arc refcount clone at worker boot
+    pub fn writer(self: &Arc<Self>, epoch: Instant) -> RingWriter {
+        RingWriter { ring: self.clone(), epoch }
+    }
+
+    /// Producer-side record (called through [`RingWriter`]).  Lock-free,
+    /// allocation-free; drops the event (counted) when the ring is full.
+    fn push(&self, ev: &SpanEvent) -> bool {
+        let head = self.head.load(Ordering::Relaxed);
+        let tail = self.tail.load(Ordering::Acquire);
+        if head.wrapping_sub(tail) >= self.slots.len() as u64 {
+            self.dropped.fetch_add(1, Ordering::Relaxed);
+            return false;
+        }
+        let slot = &self.slots[(head & self.mask) as usize];
+        let w0 = ev.stage.id() as u64 | ((ev.payload as u64) << 32);
+        let ab = ev.a.to_bits() as u64 | ((ev.b.to_bits() as u64) << 32);
+        slot.w0.store(w0, Ordering::Relaxed);
+        slot.id.store(ev.id, Ordering::Relaxed);
+        slot.t_start.store(ev.t_start_us, Ordering::Relaxed);
+        slot.t_end.store(ev.t_end_us, Ordering::Relaxed);
+        slot.ab.store(ab, Ordering::Relaxed);
+        // publish: the consumer's acquire load of head orders the slot
+        // words above before any read of them
+        self.head.store(head.wrapping_add(1), Ordering::Release);
+        true
+    }
+
+    /// Consumer-side drain: append every buffered event to `out` in
+    /// record order and advance the read cursor.  Returns the number of
+    /// events drained.  Off the hot path — `out` may grow.
+    // lint: allow(alloc) reason=cold exporter path: the output vector grows off the hot path
+    pub fn drain_into(&self, out: &mut Vec<SpanEvent>) -> usize {
+        let head = self.head.load(Ordering::Acquire);
+        let tail = self.tail.load(Ordering::Relaxed);
+        let n = head.wrapping_sub(tail);
+        for i in 0..n {
+            let slot = &self.slots[((tail.wrapping_add(i)) & self.mask) as usize];
+            let w0 = slot.w0.load(Ordering::Relaxed);
+            let ab = slot.ab.load(Ordering::Relaxed);
+            let stage = match Stage::from_id((w0 & 0xFFFF) as u16) {
+                Some(s) => s,
+                // unreachable with a conforming producer; skip rather
+                // than panic the exporter
+                None => continue,
+            };
+            out.push(SpanEvent {
+                stage,
+                id: slot.id.load(Ordering::Relaxed),
+                t_start_us: slot.t_start.load(Ordering::Relaxed),
+                t_end_us: slot.t_end.load(Ordering::Relaxed),
+                payload: (w0 >> 32) as u32,
+                a: f32::from_bits((ab & 0xFFFF_FFFF) as u32),
+                b: f32::from_bits((ab >> 32) as u32),
+            });
+        }
+        // release: the producer's acquire load of tail sees the slot
+        // reads above as complete before reusing the slots
+        self.tail.store(head, Ordering::Release);
+        n as usize
+    }
+}
+
+/// The preallocated producer handle a worker records through: the shared
+/// ring plus the hub epoch for `Instant` → µs conversion.  Cloning is a
+/// refcount bump (cold setup only); see the module docs for the
+/// single-producer contract.
+#[derive(Clone)]
+pub struct RingWriter {
+    ring: Arc<SpanRing>,
+    epoch: Instant,
+}
+
+impl RingWriter {
+    /// Microseconds elapsed since the hub epoch.
+    #[inline]
+    pub fn now_us(&self) -> u64 {
+        self.epoch.elapsed().as_micros() as u64
+    }
+
+    /// Convert an instant captured elsewhere (e.g. a request's
+    /// `enqueued_at`) to the hub timebase (0 for pre-epoch instants).
+    #[inline]
+    pub fn us_of(&self, t: Instant) -> u64 {
+        t.saturating_duration_since(self.epoch).as_micros() as u64
+    }
+
+    /// Record one event.  Returns `false` (and counts the drop) when the
+    /// ring is full.
+    #[inline]
+    pub fn record(&self, ev: SpanEvent) -> bool {
+        self.ring.push(&ev)
+    }
+
+    /// Record a span that started at `t_start_us` and ends now.
+    #[inline]
+    pub fn span_since(&self, stage: Stage, id: u64, t_start_us: u64,
+                      payload: u32) -> bool {
+        self.record(SpanEvent {
+            stage,
+            id,
+            t_start_us,
+            t_end_us: self.now_us(),
+            payload,
+            a: 0.0,
+            b: 0.0,
+        })
+    }
+
+    /// The ring this writer feeds (drop-counter checks in tests).
+    pub fn ring(&self) -> &Arc<SpanRing> {
+        &self.ring
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ev(stage: Stage, id: u64) -> SpanEvent {
+        SpanEvent {
+            stage,
+            id,
+            t_start_us: id * 10,
+            t_end_us: id * 10 + 5,
+            payload: id as u32,
+            a: id as f32 * 0.5,
+            b: id as f32 * 2.0,
+        }
+    }
+
+    #[test]
+    fn events_round_trip_in_order() {
+        let ring = SpanRing::with_capacity(8);
+        let w = ring.writer(Instant::now());
+        for i in 0..5 {
+            assert!(w.record(ev(Stage::Embed, i)));
+        }
+        let mut out = Vec::new();
+        assert_eq!(ring.drain_into(&mut out), 5);
+        for (i, e) in out.iter().enumerate() {
+            assert_eq!(*e, ev(Stage::Embed, i as u64));
+        }
+        assert_eq!(ring.dropped(), 0);
+    }
+
+    /// Overflow drops the *newest* event (the incoming one), never
+    /// overwrites unread history, and counts every drop.
+    #[test]
+    fn full_ring_drops_newest_and_counts() {
+        let ring = SpanRing::with_capacity(4);
+        let w = ring.writer(Instant::now());
+        for i in 0..4 {
+            assert!(w.record(ev(Stage::Exec, i)));
+        }
+        // ring full: these are discarded, history is intact
+        assert!(!w.record(ev(Stage::Exec, 100)));
+        assert!(!w.record(ev(Stage::Exec, 101)));
+        assert_eq!(ring.dropped(), 2);
+        let mut out = Vec::new();
+        assert_eq!(ring.drain_into(&mut out), 4);
+        let ids: Vec<u64> = out.iter().map(|e| e.id).collect();
+        assert_eq!(ids, vec![0, 1, 2, 3], "unread history must survive");
+        // drained: capacity is available again
+        assert!(w.record(ev(Stage::Exec, 200)));
+        assert_eq!(ring.dropped(), 2, "drop counter is cumulative");
+    }
+
+    /// The cursor protocol survives many wraps of the (small) slot
+    /// array: a billion-event session differs from a fresh ring only in
+    /// the monotonic cursors.
+    #[test]
+    fn wraparound_preserves_fifo_across_many_generations() {
+        let ring = SpanRing::with_capacity(4);
+        let w = ring.writer(Instant::now());
+        let mut out = Vec::new();
+        let mut expect = 0u64;
+        for round in 0..64u64 {
+            let n = 1 + (round % 4);
+            for i in 0..n {
+                assert!(w.record(ev(Stage::QueueWait, round * 100 + i)));
+            }
+            out.clear();
+            assert_eq!(ring.drain_into(&mut out), n as usize);
+            for (i, e) in out.iter().enumerate() {
+                assert_eq!(e.id, round * 100 + i as u64);
+            }
+            expect += n;
+        }
+        assert_eq!(ring.dropped(), 0);
+        assert!(expect > 2 * ring.capacity() as u64);
+    }
+
+    /// Producer on one thread, consumer on another: every recorded event
+    /// is drained exactly once, in order, and accepted+dropped adds up.
+    #[test]
+    fn concurrent_producer_consumer_is_consistent() {
+        let ring = SpanRing::with_capacity(16);
+        let w = ring.writer(Instant::now());
+        const N: u64 = 10_000;
+        let producer = std::thread::spawn(move || {
+            let mut accepted = 0u64;
+            for i in 0..N {
+                if w.record(ev(Stage::Head, i)) {
+                    accepted += 1;
+                }
+            }
+            accepted
+        });
+        let mut seen: Vec<u64> = Vec::new();
+        let mut out = Vec::new();
+        while seen.len() < N as usize {
+            out.clear();
+            ring.drain_into(&mut out);
+            seen.extend(out.iter().map(|e| e.id));
+            if producer.is_finished() && ring.is_empty() {
+                out.clear();
+                ring.drain_into(&mut out);
+                seen.extend(out.iter().map(|e| e.id));
+                break;
+            }
+        }
+        let accepted = producer.join().unwrap();
+        assert_eq!(accepted + ring.dropped(), N,
+                   "every event is either drained or counted as dropped");
+        assert_eq!(seen.len() as u64, accepted);
+        // drained ids are a strictly increasing subsequence of 0..N
+        for w2 in seen.windows(2) {
+            assert!(w2[0] < w2[1], "drain must preserve record order");
+        }
+    }
+}

@@ -1,0 +1,134 @@
+//! Span taxonomy: the named stages a request passes through on its way
+//! from admission to response.
+//!
+//! The serving path is instrumented at every layer of the stack:
+//!
+//! | group      | stages |
+//! |------------|--------|
+//! | coordinator| [`Stage::Admission`], [`Stage::QueueWait`], [`Stage::BatchGather`], [`Stage::EdfSort`], [`Stage::Respond`] |
+//! | batch exec | [`Stage::Embed`], [`Stage::Exec`], [`Stage::Head`] |
+//! | per layer  | [`Stage::LayerAttention`], [`Stage::LayerGram`], [`Stage::LayerPlan`], [`Stage::LayerApply`] |
+//! | gallery    | [`Stage::GalleryScan`], [`Stage::GalleryCoarse`], [`Stage::GalleryRescan`], [`Stage::GalleryMerge`] |
+//!
+//! Stage ids are stable `u16`s so a [`SpanEvent`](super::ring::SpanEvent)
+//! stays a POD record; [`Stage::from_id`] round-trips every variant.
+
+/// One stage of the serving pipeline (the `stage` field of a
+/// [`SpanEvent`](super::ring::SpanEvent)).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+#[repr(u16)]
+pub enum Stage {
+    /// admission decision at submit (payload: 1 = admitted, 0 = shed)
+    Admission = 0,
+    /// a batched request's wait from enqueue to batch execution
+    /// (payload: position in the executing batch)
+    QueueWait = 1,
+    /// the worker's timed gather + opportunistic drain window
+    /// (payload: requests pending after the drain)
+    BatchGather = 2,
+    /// earliest-deadline-first ordering of the pending set
+    /// (payload: pending-set length sorted)
+    EdfSort = 3,
+    /// batch-exec input staging: parse + patch/token embedding
+    /// (payload: batch size)
+    Embed = 4,
+    /// the whole batch-execution region of one batch (payload: batch
+    /// size) — also the per-request execution span in harness lanes
+    Exec = 5,
+    /// model head / fusion stage after the encoder (payload: batch size)
+    Head = 6,
+    /// response construction + channel sends (payload: batch size)
+    Respond = 7,
+    /// per-layer attention block (id: layer index; payload: tokens in)
+    LayerAttention = 8,
+    /// per-layer shared-Gram rebuild (id: layer; payload: tokens in)
+    LayerGram = 9,
+    /// per-layer merge-plan construction (id: layer; payload: protected
+    /// count; a = energy max, b = energy mean)
+    LayerPlan = 10,
+    /// per-layer plan application (id: layer; payload: tokens
+    /// before<<16 | tokens after; a = energy mean, b = energy p90)
+    LayerApply = 11,
+    /// gallery exact scan over all shards (payload: rows scored)
+    GalleryScan = 12,
+    /// gallery two-stage coarse centroid ranking (payload: blocks ranked)
+    GalleryCoarse = 13,
+    /// gallery two-stage exact block rescan (payload: blocks probed)
+    GalleryRescan = 14,
+    /// gallery deterministic k-way merge of shard selections
+    /// (payload: k)
+    GalleryMerge = 15,
+}
+
+/// Every stage, in id order (export iteration, tests).
+pub const ALL_STAGES: [Stage; 16] = [
+    Stage::Admission,
+    Stage::QueueWait,
+    Stage::BatchGather,
+    Stage::EdfSort,
+    Stage::Embed,
+    Stage::Exec,
+    Stage::Head,
+    Stage::Respond,
+    Stage::LayerAttention,
+    Stage::LayerGram,
+    Stage::LayerPlan,
+    Stage::LayerApply,
+    Stage::GalleryScan,
+    Stage::GalleryCoarse,
+    Stage::GalleryRescan,
+    Stage::GalleryMerge,
+];
+
+impl Stage {
+    /// Stable wire id.
+    #[inline]
+    pub fn id(self) -> u16 {
+        self as u16
+    }
+
+    /// Inverse of [`Stage::id`] (`None` for unknown ids, so a corrupted
+    /// record can never panic an exporter).
+    pub fn from_id(id: u16) -> Option<Stage> {
+        ALL_STAGES.get(id as usize).copied()
+    }
+
+    /// Human-readable stage name (Chrome-trace span name, Prometheus
+    /// label value).
+    pub fn name(self) -> &'static str {
+        match self {
+            Stage::Admission => "admission",
+            Stage::QueueWait => "queue_wait",
+            Stage::BatchGather => "batch_gather",
+            Stage::EdfSort => "edf_sort",
+            Stage::Embed => "embed",
+            Stage::Exec => "exec",
+            Stage::Head => "head",
+            Stage::Respond => "respond",
+            Stage::LayerAttention => "layer_attention",
+            Stage::LayerGram => "layer_gram",
+            Stage::LayerPlan => "layer_plan",
+            Stage::LayerApply => "layer_apply",
+            Stage::GalleryScan => "gallery_scan",
+            Stage::GalleryCoarse => "gallery_coarse_rank",
+            Stage::GalleryRescan => "gallery_block_rescan",
+            Stage::GalleryMerge => "gallery_kway_merge",
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ids_round_trip_and_names_are_unique() {
+        let mut names = std::collections::BTreeSet::new();
+        for (i, s) in ALL_STAGES.iter().enumerate() {
+            assert_eq!(s.id() as usize, i);
+            assert_eq!(Stage::from_id(s.id()), Some(*s));
+            assert!(names.insert(s.name()), "duplicate name {}", s.name());
+        }
+        assert_eq!(Stage::from_id(999), None);
+    }
+}

@@ -26,6 +26,11 @@
 //!   and across the worker's whole batch cycle once the store and the
 //!   worker's scan scratch are warm (ingests may grow shard segments;
 //!   queries never do).
+//! * All three serving cycles run with **tracing enabled**
+//!   (`ServingConfig::trace_capacity > 0`): the span rings, per-batch
+//!   stage spans, and merge telemetry ride the hot path through
+//!   preallocated fixed-capacity buffers, so observability must not
+//!   cost a single steady-state allocation.
 //! * A warmed `iterative_coarsen_scratch` SD-sweep workspace must also
 //!   run allocation-free for every coarsening algorithm, and a warmed
 //!   [`EigScratch`] must evaluate the full SD(G, Gc) spectral distance —
@@ -214,7 +219,9 @@ fn warmed_cpu_serving_request_cycle_is_allocation_free() {
     // the submitter's channel are the documented transport boundary.)
     let ps = Arc::new(synthetic_vit_store(&ViTConfig::default(), 7));
     let selection = [("vit", vec![("pitome".to_string(), 0.9)])];
-    let cfg = ServingConfig { workers: 1, ..Default::default() };
+    // tracing ON: the span recorder must not break the guarantee
+    let cfg = ServingConfig { workers: 1, trace_capacity: 4096,
+                              ..Default::default() };
     let coord = Coordinator::boot_cpu(&ps, &selection, cfg).unwrap();
     let item = pitome::data::shape_item(pitome::data::TEST_SEED, 0);
     let patches = pitome::data::patchify(&item.image, 4);
@@ -257,7 +264,9 @@ fn warmed_joint_request_cycle_is_allocation_free_including_transport() {
                      vec![("pitome".to_string(), 0.9)])],
         ..Default::default()
     };
-    let cfg = ServingConfig { workers: 1, ..Default::default() };
+    // tracing ON: batch spans + merge telemetry ride the measured cycle
+    let cfg = ServingConfig { workers: 1, trace_capacity: 4096,
+                              ..Default::default() };
     let coord =
         Coordinator::boot_cpu_workloads(&ps, &workloads, cfg).unwrap();
     let pool = coord.pool().clone();
@@ -340,7 +349,9 @@ fn warmed_gallery_query_cycle_is_allocation_free_including_transport() {
                        vec![("pitome".to_string(), 0.9)])],
         ..Default::default()
     };
-    let cfg = ServingConfig { workers: 1, ..Default::default() };
+    // tracing ON: gallery scan spans ride the measured cycle
+    let cfg = ServingConfig { workers: 1, trace_capacity: 4096,
+                              ..Default::default() };
     let coord =
         Coordinator::boot_cpu_workloads(&ps, &workloads, cfg).unwrap();
     let pool = coord.pool().clone();

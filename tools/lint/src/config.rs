@@ -25,6 +25,10 @@ pub const HOT_PATH_MODULES: &[&str] = &[
     // and k-way merge are the per-query serving path — a warmed
     // query→top-k cycle must allocate nothing
     "src/gallery/",
+    // the tracing spine rides every one of the modules above: span
+    // recording and merge telemetry must stay atomic-store-only, with
+    // ring/export allocations confined to marked cold constructors
+    "src/obs/",
 ];
 
 /// Sanctioned `CosineGram::build` / `.rebuild(...)` call sites, as
